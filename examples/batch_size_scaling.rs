@@ -1,0 +1,61 @@
+//! Batch-size mode (paper §5.5): Accordion switching between the small
+//! and 8x global batch via gradient accumulation, with linear LR scaling
+//! — versus static small-batch and static large-batch training.
+//!
+//! Run: `cargo run --release --example batch_size_scaling -- [--fast]`
+
+use accordion::compress::Level;
+use accordion::models::{default_artifacts_dir, Registry};
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+use accordion::util::cli::Args;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    accordion::util::init_logging();
+    let fast = Args::from_env().flag("fast");
+    let reg = Registry::load(default_artifacts_dir())?;
+    let mut rt = Runtime::cpu()?;
+    let mult = 8;
+
+    let mut rows = Vec::new();
+    for (label, ctrl) in [
+        ("B-small", ControllerCfg::Static(Level::Low)),
+        ("B-large-x8", ControllerCfg::StaticBatch { mult }),
+        ("Accordion", ControllerCfg::AccordionBatch { eta: 0.5, interval: 2, mult }),
+    ] {
+        let mut cfg = TrainConfig::default();
+        cfg.label = format!("batch-{label}");
+        cfg.model = "resnet_c10".into();
+        cfg.method = MethodCfg::None; // batch mode: uncompressed gradients
+        cfg.controller = ctrl;
+        cfg.epochs = if fast { 10 } else { 24 };
+        cfg.decay_epochs = if fast { vec![6, 8] } else { vec![12, 20] };
+        cfg.train_size = 2048;
+        cfg.test_size = 512;
+        let log = train::run(&cfg, &reg, &mut rt)?;
+        println!(
+            "{label:<12} acc {:.3}  floats {:>7.2}M  sim {:>6.1}s  batch-mults {:?}",
+            log.final_acc(),
+            log.total_floats() as f64 / 1e6,
+            log.total_secs(),
+            log.epochs.iter().map(|e| e.batch_mult).collect::<Vec<_>>()
+        );
+        rows.push((label, log));
+    }
+
+    let (small, large, acc) = (&rows[0].1, &rows[1].1, &rows[2].1);
+    println!("\nshape checks (paper Tables 5-6):");
+    println!(
+        "  accordion ~ small-batch accuracy? {} ({:.3} vs {:.3}; large alone: {:.3})",
+        (small.final_acc() - acc.final_acc()) < 0.05,
+        acc.final_acc(),
+        small.final_acc(),
+        large.final_acc()
+    );
+    println!(
+        "  communication saving vs small: {:.1}x (paper: ~5.5x)",
+        small.total_floats() as f64 / acc.total_floats().max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): distributed training of a
+//! transformer LM on the synthetic Markov corpus through the full stack —
+//! AOT train-step HLO per worker, Accordion-scheduled PowerSGD
+//! compression, ring-collective accounting, SGD in rust — logging the
+//! loss curve.
+//!
+//! Presets: `--preset tiny|small` (built by default) or `base`/`xl`
+//! (~100M params; build with `ACCORDION_TRANSFORMER=tiny,small,base,xl
+//! make artifacts` first — noted in DESIGN.md §9, xl is not CPU-feasible
+//! for a full run).
+//!
+//! Run: `cargo run --release --example e2e_transformer -- [--preset small] [--steps 300]`
+
+use accordion::models::{default_artifacts_dir, Registry};
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+use accordion::util::cli::Args;
+use anyhow::{bail, Result};
+
+fn main() -> Result<()> {
+    accordion::util::init_logging();
+    let args = Args::from_env();
+    let preset = args.opt("preset").unwrap_or("small");
+    let target_steps: usize = args.usize_opt("steps").unwrap_or(300);
+
+    let reg = Registry::load(default_artifacts_dir())?;
+    let model = format!("transformer_{preset}");
+    let Ok(meta) = reg.model(&model) else {
+        bail!(
+            "artifact '{model}' not built; run ACCORDION_TRANSFORMER=tiny,small,{preset} make artifacts"
+        );
+    };
+    println!(
+        "e2e: {} ({} params, batch {} x seq {}), target {} optimizer steps",
+        model, meta.total_params, meta.batch, meta.seq_len, target_steps
+    );
+
+    let workers = 4;
+    let steps_per_epoch = 64usize;
+    let epochs = target_steps.div_ceil(steps_per_epoch);
+    let mut cfg = TrainConfig::default();
+    cfg.label = format!("e2e-{model}");
+    cfg.model = model.clone();
+    cfg.workers = workers;
+    cfg.epochs = epochs;
+    cfg.train_size = steps_per_epoch * workers * meta.batch; // examples per epoch
+    cfg.test_size = 8 * meta.batch;
+    cfg.base_lr = 0.3;
+    cfg.batch_ref = workers * meta.batch;
+    cfg.weight_decay = 0.0;
+    cfg.warmup_epochs = 1;
+    cfg.decay_epochs = vec![(epochs * 2) / 3];
+    cfg.method = MethodCfg::PowerSgd { rank_low: 4, rank_high: 1 };
+    cfg.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+
+    let mut rt = Runtime::cpu()?;
+    let t0 = std::time::Instant::now();
+    let log = train::run(&cfg, &reg, &mut rt)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nloss curve (epoch = {steps_per_epoch} steps):");
+    println!("epoch  steps  train_loss  eval_ppl  mfloats  frac_low");
+    for e in &log.epochs {
+        println!(
+            "{:>5}  {:>5}  {:>10.4}  {:>8.2}  {:>7.2}  {:.2}",
+            e.epoch,
+            (e.epoch + 1) * steps_per_epoch,
+            e.train_loss,
+            e.test_loss.exp(),
+            e.floats as f64 / 1e6,
+            e.frac_low
+        );
+    }
+    let first = log.epochs.first().unwrap();
+    let last = log.epochs.last().unwrap();
+    println!(
+        "\nsummary: loss {:.3} -> {:.3}, ppl {:.1} -> {:.1} over {} steps; \
+         {:.1}M floats communicated; wall {:.0}s ({:.0} exec/s across {} PJRT execs)",
+        first.train_loss,
+        last.train_loss,
+        first.test_loss.exp(),
+        last.test_loss.exp(),
+        epochs * steps_per_epoch,
+        last.floats as f64 / 1e6,
+        wall,
+        rt.execs as f64 / wall.max(1e-9),
+        rt.execs
+    );
+    let path = log.save_csv("runs/e2e")?;
+    println!("csv: {path}");
+    if last.train_loss >= first.train_loss {
+        bail!("loss did not decrease — e2e run failed");
+    }
+    println!("e2e OK: loss decreased through the full three-layer stack");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! 1. load the AOT artifact registry (`make artifacts` must have run);
+//! 2. train a small model for a few epochs with Accordion scheduling
+//!    PowerSGD between rank 2 and rank 1 across 4 simulated workers;
+//! 3. show the three layers composing: execute one L1 Pallas compression
+//!    kernel through PJRT and check it against the rust-native hot path.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use accordion::compress::Level;
+use accordion::models::{default_artifacts_dir, Registry};
+use accordion::runtime::{literal_f32, to_vec_f32, Runtime};
+use accordion::tensor::linalg;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+use accordion::util::rng::Rng;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    accordion::util::init_logging();
+    let reg = Registry::load(default_artifacts_dir())?;
+    let mut rt = Runtime::cpu()?;
+
+    // --- 2. a short Accordion training run -----------------------------
+    let mut cfg = TrainConfig::default();
+    cfg.label = "quickstart".into();
+    cfg.model = "mlp_c10".into();
+    cfg.epochs = 6;
+    cfg.train_size = 1024;
+    cfg.test_size = 256;
+    cfg.decay_epochs = vec![4];
+    cfg.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+    cfg.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    let log = train::run(&cfg, &reg, &mut rt)?;
+    println!(
+        "accordion run: final acc {:.3}, {:.2}M floats, {:.1} simulated seconds",
+        log.final_acc(),
+        log.total_floats() as f64 / 1e6,
+        log.total_secs()
+    );
+    // compare against always-low-compression
+    cfg.label = "quickstart-static-low".into();
+    cfg.controller = ControllerCfg::Static(Level::Low);
+    let base = train::run(&cfg, &reg, &mut rt)?;
+    println!(
+        "static rank-2 run: final acc {:.3}, {:.2}M floats ({:.2}x more communication)",
+        base.final_acc(),
+        base.total_floats() as f64 / 1e6,
+        base.total_floats() as f64 / log.total_floats().max(1) as f64
+    );
+
+    // --- 3. L1 kernel through PJRT vs the rust hot path ----------------
+    let k = reg
+        .kernels
+        .get("powersgd_round_n128_k64_r2")
+        .expect("kernel artifact missing");
+    let mut rng = Rng::new(7);
+    let m = rng.normals(k.n * k.k);
+    let q = rng.normals(k.k * k.r);
+    let out = rt.exec(
+        &k.file,
+        &[literal_f32(&m, &[k.n, k.k])?, literal_f32(&q, &[k.k, k.r])?],
+    )?;
+    let pallas = to_vec_f32(&out[2])?;
+
+    let (n, kk, r) = (k.n, k.k, k.r);
+    let mut p = vec![0.0f32; n * r];
+    linalg::gemm_nk_kr(&m, &q, n, kk, r, &mut p);
+    linalg::orthonormalize_cols(&mut p, n, r, 1e-8);
+    let mut qn = vec![0.0f32; kk * r];
+    linalg::gemm_tn_kr(&m, &p, n, kk, r, &mut qn);
+    let mut native = vec![0.0f32; n * kk];
+    linalg::gemm_nr_rk(&p, &qn, n, kk, r, &mut native);
+
+    let max_err = native
+        .iter()
+        .zip(&pallas)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("pallas-kernel vs rust-native PowerSGD round: max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-3);
+    println!("quickstart OK");
+    Ok(())
+}

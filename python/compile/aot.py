@@ -1,0 +1,190 @@
+"""AOT compiler: lowers the L2 model zoo + L1 kernel parity artifacts to
+HLO *text* and writes the artifact manifest (metadata.json) + initial
+parameter snapshots.
+
+Run once at build time (`make artifacts`); the rust binary is
+self-contained afterwards.  HLO text — not `.serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that xla_extension 0.5.1 (what the `xla` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts] [--force]
+        [--only NAME[,NAME..]]
+Env:    ACCORDION_TRANSFORMER=tiny,small[,base,xl]  transformer presets
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as steps
+from .kernels import powersgd as k_powersgd
+from .kernels import topk as k_topk
+from .kernels import gradnorm as k_gradnorm
+from .models import registry
+
+# Kernel parity-artifact shapes (rust/tests exercise exactly these).
+POWERSGD_SHAPES = [(128, 64, r) for r in (1, 2, 4)]
+TOPK_SHAPE = (4096, 410)  # n, k (10%)
+SQNORM_N = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _write(path: str, text: str):
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def build_model(mdef, out_dir: str, force: bool) -> dict:
+    t0 = time.time()
+    rng = jax.random.PRNGKey(hash(mdef.name) % (2**31))
+    params, specs = mdef.init(rng)
+    n_params = len(params)
+    total = int(sum(int(np.prod(s.shape)) for s in specs))
+
+    init_file = f"{mdef.name}.init.bin"
+    train_file = f"{mdef.name}.train.hlo.txt"
+    eval_file = f"{mdef.name}.eval.hlo.txt"
+    hvp_file = f"{mdef.name}.hvp.hlo.txt" if mdef.name.startswith("mlp") else None
+
+    want = [init_file, train_file, eval_file] + ([hvp_file] if hvp_file else [])
+    if not force and all(os.path.exists(os.path.join(out_dir, f)) for f in want):
+        print(f"  [skip] {mdef.name} (up to date)")
+    else:
+        # initial parameters: f32 little-endian, concatenated in spec order
+        with open(os.path.join(out_dir, init_file), "wb") as f:
+            for p in params:
+                f.write(np.asarray(p, dtype="<f4").tobytes())
+
+        pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+        x, y = steps.example_batch(mdef)
+        _write(
+            os.path.join(out_dir, train_file),
+            lower(steps.train_step(mdef, n_params), (*pspecs, x, y)),
+        )
+        _write(
+            os.path.join(out_dir, eval_file),
+            lower(steps.eval_step(mdef, n_params), (*pspecs, x, y)),
+        )
+        if hvp_file:
+            _write(
+                os.path.join(out_dir, hvp_file),
+                lower(steps.hvp_step(mdef, n_params), (*pspecs, *pspecs, x, y)),
+            )
+        print(f"  [ok]   {mdef.name}: {n_params} tensors / {total} params "
+              f"({time.time()-t0:.1f}s)")
+
+    entry = {
+        "task": mdef.task,
+        "input_shape": list(mdef.input_shape),
+        "input_dtype": mdef.input_dtype,
+        "num_classes": mdef.num_classes,
+        "batch": mdef.batch,
+        "seq_len": mdef.seq_len,
+        "n_params": n_params,
+        "total_params": total,
+        "params": [s.to_json() for s in specs],
+        "artifacts": {"train": train_file, "eval": eval_file},
+        "init": init_file,
+    }
+    if hvp_file:
+        entry["artifacts"]["hvp"] = hvp_file
+    return entry
+
+
+def build_kernels(out_dir: str, force: bool) -> dict:
+    out = {}
+
+    for n, k, r in POWERSGD_SHAPES:
+        name = f"powersgd_round_n{n}_k{k}_r{r}"
+        f = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, f)
+        if force or not os.path.exists(path):
+            m = jax.ShapeDtypeStruct((n, k), jnp.float32)
+            q = jax.ShapeDtypeStruct((k, r), jnp.float32)
+            _write(path, lower(lambda m, q: k_powersgd.compress_round(m, q), (m, q)))
+            print(f"  [ok]   kernel {name}")
+        out[name] = {"file": f, "kind": "powersgd_round", "n": n, "k": k, "r": r}
+
+    n, k = TOPK_SHAPE
+    name = f"topk_n{n}_k{k}"
+    f = f"{name}.hlo.txt"
+    path = os.path.join(out_dir, f)
+    if force or not os.path.exists(path):
+        x = jax.ShapeDtypeStruct((n,), jnp.float32)
+        _write(path, lower(lambda x: (k_topk.topk(x, k),), (x,)))
+        print(f"  [ok]   kernel {name}")
+    out[name] = {"file": f, "kind": "topk", "n": n, "k": k}
+
+    name = f"sqnorm_n{SQNORM_N}"
+    f = f"{name}.hlo.txt"
+    path = os.path.join(out_dir, f)
+    if force or not os.path.exists(path):
+        x = jax.ShapeDtypeStruct((SQNORM_N,), jnp.float32)
+        _write(path, lower(lambda x: (k_gradnorm.sqnorm(x),), (x,)))
+        print(f"  [ok]   kernel {name}")
+    out[name] = {"file": f, "kind": "sqnorm", "n": SQNORM_N}
+
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored; use --out-dir")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None, help="comma list of model names")
+    args = ap.parse_args(argv)
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    reg = registry()
+    only = set(args.only.split(",")) if args.only else None
+
+    meta_path = os.path.join(out_dir, "metadata.json")
+    meta = {"version": 1, "models": {}, "kernels": {}}
+    if os.path.exists(meta_path):
+        with open(meta_path) as fp:
+            try:
+                meta = json.load(fp)
+            except json.JSONDecodeError:
+                pass
+
+    print(f"lowering {len(reg)} models -> {out_dir}")
+    for name, mdef in reg.items():
+        if only and name not in only:
+            continue
+        meta["models"][name] = build_model(mdef, out_dir, args.force)
+
+    meta["kernels"] = build_kernels(out_dir, args.force)
+
+    with open(meta_path, "w") as fp:
+        json.dump(meta, fp, indent=1, sort_keys=True)
+    print(f"wrote {meta_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

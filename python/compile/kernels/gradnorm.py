@@ -1,0 +1,40 @@
+"""Pallas kernel for Accordion's ‖Δ‖² accumulator.
+
+The detector (Algorithm 1) only needs the squared norm of each layer's
+accumulated gradient once per epoch; this blocked reduction shows the
+VMEM-tiled form (one pass over the buffer, scalar accumulator carried
+across grid steps).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .powersgd import _pick_block
+
+
+def _sqnorm_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    o_ref[...] += jnp.sum(x * x)[None]
+
+
+def sqnorm(x: jnp.ndarray, block: int | None = None) -> jnp.ndarray:
+    """sum(x*x) over a flat f32 buffer; returns shape [1]."""
+    n = x.shape[0]
+    b = block or _pick_block(n, 512)
+    return pl.pallas_call(
+        _sqnorm_kernel,
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,108 @@
+"""Pallas kernels for the PowerSGD hot spot.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the rank-r projection
+``P = M @ Q`` is a tall-skinny GEMM.  We tile M into ``(block_n, k)``
+VMEM-resident row blocks via BlockSpec while Q (``k × r``, a few KB)
+stays resident for the whole grid — HBM traffic is one pass over M plus
+one write of P, the roofline for this op.  Back-projection ``Q = Mᵀ P``
+tiles the same way but accumulates into the output across grid steps.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness vs `ref.py` is enforced by pytest and
+hypothesis sweeps, and the rust-native compressor is parity-tested
+against the lowered artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is <= target (grid must tile exactly)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _project_kernel(m_ref, q_ref, o_ref):
+    o_ref[...] = m_ref[...] @ q_ref[...]
+
+
+def project(m: jnp.ndarray, q: jnp.ndarray, block_n: int | None = None) -> jnp.ndarray:
+    """P = M @ Q with M row-tiled.  m: [n, k], q: [k, r]."""
+    n, k = m.shape
+    r = q.shape[1]
+    bn = block_n or _pick_block(n)
+    return pl.pallas_call(
+        _project_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), jnp.float32),
+        interpret=True,
+    )(m, q)
+
+
+def _backproject_kernel(m_ref, p_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += m_ref[...].T @ p_ref[...]
+
+
+def backproject(m: jnp.ndarray, p: jnp.ndarray, block_n: int | None = None) -> jnp.ndarray:
+    """Q = Mᵀ @ P, accumulated over row blocks of M.  m: [n,k], p: [n,r]."""
+    n, k = m.shape
+    r = p.shape[1]
+    bn = block_n or _pick_block(n)
+    return pl.pallas_call(
+        _backproject_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, r), jnp.float32),
+        interpret=True,
+    )(m, p)
+
+
+def compress_round(m: jnp.ndarray, q: jnp.ndarray):
+    """Full single-worker PowerSGD round using the Pallas kernels plus a
+    jnp Gram–Schmidt (r is 1–4: nothing to tile).  Mirrors
+    ref.powersgd_round and is what `aot.py` lowers as the parity artifact.
+    """
+    from . import ref
+
+    p = ref.orthonormalize(project(m, q))
+    q_new = backproject(m, p)
+    return p, q_new, p @ q_new.T
+
+
+def vmem_estimate(n: int, k: int, r: int, block_n: int) -> dict:
+    """Static TPU resource estimate for DESIGN/EXPERIMENTS §Perf: VMEM
+    bytes per grid step and MXU utilization proxy (fraction of the 128x128
+    systolic array's K dimension the operand fills)."""
+    vmem = 4 * (block_n * k + k * r + block_n * r)
+    mxu_k_fill = min(k, 128) / 128.0
+    mxu_n_fill = min(r, 128) / 128.0  # tall-skinny: output cols fill r/128
+    return {
+        "vmem_bytes": vmem,
+        "vmem_frac_16MiB": vmem / (16 * 1024 * 1024),
+        "mxu_k_fill": mxu_k_fill,
+        "mxu_out_fill": mxu_n_fill,
+        "memory_bound": True,  # r << 128 → always bandwidth-limited
+    }

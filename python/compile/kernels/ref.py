@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These define the *semantics* the whole stack is pinned to:
+
+  pytest/hypothesis  : pallas kernel  == ref          (python/tests)
+  cargo test (parity): rust compressor == HLO artifact (rust/tests)
+
+so the rust-native hot path, the Pallas kernels, and these oracles are
+mutually consistent.  Everything here is also the reference PowerSGD /
+TopK math (Vogels et al. 2019; Aji & Heafield 2017).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def project(m: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """PowerSGD projection P = M @ Q.  m: [n, k], q: [k, r]."""
+    return m @ q
+
+
+def backproject(m: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """PowerSGD back-projection Q = Mᵀ @ P.  m: [n, k], p: [n, r]."""
+    return m.T @ p
+
+
+def orthonormalize(p: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Column-wise modified Gram–Schmidt (the PowerSGD `orthogonalize`).
+
+    r is tiny (1–4) so this is sequential on purpose; it is not a Pallas
+    kernel (no parallelism to tile) but both the rust hot path and the
+    lowered compression round must match it.
+    """
+    cols = []
+    for i in range(p.shape[1]):
+        c = p[:, i]
+        for cj in cols:
+            c = c - jnp.dot(cj, c) * cj
+        c = c / (jnp.linalg.norm(c) + eps)
+        cols.append(c)
+    return jnp.stack(cols, axis=1)
+
+
+def powersgd_round(m: jnp.ndarray, q: jnp.ndarray):
+    """One full PowerSGD compress round on one worker's matrix.
+
+    Returns (p_ortho, q_new, decompressed).  In the distributed setting p
+    and q_new are all-reduced (mean) before decompression; with one worker
+    this is the whole round.
+    """
+    p = orthonormalize(project(m, q))
+    q_new = backproject(m, p)
+    return p, q_new, p @ q_new.T
+
+
+def topk_threshold(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """|value| of the k-th largest-magnitude entry (k >= 1)."""
+    flat = jnp.abs(x.reshape(-1))
+    return jnp.sort(flat)[flat.shape[0] - k]
+
+
+def topk_mask(x: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    """Keep entries with |x| >= thresh, zero the rest (the sparsifier)."""
+    return jnp.where(jnp.abs(x) >= thresh, x, jnp.zeros_like(x))
+
+
+def topk(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    return topk_mask(x, topk_threshold(x, k))
+
+
+def sqnorm(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum of squares (Accordion's ‖Δ‖² accumulator)."""
+    return jnp.sum(x.astype(jnp.float32) ** 2)

@@ -1,0 +1,45 @@
+"""Pallas kernel for TopK sparsification (threshold-mask form).
+
+GPU TopK uses a global sort (`torch.topk`); the TPU adaptation
+(DESIGN.md §Hardware-Adaptation) is two-pass: a cheap global threshold
+(host/XLA sort — O(n log n) once per layer per step) followed by a
+blocked, VMEM-tiled mask apply, which is the bandwidth-bound hot loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .powersgd import _pick_block
+
+
+def _mask_kernel(x_ref, t_ref, o_ref):
+    x = x_ref[...]
+    t = t_ref[0]
+    o_ref[...] = jnp.where(jnp.abs(x) >= t, x, jnp.zeros_like(x))
+
+
+def mask_apply(x: jnp.ndarray, thresh: jnp.ndarray, block: int | None = None) -> jnp.ndarray:
+    """y[i] = x[i] if |x[i]| >= thresh else 0.  x: [n] (flat), thresh: [1]."""
+    n = x.shape[0]
+    b = block or _pick_block(n, 512)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, thresh)
+
+
+def topk(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Full TopK: jnp threshold + Pallas mask (the lowered artifact)."""
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jnp.sort(flat)[flat.shape[0] - k]
+    return mask_apply(x.reshape(-1), thresh[None]).reshape(x.shape)

@@ -1,0 +1,92 @@
+"""L2 step builders: turn a ModelDef into the jax functions that get
+AOT-lowered (train_step, eval_step, hvp_step).
+
+Calling convention across the AOT boundary (rust/src/runtime reads the
+same layout from metadata.json):
+
+  train_step(p_0..p_{L-1}, x, y)      -> (loss, g_0..g_{L-1})
+  eval_step (p_0..p_{L-1}, x, y)      -> (loss, correct_count)
+  hvp_step  (p_0..p_{L-1}, v_0..v_{L-1}, x, y) -> (hv_0..hv_{L-1})
+
+Parameters are passed as separate program arguments in registry order so
+the rust coordinator can own/update/compress each layer independently —
+the per-layer granularity Accordion requires.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .models import common as cm
+
+
+def _loss_fn(model: cm.ModelDef) -> Callable:
+    def loss(params, x, y):
+        logits = model.apply(params, x)
+        if model.task == "lm":
+            v = logits.shape[-1]
+            return cm.softmax_xent(logits.reshape(-1, v), y.reshape(-1))
+        return cm.softmax_xent(logits, y)
+
+    return loss
+
+
+def train_step(model: cm.ModelDef, n_params: int) -> Callable:
+    loss = _loss_fn(model)
+
+    def step(*args):
+        params = list(args[:n_params])
+        x, y = args[n_params], args[n_params + 1]
+        l, grads = jax.value_and_grad(loss)(params, x, y)
+        return (l, *grads)
+
+    return step
+
+
+def eval_step(model: cm.ModelDef, n_params: int) -> Callable:
+    loss = _loss_fn(model)
+
+    def step(*args):
+        params = list(args[:n_params])
+        x, y = args[n_params], args[n_params + 1]
+        logits = model.apply(params, x)
+        if model.task == "lm":
+            v = logits.shape[-1]
+            correct = cm.correct_count(logits.reshape(-1, v), y.reshape(-1))
+        else:
+            correct = cm.correct_count(logits, y)
+        return (loss(params, x, y), correct)
+
+    return step
+
+
+def hvp_step(model: cm.ModelDef, n_params: int) -> Callable:
+    """Hessian-vector product via forward-over-reverse (Fig. 3 probe)."""
+    loss = _loss_fn(model)
+
+    def step(*args):
+        params = list(args[:n_params])
+        v = list(args[n_params : 2 * n_params])
+        x, y = args[2 * n_params], args[2 * n_params + 1]
+        grad_fn = lambda p: jax.grad(loss)(p, x, y)
+        _, hv = jax.jvp(grad_fn, (params,), (v,))
+        return tuple(hv)
+
+    return step
+
+
+def example_batch(model: cm.ModelDef):
+    """ShapeDtypeStructs for (x, y) at the model's lowering batch size."""
+    b = model.batch
+    if model.input_dtype == "i32":
+        x = jax.ShapeDtypeStruct((b, *model.input_shape), jnp.int32)
+    else:
+        x = jax.ShapeDtypeStruct((b, *model.input_shape), jnp.float32)
+    if model.task == "lm":
+        y = jax.ShapeDtypeStruct((b, model.seq_len), jnp.int32)
+    else:
+        y = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return x, y

@@ -1,0 +1,112 @@
+"""Model registry: every (architecture, dataset) variant the experiments use.
+
+Each entry is a :class:`~compile.models.common.ModelDef`; ``aot.py``
+lowers `train_step`/`eval_step` (and `hvp_step` for the MLP) per entry.
+Names follow ``<family>_<dataset>``; datasets are the synthetic stand-ins
+described in DESIGN.md §2 (`c10` = cifar10-syn, `c100` = cifar100-syn,
+`wt2` = wikitext2-syn).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict
+
+import jax.numpy as jnp
+
+from . import common as cm
+from . import convnets, lstm, mlp, transformer
+
+IMG = (16, 16, 3)  # scaled-down CIFAR-like input (DESIGN.md §2)
+IMG_BATCH = 16  # per-worker micro-batch the conv HLOs are lowered at
+LM_BATCH = 8
+LM_SEQ = 32
+LM_VOCAB = 64
+
+
+def _img_model(family: str, num_classes: int, batch: int = IMG_BATCH) -> cm.ModelDef:
+    fwd = functools.partial(convnets.FAMILIES[family], num_classes=num_classes)
+    example = jnp.zeros((batch, *IMG), dtype=jnp.float32)
+    init, apply = cm.build(fwd, example)
+    ds = "cifar10-syn" if num_classes == 10 else "cifar100-syn"
+    return cm.ModelDef(
+        name=f"{family}_c{num_classes}",
+        init=init,
+        apply=apply,
+        input_shape=IMG,
+        input_dtype="f32",
+        num_classes=num_classes,
+        batch=batch,
+        task="classify",
+    )
+
+
+def _mlp_model(num_classes: int) -> cm.ModelDef:
+    fwd = functools.partial(mlp.mlp, num_classes=num_classes)
+    example = jnp.zeros((IMG_BATCH, *IMG), dtype=jnp.float32)
+    init, apply = cm.build(fwd, example)
+    return cm.ModelDef(
+        name=f"mlp_c{num_classes}",
+        init=init,
+        apply=apply,
+        input_shape=IMG,
+        input_dtype="f32",
+        num_classes=num_classes,
+        batch=IMG_BATCH,
+        task="classify",
+    )
+
+
+def _lstm_model() -> cm.ModelDef:
+    fwd = functools.partial(lstm.lstm_lm, vocab=LM_VOCAB)
+    example = jnp.zeros((LM_BATCH, LM_SEQ), dtype=jnp.int32)
+    init, apply = cm.build(fwd, example)
+    return cm.ModelDef(
+        name="lstm_wt2",
+        init=init,
+        apply=apply,
+        input_shape=(LM_SEQ,),
+        input_dtype="i32",
+        num_classes=LM_VOCAB,
+        batch=LM_BATCH,
+        task="lm",
+        seq_len=LM_SEQ,
+    )
+
+
+def _transformer_model(preset: str) -> cm.ModelDef:
+    layers, d, heads, vocab, seq = transformer.PRESETS[preset]
+    fwd = functools.partial(transformer.transformer_lm, preset=preset)
+    batch = 4 if preset in ("tiny", "small") else 2
+    example = jnp.zeros((batch, seq), dtype=jnp.int32)
+    init, apply = cm.build(fwd, example)
+    return cm.ModelDef(
+        name=f"transformer_{preset}",
+        init=init,
+        apply=apply,
+        input_shape=(seq,),
+        input_dtype="i32",
+        num_classes=vocab,
+        batch=batch,
+        task="lm",
+        seq_len=seq,
+    )
+
+
+def registry() -> Dict[str, cm.ModelDef]:
+    """All variants to lower.  The transformer preset set is controlled by
+    ACCORDION_TRANSFORMER (comma list; default 'tiny,small') so that the
+    100M-parameter `xl` preset is opt-in (it takes a while to lower and
+    much longer to train on one CPU core)."""
+    defs = [
+        _mlp_model(10),
+        _lstm_model(),
+    ]
+    for fam in ("resnet", "vgg", "senet", "densenet", "googlenet"):
+        defs.append(_img_model(fam, 10))
+        defs.append(_img_model(fam, 100))
+    presets = os.environ.get("ACCORDION_TRANSFORMER", "tiny,small").split(",")
+    for p in [p.strip() for p in presets if p.strip()]:
+        defs.append(_transformer_model(p))
+    return {d.name: d for d in defs}

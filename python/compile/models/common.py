@@ -1,0 +1,200 @@
+"""Shared building blocks for the L2 model zoo.
+
+Models are *functional*: ``init(rng) -> params`` (a flat list of jnp
+arrays) and ``apply(params, x) -> logits``.  The flat-list form is what
+crosses the AOT boundary: the lowered HLO takes every parameter tensor as
+a separate program argument (in list order), so the rust coordinator can
+own, update, and compress each layer independently — the granularity at
+which Accordion operates.
+
+The ``Tape`` helper keeps init/apply in lock-step: ``init`` appends
+parameters in the order ``apply`` will consume them, so the two can be
+written as one function body (see the model files).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """Metadata for one parameter tensor, exported to metadata.json."""
+
+    name: str
+    shape: tuple
+    #: dimensionality class used by the rust side to decide compressibility:
+    #: "matrix" (>=2d, compressed by PowerSGD/TopK) or "vector" (1d, sent raw).
+    kind: str
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "shape": list(self.shape), "kind": self.kind}
+
+
+class Tape:
+    """Parameter tape shared by init and apply.
+
+    In *init* mode (``params is None``) each ``get`` call creates the
+    tensor with the given initializer and records its spec.  In *apply*
+    mode it returns the next tensor from the supplied flat list.  Because
+    apply is traced exactly once per lowering, sequential consumption is
+    safe under ``jax.jit``.
+    """
+
+    def __init__(self, params: Sequence[jnp.ndarray] | None, rng=None):
+        self.params = params
+        self.rng = rng
+        self.idx = 0
+        self.created: List[jnp.ndarray] = []
+        self.specs: List[ParamSpec] = []
+
+    def get(self, name: str, shape: tuple, init: Callable) -> jnp.ndarray:
+        if self.params is None:
+            self.rng, sub = jax.random.split(self.rng)
+            t = init(sub, shape)
+            self.created.append(t)
+            kind = "matrix" if len(shape) >= 2 else "vector"
+            self.specs.append(ParamSpec(name, tuple(shape), kind))
+            return t
+        t = self.params[self.idx]
+        self.idx += 1
+        return t
+
+
+# ---------------------------------------------------------------- inits
+
+
+def he_normal(rng, shape):
+    """He-normal: fan_in is every dim but the last (works for dense+conv)."""
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    std = (2.0 / max(fan_in, 1)) ** 0.5
+    return std * jax.random.normal(rng, shape, dtype=jnp.float32)
+
+
+def zeros(_rng, shape):
+    return jnp.zeros(shape, dtype=jnp.float32)
+
+
+def ones(_rng, shape):
+    return jnp.ones(shape, dtype=jnp.float32)
+
+
+def uniform_embed(rng, shape):
+    return 0.1 * jax.random.normal(rng, shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- layers
+
+
+def dense(tape: Tape, name: str, x: jnp.ndarray, features: int, bias=True):
+    w = tape.get(f"{name}/w", (x.shape[-1], features), he_normal)
+    y = x @ w
+    if bias:
+        b = tape.get(f"{name}/b", (features,), zeros)
+        y = y + b
+    return y
+
+
+def conv3x3(tape: Tape, name: str, x: jnp.ndarray, cout: int, stride=1):
+    """3x3 NHWC conv, SAME padding, no bias (followed by groupnorm)."""
+    cin = x.shape[-1]
+    w = tape.get(f"{name}/w", (3, 3, cin, cout), he_normal)
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def conv1x1(tape: Tape, name: str, x: jnp.ndarray, cout: int, stride=1):
+    cin = x.shape[-1]
+    w = tape.get(f"{name}/w", (1, 1, cin, cout), he_normal)
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def groupnorm(tape: Tape, name: str, x: jnp.ndarray, groups=4, eps=1e-5):
+    """Stateless GroupNorm (replaces BatchNorm: no running stats to ship
+    across the AOT boundary).  gamma/beta are 1-d 'vector' params, which —
+    matching the paper's PowerSGD setup — are communicated uncompressed."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:  # channel counts aren't always multiples of `groups`
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = ((xg - mean) ** 2).mean(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    x = xg.reshape(n, h, w, c)
+    gamma = tape.get(f"{name}/g", (c,), ones)
+    beta = tape.get(f"{name}/b", (c,), zeros)
+    return x * gamma + beta
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    return x.mean(axis=(1, 2))
+
+
+def max_pool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+# ---------------------------------------------------------------- losses
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)
+    return nll.mean()
+
+
+def correct_count(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return (pred == labels.astype(jnp.int32)).astype(jnp.float32).sum()
+
+
+@dataclasses.dataclass
+class ModelDef:
+    """A model variant ready for AOT lowering."""
+
+    name: str
+    init: Callable  # rng -> (params, specs)
+    apply: Callable  # (params, x) -> logits
+    input_shape: tuple  # per-example shape (excludes batch dim)
+    input_dtype: str  # "f32" | "i32"
+    num_classes: int
+    batch: int  # per-worker micro-batch the HLO is lowered at
+    task: str = "classify"  # "classify" | "lm"
+    seq_len: int = 0  # for task == "lm"
+
+
+def build(forward: Callable, example_x: jnp.ndarray):
+    """Split a tape-style ``forward(tape, x)`` into (init, apply).
+
+    init traces forward once with a zero example batch to materialize the
+    parameter list + specs; apply replays the same tape order against a
+    caller-supplied flat parameter list.
+    """
+
+    def init(rng):
+        tape = Tape(None, rng)
+        forward(tape, example_x)
+        return tape.created, tape.specs
+
+    def apply(params, x):
+        tape = Tape(params)
+        return forward(tape, x)
+
+    return init, apply

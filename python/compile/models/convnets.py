@@ -1,0 +1,138 @@
+"""Mini CNN zoo mirroring the paper's model families.
+
+The paper evaluates five CIFAR CNN families chosen for one architectural
+trait each: ResNet-18 (skip connections), VGG-19bn (no skips — the most
+compression-fragile family, Figs. 5/9), SENet (squeeze-excitation),
+DenseNet (dense concatenation), GoogLeNet (inception branches).  We keep
+the trait and shrink the instantiation so that distributed training runs
+on one CPU core (see DESIGN.md §2).  BatchNorm is replaced by stateless
+GroupNorm so no running statistics cross the AOT boundary.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import Tape
+
+
+# ------------------------------------------------------------- resnet
+
+
+def _basic_block(tape: Tape, name: str, x, cout: int, stride: int):
+    """Pre-activation basic block with projection shortcut on shape change."""
+    h = cm.relu(cm.groupnorm(tape, f"{name}/gn1", cm.conv3x3(tape, f"{name}/c1", x, cout, stride)))
+    h = cm.groupnorm(tape, f"{name}/gn2", cm.conv3x3(tape, f"{name}/c2", h, cout))
+    if stride != 1 or x.shape[-1] != cout:
+        x = cm.conv1x1(tape, f"{name}/sc", x, cout, stride)
+    return cm.relu(h + x)
+
+
+def resnet_mini(tape: Tape, x, num_classes: int, width: int = 16):
+    x = cm.relu(cm.groupnorm(tape, "stem/gn", cm.conv3x3(tape, "stem/c", x, width)))
+    x = _basic_block(tape, "b1", x, width, 1)
+    x = _basic_block(tape, "b2", x, 2 * width, 2)
+    x = _basic_block(tape, "b3", x, 4 * width, 2)
+    x = cm.global_avg_pool(x)
+    return cm.dense(tape, "fc", x, num_classes)
+
+
+# ------------------------------------------------------------- vgg
+
+
+def vgg_mini(tape: Tape, x, num_classes: int, width: int = 16):
+    """Plain conv stack, no skip connections (the VGG trait)."""
+    plan = [(width, 2), (2 * width, 2), (4 * width, 2)]
+    i = 0
+    for cout, reps in plan:
+        for _ in range(reps):
+            x = cm.relu(cm.groupnorm(tape, f"c{i}/gn", cm.conv3x3(tape, f"c{i}", x, cout)))
+            i += 1
+        x = cm.max_pool2(x)
+    x = cm.global_avg_pool(x)
+    x = cm.relu(cm.dense(tape, "fc1", x, 4 * width))
+    return cm.dense(tape, "fc2", x, num_classes)
+
+
+# ------------------------------------------------------------- senet
+
+
+def _se(tape: Tape, name: str, x, reduction: int = 4):
+    """Squeeze-and-excitation: global pool -> bottleneck MLP -> sigmoid scale."""
+    c = x.shape[-1]
+    s = cm.global_avg_pool(x)
+    s = cm.relu(cm.dense(tape, f"{name}/fc1", s, max(c // reduction, 4)))
+    s = jnp.tanh(cm.dense(tape, f"{name}/fc2", s, c)) * 0.5 + 0.5
+    return x * s[:, None, None, :]
+
+
+def _se_block(tape: Tape, name: str, x, cout: int, stride: int):
+    h = cm.relu(cm.groupnorm(tape, f"{name}/gn1", cm.conv3x3(tape, f"{name}/c1", x, cout, stride)))
+    h = cm.groupnorm(tape, f"{name}/gn2", cm.conv3x3(tape, f"{name}/c2", h, cout))
+    h = _se(tape, f"{name}/se", h)
+    if stride != 1 or x.shape[-1] != cout:
+        x = cm.conv1x1(tape, f"{name}/sc", x, cout, stride)
+    return cm.relu(h + x)
+
+
+def senet_mini(tape: Tape, x, num_classes: int, width: int = 16):
+    x = cm.relu(cm.groupnorm(tape, "stem/gn", cm.conv3x3(tape, "stem/c", x, width)))
+    x = _se_block(tape, "b1", x, width, 1)
+    x = _se_block(tape, "b2", x, 2 * width, 2)
+    x = _se_block(tape, "b3", x, 4 * width, 2)
+    x = cm.global_avg_pool(x)
+    return cm.dense(tape, "fc", x, num_classes)
+
+
+# ------------------------------------------------------------- densenet
+
+
+def _dense_layer(tape: Tape, name: str, x, growth: int):
+    h = cm.relu(cm.groupnorm(tape, f"{name}/gn", x))
+    h = cm.conv3x3(tape, f"{name}/c", h, growth)
+    return jnp.concatenate([x, h], axis=-1)
+
+
+def densenet_mini(tape: Tape, x, num_classes: int, growth: int = 12):
+    x = cm.conv3x3(tape, "stem/c", x, 2 * growth)
+    for b in range(2):
+        for l in range(3):
+            x = _dense_layer(tape, f"d{b}/l{l}", x, growth)
+        if b == 0:  # transition: 1x1 compress + pool
+            x = cm.conv1x1(tape, f"t{b}/c", x, x.shape[-1] // 2)
+            x = cm.max_pool2(x)
+    x = cm.relu(cm.groupnorm(tape, "head/gn", x))
+    x = cm.global_avg_pool(x)
+    return cm.dense(tape, "fc", x, num_classes)
+
+
+# ------------------------------------------------------------- googlenet
+
+
+def _inception(tape: Tape, name: str, x, c1: int, c3: int, c5: int):
+    """Inception-mini: parallel 1x1 / 3x3 / double-3x3 branches, concat."""
+    b1 = cm.relu(cm.conv1x1(tape, f"{name}/b1", x, c1))
+    b3 = cm.relu(cm.conv3x3(tape, f"{name}/b3", cm.relu(cm.conv1x1(tape, f"{name}/b3r", x, c3 // 2)), c3))
+    b5 = cm.relu(cm.conv3x3(tape, f"{name}/b5a", cm.relu(cm.conv1x1(tape, f"{name}/b5r", x, c5 // 2)), c5))
+    b5 = cm.relu(cm.conv3x3(tape, f"{name}/b5b", b5, c5))
+    return jnp.concatenate([b1, b3, b5], axis=-1)
+
+
+def googlenet_mini(tape: Tape, x, num_classes: int, width: int = 16):
+    x = cm.relu(cm.groupnorm(tape, "stem/gn", cm.conv3x3(tape, "stem/c", x, width)))
+    x = _inception(tape, "i1", x, width, width, width // 2)
+    x = cm.max_pool2(x)
+    x = _inception(tape, "i2", x, 2 * width, 2 * width, width)
+    x = cm.max_pool2(x)
+    x = cm.global_avg_pool(x)
+    return cm.dense(tape, "fc", x, num_classes)
+
+
+FAMILIES = {
+    "resnet": resnet_mini,
+    "vgg": vgg_mini,
+    "senet": senet_mini,
+    "densenet": densenet_mini,
+    "googlenet": googlenet_mini,
+}

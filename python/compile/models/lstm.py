@@ -1,0 +1,46 @@
+"""LSTM language model (paper: 2-layer LSTM on WikiText-2, Fig. 11).
+
+Implemented with ``jax.lax.scan`` so the lowered HLO contains a single
+fused while-loop rather than an unrolled graph.  The four gate matrices
+per layer are fused into one [in+hidden, 4*hidden] parameter — the same
+layout torch.nn.LSTM uses, and a 2-d matrix PowerSGD can factorize.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import Tape
+
+
+def _lstm_layer(tape: Tape, name: str, x, hidden: int):
+    """x: [B, T, F] -> [B, T, hidden]."""
+    b, t, f = x.shape
+    wx = tape.get(f"{name}/wx", (f, 4 * hidden), cm.he_normal)
+    wh = tape.get(f"{name}/wh", (hidden, 4 * hidden), cm.he_normal)
+    bias = tape.get(f"{name}/b", (4 * hidden,), cm.zeros)
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ wx + h @ wh + bias
+        i, fgt, g, o = jnp.split(gates, 4, axis=-1)
+        i, fgt, o = jax.nn.sigmoid(i), jax.nn.sigmoid(fgt + 1.0), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c = fgt * c + i * g
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((b, hidden), dtype=jnp.float32)
+    (_, _), hs = jax.lax.scan(step, (h0, h0), jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def lstm_lm(tape: Tape, tokens, vocab: int, embed: int = 32, hidden: int = 64, layers: int = 2):
+    """tokens: int32 [B, T] -> logits [B, T, vocab]."""
+    emb = tape.get("embed", (vocab, embed), cm.uniform_embed)
+    x = emb[tokens]
+    for l in range(layers):
+        x = _lstm_layer(tape, f"lstm{l}", x, hidden)
+    return cm.dense(tape, "head", x, vocab)

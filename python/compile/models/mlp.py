@@ -1,0 +1,19 @@
+"""MLP — the smallest classifier in the zoo.
+
+Used by the fastest experiments and by the Hessian probe (Fig. 3): the
+`hvp_step` artifact is lowered for this model only, since power iteration
+needs many HVP evaluations per epoch.
+"""
+
+from __future__ import annotations
+
+from . import common as cm
+from .common import Tape
+
+
+def mlp(tape: Tape, x, num_classes: int, hidden: int = 128, depth: int = 2):
+    n = x.shape[0]
+    x = x.reshape(n, -1)
+    for i in range(depth):
+        x = cm.relu(cm.dense(tape, f"fc{i}", x, hidden))
+    return cm.dense(tape, "out", x, num_classes)

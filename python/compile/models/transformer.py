@@ -1,0 +1,70 @@
+"""Decoder-only transformer LM for the end-to-end example.
+
+Presets scale from CPU-feasible (``small``) to the ~100M-parameter ``xl``
+the original brief targets; the artifact actually built is chosen by
+``aot.py`` (env ``ACCORDION_TRANSFORMER``).  Pre-norm blocks, learned
+positional embeddings, untied LM head.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import Tape
+
+PRESETS = {
+    # name: (layers, d_model, heads, vocab, seq)
+    "tiny": (2, 64, 2, 256, 32),
+    "small": (2, 128, 4, 512, 64),
+    "base": (6, 384, 6, 4096, 128),
+    "xl": (12, 768, 12, 16384, 128),  # ~100M params
+}
+
+
+def _layernorm(tape: Tape, name: str, x, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    g = tape.get(f"{name}/g", (x.shape[-1],), cm.ones)
+    b = tape.get(f"{name}/b", (x.shape[-1],), cm.zeros)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attn(tape: Tape, name: str, x, heads: int):
+    b, t, d = x.shape
+    hd = d // heads
+    qkv = cm.dense(tape, f"{name}/qkv", x, 3 * d, bias=False)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads_split(z):
+        return z.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads_split(q), heads_split(k), heads_split(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / (hd**0.5)
+    mask = jnp.tril(jnp.ones((t, t), dtype=jnp.float32))
+    att = jnp.where(mask == 0.0, -1e9, att)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return cm.dense(tape, f"{name}/proj", y, d, bias=False)
+
+
+def _block(tape: Tape, name: str, x, heads: int):
+    x = x + _attn(tape, f"{name}/attn", _layernorm(tape, f"{name}/ln1", x), heads)
+    h = _layernorm(tape, f"{name}/ln2", x)
+    h = cm.dense(tape, f"{name}/fc1", h, 4 * x.shape[-1])
+    h = jax.nn.gelu(h)
+    h = cm.dense(tape, f"{name}/fc2", h, x.shape[-1])
+    return x + h
+
+
+def transformer_lm(tape: Tape, tokens, preset: str = "small"):
+    layers, d, heads, vocab, seq = PRESETS[preset]
+    b, t = tokens.shape
+    emb = tape.get("embed", (vocab, d), cm.uniform_embed)
+    pos = tape.get("pos", (seq, d), cm.uniform_embed)
+    x = emb[tokens] + pos[None, :t, :]
+    for l in range(layers):
+        x = _block(tape, f"h{l}", x, heads)
+    x = _layernorm(tape, "ln_f", x)
+    return cm.dense(tape, "head", x, vocab, bias=False)

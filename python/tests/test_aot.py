@@ -1,0 +1,86 @@
+"""AOT boundary tests: the metadata manifest, the HLO text format the
+xla 0.1.6 crate can parse, and the init snapshot layout."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.models import registry
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "metadata.json")),
+    reason="artifacts not built (make artifacts)",
+)
+
+
+def meta():
+    with open(os.path.join(ART, "metadata.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_registry():
+    m = meta()
+    reg = registry()
+    for name in reg:
+        assert name in m["models"], f"{name} missing from manifest"
+        entry = m["models"][name]
+        for key in ("task", "batch", "n_params", "total_params", "params", "artifacts", "init"):
+            assert key in entry
+        assert entry["n_params"] == len(entry["params"])
+        total = sum(int(np.prod(p["shape"])) for p in entry["params"])
+        assert total == entry["total_params"]
+
+
+def test_artifact_files_exist_and_are_hlo_text():
+    m = meta()
+    for name, entry in m["models"].items():
+        for kind, fname in entry["artifacts"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), f"{name}.{kind}"
+            head = open(path).read(200)
+            # HLO text, not proto: must start with the module header
+            assert head.startswith("HloModule"), f"{name}.{kind} is not HLO text"
+    for kname, entry in m["kernels"].items():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), kname
+        assert open(path).read(20).startswith("HloModule")
+
+
+def test_init_snapshot_layout():
+    m = meta()
+    entry = m["models"]["mlp_c10"]
+    raw = open(os.path.join(ART, entry["init"]), "rb").read()
+    assert len(raw) == entry["total_params"] * 4
+    # first tensor should be a he-init dense weight: nonzero, sane std
+    shape0 = entry["params"][0]["shape"]
+    n0 = int(np.prod(shape0))
+    w0 = np.frombuffer(raw[: n0 * 4], dtype="<f4")
+    assert 0.0 < w0.std() < 1.0
+
+
+def test_lowering_is_deterministic():
+    """Same function lowered twice gives identical HLO text — required for
+    the Makefile's mtime-based incremental rebuilds to be meaningful."""
+    fn = lambda x: (jnp.tanh(x) @ x.T,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    a = aot.lower(fn, (spec,))
+    b = aot.lower(fn, (spec,))
+    assert a == b
+
+
+def test_hlo_text_has_no_64bit_ids():
+    """Guard against the jax>=0.5 proto-id regression: text form parses
+    into small instruction ids the 0.5.1 parser reassigns; text must not
+    contain serialized-proto artifacts."""
+    m = meta()
+    entry = m["models"]["mlp_c10"]
+    text = open(os.path.join(ART, entry["artifacts"]["train"])).read()
+    assert "HloModule" in text
+    assert "\x00" not in text  # binary proto would have NULs

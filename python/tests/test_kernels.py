@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and the block parameter, which must never
+change numerics); fixed-seed cases pin the exact grids the AOT parity
+artifacts use, so a kernel regression fails here before it can poison the
+rust parity tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gradnorm, powersgd, ref, topk
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# ------------------------------------------------------------- powersgd
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 96),
+    k=st.integers(2, 48),
+    r=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_project_matches_ref(n, k, r, seed):
+    rng = np.random.default_rng(seed)
+    m, q = rand(rng, n, k), rand(rng, k, r)
+    np.testing.assert_allclose(powersgd.project(m, q), ref.project(m, q), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 96),
+    k=st.integers(2, 48),
+    r=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_backproject_matches_ref(n, k, r, seed):
+    rng = np.random.default_rng(seed)
+    m, p = rand(rng, n, k), rand(rng, n, r)
+    np.testing.assert_allclose(
+        powersgd.backproject(m, p), ref.backproject(m, p), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("block", [1, 2, 4, 8, 16])
+def test_project_block_invariance(block):
+    """BlockSpec tiling is a schedule, not semantics: any divisor block
+    must produce identical results."""
+    rng = np.random.default_rng(0)
+    m, q = rand(rng, 16, 8), rand(rng, 8, 2)
+    base = ref.project(m, q)
+    np.testing.assert_allclose(powersgd.project(m, q, block_n=block), base, rtol=1e-6)
+    p = rand(rng, 16, 2)
+    np.testing.assert_allclose(
+        powersgd.backproject(m, p, block_n=block),
+        ref.backproject(m, p),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("r", [1, 2, 4])
+def test_compress_round_matches_ref(r):
+    rng = np.random.default_rng(42)
+    m, q = rand(rng, 128, 64), rand(rng, 64, r)
+    p1, q1, d1 = powersgd.compress_round(m, q)
+    p2, q2, d2 = ref.powersgd_round(m, q)
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(q1, q2, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("r", [1, 2, 4])
+def test_orthonormal_columns(r):
+    rng = np.random.default_rng(7)
+    m, q = rand(rng, 64, 32), rand(rng, 32, r)
+    p, _, _ = powersgd.compress_round(m, q)
+    gram = np.asarray(p.T @ p)
+    np.testing.assert_allclose(gram, np.eye(r), atol=1e-4)
+
+
+def test_rank_full_is_lossless_direction():
+    """With r = min(n,k) and a well-conditioned M, PQᵀ reconstructs M."""
+    rng = np.random.default_rng(3)
+    m = rand(rng, 16, 4)
+    q = rand(rng, 4, 4)
+    _, _, d = ref.powersgd_round(m, q)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(m), rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- topk
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(4, 512),
+    frac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topk_matches_ref(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n)
+    k = max(1, int(frac * n))
+    got = topk.topk(x, k)
+    want = ref.topk(x, k)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_topk_keeps_exactly_k_for_distinct_magnitudes():
+    x = jnp.asarray([0.1, -5.0, 3.0, 0.01, -0.5, 2.0, -1.0, 0.3], dtype=jnp.float32)
+    y = np.asarray(topk.topk(x, 3))
+    assert (y != 0).sum() == 3
+    assert set(np.nonzero(y)[0]) == {1, 2, 5}
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 256), seed=st.integers(0, 2**31 - 1))
+def test_mask_apply_blocked_equals_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n)
+    t = jnp.asarray([0.5], dtype=jnp.float32)
+    np.testing.assert_allclose(topk.mask_apply(x, t), ref.topk_mask(x, t[0]), rtol=1e-6)
+
+
+# ------------------------------------------------------------- sqnorm
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 1024), seed=st.integers(0, 2**31 - 1))
+def test_sqnorm_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n)
+    got = float(gradnorm.sqnorm(x)[0])
+    want = float(ref.sqnorm(x))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("block", [1, 4, 16, 64])
+def test_sqnorm_block_invariance(block):
+    rng = np.random.default_rng(1)
+    x = rand(rng, 64)
+    np.testing.assert_allclose(
+        float(gradnorm.sqnorm(x, block=block)[0]), float(ref.sqnorm(x)), rtol=1e-5
+    )

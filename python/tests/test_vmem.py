@@ -1,0 +1,36 @@
+"""L1 TPU resource-model tests: the static VMEM/MXU estimates recorded in
+EXPERIMENTS.md §Perf must be consistent with the BlockSpecs the kernels
+actually use (DESIGN.md §Hardware-Adaptation)."""
+
+from compile.kernels import powersgd
+
+
+def test_vmem_estimate_fields():
+    est = powersgd.vmem_estimate(n=4608, k=512, r=2, block_n=128)
+    # one M block + resident Q + one P block
+    assert est["vmem_bytes"] == 4 * (128 * 512 + 512 * 2 + 128 * 2)
+    assert 0.0 < est["vmem_frac_16MiB"] < 1.0
+    assert est["memory_bound"] is True
+
+
+def test_vmem_scales_with_block():
+    small = powersgd.vmem_estimate(1024, 256, 2, 32)
+    big = powersgd.vmem_estimate(1024, 256, 2, 256)
+    assert big["vmem_bytes"] > small["vmem_bytes"]
+
+
+def test_default_block_fits_vmem_for_zoo_shapes():
+    """Every matrix shape in the mini zoo fits comfortably in 16 MiB VMEM
+    at the kernel's default block pick."""
+    shapes = [(576, 32), (288, 32), (144, 16), (64, 100), (4608, 512)]
+    for n, k in shapes:
+        bn = powersgd._pick_block(n)
+        est = powersgd.vmem_estimate(n, k, 4, bn)
+        assert est["vmem_frac_16MiB"] < 0.25, (n, k, est)
+
+
+def test_pick_block_divides():
+    for n in [1, 7, 128, 130, 576, 4608]:
+        b = powersgd._pick_block(n)
+        assert n % b == 0
+        assert 1 <= b <= 128 or b == n

@@ -1,0 +1,52 @@
+//! Collective benches: the faithful ring all-reduce vs the algebraic
+//! shortcut the hot path uses, across message sizes and worker counts,
+//! plus the α–β model evaluation cost (pure arithmetic — must be free).
+//!
+//! Run: `cargo bench --bench collectives [-- <filter>]`
+
+include!("harness.rs");
+
+use accordion::cluster::network::NetworkModel;
+use accordion::collectives::{mean_into, ring_allreduce_mean};
+use accordion::util::rng::Rng;
+
+fn main() {
+    let ctl = BenchCtl::from_env();
+    let mut rng = Rng::new(2);
+
+    for &workers in &[2usize, 4, 8] {
+        for &len in &[1usize << 10, 1 << 16, 1 << 20] {
+            let base: Vec<Vec<f32>> = (0..workers).map(|_| rng.normals(len)).collect();
+
+            let views: Vec<&[f32]> = base.iter().map(|b| b.as_slice()).collect();
+            let mut out = vec![0.0f32; len];
+            ctl.bench(
+                &format!("mean_into/w{workers}/len{len}"),
+                (len * workers) as u64,
+                || mean_into(&views, &mut out),
+            );
+
+            let mut bufs = base.clone();
+            ctl.bench(
+                &format!("ring_allreduce/w{workers}/len{len}"),
+                (len * workers) as u64,
+                || {
+                    // clone cost included but identical across iterations;
+                    // the comparison of interest is ring vs mean at the
+                    // same len.
+                    bufs.clone_from(&base);
+                    ring_allreduce_mean(&mut bufs);
+                },
+            );
+        }
+    }
+
+    let net = NetworkModel::new(4, 100.0, 50.0);
+    let mut acc = 0.0f64;
+    ctl.bench("alpha_beta_model/allreduce_eval", 0, || {
+        for b in 0..1000usize {
+            acc += net.allreduce_secs(b * 64);
+        }
+    });
+    std::hint::black_box(acc);
+}

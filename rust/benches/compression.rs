@@ -1,0 +1,133 @@
+//! Compressor hot-path benches: one PowerSGD / TopK / RandomK / QSGD
+//! round per layer shape, at the shapes the model zoo actually has (conv
+//! HWIO flattened) plus a large square layer for headroom.  These are the
+//! kernels the §Perf pass optimizes; EXPERIMENTS.md records before/after.
+//!
+//! Run: `cargo bench --bench compression [-- <filter>]`
+
+include!("harness.rs");
+
+use accordion::cluster::network::NetworkModel;
+use accordion::collectives::Comm;
+use accordion::compress::{
+    powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, topk::TopK, DistCompressor, Level,
+};
+use accordion::util::rng::Rng;
+
+fn main() {
+    let ctl = BenchCtl::from_env();
+    let workers = 4;
+
+    // §Perf A/B: generic-R gemm (pre-optimization) vs const-R dispatch.
+    {
+        use accordion::tensor::linalg;
+        let mut rng = Rng::new(9);
+        let (n, k) = (4608usize, 512usize);
+        let m = rng.normals(n * k);
+        for r in [1usize, 2, 4] {
+            let q = rng.normals(k * r);
+            let p = rng.normals(n * r);
+            let mut out = vec![0.0f32; n * r];
+            let mut outq = vec![0.0f32; k * r];
+            let mut outm = vec![0.0f32; n * k];
+            ctl.bench(&format!("gemm_nk_kr/generic/r{r} (4608x512)"), (n * k) as u64, || {
+                linalg::gemm_nk_kr_generic(&m, &q, n, k, r, &mut out)
+            });
+            ctl.bench(&format!("gemm_nk_kr/dispatch/r{r} (4608x512)"), (n * k) as u64, || {
+                linalg::gemm_nk_kr(&m, &q, n, k, r, &mut out)
+            });
+            ctl.bench(&format!("gemm_tn_kr/generic/r{r} (4608x512)"), (n * k) as u64, || {
+                linalg::gemm_tn_kr_generic(&m, &p, n, k, r, &mut outq)
+            });
+            ctl.bench(&format!("gemm_tn_kr/dispatch/r{r} (4608x512)"), (n * k) as u64, || {
+                linalg::gemm_tn_kr(&m, &p, n, k, r, &mut outq)
+            });
+            ctl.bench(&format!("gemm_nr_rk/generic/r{r} (4608x512)"), (n * k) as u64, || {
+                linalg::gemm_nr_rk_generic(&p, &q, n, k, r, &mut outm)
+            });
+            ctl.bench(&format!("gemm_nr_rk/dispatch/r{r} (4608x512)"), (n * k) as u64, || {
+                linalg::gemm_nr_rk(&p, &q, n, k, r, &mut outm)
+            });
+        }
+    }
+    // (label, shape): resnet-mini block conv, fc, and a big square layer
+    let shapes: Vec<(&str, Vec<usize>)> = vec![
+        ("conv3x3_64x32 (576x32)", vec![3, 3, 64, 32]),
+        ("fc_64x100", vec![64, 100]),
+        ("square_512x512", vec![512, 512]),
+    ];
+    let mut rng = Rng::new(1);
+
+    for (label, shape) in &shapes {
+        let numel: usize = shape.iter().product();
+        let grads: Vec<Vec<f32>> = (0..workers).map(|_| rng.normals(numel)).collect();
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut out = vec![0.0f32; numel];
+
+        let mut ps = PowerSgd::new(workers, 2, 1, 1);
+        for (lvl, ln) in [(Level::Low, "r2"), (Level::High, "r1")] {
+            let mut comm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
+            ctl.bench(
+                &format!("powersgd/{ln}/{label}"),
+                (numel * workers) as u64,
+                || ps.round(0, &views, shape, lvl, &mut comm, &mut out),
+            );
+        }
+
+        let mut tk = TopK::new(workers, 0.99, 0.10);
+        for (lvl, ln) in [(Level::Low, "k99"), (Level::High, "k10")] {
+            let mut comm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
+            ctl.bench(
+                &format!("topk/{ln}/{label}"),
+                (numel * workers) as u64,
+                || tk.round(0, &views, shape, lvl, &mut comm, &mut out),
+            );
+        }
+
+        let mut rk = RandomK::new(workers, 0.99, 0.10, 3);
+        let mut comm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
+        ctl.bench(
+            &format!("randomk/k10/{label}"),
+            (numel * workers) as u64,
+            || rk.round(0, &views, shape, Level::High, &mut comm, &mut out),
+        );
+
+        let mut qs = Qsgd::new(workers, 8, 2, 3);
+        let mut comm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
+        ctl.bench(
+            &format!("qsgd/8b/{label}"),
+            (numel * workers) as u64,
+            || qs.round(0, &views, shape, Level::Low, &mut comm, &mut out),
+        );
+    }
+
+    // the full per-step compression sweep of resnet_c100 (all layers),
+    // the actual per-step hot path cost the trainer pays
+    if let Ok(reg) = accordion::models::Registry::load(accordion::models::default_artifacts_dir()) {
+        if let Ok(meta) = reg.model("resnet_c100") {
+            let grads: Vec<Vec<Vec<f32>>> = (0..workers)
+                .map(|_| meta.params.iter().map(|p| rng.normals(p.numel())).collect())
+                .collect();
+            let mut outs: Vec<Vec<f32>> =
+                meta.params.iter().map(|p| vec![0.0; p.numel()]).collect();
+            let mut ps = PowerSgd::new(workers, 2, 1, 1);
+            let total: usize = meta.total_params;
+            let mut comm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
+            ctl.bench(
+                "full-step/resnet_c100/powersgd-r2 (all layers)",
+                (total * workers) as u64,
+                || {
+                    for (l, p) in meta.params.iter().enumerate() {
+                        let views: Vec<&[f32]> =
+                            (0..workers).map(|w| grads[w][l].as_slice()).collect();
+                        if p.compressible() {
+                            ps.round(l, &views, &p.shape, Level::Low, &mut comm, &mut outs[l]);
+                        } else {
+                            comm.allreduce_mean_into(&views, &mut outs[l]);
+                        }
+                    }
+                },
+            );
+        }
+    }
+}

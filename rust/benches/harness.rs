@@ -1,0 +1,76 @@
+// Hand-rolled bench harness (offline image: no criterion).  Used by the
+// `harness = false` bench targets via `include!`.
+//
+// Reports mean / p50 / p95 wall time and derived throughput over
+// `iters` timed iterations after `warmup` untimed ones.  Honors the
+// standard `cargo bench -- <filter>` positional filter and
+// `ACCORDION_BENCH_ITERS` for quick runs.
+
+use std::time::Instant;
+
+pub struct BenchCtl {
+    pub filter: Option<String>,
+    pub iters: usize,
+}
+
+impl BenchCtl {
+    pub fn from_env() -> BenchCtl {
+        // cargo bench passes --bench; any bare arg is a filter
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        let iters = std::env::var("ACCORDION_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(30);
+        BenchCtl { filter, iters }
+    }
+
+    pub fn matches(&self, name: &str) -> bool {
+        self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+    }
+
+    /// Time `f` and report.  `work` is the per-iteration element count
+    /// used for the throughput column (0 to suppress).
+    pub fn bench<F: FnMut()>(&self, name: &str, work: u64, mut f: F) {
+        if !self.matches(name) {
+            return;
+        }
+        for _ in 0..3.min(self.iters) {
+            f(); // warmup
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = samples[samples.len() / 2];
+        let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+        let thr = if work > 0 && mean > 0.0 {
+            format!("  {:>9.1} Melem/s", work as f64 / mean / 1e6)
+        } else {
+            String::new()
+        };
+        println!(
+            "{name:<52} mean {:>9} p50 {:>9} p95 {:>9}{thr}",
+            fmt(mean),
+            fmt(p50),
+            fmt(p95)
+        );
+    }
+}
+
+fn fmt(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.0}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}

@@ -1,0 +1,79 @@
+//! End-to-end bench: the per-table training-step pipeline at bench-sized
+//! workloads — one timed target per paper table family (PowerSGD tables
+//! 1-2, TopK tables 3-4, batch-size tables 5-6), measuring simulated-
+//! cluster steps/second through the full AOT-exec -> compress ->
+//! collective -> SGD path.  The *results* of the tables are regenerated
+//! by `accordion repro --exp tableN`; this target tracks the speed of the
+//! machinery that produces them (§Perf).
+//!
+//! Run: `cargo bench --bench tables [-- <filter>]`
+
+include!("harness.rs");
+
+use accordion::compress::Level;
+use accordion::models::{default_artifacts_dir, Registry};
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+
+fn main() {
+    let ctl = BenchCtl::from_env();
+    if !default_artifacts_dir().join("metadata.json").exists() {
+        eprintln!("artifacts not built; skipping table benches");
+        return;
+    }
+    let reg = Registry::load(default_artifacts_dir()).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+
+    let tiny = |method: MethodCfg, ctrl: ControllerCfg| {
+        let mut c = TrainConfig::default();
+        c.model = "mlp_c10".into();
+        c.epochs = 2;
+        c.train_size = 256;
+        c.test_size = 64;
+        c.warmup_epochs = 0;
+        c.decay_epochs = vec![1];
+        c.method = method;
+        c.controller = ctrl;
+        c
+    };
+
+    // iters are whole 2-epoch jobs; keep the count small
+    let ctl = BenchCtl { iters: ctl.iters.min(5), ..ctl };
+
+    let cases: Vec<(&str, TrainConfig)> = vec![
+        (
+            "table1-2/powersgd/accordion (2 epochs mlp)",
+            tiny(
+                MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+                ControllerCfg::Accordion { eta: 0.5, interval: 1 },
+            ),
+        ),
+        (
+            "table3-4/topk/accordion (2 epochs mlp)",
+            tiny(
+                MethodCfg::TopK { frac_low: 0.99, frac_high: 0.10 },
+                ControllerCfg::Accordion { eta: 0.5, interval: 1 },
+            ),
+        ),
+        (
+            "table5-6/batch-mode/accordion (2 epochs mlp)",
+            tiny(
+                MethodCfg::None,
+                ControllerCfg::AccordionBatch { eta: 0.5, interval: 1, mult: 4 },
+            ),
+        ),
+        (
+            "baseline/uncompressed-static (2 epochs mlp)",
+            tiny(MethodCfg::None, ControllerCfg::Static(Level::Low)),
+        ),
+    ];
+
+    for (name, cfg) in cases {
+        let steps = 2 * (cfg.train_size / (cfg.workers * 16)) as u64; // mlp batch = 16
+        ctl.bench(name, steps, || {
+            let log = train::run(&cfg, &reg, &mut rt).unwrap();
+            std::hint::black_box(log.final_acc());
+        });
+    }
+    println!("(Melem/s column = global optimizer steps/s; full tables: `accordion repro --exp tableN`)");
+}

@@ -1,0 +1,26 @@
+//! Cluster topology + network cost model.
+//!
+//! The paper's testbed is 4 p3.2xlarge nodes with NCCL over 10 Gbps
+//! ethernet; ours is N *logical* workers stepping in lock-step (BSP)
+//! inside one process.  Data volume per collective is exact; time is the
+//! standard α–β model per ring collective (see `NetworkModel`).  Workers
+//! are logical rather than OS threads on purpose: the host has one core,
+//! PJRT executions serialize anyway, and lock-step replay makes every
+//! experiment bit-reproducible.  The `time` module converts measured
+//! compute + modeled communication into the simulated wall clock the
+//! tables report (DESIGN.md §2, §9).
+
+pub mod network;
+
+/// Static description of the training cluster.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub workers: usize,
+}
+
+impl Topology {
+    pub fn new(workers: usize) -> Topology {
+        assert!(workers >= 1);
+        Topology { workers }
+    }
+}

@@ -1,0 +1,98 @@
+//! α–β network cost model for ring collectives.
+//!
+//! time(all_reduce, V bytes)  = 2(N-1)·α + 2·(N-1)/N · V · β
+//! time(all_gather, V bytes)  =  (N-1)·α +   (N-1)/N · (N·V) · β
+//!    (V = per-worker payload; every worker receives (N-1)·V)
+//! time(broadcast,  V bytes)  =  (N-1)·α + V · β        (pipelined ring)
+//!
+//! with α the per-hop latency and β = 1/bandwidth.  These are the
+//! textbook ring-collective costs NCCL approaches at large message sizes.
+//! Defaults put the comm/compute ratio of our scaled-down models in the
+//! same regime as ResNet-18 on 4x V100 + 10 Gbps (DESIGN.md §2).
+
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    pub workers: usize,
+    /// per-hop latency, seconds
+    pub alpha: f64,
+    /// seconds per byte (1/bandwidth)
+    pub beta: f64,
+}
+
+impl NetworkModel {
+    pub fn new(workers: usize, bandwidth_mbps: f64, latency_us: f64) -> NetworkModel {
+        NetworkModel {
+            workers,
+            alpha: latency_us * 1e-6,
+            beta: 8.0 / (bandwidth_mbps * 1e6),
+        }
+    }
+
+    /// Paper-like default: comm-bound at our model scale.
+    pub fn default_for(workers: usize) -> NetworkModel {
+        NetworkModel::new(workers, 100.0, 50.0)
+    }
+
+    pub fn allreduce_secs(&self, bytes_per_worker: usize) -> f64 {
+        let n = self.workers as f64;
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        2.0 * (n - 1.0) * self.alpha + 2.0 * (n - 1.0) / n * bytes_per_worker as f64 * self.beta
+    }
+
+    pub fn allgather_secs(&self, bytes_per_worker: usize) -> f64 {
+        let n = self.workers as f64;
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        (n - 1.0) * self.alpha + (n - 1.0) * bytes_per_worker as f64 * self.beta
+    }
+
+    pub fn broadcast_secs(&self, bytes: usize) -> f64 {
+        let n = self.workers as f64;
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        (n - 1.0) * self.alpha + bytes as f64 * self.beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_is_free() {
+        let m = NetworkModel::new(1, 100.0, 50.0);
+        assert_eq!(m.allreduce_secs(1 << 20), 0.0);
+        assert_eq!(m.allgather_secs(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes_and_latency_floor() {
+        let m = NetworkModel::new(4, 100.0, 50.0);
+        let t_small = m.allreduce_secs(4);
+        let t_big = m.allreduce_secs(4 << 20);
+        // latency floor: 6 hops * 50us
+        assert!((t_small - 6.0 * 50e-6).abs() < 1e-6);
+        // bandwidth term: 1.5 * 4MiB * 8 / 100Mbps ≈ 0.50s
+        assert!((t_big - t_small) > 0.4 && (t_big - t_small) < 0.6, "{t_big}");
+    }
+
+    #[test]
+    fn allgather_more_expensive_per_byte_than_allreduce_factor() {
+        // ring allgather moves (N-1)*V per worker vs 2(N-1)/N*V: ratio N/2
+        let m = NetworkModel::new(4, 100.0, 0.0);
+        let v = 1 << 20;
+        let ratio = m.allgather_secs(v) / m.allreduce_secs(v);
+        assert!((ratio - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn higher_bandwidth_is_faster() {
+        let slow = NetworkModel::new(4, 10.0, 10.0);
+        let fast = NetworkModel::new(4, 1000.0, 10.0);
+        assert!(fast.allreduce_secs(1 << 20) < slow.allreduce_secs(1 << 20));
+    }
+}

@@ -1,0 +1,182 @@
+//! Collectives: the communication substrate.
+//!
+//! Two layers:
+//!  * pure algorithms — `ring_allreduce_mean` is a faithful chunked
+//!    reduce-scatter + all-gather ring (what NCCL runs); `mean_into` is
+//!    the algebraically identical shortcut the hot path uses (property
+//!    tests pin the equivalence);
+//!  * `Comm` — the accounting wrapper every compressor talks to: it
+//!    performs the aggregation *and* charges the communication ledger
+//!    (paper-convention payload floats) and the α–β clock.
+
+use crate::cluster::network::NetworkModel;
+
+/// Communication accounting for one run.
+/// `floats` follows the paper's "Data Sent" convention: the per-worker
+/// payload size of every collective, accumulated over steps (see
+/// DESIGN.md §5 — this is what reproduces the tables' Million/Billion
+/// Floats columns).  `secs` is the α–β modeled wall-clock.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    pub floats: u64,
+    pub secs: f64,
+    pub collectives: u64,
+}
+
+/// The handle compressors/trainers use for every aggregation.
+pub struct Comm {
+    pub net: NetworkModel,
+    pub ledger: Ledger,
+}
+
+impl Comm {
+    pub fn new(net: NetworkModel) -> Comm {
+        Comm { net, ledger: Ledger::default() }
+    }
+
+    /// All-reduce (mean) of one equal-length buffer per worker.
+    /// Charges one ring all-reduce of the payload and returns the mean.
+    pub fn allreduce_mean(&mut self, bufs: &[&[f32]]) -> Vec<f32> {
+        let mut out = vec![0.0; bufs[0].len()];
+        self.allreduce_mean_into(bufs, &mut out);
+        out
+    }
+
+    pub fn allreduce_mean_into(&mut self, bufs: &[&[f32]], out: &mut [f32]) {
+        mean_into(bufs, out);
+        self.charge_allreduce(out.len());
+    }
+
+    /// Charge an all-reduce without moving data (used when the payload is
+    /// assembled elsewhere, e.g. the packed small-tensor bucket).
+    pub fn charge_allreduce(&mut self, floats: usize) {
+        self.ledger.floats += floats as u64;
+        self.ledger.secs += self.net.allreduce_secs(floats * 4);
+        self.ledger.collectives += 1;
+    }
+
+    /// Charge an all-gather where each worker contributes `floats`
+    /// payload (TopK: values + indices).
+    pub fn charge_allgather(&mut self, floats: usize) {
+        self.ledger.floats += floats as u64;
+        self.ledger.secs += self.net.allgather_secs(floats * 4);
+        self.ledger.collectives += 1;
+    }
+}
+
+/// Naive mean across workers (the hot-path aggregation).
+pub fn mean_into(bufs: &[&[f32]], out: &mut [f32]) {
+    let n = bufs.len();
+    debug_assert!(n > 0);
+    out.copy_from_slice(bufs[0]);
+    for b in &bufs[1..] {
+        debug_assert_eq!(b.len(), out.len());
+        for (o, x) in out.iter_mut().zip(*b) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / n as f32;
+    out.iter_mut().for_each(|o| *o *= inv);
+}
+
+/// Faithful ring all-reduce (reduce-scatter + all-gather), averaging.
+/// Mutates every worker's buffer to the mean, exactly as NCCL would.
+/// Used by tests/benches to pin `mean_into` equivalence and to measure
+/// what the real data movement costs on this host.
+pub fn ring_allreduce_mean(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    let chunk = len.div_ceil(n);
+    let bounds = |c: usize| (c * chunk, ((c + 1) * chunk).min(len));
+
+    // reduce-scatter: after n-1 steps worker w owns the full sum of chunk
+    // (w+1) mod n
+    for step in 0..n - 1 {
+        for w in 0..n {
+            // worker w sends chunk (w - step) to worker (w+1)
+            let c = (w + n - step % n) % n;
+            let (lo, hi) = bounds(c);
+            if lo >= hi {
+                continue;
+            }
+            let (src, dst) = (w, (w + 1) % n);
+            // simulate send: dst accumulates src's current chunk value
+            let tmp: Vec<f32> = bufs[src][lo..hi].to_vec();
+            for (i, v) in tmp.into_iter().enumerate() {
+                bufs[dst][lo + i] += v;
+            }
+        }
+    }
+    // at this point worker (c+n-1)%n ... owns reduced chunk c; normalize
+    // and all-gather: n-1 steps of passing owned chunks around
+    for c in 0..n {
+        let owner = (c + n - 1) % n;
+        let (lo, hi) = bounds(c);
+        if lo >= hi {
+            continue;
+        }
+        let inv = 1.0 / n as f32;
+        for i in lo..hi {
+            bufs[owner][i] *= inv;
+        }
+        let owned: Vec<f32> = bufs[owner][lo..hi].to_vec();
+        for w in 0..n {
+            if w != owner {
+                bufs[w][lo..hi].copy_from_slice(&owned);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn ring_equals_naive_mean() {
+        prop::check("ring=naive", 25, |rng| {
+            let n = prop::dim(rng, 2, 6);
+            let len = prop::dim(rng, 1, 97);
+            let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| prop::vecf(rng, len, 1.0)).collect();
+            let views: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            let mut naive = vec![0.0; len];
+            mean_into(&views, &mut naive);
+            ring_allreduce_mean(&mut bufs);
+            for b in &bufs {
+                for (x, y) in b.iter().zip(&naive) {
+                    assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ledger_accounting() {
+        let mut comm = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        let a = vec![1.0f32; 100];
+        let b = vec![3.0f32; 100];
+        let m = comm.allreduce_mean(&[&a, &b, &a, &b]);
+        assert!(m.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        assert_eq!(comm.ledger.floats, 100);
+        assert_eq!(comm.ledger.collectives, 1);
+        assert!(comm.ledger.secs > 0.0);
+
+        comm.charge_allgather(40);
+        assert_eq!(comm.ledger.floats, 140);
+        assert_eq!(comm.ledger.collectives, 2);
+    }
+
+    #[test]
+    fn single_worker_mean_identity() {
+        let mut comm = Comm::new(NetworkModel::new(1, 100.0, 50.0));
+        let a = vec![1.5f32; 8];
+        let m = comm.allreduce_mean(&[&a]);
+        assert_eq!(m, a);
+        assert_eq!(comm.ledger.secs, 0.0); // no wire, no time
+        assert_eq!(comm.ledger.floats, 8); // but payload is still counted
+    }
+}

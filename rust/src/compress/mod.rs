@@ -1,0 +1,148 @@
+//! Gradient compressors (the paper's §2 "lossy gradient compression"
+//! substrate): PowerSGD, TopK, RandomK, QSGD, and the uncompressed
+//! baseline — each implementing one *synchronous distributed round* per
+//! layer, including its error-feedback memory and its collective.
+//!
+//! A compressor sees per-worker raw gradients and produces the aggregated
+//! decompressed mean gradient every worker applies (synchronous SGD keeps
+//! replicas identical, so the trainer owns a single parameter copy —
+//! DESIGN.md §3).  All communication goes through [`Comm`], which charges
+//! the paper-convention floats ledger and the α–β clock.
+
+pub mod powersgd;
+pub mod qsgd;
+pub mod signsgd;
+pub mod randomk;
+pub mod topk;
+
+use crate::collectives::Comm;
+
+/// Compression level for one layer at one step.
+///
+/// `Low`/`High` refer to the *amount of compression* exactly as in the
+/// paper: Accordion returns ℓ_low (low compression, high fidelity, e.g.
+/// PowerSGD rank 4 / TopK 99%) inside critical regimes and ℓ_high
+/// elsewhere.  `Rank`/`Frac` select an explicit setting — the AdaQS
+/// baseline (Fig. 6) and the ablations use these.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Level {
+    Low,
+    High,
+    Rank(usize),
+    Frac(f32),
+}
+
+/// One distributed compression method with its per-(layer, worker) state.
+pub trait DistCompressor: Send {
+    fn name(&self) -> String;
+
+    /// Run one synchronous round for `layer`: compress each worker's
+    /// gradient, aggregate through `comm`, decompress into `out`
+    /// (mean gradient, length = numel).  Must update error-feedback
+    /// state.  `shape` is the parameter's full shape.
+    fn round(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    );
+
+    /// Per-worker payload floats one round sends at `level` (planning /
+    /// assertions; the ledger in `Comm` is authoritative).
+    fn payload_floats(&self, shape: &[usize], level: Level) -> usize;
+
+    /// Reset error-feedback and warm-start state (new run).
+    fn reset(&mut self);
+}
+
+/// The uncompressed baseline: plain all-reduce of the raw gradient.
+pub struct NoCompression;
+
+impl DistCompressor for NoCompression {
+    fn name(&self) -> String {
+        "none".into()
+    }
+
+    fn round(
+        &mut self,
+        _layer: usize,
+        grads: &[&[f32]],
+        _shape: &[usize],
+        _level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        comm.allreduce_mean_into(grads, out);
+    }
+
+    fn payload_floats(&self, shape: &[usize], _level: Level) -> usize {
+        shape.iter().product()
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Matrix view used by every compressor: cols = trailing dim.
+pub(crate) fn matrix_dims(shape: &[usize]) -> Option<(usize, usize)> {
+    if shape.len() < 2 {
+        return None;
+    }
+    let numel: usize = shape.iter().product();
+    let k = *shape.last().unwrap();
+    if k == 0 || numel == 0 {
+        return None;
+    }
+    Some((numel / k, k))
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::cluster::network::NetworkModel;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    pub fn comm(workers: usize) -> Comm {
+        Comm::new(NetworkModel::new(workers, 100.0, 50.0))
+    }
+
+    pub fn worker_grads(rng: &mut Rng, workers: usize, numel: usize) -> Vec<Vec<f32>> {
+        (0..workers).map(|_| prop::vecf(rng, numel, 1.0)).collect()
+    }
+
+    pub fn views(g: &[Vec<f32>]) -> Vec<&[f32]> {
+        g.iter().map(|v| v.as_slice()).collect()
+    }
+
+    pub fn true_mean(g: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = vec![0.0; g[0].len()];
+        crate::collectives::mean_into(&views(g), &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_compression_is_exact_mean() {
+        let mut c = NoCompression;
+        let mut comm = testutil::comm(2);
+        let g = vec![vec![1.0f32, 3.0], vec![3.0f32, 5.0]];
+        let mut out = vec![0.0; 2];
+        c.round(0, &testutil::views(&g), &[2], Level::High, &mut comm, &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+        assert_eq!(comm.ledger.floats, 2);
+    }
+
+    #[test]
+    fn matrix_dims_rules() {
+        assert_eq!(matrix_dims(&[3, 3, 8, 16]), Some((72, 16)));
+        assert_eq!(matrix_dims(&[64]), None);
+        assert_eq!(matrix_dims(&[]), None);
+    }
+}

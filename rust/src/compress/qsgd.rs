@@ -1,0 +1,152 @@
+//! QSGD-style uniform stochastic quantization (Alistarh et al. 2017).
+//!
+//! q(x)_i = ‖x‖₂ · sign(x_i) · ξ_i(s) with ξ stochastic rounding to s
+//! levels; unbiased, so no error feedback.  Payload is counted as the
+//! float-equivalent of `bits` per coordinate plus the norm — the
+//! convention the AdaQS comparison (Fig. 6) needs for its communication
+//! accounting.  `Level::Rank(b)` selects b bits explicitly (AdaQS adapts
+//! bits multiplicatively).
+
+use super::{Comm, DistCompressor, Level};
+use crate::tensor::linalg;
+use crate::util::rng::Rng;
+
+pub struct Qsgd {
+    pub workers: usize,
+    pub bits_at_low: u32,
+    pub bits_at_high: u32,
+    seed: u64,
+    step: u64,
+}
+
+impl Qsgd {
+    pub fn new(workers: usize, bits_at_low: u32, bits_at_high: u32, seed: u64) -> Qsgd {
+        assert!(bits_at_low >= 1 && bits_at_high >= 1);
+        Qsgd { workers, bits_at_low, bits_at_high, seed, step: 0 }
+    }
+
+    fn bits_for(&self, level: Level) -> u32 {
+        match level {
+            Level::Low => self.bits_at_low,
+            Level::High => self.bits_at_high,
+            Level::Rank(b) => (b as u32).max(1),
+            Level::Frac(_) => panic!("qsgd takes bit levels"),
+        }
+    }
+
+    /// Quantize one vector with s = 2^bits - 1 levels.
+    fn quantize(x: &[f32], bits: u32, rng: &mut Rng, out: &mut [f32]) {
+        let norm = linalg::sqnorm(x).sqrt();
+        if norm == 0.0 {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            return;
+        }
+        let s = ((1u64 << bits.min(16)) - 1) as f32;
+        for (o, &v) in out.iter_mut().zip(x) {
+            let level = v.abs() / norm * s;
+            let floor = level.floor();
+            let p = level - floor;
+            let q = if rng.uniform() < p { floor + 1.0 } else { floor };
+            *o = v.signum() * norm * q / s;
+        }
+    }
+}
+
+impl DistCompressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd({}b/{}b)", self.bits_at_low, self.bits_at_high)
+    }
+
+    fn round(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        let numel: usize = shape.iter().product();
+        let bits = self.bits_for(level);
+        self.step += 1;
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let inv = 1.0 / grads.len() as f32;
+        let mut q = vec![0.0f32; numel];
+        for (w, g) in grads.iter().enumerate() {
+            let mut rng = Rng::new(
+                self.seed ^ self.step.wrapping_mul(0xA24BAED4963EE407) ^ ((layer as u64) << 32 | w as u64),
+            );
+            Self::quantize(g, bits, &mut rng, &mut q);
+            linalg::axpy(inv, &q, out);
+        }
+        comm.charge_allgather(self.payload_floats(shape, level));
+    }
+
+    fn payload_floats(&self, shape: &[usize], level: Level) -> usize {
+        let numel: usize = shape.iter().product();
+        let bits = self.bits_for(level) as usize;
+        (numel * bits).div_ceil(32) + 1
+    }
+
+    fn reset(&mut self) {
+        self.step = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+    use crate::util::prop;
+
+    #[test]
+    fn unbiased_in_expectation() {
+        // mean of many quantizations approaches the input
+        let x = vec![0.5f32, -1.0, 0.25, 2.0];
+        let mut acc = vec![0.0f64; 4];
+        let trials = 4000;
+        for t in 0..trials {
+            let mut rng = Rng::new(t);
+            let mut q = vec![0.0f32; 4];
+            Qsgd::quantize(&x, 2, &mut rng, &mut q);
+            for (a, v) in acc.iter_mut().zip(&q) {
+                *a += *v as f64;
+            }
+        }
+        for (a, v) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            assert!((mean - *v as f64).abs() < 0.05, "{mean} vs {v}");
+        }
+    }
+
+    #[test]
+    fn high_bits_is_near_exact() {
+        prop::check("qsgd-16b", 10, |rng| {
+            let numel = 4 + rng.below(30);
+            let g = testutil::worker_grads(rng, 2, numel);
+            let mut qs = Qsgd::new(2, 16, 2, 1);
+            let mut comm = testutil::comm(2);
+            let mut out = vec![0.0; numel];
+            qs.round(0, &testutil::views(&g), &[numel], Level::Low, &mut comm, &mut out);
+            for (o, t) in out.iter().zip(&testutil::true_mean(&g)) {
+                assert!((o - t).abs() < 1e-3 * (1.0 + t.abs()), "{o} vs {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn payload_scales_with_bits() {
+        let qs = Qsgd::new(2, 8, 2, 1);
+        assert_eq!(qs.payload_floats(&[100], Level::Low), 26);
+        assert_eq!(qs.payload_floats(&[100], Level::High), 8);
+        assert!(qs.payload_floats(&[100], Level::Low) > qs.payload_floats(&[100], Level::High));
+    }
+
+    #[test]
+    fn zero_vector_stays_zero() {
+        let mut rng = Rng::new(0);
+        let mut q = vec![1.0f32; 4];
+        Qsgd::quantize(&[0.0; 4], 4, &mut rng, &mut q);
+        assert_eq!(q, vec![0.0; 4]);
+    }
+}

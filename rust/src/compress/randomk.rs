@@ -1,0 +1,155 @@
+//! Random-K sparsification (Wangni et al. 2018 flavour) — ablation
+//! baseline: same wire format as TopK but coordinates are chosen
+//! uniformly at random, *shared across workers* (synchronized seed), so
+//! aggregation is a dense mean over the common support and the payload is
+//! k values + one seed (indices need not travel).  Error feedback keeps
+//! it convergent.  Used by the ablation benches to show that magnitude
+//! selection (TopK) matters and that Accordion is selector-agnostic.
+
+use super::{Comm, DistCompressor, Level};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+pub struct RandomK {
+    pub workers: usize,
+    pub frac_at_low: f32,
+    pub frac_at_high: f32,
+    seed: u64,
+    step: u64,
+    ef: HashMap<usize, Vec<Vec<f32>>>,
+}
+
+impl RandomK {
+    pub fn new(workers: usize, frac_at_low: f32, frac_at_high: f32, seed: u64) -> RandomK {
+        RandomK { workers, frac_at_low, frac_at_high, seed, step: 0, ef: HashMap::new() }
+    }
+
+    fn frac_for(&self, level: Level) -> f32 {
+        match level {
+            Level::Low => self.frac_at_low,
+            Level::High => self.frac_at_high,
+            Level::Frac(f) => f,
+            Level::Rank(_) => panic!("randomk takes fraction levels"),
+        }
+    }
+
+    fn k_for(&self, numel: usize, level: Level) -> usize {
+        ((self.frac_for(level) * numel as f32).ceil() as usize).clamp(1, numel)
+    }
+}
+
+impl DistCompressor for RandomK {
+    fn name(&self) -> String {
+        format!("randomk(k_low={:.0}%, k_high={:.0}%)", self.frac_at_low * 100.0, self.frac_at_high * 100.0)
+    }
+
+    fn round(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        let numel: usize = shape.iter().product();
+        let workers = grads.len();
+        let k = self.k_for(numel, level);
+        self.step += 1;
+
+        // synchronized coordinate choice: partial Fisher-Yates over indices
+        let mut rng = Rng::new(self.seed ^ self.step.wrapping_mul(0x9E3779B97F4A7C15) ^ (layer as u64) << 17);
+        let mut idx: Vec<usize> = (0..numel).collect();
+        for i in 0..k {
+            let j = i + rng.below(numel - i);
+            idx.swap(i, j);
+        }
+
+        let ef = self
+            .ef
+            .entry(layer)
+            .or_insert_with(|| vec![vec![0.0; numel]; workers]);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let inv = 1.0 / workers as f32;
+        for w in 0..workers {
+            let e = &mut ef[w];
+            for (ei, g) in e.iter_mut().zip(grads[w]) {
+                *ei += g;
+            }
+            for &i in &idx[..k] {
+                out[i] += e[i] * inv;
+                e[i] = 0.0;
+            }
+        }
+        // payload: k values (indices derived from shared seed)
+        comm.charge_allreduce(k);
+    }
+
+    fn payload_floats(&self, shape: &[usize], level: Level) -> usize {
+        self.k_for(shape.iter().product(), level)
+    }
+
+    fn reset(&mut self) {
+        self.ef.clear();
+        self.step = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+    use crate::util::prop;
+
+    #[test]
+    fn full_fraction_is_exact_mean() {
+        prop::check("randomk-full", 10, |rng| {
+            let workers = 2 + rng.below(2);
+            let numel = 4 + rng.below(40);
+            let g = testutil::worker_grads(rng, workers, numel);
+            let mut rk = RandomK::new(workers, 1.0, 0.1, 3);
+            let mut comm = testutil::comm(workers);
+            let mut out = vec![0.0; numel];
+            rk.round(0, &testutil::views(&g), &[numel], Level::Low, &mut comm, &mut out);
+            for (o, t) in out.iter().zip(&testutil::true_mean(&g)) {
+                assert!((o - t).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn keeps_exactly_k_coordinates() {
+        let mut rk = RandomK::new(1, 1.0, 0.25, 3);
+        let g = vec![vec![1.0f32; 16]];
+        let mut comm = testutil::comm(1);
+        let mut out = vec![0.0; 16];
+        rk.round(0, &testutil::views(&g), &[16], Level::High, &mut comm, &mut out);
+        assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 4);
+        assert_eq!(comm.ledger.floats, 4);
+    }
+
+    #[test]
+    fn ef_preserves_mass() {
+        // applied + EF == cumulative true mean (single worker)
+        let mut rk = RandomK::new(1, 1.0, 0.25, 3);
+        let mut comm = testutil::comm(1);
+        let mut applied = vec![0.0f32; 16];
+        let mut truth = vec![0.0f32; 16];
+        let mut rng = crate::util::rng::Rng::new(8);
+        for _ in 0..5 {
+            let g = vec![prop::vecf(&mut rng, 16, 1.0)];
+            for (t, x) in truth.iter_mut().zip(&g[0]) {
+                *t += x;
+            }
+            let mut out = vec![0.0; 16];
+            rk.round(0, &testutil::views(&g), &[16], Level::High, &mut comm, &mut out);
+            for (a, o) in applied.iter_mut().zip(&out) {
+                *a += o;
+            }
+        }
+        let ef = &rk.ef.get(&0).unwrap()[0];
+        for i in 0..16 {
+            assert!((applied[i] + ef[i] - truth[i]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! signSGD with majority vote (Bernstein et al. 2018) + error feedback
+//! (EF-signSGD, Karimireddy et al.) — the 1-bit extreme of the
+//! quantization family the paper's related work surveys.  Used by the
+//! ablation benches as the "fixed, maximal compression" reference point:
+//! unlike PowerSGD/TopK it has no level knob, so Accordion cannot help it
+//! — which is exactly the ablation's point.
+//!
+//! Per round: each worker sends sign(grad + ef) scaled by the mean |.|
+//! (payload counted as numel/32 floats + 1); the aggregate is the mean of
+//! the scaled signs; EF keeps the residual.
+
+use super::{Comm, DistCompressor, Level};
+use std::collections::HashMap;
+
+pub struct SignSgd {
+    pub workers: usize,
+    ef: HashMap<usize, Vec<Vec<f32>>>,
+}
+
+impl SignSgd {
+    pub fn new(workers: usize) -> SignSgd {
+        SignSgd { workers, ef: HashMap::new() }
+    }
+}
+
+impl DistCompressor for SignSgd {
+    fn name(&self) -> String {
+        "signsgd(ef)".into()
+    }
+
+    fn round(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        _level: Level, // 1-bit always: no adaptivity knob (see module docs)
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        let numel: usize = shape.iter().product();
+        let workers = grads.len();
+        let ef = self
+            .ef
+            .entry(layer)
+            .or_insert_with(|| vec![vec![0.0; numel]; workers]);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let inv = 1.0 / workers as f32;
+        for w in 0..workers {
+            let a = &mut ef[w];
+            for (e, g) in a.iter_mut().zip(grads[w]) {
+                *e += g;
+            }
+            // scale = mean |a| makes the 1-bit update unbiased in scale
+            let scale = a.iter().map(|v| v.abs()).sum::<f32>() / numel.max(1) as f32;
+            for (i, v) in a.iter_mut().enumerate() {
+                let q = scale * v.signum();
+                out[i] += q * inv;
+                *v -= q;
+            }
+        }
+        comm.charge_allgather(self.payload_floats(shape, Level::High));
+    }
+
+    fn payload_floats(&self, shape: &[usize], _level: Level) -> usize {
+        let numel: usize = shape.iter().product();
+        numel.div_ceil(32) + 1
+    }
+
+    fn reset(&mut self) {
+        self.ef.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+    use crate::util::prop;
+
+    #[test]
+    fn ef_telescopes() {
+        prop::check("signsgd-ef", 8, |rng| {
+            let workers = 2;
+            let numel = 8 + rng.below(24);
+            let mut s = SignSgd::new(workers);
+            let mut comm = testutil::comm(workers);
+            let mut applied = vec![0.0f32; numel];
+            let mut truth = vec![0.0f32; numel];
+            let mut out = vec![0.0f32; numel];
+            for _ in 0..6 {
+                let g = testutil::worker_grads(rng, workers, numel);
+                for (t, x) in truth.iter_mut().zip(&testutil::true_mean(&g)) {
+                    *t += x;
+                }
+                s.round(0, &testutil::views(&g), &[numel], Level::High, &mut comm, &mut out);
+                for (a, o) in applied.iter_mut().zip(&out) {
+                    *a += o;
+                }
+            }
+            let ef = s.ef.get(&0).unwrap();
+            for i in 0..numel {
+                let resid: f32 = ef.iter().map(|e| e[i]).sum::<f32>() / workers as f32;
+                assert!((applied[i] + resid - truth[i]).abs() < 1e-3 * (1.0 + truth[i].abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn payload_is_one_bit_per_coordinate() {
+        let s = SignSgd::new(2);
+        assert_eq!(s.payload_floats(&[64], Level::Low), 3); // 64/32 + 1
+        assert_eq!(s.payload_floats(&[100], Level::High), 5); // ceil(100/32)+1
+    }
+
+    #[test]
+    fn preserves_sign_direction() {
+        let mut s = SignSgd::new(1);
+        let mut comm = testutil::comm(1);
+        let g = vec![vec![3.0f32, -2.0, 0.5, -0.1]];
+        let mut out = vec![0.0; 4];
+        s.round(0, &testutil::views(&g), &[4], Level::High, &mut comm, &mut out);
+        assert!(out[0] > 0.0 && out[1] < 0.0 && out[2] > 0.0 && out[3] < 0.0);
+        // all magnitudes equal (1-bit)
+        assert!((out[0] - out[2]).abs() < 1e-6);
+    }
+}

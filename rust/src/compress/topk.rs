@@ -1,0 +1,226 @@
+//! TopK sparsification (Aji & Heafield 2017) with error feedback — the
+//! paper's second compressor (Tables 3–4, Fig. 11).
+//!
+//! Each worker keeps the k = ⌈frac·numel⌉ largest-|value| entries of
+//! (grad + EF), zeroing the rest into its EF memory.  Workers exchange
+//! (value, index) pairs via all-gather — the paper used NCCL all-gather
+//! for TopK — so the per-worker payload is 2k floats (indices counted as
+//! floats, matching the paper's Data Sent arithmetic).  The aggregated
+//! gradient is the mean of the union of sparse contributions.
+
+use super::{Comm, DistCompressor, Level};
+use std::collections::HashMap;
+
+pub struct TopK {
+    pub workers: usize,
+    /// fraction kept at Level::Low (low compression, e.g. 0.99)
+    pub frac_at_low: f32,
+    /// fraction kept at Level::High (e.g. 0.10)
+    pub frac_at_high: f32,
+    /// per-(layer) per-worker error feedback
+    ef: HashMap<usize, Vec<Vec<f32>>>,
+    mags: Vec<f32>,
+}
+
+impl TopK {
+    pub fn new(workers: usize, frac_at_low: f32, frac_at_high: f32) -> TopK {
+        assert!(frac_at_low > 0.0 && frac_at_low <= 1.0);
+        assert!(frac_at_high > 0.0 && frac_at_high <= 1.0);
+        TopK {
+            workers,
+            frac_at_low,
+            frac_at_high,
+            ef: HashMap::new(),
+            mags: Vec::new(),
+        }
+    }
+
+    fn frac_for(&self, level: Level) -> f32 {
+        match level {
+            Level::Low => self.frac_at_low,
+            Level::High => self.frac_at_high,
+            Level::Frac(f) => f,
+            Level::Rank(_) => panic!("topk takes fraction levels, not ranks"),
+        }
+    }
+
+    pub fn k_for(&self, numel: usize, level: Level) -> usize {
+        ((self.frac_for(level) * numel as f32).ceil() as usize).clamp(1, numel)
+    }
+
+}
+
+/// |value| of the k-th largest magnitude (the keep threshold).
+/// `mags` is caller-provided scratch (no allocation on the hot path).
+fn threshold(mags: &mut Vec<f32>, a: &[f32], k: usize) -> f32 {
+    mags.clear();
+    mags.extend(a.iter().map(|v| v.abs()));
+    let idx = mags.len() - k;
+    let (_, t, _) = mags.select_nth_unstable_by(idx, |x, y| x.partial_cmp(y).unwrap());
+    *t
+}
+
+impl DistCompressor for TopK {
+    fn name(&self) -> String {
+        format!("topk(k_low={:.0}%, k_high={:.0}%)", self.frac_at_low * 100.0, self.frac_at_high * 100.0)
+    }
+
+    fn round(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        let numel: usize = shape.iter().product();
+        let workers = grads.len();
+        assert_eq!(workers, self.workers);
+        let k = self.k_for(numel, level);
+
+        let mut mags = std::mem::take(&mut self.mags);
+        let ef = self
+            .ef
+            .entry(layer)
+            .or_insert_with(|| vec![vec![0.0; numel]; workers]);
+
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let inv = 1.0 / workers as f32;
+        let mut kept_total = 0usize;
+        for w in 0..workers {
+            // a = grad + ef (in place in the EF buffer)
+            let a = &mut ef[w];
+            for (e, g) in a.iter_mut().zip(grads[w]) {
+                *e += g;
+            }
+            let t = threshold(&mut mags, a, k);
+            // keep top-k (ties: keep until k reached, deterministic order)
+            let mut kept = 0usize;
+            for (i, v) in a.iter_mut().enumerate() {
+                // keep while under k; zeros only count when the threshold
+                // itself is zero (degenerate all-zero tail)
+                if kept < k && v.abs() >= t && (*v != 0.0 || t == 0.0) {
+                    out[i] += *v * inv;
+                    *v = 0.0; // removed from EF
+                    kept += 1;
+                }
+            }
+            kept_total += kept;
+        }
+        let _ = kept_total;
+        self.mags = mags;
+        // payload: k (value, index) pairs per worker, all-gathered
+        comm.charge_allgather(2 * k);
+    }
+
+    fn payload_floats(&self, shape: &[usize], level: Level) -> usize {
+        let numel: usize = shape.iter().product();
+        2 * self.k_for(numel, level)
+    }
+
+    fn reset(&mut self) {
+        self.ef.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+    use crate::util::prop;
+
+    fn round(
+        tk: &mut TopK,
+        g: &[Vec<f32>],
+        numel: usize,
+        level: Level,
+        comm: &mut Comm,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0; numel];
+        tk.round(0, &testutil::views(g), &[numel, 1], level, comm, &mut out);
+        out
+    }
+
+    #[test]
+    fn full_fraction_is_exact_mean() {
+        prop::check("topk-full", 15, |rng| {
+            let workers = 2 + rng.below(3);
+            let numel = 4 + rng.below(60);
+            let g = testutil::worker_grads(rng, workers, numel);
+            let mut tk = TopK::new(workers, 1.0, 0.1);
+            let mut comm = testutil::comm(workers);
+            let out = round(&mut tk, &g, numel, Level::Low, &mut comm);
+            let want = testutil::true_mean(&g);
+            for (o, t) in out.iter().zip(&want) {
+                assert!((o - t).abs() < 1e-5, "{o} vs {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn ef_telescopes_to_true_mean() {
+        prop::check("topk-ef-telescope", 10, |rng| {
+            let workers = 2 + rng.below(2);
+            let numel = 16 + rng.below(32);
+            let mut tk = TopK::new(workers, 0.99, 0.25);
+            let mut comm = testutil::comm(workers);
+            let mut applied = vec![0.0f32; numel];
+            let mut true_sum = vec![0.0f32; numel];
+            for _ in 0..4 {
+                let g = testutil::worker_grads(rng, workers, numel);
+                for (a, b) in true_sum.iter_mut().zip(&testutil::true_mean(&g)) {
+                    *a += b;
+                }
+                let out = round(&mut tk, &g, numel, Level::High, &mut comm);
+                for (a, b) in applied.iter_mut().zip(&out) {
+                    *a += b;
+                }
+            }
+            let ef = tk.ef.get(&0).unwrap();
+            for i in 0..numel {
+                let resid: f32 = ef.iter().map(|e| e[i]).sum::<f32>() / workers as f32;
+                let lhs = applied[i] + resid;
+                assert!(
+                    (lhs - true_sum[i]).abs() < 1e-4 * (1.0 + true_sum[i].abs()),
+                    "telescope broke at {i}: {lhs} vs {}",
+                    true_sum[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let g = vec![vec![0.1f32, -5.0, 3.0, 0.01, -0.5, 2.0, -1.0, 0.3]];
+        let mut tk = TopK::new(1, 0.99, 0.375); // k = ceil(0.375*8) = 3
+        let mut comm = testutil::comm(1);
+        let out = round(&mut tk, &g, 8, Level::High, &mut comm);
+        let nz: Vec<usize> = out
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(nz, vec![1, 2, 5]);
+        // EF holds the rest
+        let ef = &tk.ef.get(&0).unwrap()[0];
+        assert_eq!(ef[1], 0.0);
+        assert!((ef[0] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn payload_and_ledger_agree() {
+        let workers = 4;
+        let numel = 100;
+        let mut rng = crate::util::rng::Rng::new(2);
+        let g = testutil::worker_grads(&mut rng, workers, numel);
+        let mut tk = TopK::new(workers, 0.99, 0.10);
+        let mut comm = testutil::comm(workers);
+        let _ = round(&mut tk, &g, numel, Level::High, &mut comm);
+        assert_eq!(comm.ledger.floats, 2 * 10);
+        assert_eq!(tk.payload_floats(&[100], Level::High), 20);
+        assert_eq!(tk.payload_floats(&[100], Level::Low), 2 * 99);
+        assert_eq!(tk.payload_floats(&[100], Level::Frac(0.5)), 100);
+    }
+}

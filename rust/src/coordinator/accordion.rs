@@ -1,0 +1,230 @@
+//! Accordion — Algorithm 1 of the paper, verbatim:
+//!
+//! ```text
+//! if (‖Δ_prev‖ − ‖Δ_curr‖)/‖Δ_prev‖ ≥ η  or  γ_next < γ_curr:
+//!     return ℓ_low      # critical regime: low compression
+//! else:
+//!     return ℓ_high
+//! ```
+//!
+//! * per-layer granularity for gradient compression (PowerSGD/TopK treat
+//!   each layer independently — so does Accordion);
+//! * whole-model granularity for batch-size mode;
+//! * detection every `interval` epochs (paper: 10 of 300; scaled default
+//!   2 of 30), comparing the current window's accumulated-gradient norm
+//!   against the previous window's;
+//! * the first window is critical (nothing to compare yet — and the paper
+//!   shows the early phase *is* critical), and every LR decay re-declares
+//!   a critical regime;
+//! * batch-size mode only ever *increases* the batch (paper App. A
+//!   stability rule) and scales the LR linearly on switch (Goyal et al.),
+//!   which the trainer applies via `Decision::batch_mult`.
+
+use super::{Controller, Decision, EpochObs};
+use crate::compress::Level;
+
+pub struct Accordion {
+    pub eta: f32,
+    pub interval: usize,
+    n_layers: usize,
+    /// batch-size mode: multiplier to use outside critical regimes
+    batch_mult_high: usize,
+    /// monotonic batch rule (paper App. A)
+    batch_floor: usize,
+
+    levels: Vec<Level>,
+    batch_mult: usize,
+    /// per-layer ‖Δ‖ captured at the last detection point
+    prev_norms: Vec<Option<f32>>,
+    prev_model_norm: Option<f32>,
+    /// trace of decisions for Figs. 18-20
+    pub decision_log: Vec<(usize, Vec<Level>)>,
+}
+
+impl Accordion {
+    /// Gradient-compression mode (levels toggle per layer).
+    pub fn new(n_layers: usize, eta: f32, interval: usize) -> Accordion {
+        Accordion {
+            eta,
+            interval: interval.max(1),
+            n_layers,
+            batch_mult_high: 1,
+            batch_floor: 1,
+            levels: vec![Level::Low; n_layers],
+            batch_mult: 1,
+            prev_norms: vec![None; n_layers],
+            prev_model_norm: None,
+            decision_log: Vec::new(),
+        }
+    }
+
+    /// Batch-size mode: critical ⇒ B_low (mult 1), else B_low·mult_high.
+    pub fn batch_mode(n_layers: usize, eta: f32, interval: usize, mult_high: usize) -> Accordion {
+        let mut a = Accordion::new(n_layers, eta, interval);
+        a.batch_mult_high = mult_high.max(1);
+        a
+    }
+
+    fn is_batch_mode(&self) -> bool {
+        self.batch_mult_high > 1
+    }
+
+    /// The Algorithm-1 test for one (prev, curr) norm pair.
+    fn critical(&self, prev: Option<f32>, curr: f32, lr_decays: bool) -> bool {
+        if lr_decays {
+            return true;
+        }
+        match prev {
+            None => true, // first window: nothing to compare, early phase is critical
+            Some(p) if p <= 0.0 => true,
+            Some(p) => ((p - curr).abs() / p) >= self.eta,
+        }
+    }
+}
+
+impl Controller for Accordion {
+    fn name(&self) -> String {
+        if self.is_batch_mode() {
+            format!("accordion-batch(eta={}, w={}, mult={})", self.eta, self.interval, self.batch_mult_high)
+        } else {
+            format!("accordion(eta={}, w={})", self.eta, self.interval)
+        }
+    }
+
+    fn begin_epoch(&mut self, _epoch: usize, lr_curr: f32, lr_next: f32) -> Decision {
+        // LR decay between this epoch and the next re-declares a critical
+        // regime immediately (paper §4.2); the norm comparison at the next
+        // detection point then decides when it ends.
+        if lr_next < lr_curr {
+            self.levels.iter_mut().for_each(|l| *l = Level::Low);
+            // norm baseline resets: the post-decay regime is compared
+            // against post-decay windows only
+            self.prev_norms.iter_mut().for_each(|p| *p = None);
+            self.prev_model_norm = None;
+        }
+        let batch_mult = if self.is_batch_mode() {
+            // critical ⇒ small batch, else large; monotone non-decreasing
+            let want = if self.levels.iter().any(|l| *l == Level::Low) { 1 } else { self.batch_mult_high };
+            self.batch_floor = self.batch_floor.max(want);
+            self.batch_floor
+        } else {
+            1
+        };
+        self.batch_mult = batch_mult;
+        Decision { levels: self.levels.clone(), batch_mult }
+    }
+
+    fn observe(&mut self, obs: &EpochObs) {
+        // detection runs every `interval` epochs, on the window boundary
+        if (obs.epoch + 1) % self.interval != 0 {
+            return;
+        }
+        let lr_decays = obs.lr_next < obs.lr_curr;
+        if self.is_batch_mode() {
+            let curr = obs.model_sqnorm.sqrt();
+            let crit = self.critical(self.prev_model_norm, curr, lr_decays);
+            let level = if crit { Level::Low } else { Level::High };
+            self.levels.iter_mut().for_each(|l| *l = level);
+            self.prev_model_norm = Some(curr);
+        } else {
+            for l in 0..self.n_layers {
+                let curr = obs.layer_sqnorms[l].sqrt();
+                let crit = self.critical(self.prev_norms[l], curr, lr_decays);
+                self.levels[l] = if crit { Level::Low } else { Level::High };
+                self.prev_norms[l] = Some(curr);
+            }
+        }
+        self.decision_log.push((obs.epoch, self.levels.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(epoch: usize, norms: Vec<f32>, lr: f32, lr_next: f32) -> EpochObs {
+        let sq: Vec<f32> = norms.iter().map(|n| n * n).collect();
+        let model: f32 = sq.iter().sum();
+        EpochObs {
+            epoch,
+            layer_sqnorms: sq,
+            layer_abs_means: vec![0.0; norms.len()],
+            layer_stds: vec![1.0; norms.len()],
+            model_sqnorm: model,
+            lr_curr: lr,
+            lr_next,
+        }
+    }
+
+    #[test]
+    fn first_window_is_critical() {
+        let mut a = Accordion::new(2, 0.5, 1);
+        let d = a.begin_epoch(0, 0.4, 0.4);
+        assert_eq!(d.levels, vec![Level::Low; 2]);
+    }
+
+    #[test]
+    fn rapid_norm_decay_keeps_low_then_stable_switches_high() {
+        let mut a = Accordion::new(1, 0.5, 1);
+        a.begin_epoch(0, 0.4, 0.4);
+        a.observe(&obs(0, vec![10.0], 0.4, 0.4)); // prev=None -> critical
+        assert_eq!(a.begin_epoch(1, 0.4, 0.4).levels[0], Level::Low);
+        a.observe(&obs(1, vec![4.0], 0.4, 0.4)); // drop 60% >= eta -> critical
+        assert_eq!(a.begin_epoch(2, 0.4, 0.4).levels[0], Level::Low);
+        a.observe(&obs(2, vec![3.5], 0.4, 0.4)); // drop 12.5% < eta -> stable
+        assert_eq!(a.begin_epoch(3, 0.4, 0.4).levels[0], Level::High);
+    }
+
+    #[test]
+    fn lr_decay_redeclares_critical() {
+        let mut a = Accordion::new(1, 0.5, 1);
+        a.begin_epoch(0, 0.4, 0.4);
+        a.observe(&obs(0, vec![10.0], 0.4, 0.4));
+        a.observe(&obs(1, vec![9.9], 0.4, 0.4)); // stable -> High
+        assert_eq!(a.begin_epoch(2, 0.4, 0.4).levels[0], Level::High);
+        // decay happens between epoch 2 and 3
+        let d = a.begin_epoch(3, 0.4, 0.04);
+        assert_eq!(d.levels[0], Level::Low);
+    }
+
+    #[test]
+    fn algorithm1_lr_branch_in_observe() {
+        // γ_next < γ_curr at a detection point forces Low even if norms
+        // are flat
+        let mut a = Accordion::new(1, 0.5, 1);
+        a.observe(&obs(0, vec![5.0], 0.4, 0.4));
+        a.observe(&obs(1, vec![5.0], 0.4, 0.04));
+        assert_eq!(a.begin_epoch(2, 0.04, 0.04).levels[0], Level::Low);
+    }
+
+    #[test]
+    fn per_layer_independence() {
+        let mut a = Accordion::new(2, 0.5, 1);
+        a.observe(&obs(0, vec![10.0, 10.0], 0.4, 0.4));
+        a.observe(&obs(1, vec![2.0, 9.9], 0.4, 0.4));
+        let d = a.begin_epoch(2, 0.4, 0.4);
+        assert_eq!(d.levels[0], Level::Low); // still decaying fast
+        assert_eq!(d.levels[1], Level::High); // stabilized
+    }
+
+    #[test]
+    fn batch_mode_is_monotone_increasing() {
+        let mut a = Accordion::batch_mode(1, 0.5, 1, 8);
+        assert_eq!(a.begin_epoch(0, 0.4, 0.4).batch_mult, 1); // critical start
+        a.observe(&obs(0, vec![10.0], 0.4, 0.4));
+        a.observe(&obs(1, vec![9.9], 0.4, 0.4)); // stable -> large batch
+        assert_eq!(a.begin_epoch(2, 0.4, 0.4).batch_mult, 8);
+        // later critical regime cannot shrink the batch (App. A rule)
+        a.observe(&obs(2, vec![1.0], 0.4, 0.4));
+        assert_eq!(a.begin_epoch(3, 0.4, 0.4).batch_mult, 8);
+    }
+
+    #[test]
+    fn detection_interval_gates_decisions() {
+        let mut a = Accordion::new(1, 0.5, 2);
+        a.observe(&obs(0, vec![10.0], 0.4, 0.4)); // not a boundary (interval 2)
+        assert!(a.decision_log.is_empty());
+        a.observe(&obs(1, vec![10.0], 0.4, 0.4)); // boundary
+        assert_eq!(a.decision_log.len(), 1);
+    }
+}

@@ -1,0 +1,116 @@
+//! AdaQS baseline (Guo et al., ICASSP 2020) as the paper uses it in
+//! Fig. 6: an adaptive scheme driven by the gradient's
+//! mean-to-standard-deviation ratio (MSDR).  When a layer's MSDR drops by
+//! more than `drop` relative to the last reference, the scheme halves the
+//! compression ratio — for PowerSGD that doubles the rank (capped at
+//! `rank_max`); it never increases compression again.
+//!
+//! The paper's observation (reproduced by `exp/fig6`): AdaQS starts at
+//! high compression precisely in the early critical regime, so it loses
+//! accuracy versus ℓ_low, and its monotone rank growth makes it
+//! communicate *more* than Accordion late in training.
+
+use super::{Controller, Decision, EpochObs};
+use crate::compress::Level;
+
+pub struct AdaQs {
+    pub n_layers: usize,
+    pub rank_start: usize,
+    pub rank_max: usize,
+    /// relative MSDR drop that triggers a rank doubling
+    pub drop: f32,
+    pub interval: usize,
+    ranks: Vec<usize>,
+    ref_msdr: Vec<Option<f32>>,
+}
+
+impl AdaQs {
+    pub fn new(n_layers: usize, rank_start: usize, rank_max: usize, drop: f32, interval: usize) -> AdaQs {
+        AdaQs {
+            n_layers,
+            rank_start,
+            rank_max,
+            drop,
+            interval: interval.max(1),
+            ranks: vec![rank_start; n_layers],
+            ref_msdr: vec![None; n_layers],
+        }
+    }
+}
+
+impl Controller for AdaQs {
+    fn name(&self) -> String {
+        format!("adaqs(r{}→r{}, drop={})", self.rank_start, self.rank_max, self.drop)
+    }
+
+    fn begin_epoch(&mut self, _epoch: usize, _lr_curr: f32, _lr_next: f32) -> Decision {
+        Decision {
+            levels: self.ranks.iter().map(|&r| Level::Rank(r)).collect(),
+            batch_mult: 1,
+        }
+    }
+
+    fn observe(&mut self, obs: &EpochObs) {
+        if (obs.epoch + 1) % self.interval != 0 {
+            return;
+        }
+        for l in 0..self.n_layers {
+            let std = obs.layer_stds[l];
+            if std <= 0.0 {
+                continue;
+            }
+            let msdr = obs.layer_abs_means[l] / std;
+            match self.ref_msdr[l] {
+                None => self.ref_msdr[l] = Some(msdr),
+                Some(r0) if r0 > 0.0 && (r0 - msdr) / r0 >= self.drop => {
+                    // MSDR dropped: halve the compression (double the rank)
+                    self.ranks[l] = (self.ranks[l] * 2).min(self.rank_max);
+                    self.ref_msdr[l] = Some(msdr);
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(epoch: usize, abs_mean: f32, std: f32) -> EpochObs {
+        EpochObs {
+            epoch,
+            layer_sqnorms: vec![1.0],
+            layer_abs_means: vec![abs_mean],
+            layer_stds: vec![std],
+            model_sqnorm: 1.0,
+            lr_curr: 0.1,
+            lr_next: 0.1,
+        }
+    }
+
+    #[test]
+    fn starts_at_high_compression() {
+        let mut a = AdaQs::new(1, 1, 4, 0.3, 1);
+        assert_eq!(a.begin_epoch(0, 0.1, 0.1).levels[0], Level::Rank(1));
+    }
+
+    #[test]
+    fn msdr_drop_doubles_rank_until_cap() {
+        let mut a = AdaQs::new(1, 1, 4, 0.3, 1);
+        a.observe(&obs(0, 1.0, 1.0)); // reference msdr = 1.0
+        a.observe(&obs(1, 0.5, 1.0)); // 50% drop -> rank 2
+        assert_eq!(a.begin_epoch(2, 0.1, 0.1).levels[0], Level::Rank(2));
+        a.observe(&obs(2, 0.2, 1.0)); // drops again -> rank 4
+        a.observe(&obs(3, 0.05, 1.0)); // capped
+        assert_eq!(a.begin_epoch(4, 0.1, 0.1).levels[0], Level::Rank(4));
+    }
+
+    #[test]
+    fn stable_msdr_keeps_rank() {
+        let mut a = AdaQs::new(1, 1, 4, 0.3, 1);
+        a.observe(&obs(0, 1.0, 1.0));
+        a.observe(&obs(1, 0.9, 1.0)); // only 10% drop
+        assert_eq!(a.begin_epoch(2, 0.1, 0.1).levels[0], Level::Rank(1));
+    }
+}

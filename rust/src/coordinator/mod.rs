@@ -1,0 +1,98 @@
+//! Communication-schedule controllers: Accordion (the paper's Alg. 1)
+//! and everything it is compared against — static levels, the manual
+//! critical-regime schedules of Figs. 1–2, AdaQS (Guo et al., Fig. 6),
+//! and the Smith-et-al batch-size schedule (Fig. 7).
+//!
+//! Protocol with the trainer: before each epoch `begin_epoch` returns the
+//! per-layer [`Level`]s and the global batch multiplier for that epoch;
+//! after the epoch `observe` delivers the detector inputs (per-layer
+//! accumulated-gradient statistics and the LR pair).  All controllers are
+//! *centralized* — in the paper one node decides and broadcasts; here the
+//! decision object is that broadcast.
+
+pub mod accordion;
+pub mod adaqs;
+pub mod schedule;
+pub mod smith;
+
+use crate::compress::Level;
+
+/// What the controller broadcasts for one epoch.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// per-layer compression level (indexed like the model's param list;
+    /// entries for 1-d layers are ignored by the trainer)
+    pub levels: Vec<Level>,
+    /// global batch multiplier (1 = B_low; >1 simulated via gradient
+    /// accumulation exactly as the paper's App. A does)
+    pub batch_mult: usize,
+}
+
+impl Decision {
+    pub fn uniform(n_layers: usize, level: Level) -> Decision {
+        Decision { levels: vec![level; n_layers], batch_mult: 1 }
+    }
+}
+
+/// End-of-epoch detector inputs.
+#[derive(Clone, Debug)]
+pub struct EpochObs {
+    pub epoch: usize,
+    /// ‖Δ_l‖² of each layer's gradient accumulated over the epoch
+    pub layer_sqnorms: Vec<f32>,
+    /// mean(|Δ_l,i|) per layer (AdaQS's MSDR numerator)
+    pub layer_abs_means: Vec<f32>,
+    /// std(Δ_l,i) per layer (AdaQS's MSDR denominator)
+    pub layer_stds: Vec<f32>,
+    /// ‖Δ‖² of the whole model (batch-size mode granularity)
+    pub model_sqnorm: f32,
+    pub lr_curr: f32,
+    pub lr_next: f32,
+}
+
+pub trait Controller: Send {
+    fn name(&self) -> String;
+    fn begin_epoch(&mut self, epoch: usize, lr_curr: f32, lr_next: f32) -> Decision;
+    fn observe(&mut self, obs: &EpochObs);
+}
+
+/// Fixed level everywhere — the paper's static baselines.
+pub struct StaticLevel {
+    pub n_layers: usize,
+    pub level: Level,
+    pub batch_mult: usize,
+}
+
+impl StaticLevel {
+    pub fn new(n_layers: usize, level: Level) -> StaticLevel {
+        StaticLevel { n_layers, level, batch_mult: 1 }
+    }
+    pub fn with_batch(n_layers: usize, batch_mult: usize) -> StaticLevel {
+        StaticLevel { n_layers, level: Level::High, batch_mult }
+    }
+}
+
+impl Controller for StaticLevel {
+    fn name(&self) -> String {
+        format!("static({:?}, b{})", self.level, self.batch_mult)
+    }
+    fn begin_epoch(&mut self, _epoch: usize, _lr_curr: f32, _lr_next: f32) -> Decision {
+        Decision { levels: vec![self.level; self.n_layers], batch_mult: self.batch_mult }
+    }
+    fn observe(&mut self, _obs: &EpochObs) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_controller_is_constant() {
+        let mut c = StaticLevel::new(3, Level::High);
+        let d0 = c.begin_epoch(0, 0.1, 0.1);
+        let d9 = c.begin_epoch(9, 0.01, 0.01);
+        assert_eq!(d0.levels, vec![Level::High; 3]);
+        assert_eq!(d9.levels, d0.levels);
+        assert_eq!(d0.batch_mult, 1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Manual epoch-range schedules — the hand-built patterns of Figs. 1–2:
+//! "ℓ_low for the first E₁ epochs and for E₂ epochs after each LR decay,
+//! ℓ_high elsewhere" and its adversarial mirror ("ℓ_high in the critical
+//! regimes, uncompressed elsewhere", which Fig. 2b shows cannot recover).
+
+use super::{Controller, Decision, EpochObs};
+use crate::compress::Level;
+
+/// A rule: epochs in [start, end) use `level`.
+#[derive(Clone, Debug)]
+pub struct Rule {
+    pub start: usize,
+    pub end: usize,
+    pub level: Level,
+}
+
+pub struct ManualSchedule {
+    pub n_layers: usize,
+    pub rules: Vec<Rule>,
+    pub default: Level,
+    pub label: String,
+}
+
+impl ManualSchedule {
+    pub fn new(n_layers: usize, rules: Vec<Rule>, default: Level, label: &str) -> ManualSchedule {
+        ManualSchedule { n_layers, rules, default, label: label.to_string() }
+    }
+
+    /// The Fig. 2 "oracle" schedule: `level_in` during [0, head) and for
+    /// `tail` epochs from each decay epoch; `level_out` elsewhere.
+    pub fn critical_regions(
+        n_layers: usize,
+        head: usize,
+        decay_epochs: &[usize],
+        tail: usize,
+        level_in: Level,
+        level_out: Level,
+        label: &str,
+    ) -> ManualSchedule {
+        let mut rules = vec![Rule { start: 0, end: head, level: level_in }];
+        for &d in decay_epochs {
+            rules.push(Rule { start: d, end: d + tail, level: level_in });
+        }
+        ManualSchedule::new(n_layers, rules, level_out, label)
+    }
+
+    pub fn level_at(&self, epoch: usize) -> Level {
+        for r in &self.rules {
+            if epoch >= r.start && epoch < r.end {
+                return r.level;
+            }
+        }
+        self.default
+    }
+}
+
+impl Controller for ManualSchedule {
+    fn name(&self) -> String {
+        format!("manual({})", self.label)
+    }
+    fn begin_epoch(&mut self, epoch: usize, _lr_curr: f32, _lr_next: f32) -> Decision {
+        Decision::uniform(self.n_layers, self.level_at(epoch))
+    }
+    fn observe(&mut self, _obs: &EpochObs) {}
+}
+
+/// Manual batch-size schedule (Fig. 4b): small batch inside the given
+/// epoch ranges, `mult`x batch outside.
+pub struct ManualBatch {
+    pub n_layers: usize,
+    pub small: Vec<(usize, usize)>,
+    pub mult: usize,
+}
+
+impl Controller for ManualBatch {
+    fn name(&self) -> String {
+        format!("manual-batch(x{} outside {:?})", self.mult, self.small)
+    }
+    fn begin_epoch(&mut self, epoch: usize, _lr_curr: f32, _lr_next: f32) -> Decision {
+        let in_small = self.small.iter().any(|&(s, e)| epoch >= s && epoch < e);
+        Decision {
+            levels: vec![Level::Low; self.n_layers],
+            batch_mult: if in_small { 1 } else { self.mult },
+        }
+    }
+    fn observe(&mut self, _obs: &EpochObs) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_batch_ranges() {
+        let mut m = ManualBatch { n_layers: 1, small: vec![(0, 3), (10, 12)], mult: 8 };
+        assert_eq!(m.begin_epoch(1, 0.1, 0.1).batch_mult, 1);
+        assert_eq!(m.begin_epoch(5, 0.1, 0.1).batch_mult, 8);
+        assert_eq!(m.begin_epoch(11, 0.1, 0.1).batch_mult, 1);
+    }
+
+    #[test]
+    fn critical_regions_pattern() {
+        let s = ManualSchedule::critical_regions(
+            1, 5, &[15], 3, Level::Low, Level::High, "fig2",
+        );
+        assert_eq!(s.level_at(0), Level::Low);
+        assert_eq!(s.level_at(4), Level::Low);
+        assert_eq!(s.level_at(5), Level::High);
+        assert_eq!(s.level_at(14), Level::High);
+        assert_eq!(s.level_at(15), Level::Low);
+        assert_eq!(s.level_at(17), Level::Low);
+        assert_eq!(s.level_at(18), Level::High);
+    }
+
+    #[test]
+    fn adversarial_mirror() {
+        // high compression inside critical windows, uncompressed outside
+        let s = ManualSchedule::critical_regions(
+            2, 5, &[15], 3, Level::High, Level::Frac(1.0), "fig2-adversarial",
+        );
+        assert_eq!(s.level_at(2), Level::High);
+        assert_eq!(s.level_at(10), Level::Frac(1.0));
+    }
+}

@@ -1,0 +1,67 @@
+//! Smith et al. (2017) "Don't decay the learning rate, increase the batch
+//! size" — the batch-size baseline of Fig. 7, in its *Increased Initial
+//! Learning Rate* setting (the one the paper compares against).
+//!
+//! At every would-be LR-decay milestone the batch size is multiplied by
+//! the decay denominator instead of decaying the LR.  The experiment
+//! config that pairs with this controller must keep the LR flat
+//! (`decay_epochs = []`); milestones live here.
+
+use super::{Controller, Decision, EpochObs};
+use crate::compress::Level;
+
+pub struct SmithSchedule {
+    pub n_layers: usize,
+    pub milestones: Vec<usize>,
+    /// batch multiplier applied at each milestone (paper decays LR /10 ⇒
+    /// batch x10; scaled runs use the config's factor)
+    pub factor: usize,
+    /// hard cap so the global batch never exceeds the dataset shard
+    pub cap: usize,
+}
+
+impl SmithSchedule {
+    pub fn new(n_layers: usize, milestones: Vec<usize>, factor: usize, cap: usize) -> SmithSchedule {
+        SmithSchedule { n_layers, milestones, factor: factor.max(1), cap: cap.max(1) }
+    }
+
+    fn mult_at(&self, epoch: usize) -> usize {
+        let passed = self.milestones.iter().filter(|&&m| epoch >= m).count();
+        self.factor
+            .saturating_pow(passed as u32)
+            .min(self.cap)
+            .max(1)
+    }
+}
+
+impl Controller for SmithSchedule {
+    fn name(&self) -> String {
+        format!("smith(x{} at {:?})", self.factor, self.milestones)
+    }
+    fn begin_epoch(&mut self, epoch: usize, _lr_curr: f32, _lr_next: f32) -> Decision {
+        Decision {
+            levels: vec![Level::Low; self.n_layers],
+            batch_mult: self.mult_at(epoch),
+        }
+    }
+    fn observe(&mut self, _obs: &EpochObs) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_grows_at_milestones() {
+        let mut s = SmithSchedule::new(1, vec![10, 20], 5, 100);
+        assert_eq!(s.begin_epoch(0, 0.4, 0.4).batch_mult, 1);
+        assert_eq!(s.begin_epoch(10, 0.4, 0.4).batch_mult, 5);
+        assert_eq!(s.begin_epoch(25, 0.4, 0.4).batch_mult, 25);
+    }
+
+    #[test]
+    fn cap_is_respected() {
+        let mut s = SmithSchedule::new(1, vec![1, 2, 3], 10, 64);
+        assert_eq!(s.begin_epoch(5, 0.4, 0.4).batch_mult, 64);
+    }
+}

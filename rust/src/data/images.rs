@@ -1,0 +1,127 @@
+//! Gaussian-mixture image generator — the CIFAR-10/100 stand-in.
+//!
+//! Each class c gets a smooth random mean pattern mu_c (low-frequency:
+//! random anchors bilinearly spread across the image would be overkill —
+//! we smooth white noise with a cheap 2-pass box filter over the spatial
+//! dims).  Samples are `sep * mu_c + noise * N(0, I)`, channel-normalized
+//! like the paper's preprocessing.  `sep`/`noise` tune task difficulty so
+//! the scaled-down models separate compression levels the way the paper's
+//! full-size runs do (DESIGN.md §2).
+
+use crate::util::rng::Rng;
+
+pub struct GaussianMixtureImages {
+    pub classes: usize,
+    pub dim: usize,
+    sep: f32,
+    noise: f32,
+    means: Vec<f32>, // classes x dim
+    seed: u64,
+}
+
+impl GaussianMixtureImages {
+    pub fn new(classes: usize, dim: usize, sep: f32, noise: f32, seed: u64) -> Self {
+        let mut means = Vec::with_capacity(classes * dim);
+        let root = Rng::new(seed);
+        for c in 0..classes {
+            let mut rng = root.fork(1000 + c as u64);
+            let mut m = rng.normals(dim);
+            smooth_inplace(&mut m);
+            // normalize mean energy so every class is equally separable
+            let norm = (m.iter().map(|x| x * x).sum::<f32>() / dim as f32).sqrt();
+            if norm > 0.0 {
+                m.iter_mut().for_each(|x| *x /= norm);
+            }
+            means.extend_from_slice(&m);
+        }
+        GaussianMixtureImages { classes, dim, sep, noise, means, seed }
+    }
+
+    /// Sample `n` labeled examples (balanced round-robin labels, shuffled).
+    pub fn sample(&self, n: usize, stream: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(self.seed ^ (stream.wrapping_mul(0xD1B54A32D192ED03)));
+        let mut labels: Vec<i32> = (0..n).map(|i| (i % self.classes) as i32).collect();
+        rng.shuffle(&mut labels);
+        let mut x = Vec::with_capacity(n * self.dim);
+        for &c in &labels {
+            let mu = &self.means[c as usize * self.dim..(c as usize + 1) * self.dim];
+            for d in 0..self.dim {
+                x.push(self.sep * mu[d] + self.noise * rng.normal());
+            }
+        }
+        (x, labels)
+    }
+}
+
+/// Cheap 1-d box smoothing (3 taps, 2 passes) to give means spatial
+/// structure; operating on the flattened buffer is fine for our purposes —
+/// adjacent pixels in a row are adjacent in memory.
+fn smooth_inplace(m: &mut [f32]) {
+    for _ in 0..2 {
+        let prev = m.to_vec();
+        for i in 0..m.len() {
+            let a = prev[i.saturating_sub(1)];
+            let b = prev[i];
+            let c = prev[(i + 1).min(m.len() - 1)];
+            m[i] = (a + b + c) / 3.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_labels() {
+        let g = GaussianMixtureImages::new(10, 48, 1.0, 1.0, 1);
+        let (_, y) = g.sample(100, 1);
+        for c in 0..10 {
+            assert_eq!(y.iter().filter(|&&v| v == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn class_means_are_separated() {
+        let g = GaussianMixtureImages::new(4, 768, 1.0, 0.0, 2);
+        let (x, y) = g.sample(8, 1);
+        // with zero noise, samples of the same class are identical and
+        // differ across classes
+        let ex = |i: usize| &x[i * 768..(i + 1) * 768];
+        for i in 0..8 {
+            for j in 0..8 {
+                if y[i] == y[j] {
+                    assert_eq!(ex(i), ex(j));
+                }
+            }
+        }
+        let (i, j) = (0, (1..8).find(|&j| y[j] != y[0]).unwrap());
+        assert_ne!(ex(i), ex(j));
+    }
+
+    #[test]
+    fn nearest_mean_classifier_beats_chance() {
+        let g = GaussianMixtureImages::new(10, 192, 1.0, 1.0, 3);
+        let (x, y) = g.sample(200, 5);
+        let mut correct = 0;
+        for i in 0..200 {
+            let ex = &x[i * 192..(i + 1) * 192];
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..10 {
+                let mu = &g.means[c * 192..(c + 1) * 192];
+                let d: f32 = ex
+                    .iter()
+                    .zip(mu)
+                    .map(|(a, b)| (a - g.sep * b) * (a - g.sep * b))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 as i32 == y[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 100, "nearest-mean acc only {correct}/200");
+    }
+}

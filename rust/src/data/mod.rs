@@ -1,0 +1,192 @@
+//! Synthetic dataset substrates (DESIGN.md §2).
+//!
+//! The paper trains on CIFAR-10/100 and WikiText-2; neither is available
+//! offline, so we generate seeded stand-ins that exercise identical code
+//! paths: `GaussianMixtureImages` for the CIFAR tables and `MarkovText`
+//! for the LSTM/transformer LM runs.  Generation is deterministic in the
+//! seed, so every schedule in a comparison trains on *identical* batches.
+
+pub mod images;
+pub mod text;
+
+use crate::util::rng::Rng;
+
+/// One classification / LM batch in the AOT calling convention:
+/// `x` is f32 (images, flattened NHWC) or i32 (tokens), `y` is i32.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub xf: Vec<f32>,
+    pub xi: Vec<i32>,
+    pub y: Vec<i32>,
+}
+
+/// A materialized dataset: `dim` values per example (f32) or `seq` tokens
+/// per example (i32 + next-token targets).
+pub struct Dataset {
+    pub name: String,
+    pub train_n: usize,
+    pub test_n: usize,
+    kind: Kind,
+}
+
+enum Kind {
+    Images { x: Vec<f32>, y: Vec<i32>, tx: Vec<f32>, ty: Vec<i32>, dim: usize },
+    Text { tokens: Vec<i32>, test_tokens: Vec<i32>, seq: usize },
+}
+
+impl Dataset {
+    pub fn images(
+        name: &str,
+        classes: usize,
+        dim: usize,
+        train_n: usize,
+        test_n: usize,
+        sep: f32,
+        noise: f32,
+        seed: u64,
+    ) -> Dataset {
+        let gen = images::GaussianMixtureImages::new(classes, dim, sep, noise, seed);
+        let (x, y) = gen.sample(train_n, 1);
+        let (tx, ty) = gen.sample(test_n, 2);
+        Dataset {
+            name: name.to_string(),
+            train_n,
+            test_n,
+            kind: Kind::Images { x, y, tx, ty, dim },
+        }
+    }
+
+    pub fn text(name: &str, vocab: usize, train_tokens: usize, test_tokens: usize, seq: usize, seed: u64) -> Dataset {
+        let gen = text::MarkovText::new(vocab, seed);
+        let tokens = gen.generate(train_tokens, 1);
+        let test = gen.generate(test_tokens, 2);
+        // examples = non-overlapping seq-length windows
+        let train_n = train_tokens / (seq + 1);
+        let test_n = test_tokens / (seq + 1);
+        Dataset {
+            name: name.to_string(),
+            train_n,
+            test_n,
+            kind: Kind::Text { tokens, test_tokens: test, seq },
+        }
+    }
+
+    pub fn is_text(&self) -> bool {
+        matches!(self.kind, Kind::Text { .. })
+    }
+
+    /// Gather a train batch for the given example indices.
+    pub fn train_batch(&self, idx: &[usize]) -> Batch {
+        self.gather(idx, false)
+    }
+
+    /// Gather a test batch for the given example indices.
+    pub fn test_batch(&self, idx: &[usize]) -> Batch {
+        self.gather(idx, true)
+    }
+
+    fn gather(&self, idx: &[usize], test: bool) -> Batch {
+        match &self.kind {
+            Kind::Images { x, y, tx, ty, dim } => {
+                let (xs, ys) = if test { (tx, ty) } else { (x, y) };
+                let mut xf = Vec::with_capacity(idx.len() * dim);
+                let mut yy = Vec::with_capacity(idx.len());
+                for &i in idx {
+                    xf.extend_from_slice(&xs[i * dim..(i + 1) * dim]);
+                    yy.push(ys[i]);
+                }
+                Batch { xf, xi: Vec::new(), y: yy }
+            }
+            Kind::Text { tokens, test_tokens, seq } => {
+                let ts = if test { test_tokens } else { tokens };
+                let mut xi = Vec::with_capacity(idx.len() * seq);
+                let mut yy = Vec::with_capacity(idx.len() * seq);
+                for &i in idx {
+                    let start = i * (seq + 1);
+                    xi.extend_from_slice(&ts[start..start + seq]);
+                    yy.extend_from_slice(&ts[start + 1..start + seq + 1]);
+                }
+                Batch { xf: Vec::new(), xi, y: yy }
+            }
+        }
+    }
+}
+
+/// Per-epoch shuffled index stream, sharded round-robin across workers —
+/// the same scheme torch's DistributedSampler uses, so every worker sees
+/// a disjoint equal shard each epoch.
+pub struct EpochSampler {
+    order: Vec<usize>,
+}
+
+impl EpochSampler {
+    pub fn new(n: usize, epoch: usize, seed: u64) -> EpochSampler {
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed ^ 0xE90C_u64.wrapping_mul(epoch as u64 + 1));
+        rng.shuffle(&mut order);
+        EpochSampler { order }
+    }
+
+    /// Indices for `worker`'s micro-batch at global step `step`.
+    pub fn shard(&self, step: usize, worker: usize, workers: usize, batch: usize) -> Option<Vec<usize>> {
+        let global = workers * batch;
+        let start = step * global + worker * batch;
+        if start + batch > self.order.len() {
+            return None;
+        }
+        Some(self.order[start..start + batch].to_vec())
+    }
+
+    pub fn steps(&self, workers: usize, batch: usize) -> usize {
+        self.order.len() / (workers * batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_dataset_shapes_and_determinism() {
+        let d1 = Dataset::images("c10", 10, 48, 64, 32, 1.0, 1.0, 7);
+        let d2 = Dataset::images("c10", 10, 48, 64, 32, 1.0, 1.0, 7);
+        let b1 = d1.train_batch(&[0, 5, 63]);
+        let b2 = d2.train_batch(&[0, 5, 63]);
+        assert_eq!(b1.xf, b2.xf);
+        assert_eq!(b1.y, b2.y);
+        assert_eq!(b1.xf.len(), 3 * 48);
+        assert!(b1.y.iter().all(|&c| (0..10).contains(&c)));
+    }
+
+    #[test]
+    fn text_dataset_next_token_targets() {
+        let d = Dataset::text("wt2", 64, 1000, 200, 8, 3);
+        let b = d.train_batch(&[0, 1]);
+        assert_eq!(b.xi.len(), 16);
+        assert_eq!(b.y.len(), 16);
+        // y is x shifted by one within each window
+        assert_eq!(b.xi[1], b.y[0]);
+    }
+
+    #[test]
+    fn sampler_shards_are_disjoint_and_cover() {
+        let s = EpochSampler::new(64, 0, 9);
+        let mut seen = vec![false; 64];
+        for step in 0..s.steps(4, 4) {
+            for w in 0..4 {
+                for i in s.shard(step, w, 4, 4).unwrap() {
+                    assert!(!seen[i], "index {i} seen twice");
+                    seen[i] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn sampler_reshuffles_per_epoch() {
+        let a = EpochSampler::new(32, 0, 9).shard(0, 0, 1, 32).unwrap();
+        let b = EpochSampler::new(32, 1, 9).shard(0, 0, 1, 32).unwrap();
+        assert_ne!(a, b);
+    }
+}

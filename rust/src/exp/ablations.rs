@@ -1,0 +1,94 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * `ablate-eta`      — the detection threshold η (paper fixes 0.5,
+//!                       untuned; how sensitive is the schedule?)
+//! * `ablate-interval` — the detection window (paper: 10 of 300 epochs)
+//! * `ablate-selector` — magnitude (TopK) vs random (RandomK) vs 1-bit
+//!                       (signSGD) selection under the same controller
+//! * `ablate-network`  — bandwidth sweep: where does compression stop
+//!                       paying (the time-column crossover)?
+//!
+//! All run the same scaled workload as the tables; `--fast` applies.
+
+use super::{print_group, print_header, Harness, Row};
+use crate::compress::Level;
+use crate::train::config::{ControllerCfg, MethodCfg};
+use anyhow::Result;
+
+pub fn ablate_eta(h: &mut Harness) -> Result<()> {
+    print_header("Ablation: detection threshold eta (resnet_c10, PowerSGD r2/r1)");
+    let mut rows = Vec::new();
+    for eta in [0.1f32, 0.25, 0.5, 0.75, 0.9] {
+        let cfg = h.cfg(&format!("ablate-eta-{eta}"), |c| {
+            c.model = "resnet_c10".into();
+            c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+            c.controller = ControllerCfg::Accordion { eta, interval: 2 };
+        })?;
+        let log = h.run(&cfg)?;
+        rows.push(Row::from_log(&format!("eta = {eta}"), &log));
+    }
+    print_group("resnet_c10", &rows);
+    println!("shape: small eta => conservative (more floats, ~l_low acc); large eta => aggressive");
+    Ok(())
+}
+
+pub fn ablate_interval(h: &mut Harness) -> Result<()> {
+    print_header("Ablation: detection interval (resnet_c10, PowerSGD r2/r1)");
+    let mut rows = Vec::new();
+    for interval in [1usize, 2, 4, 8] {
+        let cfg = h.cfg(&format!("ablate-interval-{interval}"), |c| {
+            c.model = "resnet_c10".into();
+            c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+            c.controller = ControllerCfg::Accordion { eta: 0.5, interval };
+        })?;
+        let log = h.run(&cfg)?;
+        rows.push(Row::from_log(&format!("every {interval} epochs"), &log));
+    }
+    print_group("resnet_c10", &rows);
+    Ok(())
+}
+
+pub fn ablate_selector(h: &mut Harness) -> Result<()> {
+    print_header("Ablation: coordinate selector under Accordion (resnet_c10)");
+    let mut rows = Vec::new();
+    for (name, method) in [
+        ("TopK (magnitude)", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.10 }),
+        ("RandomK (uniform)", MethodCfg::RandomK { frac_low: 0.99, frac_high: 0.10 }),
+        ("QSGD 8b/2b", MethodCfg::Qsgd { bits_low: 8, bits_high: 2 }),
+        ("signSGD (no knob)", MethodCfg::SignSgd),
+    ] {
+        let cfg = h.cfg(&format!("ablate-selector-{name}"), |c| {
+            c.model = "resnet_c10".into();
+            c.method = method.clone();
+            c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 2 };
+        })?;
+        let log = h.run(&cfg)?;
+        rows.push(Row::from_log(name, &log));
+    }
+    print_group("resnet_c10", &rows);
+    println!("shape: magnitude selection > random at equal k; signSGD has no level for Accordion to adapt");
+    Ok(())
+}
+
+pub fn ablate_network(h: &mut Harness) -> Result<()> {
+    print_header("Ablation: bandwidth sweep — time-saving crossover (resnet_c10, PowerSGD)");
+    for mbps in [10.0f64, 100.0, 1000.0, 10000.0] {
+        let mut rows = Vec::new();
+        for (setting, ctrl) in [
+            ("Rank 2", ControllerCfg::Static(Level::Low)),
+            ("Accordion", ControllerCfg::Accordion { eta: 0.5, interval: 2 }),
+        ] {
+            let cfg = h.cfg(&format!("ablate-net-{mbps}-{setting}"), |c| {
+                c.model = "resnet_c10".into();
+                c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+                c.controller = ctrl.clone();
+                c.bandwidth_mbps = mbps;
+            })?;
+            let log = h.run(&cfg)?;
+            rows.push(Row::from_log(setting, &log));
+        }
+        print_group(&format!("{mbps} Mbps"), &rows);
+    }
+    println!("shape: time saving shrinks as bandwidth grows (comm stops dominating) — matches the paper's PowerSGD time columns being ~1.0x on fast interconnects");
+    Ok(())
+}

@@ -1,0 +1,331 @@
+//! Figure harnesses (Figs. 1, 2, 5–11, 18) — see DESIGN.md §6 for the
+//! paper-asset ↔ module map.  Each prints the series/rows the figure
+//! plots and leaves per-epoch CSVs under `runs/<exp>/`.
+
+use super::{print_group, print_header, Harness, Row};
+use crate::compress::Level;
+use crate::metrics::RunLog;
+use crate::train::config::{ControllerCfg, MethodCfg};
+use anyhow::Result;
+
+fn print_series(label: &str, log: &RunLog) {
+    println!("-- {label}: epoch, test_acc, cumulative_mfloats, grad_norm, frac_low, batch_mult");
+    for e in &log.epochs {
+        println!(
+            "   {:>3}  {:.4}  {:>10.2}  {:>9.4}  {:.2}  x{}",
+            e.epoch,
+            e.test_acc,
+            e.floats as f64 / 1e6,
+            e.grad_norm,
+            e.frac_low,
+            e.batch_mult
+        );
+    }
+}
+
+/// Fig. 1: an adaptive compression pattern matches ℓ_low accuracy at a
+/// fraction of its communication (ResNet-18 / CIFAR-100 / PowerSGD).
+pub fn fig1(h: &mut Harness) -> Result<()> {
+    print_header("Fig 1: adaptive schedule exists (resnet_c100, PowerSGD r2/r1)");
+    let mut rows = Vec::new();
+    for (setting, controller) in [
+        ("Rank 2 (low comp)", ControllerCfg::Static(Level::Low)),
+        ("Rank 1 (high comp)", ControllerCfg::Static(Level::High)),
+        (
+            // the hand-built pattern of Fig. 1: low in the critical
+            // regions, high elsewhere
+            "Adaptive pattern",
+            ControllerCfg::Manual { head: 5, tail: 3, level_in: Level::Low, level_out: Level::High },
+        ),
+    ] {
+        let cfg = h.cfg(&format!("fig1-{setting}"), |c| {
+            c.model = "resnet_c100".into();
+            c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+            c.controller = controller.clone();
+        })?;
+        let log = h.run(&cfg)?;
+        print_series(setting, &log);
+        rows.push(Row::from_log(setting, &log));
+    }
+    print_group("resnet_c100", &rows);
+    Ok(())
+}
+
+/// Fig. 2: critical regimes — (a) the grad-norm trace that locates them,
+/// (b) low-only-in-critical suffices; high-in-critical is unrecoverable
+/// even with NO compression elsewhere.
+pub fn fig2(h: &mut Harness) -> Result<()> {
+    print_header("Fig 2: critical regimes (resnet_c100, PowerSGD)");
+    let mut rows = Vec::new();
+    for (setting, controller) in [
+        ("Rank 2 everywhere", ControllerCfg::Static(Level::Low)),
+        (
+            "Low in critical only",
+            ControllerCfg::Manual { head: 5, tail: 3, level_in: Level::Low, level_out: Level::High },
+        ),
+        (
+            // adversarial mirror: over-compress exactly the critical
+            // regimes, full-rank (uncompressed-equivalent) elsewhere
+            "High in critical, full elsewhere",
+            ControllerCfg::Manual {
+                head: 5,
+                tail: 3,
+                level_in: Level::High,
+                level_out: Level::Rank(16),
+            },
+        ),
+    ] {
+        let cfg = h.cfg(&format!("fig2-{setting}"), |c| {
+            c.model = "resnet_c100".into();
+            c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+            c.controller = controller.clone();
+        })?;
+        let log = h.run(&cfg)?;
+        print_series(setting, &log);
+        rows.push(Row::from_log(setting, &log));
+    }
+    print_group("resnet_c100", &rows);
+    println!("expected shape: row2 ≈ row1 accuracy with fewer floats; row3 loses accuracy despite *more* floats");
+    Ok(())
+}
+
+/// Fig. 5: VGG (no skip connections) is compression-fragile; Accordion
+/// bridges a large accuracy gap at ~2.3x less communication than r4.
+pub fn fig5(h: &mut Harness) -> Result<()> {
+    print_header("Fig 5: VGG-19bn analogue (vgg_c10, PowerSGD r4/r1)");
+    let mut rows = Vec::new();
+    for (setting, controller) in [
+        ("Rank 4", ControllerCfg::Static(Level::Low)),
+        ("Rank 1", ControllerCfg::Static(Level::High)),
+        ("Accordion", ControllerCfg::Accordion { eta: 0.5, interval: 2 }),
+    ] {
+        let cfg = h.cfg(&format!("fig5-{setting}"), |c| {
+            c.model = "vgg_c10".into();
+            c.method = MethodCfg::PowerSgd { rank_low: 4, rank_high: 1 };
+            c.controller = controller.clone();
+        })?;
+        let log = h.run(&cfg)?;
+        print_series(setting, &log);
+        rows.push(Row::from_log(setting, &log));
+    }
+    print_group("vgg_c10", &rows);
+    Ok(())
+}
+
+/// Fig. 6: AdaQS (Guo et al.) vs Accordion with PowerSGD.
+pub fn fig6(h: &mut Harness) -> Result<()> {
+    print_header("Fig 6: AdaQS comparison (PowerSGD)");
+    for model in ["resnet_c10", "resnet_c100"] {
+        let mut rows = Vec::new();
+        for (setting, controller) in [
+            ("Rank 2 (low comp)", ControllerCfg::Static(Level::Low)),
+            ("AdaQS", ControllerCfg::AdaQs { rank_start: 1, rank_max: 4, drop: 0.3, interval: 2 }),
+            ("Accordion", ControllerCfg::Accordion { eta: 0.5, interval: 2 }),
+        ] {
+            let cfg = h.cfg(&format!("fig6-{model}-{setting}"), |c| {
+                c.model = model.into();
+                c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+                c.controller = controller.clone();
+            })?;
+            let log = h.run(&cfg)?;
+            rows.push(Row::from_log(setting, &log));
+        }
+        print_group(model, &rows);
+    }
+    println!("expected shape: AdaQS communicates more than Accordion yet trails the ℓ_low accuracy");
+    Ok(())
+}
+
+/// Fig. 7: Smith et al. "increase the batch size" vs Accordion batch mode.
+pub fn fig7(h: &mut Harness) -> Result<()> {
+    print_header("Fig 7: Smith et al. comparison (batch size)");
+    for model in ["resnet_c10", "resnet_c100"] {
+        let mut rows = Vec::new();
+        for (setting, controller) in [
+            ("B small", ControllerCfg::Static(Level::Low)),
+            ("Smith et al.", ControllerCfg::Smith { factor: 5, cap: 16 }),
+            ("Accordion", ControllerCfg::AccordionBatch { eta: 0.5, interval: 2, mult: 8 }),
+        ] {
+            let cfg = h.cfg(&format!("fig7-{model}-{setting}"), |c| {
+                c.model = model.into();
+                c.method = MethodCfg::None;
+                c.controller = controller.clone();
+            })?;
+            let log = h.run(&cfg)?;
+            rows.push(Row::from_log(setting, &log));
+        }
+        print_group(model, &rows);
+    }
+    Ok(())
+}
+
+/// Fig. 8: rank-1 granted the same *communication budget* as rank-2
+/// (i.e. ~1.8x the epochs) still cannot match rank-2.
+pub fn fig8(h: &mut Harness) -> Result<()> {
+    print_header("Fig 8: equal-budget high compression (resnet_c100)");
+    let r2 = {
+        let cfg = h.cfg("fig8-rank2", |c| {
+            c.model = "resnet_c100".into();
+            c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+            c.controller = ControllerCfg::Static(Level::Low);
+        })?;
+        h.run(&cfg)?
+    };
+    let budget = r2.total_floats();
+
+    // rank-1 with stretched epoch budget; truncated at equal floats
+    let base_epochs = if h.fast { 8 } else { 30 };
+    let stretched = (base_epochs as f64 * 2.0).ceil() as usize;
+    let r1_full = {
+        let cfg = h.cfg("fig8-rank1-budget", |c| {
+            c.model = "resnet_c100".into();
+            c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+            c.controller = ControllerCfg::Static(Level::High);
+            c.epochs = stretched;
+            c.decay_epochs = c.decay_epochs.iter().map(|d| d * 2).collect();
+        })?;
+        h.run(&cfg)?
+    };
+    let mut r1 = r1_full.clone();
+    if let Some(cut) = r1.epochs.iter().position(|e| e.floats > budget) {
+        r1.epochs.truncate(cut.max(1));
+    }
+
+    let acc = {
+        let cfg = h.cfg("fig8-accordion", |c| {
+            c.model = "resnet_c100".into();
+            c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+            c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 2 };
+        })?;
+        h.run(&cfg)?
+    };
+
+    let rows = vec![
+        Row::from_log("Rank 2", &r2),
+        Row::from_log("Rank 1 @ equal floats", &r1),
+        Row::from_log("Accordion", &acc),
+    ];
+    print_group("resnet_c100", &rows);
+    println!("expected shape: rank-1 stays below rank-2 even at equal communication budget");
+    Ok(())
+}
+
+/// Fig. 9: limitation — when ℓ_high is catastrophically lossy (VGG r1),
+/// Accordion(r1↔r4) lands between; Accordion(r2↔r4) recovers r4 accuracy.
+pub fn fig9(h: &mut Harness) -> Result<()> {
+    print_header("Fig 9: limitation, choice of l_high (vgg_c100, PowerSGD)");
+    let mut rows = Vec::new();
+    for (setting, rank_low, rank_high, ctrl) in [
+        ("Rank 4", 4usize, 1usize, ControllerCfg::Static(Level::Low)),
+        ("Rank 2", 2, 1, ControllerCfg::Static(Level::Low)),
+        ("Rank 1", 4, 1, ControllerCfg::Static(Level::High)),
+        ("Accordion r1<->r4", 4, 1, ControllerCfg::Accordion { eta: 0.5, interval: 2 }),
+        ("Accordion r2<->r4", 4, 2, ControllerCfg::Accordion { eta: 0.5, interval: 2 }),
+    ] {
+        let cfg = h.cfg(&format!("fig9-{setting}"), |c| {
+            c.model = "vgg_c100".into();
+            c.method = MethodCfg::PowerSgd { rank_low, rank_high };
+            c.controller = ctrl.clone();
+        })?;
+        let log = h.run(&cfg)?;
+        rows.push(Row::from_log(setting, &log));
+    }
+    print_group("vgg_c100", &rows);
+    Ok(())
+}
+
+/// Fig. 10 (App. C): extreme batch scaling — Accordion loses little and
+/// shows the drop-then-recover transient at the first switch.
+pub fn fig10(h: &mut Harness) -> Result<()> {
+    print_header("Fig 10: extreme batch size (resnet_c10, x16)");
+    let mut rows = Vec::new();
+    for (setting, controller) in [
+        ("B small", ControllerCfg::Static(Level::Low)),
+        ("Accordion x16", ControllerCfg::AccordionBatch { eta: 0.5, interval: 2, mult: 16 }),
+    ] {
+        let cfg = h.cfg(&format!("fig10-{setting}"), |c| {
+            c.model = "resnet_c10".into();
+            c.method = MethodCfg::None;
+            c.controller = controller.clone();
+        })?;
+        let log = h.run(&cfg)?;
+        print_series(setting, &log);
+        rows.push(Row::from_log(setting, &log));
+    }
+    print_group("resnet_c10", &rows);
+    Ok(())
+}
+
+/// Fig. 11 (App. D): LSTM on the WikiText-2 stand-in with TopK 99%/2%.
+pub fn fig11(h: &mut Harness) -> Result<()> {
+    print_header("Fig 11: LSTM LM (lstm_wt2, TopK 99%/2%) — column 3 is PERPLEXITY");
+    let mut rows = Vec::new();
+    for (setting, controller) in [
+        ("K 99%", ControllerCfg::Static(Level::Low)),
+        ("K 2%", ControllerCfg::Static(Level::High)),
+        ("Accordion", ControllerCfg::Accordion { eta: 0.5, interval: 2 }),
+    ] {
+        let cfg = h.cfg(&format!("fig11-{setting}"), |c| {
+            c.model = "lstm_wt2".into();
+            c.method = MethodCfg::TopK { frac_low: 0.99, frac_high: 0.02 };
+            c.controller = controller.clone();
+            // LM schedule (paper App. A: 90 epochs, decay at 60/80 ->
+            // the same fractions; `--fast` shrinks this afterwards)
+            c.base_lr = 2.0;
+            c.weight_decay = 0.0;
+            c.epochs = 18;
+            c.decay_epochs = vec![12, 16];
+        })?;
+        let log = h.run(&cfg)?;
+        rows.push(Row {
+            setting: setting.into(),
+            acc: log.final_ppl(),
+            floats: log.total_floats(),
+            secs: log.total_secs(),
+        });
+    }
+    // perplexity: lower is better — print raw (not the % formatting of
+    // the accuracy tables)
+    println!("| {:<12} | {:<12} | {:>8} | {:>18} | {:>14} |", "Network", "Setting", "PPL", "Data Sent (MFloat)", "Time (sim s)");
+    let base_f = rows[0].floats.max(1) as f64;
+    let base_s = rows[0].secs.max(1e-9);
+    for (i, r) in rows.iter().enumerate() {
+        println!(
+            "| {:<12} | {:<12} | {:>8.2} | {:>10} {:>7} | {:>6.1}s {:>6} |",
+            if i == 0 { "lstm_wt2" } else { "" },
+            r.setting,
+            r.acc,
+            crate::metrics::mfloats(r.floats),
+            crate::metrics::ratio(base_f, r.floats as f64),
+            r.secs,
+            crate::metrics::ratio(base_s, r.secs),
+        );
+    }
+    println!("(uniform baseline ppl = 64; the corpus' entropy floor is ~5)");
+    Ok(())
+}
+
+/// Figs. 18–20: per-layer level selection over training.
+pub fn fig18(h: &mut Harness) -> Result<()> {
+    print_header("Fig 18-20: per-layer rank selection (resnet_c100, PowerSGD, Accordion)");
+    let cfg = h.cfg("fig18-accordion", |c| {
+        c.model = "resnet_c100".into();
+        c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+        c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 2 };
+    })?;
+    let meta = h.reg.model("resnet_c100")?.clone();
+    let log = h.run(&cfg)?;
+    println!("rows = compressible layers; columns = epochs; '2' = rank 2 (low comp), '1' = rank 1");
+    for (l, p) in meta.params.iter().enumerate() {
+        if !p.compressible() {
+            continue;
+        }
+        let line: String = log
+            .level_trace
+            .iter()
+            .map(|epoch| if epoch[l] { '2' } else { '1' })
+            .collect();
+        println!("  layer {:>2} {:<14} {}", l, p.name, line);
+    }
+    Ok(())
+}

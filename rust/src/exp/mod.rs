@@ -1,0 +1,190 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §6).
+//!
+//! Every harness builds the scaled-down workload, runs each schedule
+//! through the real training stack, prints the paper-style rows/series,
+//! and drops per-run CSVs under `runs/<exp>/`.
+
+pub mod ablations;
+pub mod figures;
+pub mod hessian;
+pub mod overlap;
+pub mod tables;
+
+use crate::models::{default_artifacts_dir, Registry};
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+use crate::train::{self, config::TrainConfig};
+use crate::util::cli::Args;
+use crate::util::toml::Table;
+use anyhow::{bail, Result};
+
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table5", "table6", "fig1", "fig2", "fig3", "fig4",
+    "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig18", "ablate-eta",
+    "ablate-interval", "ablate-selector", "ablate-network",
+];
+
+/// Shared state for one experiment invocation: the artifact registry, a
+/// single PJRT runtime (so executables compile once across runs), the
+/// `--fast`/`--set` modifiers, and the output directory.
+pub struct Harness {
+    pub reg: Registry,
+    pub rt: Runtime,
+    pub fast: bool,
+    pub overrides: Vec<String>,
+    pub out: String,
+}
+
+impl Harness {
+    pub fn from_args(exp: &str, args: &Args) -> Result<Harness> {
+        Ok(Harness {
+            reg: Registry::load(default_artifacts_dir())?,
+            rt: Runtime::cpu()?,
+            fast: args.flag("fast"),
+            overrides: args.opts("set").iter().map(|s| s.to_string()).collect(),
+            out: format!("{}/{exp}", args.opt("out").unwrap_or("runs")),
+        })
+    }
+
+    /// In-process constructor for tests/benches.
+    pub fn in_process(fast: bool) -> Result<Harness> {
+        Ok(Harness {
+            reg: Registry::load(default_artifacts_dir())?,
+            rt: Runtime::cpu()?,
+            fast,
+            overrides: Vec::new(),
+            out: "runs/test".into(),
+        })
+    }
+
+    /// Base config with `--set` overrides and `--fast` applied, then the
+    /// experiment's own customization and per-dataset calibration.
+    pub fn cfg(&self, label: &str, customize: impl FnOnce(&mut TrainConfig)) -> Result<TrainConfig> {
+        let mut table = Table::default();
+        for kv in &self.overrides {
+            table.set(kv).map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        let mut cfg = TrainConfig::from_table(&table)?;
+        customize(&mut cfg);
+        self.dataset_defaults(&mut cfg);
+        if self.fast {
+            cfg = cfg.fast();
+        }
+        cfg.label = label.to_string();
+        Ok(cfg)
+    }
+
+    /// Per-dataset difficulty calibration (DESIGN.md §2): cifar100-syn
+    /// needs more samples/class and larger class separation than
+    /// cifar10-syn for the scaled-down models to land in the paper's
+    /// accuracy bands.  Explicit `--set` overrides win.
+    fn dataset_defaults(&self, cfg: &mut TrainConfig) {
+        let overridden = |key: &str| self.overrides.iter().any(|o| o.starts_with(&format!("{key}=")));
+        // VGG (no skip connections, no normalized shortcut path) diverges
+        // at the ResNet-family LR — the same fragility the paper leans on
+        // in Figs. 5/9 — so its family default is lower.
+        if cfg.model.starts_with("vgg") && !overridden("train.base_lr") {
+            cfg.base_lr = 0.01;
+        }
+        if cfg.model.ends_with("_c100") {
+            if !overridden("data.sep") {
+                cfg.data_sep = 0.6;
+            }
+            if !overridden("data.train_size") {
+                cfg.train_size = 4096;
+            }
+        } else if cfg.model.ends_with("_c10") {
+            if !overridden("data.sep") {
+                cfg.data_sep = 0.4;
+            }
+            if !overridden("data.train_size") {
+                cfg.train_size = 2048;
+            }
+        }
+    }
+
+    /// Run one job and persist its CSV.
+    pub fn run(&mut self, cfg: &TrainConfig) -> Result<RunLog> {
+        let log = train::run(cfg, &self.reg, &mut self.rt)?;
+        let _ = log.save_csv(&self.out);
+        Ok(log)
+    }
+}
+
+pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
+    let mut h = Harness::from_args(id, args)?;
+    match id {
+        "table1" => tables::table1(&mut h),
+        "table2" => tables::table2(&mut h),
+        "table3" => tables::table3(&mut h),
+        "table4" => tables::table4(&mut h),
+        "table5" => tables::table5(&mut h),
+        "table6" => tables::table6(&mut h),
+        "fig1" => figures::fig1(&mut h),
+        "fig2" => figures::fig2(&mut h),
+        "fig3" => hessian::fig3(&mut h),
+        "fig4" => overlap::fig4(&mut h),
+        "fig5" => figures::fig5(&mut h),
+        "fig6" => figures::fig6(&mut h),
+        "fig7" => figures::fig7(&mut h),
+        "fig8" => figures::fig8(&mut h),
+        "fig9" => figures::fig9(&mut h),
+        "fig10" => figures::fig10(&mut h),
+        "fig11" => figures::fig11(&mut h),
+        "fig18" => figures::fig18(&mut h),
+        "ablate-eta" => ablations::ablate_eta(&mut h),
+        "ablate-interval" => ablations::ablate_interval(&mut h),
+        "ablate-selector" => ablations::ablate_selector(&mut h),
+        "ablate-network" => ablations::ablate_network(&mut h),
+        _ => bail!("unknown experiment '{id}' (have: {})", EXPERIMENTS.join(" ")),
+    }
+}
+
+// ----------------------------------------------------------- reporting
+
+/// One table row: (setting, accuracy-or-ppl, floats, sim secs).
+pub struct Row {
+    pub setting: String,
+    pub acc: f32,
+    pub floats: u64,
+    pub secs: f64,
+}
+
+impl Row {
+    pub fn from_log(setting: &str, log: &RunLog) -> Row {
+        Row {
+            setting: setting.to_string(),
+            acc: log.final_acc(),
+            floats: log.total_floats(),
+            secs: log.total_secs(),
+        }
+    }
+}
+
+/// Print a paper-style table block: the first row of each group is the
+/// 1x baseline for the ratio columns (the tables use ℓ_low as baseline).
+pub fn print_group(network: &str, rows: &[Row]) {
+    let base_f = rows[0].floats.max(1) as f64;
+    let base_s = rows[0].secs.max(1e-9);
+    for (i, r) in rows.iter().enumerate() {
+        let name = if i == 0 { network } else { "" };
+        println!(
+            "| {:<12} | {:<22} | {:>6.1}% | {:>10} {:>7} | {:>8.1}s {:>7} |",
+            name,
+            r.setting,
+            r.acc * 100.0,
+            crate::metrics::mfloats(r.floats),
+            crate::metrics::ratio(base_f, r.floats as f64),
+            r.secs,
+            crate::metrics::ratio(base_s, r.secs),
+        );
+    }
+}
+
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "| {:<12} | {:<22} | {:>7} | {:>18} | {:>17} |",
+        "Network", "Setting", "Acc", "Data Sent (MFloat)", "Time (sim s)"
+    );
+}

@@ -1,0 +1,145 @@
+//! Fig. 4: the batch-size ↔ compression connection.
+//!
+//! (a) support overlap of the Top-10% coordinates between per-worker
+//!     stochastic gradients — the paper's evidence for the "sparse mean +
+//!     dense noise" model (Eq. 1): overlap far above chance means large
+//!     batches and TopK compression keep the same coordinates;
+//! (b) the oracle batch schedule: small batches *only in critical
+//!     regimes* match small-batches-everywhere accuracy.
+
+use super::{print_group, print_header, Harness, Row};
+use crate::compress::Level;
+use crate::data::EpochSampler;
+use crate::runtime::ModelPrograms;
+use crate::tensor::Tensor;
+use crate::train::{self, config::{ControllerCfg, MethodCfg}};
+use anyhow::Result;
+
+pub fn fig4(h: &mut Harness) -> Result<()> {
+    print_header("Fig 4a: Top-10% support overlap between worker gradients (resnet_c10)");
+    let cfg = h.cfg("fig4a-probe", |c| {
+        c.model = "resnet_c10".into();
+        c.method = MethodCfg::None;
+        c.controller = ControllerCfg::Static(Level::Low);
+        c.epochs = 6;
+        c.decay_epochs = vec![4];
+    })?;
+    let meta = h.reg.model(&cfg.model)?.clone();
+    let progs = ModelPrograms::new(&meta);
+    let ds = train::dataset_for(&cfg, &h.reg)?;
+    let mut params = h.reg.load_init(&meta)?;
+    let mut opt = crate::optim::Sgd::new(cfg.momentum, cfg.nesterov, cfg.weight_decay);
+
+    println!("epoch  mean_pairwise_overlap  (chance = 0.10)");
+    for epoch in 0..cfg.epochs {
+        let sampler = EpochSampler::new(ds.train_n, epoch, cfg.seed);
+        // measure on the first step of the epoch: 4 worker gradients
+        let mut flats: Vec<Vec<f32>> = Vec::new();
+        let mut grads_w0: Vec<Tensor> = Vec::new();
+        for w in 0..cfg.workers {
+            let idx = sampler.shard(0, w, cfg.workers, meta.batch).unwrap();
+            let (_, grads) = progs.train_step(&mut h.rt, &params, &ds.train_batch(&idx))?;
+            let mut flat = Vec::with_capacity(meta.total_params);
+            for g in &grads {
+                flat.extend_from_slice(&g.data);
+            }
+            flats.push(flat);
+            if w == 0 {
+                grads_w0 = grads;
+            }
+        }
+        let k = (0.10 * meta.total_params as f32) as usize;
+        let sets: Vec<Vec<u32>> = flats.iter().map(|f| topk_support(f, k)).collect();
+        let mut pairs = 0.0f64;
+        let mut n = 0usize;
+        for i in 0..sets.len() {
+            for j in i + 1..sets.len() {
+                pairs += jaccard_overlap(&sets[i], &sets[j], k);
+                n += 1;
+            }
+        }
+        println!("{epoch:>5}  {:.3}", pairs / n.max(1) as f64);
+
+        // one cheap epoch of single-worker training to move the model
+        let lr = 0.05;
+        for s in 0..sampler.steps(1, meta.batch).min(32) {
+            let idx = sampler.shard(s, 0, 1, meta.batch).unwrap();
+            let (_, grads) = progs.train_step(&mut h.rt, &params, &ds.train_batch(&idx))?;
+            opt.step(&mut params, &grads, lr);
+        }
+        let _ = &grads_w0;
+    }
+    println!("expected shape: overlap >> 0.10 chance (paper reports > 0.9 at full scale)");
+
+    // (b) oracle batch schedule
+    print_header("Fig 4b: small batch only in critical regimes (resnet_c10)");
+    let mut rows = Vec::new();
+    let (head, tail) = if h.fast { (2, 1) } else { (5, 3) };
+    let decay = if h.fast { vec![(4usize, 5usize)] } else { vec![(15, 18), (25, 28)] };
+    let mut small_ranges = vec![(0, head)];
+    small_ranges.extend(decay.iter().map(|&(s, e)| (s, e + tail - (e - s))));
+    for (setting, controller) in [
+        ("B small everywhere".to_string(), ControllerCfg::Static(Level::Low)),
+        ("B large everywhere".to_string(), ControllerCfg::StaticBatch { mult: 8 }),
+        (
+            "small only in critical".to_string(),
+            ControllerCfg::ManualBatch { small: small_ranges.clone(), mult: 8 },
+        ),
+    ] {
+        let cfg = h.cfg(&format!("fig4b-{setting}"), |c| {
+            c.model = "resnet_c10".into();
+            c.method = MethodCfg::None;
+            c.controller = controller.clone();
+        })?;
+        let log = h.run(&cfg)?;
+        rows.push(Row::from_log(&setting, &log));
+    }
+    print_group("resnet_c10", &rows);
+    Ok(())
+}
+
+/// Indices of the k largest |values| (sorted).
+fn topk_support(x: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    let kth = x.len() - k.min(x.len());
+    idx.select_nth_unstable_by(kth, |&a, &b| {
+        x[a as usize]
+            .abs()
+            .partial_cmp(&x[b as usize].abs())
+            .unwrap()
+    });
+    let mut top: Vec<u32> = idx[kth..].to_vec();
+    top.sort_unstable();
+    top
+}
+
+/// |A ∩ B| / k for two sorted index sets.
+fn jaccard_overlap(a: &[u32], b: &[u32], k: usize) -> f64 {
+    let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    inter as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn support_and_overlap() {
+        let x = [0.1f32, -5.0, 3.0, 0.01, -0.5, 2.0];
+        let s = topk_support(&x, 3);
+        assert_eq!(s, vec![1, 2, 5]);
+        assert_eq!(jaccard_overlap(&[1, 2, 5], &[2, 5, 9], 3), 2.0 / 3.0);
+        assert_eq!(jaccard_overlap(&[1, 2], &[3, 4], 2), 0.0);
+    }
+}

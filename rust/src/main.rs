@@ -1,0 +1,148 @@
+//! `accordion` — the leader CLI.
+//!
+//! Subcommands:
+//!   train   run one training job from a TOML config (+ --set overrides)
+//!   repro   regenerate a paper table/figure (--exp table1..6, fig1..fig11,
+//!           fig18; --fast for a smoke-sized run)
+//!   list    enumerate models/artifacts/experiments
+//!   help    this text
+
+use accordion::exp;
+use accordion::models::{default_artifacts_dir, Registry};
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::TrainConfig};
+use accordion::util::{cli::Args, init_logging, toml::Table};
+use anyhow::{bail, Result};
+
+const HELP: &str = "\
+accordion — Adaptive Gradient Communication via Critical Learning Regime Identification
+          (reproduction; rust + JAX + Pallas, AOT via PJRT)
+
+USAGE:
+  accordion train [--config FILE] [--set key=value ...] [--out DIR] [--save PATH]
+  accordion eval  --model NAME --ckpt PATH [--set key=value ...]
+  accordion repro --exp <id> [--fast] [--set key=value ...] [--out DIR]
+  accordion list
+  accordion help
+
+EXPERIMENT IDS:
+  table1 table2 table3 table4 table5 table6
+  fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig18
+  ablate-eta ablate-interval ablate-selector ablate-network
+
+EXAMPLES:
+  accordion repro --exp table1 --fast
+  accordion train --set model=vgg_c10 --set method.kind=topk --set epochs=10
+  ACCORDION_LOG=debug accordion repro --exp fig2
+";
+
+fn main() {
+    init_logging();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("list") => cmd_list(),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n{HELP}"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<TrainConfig> {
+    let mut table = match args.opt("config") {
+        Some(path) => Table::parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        None => Table::default(),
+    };
+    for kv in args.opts("set") {
+        table.set(kv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let mut cfg = TrainConfig::from_table(&table)?;
+    if args.flag("fast") {
+        cfg = cfg.fast();
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let reg = Registry::load(default_artifacts_dir())?;
+    let mut rt = Runtime::cpu()?;
+    let (log, params) = train::run_full(&cfg, &reg, &mut rt)?;
+    if let Some(path) = args.opt("save") {
+        let meta = reg.model(&cfg.model)?;
+        train::checkpoint::save(path, meta, cfg.epochs, &params)?;
+        println!("checkpoint saved to {path}.{{json,bin}}");
+    }
+    let out = args.opt("out").unwrap_or("runs");
+    let path = log.save_csv(out)?;
+    println!(
+        "{}: final acc {:.3} | best {:.3} | {} floats | {:.1} sim-seconds | csv {}",
+        cfg.label,
+        log.final_acc(),
+        log.best_acc(),
+        log.total_floats(),
+        log.total_secs(),
+        path
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.opt("model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let ckpt = args.opt("ckpt").ok_or_else(|| anyhow::anyhow!("--ckpt required"))?;
+    let mut cfg = load_config(args)?;
+    cfg.model = model.to_string();
+    let reg = Registry::load(default_artifacts_dir())?;
+    let meta = reg.model(model)?.clone();
+    let params = train::checkpoint::load(ckpt, &meta)?;
+    let mut rt = Runtime::cpu()?;
+    let ds = train::dataset_for(&cfg, &reg)?;
+    let progs = accordion::runtime::ModelPrograms::new(&meta);
+    let (loss, acc) = train::evaluate(&progs, &mut rt, &params, &ds, &cfg, &meta)?;
+    if meta.is_lm() {
+        println!("{model}: eval loss {loss:.4}, perplexity {:.2}", loss.exp());
+    } else {
+        println!("{model}: eval loss {loss:.4}, accuracy {:.3}", acc);
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let id = args
+        .opt("exp")
+        .ok_or_else(|| anyhow::anyhow!("--exp <id> required\n{HELP}"))?;
+    exp::run_experiment(id, args)
+}
+
+fn cmd_list() -> Result<()> {
+    let reg = Registry::load(default_artifacts_dir())?;
+    println!("models ({}):", reg.models.len());
+    for (name, m) in &reg.models {
+        println!(
+            "  {:<20} {:>9} params in {:>2} tensors  task={:<8} batch={}",
+            name,
+            m.total_params,
+            m.n_layers(),
+            m.task,
+            m.batch
+        );
+    }
+    println!("kernels ({}):", reg.kernels.len());
+    for name in reg.kernels.keys() {
+        println!("  {name}");
+    }
+    println!("experiments: {}", exp::EXPERIMENTS.join(" "));
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Run metrics: the simulated clock, per-epoch rows, and the CSV/JSONL
+//! sinks the experiment harness reads back to print paper-style tables.
+//!
+//! The tables report three columns per setting — accuracy, Data Sent
+//! (floats), Time (seconds) — so `EpochStats` carries exactly those as
+//! cumulative series plus the training diagnostics (loss, grad-norm,
+//! per-layer levels) the figures need.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+/// Simulated wall clock: measured compute + α–β-modeled communication.
+/// Compute per step is the max over workers (they run in parallel on the
+/// modeled cluster) — callers feed that in.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    pub compute_secs: f64,
+    pub comm_secs: f64,
+}
+
+impl SimClock {
+    pub fn total(&self) -> f64 {
+        self.compute_secs + self.comm_secs
+    }
+}
+
+/// One epoch row of a run.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub lr: f32,
+    pub train_loss: f32,
+    pub test_loss: f32,
+    pub test_acc: f32,
+    /// cumulative payload floats (paper's Data Sent)
+    pub floats: u64,
+    /// cumulative simulated seconds
+    pub secs: f64,
+    /// whole-model ‖Δ‖ for the epoch (figure 2a-style trace)
+    pub grad_norm: f32,
+    /// fraction of compressible layers at the low-compression level
+    pub frac_low: f32,
+    /// global batch multiplier in effect (batch-size mode)
+    pub batch_mult: usize,
+}
+
+/// Full run log: everything the tables/figures consume.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub label: String,
+    pub epochs: Vec<EpochStats>,
+    /// per-epoch per-layer chosen levels (true = low compression);
+    /// Figs. 18-20 print these.
+    pub level_trace: Vec<Vec<bool>>,
+}
+
+impl RunLog {
+    pub fn final_acc(&self) -> f32 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+    /// Best (max) test accuracy — robust to end-of-run noise at tiny scale.
+    pub fn best_acc(&self) -> f32 {
+        self.epochs.iter().map(|e| e.test_acc).fold(0.0, f32::max)
+    }
+    pub fn final_loss(&self) -> f32 {
+        self.epochs.last().map(|e| e.test_loss).unwrap_or(f32::NAN)
+    }
+    pub fn total_floats(&self) -> u64 {
+        self.epochs.last().map(|e| e.floats).unwrap_or(0)
+    }
+    pub fn total_secs(&self) -> f64 {
+        self.epochs.last().map(|e| e.secs).unwrap_or(0.0)
+    }
+    /// Perplexity for LM runs.
+    pub fn final_ppl(&self) -> f32 {
+        self.final_loss().exp()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "epoch,lr,train_loss,test_loss,test_acc,floats,secs,grad_norm,frac_low,batch_mult\n",
+        );
+        for e in &self.epochs {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{:.4},{},{},{}",
+                e.epoch, e.lr, e.train_loss, e.test_loss, e.test_acc, e.floats, e.secs,
+                e.grad_norm, e.frac_low, e.batch_mult
+            );
+        }
+        out
+    }
+
+    pub fn save_csv(&self, dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let safe: String = self
+            .label
+            .chars()
+            .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        let path = format!("{dir}/{safe}.csv");
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(path)
+    }
+}
+
+/// Pretty ratio "(2.8x)" against a baseline value.
+pub fn ratio(baseline: f64, value: f64) -> String {
+    if value <= 0.0 {
+        return "(-)".into();
+    }
+    format!("({:.1}x)", baseline / value)
+}
+
+/// Format a float count the way the paper does (millions).
+pub fn mfloats(f: u64) -> String {
+    format!("{:.1}", f as f64 / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(epoch: usize, acc: f32, floats: u64) -> EpochStats {
+        EpochStats {
+            epoch,
+            lr: 0.1,
+            train_loss: 1.0,
+            test_loss: 0.9,
+            test_acc: acc,
+            floats,
+            secs: epoch as f64,
+            grad_norm: 1.0,
+            frac_low: 0.5,
+            batch_mult: 1,
+        }
+    }
+
+    #[test]
+    fn accessors_and_csv() {
+        let mut log = RunLog { label: "t".into(), ..Default::default() };
+        log.epochs.push(row(0, 0.5, 100));
+        log.epochs.push(row(1, 0.7, 250));
+        assert_eq!(log.final_acc(), 0.7);
+        assert_eq!(log.best_acc(), 0.7);
+        assert_eq!(log.total_floats(), 250);
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(2).unwrap().starts_with("1,"));
+    }
+
+    #[test]
+    fn ratio_format() {
+        assert_eq!(ratio(100.0, 50.0), "(2.0x)");
+        assert_eq!(mfloats(2_418_400_000), "2418.4");
+    }
+}

@@ -1,0 +1,253 @@
+//! Model registry: the rust-side view of `artifacts/metadata.json`.
+//!
+//! `aot.py` exports, per model variant, the parameter specs (name, shape,
+//! kind), the AOT artifact filenames, and the initial-parameter snapshot;
+//! this module parses that manifest so the trainer knows the exact
+//! calling convention of each lowered HLO program.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "matrix" (compressible) or "vector" (sent raw)
+    pub kind: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn compressible(&self) -> bool {
+        self.kind == "matrix"
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub task: String, // "classify" | "lm"
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String, // "f32" | "i32"
+    pub num_classes: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub total_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub train_artifact: PathBuf,
+    pub eval_artifact: PathBuf,
+    pub hvp_artifact: Option<PathBuf>,
+    pub init_file: PathBuf,
+}
+
+impl ModelMeta {
+    pub fn n_layers(&self) -> usize {
+        self.params.len()
+    }
+    /// per-example input element count
+    pub fn input_numel(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+    pub fn is_lm(&self) -> bool {
+        self.task == "lm"
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct KernelMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: PathBuf,
+    pub n: usize,
+    pub k: usize,
+    pub r: usize,
+}
+
+/// Parsed manifest for an artifacts directory.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub kernels: BTreeMap<String, KernelMeta>,
+}
+
+impl Registry {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("metadata.json");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", manifest.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("metadata.json missing models"))?
+        {
+            let params = m
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing params"))?
+                .iter()
+                .map(|p| -> Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .ok_or_else(|| anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                        kind: p
+                            .get("kind")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("matrix")
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let art = |k: &str| -> Result<PathBuf> {
+                Ok(dir.join(
+                    m.path(&["artifacts", k])
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("{name}: missing artifact {k}"))?,
+                ))
+            };
+            let meta = ModelMeta {
+                name: name.clone(),
+                task: m.get("task").and_then(|v| v.as_str()).unwrap_or("classify").into(),
+                input_shape: m
+                    .get("input_shape")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().map(|d| d.as_usize().unwrap_or(0)).collect())
+                    .unwrap_or_default(),
+                input_dtype: m.get("input_dtype").and_then(|v| v.as_str()).unwrap_or("f32").into(),
+                num_classes: m.get("num_classes").and_then(|v| v.as_usize()).unwrap_or(0),
+                batch: m.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+                seq_len: m.get("seq_len").and_then(|v| v.as_usize()).unwrap_or(0),
+                total_params: m.get("total_params").and_then(|v| v.as_usize()).unwrap_or(0),
+                params,
+                train_artifact: art("train")?,
+                eval_artifact: art("eval")?,
+                hvp_artifact: m.path(&["artifacts", "hvp"]).and_then(|v| v.as_str()).map(|f| dir.join(f)),
+                init_file: dir.join(
+                    m.get("init")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("{name}: missing init"))?,
+                ),
+            };
+            // invariant: spec param count == sum of shapes == total_params
+            let total: usize = meta.params.iter().map(|p| p.numel()).sum();
+            if total != meta.total_params {
+                bail!("{name}: param numel mismatch {total} != {}", meta.total_params);
+            }
+            models.insert(name.clone(), meta);
+        }
+
+        let mut kernels = BTreeMap::new();
+        if let Some(ks) = root.get("kernels").and_then(|k| k.as_obj()) {
+            for (name, k) in ks {
+                kernels.insert(
+                    name.clone(),
+                    KernelMeta {
+                        name: name.clone(),
+                        kind: k.get("kind").and_then(|v| v.as_str()).unwrap_or("").into(),
+                        file: dir.join(k.get("file").and_then(|v| v.as_str()).unwrap_or("")),
+                        n: k.get("n").and_then(|v| v.as_usize()).unwrap_or(0),
+                        k: k.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                        r: k.get("r").and_then(|v| v.as_usize()).unwrap_or(0),
+                    },
+                );
+            }
+        }
+
+        Ok(Registry { dir, models, kernels })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Load the initial parameter snapshot for a model (f32 LE, spec order).
+    pub fn load_init(&self, meta: &ModelMeta) -> Result<Vec<crate::tensor::Tensor>> {
+        let bytes = std::fs::read(&meta.init_file)
+            .with_context(|| format!("reading {}", meta.init_file.display()))?;
+        if bytes.len() != meta.total_params * 4 {
+            bail!(
+                "{}: init file holds {} bytes, want {}",
+                meta.name,
+                bytes.len(),
+                meta.total_params * 4
+            );
+        }
+        let mut out = Vec::with_capacity(meta.params.len());
+        let mut off = 0usize;
+        for spec in &meta.params {
+            let n = spec.numel();
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(crate::tensor::Tensor::new(data, spec.shape.clone()));
+        }
+        Ok(out)
+    }
+}
+
+/// Default artifacts directory: $ACCORDION_ARTIFACTS or `<crate>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("ACCORDION_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_artifacts_dir().join("metadata.json").exists()
+    }
+
+    #[test]
+    fn loads_manifest_and_init() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = Registry::load(default_artifacts_dir()).unwrap();
+        assert!(reg.models.contains_key("mlp_c10"));
+        let m = reg.model("resnet_c100").unwrap();
+        assert_eq!(m.num_classes, 100);
+        assert!(m.params.iter().any(|p| p.compressible()));
+        assert!(m.params.iter().any(|p| !p.compressible()));
+        let init = reg.load_init(m).unwrap();
+        assert_eq!(init.len(), m.n_layers());
+        let total: usize = init.iter().map(|t| t.numel()).sum();
+        assert_eq!(total, m.total_params);
+        // init should not be all zeros (weights) but contain zeros (biases)
+        assert!(init.iter().any(|t| t.sqnorm() > 0.0));
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let reg = Registry::load(default_artifacts_dir()).unwrap();
+        assert!(reg.model("nope").is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! Optimizer + LR schedule substrate.
+//!
+//! SGD with (Nesterov) momentum and weight decay — the paper's optimizer
+//! for every experiment (App. A, Table 7) — plus its LR schedule: linear
+//! warmup from the base LR to `base * global_batch / batch_ref`, step
+//! decays at fixed epochs, and the linear batch-size scaling rule Goyal
+//! et al. [14] that Accordion applies when it switches batch size.
+
+use crate::tensor::Tensor;
+
+/// SGD + momentum.  `velocity` is lazily sized on the first step.
+pub struct Sgd {
+    pub momentum: f32,
+    pub nesterov: bool,
+    pub weight_decay: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32, nesterov: bool, weight_decay: f32) -> Sgd {
+        Sgd { momentum, nesterov, weight_decay, velocity: Vec::new() }
+    }
+
+    /// One update: params[l] -= lr * d[l] with momentum buffers, matching
+    /// torch.optim.SGD semantics (velocity holds grad+wd accumulation).
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        if self.velocity.len() != params.len() {
+            self.velocity = params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        }
+        for (l, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let v = &mut self.velocity[l];
+            for i in 0..p.numel() {
+                let mut d = g.data[i] + self.weight_decay * p.data[i];
+                v[i] = self.momentum * v[i] + d;
+                if self.nesterov {
+                    d += self.momentum * v[i];
+                } else {
+                    d = v[i];
+                }
+                p.data[i] -= lr * d;
+            }
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.velocity.clear();
+    }
+}
+
+/// Piecewise LR schedule: warmup then step decays.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    /// LR before scaling (the paper's 0.1 for batch 128)
+    pub base: f32,
+    /// linear-scaling multiplier: global_batch / batch_ref
+    pub scale: f32,
+    pub warmup_epochs: usize,
+    pub decay_epochs: Vec<usize>,
+    pub decay_factor: f32,
+}
+
+impl LrSchedule {
+    /// LR for `epoch` (0-based).  Warmup starts at `base` and rises
+    /// linearly to `base*scale` over `warmup_epochs` (Goyal et al.).
+    pub fn lr(&self, epoch: usize) -> f32 {
+        let peak = self.base * self.scale;
+        let mut lr = if self.warmup_epochs > 0 && epoch < self.warmup_epochs {
+            self.base + (peak - self.base) * (epoch as f32 / self.warmup_epochs as f32)
+        } else {
+            peak
+        };
+        for &d in &self.decay_epochs {
+            if epoch >= d {
+                lr *= self.decay_factor;
+            }
+        }
+        lr
+    }
+
+    /// True iff a decay milestone falls in (epoch, epoch+window].
+    pub fn decays_within(&self, epoch: usize, window: usize) -> bool {
+        self.decay_epochs.iter().any(|&d| d > epoch && d <= epoch + window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        let n = v.len();
+        Tensor::new(v, vec![n])
+    }
+
+    #[test]
+    fn sgd_vanilla_matches_hand_calc() {
+        let mut opt = Sgd::new(0.0, false, 0.0);
+        let mut p = [t(vec![1.0, 2.0])];
+        opt.step(&mut p, &[t(vec![0.5, -1.0])], 0.1);
+        assert_eq!(p[0].data, vec![0.95, 2.1]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(0.9, false, 0.0);
+        let mut p = [t(vec![0.0])];
+        opt.step(&mut p, &[t(vec![1.0])], 1.0); // v=1, p=-1
+        opt.step(&mut p, &[t(vec![1.0])], 1.0); // v=1.9, p=-2.9
+        assert!((p[0].data[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nesterov_lookahead() {
+        let mut opt = Sgd::new(0.9, true, 0.0);
+        let mut p = [t(vec![0.0])];
+        opt.step(&mut p, &[t(vec![1.0])], 1.0);
+        // v=1; d = g + mu*v = 1.9; p = -1.9
+        assert!((p[0].data[0] + 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let mut opt = Sgd::new(0.0, false, 0.1);
+        let mut p = [t(vec![1.0])];
+        opt.step(&mut p, &[t(vec![0.0])], 0.5);
+        assert!((p[0].data[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn schedule_warmup_and_decay() {
+        let s = LrSchedule {
+            base: 0.1,
+            scale: 4.0,
+            warmup_epochs: 5,
+            decay_epochs: vec![15, 25],
+            decay_factor: 0.1,
+        };
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!(s.lr(2) > s.lr(1));
+        assert!((s.lr(5) - 0.4).abs() < 1e-6);
+        assert!((s.lr(15) - 0.04).abs() < 1e-6);
+        assert!((s.lr(25) - 0.004).abs() < 1e-6);
+        assert!(s.decays_within(14, 1));
+        assert!(!s.decays_within(15, 1)); // decay already happened at 15
+        assert!(s.decays_within(13, 2));
+    }
+}

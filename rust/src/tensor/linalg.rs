@@ -1,0 +1,304 @@
+//! blas-lite: the dense kernels on the compression hot path.
+//!
+//! Shapes here are PowerSGD-shaped — `m` is `n x k` with small `r`-column
+//! partners — so the kernels are written for the tall-skinny regime:
+//! row-major streaming over `m` with the tiny `r`-wide accumulators kept
+//! in registers.  Correctness is pinned by unit tests against naive
+//! implementations and (via the compressor round) by parity tests against
+//! the L1 Pallas artifacts.
+
+/// y[n,r] = m[n,k] @ q[k,r]   (PowerSGD projection)
+///
+/// Dispatches to const-R specializations for the ranks PowerSGD actually
+/// uses (1, 2, 4) — the §Perf pass measured the generic path (kept below
+/// as [`gemm_nk_kr_generic`] for the A/B bench) at ~2-3x slower because
+/// the R-wide accumulator cannot live in registers when R is dynamic.
+pub fn gemm_nk_kr(m: &[f32], q: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
+    match r {
+        1 => {
+            debug_assert_eq!(out.len(), n);
+            for i in 0..n {
+                out[i] = dot(&m[i * k..(i + 1) * k], &q[..k]);
+            }
+        }
+        2 => gemm_nk_kr_const::<2>(m, q, n, k, out),
+        4 => gemm_nk_kr_const::<4>(m, q, n, k, out),
+        _ => gemm_nk_kr_generic(m, q, n, k, r, out),
+    }
+}
+
+fn gemm_nk_kr_const<const R: usize>(m: &[f32], q: &[f32], n: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(m.len(), n * k);
+    debug_assert_eq!(q.len(), k * R);
+    debug_assert_eq!(out.len(), n * R);
+    for i in 0..n {
+        let row = &m[i * k..(i + 1) * k];
+        let mut acc = [0.0f32; R];
+        for (a, qrow) in row.iter().zip(q.chunks_exact(R)) {
+            for j in 0..R {
+                acc[j] += a * qrow[j];
+            }
+        }
+        out[i * R..(i + 1) * R].copy_from_slice(&acc);
+    }
+}
+
+/// Generic-R reference path (pre-optimization baseline; see §Perf).
+pub fn gemm_nk_kr_generic(m: &[f32], q: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
+    debug_assert_eq!(m.len(), n * k);
+    debug_assert_eq!(q.len(), k * r);
+    debug_assert_eq!(out.len(), n * r);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..n {
+        let row = &m[i * k..(i + 1) * k];
+        let acc = &mut out[i * r..(i + 1) * r];
+        for (a, qrow) in row.iter().zip(q.chunks_exact(r)) {
+            for (o, b) in acc.iter_mut().zip(qrow) {
+                *o += a * b;
+            }
+        }
+    }
+}
+
+/// y[k,r] = m[n,k]ᵀ @ p[n,r]   (PowerSGD back-projection)
+///
+/// Same const-R dispatch as [`gemm_nk_kr`]; the broadcast of the tiny
+/// `p` row into R registers is the win here.
+pub fn gemm_tn_kr(m: &[f32], p: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
+    match r {
+        1 => gemm_tn_kr_const::<1>(m, p, n, k, out),
+        2 => gemm_tn_kr_const::<2>(m, p, n, k, out),
+        4 => gemm_tn_kr_const::<4>(m, p, n, k, out),
+        _ => gemm_tn_kr_generic(m, p, n, k, r, out),
+    }
+}
+
+fn gemm_tn_kr_const<const R: usize>(m: &[f32], p: &[f32], n: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(m.len(), n * k);
+    debug_assert_eq!(p.len(), n * R);
+    debug_assert_eq!(out.len(), k * R);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..n {
+        let row = &m[i * k..(i + 1) * k];
+        let mut pr = [0.0f32; R];
+        pr.copy_from_slice(&p[i * R..(i + 1) * R]);
+        for (a, orow) in row.iter().zip(out.chunks_exact_mut(R)) {
+            for j in 0..R {
+                orow[j] += a * pr[j];
+            }
+        }
+    }
+}
+
+/// Generic-R reference path (pre-optimization baseline; see §Perf).
+pub fn gemm_tn_kr_generic(m: &[f32], p: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
+    debug_assert_eq!(m.len(), n * k);
+    debug_assert_eq!(p.len(), n * r);
+    debug_assert_eq!(out.len(), k * r);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..n {
+        let row = &m[i * k..(i + 1) * k];
+        let pr = &p[i * r..(i + 1) * r];
+        for (a, orow) in row.iter().zip(out.chunks_exact_mut(r)) {
+            for (o, b) in orow.iter_mut().zip(pr) {
+                *o += a * b;
+            }
+        }
+    }
+}
+
+/// y[n,k] = p[n,r] @ q[k,r]ᵀ   (PowerSGD decompression)
+pub fn gemm_nr_rk(p: &[f32], q: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
+    match r {
+        1 => gemm_nr_rk_const::<1>(p, q, n, k, out),
+        2 => gemm_nr_rk_const::<2>(p, q, n, k, out),
+        4 => gemm_nr_rk_const::<4>(p, q, n, k, out),
+        _ => gemm_nr_rk_generic(p, q, n, k, r, out),
+    }
+}
+
+fn gemm_nr_rk_const<const R: usize>(p: &[f32], q: &[f32], n: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(p.len(), n * R);
+    debug_assert_eq!(q.len(), k * R);
+    debug_assert_eq!(out.len(), n * k);
+    for i in 0..n {
+        let mut pr = [0.0f32; R];
+        pr.copy_from_slice(&p[i * R..(i + 1) * R]);
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (o, qrow) in orow.iter_mut().zip(q.chunks_exact(R)) {
+            let mut s = 0.0f32;
+            for j in 0..R {
+                s += pr[j] * qrow[j];
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Generic-R reference path (pre-optimization baseline; see §Perf).
+pub fn gemm_nr_rk_generic(p: &[f32], q: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
+    debug_assert_eq!(p.len(), n * r);
+    debug_assert_eq!(q.len(), k * r);
+    debug_assert_eq!(out.len(), n * k);
+    for i in 0..n {
+        let pr = &p[i * r..(i + 1) * r];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (o, qrow) in orow.iter_mut().zip(q.chunks_exact(r)) {
+            *o = dot(pr, qrow);
+        }
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane unrolled accumulation: lets LLVM vectorize without fast-math
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let ai = &a[i * 4..i * 4 + 4];
+        let bi = &b[i * 4..i * 4 + 4];
+        acc[0] += ai[0] * bi[0];
+        acc[1] += ai[1] * bi[1];
+        acc[2] += ai[2] * bi[2];
+        acc[3] += ai[3] * bi[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn sqnorm(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// In-place column-wise modified Gram–Schmidt on p[n,r] (row-major),
+/// matching `ref.orthonormalize` (eps inside the division).
+pub fn orthonormalize_cols(p: &mut [f32], n: usize, r: usize, eps: f32) {
+    debug_assert_eq!(p.len(), n * r);
+    for j in 0..r {
+        // subtract projections onto previous columns
+        for prev in 0..j {
+            let mut d = 0.0f32;
+            for i in 0..n {
+                d += p[i * r + prev] * p[i * r + j];
+            }
+            for i in 0..n {
+                p[i * r + j] -= d * p[i * r + prev];
+            }
+        }
+        let mut sq = 0.0f32;
+        for i in 0..n {
+            sq += p[i * r + j] * p[i * r + j];
+        }
+        let inv = 1.0 / (sq.sqrt() + eps);
+        for i in 0..n {
+            p[i * r + j] *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn naive_gemm(a: &[f32], b: &[f32], n: usize, k: usize, r: usize) -> Vec<f32> {
+        let mut out = vec![0.0; n * r];
+        for i in 0..n {
+            for j in 0..r {
+                for l in 0..k {
+                    out[i * r + j] += a[i * k + l] * b[l * r + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemms_match_naive() {
+        prop::check("gemm", 40, |rng| {
+            let n = prop::dim(rng, 1, 24);
+            let k = prop::dim(rng, 1, 24);
+            let r = prop::dim(rng, 1, 4);
+            let m = prop::vecf(rng, n * k, 1.0);
+            let q = prop::vecf(rng, k * r, 1.0);
+            let p = prop::vecf(rng, n * r, 1.0);
+
+            let mut out = vec![0.0; n * r];
+            gemm_nk_kr(&m, &q, n, k, r, &mut out);
+            close(&out, &naive_gemm(&m, &q, n, k, r), 1e-5);
+
+            // mᵀ p: naive with transposed m
+            let mut mt = vec![0.0; n * k];
+            for i in 0..n {
+                for j in 0..k {
+                    mt[j * n + i] = m[i * k + j];
+                }
+            }
+            let mut out2 = vec![0.0; k * r];
+            gemm_tn_kr(&m, &p, n, k, r, &mut out2);
+            close(&out2, &naive_gemm(&mt, &p, k, n, r), 1e-4);
+
+            // p qᵀ: naive with transposed q
+            let mut qt = vec![0.0; k * r];
+            for i in 0..k {
+                for j in 0..r {
+                    qt[j * k + i] = q[i * r + j];
+                }
+            }
+            let mut out3 = vec![0.0; n * k];
+            gemm_nr_rk(&p, &q, n, k, r, &mut out3);
+            close(&out3, &naive_gemm(&p, &qt, n, r, k), 1e-5);
+        });
+    }
+
+    #[test]
+    fn dot_axpy() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+        let mut y = [1.0f32; 5];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0, 9.0, 11.0]);
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormal() {
+        prop::check("gs", 30, |rng: &mut Rng| {
+            let n = prop::dim(rng, 4, 32);
+            let r = prop::dim(rng, 1, 4);
+            let mut p = prop::vecf(rng, n * r, 1.0);
+            orthonormalize_cols(&mut p, n, r, 1e-8);
+            for a in 0..r {
+                for b in 0..r {
+                    let mut d = 0.0;
+                    for i in 0..n {
+                        d += p[i * r + a] * p[i * r + b];
+                    }
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    assert!((d - want).abs() < 1e-3, "gram[{a}{b}]={d}");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,94 @@
+//! Flat f32 tensors + the small dense-linear-algebra kernel set the
+//! compression hot path needs (gemm-lite, axpy, norms, Gram–Schmidt).
+//!
+//! PowerSGD views every >=2-d parameter as a matrix with `cols = last
+//! dim` and `rows = numel / cols` (conv HWIO kernels flatten to
+//! `(kh*kw*cin) x cout`), matching the reference implementation and the
+//! L2 parameter layout exported in metadata.json.
+
+pub mod linalg;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// PowerSGD matrix view dims: (rows, cols) with cols = trailing dim.
+    /// Returns None for 0/1-d tensors (sent uncompressed).
+    pub fn matrix_dims(&self) -> Option<(usize, usize)> {
+        if self.shape.len() < 2 {
+            return None;
+        }
+        let cols = *self.shape.last().unwrap();
+        if cols == 0 || self.numel() == 0 {
+            return None;
+        }
+        Some((self.numel() / cols, cols))
+    }
+
+    pub fn sqnorm(&self) -> f32 {
+        linalg::sqnorm(&self.data)
+    }
+
+    pub fn scale(&mut self, a: f32) {
+        for v in &mut self.data {
+            *v *= a;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.numel(), other.numel());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_dims_convention() {
+        // conv HWIO [3,3,8,16] -> (72, 16)
+        let t = Tensor::zeros(&[3, 3, 8, 16]);
+        assert_eq!(t.matrix_dims(), Some((72, 16)));
+        // dense [in, out]
+        let t = Tensor::zeros(&[128, 10]);
+        assert_eq!(t.matrix_dims(), Some((128, 10)));
+        // bias -> uncompressible
+        let t = Tensor::zeros(&[64]);
+        assert_eq!(t.matrix_dims(), None);
+    }
+
+    #[test]
+    fn ops() {
+        let mut a = Tensor::new(vec![1.0, 2.0], vec![2]);
+        let b = Tensor::new(vec![3.0, -1.0], vec![2]);
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![4.0, 1.0]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![2.0, 0.5]);
+        assert!((a.sqnorm() - 4.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,137 @@
+//! Checkpointing: persist/restore trained parameters.
+//!
+//! Format: `<path>.json` header (model, epoch, total params) +
+//! `<path>.bin` raw f32 little-endian in metadata param order — the same
+//! layout as the AOT init snapshots, so a checkpoint can seed any run of
+//! the same model (`accordion train --set ...` after `--save`, or
+//! `accordion eval --ckpt`).
+
+use crate::models::ModelMeta;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+
+pub fn save(path: &str, meta: &ModelMeta, epoch: usize, params: &[Tensor]) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let total: usize = params.iter().map(|p| p.numel()).sum();
+    if total != meta.total_params {
+        bail!("checkpoint param count {total} != model {}", meta.total_params);
+    }
+    let header = json::obj(vec![
+        ("model", json::s(&meta.name)),
+        ("epoch", json::num(epoch as f64)),
+        ("total_params", json::num(total as f64)),
+        ("version", json::num(1.0)),
+    ]);
+    std::fs::write(format!("{path}.json"), header.to_string())?;
+    let mut f = std::fs::File::create(format!("{path}.bin"))?;
+    for p in params {
+        for v in &p.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &str, meta: &ModelMeta) -> Result<Vec<Tensor>> {
+    let header = Json::parse(
+        &std::fs::read_to_string(format!("{path}.json"))
+            .with_context(|| format!("reading {path}.json"))?,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let model = header.get("model").and_then(|v| v.as_str()).unwrap_or("");
+    if model != meta.name {
+        bail!("checkpoint is for model '{model}', not '{}'", meta.name);
+    }
+    let bytes = std::fs::read(format!("{path}.bin"))?;
+    if bytes.len() != meta.total_params * 4 {
+        bail!(
+            "checkpoint holds {} bytes, model needs {}",
+            bytes.len(),
+            meta.total_params * 4
+        );
+    }
+    let mut out = Vec::with_capacity(meta.params.len());
+    let mut off = 0usize;
+    for spec in &meta.params {
+        let n = spec.numel();
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+            data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        off += n;
+        out.push(Tensor::new(data, spec.shape.clone()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ParamSpec;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "toy".into(),
+            task: "classify".into(),
+            input_shape: vec![4],
+            input_dtype: "f32".into(),
+            num_classes: 2,
+            batch: 2,
+            seq_len: 0,
+            total_params: 6,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![2, 2], kind: "matrix".into() },
+                ParamSpec { name: "b".into(), shape: vec![2], kind: "vector".into() },
+            ],
+            train_artifact: "/nonexistent".into(),
+            eval_artifact: "/nonexistent".into(),
+            hvp_artifact: None,
+            init_file: "/nonexistent".into(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = meta();
+        let params = vec![
+            Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]),
+            Tensor::new(vec![-1.0, 0.5], vec![2]),
+        ];
+        let dir = std::env::temp_dir().join("accordion-ckpt-test");
+        let path = dir.join("ck").to_str().unwrap().to_string();
+        save(&path, &m, 7, &params).unwrap();
+        let back = load(&path, &m).unwrap();
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn wrong_model_rejected() {
+        let m = meta();
+        let params = vec![
+            Tensor::new(vec![0.0; 4], vec![2, 2]),
+            Tensor::new(vec![0.0; 2], vec![2]),
+        ];
+        let dir = std::env::temp_dir().join("accordion-ckpt-test2");
+        let path = dir.join("ck").to_str().unwrap().to_string();
+        save(&path, &m, 0, &params).unwrap();
+        let mut other = meta();
+        other.name = "different".into();
+        assert!(load(&path, &other).is_err());
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let m = meta();
+        let params = vec![Tensor::new(vec![0.0; 4], vec![2, 2])]; // missing b
+        let dir = std::env::temp_dir().join("accordion-ckpt-test3");
+        let path = dir.join("ck").to_str().unwrap().to_string();
+        assert!(save(&path, &m, 0, &params).is_err());
+    }
+}

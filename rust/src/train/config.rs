@@ -1,0 +1,314 @@
+//! Experiment configuration: a typed view over the TOML-subset tables
+//! (`configs/*.toml` + `--set` overrides) with paper-faithful defaults.
+
+use crate::compress::{DistCompressor, Level, NoCompression};
+use crate::compress::{powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd, topk::TopK};
+use crate::coordinator::{
+    accordion::Accordion, adaqs::AdaQs, schedule::ManualSchedule, schedule::Rule,
+    smith::SmithSchedule, Controller, StaticLevel,
+};
+use crate::util::toml::Table;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub enum MethodCfg {
+    None,
+    PowerSgd { rank_low: usize, rank_high: usize },
+    TopK { frac_low: f32, frac_high: f32 },
+    RandomK { frac_low: f32, frac_high: f32 },
+    Qsgd { bits_low: u32, bits_high: u32 },
+    /// 1-bit sign compression (no level knob; ablation baseline)
+    SignSgd,
+}
+
+#[derive(Clone, Debug)]
+pub enum ControllerCfg {
+    /// fixed level: "low" | "high" | explicit rank/frac
+    Static(Level),
+    /// fixed large batch (batch-size tables' static baselines)
+    StaticBatch { mult: usize },
+    Accordion { eta: f32, interval: usize },
+    AccordionBatch { eta: f32, interval: usize, mult: usize },
+    /// Fig. 1/2 oracle schedules
+    Manual { head: usize, tail: usize, level_in: Level, level_out: Level },
+    /// Fig. 4b oracle batch schedule: small batch inside these epoch
+    /// ranges, `mult`x outside (constructed programmatically)
+    ManualBatch { small: Vec<(usize, usize)>, mult: usize },
+    AdaQs { rank_start: usize, rank_max: usize, drop: f32, interval: usize },
+    Smith { factor: usize, cap: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub label: String,
+    pub model: String,
+    pub workers: usize,
+    pub epochs: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub seed: u64,
+    /// synthetic-data difficulty knobs (DESIGN.md §2)
+    pub data_sep: f32,
+    pub data_noise: f32,
+    // optimizer (paper App. A, Table 7)
+    pub base_lr: f32,
+    pub batch_ref: usize,
+    pub momentum: f32,
+    pub nesterov: bool,
+    pub weight_decay: f32,
+    pub warmup_epochs: usize,
+    pub decay_epochs: Vec<usize>,
+    pub decay_factor: f32,
+    pub method: MethodCfg,
+    pub controller: ControllerCfg,
+    // network model
+    pub bandwidth_mbps: f64,
+    pub latency_us: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            label: "run".into(),
+            model: "resnet_c10".into(),
+            workers: 4,
+            epochs: 30,
+            train_size: 2048,
+            test_size: 512,
+            seed: 42,
+            data_sep: 0.4,
+            data_noise: 1.0,
+            base_lr: 0.1,
+            batch_ref: 64,
+            momentum: 0.9,
+            nesterov: true,
+            weight_decay: 5e-4,
+            warmup_epochs: 2,
+            // paper decays at 150/250 of 300; same fractions of 30
+            decay_epochs: vec![15, 25],
+            decay_factor: 0.1,
+            method: MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+            controller: ControllerCfg::Accordion { eta: 0.5, interval: 2 },
+            bandwidth_mbps: 100.0,
+            latency_us: 50.0,
+        }
+    }
+}
+
+fn parse_level(s: &str) -> Result<Level> {
+    Ok(match s {
+        "low" => Level::Low,
+        "high" => Level::High,
+        _ if s.starts_with("rank") => Level::Rank(s[4..].parse()?),
+        _ if s.starts_with("frac") => Level::Frac(s[4..].parse()?),
+        _ => bail!("unknown level '{s}' (low|high|rankN|fracF)"),
+    })
+}
+
+impl TrainConfig {
+    /// Build from a parsed TOML table (all keys optional).
+    pub fn from_table(t: &Table) -> Result<TrainConfig> {
+        let d = TrainConfig::default();
+        let method = match t.str_or("method.kind", "powersgd").as_str() {
+            "none" => MethodCfg::None,
+            "powersgd" => MethodCfg::PowerSgd {
+                rank_low: t.usize_or("method.rank_low", 2),
+                rank_high: t.usize_or("method.rank_high", 1),
+            },
+            "topk" => MethodCfg::TopK {
+                frac_low: t.f64_or("method.k_low", 0.99) as f32,
+                frac_high: t.f64_or("method.k_high", 0.10) as f32,
+            },
+            "randomk" => MethodCfg::RandomK {
+                frac_low: t.f64_or("method.k_low", 0.99) as f32,
+                frac_high: t.f64_or("method.k_high", 0.10) as f32,
+            },
+            "qsgd" => MethodCfg::Qsgd {
+                bits_low: t.usize_or("method.bits_low", 8) as u32,
+                bits_high: t.usize_or("method.bits_high", 2) as u32,
+            },
+            "signsgd" => MethodCfg::SignSgd,
+            other => bail!("unknown method '{other}'"),
+        };
+        let controller = match t.str_or("controller.kind", "accordion").as_str() {
+            "static" => ControllerCfg::Static(parse_level(&t.str_or("controller.level", "low"))?),
+            "static_batch" => ControllerCfg::StaticBatch {
+                mult: t.usize_or("controller.mult", 8),
+            },
+            "accordion" => ControllerCfg::Accordion {
+                eta: t.f64_or("controller.eta", 0.5) as f32,
+                interval: t.usize_or("controller.interval", 2),
+            },
+            "accordion_batch" => ControllerCfg::AccordionBatch {
+                eta: t.f64_or("controller.eta", 0.5) as f32,
+                interval: t.usize_or("controller.interval", 2),
+                mult: t.usize_or("controller.mult", 8),
+            },
+            "manual" => ControllerCfg::Manual {
+                head: t.usize_or("controller.head", 5),
+                tail: t.usize_or("controller.tail", 3),
+                level_in: parse_level(&t.str_or("controller.level_in", "low"))?,
+                level_out: parse_level(&t.str_or("controller.level_out", "high"))?,
+            },
+            "adaqs" => ControllerCfg::AdaQs {
+                rank_start: t.usize_or("controller.rank_start", 1),
+                rank_max: t.usize_or("controller.rank_max", 4),
+                drop: t.f64_or("controller.drop", 0.3) as f32,
+                interval: t.usize_or("controller.interval", 2),
+            },
+            "smith" => ControllerCfg::Smith {
+                factor: t.usize_or("controller.factor", 5),
+                cap: t.usize_or("controller.cap", 32),
+            },
+            other => bail!("unknown controller '{other}'"),
+        };
+        Ok(TrainConfig {
+            label: t.str_or("label", &d.label),
+            model: t.str_or("model", &d.model),
+            workers: t.usize_or("workers", d.workers),
+            epochs: t.usize_or("epochs", d.epochs),
+            train_size: t.usize_or("data.train_size", d.train_size),
+            test_size: t.usize_or("data.test_size", d.test_size),
+            seed: t.usize_or("seed", d.seed as usize) as u64,
+            data_sep: t.f64_or("data.sep", d.data_sep as f64) as f32,
+            data_noise: t.f64_or("data.noise", d.data_noise as f64) as f32,
+            base_lr: t.f64_or("train.base_lr", d.base_lr as f64) as f32,
+            batch_ref: t.usize_or("train.batch_ref", d.batch_ref),
+            momentum: t.f64_or("train.momentum", d.momentum as f64) as f32,
+            nesterov: t.bool_or("train.nesterov", d.nesterov),
+            weight_decay: t.f64_or("train.weight_decay", d.weight_decay as f64) as f32,
+            warmup_epochs: t.usize_or("train.warmup_epochs", d.warmup_epochs),
+            decay_epochs: t
+                .get("train.decay_epochs")
+                .and_then(|v| v.as_usize_arr())
+                .unwrap_or(d.decay_epochs),
+            decay_factor: t.f64_or("train.decay_factor", d.decay_factor as f64) as f32,
+            method,
+            controller,
+            bandwidth_mbps: t.f64_or("net.bandwidth_mbps", d.bandwidth_mbps),
+            latency_us: t.f64_or("net.latency_us", d.latency_us),
+        })
+    }
+
+    /// Shrink for smoke tests / `--fast` runs.
+    pub fn fast(mut self) -> TrainConfig {
+        self.epochs = 8;
+        self.train_size = 512;
+        self.test_size = 128;
+        self.decay_epochs = vec![4, 6];
+        self.warmup_epochs = 1;
+        if let ControllerCfg::Accordion { ref mut interval, .. }
+        | ControllerCfg::AccordionBatch { ref mut interval, .. } = self.controller
+        {
+            *interval = 1;
+        }
+        self
+    }
+
+    pub fn build_compressor(&self) -> Box<dyn DistCompressor> {
+        match self.method {
+            MethodCfg::None => Box::new(NoCompression),
+            MethodCfg::PowerSgd { rank_low, rank_high } => {
+                Box::new(PowerSgd::new(self.workers, rank_low, rank_high, self.seed))
+            }
+            MethodCfg::TopK { frac_low, frac_high } => {
+                Box::new(TopK::new(self.workers, frac_low, frac_high))
+            }
+            MethodCfg::RandomK { frac_low, frac_high } => {
+                Box::new(RandomK::new(self.workers, frac_low, frac_high, self.seed))
+            }
+            MethodCfg::Qsgd { bits_low, bits_high } => {
+                Box::new(Qsgd::new(self.workers, bits_low, bits_high, self.seed))
+            }
+            MethodCfg::SignSgd => Box::new(SignSgd::new(self.workers)),
+        }
+    }
+
+    pub fn build_controller(&self, n_layers: usize) -> Box<dyn Controller> {
+        match self.controller {
+            ControllerCfg::Static(level) => Box::new(StaticLevel::new(n_layers, level)),
+            ControllerCfg::StaticBatch { mult } => {
+                Box::new(StaticLevel::with_batch(n_layers, mult))
+            }
+            ControllerCfg::Accordion { eta, interval } => {
+                Box::new(Accordion::new(n_layers, eta, interval))
+            }
+            ControllerCfg::AccordionBatch { eta, interval, mult } => {
+                Box::new(Accordion::batch_mode(n_layers, eta, interval, mult))
+            }
+            ControllerCfg::Manual { head, tail, level_in, level_out } => {
+                let mut rules = vec![Rule { start: 0, end: head, level: level_in }];
+                for &dep in &self.decay_epochs {
+                    rules.push(Rule { start: dep, end: dep + tail, level: level_in });
+                }
+                Box::new(ManualSchedule::new(n_layers, rules, level_out, "critical-regions"))
+            }
+            ControllerCfg::ManualBatch { ref small, mult } => {
+                Box::new(crate::coordinator::schedule::ManualBatch {
+                    n_layers,
+                    small: small.clone(),
+                    mult,
+                })
+            }
+            ControllerCfg::AdaQs { rank_start, rank_max, drop, interval } => {
+                Box::new(AdaQs::new(n_layers, rank_start, rank_max, drop, interval))
+            }
+            ControllerCfg::Smith { factor, cap } => Box::new(SmithSchedule::new(
+                n_layers,
+                self.decay_epochs.clone(),
+                factor,
+                cap,
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_table_parsing() {
+        let t = Table::parse(
+            r#"
+model = "vgg_c100"
+epochs = 12
+[method]
+kind = "topk"
+k_low = 0.99
+k_high = 0.25
+[controller]
+kind = "accordion"
+eta = 0.5
+interval = 3
+[net]
+bandwidth_mbps = 250.0
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.model, "vgg_c100");
+        assert_eq!(c.epochs, 12);
+        assert!(matches!(c.method, MethodCfg::TopK { frac_low, .. } if (frac_low - 0.99).abs() < 1e-6));
+        assert!(matches!(c.controller, ControllerCfg::Accordion { interval: 3, .. }));
+        assert_eq!(c.bandwidth_mbps, 250.0);
+    }
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("low").unwrap(), Level::Low);
+        assert_eq!(parse_level("rank3").unwrap(), Level::Rank(3));
+        assert_eq!(parse_level("frac0.5").unwrap(), Level::Frac(0.5));
+        assert!(parse_level("bogus").is_err());
+    }
+
+    #[test]
+    fn builders_produce_right_impls() {
+        let c = TrainConfig::default();
+        assert!(c.build_compressor().name().starts_with("powersgd"));
+        assert!(c.build_controller(5).name().starts_with("accordion"));
+        let mut c2 = TrainConfig::default();
+        c2.controller = ControllerCfg::Smith { factor: 5, cap: 10 };
+        assert!(c2.build_controller(5).name().starts_with("smith"));
+    }
+}

@@ -1,0 +1,299 @@
+//! The distributed training loop: the L3 hot path.
+//!
+//! Per global step (bulk-synchronous, N logical workers):
+//!   1. each worker executes the AOT train-step HLO on its data shard
+//!      (PJRT; `batch_mult` micro-steps are accumulated for large-batch
+//!      mode, exactly like the paper's App. A gradient-accumulation
+//!      simulation);
+//!   2. per layer: 1-d params are all-reduced raw; >=2-d params go
+//!      through the configured compressor at the level the controller
+//!      chose for this epoch;
+//!   3. a single SGD step applies the aggregated gradient (synchronous
+//!      data-parallel keeps replicas identical, so one parameter copy is
+//!      exact — DESIGN.md §3).
+//!
+//! Per epoch: a held-out evaluation, the Δ-norm observation for the
+//! controller (Accordion's detector input), and a metrics row.
+
+pub mod checkpoint;
+pub mod config;
+
+use crate::cluster::network::NetworkModel;
+use crate::collectives::Comm;
+use crate::compress::Level;
+use crate::coordinator::EpochObs;
+use crate::data::{Batch, Dataset, EpochSampler};
+use crate::metrics::{EpochStats, RunLog, SimClock};
+use crate::models::Registry;
+use crate::optim::{LrSchedule, Sgd};
+use crate::runtime::{ModelPrograms, Runtime};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use config::{MethodCfg, TrainConfig};
+use std::time::Instant;
+
+/// Build the dataset a model variant trains on (classes/dims from the
+/// manifest, sizes/difficulty from the config).
+pub fn dataset_for(cfg: &TrainConfig, reg: &Registry) -> Result<Dataset> {
+    let meta = reg.model(&cfg.model)?;
+    Ok(if meta.is_lm() {
+        Dataset::text(
+            &format!("{}-text", cfg.model),
+            meta.num_classes,
+            cfg.train_size * (meta.seq_len + 1),
+            cfg.test_size * (meta.seq_len + 1),
+            meta.seq_len,
+            cfg.seed,
+        )
+    } else {
+        Dataset::images(
+            &format!("{}-img", cfg.model),
+            meta.num_classes,
+            meta.input_numel(),
+            cfg.train_size,
+            cfg.test_size,
+            cfg.data_sep,
+            cfg.data_noise,
+            cfg.seed,
+        )
+    })
+}
+
+/// Run one full training job; returns the per-epoch log.
+pub fn run(cfg: &TrainConfig, reg: &Registry, rt: &mut Runtime) -> Result<RunLog> {
+    run_full(cfg, reg, rt).map(|(log, _)| log)
+}
+
+/// Like [`run`] but also returns the final parameters (for
+/// checkpointing).
+pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &mut Runtime) -> Result<(RunLog, Vec<Tensor>)> {
+    let meta = reg.model(&cfg.model)?.clone();
+    let progs = ModelPrograms::new(&meta);
+    let mut params = reg.load_init(&meta)?;
+    let n_layers = meta.n_layers();
+    let ds = dataset_for(cfg, reg)?;
+
+    let mut compressor = cfg.build_compressor();
+    let mut controller = cfg.build_controller(n_layers);
+    let mut opt = Sgd::new(cfg.momentum, cfg.nesterov, cfg.weight_decay);
+    let global_batch = cfg.workers * meta.batch;
+    let sched = LrSchedule {
+        base: cfg.base_lr,
+        scale: global_batch as f32 / cfg.batch_ref as f32,
+        warmup_epochs: cfg.warmup_epochs,
+        decay_epochs: cfg.decay_epochs.clone(),
+        decay_factor: cfg.decay_factor,
+    };
+    let mut comm = Comm::new(NetworkModel::new(cfg.workers, cfg.bandwidth_mbps, cfg.latency_us));
+    let mut clock = SimClock::default();
+
+    // scratch (allocated once; the hot loop is allocation-free)
+    let mut worker_grads: Vec<Vec<Tensor>> =
+        vec![params.iter().map(|p| Tensor::zeros(&p.shape)).collect(); cfg.workers];
+    let mut agg: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+    let mut delta: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+
+    let mut log = RunLog { label: cfg.label.clone(), ..Default::default() };
+
+    // batch-switch LR ramp state: (previous multiplier, switch epoch).
+    // The paper scales the LR linearly with the batch (Goyal et al.) and
+    // warms it up rather than stepping instantly — we ramp the multiplier
+    // over RAMP_EPOCHS after each increase.
+    const RAMP_EPOCHS: usize = 3;
+    let mut ramp_from = 1usize;
+    let mut ramp_at = 0usize;
+    let mut last_mult = 1usize;
+
+    for epoch in 0..cfg.epochs {
+        let lr_curr = sched.lr(epoch);
+        let lr_next = sched.lr(epoch + 1);
+        let decision = controller.begin_epoch(epoch, lr_curr, lr_next);
+        let batch_mult = decision.batch_mult.max(1);
+        if batch_mult > last_mult {
+            ramp_from = last_mult;
+            ramp_at = epoch;
+        }
+        last_mult = batch_mult;
+        // linear LR scaling on batch switch, warmed up over RAMP_EPOCHS
+        let ramp_t = ((epoch - ramp_at) as f32 + 1.0) / RAMP_EPOCHS as f32;
+        let mult_eff = if batch_mult > ramp_from && ramp_t < 1.0 {
+            ramp_from as f32 + (batch_mult - ramp_from) as f32 * ramp_t
+        } else {
+            batch_mult as f32
+        };
+        let lr_eff = lr_curr * mult_eff;
+
+        let sampler = EpochSampler::new(ds.train_n, epoch, cfg.seed);
+        let micro_steps = sampler.steps(cfg.workers, meta.batch);
+        let global_steps = micro_steps / batch_mult;
+
+        let mut train_loss_sum = 0.0f64;
+        let mut train_loss_n = 0usize;
+        delta.iter_mut().for_each(|d| d.fill(0.0));
+
+        for s in 0..global_steps {
+            // 1. gradient computation (with accumulation for large batch)
+            for w in 0..cfg.workers {
+                for g in &mut worker_grads[w] {
+                    g.fill(0.0);
+                }
+            }
+            let mut step_compute = 0.0f64;
+            for a in 0..batch_mult {
+                let micro = s * batch_mult + a;
+                let mut worker_max = 0.0f64;
+                for w in 0..cfg.workers {
+                    let idx = sampler
+                        .shard(micro, w, cfg.workers, meta.batch)
+                        .expect("sampler bounds");
+                    let batch: Batch = ds.train_batch(&idx);
+                    let t0 = Instant::now();
+                    let (loss, grads) = progs.train_step(rt, &params, &batch)?;
+                    worker_max = worker_max.max(t0.elapsed().as_secs_f64());
+                    train_loss_sum += loss as f64;
+                    train_loss_n += 1;
+                    for (acc, g) in worker_grads[w].iter_mut().zip(&grads) {
+                        acc.add_assign(g);
+                    }
+                }
+                step_compute += worker_max;
+            }
+            if batch_mult > 1 {
+                let inv = 1.0 / batch_mult as f32;
+                for w in 0..cfg.workers {
+                    for g in &mut worker_grads[w] {
+                        g.scale(inv);
+                    }
+                }
+            }
+            clock.compute_secs += step_compute;
+
+            // 2. per-layer aggregation (compressor or raw all-reduce)
+            for l in 0..n_layers {
+                let views: Vec<&[f32]> = (0..cfg.workers)
+                    .map(|w| worker_grads[w][l].data.as_slice())
+                    .collect();
+                let compressible =
+                    meta.params[l].compressible() && !matches!(cfg.method, MethodCfg::None);
+                if compressible {
+                    compressor.round(
+                        l,
+                        &views,
+                        &meta.params[l].shape,
+                        decision.levels[l],
+                        &mut comm,
+                        &mut agg[l].data,
+                    );
+                } else {
+                    comm.allreduce_mean_into(&views, &mut agg[l].data);
+                }
+                // Δ accumulator for the detector (raw mean gradient)
+                let inv = 1.0 / cfg.workers as f32;
+                for w in 0..cfg.workers {
+                    crate::tensor::linalg::axpy(inv, &worker_grads[w][l].data, &mut delta[l].data);
+                }
+            }
+
+            // 3. optimizer
+            opt.step(&mut params, &agg, lr_eff);
+        }
+
+        // evaluation (not charged to the simulated training clock)
+        let (test_loss, test_acc) = evaluate(&progs, rt, &params, &ds, cfg, &meta)?;
+
+        // detector observation
+        let layer_sqnorms: Vec<f32> = delta.iter().map(|d| d.sqnorm()).collect();
+        let layer_abs_means: Vec<f32> = delta
+            .iter()
+            .map(|d| d.data.iter().map(|v| v.abs()).sum::<f32>() / d.numel().max(1) as f32)
+            .collect();
+        let layer_stds: Vec<f32> = delta
+            .iter()
+            .zip(&layer_sqnorms)
+            .map(|(d, sq)| {
+                let n = d.numel().max(1) as f32;
+                let mean = d.data.iter().sum::<f32>() / n;
+                (sq / n - mean * mean).max(0.0).sqrt()
+            })
+            .collect();
+        let model_sqnorm: f32 = layer_sqnorms.iter().sum();
+        let obs = EpochObs {
+            epoch,
+            layer_sqnorms,
+            layer_abs_means,
+            layer_stds,
+            model_sqnorm,
+            lr_curr,
+            lr_next,
+        };
+        controller.observe(&obs);
+
+        let n_comp = meta.params.iter().filter(|p| p.compressible()).count().max(1);
+        let n_low = meta
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(l, p)| p.compressible() && decision.levels[*l] == Level::Low)
+            .count();
+        log.level_trace.push(
+            meta.params
+                .iter()
+                .enumerate()
+                .map(|(l, _)| decision.levels[l] == Level::Low)
+                .collect(),
+        );
+        log.epochs.push(EpochStats {
+            epoch,
+            lr: lr_eff,
+            train_loss: (train_loss_sum / train_loss_n.max(1) as f64) as f32,
+            test_loss,
+            test_acc,
+            floats: comm.ledger.floats,
+            secs: clock.compute_secs + comm.ledger.secs,
+            grad_norm: model_sqnorm.sqrt(),
+            frac_low: n_low as f32 / n_comp as f32,
+            batch_mult,
+        });
+        log::info!(
+            "[{}] epoch {:>3} lr={:.4} loss={:.3} acc={:.3} floats={} t={:.1}s (mult x{})",
+            cfg.label,
+            epoch,
+            lr_eff,
+            log.epochs.last().unwrap().train_loss,
+            test_acc,
+            comm.ledger.floats,
+            clock.compute_secs + comm.ledger.secs,
+            batch_mult
+        );
+    }
+    Ok((log, params))
+}
+
+/// Held-out evaluation at the artifact's batch size.
+/// Returns (mean loss, accuracy) — accuracy is token-level for LM tasks.
+pub fn evaluate(
+    progs: &ModelPrograms,
+    rt: &mut Runtime,
+    params: &[Tensor],
+    ds: &Dataset,
+    _cfg: &TrainConfig,
+    meta: &crate::models::ModelMeta,
+) -> Result<(f32, f32)> {
+    let b = meta.batch;
+    let batches = ds.test_n / b;
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut total = 0.0f64;
+    for s in 0..batches {
+        let idx: Vec<usize> = (s * b..(s + 1) * b).collect();
+        let batch = ds.test_batch(&idx);
+        let (loss, corr) = progs.eval_step(rt, params, &batch)?;
+        loss_sum += loss as f64;
+        correct += corr as f64;
+        total += if meta.is_lm() { (b * meta.seq_len) as f64 } else { b as f64 };
+    }
+    Ok((
+        (loss_sum / batches.max(1) as f64) as f32,
+        (correct / total.max(1.0)) as f32,
+    ))
+}

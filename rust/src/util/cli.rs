@@ -1,0 +1,111 @@
+//! CLI argument substrate (offline image: no `clap`).
+//!
+//! `Args::parse` splits `argv` into a subcommand, `--key value` options
+//! (repeatable), bare `--flag`s, and positionals.  Option names are
+//! normalized (leading dashes stripped) so lookups use plain keys.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Option names that take a value; everything else starting with `--` is a flag.
+const VALUED: &[&str] = &[
+    "config", "set", "exp", "model", "epochs", "workers", "seed", "out",
+    "controller", "method", "rank-low", "rank-high", "k-low", "k-high",
+    "eta", "interval", "artifacts", "preset", "steps", "trials", "filter",
+    "save", "ckpt",
+];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if VALUED.contains(&name) && i + 1 < argv.len() {
+                    a.options
+                        .entry(name.to_string())
+                        .or_default()
+                        .push(argv[i + 1].clone());
+                    i += 2;
+                    continue;
+                }
+                // also accept --key=value for any key
+                if let Some(eq) = name.find('=') {
+                    a.options
+                        .entry(name[..eq].to_string())
+                        .or_default()
+                        .push(name[eq + 1..].to_string());
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else if a.command.is_none() {
+                a.command = Some(tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+    pub fn opts(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn usize_opt(&self, name: &str) -> Option<usize> {
+        self.opt(name).and_then(|s| s.parse().ok())
+    }
+    pub fn f64_opt(&self, name: &str) -> Option<f64> {
+        self.opt(name).and_then(|s| s.parse().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(&v(&[
+            "repro", "--exp", "table1", "--fast", "--set", "epochs=3", "--set",
+            "net.latency_us=10", "extra",
+        ]));
+        assert_eq!(a.command.as_deref(), Some("repro"));
+        assert_eq!(a.opt("exp"), Some("table1"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.opts("set"), vec!["epochs=3", "net.latency_us=10"]);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = Args::parse(&v(&["train", "--lr=0.4", "--quiet"]));
+        assert_eq!(a.opt("lr"), Some("0.4"));
+        assert!(a.flag("quiet"));
+    }
+}

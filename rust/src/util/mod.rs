@@ -1,0 +1,48 @@
+//! Infrastructure substrates the offline image forced us to own:
+//! RNG, JSON, TOML-subset config, CLI parsing, statistics, property
+//! testing, and a stderr logger for the `log` facade.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:5}] {}", record.level(), record.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the stderr logger.  Level comes from `ACCORDION_LOG`
+/// (error|warn|info|debug|trace), default `info`.  Idempotent.
+pub fn init_logging() {
+    let level = match std::env::var("ACCORDION_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+/// `Level::Info` gate helper used by hot loops to skip formatting cost.
+pub fn info_enabled() -> bool {
+    log::max_level() >= Level::Info
+}

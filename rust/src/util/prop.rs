@@ -1,0 +1,70 @@
+//! Property-testing substrate (offline image: no `proptest`).
+//!
+//! `check` runs a property against `iters` seeded random cases and, on
+//! failure, reports the failing case seed so it can be replayed with
+//! `check_seed`.  No shrinking — properties here draw small cases to
+//! begin with.  Used by `rust/tests/proptests.rs` and module unit tests.
+
+use super::rng::Rng;
+
+/// Run `prop` for `iters` random cases.  Panics with the failing seed.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, iters: usize, mut prop: F) {
+    let base = std::env::var("ACCORDION_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xACC0u64);
+    for case in 0..iters {
+        let seed = base.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed on case {case} (replay: ACCORDION_PROP_SEED={base}, seed {seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_seed<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+/// Draw helpers for common case shapes.
+pub fn dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+pub fn vecf(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        check("counting", 17, |_rng| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        check("fails", 5, |rng| assert!(rng.uniform() < 0.0));
+    }
+
+    #[test]
+    fn draw_ranges() {
+        check("dims", 50, |rng| {
+            let d = dim(rng, 2, 9);
+            assert!((2..=9).contains(&d));
+            let v = vecf(rng, d, 1.0);
+            assert_eq!(v.len(), d);
+        });
+    }
+}

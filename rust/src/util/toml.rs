@@ -1,0 +1,266 @@
+//! TOML-subset config parser (offline image: no `toml` crate).
+//!
+//! Supports exactly what `configs/*.toml` uses: `[section]` /
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! bool / homogeneous scalar arrays, `#` comments, and blank lines.
+//! Values land in a flat `"section.key" -> Scalar` map, which is also the
+//! representation `--set section.key=value` CLI overrides patch.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scalar {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Scalar>),
+}
+
+impl Scalar {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Scalar::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Scalar::Float(f) => Some(*f),
+            Scalar::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Scalar::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Scalar::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_usize_arr(&self) -> Option<Vec<usize>> {
+        match self {
+            Scalar::Arr(a) => a.iter().map(|s| s.as_i64().map(|i| i as usize)).collect(),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub map: BTreeMap<String, Scalar>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table, TomlError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(ln, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(ln, "empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(ln, "expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(ln, "empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim(), ln)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            map.insert(full, val);
+        }
+        Ok(Table { map })
+    }
+
+    /// Apply a `--set key=value` override (value parsed with TOML rules,
+    /// falling back to a bare string).
+    pub fn set(&mut self, kv: &str) -> Result<(), TomlError> {
+        let eq = kv.find('=').ok_or_else(|| err(0, "override must be key=value"))?;
+        let key = kv[..eq].trim().to_string();
+        let raw = kv[eq + 1..].trim();
+        let val = parse_value(raw, 0).unwrap_or_else(|_| Scalar::Str(raw.to_string()));
+        self.map.insert(key, val);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Scalar> {
+        self.map.get(key)
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|s| s.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.as_f64()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|s| s.as_i64())
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|s| s.as_bool()).unwrap_or(default)
+    }
+}
+
+fn err(line: usize, msg: &str) -> TomlError {
+    TomlError { line: line + 1, msg: msg.to_string() }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<Scalar, TomlError> {
+    if s.is_empty() {
+        return Err(err(ln, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(ln, "unterminated string"))?;
+        return Ok(Scalar::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Scalar::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Scalar::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(ln, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Scalar::Arr(vec![]));
+        }
+        let items: Result<Vec<Scalar>, TomlError> = split_top(inner)
+            .into_iter()
+            .map(|it| parse_value(it.trim(), ln))
+            .collect();
+        return Ok(Scalar::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Scalar::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Scalar::Float(f));
+    }
+    Err(err(ln, &format!("cannot parse value '{s}'")))
+}
+
+/// Split on commas at the top nesting level (arrays of arrays unsupported,
+/// but quoted commas are respected).
+fn split_top(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_config() {
+        let t = Table::parse(
+            r#"
+# experiment preset
+model = "resnet_c100"
+epochs = 30          # scaled down
+
+[net]
+bandwidth_mbps = 100.0
+latency_us = 50
+
+[train]
+decay_epochs = [15, 25]
+nesterov = true
+name = "a#b"
+"#,
+        )
+        .unwrap();
+        assert_eq!(t.str_or("model", ""), "resnet_c100");
+        assert_eq!(t.usize_or("epochs", 0), 30);
+        assert_eq!(t.f64_or("net.bandwidth_mbps", 0.0), 100.0);
+        assert_eq!(t.usize_or("net.latency_us", 0), 50);
+        assert_eq!(
+            t.get("train.decay_epochs").unwrap().as_usize_arr().unwrap(),
+            vec![15, 25]
+        );
+        assert!(t.bool_or("train.nesterov", false));
+        assert_eq!(t.str_or("train.name", ""), "a#b");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut t = Table::parse("epochs = 30").unwrap();
+        t.set("epochs=5").unwrap();
+        t.set("net.bandwidth_mbps=250.5").unwrap();
+        t.set("model=vgg_c10").unwrap();
+        assert_eq!(t.usize_or("epochs", 0), 5);
+        assert_eq!(t.f64_or("net.bandwidth_mbps", 0.0), 250.5);
+        assert_eq!(t.str_or("model", ""), "vgg_c10");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Table::parse("[unclosed").is_err());
+        assert!(Table::parse("novalue =").is_err());
+        assert!(Table::parse("bad").is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Integration tests for the experiment harness (exp::*): config
+//! plumbing, dataset calibration, CSV persistence, and one real
+//! harness-driven run.  Full tables/figures are exercised via
+//! `accordion repro --exp <id>` (see EXPERIMENTS.md); here we keep to
+//! mlp-sized workloads so the suite stays fast.
+
+use accordion::compress::Level;
+use accordion::exp::{Harness, Row, EXPERIMENTS};
+use accordion::models::default_artifacts_dir;
+use accordion::train::config::{ControllerCfg, MethodCfg};
+
+fn ready() -> Option<Harness> {
+    if !default_artifacts_dir().join("metadata.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Harness::in_process(true).unwrap())
+}
+
+#[test]
+fn experiment_ids_are_documented() {
+    // every id the CLI advertises dispatches (unknown ids must error)
+    assert!(EXPERIMENTS.contains(&"table1"));
+    assert!(EXPERIMENTS.contains(&"fig18"));
+    assert_eq!(EXPERIMENTS.len(), 22);
+    assert!(EXPERIMENTS.contains(&"ablate-selector"));
+}
+
+#[test]
+fn dataset_calibration_applied_per_model() {
+    let Some(h) = ready() else { return };
+    let c100 = h.cfg("t", |c| c.model = "resnet_c100".into()).unwrap();
+    let c10 = h.cfg("t", |c| c.model = "resnet_c10".into()).unwrap();
+    assert!(c100.data_sep > c10.data_sep);
+    // fast() shrinks sizes afterwards, but sep calibration must survive
+    assert_eq!(c100.data_sep, 0.6);
+    assert_eq!(c10.data_sep, 0.4);
+}
+
+#[test]
+fn harness_run_persists_csv() {
+    if !default_artifacts_dir().join("metadata.json").exists() { return }
+    // non-fast harness: the test pins its own tiny sizes and epoch count
+    let mut h = Harness::in_process(false).unwrap();
+    h.out = "runs/test-harness".into();
+    let cfg = h
+        .cfg("harness-smoke", |c| {
+            c.model = "mlp_c10".into();
+            c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+            c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+            c.epochs = 3;
+            c.train_size = 256;
+            c.test_size = 64;
+            c.decay_epochs = vec![2];
+        })
+        .unwrap();
+    let log = h.run(&cfg).unwrap();
+    assert_eq!(log.epochs.len(), 3);
+    let csv = std::fs::read_to_string("runs/test-harness/harness-smoke.csv").unwrap();
+    assert!(csv.starts_with("epoch,"));
+    assert_eq!(csv.lines().count(), 4);
+}
+
+#[test]
+fn row_ratios_match_paper_convention() {
+    if !default_artifacts_dir().join("metadata.json").exists() { return }
+    let mut h = Harness::in_process(false).unwrap();
+    h.out = "runs/test-harness".into();
+    let mk = |label: &str, level: Level, h: &mut Harness| {
+        let cfg = h
+            .cfg(label, |c| {
+                c.model = "mlp_c10".into();
+                c.controller = ControllerCfg::Static(level);
+                c.epochs = 2;
+                c.train_size = 256;
+                c.test_size = 64;
+                c.decay_epochs = vec![];
+            })
+            .unwrap();
+        let log = h.run(&cfg).unwrap();
+        Row::from_log(label, &log)
+    };
+    let low = mk("low", Level::Low, &mut h);
+    let high = mk("high", Level::High, &mut h);
+    // the ratio baseline in the tables is the ℓ_low row; rank-1 must send
+    // fewer floats than rank-2
+    assert!(high.floats < low.floats);
+    assert!(high.secs <= low.secs + 1e-6 || high.secs < low.secs * 1.5);
+}
+
+#[test]
+fn overrides_beat_dataset_calibration() {
+    if default_artifacts_dir().join("metadata.json").exists() {
+        let mut h = Harness::in_process(false).unwrap();
+        h.overrides = vec!["data.sep=0.9".into(), "epochs=2".into()];
+        let cfg = h.cfg("t", |c| c.model = "resnet_c100".into()).unwrap();
+        assert_eq!(cfg.data_sep, 0.9);
+        assert_eq!(cfg.epochs, 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Integration tests over the full stack: AOT artifacts -> PJRT runtime
+//! -> distributed trainer -> controllers.  These use the smallest model
+//! (mlp_c10) and tiny workloads so the whole file runs in well under a
+//! minute; they are skipped gracefully when `make artifacts` has not run.
+
+use accordion::compress::Level;
+use accordion::models::{default_artifacts_dir, Registry};
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+
+fn ready() -> Option<(Registry, Runtime)> {
+    let dir = default_artifacts_dir();
+    if !dir.join("metadata.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some((Registry::load(dir).unwrap(), Runtime::cpu().unwrap()))
+}
+
+fn tiny(label: &str) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.label = label.into();
+    c.model = "mlp_c10".into();
+    c.epochs = 4;
+    c.train_size = 512;
+    c.test_size = 128;
+    c.data_sep = 0.4;
+    c.warmup_epochs = 1;
+    c.decay_epochs = vec![3];
+    c
+}
+
+#[test]
+fn training_learns_with_every_method() {
+    let Some((reg, mut rt)) = ready() else { return };
+    for method in [
+        MethodCfg::None,
+        MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+        MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 },
+        MethodCfg::RandomK { frac_low: 0.99, frac_high: 0.25 },
+        MethodCfg::Qsgd { bits_low: 8, bits_high: 4 },
+    ] {
+        let mut cfg = tiny(&format!("it-{method:?}"));
+        cfg.method = method.clone();
+        cfg.controller = ControllerCfg::Static(Level::Low);
+        let log = train::run(&cfg, &reg, &mut rt).unwrap();
+        let first = log.epochs.first().unwrap().train_loss;
+        let last = log.epochs.last().unwrap().train_loss;
+        assert!(
+            last < first,
+            "{method:?}: loss did not decrease ({first} -> {last})"
+        );
+        assert!(log.final_acc() > 0.2, "{method:?}: acc {}", log.final_acc());
+        assert!(log.total_floats() > 0);
+        assert!(log.total_secs() > 0.0);
+    }
+}
+
+#[test]
+fn runs_are_deterministic() {
+    let Some((reg, mut rt)) = ready() else { return };
+    let mut cfg = tiny("det");
+    cfg.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    let a = train::run(&cfg, &reg, &mut rt).unwrap();
+    let b = train::run(&cfg, &reg, &mut rt).unwrap();
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(ea.train_loss, eb.train_loss);
+        assert_eq!(ea.test_acc, eb.test_acc);
+        assert_eq!(ea.floats, eb.floats);
+    }
+}
+
+#[test]
+fn accordion_floats_between_static_levels() {
+    let Some((reg, mut rt)) = ready() else { return };
+    let run = |ctrl: ControllerCfg, rt: &mut Runtime| {
+        let mut cfg = tiny("order");
+        cfg.epochs = 6;
+        cfg.decay_epochs = vec![4];
+        cfg.controller = ctrl;
+        train::run(&cfg, &reg, rt).unwrap()
+    };
+    let low = run(ControllerCfg::Static(Level::Low), &mut rt);
+    let high = run(ControllerCfg::Static(Level::High), &mut rt);
+    let acc = run(ControllerCfg::Accordion { eta: 0.5, interval: 1 }, &mut rt);
+    assert!(high.total_floats() < acc.total_floats());
+    assert!(acc.total_floats() <= low.total_floats());
+}
+
+#[test]
+fn batch_mode_reduces_rounds_and_scales_lr() {
+    let Some((reg, mut rt)) = ready() else { return };
+    let mut small = tiny("b-small");
+    small.method = MethodCfg::None;
+    small.controller = ControllerCfg::Static(Level::Low);
+    let s = train::run(&small, &reg, &mut rt).unwrap();
+
+    let mut large = tiny("b-large");
+    large.method = MethodCfg::None;
+    large.controller = ControllerCfg::StaticBatch { mult: 4 };
+    let l = train::run(&large, &reg, &mut rt).unwrap();
+
+    // 4x batch => 4x fewer communicated floats per epoch
+    let ratio = s.total_floats() as f64 / l.total_floats() as f64;
+    assert!((ratio - 4.0).abs() < 0.2, "float ratio {ratio}");
+    // linear LR scaling with the 3-epoch post-switch ramp (Goyal warmup):
+    // partially scaled at epoch 0, fully ~4x once the ramp completes
+    assert!(l.epochs[0].lr > s.epochs[0].lr * 1.5);
+    assert!(l.epochs[2].lr > s.epochs[2].lr * 3.5, "{} vs {}", l.epochs[2].lr, s.epochs[2].lr);
+    assert_eq!(l.epochs[0].batch_mult, 4);
+}
+
+#[test]
+fn vector_layers_are_sent_uncompressed() {
+    let Some((reg, mut rt)) = ready() else { return };
+    // floats for PowerSGD = sum over matrix layers of (n+k)*r + sum over
+    // vector layers of numel, per step
+    let meta = reg.model("mlp_c10").unwrap().clone();
+    let mut cfg = tiny("vector-raw");
+    cfg.epochs = 1;
+    cfg.warmup_epochs = 0;
+    cfg.decay_epochs = vec![];
+    cfg.controller = ControllerCfg::Static(Level::High); // rank 1
+    let log = train::run(&cfg, &reg, &mut rt).unwrap();
+    let steps = (cfg.train_size / (cfg.workers * meta.batch)) as u64;
+    let mut per_step = 0u64;
+    for p in &meta.params {
+        if p.compressible() {
+            let k = *p.shape.last().unwrap() as u64;
+            let n = p.numel() as u64 / k;
+            per_step += n + k; // rank 1
+        } else {
+            per_step += p.numel() as u64;
+        }
+    }
+    assert_eq!(log.total_floats(), per_step * steps);
+}
+
+#[test]
+fn lstm_language_model_trains() {
+    let Some((reg, mut rt)) = ready() else { return };
+    let mut cfg = TrainConfig::default();
+    cfg.label = "it-lstm".into();
+    cfg.model = "lstm_wt2".into();
+    cfg.epochs = 5;
+    cfg.train_size = 384; // sequences
+    cfg.test_size = 64;
+    cfg.base_lr = 2.0;
+    cfg.weight_decay = 0.0;
+    cfg.warmup_epochs = 0;
+    cfg.decay_epochs = vec![];
+    cfg.method = MethodCfg::TopK { frac_low: 0.99, frac_high: 0.10 };
+    cfg.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    let log = train::run(&cfg, &reg, &mut rt).unwrap();
+    let ppl0 = log.epochs.first().unwrap().test_loss.exp();
+    let ppl1 = log.final_ppl();
+    assert!(ppl1 < ppl0, "perplexity did not improve: {ppl0} -> {ppl1}");
+    assert!(ppl1 < 45.0, "ppl {ppl1} not well below uniform (vocab 64)");
+}
+
+#[test]
+fn controller_decisions_show_up_in_level_trace() {
+    let Some((reg, mut rt)) = ready() else { return };
+    let mut cfg = tiny("trace");
+    cfg.epochs = 6;
+    cfg.decay_epochs = vec![4];
+    cfg.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    let log = train::run(&cfg, &reg, &mut rt).unwrap();
+    assert_eq!(log.level_trace.len(), cfg.epochs);
+    // first epoch: everything low (first window critical)
+    assert!(log.level_trace[0].iter().all(|&b| b));
+    // frac_low must be consistent with the trace
+    for (e, tr) in log.epochs.iter().zip(&log.level_trace) {
+        let meta = reg.model("mlp_c10").unwrap();
+        let comp: Vec<bool> = meta
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.compressible())
+            .map(|(l, _)| tr[l])
+            .collect();
+        let frac = comp.iter().filter(|&&b| b).count() as f32 / comp.len() as f32;
+        assert!((frac - e.frac_low).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn adaqs_and_manual_controllers_run() {
+    let Some((reg, mut rt)) = ready() else { return };
+    for ctrl in [
+        ControllerCfg::AdaQs { rank_start: 1, rank_max: 4, drop: 0.3, interval: 1 },
+        ControllerCfg::Manual { head: 2, tail: 1, level_in: Level::Low, level_out: Level::High },
+        ControllerCfg::Smith { factor: 2, cap: 8 },
+        ControllerCfg::ManualBatch { small: vec![(0, 2)], mult: 4 },
+    ] {
+        let mut cfg = tiny(&format!("it-{ctrl:?}"));
+        if matches!(ctrl, ControllerCfg::Smith { .. } | ControllerCfg::ManualBatch { .. }) {
+            cfg.method = MethodCfg::None;
+        }
+        cfg.controller = ctrl;
+        let log = train::run(&cfg, &reg, &mut rt).unwrap();
+        assert!(log.epochs.len() == cfg.epochs);
+        assert!(log.final_acc() > 0.15);
+    }
+}

@@ -1,0 +1,212 @@
+//! Cross-module property tests (hand-rolled harness — the offline image
+//! has no proptest).  These pin the *system-level* invariants the paper's
+//! correctness rests on; per-module properties live in each module's unit
+//! tests.
+
+use accordion::cluster::network::NetworkModel;
+use accordion::collectives::{mean_into, ring_allreduce_mean, Comm};
+use accordion::compress::{
+    powersgd::PowerSgd, randomk::RandomK, topk::TopK, DistCompressor, Level, NoCompression,
+};
+use accordion::coordinator::{accordion::Accordion, Controller, EpochObs};
+use accordion::util::{prop, rng::Rng};
+
+fn comm(workers: usize) -> Comm {
+    Comm::new(NetworkModel::new(workers, 100.0, 50.0))
+}
+
+/// Compressed distributed SGD with error feedback must optimize a simple
+/// quadratic to (near) the optimum: min_W ||W - A||^2 with per-worker
+/// noisy gradients.  This is the end-to-end convergence property of the
+/// compressor + EF + collective pipeline, method-agnostic.
+#[test]
+fn prop_compressed_sgd_converges_on_quadratic() {
+    prop::check("quadratic-convergence", 6, |rng| {
+        let workers = 2 + rng.below(3);
+        let (n, k) = (6 + rng.below(6), 4 + rng.below(4));
+        let target: Vec<f32> = prop::vecf(rng, n * k, 1.0);
+        let methods: Vec<Box<dyn DistCompressor>> = vec![
+            Box::new(NoCompression),
+            Box::new(PowerSgd::new(workers, 2, 1, 7)),
+            Box::new(TopK::new(workers, 0.5, 0.25)),
+            Box::new(RandomK::new(workers, 0.5, 0.25, 9)),
+        ];
+        for mut m in methods {
+            let mut w = vec![0.0f32; n * k];
+            let mut c = comm(workers);
+            let mut out = vec![0.0f32; n * k];
+            for step in 0..400 {
+                // grad of 0.5||w-a||^2 = w - a, plus per-worker noise
+                let grads: Vec<Vec<f32>> = (0..workers)
+                    .map(|_| {
+                        w.iter()
+                            .zip(&target)
+                            .map(|(wi, ai)| (wi - ai) + 0.01 * rng.normal())
+                            .collect()
+                    })
+                    .collect();
+                let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+                let level = if step % 2 == 0 { Level::Low } else { Level::High };
+                m.round(0, &views, &[n, k], level, &mut c, &mut out);
+                for (wi, g) in w.iter_mut().zip(&out) {
+                    *wi -= 0.2 * g;
+                }
+            }
+            let err: f32 = w
+                .iter()
+                .zip(&target)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / (n * k) as f32;
+            assert!(err < 0.05, "{} did not converge: mse {err}", m.name());
+        }
+    });
+}
+
+/// Whatever the compressor, the decompressed aggregate must be identical
+/// for every worker (synchronous replicas never diverge) — trivially true
+/// in our single-buffer design, so we check the stronger invariant: the
+/// round is a pure function of (state, inputs): same inputs on a fresh
+/// compressor give the same output.
+#[test]
+fn prop_round_is_deterministic_across_fresh_instances() {
+    prop::check("round-deterministic", 12, |rng| {
+        let workers = 2 + rng.below(2);
+        let (n, k) = (4 + rng.below(8), 2 + rng.below(6));
+        let grads: Vec<Vec<f32>> = (0..workers).map(|_| prop::vecf(rng, n * k, 1.0)).collect();
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        for mk in 0..3usize {
+            let mut make = || -> Box<dyn DistCompressor> {
+                match mk {
+                    0 => Box::new(PowerSgd::new(workers, 2, 1, 5)),
+                    1 => Box::new(TopK::new(workers, 0.9, 0.3)),
+                    _ => Box::new(RandomK::new(workers, 0.9, 0.3, 5)),
+                }
+            };
+            let mut out1 = vec![0.0f32; n * k];
+            let mut out2 = vec![0.0f32; n * k];
+            make().round(0, &views, &[n, k], Level::Low, &mut comm(workers), &mut out1);
+            make().round(0, &views, &[n, k], Level::Low, &mut comm(workers), &mut out2);
+            assert_eq!(out1, out2, "method {mk} non-deterministic");
+        }
+    });
+}
+
+/// Ledger monotonicity + the Low/High payload ordering Accordion depends
+/// on: a Low round must never be cheaper than a High round.
+#[test]
+fn prop_low_level_never_cheaper_than_high() {
+    prop::check("payload-order", 20, |rng| {
+        let workers = 2;
+        let (n, k) = (2 + rng.below(20), 2 + rng.below(20));
+        let shape = [n, k];
+        let ps = PowerSgd::new(workers, 1 + rng.below(4), 1, 3);
+        let tk = TopK::new(workers, 0.5 + rng.uniform() * 0.5, 0.01 + rng.uniform() * 0.4);
+        assert!(ps.payload_floats(&shape, Level::Low) >= ps.payload_floats(&shape, Level::High));
+        assert!(tk.payload_floats(&shape, Level::Low) >= tk.payload_floats(&shape, Level::High));
+    });
+}
+
+/// Ring all-reduce == naive mean for every worker count / length combo,
+/// including ragged chunking edges (len < workers, len % workers != 0).
+#[test]
+fn prop_ring_allreduce_ragged_edges() {
+    prop::check("ring-ragged", 30, |rng| {
+        let workers = 2 + rng.below(7);
+        let len = 1 + rng.below(3 * workers); // deliberately tiny/ragged
+        let mut bufs: Vec<Vec<f32>> = (0..workers).map(|_| prop::vecf(rng, len, 2.0)).collect();
+        let views: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut want = vec![0.0f32; len];
+        mean_into(&views, &mut want);
+        ring_allreduce_mean(&mut bufs);
+        for b in &bufs {
+            for (x, y) in b.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()));
+            }
+        }
+    });
+}
+
+/// Accordion's decision stream: (1) first window low; (2) flat norms with
+/// flat LR eventually go high; (3) an LR decay anywhere forces low again;
+/// (4) batch multiplier is monotone non-decreasing in batch mode.
+#[test]
+fn prop_accordion_decision_invariants() {
+    prop::check("accordion-invariants", 15, |rng| {
+        let layers = 1 + rng.below(5);
+        let epochs = 12 + rng.below(10);
+        let decay_at = 5 + rng.below(epochs - 8);
+        let mut a = Accordion::batch_mode(layers, 0.5, 1, 8);
+        let mut prev_mult = 0usize;
+        for e in 0..epochs {
+            let lr = if e < decay_at { 0.4 } else { 0.04 };
+            let lr_next = if e + 1 < decay_at { 0.4 } else { 0.04 };
+            let d = a.begin_epoch(e, lr, lr_next);
+            if e == 0 {
+                assert!(d.levels.iter().all(|&l| l == Level::Low), "first epoch not low");
+            }
+            assert!(d.batch_mult >= prev_mult, "batch shrank at epoch {e}");
+            prev_mult = d.batch_mult;
+            // flat norms after the first window
+            let norm = 4.0 + 0.01 * rng.uniform();
+            let obs = EpochObs {
+                epoch: e,
+                layer_sqnorms: vec![norm; layers],
+                layer_abs_means: vec![0.1; layers],
+                layer_stds: vec![1.0; layers],
+                model_sqnorm: norm * layers as f32,
+                lr_curr: lr,
+                lr_next,
+            };
+            a.observe(&obs);
+        }
+        assert!(prev_mult == 8, "never reached the large batch on flat norms");
+    });
+}
+
+/// Compression error decays under error feedback: cumulative applied
+/// update approaches cumulative true gradient (relative error shrinks
+/// with horizon).
+#[test]
+fn prop_ef_relative_error_shrinks() {
+    prop::check("ef-shrinks", 8, |rng| {
+        let workers = 2;
+        let (n, k) = (8, 8);
+        let mut tk = TopK::new(workers, 0.9, 0.125);
+        let mut c = comm(workers);
+        let mut applied = vec![0.0f32; n * k];
+        let mut truth = vec![0.0f32; n * k];
+        let mut out = vec![0.0f32; n * k];
+        let mut rel_at = |applied: &[f32], truth: &[f32]| -> f32 {
+            let num: f32 = applied
+                .iter()
+                .zip(truth)
+                .map(|(a, t)| (a - t) * (a - t))
+                .sum();
+            let den: f32 = truth.iter().map(|t| t * t).sum::<f32>().max(1e-6);
+            (num / den).sqrt()
+        };
+        let mut early = 0.0;
+        for step in 0..50 {
+            let grads: Vec<Vec<f32>> = (0..workers).map(|_| prop::vecf(rng, n * k, 1.0)).collect();
+            let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            let mut t = vec![0.0f32; n * k];
+            mean_into(&views, &mut t);
+            for (a, b) in truth.iter_mut().zip(&t) {
+                *a += b;
+            }
+            tk.round(0, &views, &[n, k], Level::High, &mut c, &mut out);
+            for (a, b) in applied.iter_mut().zip(&out) {
+                *a += b;
+            }
+            if step == 4 {
+                early = rel_at(&applied, &truth);
+            }
+        }
+        let late = rel_at(&applied, &truth);
+        assert!(
+            late < early || late < 0.05,
+            "EF error did not shrink: early {early} late {late}"
+        );
+    });
+}
