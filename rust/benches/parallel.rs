@@ -1,0 +1,104 @@
+//! Thread-scaling bench for the parallel execution engine: the same
+//! 8-worker sim-backend training job at 1/2/4/8 host threads, measuring
+//! end-to-end wall-clock through the full gradient -> compress ->
+//! collective -> SGD path.  Results (plus the speedup vs the sequential
+//! oracle) land in `BENCH_parallel.json` next to the crate root so the
+//! driver and future perf passes can diff them.
+//!
+//! Speedup is bounded by the host's core count (recorded in the JSON):
+//! on a 2-core box the 8-thread row tops out near 2x; the engine itself
+//! is embarrassingly parallel across workers and layers.
+//!
+//! Run: `cargo bench --bench parallel [-- <filter>]`
+
+include!("harness.rs");
+
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+use accordion::util::json;
+
+fn bench_cfg(threads: usize) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.label = format!("bench-parallel-t{threads}");
+    c.model = "mlp_bench".into(); // [512, 256, 10] — heavy enough per step
+    c.workers = 8;
+    c.threads = threads;
+    c.epochs = 2;
+    c.train_size = 2048;
+    c.test_size = 64;
+    c.warmup_epochs = 0;
+    c.decay_epochs = vec![1];
+    c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+    c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    c
+}
+
+fn main() {
+    let ctl = BenchCtl::from_env();
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let iters = ctl.iters.clamp(3, 10);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let thread_counts = [1usize, 2, 4, 8];
+    let mut rows: Vec<json::Json> = Vec::new();
+    let mut mean_secs = vec![0.0f64; thread_counts.len()];
+
+    for (ti, &threads) in thread_counts.iter().enumerate() {
+        let name = format!("train/sim/w8/threads{threads}");
+        // the threads=1 oracle always runs: it is the speedup baseline
+        if ti > 0 && !ctl.matches(&name) {
+            continue;
+        }
+        let cfg = bench_cfg(threads);
+        let batch = reg.model(&cfg.model).unwrap().batch;
+        // warmup
+        let log = train::run(&cfg, &reg, &rt).unwrap();
+        let steps = log.epochs.len() as u64 * (cfg.train_size / (cfg.workers * batch)) as u64;
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            let log = train::run(&cfg, &reg, &rt).unwrap();
+            std::hint::black_box(log.final_acc());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = samples[samples.len() / 2];
+        mean_secs[ti] = mean;
+        println!(
+            "{name:<52} mean {mean:>8.3}s p50 {p50:>8.3}s  ({:.1} steps/s)",
+            steps as f64 / mean
+        );
+        rows.push(json::obj(vec![
+            ("threads", json::num(threads as f64)),
+            ("mean_secs", json::num(mean)),
+            ("p50_secs", json::num(p50)),
+            ("speedup_vs_seq", json::num(if mean > 0.0 && mean_secs[0] > 0.0 { mean_secs[0] / mean } else { 0.0 })),
+        ]));
+    }
+
+    if !rows.is_empty() && mean_secs[0] > 0.0 {
+        let best = mean_secs
+            .iter()
+            .filter(|&&m| m > 0.0)
+            .fold(f64::INFINITY, |a, &b| a.min(b));
+        let report = json::obj(vec![
+            ("bench", json::s("parallel-thread-scaling")),
+            ("model", json::s("mlp_bench")),
+            ("workers", json::num(8.0)),
+            ("host_cores", json::num(cores as f64)),
+            ("iters", json::num(iters as f64)),
+            ("results", json::arr(rows)),
+            ("best_speedup_vs_seq", json::num(mean_secs[0] / best)),
+        ]);
+        std::fs::write("BENCH_parallel.json", report.to_string()).expect("writing BENCH_parallel.json");
+        println!(
+            "BENCH_parallel.json written (host cores: {cores}, best speedup {:.2}x)",
+            mean_secs[0] / best
+        );
+    } else {
+        eprintln!("BENCH_parallel.json NOT written: no timed rows (filter excluded everything?)");
+    }
+}

@@ -11,18 +11,20 @@
 include!("harness.rs");
 
 use accordion::compress::Level;
-use accordion::models::{default_artifacts_dir, Registry};
+use accordion::models::Registry;
 use accordion::runtime::Runtime;
 use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
 
 fn main() {
     let ctl = BenchCtl::from_env();
-    if !default_artifacts_dir().join("metadata.json").exists() {
-        eprintln!("artifacts not built; skipping table benches");
-        return;
-    }
-    let reg = Registry::load(default_artifacts_dir()).unwrap();
-    let mut rt = Runtime::cpu().unwrap();
+    // artifacts registry when this process can execute it, sim zoo otherwise
+    let rt = Runtime::cpu().unwrap();
+    let reg = Registry::detect_with(rt.has_pjrt()).unwrap();
+    // numbers from the two backends are not comparable — say which one ran
+    println!(
+        "backend: {}",
+        if rt.has_pjrt() { "pjrt (AOT artifacts)" } else { "sim (pure Rust)" }
+    );
 
     let tiny = |method: MethodCfg, ctrl: ControllerCfg| {
         let mut c = TrainConfig::default();
@@ -71,7 +73,7 @@ fn main() {
     for (name, cfg) in cases {
         let steps = 2 * (cfg.train_size / (cfg.workers * 16)) as u64; // mlp batch = 16
         ctl.bench(name, steps, || {
-            let log = train::run(&cfg, &reg, &mut rt).unwrap();
+            let log = train::run(&cfg, &reg, &rt).unwrap();
             std::hint::black_box(log.final_acc());
         });
     }

@@ -114,8 +114,14 @@ impl Controller for Accordion {
         Decision { levels: self.levels.clone(), batch_mult }
     }
 
+    fn detection_interval(&self) -> usize {
+        self.interval
+    }
+
     fn observe(&mut self, obs: &EpochObs) {
-        // detection runs every `interval` epochs, on the window boundary
+        // detection runs every `interval` epochs, on the window boundary;
+        // the trainer accumulates Δ across the window (detection_interval)
+        // so the norms compared here are whole-window norms
         if (obs.epoch + 1) % self.interval != 0 {
             return;
         }

@@ -50,6 +50,10 @@ impl Controller for AdaQs {
         }
     }
 
+    fn detection_interval(&self) -> usize {
+        self.interval
+    }
+
     fn observe(&mut self, obs: &EpochObs) {
         if (obs.epoch + 1) % self.interval != 0 {
             return;

@@ -54,6 +54,14 @@ pub trait Controller: Send {
     fn name(&self) -> String;
     fn begin_epoch(&mut self, epoch: usize, lr_curr: f32, lr_next: f32) -> Decision;
     fn observe(&mut self, obs: &EpochObs);
+    /// Epoch span of one detection window.  The trainer accumulates the
+    /// Δ (gradient-sum) observation across this many epochs and resets
+    /// the accumulator at window starts, so a detector that fires every
+    /// `interval` epochs sees the paper's accumulated-over-window Δ norm
+    /// rather than a single-epoch norm (Alg. 1's ‖g_{t-1,t}‖).
+    fn detection_interval(&self) -> usize {
+        1
+    }
 }
 
 /// Fixed level everywhere — the paper's static baselines.

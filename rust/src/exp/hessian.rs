@@ -33,7 +33,7 @@ pub fn fig3(h: &mut Harness) -> Result<()> {
     })?;
 
     let meta = h.reg.model(&cfg.model)?.clone();
-    let progs = ModelPrograms::new(&meta);
+    let progs = ModelPrograms::new(&meta)?;
     let ds = train::dataset_for(&cfg, &h.reg)?;
     let mut params = h.reg.load_init(&meta)?;
     let mut opt = crate::optim::Sgd::new(cfg.momentum, cfg.nesterov, cfg.weight_decay);

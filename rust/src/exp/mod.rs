@@ -10,7 +10,7 @@ pub mod hessian;
 pub mod overlap;
 pub mod tables;
 
-use crate::models::{default_artifacts_dir, Registry};
+use crate::models::Registry;
 use crate::metrics::RunLog;
 use crate::runtime::Runtime;
 use crate::train::{self, config::TrainConfig};
@@ -37,9 +37,10 @@ pub struct Harness {
 
 impl Harness {
     pub fn from_args(exp: &str, args: &Args) -> Result<Harness> {
+        let rt = Runtime::cpu()?;
         Ok(Harness {
-            reg: Registry::load(default_artifacts_dir())?,
-            rt: Runtime::cpu()?,
+            reg: Registry::detect_with(rt.has_pjrt())?,
+            rt,
             fast: args.flag("fast"),
             overrides: args.opts("set").iter().map(|s| s.to_string()).collect(),
             out: format!("{}/{exp}", args.opt("out").unwrap_or("runs")),
@@ -48,9 +49,10 @@ impl Harness {
 
     /// In-process constructor for tests/benches.
     pub fn in_process(fast: bool) -> Result<Harness> {
+        let rt = Runtime::cpu()?;
         Ok(Harness {
-            reg: Registry::load(default_artifacts_dir())?,
-            rt: Runtime::cpu()?,
+            reg: Registry::detect_with(rt.has_pjrt())?,
+            rt,
             fast,
             overrides: Vec::new(),
             out: "runs/test".into(),

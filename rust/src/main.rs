@@ -8,7 +8,7 @@
 //!   help    this text
 
 use accordion::exp;
-use accordion::models::{default_artifacts_dir, Registry};
+use accordion::models::Registry;
 use accordion::runtime::Runtime;
 use accordion::train::{self, config::TrainConfig};
 use accordion::util::{cli::Args, init_logging, toml::Table};
@@ -16,14 +16,17 @@ use anyhow::{bail, Result};
 
 const HELP: &str = "\
 accordion — Adaptive Gradient Communication via Critical Learning Regime Identification
-          (reproduction; rust + JAX + Pallas, AOT via PJRT)
+          (reproduction; pure-Rust sim backend by default, PJRT AOT behind --features pjrt)
 
 USAGE:
-  accordion train [--config FILE] [--set key=value ...] [--out DIR] [--save PATH]
+  accordion train [--config FILE] [--set key=value ...] [--threads N] [--out DIR] [--save PATH]
   accordion eval  --model NAME --ckpt PATH [--set key=value ...]
   accordion repro --exp <id> [--fast] [--set key=value ...] [--out DIR]
   accordion list
   accordion help
+
+  --threads N  run the parallel execution engine on N host threads
+               (results are bit-identical to the sequential N=1 path)
 
 EXPERIMENT IDS:
   table1 table2 table3 table4 table5 table6
@@ -69,6 +72,9 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
         table.set(kv).map_err(|e| anyhow::anyhow!("{e}"))?;
     }
     let mut cfg = TrainConfig::from_table(&table)?;
+    if let Some(t) = args.usize_opt("threads") {
+        cfg.threads = t.max(1);
+    }
     if args.flag("fast") {
         cfg = cfg.fast();
     }
@@ -77,9 +83,9 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let reg = Registry::load(default_artifacts_dir())?;
-    let mut rt = Runtime::cpu()?;
-    let (log, params) = train::run_full(&cfg, &reg, &mut rt)?;
+    let rt = Runtime::cpu()?;
+    let reg = Registry::detect_with(rt.has_pjrt())?;
+    let (log, params) = train::run_full(&cfg, &reg, &rt)?;
     if let Some(path) = args.opt("save") {
         let meta = reg.model(&cfg.model)?;
         train::checkpoint::save(path, meta, cfg.epochs, &params)?;
@@ -104,13 +110,13 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let ckpt = args.opt("ckpt").ok_or_else(|| anyhow::anyhow!("--ckpt required"))?;
     let mut cfg = load_config(args)?;
     cfg.model = model.to_string();
-    let reg = Registry::load(default_artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+    let reg = Registry::detect_with(rt.has_pjrt())?;
     let meta = reg.model(model)?.clone();
     let params = train::checkpoint::load(ckpt, &meta)?;
-    let mut rt = Runtime::cpu()?;
     let ds = train::dataset_for(&cfg, &reg)?;
-    let progs = accordion::runtime::ModelPrograms::new(&meta);
-    let (loss, acc) = train::evaluate(&progs, &mut rt, &params, &ds, &cfg, &meta)?;
+    let progs = accordion::runtime::ModelPrograms::new(&meta)?;
+    let (loss, acc) = train::evaluate(&progs, &rt, &params, &ds, &cfg, &meta)?;
     if meta.is_lm() {
         println!("{model}: eval loss {loss:.4}, perplexity {:.2}", loss.exp());
     } else {
@@ -127,7 +133,14 @@ fn cmd_repro(args: &Args) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    let reg = Registry::load(default_artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+    let reg = Registry::detect_with(rt.has_pjrt())?;
+    let backend = if reg.models.values().any(|m| m.is_sim()) {
+        "sim (pure Rust; no artifacts needed)"
+    } else {
+        "pjrt (AOT HLO artifacts)"
+    };
+    println!("backend: {backend}");
     println!("models ({}):", reg.models.len());
     for (name, m) in &reg.models {
         println!(

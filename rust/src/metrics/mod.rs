@@ -42,6 +42,10 @@ pub struct EpochStats {
     pub frac_low: f32,
     /// global batch multiplier in effect (batch-size mode)
     pub batch_mult: usize,
+    /// whole-model ‖Δ‖ accumulated over the controller's detection
+    /// window so far (the detector's actual input; == grad_norm when the
+    /// detection interval is 1)
+    pub window_grad_norm: f32,
 }
 
 /// Full run log: everything the tables/figures consume.
@@ -78,14 +82,14 @@ impl RunLog {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "epoch,lr,train_loss,test_loss,test_acc,floats,secs,grad_norm,frac_low,batch_mult\n",
+            "epoch,lr,train_loss,test_loss,test_acc,floats,secs,grad_norm,frac_low,batch_mult,window_grad_norm\n",
         );
         for e in &self.epochs {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{:.4},{},{},{}",
+                "{},{},{},{},{},{},{:.4},{},{},{},{}",
                 e.epoch, e.lr, e.train_loss, e.test_loss, e.test_acc, e.floats, e.secs,
-                e.grad_norm, e.frac_low, e.batch_mult
+                e.grad_norm, e.frac_low, e.batch_mult, e.window_grad_norm
             );
         }
         out
@@ -134,6 +138,7 @@ mod tests {
             grad_norm: 1.0,
             frac_low: 0.5,
             batch_mult: 1,
+            window_grad_norm: 1.0,
         }
     }
 

@@ -55,6 +55,11 @@ impl ModelMeta {
     pub fn is_lm(&self) -> bool {
         self.task == "lm"
     }
+    /// Sim models carry no artifact paths: they execute on the pure-Rust
+    /// backend and synthesize their init from the model name.
+    pub fn is_sim(&self) -> bool {
+        self.train_artifact.as_os_str().is_empty()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -74,7 +79,95 @@ pub struct Registry {
     pub kernels: BTreeMap<String, KernelMeta>,
 }
 
+/// The built-in sim model zoo: `(name, layer widths, batch)`.  Widths
+/// chain `input -> hidden.. -> classes`; every model is a ReLU MLP (one
+/// pair = softmax regression) the pure-Rust backend executes directly.
+/// `mlp_bench` is deliberately heavy — the thread-scaling bench needs
+/// per-step compute that dwarfs thread-spawn overhead.
+const SIM_MODELS: &[(&str, &[usize], usize)] = &[
+    ("softmax_c10", &[32, 10], 16),
+    ("mlp_c10", &[48, 32, 10], 16),
+    ("mlp_c100", &[64, 48, 100], 16),
+    ("mlp_deep_c10", &[48, 32, 24, 10], 16),
+    ("mlp_bench", &[512, 256, 10], 32),
+];
+
+fn sim_meta(name: &str, dims: &[usize], batch: usize) -> ModelMeta {
+    let mut params = Vec::new();
+    for i in 0..dims.len() - 1 {
+        params.push(ParamSpec {
+            name: format!("w{i}"),
+            shape: vec![dims[i], dims[i + 1]],
+            kind: "matrix".into(),
+        });
+        params.push(ParamSpec {
+            name: format!("b{i}"),
+            shape: vec![dims[i + 1]],
+            kind: "vector".into(),
+        });
+    }
+    let total_params = params.iter().map(|p| p.numel()).sum();
+    ModelMeta {
+        name: name.to_string(),
+        task: "classify".into(),
+        input_shape: vec![dims[0]],
+        input_dtype: "f32".into(),
+        num_classes: *dims.last().unwrap(),
+        batch,
+        seq_len: 0,
+        total_params,
+        params,
+        train_artifact: PathBuf::new(),
+        eval_artifact: PathBuf::new(),
+        hvp_artifact: None,
+        init_file: PathBuf::new(),
+    }
+}
+
+/// FNV-1a over the model name: the deterministic seed for synthesized
+/// sim inits (the artifact registry's init snapshots play the same role).
+fn sim_init_seed(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 impl Registry {
+    /// The built-in sim zoo: no artifacts directory, no files on disk.
+    /// Every model executes on the pure-Rust backend.
+    pub fn sim() -> Registry {
+        let mut models = BTreeMap::new();
+        for &(name, dims, batch) in SIM_MODELS {
+            models.insert(name.to_string(), sim_meta(name, dims, batch));
+        }
+        Registry { dir: PathBuf::new(), models, kernels: BTreeMap::new() }
+    }
+
+    /// The artifacts registry when `pjrt_executable` says this process
+    /// can actually run it (a live PJRT client — pass
+    /// `Runtime::has_pjrt()`) and the manifest exists; the sim zoo
+    /// otherwise.  A pjrt-feature build whose client failed to
+    /// initialize (stub xla, missing shared library) must land on the
+    /// sim zoo, not on artifact models it cannot execute.
+    pub fn detect_with(pjrt_executable: bool) -> Result<Registry> {
+        let dir = default_artifacts_dir();
+        if pjrt_executable && dir.join("metadata.json").exists() {
+            Registry::load(dir)
+        } else {
+            Ok(Registry::sim())
+        }
+    }
+
+    /// Feature-level detection for call sites with no runtime handle:
+    /// assumes a pjrt build can execute artifacts.  Prefer
+    /// [`Registry::detect_with`] when a `Runtime` exists.
+    pub fn detect() -> Result<Registry> {
+        Registry::detect_with(cfg!(feature = "pjrt"))
+    }
+
     pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = dir.join("metadata.json");
@@ -179,8 +272,35 @@ impl Registry {
             .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.models.keys().collect::<Vec<_>>()))
     }
 
-    /// Load the initial parameter snapshot for a model (f32 LE, spec order).
+    /// Load the initial parameter snapshot for a model (f32 LE, spec
+    /// order).  Sim models have no snapshot file: their init is
+    /// synthesized deterministically from the model name (small-variance
+    /// normal weights, zero biases), so every run of a model starts from
+    /// the same parameters — the same contract the artifact snapshots
+    /// provide.
     pub fn load_init(&self, meta: &ModelMeta) -> Result<Vec<crate::tensor::Tensor>> {
+        if meta.is_sim() {
+            let base = sim_init_seed(&meta.name);
+            let mut out = Vec::with_capacity(meta.params.len());
+            for (i, spec) in meta.params.iter().enumerate() {
+                let t = if spec.compressible() {
+                    let fan_in = spec.shape[0].max(1) as f32;
+                    // 0.5/fan_in keeps fresh-logit variance well under 1
+                    // for every zoo model, so the initial loss sits close
+                    // to ln(classes) (pinned by the sim backend tests)
+                    let scale = (0.5 / fan_in).sqrt();
+                    let mut rng = crate::util::rng::Rng::new(
+                        base ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+                    );
+                    let data = rng.normals(spec.numel()).iter().map(|v| v * scale).collect();
+                    crate::tensor::Tensor::new(data, spec.shape.clone())
+                } else {
+                    crate::tensor::Tensor::zeros(&spec.shape)
+                };
+                out.push(t);
+            }
+            return Ok(out);
+        }
         let bytes = std::fs::read(&meta.init_file)
             .with_context(|| format!("reading {}", meta.init_file.display()))?;
         if bytes.len() != meta.total_params * 4 {
@@ -249,5 +369,59 @@ mod tests {
         }
         let reg = Registry::load(default_artifacts_dir()).unwrap();
         assert!(reg.model("nope").is_err());
+    }
+
+    #[test]
+    fn sim_registry_is_self_contained() {
+        let reg = Registry::sim();
+        assert!(reg.models.len() >= 4);
+        for (name, m) in &reg.models {
+            assert!(m.is_sim(), "{name} should be a sim model");
+            assert_eq!(m.params.len() % 2, 0);
+            // param widths chain input -> .. -> classes
+            let mut width = m.input_numel();
+            for pair in m.params.chunks(2) {
+                assert_eq!(pair[0].shape[0], width, "{name}: weight does not chain");
+                assert_eq!(pair[0].shape[1], pair[1].shape[0], "{name}: bias width");
+                assert!(pair[0].compressible() && !pair[1].compressible());
+                width = pair[0].shape[1];
+            }
+            assert_eq!(width, m.num_classes, "{name}: output width");
+            let total: usize = m.params.iter().map(|p| p.numel()).sum();
+            assert_eq!(total, m.total_params, "{name}: total_params");
+        }
+    }
+
+    #[test]
+    fn sim_init_is_deterministic_and_shaped() {
+        let reg = Registry::sim();
+        let m = reg.model("mlp_deep_c10").unwrap();
+        let a = reg.load_init(m).unwrap();
+        let b = reg.load_init(m).unwrap();
+        assert_eq!(a.len(), m.n_layers());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y, "init must replay bit-for-bit");
+        }
+        // weights nonzero, biases zero
+        for (t, spec) in a.iter().zip(&m.params) {
+            assert_eq!(t.shape, spec.shape);
+            if spec.compressible() {
+                assert!(t.sqnorm() > 0.0);
+            } else {
+                assert_eq!(t.sqnorm(), 0.0);
+            }
+        }
+        // different models draw different weights
+        let other = reg.model("mlp_c10").unwrap();
+        let o = reg.load_init(other).unwrap();
+        assert_ne!(o[0].data[..4], a[0].data[..4]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn detect_falls_back_to_sim_without_pjrt() {
+        let reg = Registry::detect().unwrap();
+        assert!(reg.models.values().all(|m| m.is_sim()));
+        assert!(reg.models.contains_key("mlp_c10"));
     }
 }

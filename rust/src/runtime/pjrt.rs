@@ -1,0 +1,324 @@
+//! PJRT backend (behind the `pjrt` cargo feature): loads AOT HLO-text
+//! artifacts and executes them on the CPU PJRT client, exactly as the
+//! seed runtime did.  Python never runs here.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! Compiled executables are cached per artifact path inside
+//! [`PjrtContext`]; [`PjrtBackend`] packs/unpacks the calling convention
+//! exported by `aot.py` (DESIGN.md §1).  The context sits behind a mutex
+//! in [`Runtime`] so the parallel trainer can share it across worker
+//! threads (PJRT CPU executions serialize; correctness first, overlap is
+//! a future PR).
+
+use super::{Backend, Runtime};
+use crate::data::Batch;
+use crate::models::ModelMeta;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// The PJRT client plus the per-artifact executable cache.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    /// cumulative wall-clock spent inside PJRT executions
+    pub exec_secs: f64,
+    pub execs: u64,
+}
+
+// NOTE: `Runtime` wraps this context in a `Mutex` and the parallel
+// trainer shares it across scoped threads, so the compiler requires
+// `PjrtContext: Send` — which means the `xla` crate's client/executable
+// types must be `Send`.  The vendored stub trivially is; when swapping
+// in a real xla-rs build, use bindings whose client is thread-safe (the
+// PJRT C API is) or the crate will refuse to compile rather than risk
+// moving thread-affine handles.  No `unsafe impl` here on purpose.
+
+impl PjrtContext {
+    pub fn cpu() -> Result<PjrtContext> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtContext { client, cache: HashMap::new(), exec_secs: 0.0, execs: 0 })
+    }
+
+    /// Compile (or fetch from cache) the executable for an HLO-text file.
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref().to_path_buf();
+        if self.cache.contains_key(&path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        self.cache.insert(path, exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact.  Inputs are xla Literals; the output
+    /// tuple (aot.py lowers with return_tuple=True) is decomposed.
+    pub fn exec(&mut self, path: impl AsRef<Path>, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let path = path.as_ref().to_path_buf();
+        self.load(&path)?;
+        let exe = self.cache.get(&path).unwrap();
+        let t0 = Instant::now();
+        let bufs = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", path.display()))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        self.exec_secs += t0.elapsed().as_secs_f64();
+        self.execs += 1;
+        lit.to_tuple().map_err(|e| anyhow!("untupling result: {e:?}"))
+    }
+}
+
+// ---------------------------------------------------------------- literals
+
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("scalar: {e:?}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty literal"))
+}
+
+// ---------------------------------------------------------------- backend
+
+/// Artifact-backed model programs.
+pub struct PjrtBackend {
+    pub meta: ModelMeta,
+}
+
+impl PjrtBackend {
+    pub fn new(meta: &ModelMeta) -> PjrtBackend {
+        PjrtBackend { meta: meta.clone() }
+    }
+
+    fn ctx<'a>(&self, rt: &'a Runtime) -> Result<std::sync::MutexGuard<'a, PjrtContext>> {
+        let m = rt.pjrt.as_ref().ok_or_else(|| {
+            anyhow!(
+                "model '{}' needs a live PJRT client, but this runtime has none \
+                 (Runtime::sim(), or Runtime::cpu() whose PJRT client failed to initialize \
+                 — is the xla dependency still the vendored stub?)",
+                self.meta.name
+            )
+        })?;
+        Ok(m.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    fn batch_literals(&self, xf: &[f32], xi: &[i32], y: &[i32]) -> Result<(xla::Literal, xla::Literal)> {
+        let b = self.meta.batch;
+        let mut xshape = vec![b];
+        xshape.extend_from_slice(&self.meta.input_shape);
+        let x = if self.meta.input_dtype == "i32" {
+            literal_i32(xi, &xshape)?
+        } else {
+            literal_f32(xf, &xshape)?
+        };
+        let yshape = if self.meta.is_lm() { vec![b, self.meta.seq_len] } else { vec![b] };
+        let ylit = literal_i32(y, &yshape)?;
+        Ok((x, ylit))
+    }
+
+    fn param_literals(&self, params: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        params
+            .iter()
+            .map(|p| literal_f32(&p.data, &p.shape))
+            .collect()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt({})", self.meta.name)
+    }
+
+    /// AOT artifacts are shape-specialized: only the lowered batch size
+    /// executes.
+    fn fixed_batch(&self) -> Option<usize> {
+        Some(self.meta.batch)
+    }
+
+    /// train_step(params.., x, y) -> (loss, grads..)
+    fn train_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, Vec<Tensor>)> {
+        let mut inputs = self.param_literals(params)?;
+        let (x, y) = self.batch_literals(&batch.xf, &batch.xi, &batch.y)?;
+        inputs.push(x);
+        inputs.push(y);
+        let out = self.ctx(rt)?.exec(&self.meta.train_artifact, &inputs)?;
+        if out.len() != 1 + params.len() {
+            return Err(anyhow!(
+                "train_step returned {} outputs, want {}",
+                out.len(),
+                1 + params.len()
+            ));
+        }
+        let loss = scalar_f32(&out[0])?;
+        let grads = out[1..]
+            .iter()
+            .zip(params)
+            .map(|(l, p)| Ok(Tensor::new(to_vec_f32(l)?, p.shape.clone())))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    /// eval_step(params.., x, y) -> (mean loss, correct count)
+    fn eval_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, f32)> {
+        let mut inputs = self.param_literals(params)?;
+        let (x, y) = self.batch_literals(&batch.xf, &batch.xi, &batch.y)?;
+        inputs.push(x);
+        inputs.push(y);
+        let out = self.ctx(rt)?.exec(&self.meta.eval_artifact, &inputs)?;
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    /// hvp_step(params.., v.., x, y) -> Hv..  (Fig. 3 probe; mlp only)
+    fn hvp_step(&self, rt: &Runtime, params: &[Tensor], v: &[Tensor], batch: &Batch) -> Result<Vec<Tensor>> {
+        let art = self
+            .meta
+            .hvp_artifact
+            .clone()
+            .ok_or_else(|| anyhow!("{} has no hvp artifact", self.meta.name))?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.extend(self.param_literals(v)?);
+        let (x, y) = self.batch_literals(&batch.xf, &batch.xi, &batch.y)?;
+        inputs.push(x);
+        inputs.push(y);
+        let out = self.ctx(rt)?.exec(&art, &inputs)?;
+        out.iter()
+            .zip(params)
+            .map(|(l, p)| Ok(Tensor::new(to_vec_f32(l)?, p.shape.clone())))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{default_artifacts_dir, Registry};
+
+    fn ready() -> Option<(Registry, PjrtContext)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("metadata.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let Ok(ctx) = PjrtContext::cpu() else {
+            eprintln!("skipping: PJRT client unavailable (xla stub?)");
+            return None;
+        };
+        Some((Registry::load(dir).unwrap(), ctx))
+    }
+
+    #[test]
+    fn mlp_train_step_runs_and_shapes_match() {
+        let Some((reg, _)) = ready() else { return };
+        let meta = reg.model("mlp_c10").unwrap();
+        let params = reg.load_init(meta).unwrap();
+        let progs = super::super::ModelPrograms::new(meta).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let ds = crate::data::Dataset::images("c10", 10, meta.input_numel(), 64, 32, 1.0, 1.0, 7);
+        let idx: Vec<usize> = (0..meta.batch).collect();
+        let batch = ds.train_batch(&idx);
+        let (loss, grads) = progs.train_step(&rt, &params, &batch).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+        assert_eq!(grads.len(), params.len());
+        for (g, p) in grads.iter().zip(&params) {
+            assert_eq!(g.shape, p.shape);
+        }
+        // fresh model on 10 classes: loss near ln(10)
+        assert!((loss - 10f32.ln()).abs() < 1.0, "loss={loss}");
+        let (eloss, correct) = progs.eval_step(&rt, &params, &batch).unwrap();
+        assert!(eloss.is_finite());
+        assert!((0.0..=meta.batch as f32).contains(&correct));
+    }
+
+    #[test]
+    fn kernel_parity_powersgd_round() {
+        // rust-native PowerSGD round == the L1 Pallas artifact, same inputs
+        let Some((reg, mut ctx)) = ready() else { return };
+        for r in [1usize, 2, 4] {
+            let name = format!("powersgd_round_n128_k64_r{r}");
+            let Some(k) = reg.kernels.get(&name) else { continue };
+            let (n, kk) = (k.n, k.k);
+            let mut rng = crate::util::rng::Rng::new(33 + r as u64);
+            let m = rng.normals(n * kk);
+            let q0 = rng.normals(kk * r);
+
+            // artifact path
+            let inputs = vec![
+                literal_f32(&m, &[n, kk]).unwrap(),
+                literal_f32(&q0, &[kk, r]).unwrap(),
+            ];
+            let out = ctx.exec(&k.file, &inputs).unwrap();
+            assert_eq!(out.len(), 3);
+            let d_art = to_vec_f32(&out[2]).unwrap();
+
+            // rust-native path (single worker round == the kernel's math)
+            use crate::tensor::linalg;
+            let mut p = vec![0.0f32; n * r];
+            linalg::gemm_nk_kr(&m, &q0, n, kk, r, &mut p);
+            linalg::orthonormalize_cols(&mut p, n, r, 1e-8);
+            let mut qn = vec![0.0f32; kk * r];
+            linalg::gemm_tn_kr(&m, &p, n, kk, r, &mut qn);
+            let mut d = vec![0.0f32; n * kk];
+            linalg::gemm_nr_rk(&p, &qn, n, kk, r, &mut d);
+
+            for (a, b) in d.iter().zip(&d_art) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "r={r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_parity_topk_and_sqnorm() {
+        let Some((reg, mut ctx)) = ready() else { return };
+        if let Some(k) = reg.kernels.get("topk_n4096_k410") {
+            let mut rng = crate::util::rng::Rng::new(77);
+            let x = rng.normals(k.n);
+            let out = ctx.exec(&k.file, &[literal_f32(&x, &[k.n]).unwrap()]).unwrap();
+            let y = to_vec_f32(&out[0]).unwrap();
+            let nz = y.iter().filter(|v| **v != 0.0).count();
+            assert_eq!(nz, k.k);
+            // every kept value is an original value
+            for (a, b) in x.iter().zip(&y) {
+                assert!(*b == 0.0 || a == b);
+            }
+        }
+        if let Some(k) = reg.kernels.get("sqnorm_n4096") {
+            let mut rng = crate::util::rng::Rng::new(78);
+            let x = rng.normals(k.n);
+            let out = ctx.exec(&k.file, &[literal_f32(&x, &[k.n]).unwrap()]).unwrap();
+            let got = to_vec_f32(&out[0]).unwrap()[0];
+            let want = crate::tensor::linalg::sqnorm(&x);
+            assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "{got} vs {want}");
+        }
+    }
+}

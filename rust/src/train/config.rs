@@ -43,6 +43,9 @@ pub struct TrainConfig {
     pub label: String,
     pub model: String,
     pub workers: usize,
+    /// host OS threads for the parallel execution engine (1 = the
+    /// sequential oracle path; N-thread results are bit-identical to it)
+    pub threads: usize,
     pub epochs: usize,
     pub train_size: usize,
     pub test_size: usize,
@@ -70,8 +73,12 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             label: "run".into(),
-            model: "resnet_c10".into(),
+            // present in both the sim zoo and the artifact registry, so a
+            // bare `accordion train` works in every build; experiment
+            // harnesses always set their own model
+            model: "mlp_c10".into(),
             workers: 4,
+            threads: 1,
             epochs: 30,
             train_size: 2048,
             test_size: 512,
@@ -166,6 +173,7 @@ impl TrainConfig {
             label: t.str_or("label", &d.label),
             model: t.str_or("model", &d.model),
             workers: t.usize_or("workers", d.workers),
+            threads: t.usize_or("threads", d.threads).max(1),
             epochs: t.usize_or("epochs", d.epochs),
             train_size: t.usize_or("data.train_size", d.train_size),
             test_size: t.usize_or("data.test_size", d.test_size),
@@ -292,6 +300,15 @@ bandwidth_mbps = 250.0
         assert!(matches!(c.method, MethodCfg::TopK { frac_low, .. } if (frac_low - 0.99).abs() < 1e-6));
         assert!(matches!(c.controller, ControllerCfg::Accordion { interval: 3, .. }));
         assert_eq!(c.bandwidth_mbps, 250.0);
+    }
+
+    #[test]
+    fn threads_key_parses_and_clamps() {
+        let t = Table::parse("threads = 8").unwrap();
+        assert_eq!(TrainConfig::from_table(&t).unwrap().threads, 8);
+        let t0 = Table::parse("threads = 0").unwrap();
+        assert_eq!(TrainConfig::from_table(&t0).unwrap().threads, 1);
+        assert_eq!(TrainConfig::default().threads, 1);
     }
 
     #[test]

@@ -1,10 +1,10 @@
 //! The distributed training loop: the L3 hot path.
 //!
 //! Per global step (bulk-synchronous, N logical workers):
-//!   1. each worker executes the AOT train-step HLO on its data shard
-//!      (PJRT; `batch_mult` micro-steps are accumulated for large-batch
-//!      mode, exactly like the paper's App. A gradient-accumulation
-//!      simulation);
+//!   1. each worker executes the model's train-step program on its data
+//!      shard (sim backend or PJRT AOT artifact — see `runtime`);
+//!      `batch_mult` micro-steps are accumulated for large-batch mode,
+//!      exactly like the paper's App. A gradient-accumulation simulation;
 //!   2. per layer: 1-d params are all-reduced raw; >=2-d params go
 //!      through the configured compressor at the level the controller
 //!      chose for this epoch;
@@ -12,23 +12,47 @@
 //!      data-parallel keeps replicas identical, so one parameter copy is
 //!      exact — DESIGN.md §3).
 //!
+//! `cfg.threads > 1` turns on the parallel execution engine: phase 1
+//! fans the workers' gradient computations out across scoped OS threads,
+//! and phase 2 fans the per-layer compressor rounds out the same way.
+//! Determinism is preserved by construction —
+//!   * every (worker, micro-step) loss/time lands in a fixed cell and is
+//!     folded on the main thread in the sequential `(a, w)` order;
+//!   * each layer owns its own compressor instance (so per-layer RNG /
+//!     error-feedback streams are identical however layers are scheduled
+//!     across threads) and its own communication ledger shard, folded in
+//!     layer order;
+//!   * worker gradient accumulation happens thread-locally in micro-step
+//!     order, identical to the sequential loop;
+//! so an N-thread run is bit-identical to the `threads = 1` sequential
+//! oracle (pinned by `rust/tests/parallel_parity.rs`) — with ONE
+//! exception: `EpochStats.secs`.  The simulated compute clock is built
+//! from measured per-step wall times, and at `threads > 1` those
+//! measurements are taken under host-core contention, so the time
+//! column is only calibrated on the sequential path (which is what the
+//! repro harness runs).  Use `threads > 1` for wall-clock throughput;
+//! use `threads = 1` when the simulated time column matters.  A
+//! backend-calibrated cost model that decouples the simulated clock
+//! from host threading is on the roadmap.
+//!
 //! Per epoch: a held-out evaluation, the Δ-norm observation for the
-//! controller (Accordion's detector input), and a metrics row.
+//! controller (Accordion's detector input — accumulated across the
+//! controller's detection window, not a single epoch), and a metrics row.
 
 pub mod checkpoint;
 pub mod config;
 
 use crate::cluster::network::NetworkModel;
 use crate::collectives::Comm;
-use crate::compress::Level;
-use crate::coordinator::EpochObs;
+use crate::compress::{DistCompressor, Level};
+use crate::coordinator::{Decision, EpochObs};
 use crate::data::{Batch, Dataset, EpochSampler};
 use crate::metrics::{EpochStats, RunLog, SimClock};
-use crate::models::Registry;
+use crate::models::{ModelMeta, Registry};
 use crate::optim::{LrSchedule, Sgd};
 use crate::runtime::{ModelPrograms, Runtime};
 use crate::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use config::{MethodCfg, TrainConfig};
 use std::time::Instant;
 
@@ -60,21 +84,27 @@ pub fn dataset_for(cfg: &TrainConfig, reg: &Registry) -> Result<Dataset> {
 }
 
 /// Run one full training job; returns the per-epoch log.
-pub fn run(cfg: &TrainConfig, reg: &Registry, rt: &mut Runtime) -> Result<RunLog> {
+pub fn run(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<RunLog> {
     run_full(cfg, reg, rt).map(|(log, _)| log)
 }
 
 /// Like [`run`] but also returns the final parameters (for
 /// checkpointing).
-pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &mut Runtime) -> Result<(RunLog, Vec<Tensor>)> {
+pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunLog, Vec<Tensor>)> {
     let meta = reg.model(&cfg.model)?.clone();
-    let progs = ModelPrograms::new(&meta);
+    let progs = ModelPrograms::new(&meta)?;
     let mut params = reg.load_init(&meta)?;
     let n_layers = meta.n_layers();
     let ds = dataset_for(cfg, reg)?;
+    let threads = cfg.threads.max(1);
 
-    let mut compressor = cfg.build_compressor();
+    // One compressor instance per layer: per-layer error-feedback and
+    // RNG streams are then identical whichever thread runs the layer's
+    // round, which is what makes N-thread execution bit-reproducible.
+    let mut compressors: Vec<Box<dyn DistCompressor>> =
+        (0..n_layers).map(|_| cfg.build_compressor()).collect();
     let mut controller = cfg.build_controller(n_layers);
+    let window = controller.detection_interval().max(1);
     let mut opt = Sgd::new(cfg.momentum, cfg.nesterov, cfg.weight_decay);
     let global_batch = cfg.workers * meta.batch;
     let sched = LrSchedule {
@@ -84,14 +114,23 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &mut Runtime) -> Result<(
         decay_epochs: cfg.decay_epochs.clone(),
         decay_factor: cfg.decay_factor,
     };
-    let mut comm = Comm::new(NetworkModel::new(cfg.workers, cfg.bandwidth_mbps, cfg.latency_us));
+    let net = NetworkModel::new(cfg.workers, cfg.bandwidth_mbps, cfg.latency_us);
+    // per-layer communication ledger shards, folded in layer order
+    let mut comms: Vec<Comm> = (0..n_layers).map(|_| Comm::new(net.clone())).collect();
     let mut clock = SimClock::default();
 
     // scratch (allocated once; the hot loop is allocation-free)
     let mut worker_grads: Vec<Vec<Tensor>> =
         vec![params.iter().map(|p| Tensor::zeros(&p.shape)).collect(); cfg.workers];
     let mut agg: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+    // Δ accumulators: `edelta` is this epoch's mean-gradient sum (the
+    // per-epoch grad-norm metric); `delta` accumulates `edelta` across
+    // the controller's detection window (the detector's Alg.-1 input)
     let mut delta: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+    let mut edelta: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+    // per-(worker, micro-step) loss/time cells, folded in sequential order
+    let mut cell_loss: Vec<f32> = Vec::new();
+    let mut cell_time: Vec<f64> = Vec::new();
 
     let mut log = RunLog { label: cfg.label.clone(), ..Default::default() };
 
@@ -129,70 +168,68 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &mut Runtime) -> Result<(
 
         let mut train_loss_sum = 0.0f64;
         let mut train_loss_n = 0usize;
-        delta.iter_mut().for_each(|d| d.fill(0.0));
+        // the per-epoch Δ resets every epoch; the windowed Δ resets at
+        // detection-window starts only (Alg. 1 compares whole-window
+        // accumulated-gradient norms)
+        edelta.iter_mut().for_each(|d| d.fill(0.0));
+        if epoch % window == 0 {
+            delta.iter_mut().for_each(|d| d.fill(0.0));
+        }
+        cell_loss.resize(cfg.workers * batch_mult, 0.0);
+        cell_time.resize(cfg.workers * batch_mult, 0.0);
 
         for s in 0..global_steps {
-            // 1. gradient computation (with accumulation for large batch)
-            for w in 0..cfg.workers {
-                for g in &mut worker_grads[w] {
-                    g.fill(0.0);
-                }
-            }
+            // 1. gradient computation (with accumulation for large
+            //    batch), workers fanned out across threads
+            step_gradients(
+                &progs,
+                rt,
+                &params,
+                &ds,
+                &sampler,
+                s,
+                batch_mult,
+                meta.batch,
+                threads,
+                &mut worker_grads,
+                &mut cell_loss,
+                &mut cell_time,
+            )?;
+            // fold losses/compute-clock in the sequential (a, w) order so
+            // the f64 sums are bit-identical at every thread count
             let mut step_compute = 0.0f64;
             for a in 0..batch_mult {
-                let micro = s * batch_mult + a;
                 let mut worker_max = 0.0f64;
                 for w in 0..cfg.workers {
-                    let idx = sampler
-                        .shard(micro, w, cfg.workers, meta.batch)
-                        .expect("sampler bounds");
-                    let batch: Batch = ds.train_batch(&idx);
-                    let t0 = Instant::now();
-                    let (loss, grads) = progs.train_step(rt, &params, &batch)?;
-                    worker_max = worker_max.max(t0.elapsed().as_secs_f64());
-                    train_loss_sum += loss as f64;
+                    train_loss_sum += cell_loss[w * batch_mult + a] as f64;
                     train_loss_n += 1;
-                    for (acc, g) in worker_grads[w].iter_mut().zip(&grads) {
-                        acc.add_assign(g);
-                    }
+                    worker_max = worker_max.max(cell_time[w * batch_mult + a]);
                 }
                 step_compute += worker_max;
             }
             if batch_mult > 1 {
                 let inv = 1.0 / batch_mult as f32;
-                for w in 0..cfg.workers {
-                    for g in &mut worker_grads[w] {
+                for wg in worker_grads.iter_mut() {
+                    for g in wg.iter_mut() {
                         g.scale(inv);
                     }
                 }
             }
             clock.compute_secs += step_compute;
 
-            // 2. per-layer aggregation (compressor or raw all-reduce)
-            for l in 0..n_layers {
-                let views: Vec<&[f32]> = (0..cfg.workers)
-                    .map(|w| worker_grads[w][l].data.as_slice())
-                    .collect();
-                let compressible =
-                    meta.params[l].compressible() && !matches!(cfg.method, MethodCfg::None);
-                if compressible {
-                    compressor.round(
-                        l,
-                        &views,
-                        &meta.params[l].shape,
-                        decision.levels[l],
-                        &mut comm,
-                        &mut agg[l].data,
-                    );
-                } else {
-                    comm.allreduce_mean_into(&views, &mut agg[l].data);
-                }
-                // Δ accumulator for the detector (raw mean gradient)
-                let inv = 1.0 / cfg.workers as f32;
-                for w in 0..cfg.workers {
-                    crate::tensor::linalg::axpy(inv, &worker_grads[w][l].data, &mut delta[l].data);
-                }
-            }
+            // 2. per-layer aggregation (compressor or raw all-reduce),
+            //    layers fanned out across threads
+            aggregate_layers(
+                cfg,
+                &meta,
+                &decision,
+                threads,
+                &worker_grads,
+                &mut compressors,
+                &mut comms,
+                &mut agg,
+                &mut edelta,
+            );
 
             // 3. optimizer
             opt.step(&mut params, &agg, lr_eff);
@@ -201,7 +238,14 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &mut Runtime) -> Result<(
         // evaluation (not charged to the simulated training clock)
         let (test_loss, test_acc) = evaluate(&progs, rt, &params, &ds, cfg, &meta)?;
 
-        // detector observation
+        // fold this epoch's Δ into the windowed accumulator (one pass per
+        // epoch; identical at every thread count)
+        for (d, e) in delta.iter_mut().zip(&edelta) {
+            d.add_assign(e);
+        }
+        let epoch_sqnorm: f32 = edelta.iter().map(|d| d.sqnorm()).sum();
+
+        // detector observation (whole-window accumulated statistics)
         let layer_sqnorms: Vec<f32> = delta.iter().map(|d| d.sqnorm()).collect();
         let layer_abs_means: Vec<f32> = delta
             .iter()
@@ -242,17 +286,22 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &mut Runtime) -> Result<(
                 .map(|(l, _)| decision.levels[l] == Level::Low)
                 .collect(),
         );
+        // fold per-layer ledger shards in layer order: deterministic and
+        // thread-count independent
+        let floats: u64 = comms.iter().map(|c| c.ledger.floats).sum();
+        let comm_secs: f64 = comms.iter().map(|c| c.ledger.secs).sum();
         log.epochs.push(EpochStats {
             epoch,
             lr: lr_eff,
             train_loss: (train_loss_sum / train_loss_n.max(1) as f64) as f32,
             test_loss,
             test_acc,
-            floats: comm.ledger.floats,
-            secs: clock.compute_secs + comm.ledger.secs,
-            grad_norm: model_sqnorm.sqrt(),
+            floats,
+            secs: clock.compute_secs + comm_secs,
+            grad_norm: epoch_sqnorm.sqrt(),
             frac_low: n_low as f32 / n_comp as f32,
             batch_mult,
+            window_grad_norm: model_sqnorm.sqrt(),
         });
         log::info!(
             "[{}] epoch {:>3} lr={:.4} loss={:.3} acc={:.3} floats={} t={:.1}s (mult x{})",
@@ -261,39 +310,231 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &mut Runtime) -> Result<(
             lr_eff,
             log.epochs.last().unwrap().train_loss,
             test_acc,
-            comm.ledger.floats,
-            clock.compute_secs + comm.ledger.secs,
+            floats,
+            clock.compute_secs + comm_secs,
             batch_mult
         );
     }
     Ok((log, params))
 }
 
-/// Held-out evaluation at the artifact's batch size.
-/// Returns (mean loss, accuracy) — accuracy is token-level for LM tasks.
+/// Phase-1 work item: compute and accumulate gradients for the worker
+/// range starting at `w0`.  `grads`/`losses`/`times` are this range's
+/// disjoint output slots (`losses`/`times` laid out `[worker][micro]`).
+#[allow(clippy::too_many_arguments)]
+fn grad_task(
+    progs: &ModelPrograms,
+    rt: &Runtime,
+    params: &[Tensor],
+    ds: &Dataset,
+    sampler: &EpochSampler,
+    step: usize,
+    batch_mult: usize,
+    workers: usize,
+    batch_size: usize,
+    w0: usize,
+    grads: &mut [Vec<Tensor>],
+    losses: &mut [f32],
+    times: &mut [f64],
+) -> Result<()> {
+    for (wi, wg) in grads.iter_mut().enumerate() {
+        let w = w0 + wi;
+        for g in wg.iter_mut() {
+            g.fill(0.0);
+        }
+        for a in 0..batch_mult {
+            let micro = step * batch_mult + a;
+            let idx = sampler
+                .shard(micro, w, workers, batch_size)
+                .expect("sampler bounds");
+            let batch: Batch = ds.train_batch(&idx);
+            let t0 = Instant::now();
+            let (loss, g) = progs.train_step(rt, params, &batch)?;
+            times[wi * batch_mult + a] = t0.elapsed().as_secs_f64();
+            losses[wi * batch_mult + a] = loss;
+            for (acc, gg) in wg.iter_mut().zip(&g) {
+                acc.add_assign(gg);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Phase 1: fan the workers' gradient computations out across `threads`
+/// scoped OS threads (contiguous worker ranges; sequential when
+/// `threads <= 1`).
+#[allow(clippy::too_many_arguments)]
+fn step_gradients(
+    progs: &ModelPrograms,
+    rt: &Runtime,
+    params: &[Tensor],
+    ds: &Dataset,
+    sampler: &EpochSampler,
+    step: usize,
+    batch_mult: usize,
+    batch_size: usize,
+    threads: usize,
+    worker_grads: &mut [Vec<Tensor>],
+    losses: &mut [f32],
+    times: &mut [f64],
+) -> Result<()> {
+    let workers = worker_grads.len();
+    if threads <= 1 || workers <= 1 {
+        return grad_task(
+            progs, rt, params, ds, sampler, step, batch_mult, workers, batch_size, 0, worker_grads,
+            losses, times,
+        );
+    }
+    let wpt = workers.div_ceil(threads.min(workers));
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for (ci, ((gh, lh), th)) in worker_grads
+            .chunks_mut(wpt)
+            .zip(losses.chunks_mut(wpt * batch_mult))
+            .zip(times.chunks_mut(wpt * batch_mult))
+            .enumerate()
+        {
+            let w0 = ci * wpt;
+            handles.push(scope.spawn(move || {
+                grad_task(
+                    progs, rt, params, ds, sampler, step, batch_mult, workers, batch_size, w0, gh,
+                    lh, th,
+                )
+            }));
+        }
+        for h in handles {
+            h.join().expect("gradient worker thread panicked")?;
+        }
+        Ok(())
+    })
+}
+
+/// Phase-2 work item: run the aggregation round for the layer range
+/// starting at `l0`.  Each layer uses its own compressor instance,
+/// ledger shard, and output/Δ slots, so ranges are fully independent.
+#[allow(clippy::too_many_arguments)]
+fn layer_task(
+    cfg: &TrainConfig,
+    meta: &ModelMeta,
+    decision: &Decision,
+    worker_grads: &[Vec<Tensor>],
+    l0: usize,
+    compressors: &mut [Box<dyn DistCompressor>],
+    comms: &mut [Comm],
+    agg: &mut [Tensor],
+    edelta: &mut [Tensor],
+) {
+    let workers = worker_grads.len();
+    for (i, comp) in compressors.iter_mut().enumerate() {
+        let l = l0 + i;
+        let views: Vec<&[f32]> = worker_grads.iter().map(|wg| wg[l].data.as_slice()).collect();
+        let compressible = meta.params[l].compressible() && !matches!(cfg.method, MethodCfg::None);
+        if compressible {
+            comp.round(
+                l,
+                &views,
+                &meta.params[l].shape,
+                decision.levels[l],
+                &mut comms[i],
+                &mut agg[i].data,
+            );
+        } else {
+            comms[i].allreduce_mean_into(&views, &mut agg[i].data);
+        }
+        // per-epoch Δ accumulator for the detector (raw mean gradient)
+        let inv = 1.0 / workers as f32;
+        for wg in worker_grads {
+            crate::tensor::linalg::axpy(inv, &wg[l].data, &mut edelta[i].data);
+        }
+    }
+}
+
+/// Phase 2: fan the per-layer compressor rounds out across `threads`
+/// scoped OS threads (contiguous layer ranges; sequential when
+/// `threads <= 1`).
+#[allow(clippy::too_many_arguments)]
+fn aggregate_layers(
+    cfg: &TrainConfig,
+    meta: &ModelMeta,
+    decision: &Decision,
+    threads: usize,
+    worker_grads: &[Vec<Tensor>],
+    compressors: &mut [Box<dyn DistCompressor>],
+    comms: &mut [Comm],
+    agg: &mut [Tensor],
+    edelta: &mut [Tensor],
+) {
+    let n_layers = agg.len();
+    if threads <= 1 || n_layers <= 1 {
+        layer_task(cfg, meta, decision, worker_grads, 0, compressors, comms, agg, edelta);
+        return;
+    }
+    let lpt = n_layers.div_ceil(threads.min(n_layers));
+    std::thread::scope(|scope| {
+        for (ci, (((cs, ms), ags), dls)) in compressors
+            .chunks_mut(lpt)
+            .zip(comms.chunks_mut(lpt))
+            .zip(agg.chunks_mut(lpt))
+            .zip(edelta.chunks_mut(lpt))
+            .enumerate()
+        {
+            let l0 = ci * lpt;
+            scope.spawn(move || layer_task(cfg, meta, decision, worker_grads, l0, cs, ms, ags, dls));
+        }
+    });
+}
+
+/// Held-out evaluation.  Full batches at the model's batch size, plus —
+/// when the backend supports variable batch sizes — one final partial
+/// batch so small test sets are evaluated instead of silently skipped.
+/// Returns (example-weighted mean loss, accuracy); accuracy is
+/// token-level for LM tasks.
 pub fn evaluate(
     progs: &ModelPrograms,
-    rt: &mut Runtime,
+    rt: &Runtime,
     params: &[Tensor],
     ds: &Dataset,
     _cfg: &TrainConfig,
     meta: &crate::models::ModelMeta,
 ) -> Result<(f32, f32)> {
     let b = meta.batch;
-    let batches = ds.test_n / b;
-    let mut loss_sum = 0.0f64;
+    if ds.test_n == 0 {
+        bail!("empty test set: nothing to evaluate (data.test_size = 0?)");
+    }
+    let full = ds.test_n / b;
+    let rem = ds.test_n % b;
+    if full == 0 && progs.fixed_batch().is_some() {
+        bail!(
+            "test set ({} examples) is smaller than the artifact batch size ({}); \
+             raise data.test_size or use the sim backend",
+            ds.test_n,
+            b
+        );
+    }
+    let mut loss_sum = 0.0f64; // example-weighted
+    let mut examples = 0.0f64;
     let mut correct = 0.0f64;
     let mut total = 0.0f64;
-    for s in 0..batches {
+    for s in 0..full {
         let idx: Vec<usize> = (s * b..(s + 1) * b).collect();
         let batch = ds.test_batch(&idx);
         let (loss, corr) = progs.eval_step(rt, params, &batch)?;
-        loss_sum += loss as f64;
+        loss_sum += loss as f64 * b as f64;
+        examples += b as f64;
         correct += corr as f64;
         total += if meta.is_lm() { (b * meta.seq_len) as f64 } else { b as f64 };
     }
+    if rem > 0 && progs.fixed_batch().is_none() {
+        let idx: Vec<usize> = (full * b..ds.test_n).collect();
+        let batch = ds.test_batch(&idx);
+        let (loss, corr) = progs.eval_step(rt, params, &batch)?;
+        loss_sum += loss as f64 * rem as f64;
+        examples += rem as f64;
+        correct += corr as f64;
+        total += if meta.is_lm() { (rem * meta.seq_len) as f64 } else { rem as f64 };
+    }
     Ok((
-        (loss_sum / batches.max(1) as f64) as f32,
+        (loss_sum / examples.max(1.0)) as f32,
         (correct / total.max(1.0)) as f32,
     ))
 }

@@ -10,11 +10,17 @@ use accordion::models::default_artifacts_dir;
 use accordion::train::config::{ControllerCfg, MethodCfg};
 
 fn ready() -> Option<Harness> {
-    if !default_artifacts_dir().join("metadata.json").exists() {
+    if !pjrt_artifacts_present() {
         eprintln!("skipping: artifacts not built");
         return None;
     }
     Some(Harness::in_process(true).unwrap())
+}
+
+/// The repro harness drives the artifact model zoo (resnet/vgg/lstm):
+/// it needs both the pjrt build and the artifacts on disk.
+fn pjrt_artifacts_present() -> bool {
+    cfg!(feature = "pjrt") && default_artifacts_dir().join("metadata.json").exists()
 }
 
 #[test]
@@ -39,7 +45,7 @@ fn dataset_calibration_applied_per_model() {
 
 #[test]
 fn harness_run_persists_csv() {
-    if !default_artifacts_dir().join("metadata.json").exists() { return }
+    if !pjrt_artifacts_present() { return }
     // non-fast harness: the test pins its own tiny sizes and epoch count
     let mut h = Harness::in_process(false).unwrap();
     h.out = "runs/test-harness".into();
@@ -63,7 +69,7 @@ fn harness_run_persists_csv() {
 
 #[test]
 fn row_ratios_match_paper_convention() {
-    if !default_artifacts_dir().join("metadata.json").exists() { return }
+    if !pjrt_artifacts_present() { return }
     let mut h = Harness::in_process(false).unwrap();
     h.out = "runs/test-harness".into();
     let mk = |label: &str, level: Level, h: &mut Harness| {
@@ -90,7 +96,7 @@ fn row_ratios_match_paper_convention() {
 
 #[test]
 fn overrides_beat_dataset_calibration() {
-    if default_artifacts_dir().join("metadata.json").exists() {
+    if pjrt_artifacts_present() {
         let mut h = Harness::in_process(false).unwrap();
         h.overrides = vec!["data.sep=0.9".into(), "epochs=2".into()];
         let cfg = h.cfg("t", |c| c.model = "resnet_c100".into()).unwrap();

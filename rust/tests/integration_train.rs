@@ -9,12 +9,21 @@ use accordion::runtime::Runtime;
 use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
 
 fn ready() -> Option<(Registry, Runtime)> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the pjrt feature (sim-backend tests live in sim_train.rs)");
+        return None;
+    }
     let dir = default_artifacts_dir();
     if !dir.join("metadata.json").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return None;
     }
-    Some((Registry::load(dir).unwrap(), Runtime::cpu().unwrap()))
+    let rt = Runtime::cpu().unwrap();
+    if !rt.has_pjrt() {
+        eprintln!("skipping: PJRT client unavailable (xla stub?)");
+        return None;
+    }
+    Some((Registry::load(dir).unwrap(), rt))
 }
 
 fn tiny(label: &str) -> TrainConfig {

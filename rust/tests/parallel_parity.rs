@@ -1,0 +1,167 @@
+//! Parity suite for the parallel execution engine: the same seed run at
+//! 1 vs N host threads, across every compressor family and both
+//! controller kinds, must produce the same training history — final
+//! parameters, per-epoch losses, the floats ledger, and the level trace.
+//!
+//! The engine is designed for *bit*-identical reduction order (fixed
+//! per-cell loss folding, per-layer compressor instances and ledger
+//! shards folded in layer order), so the 1e-6 tolerance here is slack on
+//! top of an exact contract; the ledger and level trace are compared
+//! exactly.  Everything runs on the sim backend: no artifacts, no PJRT.
+
+use accordion::compress::Level;
+use accordion::metrics::RunLog;
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::tensor::Tensor;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+
+fn tiny(label: &str, method: MethodCfg, controller: ControllerCfg, threads: usize) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.label = label.into();
+    c.model = "mlp_deep_c10".into(); // 3 matrix + 3 vector layers
+    c.workers = 4;
+    c.threads = threads;
+    c.epochs = 4;
+    c.train_size = 256;
+    c.test_size = 64;
+    c.data_sep = 0.6;
+    c.warmup_epochs = 1;
+    c.decay_epochs = vec![3];
+    c.method = method;
+    c.controller = controller;
+    c
+}
+
+fn assert_close(a: f32, b: f32, what: &str, ctx: &str) {
+    assert!(
+        (a - b).abs() <= 1e-6 * (1.0 + a.abs().max(b.abs())),
+        "{ctx}: {what} diverged: {a} vs {b}"
+    );
+}
+
+fn assert_run_parity(seq: &(RunLog, Vec<Tensor>), par: &(RunLog, Vec<Tensor>), ctx: &str) {
+    let (slog, sparams) = seq;
+    let (plog, pparams) = par;
+    // final parameters
+    assert_eq!(sparams.len(), pparams.len(), "{ctx}: param count");
+    for (l, (a, b)) in sparams.iter().zip(pparams).enumerate() {
+        assert_eq!(a.shape, b.shape, "{ctx}: layer {l} shape");
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!(
+                (x - y).abs() <= 1e-6 * (1.0 + x.abs().max(y.abs())),
+                "{ctx}: layer {l} param diverged: {x} vs {y}"
+            );
+        }
+    }
+    // controller decisions are part of the contract: exact
+    assert_eq!(slog.level_trace, plog.level_trace, "{ctx}: level trace");
+    assert_eq!(slog.epochs.len(), plog.epochs.len(), "{ctx}: epoch count");
+    for (e, (a, b)) in slog.epochs.iter().zip(&plog.epochs).enumerate() {
+        let ectx = format!("{ctx} epoch {e}");
+        // the floats ledger counts integer payloads: exact
+        assert_eq!(a.floats, b.floats, "{ectx}: floats ledger");
+        assert_eq!(a.batch_mult, b.batch_mult, "{ectx}: batch_mult");
+        assert_close(a.train_loss, b.train_loss, "train_loss", &ectx);
+        assert_close(a.test_loss, b.test_loss, "test_loss", &ectx);
+        assert_close(a.test_acc, b.test_acc, "test_acc", &ectx);
+        assert_close(a.grad_norm, b.grad_norm, "grad_norm", &ectx);
+        assert_close(a.window_grad_norm, b.window_grad_norm, "window_grad_norm", &ectx);
+        assert_close(a.lr, b.lr, "lr", &ectx);
+        assert_close(a.frac_low, b.frac_low, "frac_low", &ectx);
+    }
+}
+
+#[test]
+fn parallel_matches_sequential_oracle_across_methods_and_controllers() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let methods: Vec<(&str, MethodCfg)> = vec![
+        ("none", MethodCfg::None),
+        ("powersgd", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+        ("topk", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 }),
+        ("randomk", MethodCfg::RandomK { frac_low: 0.99, frac_high: 0.25 }),
+        ("qsgd", MethodCfg::Qsgd { bits_low: 8, bits_high: 4 }),
+    ];
+    let controllers: Vec<(&str, ControllerCfg)> = vec![
+        ("accordion", ControllerCfg::Accordion { eta: 0.5, interval: 2 }),
+        ("static", ControllerCfg::Static(Level::Low)),
+    ];
+    for (mname, method) in &methods {
+        for (cname, controller) in &controllers {
+            let ctx = format!("{mname}/{cname}");
+            let seq = train::run_full(
+                &tiny(&format!("{ctx}/t1"), method.clone(), controller.clone(), 1),
+                &reg,
+                &rt,
+            )
+            .unwrap();
+            for threads in [2usize, 4] {
+                let par = train::run_full(
+                    &tiny(&format!("{ctx}/t{threads}"), method.clone(), controller.clone(), threads),
+                    &reg,
+                    &rt,
+                )
+                .unwrap();
+                assert_run_parity(&seq, &par, &format!("{ctx} x{threads}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_count_above_workers_and_layers_is_safe() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let seq = train::run_full(
+        &tiny("overshoot/t1", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+              ControllerCfg::Accordion { eta: 0.5, interval: 1 }, 1),
+        &reg,
+        &rt,
+    )
+    .unwrap();
+    // 16 threads >> 4 workers and >> 6 layers: chunking degenerates to
+    // one item per thread and must still match the oracle
+    let par = train::run_full(
+        &tiny("overshoot/t16", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+              ControllerCfg::Accordion { eta: 0.5, interval: 1 }, 16),
+        &reg,
+        &rt,
+    )
+    .unwrap();
+    assert_run_parity(&seq, &par, "overshoot x16");
+}
+
+#[test]
+fn single_worker_parallel_run_is_safe() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mk = |threads| {
+        let mut c = tiny("w1", MethodCfg::TopK { frac_low: 0.9, frac_high: 0.25 },
+                         ControllerCfg::Static(Level::Low), threads);
+        c.workers = 1;
+        c
+    };
+    let seq = train::run_full(&mk(1), &reg, &rt).unwrap();
+    let par = train::run_full(&mk(4), &reg, &rt).unwrap();
+    assert_run_parity(&seq, &par, "single-worker x4");
+}
+
+#[test]
+fn batch_mode_parity() {
+    // gradient accumulation (batch_mult > 1) exercises the micro-step
+    // cell layout; must still match at N threads
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mk = |threads| {
+        tiny(
+            "batchmode",
+            MethodCfg::None,
+            ControllerCfg::AccordionBatch { eta: 0.5, interval: 1, mult: 4 },
+            threads,
+        )
+    };
+    let seq = train::run_full(&mk(1), &reg, &rt).unwrap();
+    let par = train::run_full(&mk(4), &reg, &rt).unwrap();
+    assert_run_parity(&seq, &par, "batch-mode x4");
+}

@@ -6,7 +6,8 @@
 use accordion::cluster::network::NetworkModel;
 use accordion::collectives::{mean_into, ring_allreduce_mean, Comm};
 use accordion::compress::{
-    powersgd::PowerSgd, randomk::RandomK, topk::TopK, DistCompressor, Level, NoCompression,
+    powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd, topk::TopK,
+    DistCompressor, Level, NoCompression,
 };
 use accordion::coordinator::{accordion::Accordion, Controller, EpochObs};
 use accordion::util::{prop, rng::Rng};
@@ -125,6 +126,99 @@ fn prop_ring_allreduce_ragged_edges() {
             }
         }
     });
+}
+
+/// Ring all-reduce degenerate shapes the chunked reduce-scatter must
+/// still get right: fewer elements than workers (empty chunks for some
+/// ranks), a single worker (identity), and non-divisible chunking.
+#[test]
+fn prop_ring_allreduce_degenerate_shapes() {
+    let mut rng = Rng::new(0x52494e47);
+    let cases: &[(usize, usize)] = &[
+        (5, 3),  // len < workers: 2 ranks own empty chunks
+        (8, 1),  // len << workers
+        (7, 7),  // len == workers
+        (1, 7),  // single worker: identity, no wire
+        (4, 10), // non-divisible: chunk = ceil(10/4), last chunk ragged
+        (3, 10), // non-divisible the other way
+        (6, 2),  // len < workers again, even split impossible
+    ];
+    for &(workers, len) in cases {
+        let mut bufs: Vec<Vec<f32>> = (0..workers).map(|_| prop::vecf(&mut rng, len, 2.0)).collect();
+        let views: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut want = vec![0.0f32; len];
+        mean_into(&views, &mut want);
+        ring_allreduce_mean(&mut bufs);
+        for (w, b) in bufs.iter().enumerate() {
+            for (i, (x, y)) in b.iter().zip(&want).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-4 * (1.0 + y.abs()),
+                    "workers={workers} len={len} worker={w} idx={i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+/// QSGD stochastic rounding is unbiased: the empirical mean of many
+/// independent quantized rounds converges to the true gradient mean.
+#[test]
+fn prop_qsgd_round_unbiased() {
+    let x = vec![0.8f32, -1.2, 0.3, 2.0, -0.05, 1.0, -0.6, 0.1];
+    let trials = 300u64; // >= 200 per the detector-era regression spec
+    let mut acc = vec![0.0f64; x.len()];
+    for t in 0..trials {
+        // fresh compressor per trial: independent rounding streams
+        let mut qs = Qsgd::new(1, 2, 2, 1000 + t);
+        let mut c = comm(1);
+        let mut out = vec![0.0f32; x.len()];
+        qs.round(0, &[x.as_slice()], &[x.len()], Level::Low, &mut c, &mut out);
+        for (a, v) in acc.iter_mut().zip(&out) {
+            *a += *v as f64;
+        }
+    }
+    for (a, v) in acc.iter().zip(&x) {
+        let mean = a / trials as f64;
+        assert!(
+            (mean - *v as f64).abs() < 0.15,
+            "qsgd biased at coordinate: mean {mean} vs true {v}"
+        );
+    }
+}
+
+/// `payload_floats` is the planning contract: for one round of every
+/// compressor it must equal the floats the ledger actually charged.
+#[test]
+fn prop_payload_floats_matches_ledger_charge() {
+    let workers = 3;
+    let shape = [6usize, 8];
+    let numel: usize = shape.iter().product();
+    let mut rng = Rng::new(0xBEEF);
+    let grads: Vec<Vec<f32>> = (0..workers).map(|_| prop::vecf(&mut rng, numel, 1.0)).collect();
+    let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let methods: Vec<Box<dyn DistCompressor>> = vec![
+        Box::new(NoCompression),
+        Box::new(PowerSgd::new(workers, 2, 1, 7)),
+        Box::new(TopK::new(workers, 0.99, 0.25)),
+        Box::new(RandomK::new(workers, 0.99, 0.25, 9)),
+        Box::new(Qsgd::new(workers, 8, 4, 11)),
+        Box::new(SignSgd::new(workers)),
+    ];
+    for mut m in methods {
+        for level in [Level::Low, Level::High] {
+            let mut c = comm(workers);
+            let mut out = vec![0.0f32; numel];
+            let before = c.ledger.floats;
+            m.round(0, &views, &shape, level, &mut c, &mut out);
+            let charged = c.ledger.floats - before;
+            assert_eq!(
+                charged as usize,
+                m.payload_floats(&shape, level),
+                "{}: ledger charge != payload_floats at {level:?}",
+                m.name()
+            );
+        }
+    }
 }
 
 /// Accordion's decision stream: (1) first window low; (2) flat norms with

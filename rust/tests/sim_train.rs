@@ -1,0 +1,252 @@
+//! End-to-end tests over the pure-Rust stack: sim backend -> distributed
+//! trainer -> compressors -> controllers.  These run with NO artifacts
+//! and NO PJRT — they are the tier-1 safety net for every build.
+
+use accordion::compress::Level;
+use accordion::coordinator::{accordion::Accordion, Controller, EpochObs};
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+
+fn tiny(label: &str) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.label = label.into();
+    c.model = "mlp_c10".into();
+    c.epochs = 6;
+    c.train_size = 512;
+    c.test_size = 128;
+    c.data_sep = 0.8;
+    c.warmup_epochs = 1;
+    c.decay_epochs = vec![4];
+    c
+}
+
+#[test]
+fn training_learns_with_every_method() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    for method in [
+        MethodCfg::None,
+        MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+        MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 },
+        MethodCfg::RandomK { frac_low: 0.99, frac_high: 0.25 },
+        MethodCfg::Qsgd { bits_low: 8, bits_high: 4 },
+    ] {
+        let mut cfg = tiny(&format!("sim-{method:?}"));
+        cfg.method = method.clone();
+        cfg.controller = ControllerCfg::Static(Level::Low);
+        let log = train::run(&cfg, &reg, &rt).unwrap();
+        let first = log.epochs.first().unwrap().train_loss;
+        let last = log.epochs.last().unwrap().train_loss;
+        assert!(
+            last < first,
+            "{method:?}: loss did not decrease ({first} -> {last})"
+        );
+        assert!(log.final_acc() > 0.15, "{method:?}: acc {}", log.final_acc());
+        assert!(log.total_floats() > 0);
+        assert!(log.total_secs() > 0.0);
+    }
+}
+
+#[test]
+fn runs_are_deterministic() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut cfg = tiny("sim-det");
+    cfg.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    let a = train::run(&cfg, &reg, &rt).unwrap();
+    let b = train::run(&cfg, &reg, &rt).unwrap();
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(ea.train_loss, eb.train_loss);
+        assert_eq!(ea.test_acc, eb.test_acc);
+        assert_eq!(ea.floats, eb.floats);
+    }
+}
+
+#[test]
+fn accordion_floats_between_static_levels() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let run = |ctrl: ControllerCfg| {
+        let mut cfg = tiny("sim-order");
+        cfg.epochs = 8;
+        cfg.decay_epochs = vec![6];
+        cfg.controller = ctrl;
+        train::run(&cfg, &reg, &rt).unwrap()
+    };
+    let low = run(ControllerCfg::Static(Level::Low));
+    let high = run(ControllerCfg::Static(Level::High));
+    let acc = run(ControllerCfg::Accordion { eta: 0.5, interval: 1 });
+    assert!(high.total_floats() < acc.total_floats());
+    assert!(acc.total_floats() <= low.total_floats());
+}
+
+#[test]
+fn controller_decisions_show_up_in_level_trace() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut cfg = tiny("sim-trace");
+    cfg.model = "mlp_deep_c10".into();
+    cfg.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    let log = train::run(&cfg, &reg, &rt).unwrap();
+    assert_eq!(log.level_trace.len(), cfg.epochs);
+    // first epoch: everything low (first window critical)
+    assert!(log.level_trace[0].iter().all(|&b| b));
+    let meta = reg.model("mlp_deep_c10").unwrap();
+    for (e, tr) in log.epochs.iter().zip(&log.level_trace) {
+        let comp: Vec<bool> = meta
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.compressible())
+            .map(|(l, _)| tr[l])
+            .collect();
+        let frac = comp.iter().filter(|&&b| b).count() as f32 / comp.len() as f32;
+        assert!((frac - e.frac_low).abs() < 1e-6);
+    }
+}
+
+// ---------------------------------------------------------------------
+// regression: evaluate() used to return (0.0, 0.0) silently when
+// ds.test_n < meta.batch (zero full eval batches).  The sim backend now
+// evaluates the final partial batch; fixed-batch (artifact) backends get
+// a hard error instead of a silent zero.
+
+#[test]
+fn evaluate_handles_test_set_smaller_than_batch() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut cfg = tiny("sim-smalltest");
+    cfg.epochs = 2;
+    cfg.test_size = 10; // < batch (16)
+    let log = train::run(&cfg, &reg, &rt).unwrap();
+    for e in &log.epochs {
+        assert!(e.test_loss.is_finite() && e.test_loss > 0.0, "silent zero eval: {e:?}");
+        assert!((0.0..=1.0).contains(&e.test_acc));
+    }
+}
+
+#[test]
+fn evaluate_includes_the_partial_tail_batch() {
+    // 24 = one full batch of 16 + a partial tail of 8.  evaluate() must
+    // return exactly the example-weighted mean over BOTH batches — the
+    // tail used to be silently dropped.
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut cfg = tiny("sim-tail");
+    cfg.epochs = 1;
+    cfg.test_size = 24;
+    let meta = reg.model(&cfg.model).unwrap().clone();
+    let params = reg.load_init(&meta).unwrap();
+    let progs = accordion::runtime::ModelPrograms::new(&meta).unwrap();
+    let ds = train::dataset_for(&cfg, &reg).unwrap();
+
+    let (got_loss, got_acc) = train::evaluate(&progs, &rt, &params, &ds, &cfg, &meta).unwrap();
+
+    // hand-computed weighted mean over the full batch and the tail
+    let head: Vec<usize> = (0..16).collect();
+    let tail: Vec<usize> = (16..24).collect();
+    let (l1, c1) = progs.eval_step(&rt, &params, &ds.test_batch(&head)).unwrap();
+    let (l2, c2) = progs.eval_step(&rt, &params, &ds.test_batch(&tail)).unwrap();
+    let want_loss = (l1 as f64 * 16.0 + l2 as f64 * 8.0) / 24.0;
+    let want_acc = (c1 as f64 + c2 as f64) / 24.0;
+    assert!(
+        (got_loss as f64 - want_loss).abs() < 1e-6,
+        "tail batch not weighted in: got {got_loss}, want {want_loss}"
+    );
+    assert!(
+        (got_acc as f64 - want_acc).abs() < 1e-6,
+        "tail batch not counted: got {got_acc}, want {want_acc}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// regression: the detector's Δ accumulator used to reset every epoch
+// even when detection ran every `interval` epochs; Alg. 1 compares
+// accumulated-over-window norms.  The trainer now resets Δ only at
+// window starts (Controller::detection_interval).
+
+#[test]
+fn delta_accumulates_across_the_detection_window() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    // method None: controller decisions cannot influence the trajectory,
+    // so the two runs train identically and differ only in windowing
+    let mk = |interval: usize| {
+        let mut cfg = tiny("sim-window");
+        cfg.epochs = 4;
+        cfg.method = MethodCfg::None;
+        cfg.controller = ControllerCfg::Accordion { eta: 0.5, interval };
+        train::run(&cfg, &reg, &rt).unwrap()
+    };
+    let windowed = mk(2);
+    // epoch 0 opens a window: the detector input is just this epoch's Δ
+    assert_eq!(windowed.epochs[0].window_grad_norm, windowed.epochs[0].grad_norm);
+    // epoch 1: the detector input accumulates epochs {0,1} and must
+    // differ from the single-epoch norm (‖Δ₀+Δ₁‖ ≠ ‖Δ₁‖)
+    assert_ne!(windowed.epochs[1].window_grad_norm, windowed.epochs[1].grad_norm);
+    // epoch 2 opens a fresh window
+    assert_eq!(windowed.epochs[2].window_grad_norm, windowed.epochs[2].grad_norm);
+
+    // the per-epoch grad_norm METRIC is interval-independent: with
+    // method=None the interval-1 run has an identical trajectory, and
+    // its windowed norm degenerates to the per-epoch norm everywhere
+    let per_epoch = mk(1);
+    for (a, b) in per_epoch.epochs.iter().zip(&windowed.epochs) {
+        assert_eq!(a.train_loss, b.train_loss, "method=None runs must coincide");
+        assert_eq!(a.grad_norm, b.grad_norm, "per-epoch metric must not depend on the interval");
+        assert_eq!(a.window_grad_norm, a.grad_norm, "interval=1: window == epoch");
+    }
+}
+
+#[test]
+fn accordion_windowed_decision_trace_on_synthetic_norms() {
+    // Synthetic Δ-norm trajectory fed straight to the detector, interval
+    // 2 (observations at epochs 1, 3, 5, 7 are window boundaries):
+    //   window norms: 10 -> 4 (60% drop, critical) -> 3.8 (5%, stable)
+    //   -> LR decay (critical again)
+    let mut a = Accordion::new(1, 0.5, 2);
+    let obs = |epoch: usize, norm: f32, lr: f32, lr_next: f32| EpochObs {
+        epoch,
+        layer_sqnorms: vec![norm * norm],
+        layer_abs_means: vec![0.1],
+        layer_stds: vec![1.0],
+        model_sqnorm: norm * norm,
+        lr_curr: lr,
+        lr_next,
+    };
+    assert_eq!(a.detection_interval(), 2);
+    // first window: critical by definition
+    assert_eq!(a.begin_epoch(0, 0.4, 0.4).levels[0], Level::Low);
+    a.observe(&obs(0, 999.0, 0.4, 0.4)); // mid-window: ignored
+    assert!(a.decision_log.is_empty(), "mid-window observation must not decide");
+    a.observe(&obs(1, 10.0, 0.4, 0.4)); // boundary: reference window
+    assert_eq!(a.begin_epoch(2, 0.4, 0.4).levels[0], Level::Low);
+    a.observe(&obs(2, 999.0, 0.4, 0.4)); // ignored
+    a.observe(&obs(3, 4.0, 0.4, 0.4)); // 60% >= eta: critical
+    assert_eq!(a.begin_epoch(4, 0.4, 0.4).levels[0], Level::Low);
+    a.observe(&obs(5, 3.8, 0.4, 0.4)); // 5% < eta: stable
+    assert_eq!(a.begin_epoch(6, 0.4, 0.4).levels[0], Level::High);
+    // LR decay re-declares critical immediately
+    assert_eq!(a.begin_epoch(7, 0.4, 0.04).levels[0], Level::Low);
+    assert_eq!(a.decision_log.len(), 3);
+}
+
+#[test]
+fn deep_model_mixes_levels_under_accordion() {
+    // sanity: per-layer adaptivity on the sim backend produces a
+    // non-degenerate schedule (communicates less than static-low)
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut cfg = tiny("sim-deep");
+    cfg.model = "mlp_deep_c10".into();
+    cfg.epochs = 8;
+    cfg.decay_epochs = vec![6];
+    cfg.controller = ControllerCfg::Accordion { eta: 0.25, interval: 1 };
+    let acc = train::run(&cfg, &reg, &rt).unwrap();
+    cfg.controller = ControllerCfg::Static(Level::Low);
+    cfg.label = "sim-deep-low".into();
+    let low = train::run(&cfg, &reg, &rt).unwrap();
+    assert!(acc.total_floats() <= low.total_floats());
+    assert!(acc.final_acc() > 0.15);
+}
