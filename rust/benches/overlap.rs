@@ -1,0 +1,84 @@
+//! Overlap-clock bench: the *simulated* end-to-end seconds (cost model +
+//! overlap-aware α–β scheduler) for PowerSGD rank-2 / rank-1 / Accordion
+//! across three bandwidth tiers, plus the seconds the overlap scheduler
+//! saves vs the serialized charge.  Unlike the wall-clock benches these
+//! numbers are fully deterministic, so diffs of `BENCH_overlap.json`
+//! across PRs are pure signal: any change means the clock, the cost
+//! model, or the communication schedule actually moved.
+//!
+//! Run: `cargo bench --bench overlap [-- --quick-ci]`
+//! (`--quick-ci` shrinks the run; CI uploads the JSON per PR.)
+
+use accordion::compress::Level;
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+use accordion::util::json;
+
+fn cfg(mbps: f64, setting: &str, controller: ControllerCfg, quick: bool) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.label = format!("bench-overlap-{mbps:.0}mbps-{setting}");
+    c.model = "mlp_deep_c10".into();
+    c.workers = 4;
+    c.epochs = if quick { 1 } else { 4 };
+    c.train_size = if quick { 256 } else { 1024 };
+    c.test_size = 64;
+    c.warmup_epochs = 0;
+    c.decay_epochs = if quick { vec![] } else { vec![3] };
+    c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+    c.controller = controller;
+    c.bandwidth_mbps = mbps;
+    c
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick-ci");
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+
+    let mut rows: Vec<json::Json> = Vec::new();
+    println!(
+        "{:<44} {:>10} {:>12} {:>10} {:>9}",
+        "setting", "sim_secs", "serialized", "saved", "speedup"
+    );
+    for &mbps in &[10.0f64, 100.0, 1000.0] {
+        for (name, controller) in [
+            ("rank2", ControllerCfg::Static(Level::Low)),
+            ("rank1", ControllerCfg::Static(Level::High)),
+            ("accordion", ControllerCfg::Accordion { eta: 0.5, interval: 1 }),
+        ] {
+            let c = cfg(mbps, name, controller, quick);
+            // one run gives both disciplines: the trainer accumulates the
+            // serialized charge as sim + saved
+            let log = train::run(&c, &reg, &rt).unwrap();
+            let sim = log.total_secs();
+            let saved = log.total_overlap_saved_secs();
+            let serialized = sim + saved;
+            let speedup = if sim > 0.0 { serialized / sim } else { 1.0 };
+            println!(
+                "{:<44} {:>9.3}s {:>11.3}s {:>9.3}s {:>8.2}x",
+                c.label, sim, serialized, saved, speedup
+            );
+            rows.push(json::obj(vec![
+                ("bandwidth_mbps", json::num(mbps)),
+                ("setting", json::s(name)),
+                ("sim_secs", json::num(sim)),
+                ("serialized_secs", json::num(serialized)),
+                ("overlap_saved_secs", json::num(saved)),
+                ("overlap_speedup", json::num(speedup)),
+                ("final_acc", json::num(log.final_acc() as f64)),
+            ]));
+        }
+    }
+
+    let report = json::obj(vec![
+        ("bench", json::s("overlap-vs-serialized-simtime")),
+        ("model", json::s("mlp_deep_c10")),
+        ("workers", json::num(4.0)),
+        ("quick_ci", json::num(if quick { 1.0 } else { 0.0 })),
+        ("deterministic", json::num(1.0)),
+        ("results", json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_overlap.json", report.to_string()).expect("writing BENCH_overlap.json");
+    println!("BENCH_overlap.json written (simulated, deterministic — diffs are signal)");
+}

@@ -9,7 +9,9 @@
 //! on a 2-core box the 8-thread row tops out near 2x; the engine itself
 //! is embarrassingly parallel across workers and layers.
 //!
-//! Run: `cargo bench --bench parallel [-- <filter>]`
+//! Run: `cargo bench --bench parallel [-- <filter>] [-- --quick-ci]`
+//! `--quick-ci` shrinks to 1 epoch on a small model with a single timed
+//! iteration — the CI perf-trajectory lane runs it on every PR.
 
 include!("harness.rs");
 
@@ -18,7 +20,7 @@ use accordion::runtime::Runtime;
 use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
 use accordion::util::json;
 
-fn bench_cfg(threads: usize) -> TrainConfig {
+fn bench_cfg(threads: usize, quick: bool) -> TrainConfig {
     let mut c = TrainConfig::default();
     c.label = format!("bench-parallel-t{threads}");
     c.model = "mlp_bench".into(); // [512, 256, 10] — heavy enough per step
@@ -31,14 +33,23 @@ fn bench_cfg(threads: usize) -> TrainConfig {
     c.decay_epochs = vec![1];
     c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
     c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    if quick {
+        // CI lane: one epoch of a small model — records the trajectory,
+        // not a publishable number
+        c.model = "mlp_c10".into();
+        c.epochs = 1;
+        c.train_size = 512;
+        c.decay_epochs = vec![];
+    }
     c
 }
 
 fn main() {
     let ctl = BenchCtl::from_env();
+    let quick = std::env::args().any(|a| a == "--quick-ci");
     let reg = Registry::sim();
     let rt = Runtime::sim();
-    let iters = ctl.iters.clamp(3, 10);
+    let iters = if quick { 1 } else { ctl.iters.clamp(3, 10) };
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
     let thread_counts = [1usize, 2, 4, 8];
@@ -51,7 +62,7 @@ fn main() {
         if ti > 0 && !ctl.matches(&name) {
             continue;
         }
-        let cfg = bench_cfg(threads);
+        let cfg = bench_cfg(threads, quick);
         let batch = reg.model(&cfg.model).unwrap().batch;
         // warmup
         let log = train::run(&cfg, &reg, &rt).unwrap();
@@ -86,10 +97,11 @@ fn main() {
             .fold(f64::INFINITY, |a, &b| a.min(b));
         let report = json::obj(vec![
             ("bench", json::s("parallel-thread-scaling")),
-            ("model", json::s("mlp_bench")),
+            ("model", json::s(if quick { "mlp_c10" } else { "mlp_bench" })),
             ("workers", json::num(8.0)),
             ("host_cores", json::num(cores as f64)),
             ("iters", json::num(iters as f64)),
+            ("quick_ci", json::num(if quick { 1.0 } else { 0.0 })),
             ("results", json::arr(rows)),
             ("best_speedup_vs_seq", json::num(mean_secs[0] / best)),
         ]);

@@ -6,11 +6,13 @@
 //! standard α–β model per ring collective (see `NetworkModel`).  Workers
 //! are logical rather than OS threads on purpose: the host has one core,
 //! PJRT executions serialize anyway, and lock-step replay makes every
-//! experiment bit-reproducible.  The `time` module converts measured
-//! compute + modeled communication into the simulated wall clock the
-//! tables report (DESIGN.md §2, §9).
+//! experiment bit-reproducible.  The `simtime` module turns the modeled
+//! per-layer compute costs + α–β communication into the deterministic
+//! simulated wall clock the tables report — overlap-aware, and invariant
+//! to host threading (DESIGN.md §2, §9).
 
 pub mod network;
+pub mod simtime;
 
 /// Static description of the training cluster.
 #[derive(Clone, Debug)]

@@ -2,13 +2,21 @@
 //!
 //! time(all_reduce, V bytes)  = 2(N-1)·α + 2·(N-1)/N · V · β
 //! time(all_gather, V bytes)  =  (N-1)·α +   (N-1)/N · (N·V) · β
-//!    (V = per-worker payload; every worker receives (N-1)·V)
-//! time(broadcast,  V bytes)  =  (N-1)·α + V · β        (pipelined ring)
+//!    (V = per-worker payload, N·V the full gathered result: each worker
+//!     wires (N-1)/N of it, i.e. (N-1)·V — the code now spells out the
+//!     (N-1)/N·(N·V) form so formula and comment read the same)
+//! time(broadcast,  V bytes)  =  (N-1)·α + V · β
+//!    (pipelined ring: every byte crosses N-1 links, but with the payload
+//!     chunked the links run concurrently, so the per-hop byte terms
+//!     telescope to the single-payload V·β asymptote — the same
+//!     large-message limit the other two formulas are quoted at)
 //!
 //! with α the per-hop latency and β = 1/bandwidth.  These are the
-//! textbook ring-collective costs NCCL approaches at large message sizes.
-//! Defaults put the comm/compute ratio of our scaled-down models in the
-//! same regime as ResNet-18 on 4x V100 + 10 Gbps (DESIGN.md §2).
+//! textbook ring-collective costs NCCL approaches at large message sizes;
+//! `collective_costs_match_hand_computed_values` pins all three against
+//! numbers worked by hand.  Defaults put the comm/compute ratio of our
+//! scaled-down models in the same regime as ResNet-18 on 4x V100 +
+//! 10 Gbps (DESIGN.md §2).
 
 #[derive(Clone, Debug)]
 pub struct NetworkModel {
@@ -46,7 +54,10 @@ impl NetworkModel {
         if self.workers <= 1 {
             return 0.0;
         }
-        (n - 1.0) * self.alpha + (n - 1.0) * bytes_per_worker as f64 * self.beta
+        // (N-1)/N of the full gathered payload N·V crosses each worker's
+        // wire; algebraically (N-1)·V, written in the (N-1)/N form the
+        // module docs (and the all-reduce term) use
+        (n - 1.0) * self.alpha + (n - 1.0) / n * (n * bytes_per_worker as f64) * self.beta
     }
 
     pub fn broadcast_secs(&self, bytes: usize) -> f64 {
@@ -54,6 +65,9 @@ impl NetworkModel {
         if self.workers <= 1 {
             return 0.0;
         }
+        // pipelined ring: chunked payload keeps all N-1 links busy at
+        // once, so the byte term is the single traversal V·β (the
+        // large-message asymptote, like the two formulas above)
         (n - 1.0) * self.alpha + bytes as f64 * self.beta
     }
 }
@@ -87,6 +101,45 @@ mod tests {
         let v = 1 << 20;
         let ratio = m.allgather_secs(v) / m.allreduce_secs(v);
         assert!((ratio - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn collective_costs_match_hand_computed_values() {
+        // N=4, α=2ms, β=1µs/B, V=1000 B — all three formulas by hand:
+        let m = NetworkModel { workers: 4, alpha: 2e-3, beta: 1e-6 };
+        // all-reduce: 2·3·2ms + 2·(3/4)·1000·1µs = 12ms + 1.5ms
+        assert!((m.allreduce_secs(1000) - 0.0135).abs() < 1e-12);
+        // all-gather: 3·2ms + (3/4)·(4·1000)·1µs = 6ms + 3ms
+        assert!((m.allgather_secs(1000) - 0.009).abs() < 1e-12);
+        // broadcast (pipelined ring): 3·2ms + 1000·1µs = 6ms + 1ms
+        assert!((m.broadcast_secs(1000) - 0.007).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allgather_equals_its_n_minus_one_v_shorthand() {
+        // (N-1)/N · (N·V) must stay numerically (N-1)·V for ordinary
+        // worker counts — the doc comment and the old code disagreed in
+        // *form* only, and this pins that they never diverge in value
+        for workers in 2..=9usize {
+            let m = NetworkModel::new(workers, 137.0, 23.0);
+            let v = 4096 * 4;
+            let want = (workers as f64 - 1.0) * (v as f64) * m.beta
+                + (workers as f64 - 1.0) * m.alpha;
+            assert!((m.allgather_secs(v) - want).abs() < 1e-12 * want.max(1.0), "N={workers}");
+        }
+    }
+
+    #[test]
+    fn broadcast_single_worker_is_free_and_scales() {
+        let m1 = NetworkModel::new(1, 100.0, 50.0);
+        assert_eq!(m1.broadcast_secs(1 << 20), 0.0);
+        let m = NetworkModel::new(4, 100.0, 50.0);
+        assert!(m.broadcast_secs(2 << 20) > m.broadcast_secs(1 << 20));
+        // broadcast moves each byte once vs the all-reduce's ~2x:
+        // with latency zeroed the ratio is exactly 2·(N-1)/N
+        let m0 = NetworkModel::new(4, 100.0, 0.0);
+        let ratio = m0.allreduce_secs(1 << 20) / m0.broadcast_secs(1 << 20);
+        assert!((ratio - 1.5).abs() < 1e-9, "{ratio}");
     }
 
     #[test]

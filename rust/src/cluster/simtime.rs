@@ -1,0 +1,288 @@
+//! Deterministic simulated-time subsystem: the calibrated compute cost
+//! model and the overlap-aware α–β event scheduler.
+//!
+//! The time column the tables report used to mix per-step *wall-clock*
+//! measurements (inflated by host-core contention at `--threads > 1`)
+//! with a serialized α–β communication charge.  This module replaces
+//! both halves with a fully simulated clock:
+//!
+//!  * **Compute** is charged from a [`CostModel`] — per-parameter-tensor
+//!    fwd/bwd costs derived from a flop count ([`ModelMeta::layer_flops`])
+//!    at a modeled device throughput (`time.gflops`, default
+//!    [`DEFAULT_GFLOPS`]), or calibrated once per process from a
+//!    `threads = 1` measurement (`time.model = "measured"`, cached in the
+//!    [`Registry`](crate::models::Registry)).  Either way, every
+//!    subsequent step is charged from the model, so the time column is
+//!    bit-identical across `--threads` and host load (flops mode is also
+//!    bit-identical across processes, which is what lets CI diff it).
+//!
+//!  * **Communication** overlaps backprop the way a real DDP stack does
+//!    (Agarwal et al. 2021): backprop produces gradients from the output
+//!    layer down, and layer `l`'s collective runs on the network channel
+//!    concurrently with layer `l-1`'s backprop.  [`step_times`] is the
+//!    event scheduler: per-layer gradient ready-times feed a single
+//!    in-order network channel, and the optimizer step is the BSP
+//!    serialization point that waits for both streams.  `--no-overlap`
+//!    reproduces the old serialized charge (compute + Σ comm).
+//!
+//! Invariants (pinned by unit tests here and `tests/proptests.rs`):
+//! overlapped ≤ serialized for any cost/comm vectors, with exact
+//! equality when all collectives are free (α = β = 0 or one worker).
+
+use crate::data::Batch;
+use crate::models::ModelMeta;
+use crate::runtime::{ModelPrograms, Runtime};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Default modeled device throughput, effective GFLOP/s.  Deliberately
+/// small: the zoo's models are scaled down ~1000x from the paper's, and
+/// 0.5 GFLOP/s puts the default model's comm/compute ratio at 100 Mbps
+/// in the same comm-bound regime as ResNet-18 on 4x V100 + 10 Gbps
+/// (DESIGN.md §2).
+pub const DEFAULT_GFLOPS: f64 = 0.5;
+
+/// Per-model simulated compute costs for ONE micro-step, in seconds.
+/// Derived from flop counts at a modeled throughput, or implied by a
+/// one-off measurement (see module docs); charged identically either
+/// way, so the clock never depends on host threading again.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// full forward pass (secs)
+    pub fwd_secs: f64,
+    /// backward cost per parameter tensor, manifest order (secs);
+    /// backprop emits these gradients in REVERSE order (output layer
+    /// first), which is what the overlap scheduler exploits
+    pub bwd_secs: Vec<f64>,
+    /// optimizer update — the BSP serialization point (secs)
+    pub opt_secs: f64,
+}
+
+impl CostModel {
+    /// Flops-derived model: deterministic across processes and hosts.
+    pub fn from_meta(meta: &ModelMeta, gflops: f64) -> CostModel {
+        let rate = 1.0 / (gflops.max(1e-9) * 1e9);
+        let flops = meta.layer_flops();
+        let fwd: u64 = flops.iter().map(|f| f.fwd).sum();
+        let bwd_secs: Vec<f64> = flops.iter().map(|f| f.bwd as f64 * rate).collect();
+        // SGD + momentum + weight decay: ~4 flops per parameter
+        let opt = 4 * meta.total_params as u64;
+        CostModel {
+            fwd_secs: fwd as f64 * rate,
+            bwd_secs,
+            opt_secs: opt as f64 * rate,
+        }
+    }
+
+    /// Measurement-implied model: the throughput that explains one
+    /// measured `threads = 1` train step, distributed across layers in
+    /// flop proportion.  Deterministic within a process once cached
+    /// (`Registry::cached_cost`), but NOT across processes — CI's
+    /// byte-for-byte lane uses flops mode.
+    pub fn from_measured(meta: &ModelMeta, step_secs: f64) -> CostModel {
+        let total: u64 = meta.layer_flops().iter().map(|f| f.fwd + f.bwd).sum();
+        let gflops = total.max(1) as f64 / step_secs.max(1e-12) / 1e9;
+        CostModel::from_meta(meta, gflops)
+    }
+
+    /// Σ backward costs (manifest order — the deterministic fold).
+    pub fn bwd_total(&self) -> f64 {
+        self.bwd_secs.iter().sum()
+    }
+
+    /// One micro-step of compute (no optimizer).
+    pub fn micro_secs(&self) -> f64 {
+        self.fwd_secs + self.bwd_total()
+    }
+}
+
+/// The simulated run clock the trainer accumulates per global step.
+/// `sim_secs` is THE time column; the compute/comm split and the wall
+/// measurement are kept for diagnostics.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    /// modeled compute (incl. optimizer), serialized view
+    pub compute_secs: f64,
+    /// α–β communication, serialized view (matches the ledger)
+    pub comm_secs: f64,
+    /// overlap-aware end-to-end simulated time (what the tables quote)
+    pub sim_secs: f64,
+    /// seconds the overlap scheduler saved vs the serialized charge —
+    /// accumulated per step as `serialized - overlapped` (NOT derived
+    /// from the other fields, whose independent f64 accumulation would
+    /// leave an ulp residue), so it is exactly 0.0 under `--no-overlap`
+    pub saved_secs: f64,
+    /// measured host wall time — debug only, NOT deterministic
+    pub wall_secs: f64,
+}
+
+impl SimClock {
+    pub fn total(&self) -> f64 {
+        self.sim_secs
+    }
+
+    /// Seconds the overlap scheduler saved vs charging compute + comm
+    /// serially (exactly 0 when running with `--no-overlap`).
+    pub fn overlap_saved_secs(&self) -> f64 {
+        self.saved_secs
+    }
+}
+
+/// Scheduled times for one global step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepTimes {
+    /// modeled compute incl. the optimizer serialization point
+    pub compute: f64,
+    /// Σ per-layer collective seconds (the serialized comm charge)
+    pub comm: f64,
+    /// overlap-aware end-to-end step time
+    pub overlapped: f64,
+    /// old-style serialized charge: compute + comm
+    pub serialized: f64,
+}
+
+/// The overlap event scheduler for one global step.
+///
+/// `comm_secs[l]` is the α–β cost of layer `l`'s collective(s) this
+/// step.  Backprop runs on the compute stream in reverse manifest order
+/// (`L-1 .. 0`); with gradient accumulation only the LAST micro-step's
+/// backprop finalizes gradients, so the first `batch_mult - 1`
+/// micro-steps plus the final forward pass gate every ready-time.
+/// Collectives are issued in ready order on a single in-order network
+/// channel (one NIC / one ring); the step ends when both streams drain,
+/// plus the optimizer update.
+pub fn step_times(cost: &CostModel, batch_mult: usize, comm_secs: &[f64]) -> StepTimes {
+    debug_assert_eq!(comm_secs.len(), cost.bwd_secs.len());
+    let mult = batch_mult.max(1) as f64;
+    let base = (mult - 1.0) * cost.micro_secs() + cost.fwd_secs;
+    let mut ready = base;
+    let mut net_free = 0.0f64;
+    let mut comm_sum = 0.0f64;
+    for l in (0..cost.bwd_secs.len()).rev() {
+        ready += cost.bwd_secs[l];
+        let start = if ready > net_free { ready } else { net_free };
+        net_free = start + comm_secs[l];
+        comm_sum += comm_secs[l];
+    }
+    // `ready` is now the compute stream's end; reusing it keeps the
+    // zero-comm case EXACTLY equal to the serialized charge (same f64
+    // operations in the same order)
+    let compute_end = ready;
+    let drained = if net_free > compute_end { net_free } else { compute_end };
+    let compute = compute_end + cost.opt_secs;
+    StepTimes {
+        compute,
+        comm: comm_sum,
+        overlapped: drained + cost.opt_secs,
+        serialized: compute + comm_sum,
+    }
+}
+
+/// Measure one `threads = 1` train step for `time.model = "measured"`
+/// calibration: a warmup execution, then the min over a few timed ones
+/// (min is the least contention-sensitive statistic).
+pub fn measure_step_secs(
+    progs: &ModelPrograms,
+    rt: &Runtime,
+    params: &[Tensor],
+    batch: &Batch,
+) -> Result<f64> {
+    progs.train_step(rt, params, batch)?; // warmup (allocator, caches)
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        progs.train_step(rt, params, batch)?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+
+    fn cost2() -> CostModel {
+        CostModel { fwd_secs: 1.0, bwd_secs: vec![2.0, 3.0], opt_secs: 0.5 }
+    }
+
+    #[test]
+    fn overlap_hand_computed_two_layers() {
+        // bwd order is layer 1 then layer 0: l1 ready at 1+3=4, its
+        // collective (1s) hides under l0's backprop (4..6); l0 ready at
+        // 6, its 4s collective runs 6..10; optimizer at 10 -> 10.5
+        let t = step_times(&cost2(), 1, &[4.0, 1.0]);
+        assert!((t.overlapped - 10.5).abs() < 1e-12, "{t:?}");
+        // serialized: (1+2+3+0.5) + (4+1) = 11.5, so overlap saved 1s
+        assert!((t.serialized - 11.5).abs() < 1e-12, "{t:?}");
+        assert!((t.compute - 6.5).abs() < 1e-12);
+        assert!((t.comm - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn network_bound_step_is_gated_by_the_channel() {
+        // giant collectives: the channel serializes them back-to-back
+        // starting from the first ready-time (t=4)
+        let t = step_times(&cost2(), 1, &[100.0, 100.0]);
+        assert!((t.overlapped - (4.0 + 200.0 + 0.5)).abs() < 1e-12, "{t:?}");
+    }
+
+    #[test]
+    fn zero_comm_is_exactly_serialized() {
+        for mult in [1usize, 2, 8] {
+            let t = step_times(&cost2(), mult, &[0.0, 0.0]);
+            assert_eq!(t.overlapped, t.serialized, "mult {mult}");
+            assert_eq!(t.comm, 0.0);
+        }
+    }
+
+    #[test]
+    fn accumulation_gates_ready_times() {
+        // mult=2: micro-steps 0 runs fully (6s), then the final
+        // micro-step's fwd (1s) + bwd; l1 ready at 6+1+3=10
+        let t = step_times(&cost2(), 2, &[0.0, 1.0]);
+        // l1 comm (1s) hides entirely under l0's bwd (10..12)
+        assert!((t.overlapped - 12.5).abs() < 1e-12, "{t:?}");
+        assert!((t.serialized - 13.5).abs() < 1e-12, "{t:?}");
+    }
+
+    #[test]
+    fn flops_model_scales_inversely_with_gflops() {
+        let reg = Registry::sim();
+        let meta = reg.model("mlp_c10").unwrap();
+        let slow = CostModel::from_meta(meta, 0.5);
+        let fast = CostModel::from_meta(meta, 5.0);
+        assert_eq!(slow.bwd_secs.len(), meta.n_layers());
+        assert!(slow.fwd_secs > 0.0 && slow.opt_secs > 0.0);
+        let ratio = slow.micro_secs() / fast.micro_secs();
+        assert!((ratio - 10.0).abs() < 1e-9, "{ratio}");
+        // bit-identical across constructions (what CI's lane rests on)
+        let again = CostModel::from_meta(meta, 0.5);
+        assert_eq!(slow.fwd_secs.to_bits(), again.fwd_secs.to_bits());
+        for (a, b) in slow.bwd_secs.iter().zip(&again.bwd_secs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn measured_model_reproduces_the_measurement() {
+        let reg = Registry::sim();
+        let meta = reg.model("mlp_c10").unwrap();
+        let cm = CostModel::from_measured(meta, 2e-3);
+        // fwd + bwd of one micro-step == the measured step time
+        assert!((cm.micro_secs() - 2e-3).abs() < 1e-9, "{}", cm.micro_secs());
+    }
+
+    #[test]
+    fn clock_saved_seconds() {
+        let clock = SimClock {
+            compute_secs: 6.5,
+            comm_secs: 5.0,
+            sim_secs: 10.5,
+            saved_secs: 1.0,
+            wall_secs: 0.1,
+        };
+        assert_eq!(clock.overlap_saved_secs(), 1.0);
+        assert_eq!(clock.total(), 10.5);
+    }
+}

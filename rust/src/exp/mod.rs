@@ -21,7 +21,7 @@ use anyhow::{bail, Result};
 pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "fig1", "fig2", "fig3", "fig4",
     "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig18", "ablate-eta",
-    "ablate-interval", "ablate-selector", "ablate-network",
+    "ablate-interval", "ablate-selector", "ablate-network", "ablate-overlap",
 ];
 
 /// Shared state for one experiment invocation: the artifact registry, a
@@ -138,13 +138,17 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
         "ablate-interval" => ablations::ablate_interval(&mut h),
         "ablate-selector" => ablations::ablate_selector(&mut h),
         "ablate-network" => ablations::ablate_network(&mut h),
+        "ablate-overlap" => overlap::ablate_overlap(&mut h),
         _ => bail!("unknown experiment '{id}' (have: {})", EXPERIMENTS.join(" ")),
     }
 }
 
 // ----------------------------------------------------------- reporting
 
-/// One table row: (setting, accuracy-or-ppl, floats, sim secs).
+/// One table row: (setting, accuracy-or-ppl, floats, sim secs).  The
+/// secs column is the deterministic simulated END-TO-END time — cost
+/// model + overlap scheduler — so every speedup ratio printed below is
+/// reproducible bit-for-bit across hosts and `--threads`.
 pub struct Row {
     pub setting: String,
     pub acc: f32,

@@ -3,6 +3,12 @@
 //! the paper's exact row structure at the scaled-down workload sizes
 //! (DESIGN.md §2, §6).  The per-epoch CSVs these runs drop are the data
 //! behind appendix Figs. 12–17.
+//!
+//! The Time column quotes the simulated END-TO-END clock: calibrated
+//! compute + the overlap-aware α–β scheduler (`cluster::simtime`), so
+//! the speedup ratios are deterministic and overlap-honest — run with
+//! `--set net.overlap=false` to reproduce the old serialized charge
+//! (see also `accordion repro --exp ablate-overlap`).
 
 use super::{print_group, print_header, Harness, Row};
 use crate::compress::Level;

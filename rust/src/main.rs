@@ -19,19 +19,30 @@ accordion — Adaptive Gradient Communication via Critical Learning Regime Ident
           (reproduction; pure-Rust sim backend by default, PJRT AOT behind --features pjrt)
 
 USAGE:
-  accordion train [--config FILE] [--set key=value ...] [--threads N] [--out DIR] [--save PATH]
+  accordion train [--config FILE] [--set key=value ...] [--threads N] [--no-overlap] [--out DIR] [--save PATH]
   accordion eval  --model NAME --ckpt PATH [--set key=value ...]
   accordion repro --exp <id> [--fast] [--set key=value ...] [--out DIR]
   accordion list
   accordion help
 
-  --threads N  run the parallel execution engine on N host threads
-               (results are bit-identical to the sequential N=1 path)
+  --threads N   run the parallel execution engine on N host threads
+                (ALL results, including the simulated time column, are
+                bit-identical to the sequential N=1 path)
+  --no-overlap  charge collectives serially after backprop instead of
+                overlapping layer l's collective with layer l-1's
+                backprop (the simulated-time ablation knob)
+
+  The time column is a deterministic simulated clock: a per-model
+  compute cost model (--set time.model=flops|measured, --set
+  time.gflops=F) plus the overlap-aware alpha-beta network scheduler
+  (--set net.bandwidth_mbps=B, --set net.latency_us=L).  Host wall time
+  is only recorded in the CSV's trailing wall_secs debug column.
 
 EXPERIMENT IDS:
   table1 table2 table3 table4 table5 table6
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig18
   ablate-eta ablate-interval ablate-selector ablate-network
+  ablate-overlap
 
 EXAMPLES:
   accordion repro --exp table1 --fast
@@ -75,6 +86,9 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
     if let Some(t) = args.usize_opt("threads") {
         cfg.threads = t.max(1);
     }
+    if args.flag("no-overlap") {
+        cfg.overlap = false;
+    }
     if args.flag("fast") {
         cfg = cfg.fast();
     }
@@ -94,12 +108,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = args.opt("out").unwrap_or("runs");
     let path = log.save_csv(out)?;
     println!(
-        "{}: final acc {:.3} | best {:.3} | {} floats | {:.1} sim-seconds | csv {}",
+        "{}: final acc {:.3} | best {:.3} | {} floats | {:.1} sim-seconds (overlap saved {:.1}s) | csv {}",
         cfg.label,
         log.final_acc(),
         log.best_acc(),
         log.total_floats(),
         log.total_secs(),
+        log.total_overlap_saved_secs(),
         path
     );
     Ok(())

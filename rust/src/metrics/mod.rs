@@ -5,24 +5,17 @@
 //! (floats), Time (seconds) — so `EpochStats` carries exactly those as
 //! cumulative series plus the training diagnostics (loss, grad-norm,
 //! per-layer levels) the figures need.
+//!
+//! Time is the DETERMINISTIC simulated clock (`cluster::simtime`): a
+//! calibrated compute cost model plus the overlap-aware α–β scheduler.
+//! Every column except the trailing `wall_secs` debug column is
+//! bit-identical across `--threads` and host load, which is what lets
+//! the CI `timing-determinism` lane diff the CSV byte-for-byte.
 
 use std::fmt::Write as _;
 use std::io::Write as _;
 
-/// Simulated wall clock: measured compute + α–β-modeled communication.
-/// Compute per step is the max over workers (they run in parallel on the
-/// modeled cluster) — callers feed that in.
-#[derive(Clone, Debug, Default)]
-pub struct SimClock {
-    pub compute_secs: f64,
-    pub comm_secs: f64,
-}
-
-impl SimClock {
-    pub fn total(&self) -> f64 {
-        self.compute_secs + self.comm_secs
-    }
-}
+pub use crate::cluster::simtime::SimClock;
 
 /// One epoch row of a run.
 #[derive(Clone, Debug)]
@@ -34,8 +27,16 @@ pub struct EpochStats {
     pub test_acc: f32,
     /// cumulative payload floats (paper's Data Sent)
     pub floats: u64,
-    /// cumulative simulated seconds
+    /// cumulative simulated seconds — cost model + overlap scheduler,
+    /// bit-identical at every `--threads` (the CSV's `sim_secs` column)
     pub secs: f64,
+    /// cumulative seconds the overlap scheduler saved vs charging
+    /// compute + communication serially (0 under `--no-overlap`)
+    pub overlap_saved_secs: f64,
+    /// cumulative measured host wall seconds — debug only: host-load
+    /// dependent, NOT deterministic, kept as the CSV's last column so
+    /// determinism checks can strip it
+    pub wall_secs: f64,
     /// whole-model ‖Δ‖ for the epoch (figure 2a-style trace)
     pub grad_norm: f32,
     /// fraction of compressible layers at the low-compression level
@@ -75,21 +76,33 @@ impl RunLog {
     pub fn total_secs(&self) -> f64 {
         self.epochs.last().map(|e| e.secs).unwrap_or(0.0)
     }
+    /// Seconds the overlap scheduler saved over the whole run.
+    pub fn total_overlap_saved_secs(&self) -> f64 {
+        self.epochs.last().map(|e| e.overlap_saved_secs).unwrap_or(0.0)
+    }
+    /// Measured host wall seconds (debug; not deterministic).
+    pub fn total_wall_secs(&self) -> f64 {
+        self.epochs.last().map(|e| e.wall_secs).unwrap_or(0.0)
+    }
     /// Perplexity for LM runs.
     pub fn final_ppl(&self) -> f32 {
         self.final_loss().exp()
     }
 
+    /// CSV with `wall_secs` as the LAST column: everything before it is
+    /// deterministic (bit-identical values format to identical bytes),
+    /// so the CI determinism lane diffs `cut -d, -f1-12` output.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "epoch,lr,train_loss,test_loss,test_acc,floats,secs,grad_norm,frac_low,batch_mult,window_grad_norm\n",
+            "epoch,lr,train_loss,test_loss,test_acc,floats,sim_secs,grad_norm,frac_low,batch_mult,window_grad_norm,overlap_saved_secs,wall_secs\n",
         );
         for e in &self.epochs {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{:.4},{},{},{},{}",
+                "{},{},{},{},{},{},{:.6},{},{},{},{},{:.6},{:.3}",
                 e.epoch, e.lr, e.train_loss, e.test_loss, e.test_acc, e.floats, e.secs,
-                e.grad_norm, e.frac_low, e.batch_mult, e.window_grad_norm
+                e.grad_norm, e.frac_low, e.batch_mult, e.window_grad_norm,
+                e.overlap_saved_secs, e.wall_secs
             );
         }
         out
@@ -135,6 +148,8 @@ mod tests {
             test_acc: acc,
             floats,
             secs: epoch as f64,
+            overlap_saved_secs: 0.25 * epoch as f64,
+            wall_secs: 0.1,
             grad_norm: 1.0,
             frac_low: 0.5,
             batch_mult: 1,
@@ -150,9 +165,21 @@ mod tests {
         assert_eq!(log.final_acc(), 0.7);
         assert_eq!(log.best_acc(), 0.7);
         assert_eq!(log.total_floats(), 250);
+        assert_eq!(log.total_overlap_saved_secs(), 0.25);
+        assert_eq!(log.total_wall_secs(), 0.1);
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.lines().nth(2).unwrap().starts_with("1,"));
+        // column contract the CI determinism lane depends on: 13 columns,
+        // sim_secs in slot 7, wall_secs (the only nondeterministic one) LAST
+        let header: Vec<&str> = csv.lines().next().unwrap().split(',').collect();
+        assert_eq!(header.len(), 13);
+        assert_eq!(header[6], "sim_secs");
+        assert_eq!(header[11], "overlap_saved_secs");
+        assert_eq!(header[12], "wall_secs");
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), 13, "{line}");
+        }
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! this module parses that manifest so the trainer knows the exact
 //! calling convention of each lowered HLO program.
 
+use crate::cluster::simtime::CostModel;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 #[derive(Clone, Debug)]
 pub struct ParamSpec {
@@ -60,6 +62,38 @@ impl ModelMeta {
     pub fn is_sim(&self) -> bool {
         self.train_artifact.as_os_str().is_empty()
     }
+
+    /// Per-parameter-tensor flop estimate for ONE micro-step — the input
+    /// to the simulated compute cost model (`cluster::simtime`).  Dense
+    /// gemm accounting: a matrix tensor of `numel` weights costs
+    /// `2·B·numel` forward (x@W) and `4·B·numel` backward (the gW and dA
+    /// gemms); vector tensors cost `B·numel` each way (bias add /
+    /// column-sum).  LM models scale by sequence length.  An estimate —
+    /// conv layers would undercount — but the clock only needs relative
+    /// per-layer weights plus a stable absolute scale, and the estimate
+    /// is exact for the sim MLP zoo.
+    pub fn layer_flops(&self) -> Vec<LayerFlops> {
+        let b = (self.batch.max(1) * self.seq_len.max(1)) as u64;
+        self.params
+            .iter()
+            .map(|p| {
+                let numel = p.numel() as u64;
+                if p.compressible() {
+                    LayerFlops { fwd: 2 * b * numel, bwd: 4 * b * numel }
+                } else {
+                    LayerFlops { fwd: b * numel, bwd: b * numel }
+                }
+            })
+            .collect()
+    }
+}
+
+/// One parameter tensor's micro-step flop estimate (see
+/// [`ModelMeta::layer_flops`]).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerFlops {
+    pub fwd: u64,
+    pub bwd: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -77,6 +111,12 @@ pub struct Registry {
     pub dir: PathBuf,
     pub models: BTreeMap<String, ModelMeta>,
     pub kernels: BTreeMap<String, KernelMeta>,
+    /// Measured-calibration cache: `time.model = "measured"` runs the
+    /// `threads = 1` probe once per model per process and every later
+    /// run (at any `--threads`) is charged from the same cached model —
+    /// that is what keeps the measured clock thread-invariant too.
+    /// Flops-mode runs never touch it.
+    cost_cache: Mutex<BTreeMap<String, CostModel>>,
 }
 
 /// The built-in sim model zoo: `(name, layer widths, batch)`.  Widths
@@ -143,7 +183,27 @@ impl Registry {
         for &(name, dims, batch) in SIM_MODELS {
             models.insert(name.to_string(), sim_meta(name, dims, batch));
         }
-        Registry { dir: PathBuf::new(), models, kernels: BTreeMap::new() }
+        Registry {
+            dir: PathBuf::new(),
+            models,
+            kernels: BTreeMap::new(),
+            cost_cache: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Fetch the cached compute cost model for `name`, building (and
+    /// caching) it with `build` on first use.
+    pub fn cached_cost<F>(&self, name: &str, build: F) -> Result<CostModel>
+    where
+        F: FnOnce() -> Result<CostModel>,
+    {
+        let mut cache = self.cost_cache.lock().expect("cost cache poisoned");
+        if let Some(c) = cache.get(name) {
+            return Ok(c.clone());
+        }
+        let c = build()?;
+        cache.insert(name.to_string(), c.clone());
+        Ok(c)
     }
 
     /// The artifacts registry when `pjrt_executable` says this process
@@ -263,7 +323,7 @@ impl Registry {
             }
         }
 
-        Ok(Registry { dir, models, kernels })
+        Ok(Registry { dir, models, kernels, cost_cache: Mutex::new(BTreeMap::new()) })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {
@@ -415,6 +475,42 @@ mod tests {
         let other = reg.model("mlp_c10").unwrap();
         let o = reg.load_init(other).unwrap();
         assert_ne!(o[0].data[..4], a[0].data[..4]);
+    }
+
+    #[test]
+    fn layer_flops_follow_the_dense_gemm_accounting() {
+        let reg = Registry::sim();
+        let m = reg.model("mlp_c10").unwrap(); // [48, 32, 10], batch 16
+        let f = m.layer_flops();
+        assert_eq!(f.len(), m.n_layers());
+        // w0 [48,32]: fwd 2·16·1536, bwd 4·16·1536; b0 [32]: 16·32 each
+        assert_eq!(f[0].fwd, 2 * 16 * 1536);
+        assert_eq!(f[0].bwd, 4 * 16 * 1536);
+        assert_eq!(f[1].fwd, 16 * 32);
+        assert_eq!(f[1].bwd, 16 * 32);
+        // matrices dominate and bwd is exactly 2x fwd for them
+        for (spec, lf) in m.params.iter().zip(&f) {
+            if spec.compressible() {
+                assert_eq!(lf.bwd, 2 * lf.fwd);
+            }
+        }
+    }
+
+    #[test]
+    fn cost_cache_builds_once_and_replays() {
+        let reg = Registry::sim();
+        let meta = reg.model("mlp_c10").unwrap().clone();
+        let mut builds = 0usize;
+        for _ in 0..3 {
+            let c = reg
+                .cached_cost("mlp_c10", || {
+                    builds += 1;
+                    Ok(crate::cluster::simtime::CostModel::from_meta(&meta, 1.0))
+                })
+                .unwrap();
+            assert!(c.micro_secs() > 0.0);
+        }
+        assert_eq!(builds, 1, "calibration must run once per process");
     }
 
     #[cfg(not(feature = "pjrt"))]

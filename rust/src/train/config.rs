@@ -21,6 +21,17 @@ pub enum MethodCfg {
     SignSgd,
 }
 
+/// Where the simulated compute clock's per-layer costs come from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TimeModelCfg {
+    /// flop counts at a modeled throughput (`time.gflops`): bit-identical
+    /// across processes and hosts — what CI's determinism lane runs
+    Flops,
+    /// one `threads = 1` measurement per model per process, cached in the
+    /// registry: thread-invariant within a process, host-dependent across
+    Measured,
+}
+
 #[derive(Clone, Debug)]
 pub enum ControllerCfg {
     /// fixed level: "low" | "high" | explicit rank/frac
@@ -67,6 +78,13 @@ pub struct TrainConfig {
     // network model
     pub bandwidth_mbps: f64,
     pub latency_us: f64,
+    /// comm/compute overlap in the simulated clock; `--no-overlap` (or
+    /// `net.overlap = false`) reproduces the old serialized charge
+    pub overlap: bool,
+    // simulated compute clock (cluster::simtime)
+    pub time_model: TimeModelCfg,
+    /// modeled device throughput for the flops cost model, GFLOP/s
+    pub gflops: f64,
 }
 
 impl Default for TrainConfig {
@@ -98,6 +116,9 @@ impl Default for TrainConfig {
             controller: ControllerCfg::Accordion { eta: 0.5, interval: 2 },
             bandwidth_mbps: 100.0,
             latency_us: 50.0,
+            overlap: true,
+            time_model: TimeModelCfg::Flops,
+            gflops: crate::cluster::simtime::DEFAULT_GFLOPS,
         }
     }
 }
@@ -195,6 +216,13 @@ impl TrainConfig {
             controller,
             bandwidth_mbps: t.f64_or("net.bandwidth_mbps", d.bandwidth_mbps),
             latency_us: t.f64_or("net.latency_us", d.latency_us),
+            overlap: t.bool_or("net.overlap", d.overlap),
+            time_model: match t.str_or("time.model", "flops").as_str() {
+                "flops" => TimeModelCfg::Flops,
+                "measured" => TimeModelCfg::Measured,
+                other => bail!("unknown time.model '{other}' (flops|measured)"),
+            },
+            gflops: t.f64_or("time.gflops", d.gflops),
         })
     }
 
@@ -309,6 +337,32 @@ bandwidth_mbps = 250.0
         let t0 = Table::parse("threads = 0").unwrap();
         assert_eq!(TrainConfig::from_table(&t0).unwrap().threads, 1);
         assert_eq!(TrainConfig::default().threads, 1);
+    }
+
+    #[test]
+    fn simtime_keys_parse_with_defaults() {
+        let d = TrainConfig::default();
+        assert!(d.overlap);
+        assert_eq!(d.time_model, TimeModelCfg::Flops);
+        assert!(d.gflops > 0.0);
+
+        let t = Table::parse(
+            r#"
+[net]
+overlap = false
+[time]
+model = "measured"
+gflops = 2.5
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert!(!c.overlap);
+        assert_eq!(c.time_model, TimeModelCfg::Measured);
+        assert_eq!(c.gflops, 2.5);
+
+        let bad = Table::parse("time.model = \"sundial\"").unwrap();
+        assert!(TrainConfig::from_table(&bad).is_err());
     }
 
     #[test]

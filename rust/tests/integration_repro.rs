@@ -28,8 +28,9 @@ fn experiment_ids_are_documented() {
     // every id the CLI advertises dispatches (unknown ids must error)
     assert!(EXPERIMENTS.contains(&"table1"));
     assert!(EXPERIMENTS.contains(&"fig18"));
-    assert_eq!(EXPERIMENTS.len(), 22);
+    assert_eq!(EXPERIMENTS.len(), 23);
     assert!(EXPERIMENTS.contains(&"ablate-selector"));
+    assert!(EXPERIMENTS.contains(&"ablate-overlap"));
 }
 
 #[test]

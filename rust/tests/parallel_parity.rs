@@ -1,7 +1,9 @@
 //! Parity suite for the parallel execution engine: the same seed run at
 //! 1 vs N host threads, across every compressor family and both
 //! controller kinds, must produce the same training history — final
-//! parameters, per-epoch losses, the floats ledger, and the level trace.
+//! parameters, per-epoch losses, the floats ledger, the level trace,
+//! and (since the simtime subsystem) the bit-exact simulated time
+//! column.
 //!
 //! The engine is designed for *bit*-identical reduction order (fixed
 //! per-cell loss folding, per-layer compressor instances and ledger
@@ -62,6 +64,22 @@ fn assert_run_parity(seq: &(RunLog, Vec<Tensor>), par: &(RunLog, Vec<Tensor>), c
         // the floats ledger counts integer payloads: exact
         assert_eq!(a.floats, b.floats, "{ectx}: floats ledger");
         assert_eq!(a.batch_mult, b.batch_mult, "{ectx}: batch_mult");
+        // the simulated clock is charged from the cost model + overlap
+        // scheduler, never from wall time: BIT-identical across threads
+        assert_eq!(
+            a.secs.to_bits(),
+            b.secs.to_bits(),
+            "{ectx}: sim secs diverged across thread counts: {} vs {}",
+            a.secs,
+            b.secs
+        );
+        assert_eq!(
+            a.overlap_saved_secs.to_bits(),
+            b.overlap_saved_secs.to_bits(),
+            "{ectx}: overlap_saved_secs diverged: {} vs {}",
+            a.overlap_saved_secs,
+            b.overlap_saved_secs
+        );
         assert_close(a.train_loss, b.train_loss, "train_loss", &ectx);
         assert_close(a.test_loss, b.test_loss, "test_loss", &ectx);
         assert_close(a.test_acc, b.test_acc, "test_acc", &ectx);

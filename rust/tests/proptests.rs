@@ -4,6 +4,7 @@
 //! tests.
 
 use accordion::cluster::network::NetworkModel;
+use accordion::cluster::simtime::{step_times, CostModel};
 use accordion::collectives::{mean_into, ring_allreduce_mean, Comm};
 use accordion::compress::{
     powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd, topk::TopK,
@@ -158,6 +159,50 @@ fn prop_ring_allreduce_degenerate_shapes() {
             }
         }
     }
+}
+
+/// The overlap event scheduler's ordering contract, for ANY layer-size
+/// vector: the overlap-scheduled step time never exceeds the serialized
+/// charge, and equals it exactly when every collective is free — a free
+/// network (α = β = 0) or a single worker.
+#[test]
+fn prop_overlap_never_slower_than_serialized() {
+    prop::check("overlap-bounds", 40, |rng| {
+        let layers = 1 + rng.below(9);
+        // random per-layer sizes -> α–β collective costs
+        let sizes: Vec<usize> = (0..layers).map(|_| 1 + rng.below(1 << 16)).collect();
+        let cost = CostModel {
+            fwd_secs: rng.uniform() as f64 * 1e-3,
+            bwd_secs: (0..layers).map(|_| rng.uniform() as f64 * 1e-3).collect(),
+            opt_secs: rng.uniform() as f64 * 1e-4,
+        };
+        let mult = 1 + rng.below(4);
+        let workers = 2 + rng.below(6);
+        let mbps = 10.0 + rng.uniform() as f64 * 1000.0;
+        let net = NetworkModel::new(workers, mbps, rng.uniform() as f64 * 100.0);
+        let comm: Vec<f64> = sizes.iter().map(|&s| net.allreduce_secs(s * 4)).collect();
+
+        let t = step_times(&cost, mult, &comm);
+        assert!(
+            t.overlapped <= t.serialized * (1.0 + 1e-12),
+            "overlap {} > serialized {}",
+            t.overlapped,
+            t.serialized
+        );
+        assert!(t.overlapped >= t.compute, "step cannot beat pure compute");
+
+        // α = β = 0: every collective is free -> exact equality
+        let free = NetworkModel { workers, alpha: 0.0, beta: 0.0 };
+        let comm0: Vec<f64> = sizes.iter().map(|&s| free.allreduce_secs(s * 4)).collect();
+        let t0 = step_times(&cost, mult, &comm0);
+        assert_eq!(t0.overlapped, t0.serialized, "free network must be exact");
+
+        // a single worker never touches the wire -> exact equality too
+        let solo = NetworkModel::new(1, 100.0, 50.0);
+        let comm1: Vec<f64> = sizes.iter().map(|&s| solo.allreduce_secs(s * 4)).collect();
+        let t1 = step_times(&cost, mult, &comm1);
+        assert_eq!(t1.overlapped, t1.serialized, "single worker must be exact");
+    });
 }
 
 /// QSGD stochastic rounding is unbiased: the empirical mean of many
