@@ -86,7 +86,14 @@ fn main() {
             ("threads", json::num(threads as f64)),
             ("mean_secs", json::num(mean)),
             ("p50_secs", json::num(p50)),
-            ("speedup_vs_seq", json::num(if mean > 0.0 && mean_secs[0] > 0.0 { mean_secs[0] / mean } else { 0.0 })),
+            (
+                "speedup_vs_seq",
+                json::num(if mean > 0.0 && mean_secs[0] > 0.0 {
+                    mean_secs[0] / mean
+                } else {
+                    0.0
+                }),
+            ),
         ]));
     }
 
@@ -105,7 +112,8 @@ fn main() {
             ("results", json::arr(rows)),
             ("best_speedup_vs_seq", json::num(mean_secs[0] / best)),
         ]);
-        std::fs::write("BENCH_parallel.json", report.to_string()).expect("writing BENCH_parallel.json");
+        std::fs::write("BENCH_parallel.json", report.to_string())
+            .expect("writing BENCH_parallel.json");
         println!(
             "BENCH_parallel.json written (host cores: {cores}, best speedup {:.2}x)",
             mean_secs[0] / best

@@ -1,0 +1,119 @@
+//! Transport bench: dense replicated vs sharded (reduce-scatter)
+//! parameter ownership on the largest sim model, reporting the
+//! *simulated* end-to-end seconds per transport (fully deterministic —
+//! diffs of `BENCH_shard.json` across PRs are pure signal) and the
+//! per-worker peak resident decompress-float model the sharded
+//! transport exists for: `ΣV/N + one layer` vs dense's `ΣV`.
+//!
+//! The JSON also records the acceptance bound `total/N + max layer`
+//! (plus one float per layer of ceil-rounding slack) and whether the
+//! sharded number stays under it.
+//!
+//! Run: `cargo bench --bench shard [-- --quick-ci]`
+//! (`--quick-ci` shrinks the run; CI uploads the JSON per PR.)
+
+use accordion::collectives::{DenseReplicated, ShardedOwnership, Transport};
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig, TransportCfg}};
+use accordion::util::json;
+
+const WORKERS: usize = 8;
+
+fn cfg(method_name: &str, method: MethodCfg, transport: TransportCfg, quick: bool) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.label = format!("bench-shard-{method_name}-{transport:?}");
+    c.model = "mlp_bench".into(); // the largest sim model: [512, 256, 10]
+    c.workers = WORKERS;
+    c.epochs = if quick { 1 } else { 2 };
+    c.train_size = if quick { 512 } else { 2048 };
+    c.test_size = 64;
+    c.warmup_epochs = 0;
+    c.decay_epochs = if quick { vec![] } else { vec![1] };
+    c.method = method;
+    c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    c.transport = transport;
+    c
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick-ci");
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let meta = reg.model("mlp_bench").unwrap().clone();
+    let numels: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
+
+    // ---- memory model: per-worker resident decompress floats ----------
+    let dense_resident = DenseReplicated.resident_floats(&numels);
+    let sharded_resident = ShardedOwnership::new(WORKERS).resident_floats(&numels);
+    let max_layer = numels.iter().copied().max().unwrap_or(0);
+    // acceptance bound: (1/N + one layer) of dense, with one float per
+    // layer of ceil-rounding slack
+    let bound = dense_resident.div_ceil(WORKERS) + max_layer + numels.len();
+    let within = sharded_resident <= bound;
+    println!(
+        "resident floats (mlp_bench @ {WORKERS} workers): dense {dense_resident}, \
+         sharded {sharded_resident}, bound (1/N + one layer) {bound} -> {}",
+        if within { "OK" } else { "EXCEEDED" }
+    );
+    assert!(within, "sharded resident floats exceed the 1/N + one-layer bound");
+
+    // ---- deterministic sim-seconds per transport ----------------------
+    let methods = [
+        ("none", MethodCfg::None),
+        ("powersgd", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+    ];
+    let mut rows: Vec<json::Json> = Vec::new();
+    println!(
+        "{:<40} {:>10} {:>12} {:>9}",
+        "setting", "sim_secs", "floats", "acc"
+    );
+    for (mname, method) in methods {
+        let mut dense_secs = 0.0f64;
+        for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+            let c = cfg(mname, method.clone(), transport, quick);
+            let log = train::run(&c, &reg, &rt).unwrap();
+            let sim = log.total_secs();
+            if transport == TransportCfg::Dense {
+                dense_secs = sim;
+            }
+            println!(
+                "{:<40} {:>9.3}s {:>12} {:>8.3}",
+                c.label,
+                sim,
+                log.total_floats(),
+                log.final_acc()
+            );
+            rows.push(json::obj(vec![
+                ("method", json::s(mname)),
+                ("transport", json::s(log.transport_label())),
+                ("sim_secs", json::num(sim)),
+                ("floats", json::num(log.total_floats() as f64)),
+                ("final_acc", json::num(log.final_acc() as f64)),
+                (
+                    "secs_vs_dense",
+                    json::num(if dense_secs > 0.0 { sim / dense_secs } else { 1.0 }),
+                ),
+            ]));
+        }
+    }
+
+    let report = json::obj(vec![
+        ("bench", json::s("dense-vs-sharded-transport")),
+        ("model", json::s("mlp_bench")),
+        ("workers", json::num(WORKERS as f64)),
+        ("quick_ci", json::num(if quick { 1.0 } else { 0.0 })),
+        ("deterministic", json::num(1.0)),
+        ("dense_resident_floats", json::num(dense_resident as f64)),
+        ("sharded_resident_floats", json::num(sharded_resident as f64)),
+        ("resident_bound_floats", json::num(bound as f64)),
+        ("sharded_within_bound", json::num(if within { 1.0 } else { 0.0 })),
+        (
+            "sharded_resident_vs_dense",
+            json::num(sharded_resident as f64 / dense_resident.max(1) as f64),
+        ),
+        ("results", json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_shard.json", report.to_string()).expect("writing BENCH_shard.json");
+    println!("BENCH_shard.json written (simulated, deterministic — diffs are signal)");
+}

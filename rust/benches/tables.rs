@@ -77,5 +77,7 @@ fn main() {
             std::hint::black_box(log.final_acc());
         });
     }
-    println!("(Melem/s column = global optimizer steps/s; full tables: `accordion repro --exp tableN`)");
+    println!(
+        "(Melem/s column = global optimizer steps/s; full tables: `accordion repro --exp tableN`)"
+    );
 }

@@ -1,11 +1,16 @@
 //! α–β network cost model for ring collectives.
 //!
-//! time(all_reduce, V bytes)  = 2(N-1)·α + 2·(N-1)/N · V · β
-//! time(all_gather, V bytes)  =  (N-1)·α +   (N-1)/N · (N·V) · β
+//! time(all_reduce, V bytes)      = 2(N-1)·α + 2·(N-1)/N · V · β
+//! time(reduce_scatter, V bytes)  =  (N-1)·α +   (N-1)/N · V · β
+//!    (V = per-worker input; each worker ends owning 1/N of the reduced
+//!     result — exactly the first half of the ring all-reduce, which is
+//!     why all-reduce = reduce-scatter + all-gather holds term by term;
+//!     `reduce_scatter_plus_allgather_equals_allreduce` pins it)
+//! time(all_gather, V bytes)      =  (N-1)·α +   (N-1)/N · (N·V) · β
 //!    (V = per-worker payload, N·V the full gathered result: each worker
 //!     wires (N-1)/N of it, i.e. (N-1)·V — the code now spells out the
 //!     (N-1)/N·(N·V) form so formula and comment read the same)
-//! time(broadcast,  V bytes)  =  (N-1)·α + V · β
+//! time(broadcast,  V bytes)      =  (N-1)·α + V · β
 //!    (pipelined ring: every byte crosses N-1 links, but with the payload
 //!     chunked the links run concurrently, so the per-hop byte terms
 //!     telescope to the single-payload V·β asymptote — the same
@@ -13,7 +18,7 @@
 //!
 //! with α the per-hop latency and β = 1/bandwidth.  These are the
 //! textbook ring-collective costs NCCL approaches at large message sizes;
-//! `collective_costs_match_hand_computed_values` pins all three against
+//! `collective_costs_match_hand_computed_values` pins all four against
 //! numbers worked by hand.  Defaults put the comm/compute ratio of our
 //! scaled-down models in the same regime as ResNet-18 on 4x V100 +
 //! 10 Gbps (DESIGN.md §2).
@@ -49,6 +54,18 @@ impl NetworkModel {
         2.0 * (n - 1.0) * self.alpha + 2.0 * (n - 1.0) / n * bytes_per_worker as f64 * self.beta
     }
 
+    /// Ring reduce-scatter of a `bytes_per_worker` input on every
+    /// worker: each ends owning 1/N of the reduced result.  Exactly the
+    /// first half of [`NetworkModel::allreduce_secs`] — the sharded
+    /// transport's aggregation collective.
+    pub fn reduce_scatter_secs(&self, bytes_per_worker: usize) -> f64 {
+        let n = self.workers as f64;
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        (n - 1.0) * self.alpha + (n - 1.0) / n * bytes_per_worker as f64 * self.beta
+    }
+
     pub fn allgather_secs(&self, bytes_per_worker: usize) -> f64 {
         let n = self.workers as f64;
         if self.workers <= 1 {
@@ -81,6 +98,7 @@ mod tests {
         let m = NetworkModel::new(1, 100.0, 50.0);
         assert_eq!(m.allreduce_secs(1 << 20), 0.0);
         assert_eq!(m.allgather_secs(1 << 20), 0.0);
+        assert_eq!(m.reduce_scatter_secs(1 << 20), 0.0);
     }
 
     #[test]
@@ -111,8 +129,24 @@ mod tests {
         assert!((m.allreduce_secs(1000) - 0.0135).abs() < 1e-12);
         // all-gather: 3·2ms + (3/4)·(4·1000)·1µs = 6ms + 3ms
         assert!((m.allgather_secs(1000) - 0.009).abs() < 1e-12);
+        // reduce-scatter: 3·2ms + (3/4)·1000·1µs = 6ms + 0.75ms
+        assert!((m.reduce_scatter_secs(1000) - 0.00675).abs() < 1e-12);
         // broadcast (pipelined ring): 3·2ms + 1000·1µs = 6ms + 1ms
         assert!((m.broadcast_secs(1000) - 0.007).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduce_scatter_plus_allgather_equals_allreduce() {
+        // the ring all-reduce IS reduce-scatter(V) then all-gather of the
+        // owned 1/N shard — the identity the sharded transport's time
+        // accounting rests on (exact when N divides V)
+        for workers in [2usize, 4, 8] {
+            let m = NetworkModel::new(workers, 137.0, 23.0);
+            let v = 4096 * workers; // divisible by N
+            let split = m.reduce_scatter_secs(v) + m.allgather_secs(v / workers);
+            let fused = m.allreduce_secs(v);
+            assert!((split - fused).abs() < 1e-12 * fused.max(1.0), "N={workers}");
+        }
     }
 
     #[test]

@@ -25,9 +25,16 @@
 //!    serialization point that waits for both streams.  `--no-overlap`
 //!    reproduces the old serialized charge (compute + Σ comm).
 //!
+//!  * **Parameter rebuilds** (the sharded transport's post-optimizer
+//!    all-gather of freshly stepped shards) are charged serially in
+//!    BOTH disciplines: they depend on the optimizer's output, so no
+//!    overlap with this step's backprop is possible and the overlap
+//!    saving is transport-independent.
+//!
 //! Invariants (pinned by unit tests here and `tests/proptests.rs`):
-//! overlapped ≤ serialized for any cost/comm vectors, with exact
-//! equality when all collectives are free (α = β = 0 or one worker).
+//! overlapped ≤ serialized for any cost/comm/rebuild vectors, with
+//! exact equality when all collectives are free (α = β = 0 or one
+//! worker).
 
 use crate::data::Batch;
 use crate::models::ModelMeta;
@@ -133,7 +140,8 @@ impl SimClock {
 pub struct StepTimes {
     /// modeled compute incl. the optimizer serialization point
     pub compute: f64,
-    /// Σ per-layer collective seconds (the serialized comm charge)
+    /// Σ per-layer collective seconds plus any post-optimizer parameter
+    /// rebuild (the serialized comm charge — matches the ledger)
     pub comm: f64,
     /// overlap-aware end-to-end step time
     pub overlapped: f64,
@@ -151,7 +159,21 @@ pub struct StepTimes {
 /// Collectives are issued in ready order on a single in-order network
 /// channel (one NIC / one ring); the step ends when both streams drain,
 /// plus the optimizer update.
-pub fn step_times(cost: &CostModel, batch_mult: usize, comm_secs: &[f64]) -> StepTimes {
+///
+/// `rebuild_secs` is the sharded transport's parameter-rebuild
+/// all-gather time (`Ledger::rebuild_secs` delta): those collectives
+/// depend on the freshly stepped shards, so they run AFTER the
+/// optimizer serialization point and can never hide under this step's
+/// backprop — both disciplines charge them serially, which leaves
+/// `serialized - overlapped` (the overlap saving) untouched.  Dense
+/// replication always passes 0.0, reproducing the pre-transport charge
+/// bit for bit.
+pub fn step_times(
+    cost: &CostModel,
+    batch_mult: usize,
+    comm_secs: &[f64],
+    rebuild_secs: f64,
+) -> StepTimes {
     debug_assert_eq!(comm_secs.len(), cost.bwd_secs.len());
     let mult = batch_mult.max(1) as f64;
     let base = (mult - 1.0) * cost.micro_secs() + cost.fwd_secs;
@@ -172,9 +194,9 @@ pub fn step_times(cost: &CostModel, batch_mult: usize, comm_secs: &[f64]) -> Ste
     let compute = compute_end + cost.opt_secs;
     StepTimes {
         compute,
-        comm: comm_sum,
-        overlapped: drained + cost.opt_secs,
-        serialized: compute + comm_sum,
+        comm: comm_sum + rebuild_secs,
+        overlapped: drained + cost.opt_secs + rebuild_secs,
+        serialized: compute + comm_sum + rebuild_secs,
     }
 }
 
@@ -211,7 +233,7 @@ mod tests {
         // bwd order is layer 1 then layer 0: l1 ready at 1+3=4, its
         // collective (1s) hides under l0's backprop (4..6); l0 ready at
         // 6, its 4s collective runs 6..10; optimizer at 10 -> 10.5
-        let t = step_times(&cost2(), 1, &[4.0, 1.0]);
+        let t = step_times(&cost2(), 1, &[4.0, 1.0], 0.0);
         assert!((t.overlapped - 10.5).abs() < 1e-12, "{t:?}");
         // serialized: (1+2+3+0.5) + (4+1) = 11.5, so overlap saved 1s
         assert!((t.serialized - 11.5).abs() < 1e-12, "{t:?}");
@@ -223,14 +245,14 @@ mod tests {
     fn network_bound_step_is_gated_by_the_channel() {
         // giant collectives: the channel serializes them back-to-back
         // starting from the first ready-time (t=4)
-        let t = step_times(&cost2(), 1, &[100.0, 100.0]);
+        let t = step_times(&cost2(), 1, &[100.0, 100.0], 0.0);
         assert!((t.overlapped - (4.0 + 200.0 + 0.5)).abs() < 1e-12, "{t:?}");
     }
 
     #[test]
     fn zero_comm_is_exactly_serialized() {
         for mult in [1usize, 2, 8] {
-            let t = step_times(&cost2(), mult, &[0.0, 0.0]);
+            let t = step_times(&cost2(), mult, &[0.0, 0.0], 0.0);
             assert_eq!(t.overlapped, t.serialized, "mult {mult}");
             assert_eq!(t.comm, 0.0);
         }
@@ -240,10 +262,28 @@ mod tests {
     fn accumulation_gates_ready_times() {
         // mult=2: micro-steps 0 runs fully (6s), then the final
         // micro-step's fwd (1s) + bwd; l1 ready at 6+1+3=10
-        let t = step_times(&cost2(), 2, &[0.0, 1.0]);
+        let t = step_times(&cost2(), 2, &[0.0, 1.0], 0.0);
         // l1 comm (1s) hides entirely under l0's bwd (10..12)
         assert!((t.overlapped - 12.5).abs() < 1e-12, "{t:?}");
         assert!((t.serialized - 13.5).abs() < 1e-12, "{t:?}");
+    }
+
+    #[test]
+    fn rebuild_charges_serially_after_the_optimizer() {
+        // same schedule as the hand-computed case, plus a 2s parameter
+        // rebuild: both disciplines pay it in full (it cannot hide under
+        // this step's backprop), so the overlap saving is unchanged
+        let t0 = step_times(&cost2(), 1, &[4.0, 1.0], 0.0);
+        let t = step_times(&cost2(), 1, &[4.0, 1.0], 2.0);
+        assert!((t.overlapped - 12.5).abs() < 1e-12, "{t:?}");
+        assert!((t.serialized - 13.5).abs() < 1e-12, "{t:?}");
+        assert!((t.comm - 7.0).abs() < 1e-12);
+        assert_eq!(t.compute.to_bits(), t0.compute.to_bits());
+        let saved0 = t0.serialized - t0.overlapped;
+        let saved = t.serialized - t.overlapped;
+        assert!((saved - saved0).abs() < 1e-12, "rebuild must not change the saving");
+        // zero rebuild reproduces the hand-computed dense charge
+        assert!((t0.overlapped - 10.5).abs() < 1e-12, "{t0:?}");
     }
 
     #[test]

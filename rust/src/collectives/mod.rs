@@ -1,25 +1,79 @@
 //! Collectives: the communication substrate.
 //!
-//! Two layers:
+//! Three layers:
 //!  * pure algorithms — `ring_allreduce_mean` is a faithful chunked
 //!    reduce-scatter + all-gather ring (what NCCL runs); `mean_into` is
 //!    the algebraically identical shortcut the hot path uses (property
 //!    tests pin the equivalence);
 //!  * `Comm` — the accounting wrapper every compressor talks to: it
 //!    performs the aggregation *and* charges the communication ledger
-//!    (paper-convention payload floats) and the α–β clock.
+//!    (paper-convention payload floats) and the α–β clock;
+//!  * [`Transport`] — the aggregation plan: which collective implements
+//!    one layer's round and which shard of the layer each worker owns
+//!    afterwards.  The trainer is transport-agnostic; swapping the
+//!    transport swaps the whole ownership/collective story.
+//!
+//! # The `Transport` contract
+//!
+//! A transport answers three questions per layer per step:
+//!
+//! 1. **Which collective(s) run?**  [`Transport::aggregate_layer`]
+//!    executes one layer's aggregation round (through the compressor's
+//!    shard-aware entry point, or raw when the layer is uncompressed)
+//!    and charges every collective to the ledger.
+//! 2. **Who owns what afterwards?**  [`Transport::owned_range`] names
+//!    the contiguous shard of the layer each worker holds the
+//!    aggregated gradient for — and therefore which parameter slice
+//!    that worker's optimizer steps.  [`DenseReplicated`]: every worker
+//!    owns the whole layer (replicated ownership, one full optimizer
+//!    step stands for all replicas).  [`ShardedOwnership`]: worker `w`
+//!    owns the `w`-th `ceil(numel/N)` chunk — the same chunking as the
+//!    reduce-scatter phase of `ring_allreduce_mean`.
+//! 3. **How do full parameters come back?**  Dense replication needs
+//!    nothing (every replica already stepped everything).  Sharded
+//!    ownership all-gathers the freshly stepped shards before the next
+//!    forward pass; that rebuild is charged via
+//!    [`Comm::charge_rebuild_allgather`] and lands in the ledger's
+//!    `rebuild_secs` so the overlap scheduler can place it after the
+//!    optimizer (it cannot hide under this step's backprop).
+//!
+//! # Ledger charging per transport (DESIGN.md §5 extension)
+//!
+//! The floats ledger keeps the paper's "Data Sent" convention — the
+//! per-worker payload of every collective:
+//!
+//! | round                      | dense replicated     | sharded ownership              |
+//! |----------------------------|----------------------|--------------------------------|
+//! | uncompressed layer         | all-reduce: `V`      | reduce-scatter: `V`, + rebuild |
+//! | dense-payload compressor   | all-gather: payload  | reduce-scatter: payload, + rebuild |
+//! | sparse/structured (fallback) | as dense           | as dense, + rebuild            |
+//! | parameter rebuild          | —                    | all-gather: `ceil(V/N)`        |
+//!
+//! "Dense-payload" compressors (QSGD, signSGD, none) have wire formats
+//! aligned with parameter coordinates, so their compressed shards can be
+//! reduce-scattered directly.  TopK/RandomK/PowerSGD payloads cannot be
+//! sliced by parameter index ((value, index) pairs / shared-seed value
+//! lists / rank-r factors), so they keep their dense round — the
+//! gather-then-shard fallback — and the rebuild all-gather is the honest
+//! extra cost of sharded ownership for them.
 
 use crate::cluster::network::NetworkModel;
+use crate::compress::{DistCompressor, Level};
+use std::ops::Range;
 
 /// Communication accounting for one run.
 /// `floats` follows the paper's "Data Sent" convention: the per-worker
 /// payload size of every collective, accumulated over steps (see
 /// DESIGN.md §5 — this is what reproduces the tables' Million/Billion
-/// Floats columns).  `secs` is the α–β modeled wall-clock.
+/// Floats columns).  `secs` is the α–β modeled wall-clock;
+/// `rebuild_secs` is the subset of `secs` spent rebuilding full
+/// parameters after sharded optimizer steps (charged after the
+/// optimizer by the overlap scheduler, zero under dense replication).
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
     pub floats: u64,
     pub secs: f64,
+    pub rebuild_secs: f64,
     pub collectives: u64,
 }
 
@@ -36,15 +90,18 @@ impl Comm {
 
     /// All-reduce (mean) of one equal-length buffer per worker.
     /// Charges one ring all-reduce of the payload and returns the mean.
-    pub fn allreduce_mean(&mut self, bufs: &[&[f32]]) -> Vec<f32> {
-        let mut out = vec![0.0; bufs[0].len()];
-        self.allreduce_mean_into(bufs, &mut out);
-        out
-    }
-
     pub fn allreduce_mean_into(&mut self, bufs: &[&[f32]], out: &mut [f32]) {
         mean_into(bufs, out);
         self.charge_allreduce(out.len());
+    }
+
+    /// Reduce-scatter (mean) of one equal-length buffer per worker:
+    /// the full mean still lands in `out` (the sim keeps one logical
+    /// copy), but the wire is charged as the half-ring reduce-scatter —
+    /// each worker only ends up *owning* its 1/N shard of `out`.
+    pub fn reduce_scatter_mean_into(&mut self, bufs: &[&[f32]], out: &mut [f32]) {
+        mean_into(bufs, out);
+        self.charge_reduce_scatter(out.len());
     }
 
     /// Charge an all-reduce without moving data (used when the payload is
@@ -62,15 +119,51 @@ impl Comm {
         self.ledger.secs += self.net.allgather_secs(floats * 4);
         self.ledger.collectives += 1;
     }
+
+    /// Charge a reduce-scatter where each worker contributes a `floats`
+    /// input payload and keeps 1/N of the reduced result.
+    pub fn charge_reduce_scatter(&mut self, floats: usize) {
+        self.ledger.floats += floats as u64;
+        self.ledger.secs += self.net.reduce_scatter_secs(floats * 4);
+        self.ledger.collectives += 1;
+    }
+
+    /// Charge the sharded transport's parameter-rebuild all-gather
+    /// (each worker contributes its `floats`-sized owned shard).
+    /// Accounted like any all-gather, but additionally recorded in
+    /// `rebuild_secs`: the rebuild runs after the optimizer step, so
+    /// the overlap scheduler must charge it serially instead of hiding
+    /// it under this step's backprop.
+    pub fn charge_rebuild_allgather(&mut self, floats: usize) {
+        let secs = self.net.allgather_secs(floats * 4);
+        self.ledger.floats += floats as u64;
+        self.ledger.secs += secs;
+        self.ledger.rebuild_secs += secs;
+        self.ledger.collectives += 1;
+    }
 }
 
 /// Naive mean across workers (the hot-path aggregation).
+///
+/// Panics (in every build profile) on a ragged worker buffer: silently
+/// averaging mismatched shard lengths would corrupt training, so length
+/// mismatches are a hard error, not a debug assertion.
 pub fn mean_into(bufs: &[&[f32]], out: &mut [f32]) {
     let n = bufs.len();
-    debug_assert!(n > 0);
+    assert!(n > 0, "mean_into: no worker buffers");
+    assert_eq!(
+        bufs[0].len(),
+        out.len(),
+        "mean_into: worker 0 buffer length != output length"
+    );
     out.copy_from_slice(bufs[0]);
-    for b in &bufs[1..] {
-        debug_assert_eq!(b.len(), out.len());
+    for (w, b) in bufs[1..].iter().enumerate() {
+        assert_eq!(
+            b.len(),
+            out.len(),
+            "mean_into: ragged worker buffer (worker {})",
+            w + 1
+        );
         for (o, x) in out.iter_mut().zip(*b) {
             *o += x;
         }
@@ -131,9 +224,179 @@ pub fn ring_allreduce_mean(bufs: &mut [Vec<f32>]) {
     }
 }
 
+// ------------------------------------------------------------ transport
+
+/// The pluggable aggregation plan: which collective implements one
+/// layer's round, which shard each worker owns afterwards, and what it
+/// costs to rebuild full parameters (see the module docs for the full
+/// contract).  Transports are stateless shard arithmetic + charging
+/// policy, so one instance is shared by every layer task across
+/// threads.
+pub trait Transport: Send + Sync {
+    /// Short name, also the run label / CSV `transport` column value.
+    fn name(&self) -> &'static str;
+
+    /// Number of distinct owners whose shard steps cover a layer exactly
+    /// once: 1 under dense replication (every replica applies the same
+    /// full step, so one stands for all), `workers` under sharded
+    /// ownership.
+    fn owners(&self) -> usize;
+
+    /// Contiguous range of a `numel`-length layer that worker `w` owns
+    /// after aggregation: the slice of the aggregated gradient it holds
+    /// and the parameter slice its optimizer steps.  Over
+    /// `w in 0..owners()` the ranges are disjoint and cover
+    /// `0..numel` exactly once.
+    fn owned_range(&self, numel: usize, w: usize) -> Range<usize>;
+
+    /// Run one layer's aggregation round: the compressor's shard-aware
+    /// entry point when `comp` is given, the raw collective otherwise.
+    /// Leaves the full mean gradient in `out` (the sim keeps one
+    /// logical copy; ownership decides who *keeps* which slice), and
+    /// charges every collective this transport runs — including the
+    /// parameter rebuild for sharded ownership.
+    #[allow(clippy::too_many_arguments)]
+    fn aggregate_layer(
+        &self,
+        comp: Option<&mut dyn DistCompressor>,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    );
+
+    /// Peak per-worker resident decompress-buffer floats for a model
+    /// with the given layer sizes — the memory story sharded ownership
+    /// exists for.  Dense replication decompresses and holds every
+    /// layer in full; sharded ownership keeps 1/N of each layer plus
+    /// one transient full layer (the gather-then-shard fallback
+    /// reconstructs one layer at a time before discarding the
+    /// unowned part).
+    fn resident_floats(&self, layer_numels: &[usize]) -> usize;
+}
+
+/// Today's transport: every worker owns (and decompresses) every layer,
+/// aggregation is the dense collective each compressor always ran.
+/// Bit-identical to the pre-transport hot path — the parity suites are
+/// the oracle.
+pub struct DenseReplicated;
+
+impl Transport for DenseReplicated {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn owners(&self) -> usize {
+        1
+    }
+
+    fn owned_range(&self, numel: usize, _w: usize) -> Range<usize> {
+        0..numel
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn aggregate_layer(
+        &self,
+        comp: Option<&mut dyn DistCompressor>,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        match comp {
+            Some(c) => c.round(layer, grads, shape, level, comm, out),
+            None => comm.allreduce_mean_into(grads, out),
+        }
+    }
+
+    fn resident_floats(&self, layer_numels: &[usize]) -> usize {
+        layer_numels.iter().sum()
+    }
+}
+
+/// Reduce-scatter parameter ownership: worker `w` keeps the `w`-th
+/// `ceil(numel/N)` chunk of every layer's aggregated gradient, steps
+/// only that parameter shard, and an all-gather of the stepped shards
+/// rebuilds full parameters before the next forward pass.  Cuts the
+/// per-worker decompress memory from ΣV to ΣV/N + one layer, at the
+/// cost of the rebuild all-gather — which for the uncompressed path is
+/// exactly the second half of the ring all-reduce dense replication
+/// already paid, so the no-compression serialized clock matches dense
+/// (pinned by `tests/transport_parity.rs`; under overlap the rebuild
+/// is post-optimizer and cannot hide under backprop).
+pub struct ShardedOwnership {
+    pub workers: usize,
+}
+
+impl ShardedOwnership {
+    pub fn new(workers: usize) -> ShardedOwnership {
+        assert!(workers >= 1, "sharded ownership needs at least one worker");
+        ShardedOwnership { workers }
+    }
+
+    /// The ring chunk: `ceil(numel / workers)` — identical to the
+    /// chunking of `ring_allreduce_mean`'s reduce-scatter phase, and the
+    /// per-worker payload of the parameter-rebuild all-gather.
+    pub fn chunk_len(&self, numel: usize) -> usize {
+        numel.div_ceil(self.workers).max(1)
+    }
+}
+
+impl Transport for ShardedOwnership {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn owners(&self) -> usize {
+        self.workers
+    }
+
+    fn owned_range(&self, numel: usize, w: usize) -> Range<usize> {
+        let chunk = self.chunk_len(numel);
+        let lo = (w * chunk).min(numel);
+        let hi = ((w + 1) * chunk).min(numel);
+        lo..hi
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn aggregate_layer(
+        &self,
+        comp: Option<&mut dyn DistCompressor>,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        match comp {
+            Some(c) => {
+                c.round_sharded(layer, grads, shape, level, comm, out);
+            }
+            None => comm.reduce_scatter_mean_into(grads, out),
+        }
+        // parameter rebuild: every worker contributes the shard it just
+        // stepped; charged after the optimizer by the overlap scheduler
+        comm.charge_rebuild_allgather(self.chunk_len(out.len()));
+    }
+
+    fn resident_floats(&self, layer_numels: &[usize]) -> usize {
+        let shards: usize = layer_numels
+            .iter()
+            .map(|&n| self.owned_range(n, 0).len())
+            .sum();
+        shards + layer_numels.iter().copied().max().unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::NoCompression;
     use crate::util::prop;
 
     #[test]
@@ -159,24 +422,142 @@ mod tests {
         let mut comm = Comm::new(NetworkModel::new(4, 100.0, 50.0));
         let a = vec![1.0f32; 100];
         let b = vec![3.0f32; 100];
-        let m = comm.allreduce_mean(&[&a, &b, &a, &b]);
+        let mut m = vec![0.0f32; 100];
+        comm.allreduce_mean_into(&[&a, &b, &a, &b], &mut m);
         assert!(m.iter().all(|&v| (v - 2.0).abs() < 1e-6));
         assert_eq!(comm.ledger.floats, 100);
         assert_eq!(comm.ledger.collectives, 1);
         assert!(comm.ledger.secs > 0.0);
+        assert_eq!(comm.ledger.rebuild_secs, 0.0);
 
         comm.charge_allgather(40);
         assert_eq!(comm.ledger.floats, 140);
         assert_eq!(comm.ledger.collectives, 2);
+
+        // reduce-scatter charges the same floats as an all-reduce of the
+        // same buffer but exactly half the (latency-free) wire time
+        let mut rs = Comm::new(NetworkModel::new(4, 100.0, 0.0));
+        let mut ar = Comm::new(NetworkModel::new(4, 100.0, 0.0));
+        rs.charge_reduce_scatter(100);
+        ar.charge_allreduce(100);
+        assert_eq!(rs.ledger.floats, ar.ledger.floats);
+        assert!((rs.ledger.secs * 2.0 - ar.ledger.secs).abs() < 1e-15);
+
+        // the rebuild all-gather lands in both secs and rebuild_secs
+        let mut rb = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        rb.charge_rebuild_allgather(25);
+        assert_eq!(rb.ledger.floats, 25);
+        assert!(rb.ledger.rebuild_secs > 0.0);
+        assert_eq!(rb.ledger.rebuild_secs, rb.ledger.secs);
     }
 
     #[test]
     fn single_worker_mean_identity() {
         let mut comm = Comm::new(NetworkModel::new(1, 100.0, 50.0));
         let a = vec![1.5f32; 8];
-        let m = comm.allreduce_mean(&[&a]);
+        let mut m = vec![0.0f32; 8];
+        comm.allreduce_mean_into(&[&a], &mut m);
         assert_eq!(m, a);
         assert_eq!(comm.ledger.secs, 0.0); // no wire, no time
         assert_eq!(comm.ledger.floats, 8); // but payload is still counted
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged worker buffer")]
+    fn mean_into_rejects_ragged_buffers_in_release_too() {
+        let a = vec![1.0f32; 8];
+        let b = vec![1.0f32; 7]; // ragged shard
+        let mut out = vec![0.0f32; 8];
+        mean_into(&[&a, &b], &mut out);
+    }
+
+    #[test]
+    fn owned_ranges_partition_every_layer() {
+        for workers in [1usize, 2, 3, 4, 7, 8] {
+            let t = ShardedOwnership::new(workers);
+            for numel in [1usize, 2, 5, 10, 48, 97, 1024] {
+                let mut covered = 0usize;
+                let mut next = 0usize;
+                for w in 0..t.owners() {
+                    let r = t.owned_range(numel, w);
+                    assert_eq!(r.start, next.min(numel), "gap at worker {w}");
+                    assert!(r.end <= numel);
+                    covered += r.len();
+                    next = r.end.max(next);
+                }
+                assert_eq!(covered, numel, "N={workers} numel={numel}");
+            }
+        }
+        // dense: one owner, the whole layer
+        let d = DenseReplicated;
+        assert_eq!(d.owners(), 1);
+        assert_eq!(d.owned_range(48, 0), 0..48);
+    }
+
+    #[test]
+    fn resident_floats_models_the_memory_story() {
+        let numels = [131_072usize, 256, 2_560, 10];
+        let total: usize = numels.iter().sum();
+        let d = DenseReplicated;
+        assert_eq!(d.resident_floats(&numels), total);
+        let s = ShardedOwnership::new(8);
+        let got = s.resident_floats(&numels);
+        // ≤ total/N + one (largest) layer, up to per-layer ceil rounding
+        let bound = total.div_ceil(8) + 131_072 + numels.len();
+        assert!(got <= bound, "{got} > {bound}");
+        assert!(got >= total / 8 + 131_072);
+    }
+
+    #[test]
+    fn transports_agree_on_the_mean_and_differ_on_the_ledger() {
+        let a = vec![1.0f32; 48];
+        let b = vec![3.0f32; 48];
+        let grads: Vec<&[f32]> = vec![&a, &b, &a, &b];
+
+        let dense = DenseReplicated;
+        let mut dc = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut dout = vec![0.0f32; 48];
+        dense.aggregate_layer(None, 0, &grads, &[48], Level::High, &mut dc, &mut dout);
+
+        let sharded = ShardedOwnership::new(4);
+        let mut sc = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut sout = vec![0.0f32; 48];
+        sharded.aggregate_layer(None, 0, &grads, &[48], Level::High, &mut sc, &mut sout);
+
+        // identical mean, bit for bit (same element ops in same order)
+        for (x, y) in dout.iter().zip(&sout) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // dense: one all-reduce of 48.  sharded: reduce-scatter of 48 +
+        // rebuild all-gather of the 12-float shard
+        assert_eq!(dc.ledger.floats, 48);
+        assert_eq!(sc.ledger.floats, 48 + 12);
+        assert_eq!(dc.ledger.rebuild_secs, 0.0);
+        assert!(sc.ledger.rebuild_secs > 0.0);
+        // RS(V) + AG(V/N) == allreduce(V): same modeled seconds
+        assert!((sc.ledger.secs - dc.ledger.secs).abs() < 1e-12 * dc.ledger.secs.max(1.0));
+    }
+
+    #[test]
+    fn sharded_compressor_round_goes_through_the_shard_entry_point() {
+        let a = vec![2.0f32; 32];
+        let grads: Vec<&[f32]> = vec![&a, &a];
+        let sharded = ShardedOwnership::new(2);
+        let mut comm = Comm::new(NetworkModel::new(2, 100.0, 50.0));
+        let mut out = vec![0.0f32; 32];
+        let mut nc = NoCompression;
+        sharded.aggregate_layer(
+            Some(&mut nc),
+            0,
+            &grads,
+            &[32],
+            Level::High,
+            &mut comm,
+            &mut out,
+        );
+        assert!(out.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        // reduce-scatter of 32 + rebuild all-gather of the 16-float shard
+        assert_eq!(comm.ledger.floats, 32 + 16);
+        assert_eq!(comm.ledger.collectives, 2);
     }
 }

@@ -8,6 +8,14 @@
 //! replicas identical, so the trainer owns a single parameter copy —
 //! DESIGN.md §3).  All communication goes through [`Comm`], which charges
 //! the paper-convention floats ledger and the α–β clock.
+//!
+//! Every compressor exposes two aggregation entry points, one per
+//! transport (see `collectives::Transport`): [`DistCompressor::round`]
+//! is the dense replicated round, and
+//! [`DistCompressor::round_sharded`] the sharded-ownership round —
+//! dense-payload methods reduce-scatter compressed shards, sparse and
+//! structured methods fall back to gather-then-shard with the fallback
+//! charged honestly.
 
 pub mod powersgd;
 pub mod qsgd;
@@ -50,6 +58,35 @@ pub trait DistCompressor: Send {
         out: &mut [f32],
     );
 
+    /// Shard-aware aggregation entry point for the sharded-ownership
+    /// transport: produce the same mean gradient in `out` as [`round`]
+    /// (a contract the transport parity tests pin), but charge the
+    /// collective the transport actually runs.  Dense-payload
+    /// compressors (QSGD, signSGD, none) override this to
+    /// reduce-scatter their compressed shards — the wire format is
+    /// aligned with parameter coordinates, so shard owners can sum
+    /// compressed slices directly.  The default is the gather-then-shard
+    /// fallback used by the sparse/structured families (TopK, RandomK,
+    /// PowerSGD) whose payloads cannot be sliced by parameter index:
+    /// the dense round runs unchanged and is charged exactly as dense,
+    /// and the transport's parameter-rebuild all-gather is the honest
+    /// extra cost of sharded ownership.  Returns `true` when a genuine
+    /// reduce-scatter happened, `false` for the fallback.
+    ///
+    /// [`round`]: DistCompressor::round
+    fn round_sharded(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) -> bool {
+        self.round(layer, grads, shape, level, comm, out);
+        false
+    }
+
     /// Per-worker payload floats one round sends at `level` (planning /
     /// assertions; the ledger in `Comm` is authoritative).
     fn payload_floats(&self, shape: &[usize], level: Level) -> usize;
@@ -76,6 +113,23 @@ impl DistCompressor for NoCompression {
         out: &mut [f32],
     ) {
         comm.allreduce_mean_into(grads, out);
+    }
+
+    /// Raw gradients are trivially coordinate-aligned: the sharded
+    /// transport reduce-scatters them directly (same mean, half the
+    /// wire of the all-reduce — the rebuild all-gather is the other
+    /// half).
+    fn round_sharded(
+        &mut self,
+        _layer: usize,
+        grads: &[&[f32]],
+        _shape: &[usize],
+        _level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) -> bool {
+        comm.reduce_scatter_mean_into(grads, out);
+        true
     }
 
     fn payload_floats(&self, shape: &[usize], _level: Level) -> usize {
@@ -137,6 +191,23 @@ mod tests {
         c.round(0, &testutil::views(&g), &[2], Level::High, &mut comm, &mut out);
         assert_eq!(out, vec![2.0, 4.0]);
         assert_eq!(comm.ledger.floats, 2);
+    }
+
+    #[test]
+    fn no_compression_sharded_round_reduce_scatters() {
+        let mut c = NoCompression;
+        let mut comm = testutil::comm(2);
+        let g = vec![vec![1.0f32, 3.0], vec![3.0f32, 5.0]];
+        let mut out = vec![0.0; 2];
+        let genuine =
+            c.round_sharded(0, &testutil::views(&g), &[2], Level::High, &mut comm, &mut out);
+        assert!(genuine, "raw gradients must take the true reduce-scatter path");
+        assert_eq!(out, vec![2.0, 4.0]);
+        assert_eq!(comm.ledger.floats, 2);
+        // half the all-reduce wire at zero latency
+        let mut ar = testutil::comm(2);
+        ar.charge_allreduce(2);
+        assert!(comm.ledger.secs < ar.ledger.secs);
     }
 
     #[test]

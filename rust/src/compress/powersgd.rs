@@ -19,6 +19,13 @@
 //!
 //! The numerics of this round are parity-pinned against the L1 Pallas
 //! artifact `powersgd_round_*` in rust/tests/integration_train.rs.
+//!
+//! Sharded transport: the rank-r factors P̂/Q̄ are not sliceable by
+//! parameter index (every owner needs both in full to reconstruct its
+//! rows of P̂ Q̄ᵀ), so PowerSGD keeps the default gather-then-shard
+//! fallback — its two all-reduces run unchanged and the transport's
+//! parameter-rebuild all-gather is the honest extra cost of sharded
+//! ownership (see `DistCompressor::round_sharded`).
 
 use super::{matrix_dims, Comm, DistCompressor, Level};
 use crate::tensor::linalg;
@@ -73,7 +80,13 @@ impl PowerSgd {
         r.clamp(1, n.min(k))
     }
 
-    fn layer_state(&mut self, layer: usize, numel: usize, k: usize, rank: usize) -> &mut LayerState {
+    fn layer_state(
+        &mut self,
+        layer: usize,
+        numel: usize,
+        k: usize,
+        rank: usize,
+    ) -> &mut LayerState {
         let workers = self.workers;
         let seed = self.seed;
         let st = self.state.entry(layer).or_insert_with(|| {
@@ -295,6 +308,27 @@ mod tests {
         assert_eq!(ps.payload_floats(&shape, Level::Low), (12 + 8) * 2);
         assert_eq!(ps.payload_floats(&shape, Level::High), 12 + 8);
         assert_eq!(ps.payload_floats(&shape, Level::Rank(3)), (12 + 8) * 3);
+    }
+
+    #[test]
+    fn sharded_round_is_the_gather_then_shard_fallback() {
+        let workers = 2;
+        let shape = [8, 4];
+        let mut rng = crate::util::rng::Rng::new(13);
+        let g = testutil::worker_grads(&mut rng, workers, 32);
+        let mut dense = PowerSgd::new(workers, 2, 1, 42);
+        let mut shard = PowerSgd::new(workers, 2, 1, 42);
+        let mut cd = testutil::comm(workers);
+        let mut cs = testutil::comm(workers);
+        let mut od = vec![0.0f32; 32];
+        let mut os = vec![0.0f32; 32];
+        dense.round(0, &testutil::views(&g), &shape, Level::Low, &mut cd, &mut od);
+        let genuine =
+            shard.round_sharded(0, &testutil::views(&g), &shape, Level::Low, &mut cs, &mut os);
+        assert!(!genuine, "rank-r factors must take the fallback");
+        assert_eq!(od, os);
+        assert_eq!(cd.ledger.floats, cs.ledger.floats);
+        assert_eq!(cd.ledger.collectives, cs.ledger.collectives);
     }
 
     #[test]

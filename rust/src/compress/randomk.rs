@@ -5,6 +5,11 @@
 //! k values + one seed (indices need not travel).  Error feedback keeps
 //! it convergent.  Used by the ablation benches to show that magnitude
 //! selection (TopK) matters and that Accordion is selector-agnostic.
+//!
+//! Sharded transport: the k kept coordinates are scattered over the
+//! whole layer, so the compressed value list does not align with
+//! contiguous parameter shards — RandomK keeps the default
+//! gather-then-shard fallback (see `DistCompressor::round_sharded`).
 
 use super::{Comm, DistCompressor, Level};
 use crate::util::rng::Rng;
@@ -40,7 +45,11 @@ impl RandomK {
 
 impl DistCompressor for RandomK {
     fn name(&self) -> String {
-        format!("randomk(k_low={:.0}%, k_high={:.0}%)", self.frac_at_low * 100.0, self.frac_at_high * 100.0)
+        format!(
+            "randomk(k_low={:.0}%, k_high={:.0}%)",
+            self.frac_at_low * 100.0,
+            self.frac_at_high * 100.0
+        )
     }
 
     fn round(
@@ -58,7 +67,8 @@ impl DistCompressor for RandomK {
         self.step += 1;
 
         // synchronized coordinate choice: partial Fisher-Yates over indices
-        let mut rng = Rng::new(self.seed ^ self.step.wrapping_mul(0x9E3779B97F4A7C15) ^ (layer as u64) << 17);
+        let mut rng =
+            Rng::new(self.seed ^ self.step.wrapping_mul(0x9E3779B97F4A7C15) ^ (layer as u64) << 17);
         let mut idx: Vec<usize> = (0..numel).collect();
         for i in 0..k {
             let j = i + rng.below(numel - i);
@@ -126,6 +136,24 @@ mod tests {
         rk.round(0, &testutil::views(&g), &[16], Level::High, &mut comm, &mut out);
         assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 4);
         assert_eq!(comm.ledger.floats, 4);
+    }
+
+    #[test]
+    fn sharded_round_is_the_gather_then_shard_fallback() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let g = testutil::worker_grads(&mut rng, 2, 16);
+        let mut dense = RandomK::new(2, 1.0, 0.25, 3);
+        let mut shard = RandomK::new(2, 1.0, 0.25, 3);
+        let mut cd = testutil::comm(2);
+        let mut cs = testutil::comm(2);
+        let mut od = vec![0.0f32; 16];
+        let mut os = vec![0.0f32; 16];
+        dense.round(0, &testutil::views(&g), &[16], Level::High, &mut cd, &mut od);
+        let genuine =
+            shard.round_sharded(0, &testutil::views(&g), &[16], Level::High, &mut cs, &mut os);
+        assert!(!genuine, "scattered support must take the fallback");
+        assert_eq!(od, os);
+        assert_eq!(cd.ledger.floats, cs.ledger.floats);
     }
 
     #[test]

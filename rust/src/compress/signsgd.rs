@@ -21,23 +21,12 @@ impl SignSgd {
     pub fn new(workers: usize) -> SignSgd {
         SignSgd { workers, ef: HashMap::new() }
     }
-}
 
-impl DistCompressor for SignSgd {
-    fn name(&self) -> String {
-        "signsgd(ef)".into()
-    }
-
-    fn round(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        _level: Level, // 1-bit always: no adaptivity knob (see module docs)
-        comm: &mut Comm,
-        out: &mut [f32],
-    ) {
-        let numel: usize = shape.iter().product();
+    /// The sign-quantize-and-mean data path (with its EF update) shared
+    /// by both aggregation entry points: only the ledger charge differs
+    /// between transports.
+    fn aggregate_mean(&mut self, layer: usize, grads: &[&[f32]], out: &mut [f32]) {
+        let numel = out.len();
         let workers = grads.len();
         let ef = self
             .ef
@@ -58,7 +47,43 @@ impl DistCompressor for SignSgd {
                 *v -= q;
             }
         }
+    }
+}
+
+impl DistCompressor for SignSgd {
+    fn name(&self) -> String {
+        "signsgd(ef)".into()
+    }
+
+    fn round(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        _level: Level, // 1-bit always: no adaptivity knob (see module docs)
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        self.aggregate_mean(layer, grads, out);
         comm.charge_allgather(self.payload_floats(shape, Level::High));
+    }
+
+    /// Sign vectors are coordinate-aligned (one bit per parameter), so
+    /// the sharded transport reduce-scatters the compressed shards:
+    /// same mean and EF update, the payload charged as one
+    /// reduce-scatter instead of the dense all-gather.
+    fn round_sharded(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        _level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) -> bool {
+        self.aggregate_mean(layer, grads, out);
+        comm.charge_reduce_scatter(self.payload_floats(shape, Level::High));
+        true
     }
 
     fn payload_floats(&self, shape: &[usize], _level: Level) -> usize {
@@ -110,6 +135,26 @@ mod tests {
         let s = SignSgd::new(2);
         assert_eq!(s.payload_floats(&[64], Level::Low), 3); // 64/32 + 1
         assert_eq!(s.payload_floats(&[100], Level::High), 5); // ceil(100/32)+1
+    }
+
+    #[test]
+    fn sharded_round_same_mean_and_ef() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        let g = testutil::worker_grads(&mut rng, 2, 20);
+        let mut dense = SignSgd::new(2);
+        let mut shard = SignSgd::new(2);
+        let mut cd = testutil::comm(2);
+        let mut cs = testutil::comm(2);
+        let mut od = vec![0.0f32; 20];
+        let mut os = vec![0.0f32; 20];
+        dense.round(0, &testutil::views(&g), &[20], Level::High, &mut cd, &mut od);
+        let genuine =
+            shard.round_sharded(0, &testutil::views(&g), &[20], Level::High, &mut cs, &mut os);
+        assert!(genuine);
+        assert_eq!(od, os);
+        assert_eq!(dense.ef.get(&0).unwrap(), shard.ef.get(&0).unwrap());
+        assert_eq!(cd.ledger.floats, cs.ledger.floats);
+        assert!(cs.ledger.secs < cd.ledger.secs);
     }
 
     #[test]

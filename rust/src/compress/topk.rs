@@ -7,6 +7,12 @@
 //! for TopK — so the per-worker payload is 2k floats (indices counted as
 //! floats, matching the paper's Data Sent arithmetic).  The aggregated
 //! gradient is the mean of the union of sparse contributions.
+//!
+//! Sharded transport: a (value, index) payload cannot be sliced by
+//! parameter index before the exchange, so TopK keeps the default
+//! gather-then-shard fallback — the dense all-gather runs unchanged and
+//! the transport's parameter-rebuild all-gather is the honest extra
+//! cost (see `DistCompressor::round_sharded`).
 
 use super::{Comm, DistCompressor, Level};
 use std::collections::HashMap;
@@ -62,7 +68,11 @@ fn threshold(mags: &mut Vec<f32>, a: &[f32], k: usize) -> f32 {
 
 impl DistCompressor for TopK {
     fn name(&self) -> String {
-        format!("topk(k_low={:.0}%, k_high={:.0}%)", self.frac_at_low * 100.0, self.frac_at_high * 100.0)
+        format!(
+            "topk(k_low={:.0}%, k_high={:.0}%)",
+            self.frac_at_low * 100.0,
+            self.frac_at_high * 100.0
+        )
     }
 
     fn round(
@@ -207,6 +217,27 @@ mod tests {
         let ef = &tk.ef.get(&0).unwrap()[0];
         assert_eq!(ef[1], 0.0);
         assert!((ef[0] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sharded_round_is_the_gather_then_shard_fallback() {
+        // the sparse wire format cannot shard: the sharded entry point
+        // must charge exactly the dense round and report the fallback
+        let mut rng = crate::util::rng::Rng::new(3);
+        let g = testutil::worker_grads(&mut rng, 2, 40);
+        let mut dense = TopK::new(2, 0.99, 0.25);
+        let mut shard = TopK::new(2, 0.99, 0.25);
+        let mut cd = testutil::comm(2);
+        let mut cs = testutil::comm(2);
+        let mut od = vec![0.0f32; 40];
+        let mut os = vec![0.0f32; 40];
+        dense.round(0, &testutil::views(&g), &[40], Level::High, &mut cd, &mut od);
+        let genuine =
+            shard.round_sharded(0, &testutil::views(&g), &[40], Level::High, &mut cs, &mut os);
+        assert!(!genuine, "sparse payloads must take the fallback");
+        assert_eq!(od, os);
+        assert_eq!(cd.ledger.floats, cs.ledger.floats);
+        assert_eq!(cd.ledger.secs, cs.ledger.secs);
     }
 
     #[test]

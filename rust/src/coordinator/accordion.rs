@@ -85,7 +85,10 @@ impl Accordion {
 impl Controller for Accordion {
     fn name(&self) -> String {
         if self.is_batch_mode() {
-            format!("accordion-batch(eta={}, w={}, mult={})", self.eta, self.interval, self.batch_mult_high)
+            format!(
+                "accordion-batch(eta={}, w={}, mult={})",
+                self.eta, self.interval, self.batch_mult_high
+            )
         } else {
             format!("accordion(eta={}, w={})", self.eta, self.interval)
         }
@@ -104,7 +107,11 @@ impl Controller for Accordion {
         }
         let batch_mult = if self.is_batch_mode() {
             // critical ⇒ small batch, else large; monotone non-decreasing
-            let want = if self.levels.iter().any(|l| *l == Level::Low) { 1 } else { self.batch_mult_high };
+            let want = if self.levels.iter().any(|l| *l == Level::Low) {
+                1
+            } else {
+                self.batch_mult_high
+            };
             self.batch_floor = self.batch_floor.max(want);
             self.batch_floor
         } else {

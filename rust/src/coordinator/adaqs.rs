@@ -25,7 +25,13 @@ pub struct AdaQs {
 }
 
 impl AdaQs {
-    pub fn new(n_layers: usize, rank_start: usize, rank_max: usize, drop: f32, interval: usize) -> AdaQs {
+    pub fn new(
+        n_layers: usize,
+        rank_start: usize,
+        rank_max: usize,
+        drop: f32,
+        interval: usize,
+    ) -> AdaQs {
         AdaQs {
             n_layers,
             rank_start,

@@ -21,7 +21,12 @@ pub struct SmithSchedule {
 }
 
 impl SmithSchedule {
-    pub fn new(n_layers: usize, milestones: Vec<usize>, factor: usize, cap: usize) -> SmithSchedule {
+    pub fn new(
+        n_layers: usize,
+        milestones: Vec<usize>,
+        factor: usize,
+        cap: usize,
+    ) -> SmithSchedule {
         SmithSchedule { n_layers, milestones, factor: factor.max(1), cap: cap.max(1) }
     }
 

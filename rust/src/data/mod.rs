@@ -56,7 +56,14 @@ impl Dataset {
         }
     }
 
-    pub fn text(name: &str, vocab: usize, train_tokens: usize, test_tokens: usize, seq: usize, seed: u64) -> Dataset {
+    pub fn text(
+        name: &str,
+        vocab: usize,
+        train_tokens: usize,
+        test_tokens: usize,
+        seq: usize,
+        seed: u64,
+    ) -> Dataset {
         let gen = text::MarkovText::new(vocab, seed);
         let tokens = gen.generate(train_tokens, 1);
         let test = gen.generate(test_tokens, 2);
@@ -128,7 +135,13 @@ impl EpochSampler {
     }
 
     /// Indices for `worker`'s micro-batch at global step `step`.
-    pub fn shard(&self, step: usize, worker: usize, workers: usize, batch: usize) -> Option<Vec<usize>> {
+    pub fn shard(
+        &self,
+        step: usize,
+        worker: usize,
+        workers: usize,
+        batch: usize,
+    ) -> Option<Vec<usize>> {
         let global = workers * batch;
         let start = step * global + worker * batch;
         if start + batch > self.order.len() {

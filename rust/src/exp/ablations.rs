@@ -66,7 +66,10 @@ pub fn ablate_selector(h: &mut Harness) -> Result<()> {
         rows.push(Row::from_log(name, &log));
     }
     print_group("resnet_c10", &rows);
-    println!("shape: magnitude selection > random at equal k; signSGD has no level for Accordion to adapt");
+    println!(
+        "shape: magnitude selection > random at equal k; signSGD has no level for Accordion \
+         to adapt"
+    );
     Ok(())
 }
 
@@ -89,6 +92,9 @@ pub fn ablate_network(h: &mut Harness) -> Result<()> {
         }
         print_group(&format!("{mbps} Mbps"), &rows);
     }
-    println!("shape: time saving shrinks as bandwidth grows (comm stops dominating) — matches the paper's PowerSGD time columns being ~1.0x on fast interconnects");
+    println!(
+        "shape: time saving shrinks as bandwidth grows (comm stops dominating) — matches the \
+         paper's PowerSGD time columns being ~1.0x on fast interconnects"
+    );
     Ok(())
 }

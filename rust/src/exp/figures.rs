@@ -35,7 +35,12 @@ pub fn fig1(h: &mut Harness) -> Result<()> {
             // the hand-built pattern of Fig. 1: low in the critical
             // regions, high elsewhere
             "Adaptive pattern",
-            ControllerCfg::Manual { head: 5, tail: 3, level_in: Level::Low, level_out: Level::High },
+            ControllerCfg::Manual {
+                head: 5,
+                tail: 3,
+                level_in: Level::Low,
+                level_out: Level::High,
+            },
         ),
     ] {
         let cfg = h.cfg(&format!("fig1-{setting}"), |c| {
@@ -61,7 +66,12 @@ pub fn fig2(h: &mut Harness) -> Result<()> {
         ("Rank 2 everywhere", ControllerCfg::Static(Level::Low)),
         (
             "Low in critical only",
-            ControllerCfg::Manual { head: 5, tail: 3, level_in: Level::Low, level_out: Level::High },
+            ControllerCfg::Manual {
+                head: 5,
+                tail: 3,
+                level_in: Level::Low,
+                level_out: Level::High,
+            },
         ),
         (
             // adversarial mirror: over-compress exactly the critical
@@ -85,7 +95,10 @@ pub fn fig2(h: &mut Harness) -> Result<()> {
         rows.push(Row::from_log(setting, &log));
     }
     print_group("resnet_c100", &rows);
-    println!("expected shape: row2 ≈ row1 accuracy with fewer floats; row3 loses accuracy despite *more* floats");
+    println!(
+        "expected shape: row2 ≈ row1 accuracy with fewer floats; row3 loses accuracy despite \
+         *more* floats"
+    );
     Ok(())
 }
 
@@ -132,7 +145,9 @@ pub fn fig6(h: &mut Harness) -> Result<()> {
         }
         print_group(model, &rows);
     }
-    println!("expected shape: AdaQS communicates more than Accordion yet trails the ℓ_low accuracy");
+    println!(
+        "expected shape: AdaQS communicates more than Accordion yet trails the ℓ_low accuracy"
+    );
     Ok(())
 }
 
@@ -286,7 +301,10 @@ pub fn fig11(h: &mut Harness) -> Result<()> {
     }
     // perplexity: lower is better — print raw (not the % formatting of
     // the accuracy tables)
-    println!("| {:<12} | {:<12} | {:>8} | {:>18} | {:>14} |", "Network", "Setting", "PPL", "Data Sent (MFloat)", "Time (sim s)");
+    println!(
+        "| {:<12} | {:<12} | {:>8} | {:>18} | {:>14} |",
+        "Network", "Setting", "PPL", "Data Sent (MFloat)", "Time (sim s)"
+    );
     let base_f = rows[0].floats.max(1) as f64;
     let base_s = rows[0].secs.max(1e-9);
     for (i, r) in rows.iter().enumerate() {

@@ -9,6 +9,7 @@ pub mod figures;
 pub mod hessian;
 pub mod overlap;
 pub mod tables;
+pub mod transport;
 
 use crate::models::Registry;
 use crate::metrics::RunLog;
@@ -22,6 +23,7 @@ pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "fig1", "fig2", "fig3", "fig4",
     "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig18", "ablate-eta",
     "ablate-interval", "ablate-selector", "ablate-network", "ablate-overlap",
+    "ablate-transport",
 ];
 
 /// Shared state for one experiment invocation: the artifact registry, a
@@ -61,7 +63,11 @@ impl Harness {
 
     /// Base config with `--set` overrides and `--fast` applied, then the
     /// experiment's own customization and per-dataset calibration.
-    pub fn cfg(&self, label: &str, customize: impl FnOnce(&mut TrainConfig)) -> Result<TrainConfig> {
+    pub fn cfg(
+        &self,
+        label: &str,
+        customize: impl FnOnce(&mut TrainConfig),
+    ) -> Result<TrainConfig> {
         let mut table = Table::default();
         for kv in &self.overrides {
             table.set(kv).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -81,7 +87,8 @@ impl Harness {
     /// cifar10-syn for the scaled-down models to land in the paper's
     /// accuracy bands.  Explicit `--set` overrides win.
     fn dataset_defaults(&self, cfg: &mut TrainConfig) {
-        let overridden = |key: &str| self.overrides.iter().any(|o| o.starts_with(&format!("{key}=")));
+        let overridden =
+            |key: &str| self.overrides.iter().any(|o| o.starts_with(&format!("{key}=")));
         // VGG (no skip connections, no normalized shortcut path) diverges
         // at the ResNet-family LR — the same fragility the paper leans on
         // in Figs. 5/9 — so its family default is lower.
@@ -139,6 +146,7 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
         "ablate-selector" => ablations::ablate_selector(&mut h),
         "ablate-network" => ablations::ablate_network(&mut h),
         "ablate-overlap" => overlap::ablate_overlap(&mut h),
+        "ablate-transport" => transport::ablate_transport(&mut h),
         _ => bail!("unknown experiment '{id}' (have: {})", EXPERIMENTS.join(" ")),
     }
 }

@@ -1,0 +1,92 @@
+//! `ablate-transport`: dense replicated all-reduce vs sharded
+//! (reduce-scatter) parameter ownership, per compressor family.
+//!
+//! The reading this enables ("On the Utility of Gradient Compression in
+//! Distributed Training Systems", Agarwal et al. 2021): whether a
+//! compressor's wire format can be sharded decides how much of its
+//! Data-Sent advantage survives once parameters are owned in 1/N
+//! shards.  The uncompressed path moves the SAME bytes under both
+//! transports (the ring all-reduce IS reduce-scatter + all-gather; with
+//! `--no-overlap` the clocks match exactly, under overlap the rebuild
+//! is post-optimizer and cannot hide) while sharded ownership cuts
+//! per-worker decompress memory to ΣV/N + one layer; gather-then-shard
+//! fallbacks (PowerSGD, TopK) pay the rebuild all-gather on top of
+//! their dense round — the honest price of shard ownership for wire
+//! formats that cannot be sliced.
+//!
+//! Prints the usual acc / Data-Sent / sim-seconds rows per transport
+//! plus the per-worker resident decompress-float model for the largest
+//! sim model (the numbers `benches/shard.rs` tracks per PR).
+
+use super::{print_group, print_header, Harness, Row};
+use crate::collectives::{DenseReplicated, ShardedOwnership, Transport};
+use crate::train::config::{ControllerCfg, MethodCfg, TrainConfig, TransportCfg};
+use anyhow::Result;
+
+fn method_matrix() -> Vec<(&'static str, MethodCfg)> {
+    vec![
+        ("none", MethodCfg::None),
+        ("powersgd r2/r1", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+        ("topk 99%/25%", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 }),
+        ("qsgd 8b/4b", MethodCfg::Qsgd { bits_low: 8, bits_high: 4 }),
+    ]
+}
+
+pub fn ablate_transport(h: &mut Harness) -> Result<()> {
+    // mlp_deep_c10 only exists in the sim zoo; the artifact registry
+    // (pjrt builds with artifacts) carries mlp_c10 in both worlds
+    let model = if h.reg.models.contains_key("mlp_deep_c10") {
+        "mlp_deep_c10"
+    } else {
+        "mlp_c10"
+    };
+    print_header(&format!("Ablation: aggregation transport ({model}, 4 workers)"));
+    for (mname, method) in method_matrix() {
+        let mut rows = Vec::new();
+        for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+            let cfg = h.cfg(&format!("ablate-transport-{mname}-{transport:?}"), |c| {
+                c.model = model.into();
+                c.method = method.clone();
+                c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 2 };
+                c.transport = transport;
+                c.epochs = 6;
+                c.decay_epochs = vec![4];
+            })?;
+            let log = h.run(&cfg)?;
+            rows.push(Row::from_log(&format!("{} transport", log.transport_label()), &log));
+        }
+        print_group(mname, &rows);
+    }
+
+    // the memory model the sharded transport exists for, on the largest
+    // model this registry carries (analytic — the same numbers
+    // BENCH_shard.json records for the sim zoo's mlp_bench)
+    let meta = h
+        .reg
+        .models
+        .values()
+        .max_by_key(|m| m.total_params)
+        .expect("registry has models");
+    let numels: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
+    let workers = TrainConfig::default().workers;
+    let dense = DenseReplicated.resident_floats(&numels);
+    let sharded = ShardedOwnership::new(workers).resident_floats(&numels);
+    println!(
+        "\nper-worker resident decompress floats, {} @ {workers} workers:",
+        meta.name
+    );
+    println!("  dense replicated : {dense:>8}  (every worker holds every layer)");
+    println!(
+        "  sharded ownership: {sharded:>8}  (1/N of each layer + one transient full layer; \
+         {:.2}x dense)",
+        sharded as f64 / dense as f64
+    );
+    println!(
+        "reading: uncompressed sharded moves the same bytes as dense (ring all-reduce == \
+         reduce-scatter + all-gather; identical clocks under --no-overlap, a small rebuild \
+         penalty under overlap since the rebuild is post-optimizer) while owning 1/N of the \
+         parameters; fallback compressors pay the rebuild all-gather on top — sharding only \
+         pays when the wire format shards"
+    );
+    Ok(())
+}

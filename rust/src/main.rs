@@ -10,7 +10,7 @@
 use accordion::exp;
 use accordion::models::Registry;
 use accordion::runtime::Runtime;
-use accordion::train::{self, config::TrainConfig};
+use accordion::train::{self, config::{TrainConfig, TransportCfg}};
 use accordion::util::{cli::Args, init_logging, toml::Table};
 use anyhow::{bail, Result};
 
@@ -19,7 +19,8 @@ accordion — Adaptive Gradient Communication via Critical Learning Regime Ident
           (reproduction; pure-Rust sim backend by default, PJRT AOT behind --features pjrt)
 
 USAGE:
-  accordion train [--config FILE] [--set key=value ...] [--threads N] [--no-overlap] [--out DIR] [--save PATH]
+  accordion train [--config FILE] [--set key=value ...] [--threads N]
+                  [--transport dense|sharded] [--no-overlap] [--out DIR] [--save PATH]
   accordion eval  --model NAME --ckpt PATH [--set key=value ...]
   accordion repro --exp <id> [--fast] [--set key=value ...] [--out DIR]
   accordion list
@@ -28,6 +29,14 @@ USAGE:
   --threads N   run the parallel execution engine on N host threads
                 (ALL results, including the simulated time column, are
                 bit-identical to the sequential N=1 path)
+  --transport T aggregation transport (TOML key `transport`); see
+                configs/dense.toml and configs/sharded.toml:
+                  dense    replicated ring all-reduce: every worker owns
+                           every layer (default)
+                  sharded  reduce-scatter ownership: each worker keeps
+                           1/N of every layer, steps only that shard,
+                           and an all-gather rebuilds full parameters
+                           (requires workers > 1)
   --no-overlap  charge collectives serially after backprop instead of
                 overlapping layer l's collective with layer l-1's
                 backprop (the simulated-time ablation knob)
@@ -42,11 +51,13 @@ EXPERIMENT IDS:
   table1 table2 table3 table4 table5 table6
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig18
   ablate-eta ablate-interval ablate-selector ablate-network
-  ablate-overlap
+  ablate-overlap ablate-transport
 
 EXAMPLES:
   accordion repro --exp table1 --fast
   accordion train --set model=vgg_c10 --set method.kind=topk --set epochs=10
+  accordion train --config configs/sharded.toml
+  accordion train --set model=mlp_deep_c10 --transport sharded --threads 4
   ACCORDION_LOG=debug accordion repro --exp fig2
 ";
 
@@ -86,12 +97,17 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
     if let Some(t) = args.usize_opt("threads") {
         cfg.threads = t.max(1);
     }
+    if let Some(tr) = args.opt("transport") {
+        cfg.transport = TransportCfg::parse(tr)?;
+    }
     if args.flag("no-overlap") {
         cfg.overlap = false;
     }
     if args.flag("fast") {
         cfg = cfg.fast();
     }
+    // re-check cross-field invariants after the CLI overrides
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -108,8 +124,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = args.opt("out").unwrap_or("runs");
     let path = log.save_csv(out)?;
     println!(
-        "{}: final acc {:.3} | best {:.3} | {} floats | {:.1} sim-seconds (overlap saved {:.1}s) | csv {}",
+        "{} [{}]: final acc {:.3} | best {:.3} | {} floats | {:.1} sim-seconds \
+         (overlap saved {:.1}s) | csv {}",
         cfg.label,
+        log.transport_label(),
         log.final_acc(),
         log.best_acc(),
         log.total_floats(),

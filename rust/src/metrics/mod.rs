@@ -10,7 +10,9 @@
 //! calibrated compute cost model plus the overlap-aware α–β scheduler.
 //! Every column except the trailing `wall_secs` debug column is
 //! bit-identical across `--threads` and host load, which is what lets
-//! the CI `timing-determinism` lane diff the CSV byte-for-byte.
+//! the CI `timing-determinism` lane diff the CSV byte-for-byte — in
+//! both `--transport` modes; the run-constant `transport` column is the
+//! dimension `exp/tables.rs` and `ablate-transport` group by.
 
 use std::fmt::Write as _;
 use std::io::Write as _;
@@ -53,6 +55,11 @@ pub struct EpochStats {
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
     pub label: String,
+    /// aggregation transport the run used ("dense" | "sharded") — the
+    /// CSV's `transport` column, so tables can group Data-Sent and
+    /// sim-seconds per transport.  Empty (legacy constructors) reads as
+    /// dense.
+    pub transport: String,
     pub epochs: Vec<EpochStats>,
     /// per-epoch per-layer chosen levels (true = low compression);
     /// Figs. 18-20 print these.
@@ -60,6 +67,15 @@ pub struct RunLog {
 }
 
 impl RunLog {
+    /// The `transport` column value ("" from legacy constructors means
+    /// the dense replicated default).
+    pub fn transport_label(&self) -> &str {
+        if self.transport.is_empty() {
+            "dense"
+        } else {
+            &self.transport
+        }
+    }
     pub fn final_acc(&self) -> f32 {
         self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
     }
@@ -89,20 +105,33 @@ impl RunLog {
         self.final_loss().exp()
     }
 
-    /// CSV with `wall_secs` as the LAST column: everything before it is
+    /// CSV with `wall_secs` as the LAST column: everything before it —
+    /// including the run-constant `transport` dimension — is
     /// deterministic (bit-identical values format to identical bytes),
-    /// so the CI determinism lane diffs `cut -d, -f1-12` output.
+    /// so the CI determinism lane diffs `cut -d, -f1-13` output.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "epoch,lr,train_loss,test_loss,test_acc,floats,sim_secs,grad_norm,frac_low,batch_mult,window_grad_norm,overlap_saved_secs,wall_secs\n",
+            "epoch,lr,train_loss,test_loss,test_acc,floats,sim_secs,grad_norm,frac_low,\
+             batch_mult,window_grad_norm,overlap_saved_secs,transport,wall_secs\n",
         );
         for e in &self.epochs {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{:.6},{},{},{},{},{:.6},{:.3}",
-                e.epoch, e.lr, e.train_loss, e.test_loss, e.test_acc, e.floats, e.secs,
-                e.grad_norm, e.frac_low, e.batch_mult, e.window_grad_norm,
-                e.overlap_saved_secs, e.wall_secs
+                "{},{},{},{},{},{},{:.6},{},{},{},{},{:.6},{},{:.3}",
+                e.epoch,
+                e.lr,
+                e.train_loss,
+                e.test_loss,
+                e.test_acc,
+                e.floats,
+                e.secs,
+                e.grad_norm,
+                e.frac_low,
+                e.batch_mult,
+                e.window_grad_norm,
+                e.overlap_saved_secs,
+                self.transport_label(),
+                e.wall_secs
             );
         }
         out
@@ -170,16 +199,25 @@ mod tests {
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.lines().nth(2).unwrap().starts_with("1,"));
-        // column contract the CI determinism lane depends on: 13 columns,
-        // sim_secs in slot 7, wall_secs (the only nondeterministic one) LAST
+        // column contract the CI determinism lane depends on: 14 columns,
+        // sim_secs in slot 7, the run-constant transport dimension second
+        // to last, wall_secs (the only nondeterministic one) LAST
         let header: Vec<&str> = csv.lines().next().unwrap().split(',').collect();
-        assert_eq!(header.len(), 13);
+        assert_eq!(header.len(), 14);
         assert_eq!(header[6], "sim_secs");
         assert_eq!(header[11], "overlap_saved_secs");
-        assert_eq!(header[12], "wall_secs");
+        assert_eq!(header[12], "transport");
+        assert_eq!(header[13], "wall_secs");
         for line in csv.lines().skip(1) {
-            assert_eq!(line.split(',').count(), 13, "{line}");
+            assert_eq!(line.split(',').count(), 14, "{line}");
         }
+        // legacy (empty) transport reads as the dense default
+        assert_eq!(log.transport_label(), "dense");
+        assert!(csv.lines().nth(1).unwrap().contains(",dense,"));
+        let mut sharded = log.clone();
+        sharded.transport = "sharded".into();
+        assert_eq!(sharded.transport_label(), "sharded");
+        assert!(sharded.to_csv().lines().nth(1).unwrap().contains(",sharded,"));
     }
 
     #[test]

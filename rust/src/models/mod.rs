@@ -231,8 +231,9 @@ impl Registry {
     pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = dir.join("metadata.json");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {} (run `make artifacts` first)", manifest.display()))?;
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!("reading {} (run `make artifacts` first)", manifest.display())
+        })?;
         let root = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
 
         let mut models = BTreeMap::new();
@@ -291,7 +292,10 @@ impl Registry {
                 params,
                 train_artifact: art("train")?,
                 eval_artifact: art("eval")?,
-                hvp_artifact: m.path(&["artifacts", "hvp"]).and_then(|v| v.as_str()).map(|f| dir.join(f)),
+                hvp_artifact: m
+                    .path(&["artifacts", "hvp"])
+                    .and_then(|v| v.as_str())
+                    .map(|f| dir.join(f)),
                 init_file: dir.join(
                     m.get("init")
                         .and_then(|v| v.as_str())
@@ -327,9 +331,10 @@ impl Registry {
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {
-        self.models
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+        self.models.get(name).ok_or_else(|| {
+            let have: Vec<&String> = self.models.keys().collect();
+            anyhow!("unknown model '{name}' (have: {have:?})")
+        })
     }
 
     /// Load the initial parameter snapshot for a model (f32 LE, spec

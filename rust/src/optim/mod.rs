@@ -5,7 +5,15 @@
 //! warmup from the base LR to `base * global_batch / batch_ref`, step
 //! decays at fixed epochs, and the linear batch-size scaling rule Goyal
 //! et al. [14] that Accordion applies when it switches batch size.
+//!
+//! The update is element-wise, so it composes with the transport's
+//! ownership contract ([`Sgd::step_owned`]): under sharded ownership
+//! each worker steps only the parameter shard it owns, and the union of
+//! shard steps is bit-identical to one full replicated step — which is
+//! why the simulation keeps a single parameter copy for both
+//! transports.
 
+use crate::collectives::{DenseReplicated, Transport};
 use crate::tensor::Tensor;
 
 /// SGD + momentum.  `velocity` is lazily sized on the first step.
@@ -24,21 +32,41 @@ impl Sgd {
     /// One update: params[l] -= lr * d[l] with momentum buffers, matching
     /// torch.optim.SGD semantics (velocity holds grad+wd accumulation).
     pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        self.step_owned(params, grads, lr, &DenseReplicated);
+    }
+
+    /// One update routed through the transport's ownership contract:
+    /// for each of `transport.owners()` shard owners, step exactly the
+    /// parameter range that owner holds the aggregated gradient for.
+    /// Dense replication has one owner covering every layer (a plain
+    /// full step); sharded ownership steps each worker's 1/N chunk.
+    /// The owned ranges partition each layer in ascending order, so
+    /// every element sees the identical update in the identical order
+    /// whatever the transport — bit-for-bit.
+    pub fn step_owned(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+        transport: &dyn Transport,
+    ) {
         assert_eq!(params.len(), grads.len());
         if self.velocity.len() != params.len() {
             self.velocity = params.iter().map(|p| vec![0.0; p.numel()]).collect();
         }
         for (l, (p, g)) in params.iter_mut().zip(grads).enumerate() {
             let v = &mut self.velocity[l];
-            for i in 0..p.numel() {
-                let mut d = g.data[i] + self.weight_decay * p.data[i];
-                v[i] = self.momentum * v[i] + d;
-                if self.nesterov {
-                    d += self.momentum * v[i];
-                } else {
-                    d = v[i];
+            for w in 0..transport.owners() {
+                for i in transport.owned_range(p.numel(), w) {
+                    let mut d = g.data[i] + self.weight_decay * p.data[i];
+                    v[i] = self.momentum * v[i] + d;
+                    if self.nesterov {
+                        d += self.momentum * v[i];
+                    } else {
+                        d = v[i];
+                    }
+                    p.data[i] -= lr * d;
                 }
-                p.data[i] -= lr * d;
             }
         }
     }
@@ -125,6 +153,30 @@ mod tests {
         let mut p = [t(vec![1.0])];
         opt.step(&mut p, &[t(vec![0.0])], 0.5);
         assert!((p[0].data[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sharded_shard_steps_union_to_the_full_step() {
+        use crate::collectives::ShardedOwnership;
+        // 10 elements across 4 owners (ragged chunks): the union of
+        // owned-shard steps must be bit-identical to one full step,
+        // including the momentum buffers across repeated steps
+        let g1: Vec<f32> = (0..10).map(|i| 0.3 * i as f32 - 1.0).collect();
+        let g2: Vec<f32> = (0..10).map(|i| (i as f32 * 0.7).sin()).collect();
+        let init: Vec<f32> = (0..10).map(|i| i as f32 * 0.1).collect();
+
+        let mut dense_opt = Sgd::new(0.9, true, 5e-4);
+        let mut shard_opt = Sgd::new(0.9, true, 5e-4);
+        let mut pd = [t(init.clone())];
+        let mut ps = [t(init)];
+        let sharded = ShardedOwnership::new(4);
+        for g in [&g1, &g2] {
+            dense_opt.step(&mut pd, &[t(g.clone())], 0.1);
+            shard_opt.step_owned(&mut ps, &[t(g.clone())], 0.1, &sharded);
+        }
+        for (a, b) in pd[0].data.iter().zip(&ps[0].data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

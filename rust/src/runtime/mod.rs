@@ -48,13 +48,24 @@ pub trait Backend: Send + Sync {
 
     /// (mean loss, per-parameter gradients), same order as the model's
     /// param specs.
-    fn train_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, Vec<Tensor>)>;
+    fn train_step(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Tensor>)>;
 
     /// (mean loss, correct-prediction count).
     fn eval_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, f32)>;
 
     /// Hessian-vector product at `params` in direction `v` (Fig. 3 probe).
-    fn hvp_step(&self, rt: &Runtime, params: &[Tensor], v: &[Tensor], batch: &Batch) -> Result<Vec<Tensor>>;
+    fn hvp_step(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        v: &[Tensor],
+        batch: &Batch,
+    ) -> Result<Vec<Tensor>>;
 }
 
 /// Shared execution context, one per process/harness.  `Sync`: the PJRT
@@ -78,7 +89,9 @@ impl Runtime {
             pjrt: match pjrt::PjrtContext::cpu() {
                 Ok(ctx) => Some(std::sync::Mutex::new(ctx)),
                 Err(e) => {
-                    log::warn!("PJRT client unavailable ({e:#}); continuing with the sim backend only");
+                    log::warn!(
+                        "PJRT client unavailable ({e:#}); continuing with the sim backend only"
+                    );
                     None
                 }
             },
@@ -142,7 +155,12 @@ impl ModelPrograms {
     }
 
     /// train_step(params, x, y) -> (loss, grads..)
-    pub fn train_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, Vec<Tensor>)> {
+    pub fn train_step(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Tensor>)> {
         self.backend.train_step(rt, params, batch)
     }
 
@@ -152,7 +170,13 @@ impl ModelPrograms {
     }
 
     /// hvp_step(params, v, x, y) -> Hv..
-    pub fn hvp_step(&self, rt: &Runtime, params: &[Tensor], v: &[Tensor], batch: &Batch) -> Result<Vec<Tensor>> {
+    pub fn hvp_step(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        v: &[Tensor],
+        batch: &Batch,
+    ) -> Result<Vec<Tensor>> {
         self.backend.hvp_step(rt, params, v, batch)
     }
 }

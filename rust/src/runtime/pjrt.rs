@@ -64,7 +64,11 @@ impl PjrtContext {
 
     /// Execute a loaded artifact.  Inputs are xla Literals; the output
     /// tuple (aot.py lowers with return_tuple=True) is decomposed.
-    pub fn exec(&mut self, path: impl AsRef<Path>, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    pub fn exec(
+        &mut self,
+        path: impl AsRef<Path>,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
         let path = path.as_ref().to_path_buf();
         self.load(&path)?;
         let exe = self.cache.get(&path).unwrap();
@@ -133,7 +137,12 @@ impl PjrtBackend {
         Ok(m.lock().unwrap_or_else(|p| p.into_inner()))
     }
 
-    fn batch_literals(&self, xf: &[f32], xi: &[i32], y: &[i32]) -> Result<(xla::Literal, xla::Literal)> {
+    fn batch_literals(
+        &self,
+        xf: &[f32],
+        xi: &[i32],
+        y: &[i32],
+    ) -> Result<(xla::Literal, xla::Literal)> {
         let b = self.meta.batch;
         let mut xshape = vec![b];
         xshape.extend_from_slice(&self.meta.input_shape);
@@ -167,7 +176,12 @@ impl Backend for PjrtBackend {
     }
 
     /// train_step(params.., x, y) -> (loss, grads..)
-    fn train_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, Vec<Tensor>)> {
+    fn train_step(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Tensor>)> {
         let mut inputs = self.param_literals(params)?;
         let (x, y) = self.batch_literals(&batch.xf, &batch.xi, &batch.y)?;
         inputs.push(x);
@@ -200,7 +214,13 @@ impl Backend for PjrtBackend {
     }
 
     /// hvp_step(params.., v.., x, y) -> Hv..  (Fig. 3 probe; mlp only)
-    fn hvp_step(&self, rt: &Runtime, params: &[Tensor], v: &[Tensor], batch: &Batch) -> Result<Vec<Tensor>> {
+    fn hvp_step(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        v: &[Tensor],
+        batch: &Batch,
+    ) -> Result<Vec<Tensor>> {
         let art = self
             .meta
             .hvp_artifact

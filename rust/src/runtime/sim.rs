@@ -50,7 +50,11 @@ impl SimBackend {
         for pair in meta.params.chunks(2) {
             let (w, b) = (&pair[0], &pair[1]);
             let din = *dims.last().unwrap();
-            if w.shape.len() != 2 || b.shape.len() != 1 || w.shape[0] != din || w.shape[1] != b.shape[0] {
+            let chains = w.shape.len() == 2
+                && b.shape.len() == 1
+                && w.shape[0] == din
+                && w.shape[1] == b.shape[0];
+            if !chains {
                 bail!(
                     "sim model '{}': param pair ({:?}, {:?}) does not chain from width {}",
                     meta.name,
@@ -128,7 +132,13 @@ impl SimBackend {
 
 /// Softmax cross-entropy over logits `[bsz, c]`: returns (mean loss,
 /// correct count) and fills `dlogits` with the mean-loss gradient.
-fn softmax_xent(logits: &[f32], y: &[i32], bsz: usize, c: usize, dlogits: &mut [f32]) -> (f32, f32) {
+fn softmax_xent(
+    logits: &[f32],
+    y: &[i32],
+    bsz: usize,
+    c: usize,
+    dlogits: &mut [f32],
+) -> (f32, f32) {
     let mut loss = 0.0f64;
     let mut correct = 0.0f32;
     let inv_b = 1.0 / bsz as f32;
@@ -166,7 +176,12 @@ impl Backend for SimBackend {
         self.name.clone()
     }
 
-    fn train_step(&self, _rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, Vec<Tensor>)> {
+    fn train_step(
+        &self,
+        _rt: &Runtime,
+        params: &[Tensor],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Tensor>)> {
         let bsz = self.check_batch(params, batch)?;
         let nl = self.dims.len() - 1;
         let c = self.dims[nl];
@@ -214,7 +229,13 @@ impl Backend for SimBackend {
         Ok((loss, correct))
     }
 
-    fn hvp_step(&self, rt: &Runtime, params: &[Tensor], v: &[Tensor], batch: &Batch) -> Result<Vec<Tensor>> {
+    fn hvp_step(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        v: &[Tensor],
+        batch: &Batch,
+    ) -> Result<Vec<Tensor>> {
         let vnorm = v.iter().map(|t| t.sqnorm()).sum::<f32>().sqrt();
         if vnorm <= 0.0 {
             return Ok(v.iter().map(|t| Tensor::zeros(&t.shape)).collect());
@@ -260,7 +281,9 @@ mod tests {
         let meta = reg.model(model).unwrap().clone();
         let be = SimBackend::from_meta(&meta).unwrap();
         let params = reg.load_init(&meta).unwrap();
-        let ds = crate::data::Dataset::images("t", meta.num_classes, meta.input_numel(), 64, 16, 0.8, 1.0, 7);
+        let ds = crate::data::Dataset::images(
+            "t", meta.num_classes, meta.input_numel(), 64, 16, 0.8, 1.0, 7,
+        );
         let idx: Vec<usize> = (0..meta.batch).collect();
         let batch = ds.train_batch(&idx);
         (be, params, batch, Runtime::sim())
@@ -380,7 +403,8 @@ mod tests {
         let n1: f32 = hv.iter().map(|t| t.sqnorm()).sum::<f32>().sqrt();
         let n2: f32 = hv2.iter().map(|t| t.sqnorm()).sum::<f32>().sqrt();
         if n1 > 1e-6 {
-            assert!((n2 - 2.0 * n1).abs() < 0.2 * (1.0 + 2.0 * n1), "|H2v| {n2} vs 2|Hv| {}", 2.0 * n1);
+            let lim = 0.2 * (1.0 + 2.0 * n1);
+            assert!((n2 - 2.0 * n1).abs() < lim, "|H2v| {n2} vs 2|Hv| {}", 2.0 * n1);
         }
     }
 }

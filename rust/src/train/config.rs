@@ -1,8 +1,11 @@
 //! Experiment configuration: a typed view over the TOML-subset tables
 //! (`configs/*.toml` + `--set` overrides) with paper-faithful defaults.
 
+use crate::collectives::{DenseReplicated, ShardedOwnership, Transport};
 use crate::compress::{DistCompressor, Level, NoCompression};
-use crate::compress::{powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd, topk::TopK};
+use crate::compress::{
+    powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd, topk::TopK,
+};
 use crate::coordinator::{
     accordion::Accordion, adaqs::AdaQs, schedule::ManualSchedule, schedule::Rule,
     smith::SmithSchedule, Controller, StaticLevel,
@@ -19,6 +22,36 @@ pub enum MethodCfg {
     Qsgd { bits_low: u32, bits_high: u32 },
     /// 1-bit sign compression (no level knob; ablation baseline)
     SignSgd,
+}
+
+/// Which aggregation transport the trainer runs (`collectives::Transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportCfg {
+    /// Dense replicated all-reduce: every worker owns every layer —
+    /// bit-identical to the pre-transport hot path.
+    Dense,
+    /// Reduce-scatter ownership: each worker keeps 1/N of every layer,
+    /// steps only that shard, and an all-gather rebuilds full
+    /// parameters before the next forward.  Requires `workers > 1`.
+    Sharded,
+}
+
+impl TransportCfg {
+    pub fn parse(s: &str) -> Result<TransportCfg> {
+        Ok(match s {
+            "dense" => TransportCfg::Dense,
+            "sharded" => TransportCfg::Sharded,
+            other => bail!("unknown transport '{other}' (dense|sharded)"),
+        })
+    }
+
+    /// The TOML/CLI spelling (inverse of [`TransportCfg::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportCfg::Dense => "dense",
+            TransportCfg::Sharded => "sharded",
+        }
+    }
 }
 
 /// Where the simulated compute clock's per-layer costs come from.
@@ -75,6 +108,9 @@ pub struct TrainConfig {
     pub decay_factor: f32,
     pub method: MethodCfg,
     pub controller: ControllerCfg,
+    /// aggregation transport (`--transport dense|sharded`); sharded
+    /// needs `workers > 1` (see [`TrainConfig::validate`])
+    pub transport: TransportCfg,
     // network model
     pub bandwidth_mbps: f64,
     pub latency_us: f64,
@@ -114,6 +150,7 @@ impl Default for TrainConfig {
             decay_factor: 0.1,
             method: MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
             controller: ControllerCfg::Accordion { eta: 0.5, interval: 2 },
+            transport: TransportCfg::Dense,
             bandwidth_mbps: 100.0,
             latency_us: 50.0,
             overlap: true,
@@ -190,7 +227,7 @@ impl TrainConfig {
             },
             other => bail!("unknown controller '{other}'"),
         };
-        Ok(TrainConfig {
+        let cfg = TrainConfig {
             label: t.str_or("label", &d.label),
             model: t.str_or("model", &d.model),
             workers: t.usize_or("workers", d.workers),
@@ -214,6 +251,7 @@ impl TrainConfig {
             decay_factor: t.f64_or("train.decay_factor", d.decay_factor as f64) as f32,
             method,
             controller,
+            transport: TransportCfg::parse(&t.str_or("transport", d.transport.name()))?,
             bandwidth_mbps: t.f64_or("net.bandwidth_mbps", d.bandwidth_mbps),
             latency_us: t.f64_or("net.latency_us", d.latency_us),
             overlap: t.bool_or("net.overlap", d.overlap),
@@ -223,7 +261,24 @@ impl TrainConfig {
                 other => bail!("unknown time.model '{other}' (flops|measured)"),
             },
             gflops: t.f64_or("time.gflops", d.gflops),
-        })
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field checks (also called after CLI overrides are applied):
+    /// sharded ownership is meaningless on a single worker — there is
+    /// nothing to shard and every "collective" is a no-op — so it is a
+    /// configuration error rather than a silent dense fallback.
+    pub fn validate(&self) -> Result<()> {
+        if self.transport == TransportCfg::Sharded && self.workers < 2 {
+            bail!(
+                "transport = \"sharded\" requires workers > 1 (got {}): \
+                 reduce-scatter ownership shards each layer across workers",
+                self.workers
+            );
+        }
+        Ok(())
     }
 
     /// Shrink for smoke tests / `--fast` runs.
@@ -257,6 +312,15 @@ impl TrainConfig {
                 Box::new(Qsgd::new(self.workers, bits_low, bits_high, self.seed))
             }
             MethodCfg::SignSgd => Box::new(SignSgd::new(self.workers)),
+        }
+    }
+
+    /// The aggregation transport for this run (stateless shard
+    /// arithmetic + charging policy; shared across layer tasks).
+    pub fn build_transport(&self) -> Box<dyn Transport> {
+        match self.transport {
+            TransportCfg::Dense => Box::new(DenseReplicated),
+            TransportCfg::Sharded => Box::new(ShardedOwnership::new(self.workers)),
         }
     }
 
@@ -325,7 +389,9 @@ bandwidth_mbps = 250.0
         let c = TrainConfig::from_table(&t).unwrap();
         assert_eq!(c.model, "vgg_c100");
         assert_eq!(c.epochs, 12);
-        assert!(matches!(c.method, MethodCfg::TopK { frac_low, .. } if (frac_low - 0.99).abs() < 1e-6));
+        let is_topk99 =
+            matches!(c.method, MethodCfg::TopK { frac_low, .. } if (frac_low - 0.99).abs() < 1e-6);
+        assert!(is_topk99);
         assert!(matches!(c.controller, ControllerCfg::Accordion { interval: 3, .. }));
         assert_eq!(c.bandwidth_mbps, 250.0);
     }
@@ -363,6 +429,31 @@ gflops = 2.5
 
         let bad = Table::parse("time.model = \"sundial\"").unwrap();
         assert!(TrainConfig::from_table(&bad).is_err());
+    }
+
+    #[test]
+    fn transport_key_parses_validates_and_builds() {
+        assert_eq!(TrainConfig::default().transport, TransportCfg::Dense);
+
+        let t = Table::parse("transport = \"sharded\"").unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.transport, TransportCfg::Sharded);
+        assert_eq!(c.build_transport().name(), "sharded");
+        assert_eq!(TrainConfig::default().build_transport().name(), "dense");
+
+        let bad = Table::parse("transport = \"carrier-pigeon\"").unwrap();
+        assert!(TrainConfig::from_table(&bad).is_err());
+
+        // sharded ownership on one worker is a configuration error
+        let solo = Table::parse("transport = \"sharded\"\nworkers = 1").unwrap();
+        let err = TrainConfig::from_table(&solo).unwrap_err();
+        assert!(err.to_string().contains("workers > 1"), "{err}");
+        let mut c1 = TrainConfig::default();
+        c1.transport = TransportCfg::Sharded;
+        c1.workers = 1;
+        assert!(c1.validate().is_err());
+        c1.workers = 4;
+        assert!(c1.validate().is_ok());
     }
 
     #[test]

@@ -5,12 +5,18 @@
 //!      shard (sim backend or PJRT AOT artifact — see `runtime`);
 //!      `batch_mult` micro-steps are accumulated for large-batch mode,
 //!      exactly like the paper's App. A gradient-accumulation simulation;
-//!   2. per layer: 1-d params are all-reduced raw; >=2-d params go
+//!   2. per layer: 1-d params are aggregated raw; >=2-d params go
 //!      through the configured compressor at the level the controller
-//!      chose for this epoch;
-//!   3. a single SGD step applies the aggregated gradient (synchronous
-//!      data-parallel keeps replicas identical, so one parameter copy is
-//!      exact — DESIGN.md §3).
+//!      chose for this epoch — both routed through the configured
+//!      aggregation [`Transport`] (`--transport dense|sharded`), which
+//!      decides the collective shapes, the ledger charges, and which
+//!      shard of each layer every worker owns afterwards;
+//!   3. the SGD step runs through the transport's ownership contract
+//!      (`Sgd::step_owned`): the full layer under dense replication,
+//!      each worker's 1/N shard under sharded ownership — bit-identical
+//!      either way, which is why one parameter copy is exact
+//!      (DESIGN.md §3).  Sharded ownership then all-gathers the stepped
+//!      shards (charged after the optimizer in the overlap scheduler).
 //!
 //! `cfg.threads > 1` turns on the parallel execution engine: phase 1
 //! fans the workers' gradient computations out across scoped OS threads,
@@ -45,7 +51,7 @@ pub mod config;
 
 use crate::cluster::network::NetworkModel;
 use crate::cluster::simtime::{self, SimClock};
-use crate::collectives::Comm;
+use crate::collectives::{Comm, Transport};
 use crate::compress::{DistCompressor, Level};
 use crate::coordinator::{Decision, EpochObs};
 use crate::data::{Batch, Dataset, EpochSampler};
@@ -93,6 +99,7 @@ pub fn run(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<RunLog> {
 /// Like [`run`] but also returns the final parameters (for
 /// checkpointing).
 pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunLog, Vec<Tensor>)> {
+    cfg.validate()?;
     let meta = reg.model(&cfg.model)?.clone();
     let progs = ModelPrograms::new(&meta)?;
     let mut params = reg.load_init(&meta)?;
@@ -117,6 +124,9 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunL
         decay_factor: cfg.decay_factor,
     };
     let net = NetworkModel::new(cfg.workers, cfg.bandwidth_mbps, cfg.latency_us);
+    // the aggregation transport: collective shapes, ledger charges, and
+    // post-aggregation shard ownership (stateless, shared across layers)
+    let transport = cfg.build_transport();
     // per-layer communication ledger shards, folded in layer order
     let mut comms: Vec<Comm> = (0..n_layers).map(|_| Comm::new(net.clone())).collect();
     let mut clock = SimClock::default();
@@ -151,11 +161,17 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunL
     let mut cell_time: Vec<f64> = Vec::new();
     // per-layer ledger snapshot + this step's collective charges, the
     // overlap scheduler's input (per-layer shards make the deltas exact
-    // and thread-count independent)
+    // and thread-count independent); rebuild charges are snapshotted
+    // separately so the scheduler can place them after the optimizer
     let mut comm_before: Vec<f64> = vec![0.0; n_layers];
+    let mut rebuild_before: Vec<f64> = vec![0.0; n_layers];
     let mut step_comm: Vec<f64> = vec![0.0; n_layers];
 
-    let mut log = RunLog { label: cfg.label.clone(), ..Default::default() };
+    let mut log = RunLog {
+        label: cfg.label.clone(),
+        transport: transport.name().to_string(),
+        ..Default::default()
+    };
 
     // batch-switch LR ramp state: (previous multiplier, switch epoch).
     // The paper scales the LR linearly with the batch (Goyal et al.) and
@@ -243,16 +259,18 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunL
 
             // snapshot the per-layer ledgers so this step's collective
             // charges can be read back for the overlap scheduler
-            for (b, c) in comm_before.iter_mut().zip(&comms) {
-                *b = c.ledger.secs;
+            for (l, c) in comms.iter().enumerate() {
+                comm_before[l] = c.ledger.secs;
+                rebuild_before[l] = c.ledger.rebuild_secs;
             }
 
-            // 2. per-layer aggregation (compressor or raw all-reduce),
-            //    layers fanned out across threads
+            // 2. per-layer aggregation (compressor or raw collective,
+            //    through the transport), layers fanned out across threads
             aggregate_layers(
                 cfg,
                 &meta,
                 &decision,
+                transport.as_ref(),
                 threads,
                 &worker_grads,
                 &mut compressors,
@@ -262,11 +280,16 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunL
             );
 
             // charge the simulated clock: modeled compute + this step's
-            // α–β collectives through the overlap event scheduler
+            // α–β collectives through the overlap event scheduler.  The
+            // transport's parameter-rebuild all-gathers are split out:
+            // they run after the optimizer and never overlap backprop.
+            let mut step_rebuild = 0.0f64;
             for (l, c) in comms.iter().enumerate() {
-                step_comm[l] = c.ledger.secs - comm_before[l];
+                let rebuild = c.ledger.rebuild_secs - rebuild_before[l];
+                step_comm[l] = (c.ledger.secs - comm_before[l]) - rebuild;
+                step_rebuild += rebuild;
             }
-            let t = simtime::step_times(&cost, batch_mult, &step_comm);
+            let t = simtime::step_times(&cost, batch_mult, &step_comm, step_rebuild);
             clock.compute_secs += t.compute;
             clock.comm_secs += t.comm;
             if cfg.overlap {
@@ -278,8 +301,10 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunL
                 // IS the quoted time, with no derivation residue
             }
 
-            // 3. optimizer
-            opt.step(&mut params, &agg, lr_eff);
+            // 3. optimizer, through the transport's ownership contract
+            //    (full layers under dense replication, per-worker 1/N
+            //    shards under sharded ownership — bit-identical unions)
+            opt.step_owned(&mut params, &agg, lr_eff, transport.as_ref());
         }
 
         // evaluation (not charged to the simulated training clock)
@@ -352,7 +377,8 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunL
             window_grad_norm: model_sqnorm.sqrt(),
         });
         log::info!(
-            "[{}] epoch {:>3} lr={:.4} loss={:.3} acc={:.3} floats={} t={:.1}s (overlap saved {:.1}s, mult x{})",
+            "[{}] epoch {:>3} lr={:.4} loss={:.3} acc={:.3} floats={} t={:.1}s \
+             (overlap saved {:.1}s, mult x{})",
             cfg.label,
             epoch,
             lr_eff,
@@ -459,13 +485,16 @@ fn step_gradients(
 }
 
 /// Phase-2 work item: run the aggregation round for the layer range
-/// starting at `l0`.  Each layer uses its own compressor instance,
+/// starting at `l0`, through the transport (which picks the collective
+/// shapes and charges the ledger — including the parameter rebuild for
+/// sharded ownership).  Each layer uses its own compressor instance,
 /// ledger shard, and output/Δ slots, so ranges are fully independent.
 #[allow(clippy::too_many_arguments)]
 fn layer_task(
     cfg: &TrainConfig,
     meta: &ModelMeta,
     decision: &Decision,
+    transport: &dyn Transport,
     worker_grads: &[Vec<Tensor>],
     l0: usize,
     compressors: &mut [Box<dyn DistCompressor>],
@@ -478,18 +507,16 @@ fn layer_task(
         let l = l0 + i;
         let views: Vec<&[f32]> = worker_grads.iter().map(|wg| wg[l].data.as_slice()).collect();
         let compressible = meta.params[l].compressible() && !matches!(cfg.method, MethodCfg::None);
-        if compressible {
-            comp.round(
-                l,
-                &views,
-                &meta.params[l].shape,
-                decision.levels[l],
-                &mut comms[i],
-                &mut agg[i].data,
-            );
-        } else {
-            comms[i].allreduce_mean_into(&views, &mut agg[i].data);
-        }
+        let comp = if compressible { Some(&mut **comp) } else { None };
+        transport.aggregate_layer(
+            comp,
+            l,
+            &views,
+            &meta.params[l].shape,
+            decision.levels[l],
+            &mut comms[i],
+            &mut agg[i].data,
+        );
         // per-epoch Δ accumulator for the detector (raw mean gradient)
         let inv = 1.0 / workers as f32;
         for wg in worker_grads {
@@ -506,6 +533,7 @@ fn aggregate_layers(
     cfg: &TrainConfig,
     meta: &ModelMeta,
     decision: &Decision,
+    transport: &dyn Transport,
     threads: usize,
     worker_grads: &[Vec<Tensor>],
     compressors: &mut [Box<dyn DistCompressor>],
@@ -515,7 +543,9 @@ fn aggregate_layers(
 ) {
     let n_layers = agg.len();
     if threads <= 1 || n_layers <= 1 {
-        layer_task(cfg, meta, decision, worker_grads, 0, compressors, comms, agg, edelta);
+        layer_task(
+            cfg, meta, decision, transport, worker_grads, 0, compressors, comms, agg, edelta,
+        );
         return;
     }
     let lpt = n_layers.div_ceil(threads.min(n_layers));
@@ -528,7 +558,9 @@ fn aggregate_layers(
             .enumerate()
         {
             let l0 = ci * lpt;
-            scope.spawn(move || layer_task(cfg, meta, decision, worker_grads, l0, cs, ms, ags, dls));
+            scope.spawn(move || {
+                layer_task(cfg, meta, decision, transport, worker_grads, l0, cs, ms, ags, dls)
+            });
         }
     });
 }

@@ -19,7 +19,7 @@ const VALUED: &[&str] = &[
     "config", "set", "exp", "model", "epochs", "workers", "seed", "out",
     "controller", "method", "rank-low", "rank-high", "k-low", "k-high",
     "eta", "interval", "artifacts", "preset", "steps", "trials", "filter",
-    "save", "ckpt", "threads",
+    "save", "ckpt", "threads", "transport",
 ];
 
 impl Args {

@@ -305,7 +305,8 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()
+            || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
         {
             self.pos += 1;
         }
@@ -336,7 +337,8 @@ mod tests {
 
     #[test]
     fn roundtrip_metadata_like() {
-        let text = r#"{"version":1,"models":{"mlp":{"batch":16,"params":[{"name":"fc0/w","shape":[768,128]}],"f":-1.5e-3}},"ok":true,"none":null}"#;
+        let text = r#"{"version":1,"models":{"mlp":{"batch":16,
+            "params":[{"name":"fc0/w","shape":[768,128]}],"f":-1.5e-3}},"ok":true,"none":null}"#;
         let v = Json::parse(text).unwrap();
         assert_eq!(v.path(&["models", "mlp", "batch"]).unwrap().as_usize(), Some(16));
         assert_eq!(

@@ -19,7 +19,8 @@ pub fn check<F: FnMut(&mut Rng)>(name: &str, iters: usize, mut prop: F) {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
         if let Err(e) = result {
             eprintln!(
-                "property '{name}' failed on case {case} (replay: ACCORDION_PROP_SEED={base}, seed {seed})"
+                "property '{name}' failed on case {case} \
+                 (replay: ACCORDION_PROP_SEED={base}, seed {seed})"
             );
             std::panic::resume_unwind(e);
         }

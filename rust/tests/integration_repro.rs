@@ -28,9 +28,10 @@ fn experiment_ids_are_documented() {
     // every id the CLI advertises dispatches (unknown ids must error)
     assert!(EXPERIMENTS.contains(&"table1"));
     assert!(EXPERIMENTS.contains(&"fig18"));
-    assert_eq!(EXPERIMENTS.len(), 23);
+    assert_eq!(EXPERIMENTS.len(), 24);
     assert!(EXPERIMENTS.contains(&"ablate-selector"));
     assert!(EXPERIMENTS.contains(&"ablate-overlap"));
+    assert!(EXPERIMENTS.contains(&"ablate-transport"));
 }
 
 #[test]

@@ -10,7 +10,9 @@ use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
 
 fn ready() -> Option<(Registry, Runtime)> {
     if !cfg!(feature = "pjrt") {
-        eprintln!("skipping: built without the pjrt feature (sim-backend tests live in sim_train.rs)");
+        eprintln!(
+            "skipping: built without the pjrt feature (sim-backend tests live in sim_train.rs)"
+        );
         return None;
     }
     let dir = default_artifacts_dir();

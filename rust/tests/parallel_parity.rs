@@ -116,7 +116,12 @@ fn parallel_matches_sequential_oracle_across_methods_and_controllers() {
             .unwrap();
             for threads in [2usize, 4] {
                 let par = train::run_full(
-                    &tiny(&format!("{ctx}/t{threads}"), method.clone(), controller.clone(), threads),
+                    &tiny(
+                        &format!("{ctx}/t{threads}"),
+                        method.clone(),
+                        controller.clone(),
+                        threads,
+                    ),
                     &reg,
                     &rt,
                 )

@@ -145,7 +145,8 @@ fn prop_ring_allreduce_degenerate_shapes() {
         (6, 2),  // len < workers again, even split impossible
     ];
     for &(workers, len) in cases {
-        let mut bufs: Vec<Vec<f32>> = (0..workers).map(|_| prop::vecf(&mut rng, len, 2.0)).collect();
+        let mut bufs: Vec<Vec<f32>> =
+            (0..workers).map(|_| prop::vecf(&mut rng, len, 2.0)).collect();
         let views: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
         let mut want = vec![0.0f32; len];
         mean_into(&views, &mut want);
@@ -162,9 +163,11 @@ fn prop_ring_allreduce_degenerate_shapes() {
 }
 
 /// The overlap event scheduler's ordering contract, for ANY layer-size
-/// vector: the overlap-scheduled step time never exceeds the serialized
-/// charge, and equals it exactly when every collective is free — a free
-/// network (α = β = 0) or a single worker.
+/// vector and any post-optimizer rebuild charge: the overlap-scheduled
+/// step time never exceeds the serialized charge, the rebuild shifts
+/// both disciplines equally (the saving is rebuild-independent), and
+/// overlap equals serialized exactly when every collective is free — a
+/// free network (α = β = 0) or a single worker.
 #[test]
 fn prop_overlap_never_slower_than_serialized() {
     prop::check("overlap-bounds", 40, |rng| {
@@ -181,8 +184,10 @@ fn prop_overlap_never_slower_than_serialized() {
         let mbps = 10.0 + rng.uniform() as f64 * 1000.0;
         let net = NetworkModel::new(workers, mbps, rng.uniform() as f64 * 100.0);
         let comm: Vec<f64> = sizes.iter().map(|&s| net.allreduce_secs(s * 4)).collect();
+        // a random sharded-transport parameter-rebuild charge (0 = dense)
+        let rebuild = if rng.below(2) == 0 { 0.0 } else { rng.uniform() as f64 * 1e-3 };
 
-        let t = step_times(&cost, mult, &comm);
+        let t = step_times(&cost, mult, &comm, rebuild);
         assert!(
             t.overlapped <= t.serialized * (1.0 + 1e-12),
             "overlap {} > serialized {}",
@@ -191,17 +196,75 @@ fn prop_overlap_never_slower_than_serialized() {
         );
         assert!(t.overlapped >= t.compute, "step cannot beat pure compute");
 
+        // the rebuild charge shifts both disciplines identically
+        let base = step_times(&cost, mult, &comm, 0.0);
+        let saved = t.serialized - t.overlapped;
+        let saved0 = base.serialized - base.overlapped;
+        assert!(
+            (saved - saved0).abs() < 1e-12 * (1.0 + saved0.abs()),
+            "rebuild changed the overlap saving: {saved} vs {saved0}"
+        );
+
         // α = β = 0: every collective is free -> exact equality
         let free = NetworkModel { workers, alpha: 0.0, beta: 0.0 };
         let comm0: Vec<f64> = sizes.iter().map(|&s| free.allreduce_secs(s * 4)).collect();
-        let t0 = step_times(&cost, mult, &comm0);
+        let t0 = step_times(&cost, mult, &comm0, 0.0);
         assert_eq!(t0.overlapped, t0.serialized, "free network must be exact");
 
         // a single worker never touches the wire -> exact equality too
         let solo = NetworkModel::new(1, 100.0, 50.0);
         let comm1: Vec<f64> = sizes.iter().map(|&s| solo.allreduce_secs(s * 4)).collect();
-        let t1 = step_times(&cost, mult, &comm1);
+        let t1 = step_times(&cost, mult, &comm1, 0.0);
         assert_eq!(t1.overlapped, t1.serialized, "single worker must be exact");
+    });
+}
+
+/// The sharded transport's ownership arithmetic, for any (workers,
+/// numel): owned ranges are ascending, disjoint, and cover the layer
+/// exactly once — the contract `Sgd::step_owned` and the rebuild
+/// all-gather both rest on.
+#[test]
+fn prop_owned_ranges_partition_layers() {
+    use accordion::collectives::{ShardedOwnership, Transport};
+    prop::check("owned-partition", 40, |rng| {
+        let workers = 1 + rng.below(12);
+        let numel = 1 + rng.below(5000);
+        let t = ShardedOwnership::new(workers);
+        let mut next = 0usize;
+        for w in 0..t.owners() {
+            let r = t.owned_range(numel, w);
+            assert!(r.start <= r.end && r.end <= numel);
+            assert_eq!(r.start, next.min(numel), "gap/overlap at worker {w}");
+            next = r.end.max(next);
+        }
+        assert_eq!(next, numel, "workers={workers} numel={numel} not covered");
+    });
+}
+
+/// Transport equivalence on raw gradients: for any worker count and
+/// layer size, the sharded aggregation produces the bit-identical mean
+/// (shard of the mean == mean of the shard) while charging strictly
+/// more Data-Sent floats (the rebuild) and no more than twice.
+#[test]
+fn prop_sharded_mean_matches_dense_bitwise() {
+    use accordion::collectives::{DenseReplicated, ShardedOwnership, Transport};
+    prop::check("sharded-mean", 25, |rng| {
+        let workers = 2 + rng.below(6);
+        let numel = 1 + rng.below(300);
+        let grads: Vec<Vec<f32>> = (0..workers).map(|_| prop::vecf(rng, numel, 1.0)).collect();
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut dout = vec![0.0f32; numel];
+        let mut sout = vec![0.0f32; numel];
+        let mut dc = comm(workers);
+        let mut sc = comm(workers);
+        DenseReplicated.aggregate_layer(None, 0, &views, &[numel], Level::High, &mut dc, &mut dout);
+        ShardedOwnership::new(workers)
+            .aggregate_layer(None, 0, &views, &[numel], Level::High, &mut sc, &mut sout);
+        for (x, y) in dout.iter().zip(&sout) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(sc.ledger.floats > dc.ledger.floats);
+        assert!(sc.ledger.floats <= 2 * dc.ledger.floats);
     });
 }
 

@@ -17,7 +17,10 @@
 use accordion::compress::Level;
 use accordion::models::Registry;
 use accordion::runtime::Runtime;
-use accordion::train::{self, config::{ControllerCfg, MethodCfg, TimeModelCfg, TrainConfig}};
+use accordion::train::{
+    self,
+    config::{ControllerCfg, MethodCfg, TimeModelCfg, TrainConfig, TransportCfg},
+};
 
 fn tiny(label: &str) -> TrainConfig {
     let mut c = TrainConfig::default();
@@ -36,7 +39,7 @@ fn tiny(label: &str) -> TrainConfig {
 }
 
 /// The CSV minus the trailing `wall_secs` debug column — exactly what
-/// the CI lane's `cut -d, -f1-12` compares.
+/// the CI lane's `cut -d, -f1-13` compares.
 fn deterministic_csv(csv: &str) -> String {
     csv.lines()
         .map(|line| {
@@ -50,17 +53,21 @@ fn deterministic_csv(csv: &str) -> String {
 fn csv_time_columns_are_thread_and_run_invariant() {
     let reg = Registry::sim();
     let rt = Runtime::sim();
-    let mut runs = Vec::new();
-    for threads in [1usize, 4, 1] {
-        let mut cfg = tiny("simtime-det");
-        cfg.threads = threads;
-        runs.push(deterministic_csv(&train::run(&cfg, &reg, &rt).unwrap().to_csv()));
+    for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+        let mut runs = Vec::new();
+        for threads in [1usize, 4, 1] {
+            let mut cfg = tiny("simtime-det");
+            cfg.transport = transport;
+            cfg.threads = threads;
+            runs.push(deterministic_csv(&train::run(&cfg, &reg, &rt).unwrap().to_csv()));
+        }
+        assert_eq!(runs[0], runs[1], "{transport:?}: t1 vs t4 CSV bytes diverged");
+        assert_eq!(runs[0], runs[2], "{transport:?}: back-to-back CSV bytes diverged");
+        // sanity on the clock itself: time accrues and the transport
+        // dimension survives the wall-column strip
+        assert!(runs[0].contains("sim_secs"));
+        assert!(runs[0].contains(",transport"));
     }
-    assert_eq!(runs[0], runs[1], "threads=1 vs threads=4 CSV bytes diverged");
-    assert_eq!(runs[0], runs[2], "back-to-back threads=1 CSV bytes diverged");
-    // sanity on the clock itself: time accrues and overlap saves something
-    // in the default comm-bound regime
-    assert!(runs[0].contains("sim_secs"));
 }
 
 #[test]

@@ -1,0 +1,301 @@
+//! Transport parity + ledger-accounting suite for the pluggable
+//! aggregation layer:
+//!
+//!  * sharded-vs-dense **parameter equality** for the no-compression
+//!    path: reduce-scatter ownership reassembles bit-identical
+//!    parameters (shard of the mean == mean of the shard, and the
+//!    per-shard optimizer steps union to the full step);
+//!  * sharded runs stay **thread-invariant** (bit-exact sim clock and
+//!    ledger at 1 vs 4 host threads), for every compressor family;
+//!  * **ledger parity**: reduce-scatter + rebuild all-gather payloads
+//!    match the paper's Data-Sent convention for each compressor;
+//!  * the sharded **no-overlap** charge still equals compute + ledger
+//!    comm, and the no-compression sharded clock equals dense (the
+//!    ring all-reduce IS reduce-scatter + all-gather);
+//!  * config validation and the resident-floats memory model.
+//!
+//! Sim backend only: no artifacts, no PJRT.
+
+use accordion::cluster::network::NetworkModel;
+use accordion::collectives::{Comm, DenseReplicated, ShardedOwnership, Transport};
+use accordion::compress::{
+    powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd, topk::TopK,
+    DistCompressor, Level, NoCompression,
+};
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig, TransportCfg}};
+
+fn tiny(label: &str, method: MethodCfg, transport: TransportCfg, threads: usize) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.label = label.into();
+    c.model = "mlp_deep_c10".into(); // 3 matrix + 3 vector layers
+    c.workers = 4;
+    c.threads = threads;
+    c.epochs = 3;
+    c.train_size = 256;
+    c.test_size = 64;
+    c.data_sep = 0.6;
+    c.warmup_epochs = 1;
+    c.decay_epochs = vec![2];
+    c.method = method;
+    c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    c.transport = transport;
+    c
+}
+
+#[test]
+fn sharded_parameters_bit_identical_to_dense_without_compression() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    // 2 workers: every mlp_deep_c10 layer numel is even, so the ring
+    // chunking is exact and the time-identity below has no ceil slack
+    // (parameter equality itself holds for any worker count — the
+    // 4-worker case rides along in the thread-invariance test).  The
+    // serialized charge isolates the identity: under overlap, dense
+    // hides its all-reduces under backprop while the sharded rebuild is
+    // inherently post-optimizer, so the overlapped clocks may differ.
+    let mk = |label: &str, transport| {
+        let mut c = tiny(label, MethodCfg::None, transport, 1);
+        c.workers = 2;
+        c.overlap = false;
+        c
+    };
+    let (dlog, dparams) =
+        train::run_full(&mk("tp/dense", TransportCfg::Dense), &reg, &rt).unwrap();
+    let (slog, sparams) =
+        train::run_full(&mk("tp/sharded", TransportCfg::Sharded), &reg, &rt).unwrap();
+
+    // reassembled parameters: bit-identical, layer by layer
+    assert_eq!(dparams.len(), sparams.len());
+    for (l, (a, b)) in dparams.iter().zip(&sparams).enumerate() {
+        assert_eq!(a.shape, b.shape, "layer {l} shape");
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "layer {l}: {x} vs {y}");
+        }
+    }
+    // the whole trajectory coincides (losses are f32-exact)
+    for (ea, eb) in dlog.epochs.iter().zip(&slog.epochs) {
+        assert_eq!(ea.train_loss, eb.train_loss);
+        assert_eq!(ea.test_loss, eb.test_loss);
+        assert_eq!(ea.test_acc, eb.test_acc);
+        assert_eq!(ea.grad_norm, eb.grad_norm);
+        // Data Sent: sharded additionally pays the parameter rebuild
+        assert!(eb.floats > ea.floats, "rebuild all-gather must be charged");
+    }
+    assert_eq!(dlog.transport, "dense");
+    assert_eq!(slog.transport, "sharded");
+
+    // time: the ring all-reduce IS reduce-scatter + all-gather, and at
+    // 2 workers every layer's chunking is exact, so the sharded
+    // no-compression serialized clock matches dense to f64 round-off
+    let (ds, ss) = (dlog.total_secs(), slog.total_secs());
+    assert!((ds - ss).abs() < 1e-9 * ds.max(1.0), "dense {ds} vs sharded {ss}");
+}
+
+#[test]
+fn sharded_runs_are_thread_invariant_across_methods() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let methods: Vec<(&str, MethodCfg)> = vec![
+        ("none", MethodCfg::None),
+        ("powersgd", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+        ("topk", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 }),
+        ("randomk", MethodCfg::RandomK { frac_low: 0.99, frac_high: 0.25 }),
+        ("qsgd", MethodCfg::Qsgd { bits_low: 8, bits_high: 4 }),
+    ];
+    for (mname, method) in methods {
+        let (slog, sparams) = train::run_full(
+            &tiny(&format!("tpt/{mname}/t1"), method.clone(), TransportCfg::Sharded, 1),
+            &reg,
+            &rt,
+        )
+        .unwrap();
+        let (plog, pparams) = train::run_full(
+            &tiny(&format!("tpt/{mname}/t4"), method.clone(), TransportCfg::Sharded, 4),
+            &reg,
+            &rt,
+        )
+        .unwrap();
+        for (a, b) in sparams.iter().zip(&pparams) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!(
+                    (x - y).abs() <= 1e-6 * (1.0 + x.abs().max(y.abs())),
+                    "{mname}: params diverged across threads: {x} vs {y}"
+                );
+            }
+        }
+        assert_eq!(slog.level_trace, plog.level_trace, "{mname}: level trace");
+        for (ea, eb) in slog.epochs.iter().zip(&plog.epochs) {
+            assert_eq!(ea.floats, eb.floats, "{mname}: floats ledger");
+            assert_eq!(
+                ea.secs.to_bits(),
+                eb.secs.to_bits(),
+                "{mname}: sharded sim secs diverged across threads"
+            );
+            assert_eq!(ea.overlap_saved_secs.to_bits(), eb.overlap_saved_secs.to_bits());
+        }
+    }
+}
+
+/// One sharded round per compressor on a [6, 8] layer across 4 workers
+/// (chunk = ceil(48/4) = 12): the ledger must charge the compressor's
+/// aggregation payload plus the 12-float parameter-rebuild all-gather —
+/// the paper's Data-Sent convention extended to reduce-scatter
+/// ownership (DESIGN.md §5).
+#[test]
+fn sharded_ledger_floats_match_the_data_sent_convention() {
+    let workers = 4;
+    let shape = [6usize, 8];
+    let numel = 48usize;
+    let chunk = 12u64;
+    let mut rng = accordion::util::rng::Rng::new(0xD15C0);
+    let grads: Vec<Vec<f32>> = (0..workers)
+        .map(|_| (0..numel).map(|_| rng.normal()).collect())
+        .collect();
+    let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+
+    let cases: Vec<(Box<dyn DistCompressor>, u64)> = vec![
+        // (compressor, expected aggregation payload floats at Level::High)
+        (Box::new(NoCompression), numel as u64),
+        // PowerSGD rank 1: the P (6·1) and Q (8·1) all-reduces
+        (Box::new(PowerSgd::new(workers, 2, 1, 7)), (6 + 8) as u64),
+        // TopK 25%: k = 12 (value, index) pairs all-gathered
+        (Box::new(TopK::new(workers, 0.99, 0.25)), 2 * 12),
+        // RandomK 25%: k = 12 values on the shared support
+        (Box::new(RandomK::new(workers, 0.99, 0.25, 9)), 12),
+        // QSGD 4-bit: ceil(48·4/32) + 1 norm float
+        (Box::new(Qsgd::new(workers, 8, 4, 11)), 7),
+        // signSGD: ceil(48/32) + 1 scale float
+        (Box::new(SignSgd::new(workers)), 3),
+    ];
+    let transport = ShardedOwnership::new(workers);
+    for (mut comp, agg_payload) in cases {
+        let name = comp.name();
+        let mut comm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
+        let mut out = vec![0.0f32; numel];
+        transport.aggregate_layer(
+            Some(comp.as_mut()),
+            0,
+            &views,
+            &shape,
+            Level::High,
+            &mut comm,
+            &mut out,
+        );
+        assert_eq!(
+            comm.ledger.floats,
+            agg_payload + chunk,
+            "{name}: sharded Data-Sent must be aggregation payload + rebuild chunk"
+        );
+        assert!(comm.ledger.rebuild_secs > 0.0, "{name}: rebuild must be charged");
+        assert!(
+            comm.ledger.rebuild_secs < comm.ledger.secs,
+            "{name}: rebuild is only part of the comm time"
+        );
+
+        // dense reference: same round charges exactly the payload
+        let mut dcomp = fresh(&name, workers);
+        let mut dcomm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
+        DenseReplicated.aggregate_layer(
+            Some(dcomp.as_mut()),
+            0,
+            &views,
+            &shape,
+            Level::High,
+            &mut dcomm,
+            &mut out,
+        );
+        assert_eq!(dcomm.ledger.floats, agg_payload, "{name}: dense Data-Sent");
+        assert_eq!(dcomm.ledger.rebuild_secs, 0.0);
+    }
+}
+
+/// Rebuild a fresh compressor matching `name` (the ledger test needs an
+/// identical dense twin per case).
+fn fresh(name: &str, workers: usize) -> Box<dyn DistCompressor> {
+    if name.starts_with("powersgd") {
+        Box::new(PowerSgd::new(workers, 2, 1, 7))
+    } else if name.starts_with("topk") {
+        Box::new(TopK::new(workers, 0.99, 0.25))
+    } else if name.starts_with("randomk") {
+        Box::new(RandomK::new(workers, 0.99, 0.25, 9))
+    } else if name.starts_with("qsgd") {
+        Box::new(Qsgd::new(workers, 8, 4, 11))
+    } else if name.starts_with("signsgd") {
+        Box::new(SignSgd::new(workers))
+    } else {
+        Box::new(NoCompression)
+    }
+}
+
+#[test]
+fn sharded_no_overlap_still_equals_compute_plus_ledger() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+    let ov = tiny("tpno/ov", method.clone(), TransportCfg::Sharded, 1);
+    let mut serial = tiny("tpno/serial", method, TransportCfg::Sharded, 1);
+    serial.overlap = false;
+    let a = train::run(&ov, &reg, &rt).unwrap();
+    let b = train::run(&serial, &reg, &rt).unwrap();
+    // the overlap knob never touches trajectory or ledger
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(ea.train_loss, eb.train_loss);
+        assert_eq!(ea.floats, eb.floats);
+    }
+    // serialized == overlap secs + saved (the rebuild charge is serial
+    // in both disciplines, so the identity survives the transport)
+    assert_eq!(b.total_overlap_saved_secs(), 0.0);
+    let serialized = a.total_secs() + a.total_overlap_saved_secs();
+    let rel = (b.total_secs() - serialized).abs() / serialized.max(1e-12);
+    assert!(rel < 1e-9, "{} != {}", b.total_secs(), serialized);
+    // and overlap still saves something in the comm-bound default regime
+    assert!(a.total_overlap_saved_secs() > 0.0);
+}
+
+#[test]
+fn sharded_run_rejects_single_worker() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut c = tiny("tp/solo", MethodCfg::None, TransportCfg::Sharded, 1);
+    c.workers = 1;
+    let err = train::run(&c, &reg, &rt).unwrap_err();
+    assert!(err.to_string().contains("workers > 1"), "{err}");
+}
+
+#[test]
+fn resident_floats_bound_on_the_largest_sim_model() {
+    let reg = Registry::sim();
+    let meta = reg.model("mlp_bench").unwrap();
+    let numels: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
+    let workers = 8;
+    let dense = DenseReplicated.resident_floats(&numels);
+    let sharded = ShardedOwnership::new(workers).resident_floats(&numels);
+    let max_layer = numels.iter().copied().max().unwrap();
+    // the acceptance bound: (1/N + one layer) of dense, with one float
+    // per layer of ceil-rounding slack
+    assert!(
+        sharded <= dense.div_ceil(workers) + max_layer + numels.len(),
+        "sharded {sharded} vs dense {dense}"
+    );
+    assert!(sharded >= dense / workers + max_layer);
+}
+
+#[test]
+fn csv_carries_the_transport_dimension() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let log = train::run(
+        &tiny("tpcsv", MethodCfg::None, TransportCfg::Sharded, 1),
+        &reg,
+        &rt,
+    )
+    .unwrap();
+    let csv = log.to_csv();
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains(",transport,"));
+    for line in csv.lines().skip(1) {
+        assert!(line.contains(",sharded,"), "{line}");
+    }
+}
