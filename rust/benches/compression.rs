@@ -13,10 +13,14 @@ use accordion::compress::{
     powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, topk::TopK, DistCompressor, Level,
 };
 use accordion::util::rng::Rng;
+use accordion::util::workspace::Workspace;
 
 fn main() {
     let ctl = BenchCtl::from_env();
     let workers = 4;
+    // one persistent arena, exactly as the trainer holds one per layer:
+    // the rounds below are zero-allocation in steady state
+    let mut ws = Workspace::new();
 
     // §Perf A/B: generic-R gemm (pre-optimization) vs const-R dispatch.
     {
@@ -70,7 +74,10 @@ fn main() {
             ctl.bench(
                 &format!("powersgd/{ln}/{label}"),
                 (numel * workers) as u64,
-                || ps.round(0, &views, shape, lvl, &mut comm, &mut out),
+                || {
+                    ps.round_into(0, &views, shape, lvl, &mut comm, &mut out, &mut ws);
+                    comm.events.clear(); // unbounded outside Trainer::step
+                },
             );
         }
 
@@ -80,7 +87,10 @@ fn main() {
             ctl.bench(
                 &format!("topk/{ln}/{label}"),
                 (numel * workers) as u64,
-                || tk.round(0, &views, shape, lvl, &mut comm, &mut out),
+                || {
+                    tk.round_into(0, &views, shape, lvl, &mut comm, &mut out, &mut ws);
+                    comm.events.clear();
+                },
             );
         }
 
@@ -89,7 +99,10 @@ fn main() {
         ctl.bench(
             &format!("randomk/k10/{label}"),
             (numel * workers) as u64,
-            || rk.round(0, &views, shape, Level::High, &mut comm, &mut out),
+            || {
+                rk.round_into(0, &views, shape, Level::High, &mut comm, &mut out, &mut ws);
+                comm.events.clear();
+            },
         );
 
         let mut qs = Qsgd::new(workers, 8, 2, 3);
@@ -97,7 +110,10 @@ fn main() {
         ctl.bench(
             &format!("qsgd/8b/{label}"),
             (numel * workers) as u64,
-            || qs.round(0, &views, shape, Level::Low, &mut comm, &mut out),
+            || {
+                qs.round_into(0, &views, shape, Level::Low, &mut comm, &mut out, &mut ws);
+                comm.events.clear();
+            },
         );
     }
 
@@ -121,11 +137,20 @@ fn main() {
                         let views: Vec<&[f32]> =
                             (0..workers).map(|w| grads[w][l].as_slice()).collect();
                         if p.compressible() {
-                            ps.round(l, &views, &p.shape, Level::Low, &mut comm, &mut outs[l]);
+                            ps.round_into(
+                                l,
+                                &views,
+                                &p.shape,
+                                Level::Low,
+                                &mut comm,
+                                &mut outs[l],
+                                &mut ws,
+                            );
                         } else {
                             comm.allreduce_mean_into(&views, &mut outs[l]);
                         }
                     }
+                    comm.events.clear(); // unbounded outside Trainer::step
                 },
             );
         }

@@ -13,6 +13,10 @@ pub struct BenchCtl {
     pub iters: usize,
 }
 
+// not every including bench uses every helper; the unused ones are
+// dead code in that bench's bin, which the --all-targets clippy lane
+// would otherwise deny
+#[allow(dead_code)]
 impl BenchCtl {
     pub fn from_env() -> BenchCtl {
         // cargo bench passes --bench; any bare arg is a filter
@@ -45,7 +49,7 @@ impl BenchCtl {
             f();
             samples.push(t0.elapsed().as_secs_f64());
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let p50 = samples[samples.len() / 2];
         let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
@@ -63,6 +67,7 @@ impl BenchCtl {
     }
 }
 
+#[allow(dead_code)]
 fn fmt(secs: f64) -> String {
     if secs < 1e-6 {
         format!("{:.0}ns", secs * 1e9)

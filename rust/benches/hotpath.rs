@@ -1,0 +1,200 @@
+//! Hot-path bench: the zero-allocation + bucketed-collectives perf
+//! trajectory, written to `BENCH_hotpath.json` per PR.
+//!
+//! Three measurements:
+//!  * **allocs/step** — a counting global allocator around steady-state
+//!    `Trainer::step` calls (after warmup), at `threads 1` and
+//!    `threads 4` and under both transports.  The contract is 0; the
+//!    number is recorded (not asserted — `tests/hotpath_alloc.rs` is
+//!    the gate) so regressions are visible as a diff even when partial.
+//!  * **wall seconds** — end-to-end `train::run` wall time at
+//!    `threads = 1` and `threads = 4` on the heavy bench model,
+//!    measured in the SAME run so the pair is comparable across PRs
+//!    (absolute numbers depend on the host; the JSON also records the
+//!    core count that bounds the ratio).
+//!  * **bucketed vs unbucketed sim-seconds** — the deterministic
+//!    simulated clock on an α-heavy (latency-dominated) many-small-layer
+//!    config: high per-hop latency, fat pipe, uncompressed aggregation.
+//!    Asserts bucketed ≤ unbucketed — this is the regime bucketing
+//!    exists for, and the numbers are bit-reproducible, so the assert
+//!    cannot flake.
+//!
+//! Run: `cargo bench --bench hotpath [-- --quick-ci]`
+
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{
+    self,
+    config::{ControllerCfg, MethodCfg, TrainConfig, TransportCfg},
+    Trainer,
+};
+use accordion::util::alloc::{alloc_count, CountingAlloc};
+use accordion::util::json;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn base_cfg(label: &str) -> TrainConfig {
+    TrainConfig {
+        label: label.into(),
+        workers: 4,
+        epochs: 1,
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: vec![],
+        controller: ControllerCfg::Static(accordion::compress::Level::Low),
+        ..TrainConfig::default()
+    }
+}
+
+/// Steady-state allocations per step (two measured steps after two
+/// warmup steps, averaged).
+fn allocs_per_step(threads: usize, transport: TransportCfg) -> f64 {
+    let c = TrainConfig {
+        model: "mlp_c10".into(),
+        threads,
+        train_size: 256,
+        transport,
+        method: MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+        ..base_cfg(&format!("hotpath-alloc-t{threads}"))
+    };
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut t = Trainer::new(&c, &reg, &rt).unwrap();
+    let steps = t.begin_epoch().unwrap();
+    assert!(steps >= 4);
+    t.step(0).unwrap();
+    t.step(1).unwrap();
+    let before = alloc_count();
+    t.step(2).unwrap();
+    t.step(3).unwrap();
+    (alloc_count() - before) as f64 / 2.0
+}
+
+/// End-to-end wall seconds of one full `train::run` (median of `iters`).
+fn wall_secs(threads: usize, quick: bool, iters: usize) -> f64 {
+    let c = TrainConfig {
+        model: if quick { "mlp_c10".into() } else { "mlp_bench".into() },
+        threads,
+        train_size: if quick { 512 } else { 2048 },
+        method: MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+        ..base_cfg(&format!("hotpath-wall-t{threads}"))
+    };
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let _ = train::run(&c, &reg, &rt).unwrap(); // warmup
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            let log = train::run(&c, &reg, &rt).unwrap();
+            std::hint::black_box(log.final_acc());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
+/// Deterministic clock numbers of the α-heavy config at one bucket
+/// size: (overlap sim secs, serialized secs, floats, final acc).
+fn alpha_heavy_sim_secs(bucket_kb: usize, quick: bool) -> (f64, f64, u64, f32) {
+    let c = TrainConfig {
+        model: "mlp_deep_c10".into(),
+        threads: 1,
+        train_size: if quick { 256 } else { 1024 },
+        method: MethodCfg::None,
+        // latency-dominated: fat pipe, 2 ms per hop, 6 small layers
+        bandwidth_mbps: 1000.0,
+        latency_us: 2000.0,
+        bucket_kb,
+        ..base_cfg(&format!("hotpath-bucket-{bucket_kb}kb"))
+    };
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let log = train::run(&c, &reg, &rt).unwrap();
+    (
+        log.total_secs(),
+        log.total_secs() + log.total_overlap_saved_secs(),
+        log.total_floats(),
+        log.final_acc(),
+    )
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick-ci");
+    let iters = if quick { 1 } else { 5 };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // ---- allocs/step ---------------------------------------------------
+    let mut alloc_rows: Vec<json::Json> = Vec::new();
+    println!("{:<44} {:>12}", "setting", "allocs/step");
+    for threads in [1usize, 4] {
+        for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+            let a = allocs_per_step(threads, transport);
+            let tname = if transport == TransportCfg::Dense { "dense" } else { "sharded" };
+            println!("allocs/step threads={threads} {tname:<8} {a:>12.1}");
+            alloc_rows.push(json::obj(vec![
+                ("threads", json::num(threads as f64)),
+                ("transport", json::s(tname)),
+                ("allocs_per_step", json::num(a)),
+            ]));
+        }
+    }
+
+    // ---- wall seconds, same run: threads 1 vs 4 ------------------------
+    let w1 = wall_secs(1, quick, iters);
+    let w4 = wall_secs(4, quick, iters);
+    println!("wall: threads=1 {w1:.3}s, threads=4 {w4:.3}s (host cores: {cores})");
+
+    // ---- bucketed vs unbucketed on the α-heavy config ------------------
+    let (s0, ser0, f0, a0) = alpha_heavy_sim_secs(0, quick);
+    let (s64, ser64, f64b, a64) = alpha_heavy_sim_secs(64, quick);
+    println!(
+        "alpha-heavy sim secs: per-layer {s0:.3}s, bucket 64 KiB {s64:.3}s ({:.2}x); \
+         serialized {ser0:.3}s -> {ser64:.3}s",
+        s0 / s64.max(1e-12)
+    );
+    // the serialized charge is PROVABLY monotone in bucket size (greedy
+    // packing only removes α terms) — the load-bearing assert
+    assert!(
+        ser64 <= ser0,
+        "bucketed serialized secs must not exceed unbucketed: {ser64} vs {ser0}"
+    );
+    // the quoted overlap column must win too on THIS config: the wire is
+    // so latency-dominated (6 x 12 ms of α vs ~0.5 ms of backprop) that
+    // the later bucket issue can never eat the saved α — deterministic,
+    // so this cannot flake, but it IS regime-specific: revisit if the
+    // config's layers/α/β change
+    assert!(
+        s64 <= s0,
+        "bucketed sim-secs must not exceed unbucketed on the latency-dominated config: \
+         {s64} vs {s0}"
+    );
+    assert_eq!(f0, f64b, "bucketing must not change the Data-Sent floats");
+    assert_eq!(a0, a64, "bucketing must not change the training trajectory");
+
+    let report = json::obj(vec![
+        ("bench", json::s("hotpath-zero-alloc-and-bucketing")),
+        ("quick_ci", json::num(if quick { 1.0 } else { 0.0 })),
+        ("host_cores", json::num(cores as f64)),
+        ("allocs", json::arr(alloc_rows)),
+        ("wall_secs_threads1", json::num(w1)),
+        ("wall_secs_threads4", json::num(w4)),
+        (
+            "wall_threads4_vs_threads1",
+            json::num(if w1 > 0.0 { w4 / w1 } else { 0.0 }),
+        ),
+        ("alpha_heavy_sim_secs_unbucketed", json::num(s0)),
+        ("alpha_heavy_sim_secs_bucket64kb", json::num(s64)),
+        ("alpha_heavy_serialized_secs_unbucketed", json::num(ser0)),
+        ("alpha_heavy_serialized_secs_bucket64kb", json::num(ser64)),
+        (
+            "alpha_heavy_bucket_speedup",
+            json::num(if s64 > 0.0 { s0 / s64 } else { 1.0 }),
+        ),
+        ("bucket_deterministic", json::num(1.0)),
+        ("final_acc_alpha_heavy", json::num(a0 as f64)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", report.to_string()).expect("writing BENCH_hotpath.json");
+    println!("BENCH_hotpath.json written (allocs + wall + deterministic bucket sweep)");
+}

@@ -16,19 +16,20 @@ use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
 use accordion::util::json;
 
 fn cfg(mbps: f64, setting: &str, controller: ControllerCfg, quick: bool) -> TrainConfig {
-    let mut c = TrainConfig::default();
-    c.label = format!("bench-overlap-{mbps:.0}mbps-{setting}");
-    c.model = "mlp_deep_c10".into();
-    c.workers = 4;
-    c.epochs = if quick { 1 } else { 4 };
-    c.train_size = if quick { 256 } else { 1024 };
-    c.test_size = 64;
-    c.warmup_epochs = 0;
-    c.decay_epochs = if quick { vec![] } else { vec![3] };
-    c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
-    c.controller = controller;
-    c.bandwidth_mbps = mbps;
-    c
+    TrainConfig {
+        label: format!("bench-overlap-{mbps:.0}mbps-{setting}"),
+        model: "mlp_deep_c10".into(),
+        workers: 4,
+        epochs: if quick { 1 } else { 4 },
+        train_size: if quick { 256 } else { 1024 },
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: if quick { vec![] } else { vec![3] },
+        method: MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+        controller,
+        bandwidth_mbps: mbps,
+        ..TrainConfig::default()
+    }
 }
 
 fn main() {

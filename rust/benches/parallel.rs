@@ -21,18 +21,20 @@ use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
 use accordion::util::json;
 
 fn bench_cfg(threads: usize, quick: bool) -> TrainConfig {
-    let mut c = TrainConfig::default();
-    c.label = format!("bench-parallel-t{threads}");
-    c.model = "mlp_bench".into(); // [512, 256, 10] — heavy enough per step
-    c.workers = 8;
-    c.threads = threads;
-    c.epochs = 2;
-    c.train_size = 2048;
-    c.test_size = 64;
-    c.warmup_epochs = 0;
-    c.decay_epochs = vec![1];
-    c.method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
-    c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    let mut c = TrainConfig {
+        label: format!("bench-parallel-t{threads}"),
+        model: "mlp_bench".into(), // [512, 256, 10] — heavy enough per step
+        workers: 8,
+        threads,
+        epochs: 2,
+        train_size: 2048,
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: vec![1],
+        method: MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+        controller: ControllerCfg::Accordion { eta: 0.5, interval: 1 },
+        ..TrainConfig::default()
+    };
     if quick {
         // CI lane: one epoch of a small model — records the trajectory,
         // not a publishable number
@@ -74,7 +76,7 @@ fn main() {
             std::hint::black_box(log.final_acc());
             samples.push(t0.elapsed().as_secs_f64());
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let p50 = samples[samples.len() / 2];
         mean_secs[ti] = mean;

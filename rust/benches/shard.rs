@@ -21,19 +21,20 @@ use accordion::util::json;
 const WORKERS: usize = 8;
 
 fn cfg(method_name: &str, method: MethodCfg, transport: TransportCfg, quick: bool) -> TrainConfig {
-    let mut c = TrainConfig::default();
-    c.label = format!("bench-shard-{method_name}-{transport:?}");
-    c.model = "mlp_bench".into(); // the largest sim model: [512, 256, 10]
-    c.workers = WORKERS;
-    c.epochs = if quick { 1 } else { 2 };
-    c.train_size = if quick { 512 } else { 2048 };
-    c.test_size = 64;
-    c.warmup_epochs = 0;
-    c.decay_epochs = if quick { vec![] } else { vec![1] };
-    c.method = method;
-    c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
-    c.transport = transport;
-    c
+    TrainConfig {
+        label: format!("bench-shard-{method_name}-{transport:?}"),
+        model: "mlp_bench".into(), // the largest sim model: [512, 256, 10]
+        workers: WORKERS,
+        epochs: if quick { 1 } else { 2 },
+        train_size: if quick { 512 } else { 2048 },
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: if quick { vec![] } else { vec![1] },
+        method,
+        controller: ControllerCfg::Accordion { eta: 0.5, interval: 1 },
+        transport,
+        ..TrainConfig::default()
+    }
 }
 
 fn main() {

@@ -26,17 +26,16 @@ fn main() {
         if rt.has_pjrt() { "pjrt (AOT artifacts)" } else { "sim (pure Rust)" }
     );
 
-    let tiny = |method: MethodCfg, ctrl: ControllerCfg| {
-        let mut c = TrainConfig::default();
-        c.model = "mlp_c10".into();
-        c.epochs = 2;
-        c.train_size = 256;
-        c.test_size = 64;
-        c.warmup_epochs = 0;
-        c.decay_epochs = vec![1];
-        c.method = method;
-        c.controller = ctrl;
-        c
+    let tiny = |method: MethodCfg, ctrl: ControllerCfg| TrainConfig {
+        model: "mlp_c10".into(),
+        epochs: 2,
+        train_size: 256,
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: vec![1],
+        method,
+        controller: ctrl,
+        ..TrainConfig::default()
     };
 
     // iters are whole 2-epoch jobs; keep the count small

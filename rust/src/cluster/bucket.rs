@@ -1,0 +1,235 @@
+//! Layer-coalesced ("bucketed") collective planning.
+//!
+//! The α–β model charges every collective a per-ring latency term, so a
+//! model with many small layers pays `layers × α-hops` per step — which
+//! is exactly the regime real DDP stacks escape by flattening
+//! consecutive gradients into fixed-size buckets before all-reducing
+//! (AdaComp's chunk granularity, PyTorch DDP's `bucket_cap_mb`).  This
+//! module is our equivalent: it walks one step's per-layer collective
+//! events in ISSUE order (backprop emits layer `L-1` down to `0`),
+//! coalesces consecutive events of the same collective kind into
+//! buckets of at most `bucket_bytes`, and prices each bucket once —
+//! one α charge per bucket, the β byte term unchanged
+//! ([`NetworkModel::collective_secs`]).
+//!
+//! Coalescing rules:
+//!  * only layers whose round issued exactly ONE collective coalesce;
+//!    a multi-collective round (PowerSGD's sequential P then Q
+//!    all-reduces) is a fence — its events are charged individually in
+//!    order, because the second depends on the first's result;
+//!  * kinds never mix (an all-gather payload cannot ride an all-reduce);
+//!  * the sharded transport's parameter-rebuild all-gathers form their
+//!    own stream: they all run post-optimizer, so they coalesce with
+//!    each other (up to the same budget) and never with aggregation
+//!    collectives.
+//!
+//! The planner reuses its output buffers across steps, so steady-state
+//! planning allocates nothing.  Scheduling consumes the plan via
+//! [`simtime::step_times_bucketed`](crate::cluster::simtime::step_times_bucketed):
+//! a bucket is issued when its LAST-emitted member is ready — the
+//! lowest-index member layer, since backprop walks down.
+
+use crate::cluster::network::{CollKind, NetworkModel};
+use crate::collectives::Comm;
+
+/// One priced bucket: issued on the single in-order channel once layer
+/// `lo_layer` (the lowest-index member) has its gradient ready.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BucketCharge {
+    pub lo_layer: usize,
+    pub secs: f64,
+}
+
+#[derive(Clone, Copy)]
+struct Open {
+    kind: CollKind,
+    bytes: usize,
+    lo: usize,
+}
+
+/// The per-run planner (see module docs).  One instance per trainer;
+/// `plan` is called once per global step.
+pub struct Bucketizer {
+    /// coalescing budget per bucket, bytes (`net.bucket_kb * 1024`)
+    pub bucket_bytes: usize,
+    charges: Vec<BucketCharge>,
+}
+
+impl Bucketizer {
+    pub fn new(bucket_kb: usize) -> Bucketizer {
+        Bucketizer { bucket_bytes: bucket_kb * 1024, charges: Vec::new() }
+    }
+
+    /// Build this step's bucket plan from the per-layer event streams
+    /// (`comms[l].events`, cleared by the trainer before aggregation).
+    /// Returns the aggregation charges in issue order plus the coalesced
+    /// post-optimizer rebuild seconds.
+    pub fn plan(&mut self, comms: &[Comm], net: &NetworkModel) -> (&[BucketCharge], f64) {
+        self.charges.clear();
+        let budget = self.bucket_bytes.max(1);
+        let mut open: Option<Open> = None;
+        // rebuild stream: greedy byte accumulator (order-free: every
+        // rebuild is charged serially after the optimizer)
+        let mut rebuild_secs = 0.0f64;
+        let mut rebuild_bytes = 0usize;
+
+        for l in (0..comms.len()).rev() {
+            let events = &comms[l].events;
+            let n_agg = events.iter().filter(|e| !e.rebuild).count();
+            for e in events {
+                if e.rebuild {
+                    if rebuild_bytes > 0 && rebuild_bytes + e.bytes > budget {
+                        rebuild_secs += net.allgather_secs(rebuild_bytes);
+                        rebuild_bytes = 0;
+                    }
+                    rebuild_bytes += e.bytes;
+                    continue;
+                }
+                if n_agg == 1 {
+                    match open {
+                        Some(ref mut o) if o.kind == e.kind && o.bytes + e.bytes <= budget => {
+                            o.bytes += e.bytes;
+                            o.lo = l;
+                        }
+                        _ => {
+                            if let Some(o) = open.take() {
+                                self.push(o, net);
+                            }
+                            open = Some(Open { kind: e.kind, bytes: e.bytes, lo: l });
+                        }
+                    }
+                } else {
+                    // multi-collective round: fence, charge in order
+                    if let Some(o) = open.take() {
+                        self.push(o, net);
+                    }
+                    self.charges.push(BucketCharge {
+                        lo_layer: l,
+                        secs: net.collective_secs(e.kind, e.bytes),
+                    });
+                }
+            }
+        }
+        if let Some(o) = open.take() {
+            self.push(o, net);
+        }
+        if rebuild_bytes > 0 {
+            rebuild_secs += net.allgather_secs(rebuild_bytes);
+        }
+        (&self.charges, rebuild_secs)
+    }
+
+    fn push(&mut self, o: Open, net: &NetworkModel) {
+        self.charges
+            .push(BucketCharge { lo_layer: o.lo, secs: net.collective_secs(o.kind, o.bytes) });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn comms_with(net: &Arc<NetworkModel>, layers: usize) -> Vec<Comm> {
+        (0..layers).map(|_| Comm::shared(net.clone())).collect()
+    }
+
+    #[test]
+    fn tiny_budget_reproduces_per_layer_charges() {
+        let net = Arc::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut comms = comms_with(&net, 3);
+        comms[0].charge_allreduce(100);
+        comms[1].charge_allreduce(60);
+        comms[2].charge_allgather(40);
+        let ledger: f64 = comms.iter().map(|c| c.ledger.secs).sum();
+        // budget of 1 byte: every event its own bucket
+        let mut b = Bucketizer::new(0);
+        b.bucket_bytes = 1;
+        let (charges, rebuild) = b.plan(&comms, &net);
+        assert_eq!(rebuild, 0.0);
+        assert_eq!(charges.len(), 3);
+        // issue order: layer 2 first
+        assert_eq!(charges[0].lo_layer, 2);
+        assert_eq!(charges[2].lo_layer, 0);
+        let total: f64 = charges.iter().map(|c| c.secs).sum();
+        assert!((total - ledger).abs() < 1e-12 * ledger.max(1.0), "{total} vs {ledger}");
+    }
+
+    #[test]
+    fn adjacent_same_kind_layers_coalesce_and_save_latency() {
+        let net = Arc::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut comms = comms_with(&net, 4);
+        for c in comms.iter_mut() {
+            c.charge_allreduce(100); // 400 B each
+        }
+        let ledger: f64 = comms.iter().map(|c| c.ledger.secs).sum();
+        let mut b = Bucketizer::new(1); // 1 KiB: fits 2 payloads + change
+        let (charges, _) = b.plan(&comms, &net);
+        // greedy from layer 3 down: [3,2] then [1,0]
+        assert_eq!(charges.len(), 2);
+        assert_eq!(charges[0].lo_layer, 2);
+        assert_eq!(charges[1].lo_layer, 0);
+        let total: f64 = charges.iter().map(|c| c.secs).sum();
+        // two α charges saved vs four
+        let alpha_hops = 2.0 * 3.0 * net.alpha;
+        assert!(
+            (ledger - total - 2.0 * alpha_hops).abs() < 1e-12 * ledger.max(1.0),
+            "{ledger} vs {total}"
+        );
+    }
+
+    #[test]
+    fn kind_changes_and_oversize_payloads_split_buckets() {
+        let net = Arc::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut comms = comms_with(&net, 3);
+        comms[2].charge_allreduce(100);
+        comms[1].charge_allgather(100); // kind fence
+        comms[0].charge_allreduce(10_000); // oversize: own bucket
+        let mut b = Bucketizer::new(1); // 1 KiB
+        let (charges, _) = b.plan(&comms, &net);
+        assert_eq!(charges.len(), 3);
+    }
+
+    #[test]
+    fn multi_collective_rounds_fence_the_stream() {
+        // PowerSGD-like layer: two all-reduces that must stay ordered,
+        // surrounded by coalescible raw layers
+        let net = Arc::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut comms = comms_with(&net, 3);
+        comms[2].charge_allreduce(10);
+        comms[1].charge_allreduce(6); // P
+        comms[1].charge_allreduce(4); // Q
+        comms[0].charge_allreduce(10);
+        let mut b = Bucketizer::new(1 << 20);
+        let (charges, _) = b.plan(&comms, &net);
+        // layer 2 flushes alone, layer 1's two events charge singly,
+        // layer 0 opens a fresh bucket
+        assert_eq!(charges.len(), 4);
+        assert_eq!(
+            charges.iter().map(|c| c.lo_layer).collect::<Vec<_>>(),
+            vec![2, 1, 1, 0]
+        );
+    }
+
+    #[test]
+    fn rebuild_allgathers_coalesce_in_their_own_stream() {
+        let net = Arc::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut comms = comms_with(&net, 3);
+        for c in comms.iter_mut() {
+            c.charge_reduce_scatter(100);
+            c.charge_rebuild_allgather(25); // 100 B each
+        }
+        let mut b = Bucketizer::new(1 << 20); // everything fits one bucket
+        let (charges, rebuild) = b.plan(&comms, &net);
+        // aggregation: one coalesced reduce-scatter bucket
+        assert_eq!(charges.len(), 1);
+        // rebuild: one all-gather of 300 B instead of three of 100 B
+        let fused = net.allgather_secs(300);
+        assert!((rebuild - fused).abs() < 1e-15, "{rebuild} vs {fused}");
+        let split = 3.0 * net.allgather_secs(100);
+        assert!(rebuild < split);
+        // the planner reuses its buffers across steps (capacity check)
+        let (again, _) = b.plan(&comms, &net);
+        assert_eq!(again.len(), 1);
+    }
+}

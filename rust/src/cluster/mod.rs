@@ -11,6 +11,7 @@
 //! simulated wall clock the tables report — overlap-aware, and invariant
 //! to host threading (DESIGN.md §2, §9).
 
+pub mod bucket;
 pub mod network;
 pub mod simtime;
 

@@ -23,6 +23,18 @@
 //! scaled-down models in the same regime as ResNet-18 on 4x V100 +
 //! 10 Gbps (DESIGN.md §2).
 
+/// The ring collectives the α–β model prices.  Carried by the
+/// [`Comm`](crate::collectives::Comm) event stream so the bucket planner
+/// (`cluster::bucket`) can re-price coalesced payloads with
+/// [`NetworkModel::collective_secs`] — one α charge per *bucket* instead
+/// of one per layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollKind {
+    Allreduce,
+    Allgather,
+    ReduceScatter,
+}
+
 #[derive(Clone, Debug)]
 pub struct NetworkModel {
     pub workers: usize,
@@ -75,6 +87,19 @@ impl NetworkModel {
         // wire; algebraically (N-1)·V, written in the (N-1)/N form the
         // module docs (and the all-reduce term) use
         (n - 1.0) * self.alpha + (n - 1.0) / n * (n * bytes_per_worker as f64) * self.beta
+    }
+
+    /// Price one collective by kind — the bucket formula: a coalesced
+    /// bucket of payloads `V_1..V_k` with the same kind costs
+    /// `collective_secs(kind, ΣV_i)`, i.e. the α (latency) term is paid
+    /// once per bucket while the β (byte) term is unchanged.  With every
+    /// bucket a singleton this reproduces the per-layer charges exactly.
+    pub fn collective_secs(&self, kind: CollKind, bytes_per_worker: usize) -> f64 {
+        match kind {
+            CollKind::Allreduce => self.allreduce_secs(bytes_per_worker),
+            CollKind::Allgather => self.allgather_secs(bytes_per_worker),
+            CollKind::ReduceScatter => self.reduce_scatter_secs(bytes_per_worker),
+        }
     }
 
     pub fn broadcast_secs(&self, bytes: usize) -> f64 {
@@ -174,6 +199,38 @@ mod tests {
         let m0 = NetworkModel::new(4, 100.0, 0.0);
         let ratio = m0.allreduce_secs(1 << 20) / m0.broadcast_secs(1 << 20);
         assert!((ratio - 1.5).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn collective_secs_dispatches_by_kind() {
+        let m = NetworkModel::new(4, 137.0, 23.0);
+        let v = 4096;
+        assert_eq!(m.collective_secs(CollKind::Allreduce, v), m.allreduce_secs(v));
+        assert_eq!(m.collective_secs(CollKind::Allgather, v), m.allgather_secs(v));
+        assert_eq!(
+            m.collective_secs(CollKind::ReduceScatter, v),
+            m.reduce_scatter_secs(v)
+        );
+    }
+
+    #[test]
+    fn bucketing_two_payloads_saves_exactly_one_latency_charge() {
+        // time(V1) + time(V2) - time(V1+V2) == the per-collective α term
+        let m = NetworkModel::new(4, 100.0, 50.0);
+        let (v1, v2) = (1000usize, 3000usize);
+        for kind in [CollKind::Allreduce, CollKind::Allgather, CollKind::ReduceScatter] {
+            let split = m.collective_secs(kind, v1) + m.collective_secs(kind, v2);
+            let fused = m.collective_secs(kind, v1 + v2);
+            let hops = match kind {
+                CollKind::Allreduce => 2.0 * 3.0,
+                _ => 3.0,
+            };
+            let alpha_term = hops * m.alpha;
+            assert!(
+                (split - fused - alpha_term).abs() < 1e-12 * split.max(1.0),
+                "{kind:?}: {split} vs {fused} + {alpha_term}"
+            );
+        }
     }
 
     #[test]

@@ -200,6 +200,64 @@ pub fn step_times(
     }
 }
 
+/// Bucket-granular variant of [`step_times`]: the same two-stream event
+/// schedule, but collectives arrive as the bucket planner's coalesced
+/// charges (`cluster::bucket`) instead of one charge per layer.  A
+/// bucket is issued on the channel once its `lo_layer` member's gradient
+/// is ready — backprop walks `L-1 .. 0`, so the lowest-index member is
+/// the last one emitted.  Charges must be in issue order with
+/// non-increasing `lo_layer` (what [`Bucketizer::plan`] produces);
+/// multiple charges can share a layer (multi-collective rounds).
+///
+/// `rebuild_secs` is the planner's already-coalesced post-optimizer
+/// rebuild charge, serial in both disciplines exactly as in
+/// [`step_times`].  With every bucket a singleton this schedule
+/// reproduces [`step_times`] to f64 round-off — pinned by the tests
+/// below — which is why `bucket_kb = 0` skips the planner entirely
+/// rather than running a degenerate plan: the legacy path stays
+/// bit-identical, not just value-identical.
+///
+/// [`Bucketizer::plan`]: crate::cluster::bucket::Bucketizer::plan
+pub fn step_times_bucketed(
+    cost: &CostModel,
+    batch_mult: usize,
+    charges: &[crate::cluster::bucket::BucketCharge],
+    rebuild_secs: f64,
+) -> StepTimes {
+    let mult = batch_mult.max(1) as f64;
+    let base = (mult - 1.0) * cost.micro_secs() + cost.fwd_secs;
+    let mut ready = base;
+    let mut net_free = 0.0f64;
+    let mut comm_sum = 0.0f64;
+    let mut ci = 0usize;
+    for l in (0..cost.bwd_secs.len()).rev() {
+        ready += cost.bwd_secs[l];
+        while ci < charges.len() && charges[ci].lo_layer == l {
+            let start = if ready > net_free { ready } else { net_free };
+            net_free = start + charges[ci].secs;
+            comm_sum += charges[ci].secs;
+            ci += 1;
+        }
+    }
+    // release-mode error, not a debug assertion: silently dropping
+    // unmatched charges would understate the quoted time columns (the
+    // same hardening policy as `mean_into`'s ragged-buffer check)
+    assert_eq!(
+        ci,
+        charges.len(),
+        "step_times_bucketed: charges must reference valid layers in non-increasing issue order"
+    );
+    let compute_end = ready;
+    let drained = if net_free > compute_end { net_free } else { compute_end };
+    let compute = compute_end + cost.opt_secs;
+    StepTimes {
+        compute,
+        comm: comm_sum + rebuild_secs,
+        overlapped: drained + cost.opt_secs + rebuild_secs,
+        serialized: compute + comm_sum + rebuild_secs,
+    }
+}
+
 /// Measure one `threads = 1` train step for `time.model = "measured"`
 /// calibration: a warmup execution, then the min over a few timed ones
 /// (min is the least contention-sensitive statistic).
@@ -284,6 +342,54 @@ mod tests {
         assert!((saved - saved0).abs() < 1e-12, "rebuild must not change the saving");
         // zero rebuild reproduces the hand-computed dense charge
         assert!((t0.overlapped - 10.5).abs() < 1e-12, "{t0:?}");
+    }
+
+    #[test]
+    fn singleton_buckets_reproduce_the_layer_schedule() {
+        use crate::cluster::bucket::BucketCharge;
+        // one charge per layer at the layer's own ready point == the
+        // per-layer scheduler, for overlap and serialized alike
+        for comm in [[4.0, 1.0], [100.0, 100.0], [0.0, 1.0], [0.0, 0.0]] {
+            for mult in [1usize, 2] {
+                let a = step_times(&cost2(), mult, &comm, 0.0);
+                let charges = [
+                    BucketCharge { lo_layer: 1, secs: comm[1] },
+                    BucketCharge { lo_layer: 0, secs: comm[0] },
+                ];
+                let b = step_times_bucketed(&cost2(), mult, &charges, 0.0);
+                assert!((a.overlapped - b.overlapped).abs() < 1e-12, "{a:?} vs {b:?}");
+                assert!((a.serialized - b.serialized).abs() < 1e-12);
+                assert!((a.comm - b.comm).abs() < 1e-12);
+                assert_eq!(a.compute.to_bits(), b.compute.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_bucket_issues_at_its_lowest_member() {
+        use crate::cluster::bucket::BucketCharge;
+        // both layers' collectives fused into one 5s bucket: it cannot
+        // start until layer 0's gradient is ready (t=6), so the channel
+        // drains at 11 and the optimizer lands at 11.5
+        let t =
+            step_times_bucketed(&cost2(), 1, &[BucketCharge { lo_layer: 0, secs: 5.0 }], 0.0);
+        assert!((t.overlapped - 11.5).abs() < 1e-12, "{t:?}");
+        assert!((t.serialized - 11.5).abs() < 1e-12, "{t:?}");
+        assert!((t.comm - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucketed_rebuild_charges_serially() {
+        use crate::cluster::bucket::BucketCharge;
+        let charges = [
+            BucketCharge { lo_layer: 1, secs: 1.0 },
+            BucketCharge { lo_layer: 0, secs: 4.0 },
+        ];
+        let t0 = step_times_bucketed(&cost2(), 1, &charges, 0.0);
+        let t = step_times_bucketed(&cost2(), 1, &charges, 2.0);
+        assert!((t.overlapped - (t0.overlapped + 2.0)).abs() < 1e-12);
+        assert!((t.serialized - (t0.serialized + 2.0)).abs() < 1e-12);
+        assert!((t.comm - (t0.comm + 2.0)).abs() < 1e-12);
     }
 
     #[test]

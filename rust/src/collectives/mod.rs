@@ -48,6 +48,15 @@
 //! | dense-payload compressor   | all-gather: payload  | reduce-scatter: payload, + rebuild |
 //! | sparse/structured (fallback) | as dense           | as dense, + rebuild            |
 //! | parameter rebuild          | —                    | all-gather: `ceil(V/N)`        |
+//! | bucketed (`net.bucket_kb > 0`) | consecutive same-kind payloads coalesce: one α per ≤ bucket_kb·1024-byte bucket, β on ΣV | same, and the per-layer rebuild all-gathers coalesce too |
+//!
+//! Bucketing never changes the floats column (the paper's Data Sent is
+//! payload, not launches); it changes only the α-β *seconds* the clock
+//! charges, via the event stream each `Comm` records (`Comm::events`)
+//! and the planner in `cluster::bucket`.  `bucket_kb = 0` (the default)
+//! bypasses the planner entirely: the ledger charge IS the clock charge,
+//! bit for bit, which is what keeps every pre-bucketing parity suite
+//! byte-identical.
 //!
 //! "Dense-payload" compressors (QSGD, signSGD, none) have wire formats
 //! aligned with parameter coordinates, so their compressed shards can be
@@ -57,9 +66,11 @@
 //! gather-then-shard fallback — and the rebuild all-gather is the honest
 //! extra cost of sharded ownership for them.
 
-use crate::cluster::network::NetworkModel;
+use crate::cluster::network::{CollKind, NetworkModel};
 use crate::compress::{DistCompressor, Level};
+use crate::util::workspace::Workspace;
 use std::ops::Range;
+use std::sync::Arc;
 
 /// Communication accounting for one run.
 /// `floats` follows the paper's "Data Sent" convention: the per-worker
@@ -77,15 +88,41 @@ pub struct Ledger {
     pub collectives: u64,
 }
 
+/// One collective the ledger charged: what the bucket planner coalesces.
+/// `bytes` is the per-worker payload the α–β formula was priced at;
+/// `rebuild` marks the sharded transport's post-optimizer parameter
+/// rebuild (scheduled serially, coalesced in its own stream).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollEvent {
+    pub kind: CollKind,
+    pub bytes: usize,
+    pub rebuild: bool,
+}
+
 /// The handle compressors/trainers use for every aggregation.
+///
+/// The network model is behind an `Arc`: the trainer keeps one ledger
+/// shard per layer for thread determinism, and all of them price
+/// against literally the same model instead of N clones.
 pub struct Comm {
-    pub net: NetworkModel,
+    pub net: Arc<NetworkModel>,
     pub ledger: Ledger,
+    /// this step's collective events in charge order (cleared by the
+    /// trainer each step; the bucket planner's input).  Long-lived
+    /// `Comm`s driven OUTSIDE `Trainer::step` (benches, tests) should
+    /// clear this themselves or it grows with every charge.
+    pub events: Vec<CollEvent>,
 }
 
 impl Comm {
     pub fn new(net: NetworkModel) -> Comm {
-        Comm { net, ledger: Ledger::default() }
+        Comm::shared(Arc::new(net))
+    }
+
+    /// A ledger shard pricing against a shared network model (the
+    /// trainer's per-layer construction).
+    pub fn shared(net: Arc<NetworkModel>) -> Comm {
+        Comm { net, ledger: Ledger::default(), events: Vec::new() }
     }
 
     /// All-reduce (mean) of one equal-length buffer per worker.
@@ -110,6 +147,7 @@ impl Comm {
         self.ledger.floats += floats as u64;
         self.ledger.secs += self.net.allreduce_secs(floats * 4);
         self.ledger.collectives += 1;
+        self.events.push(CollEvent { kind: CollKind::Allreduce, bytes: floats * 4, rebuild: false });
     }
 
     /// Charge an all-gather where each worker contributes `floats`
@@ -118,6 +156,7 @@ impl Comm {
         self.ledger.floats += floats as u64;
         self.ledger.secs += self.net.allgather_secs(floats * 4);
         self.ledger.collectives += 1;
+        self.events.push(CollEvent { kind: CollKind::Allgather, bytes: floats * 4, rebuild: false });
     }
 
     /// Charge a reduce-scatter where each worker contributes a `floats`
@@ -126,6 +165,8 @@ impl Comm {
         self.ledger.floats += floats as u64;
         self.ledger.secs += self.net.reduce_scatter_secs(floats * 4);
         self.ledger.collectives += 1;
+        self.events
+            .push(CollEvent { kind: CollKind::ReduceScatter, bytes: floats * 4, rebuild: false });
     }
 
     /// Charge the sharded transport's parameter-rebuild all-gather
@@ -140,6 +181,7 @@ impl Comm {
         self.ledger.secs += secs;
         self.ledger.rebuild_secs += secs;
         self.ledger.collectives += 1;
+        self.events.push(CollEvent { kind: CollKind::Allgather, bytes: floats * 4, rebuild: true });
     }
 }
 
@@ -254,7 +296,9 @@ pub trait Transport: Send + Sync {
     /// Leaves the full mean gradient in `out` (the sim keeps one
     /// logical copy; ownership decides who *keeps* which slice), and
     /// charges every collective this transport runs — including the
-    /// parameter rebuild for sharded ownership.
+    /// parameter rebuild for sharded ownership.  `ws` is the layer's
+    /// workspace arena: all compressor scratch comes from it, so the
+    /// steady-state round allocates nothing.
     #[allow(clippy::too_many_arguments)]
     fn aggregate_layer(
         &self,
@@ -265,6 +309,7 @@ pub trait Transport: Send + Sync {
         level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        ws: &mut Workspace,
     );
 
     /// Peak per-worker resident decompress-buffer floats for a model
@@ -306,9 +351,10 @@ impl Transport for DenseReplicated {
         level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        ws: &mut Workspace,
     ) {
         match comp {
-            Some(c) => c.round(layer, grads, shape, level, comm, out),
+            Some(c) => c.round_into(layer, grads, shape, level, comm, out, ws),
             None => comm.allreduce_mean_into(grads, out),
         }
     }
@@ -372,10 +418,11 @@ impl Transport for ShardedOwnership {
         level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        ws: &mut Workspace,
     ) {
         match comp {
             Some(c) => {
-                c.round_sharded(layer, grads, shape, level, comm, out);
+                c.round_sharded_into(layer, grads, shape, level, comm, out, ws);
             }
             None => comm.reduce_scatter_mean_into(grads, out),
         }
@@ -513,16 +560,17 @@ mod tests {
         let a = vec![1.0f32; 48];
         let b = vec![3.0f32; 48];
         let grads: Vec<&[f32]> = vec![&a, &b, &a, &b];
+        let mut ws = Workspace::new();
 
         let dense = DenseReplicated;
         let mut dc = Comm::new(NetworkModel::new(4, 100.0, 50.0));
         let mut dout = vec![0.0f32; 48];
-        dense.aggregate_layer(None, 0, &grads, &[48], Level::High, &mut dc, &mut dout);
+        dense.aggregate_layer(None, 0, &grads, &[48], Level::High, &mut dc, &mut dout, &mut ws);
 
         let sharded = ShardedOwnership::new(4);
         let mut sc = Comm::new(NetworkModel::new(4, 100.0, 50.0));
         let mut sout = vec![0.0f32; 48];
-        sharded.aggregate_layer(None, 0, &grads, &[48], Level::High, &mut sc, &mut sout);
+        sharded.aggregate_layer(None, 0, &grads, &[48], Level::High, &mut sc, &mut sout, &mut ws);
 
         // identical mean, bit for bit (same element ops in same order)
         for (x, y) in dout.iter().zip(&sout) {
@@ -546,6 +594,7 @@ mod tests {
         let mut comm = Comm::new(NetworkModel::new(2, 100.0, 50.0));
         let mut out = vec![0.0f32; 32];
         let mut nc = NoCompression;
+        let mut ws = Workspace::new();
         sharded.aggregate_layer(
             Some(&mut nc),
             0,
@@ -554,10 +603,49 @@ mod tests {
             Level::High,
             &mut comm,
             &mut out,
+            &mut ws,
         );
         assert!(out.iter().all(|&v| (v - 2.0).abs() < 1e-6));
         // reduce-scatter of 32 + rebuild all-gather of the 16-float shard
         assert_eq!(comm.ledger.floats, 32 + 16);
         assert_eq!(comm.ledger.collectives, 2);
+    }
+
+    #[test]
+    fn charges_record_a_matching_event_stream() {
+        let mut comm = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        comm.charge_allreduce(10);
+        comm.charge_allgather(5);
+        comm.charge_reduce_scatter(8);
+        comm.charge_rebuild_allgather(3);
+        assert_eq!(
+            comm.events,
+            vec![
+                CollEvent { kind: CollKind::Allreduce, bytes: 40, rebuild: false },
+                CollEvent { kind: CollKind::Allgather, bytes: 20, rebuild: false },
+                CollEvent { kind: CollKind::ReduceScatter, bytes: 32, rebuild: false },
+                CollEvent { kind: CollKind::Allgather, bytes: 12, rebuild: true },
+            ]
+        );
+        // the ledger seconds are exactly the α–β price of the events
+        let priced: f64 = comm
+            .events
+            .iter()
+            .map(|e| comm.net.collective_secs(e.kind, e.bytes))
+            .sum();
+        assert!((priced - comm.ledger.secs).abs() < 1e-12 * comm.ledger.secs.max(1.0));
+        comm.events.clear();
+        assert_eq!(comm.ledger.collectives, 4); // ledger survives the clear
+    }
+
+    #[test]
+    fn shared_comms_price_against_one_model() {
+        let net = Arc::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut a = Comm::shared(net.clone());
+        let mut b = Comm::shared(net.clone());
+        a.charge_allreduce(100);
+        b.charge_allreduce(100);
+        assert_eq!(a.ledger.secs.to_bits(), b.ledger.secs.to_bits());
+        assert_eq!(Arc::strong_count(&net), 3);
     }
 }

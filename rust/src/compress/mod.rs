@@ -24,6 +24,7 @@ pub mod randomk;
 pub mod topk;
 
 use crate::collectives::Comm;
+use crate::util::workspace::Workspace;
 
 /// Compression level for one layer at one step.
 ///
@@ -41,14 +42,28 @@ pub enum Level {
 }
 
 /// One distributed compression method with its per-(layer, worker) state.
+///
+/// The required entry points are the `_into` pair: they take a
+/// [`Workspace`] arena and must draw ALL per-round scratch from it (or
+/// from owned state allocated on first touch), so a steady-state round
+/// performs zero heap allocations — the contract
+/// `tests/hotpath_alloc.rs` pins with a counting allocator.  The
+/// workspace-less [`round`]/[`round_sharded`] wrappers allocate a
+/// throwaway arena per call; they exist for tests and one-off callers,
+/// never for the hot loop.
+///
+/// [`round`]: DistCompressor::round
+/// [`round_sharded`]: DistCompressor::round_sharded
 pub trait DistCompressor: Send {
     fn name(&self) -> String;
 
     /// Run one synchronous round for `layer`: compress each worker's
     /// gradient, aggregate through `comm`, decompress into `out`
     /// (mean gradient, length = numel).  Must update error-feedback
-    /// state.  `shape` is the parameter's full shape.
-    fn round(
+    /// state.  `shape` is the parameter's full shape; `ws` is the
+    /// layer's scratch arena (see the trait docs).
+    #[allow(clippy::too_many_arguments)]
+    fn round_into(
         &mut self,
         layer: usize,
         grads: &[&[f32]],
@@ -56,12 +71,13 @@ pub trait DistCompressor: Send {
         level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        ws: &mut Workspace,
     );
 
     /// Shard-aware aggregation entry point for the sharded-ownership
-    /// transport: produce the same mean gradient in `out` as [`round`]
-    /// (a contract the transport parity tests pin), but charge the
-    /// collective the transport actually runs.  Dense-payload
+    /// transport: produce the same mean gradient in `out` as
+    /// [`round_into`] (a contract the transport parity tests pin), but
+    /// charge the collective the transport actually runs.  Dense-payload
     /// compressors (QSGD, signSGD, none) override this to
     /// reduce-scatter their compressed shards — the wire format is
     /// aligned with parameter coordinates, so shard owners can sum
@@ -73,7 +89,39 @@ pub trait DistCompressor: Send {
     /// extra cost of sharded ownership.  Returns `true` when a genuine
     /// reduce-scatter happened, `false` for the fallback.
     ///
-    /// [`round`]: DistCompressor::round
+    /// [`round_into`]: DistCompressor::round_into
+    #[allow(clippy::too_many_arguments)]
+    fn round_sharded_into(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> bool {
+        self.round_into(layer, grads, shape, level, comm, out, ws);
+        false
+    }
+
+    /// [`round_into`](DistCompressor::round_into) with a throwaway
+    /// arena (allocates; not for the hot loop).
+    fn round(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        let mut ws = Workspace::new();
+        self.round_into(layer, grads, shape, level, comm, out, &mut ws);
+    }
+
+    /// [`round_sharded_into`](DistCompressor::round_sharded_into) with a
+    /// throwaway arena (allocates; not for the hot loop).
     fn round_sharded(
         &mut self,
         layer: usize,
@@ -83,8 +131,8 @@ pub trait DistCompressor: Send {
         comm: &mut Comm,
         out: &mut [f32],
     ) -> bool {
-        self.round(layer, grads, shape, level, comm, out);
-        false
+        let mut ws = Workspace::new();
+        self.round_sharded_into(layer, grads, shape, level, comm, out, &mut ws)
     }
 
     /// Per-worker payload floats one round sends at `level` (planning /
@@ -103,7 +151,7 @@ impl DistCompressor for NoCompression {
         "none".into()
     }
 
-    fn round(
+    fn round_into(
         &mut self,
         _layer: usize,
         grads: &[&[f32]],
@@ -111,6 +159,7 @@ impl DistCompressor for NoCompression {
         _level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        _ws: &mut Workspace,
     ) {
         comm.allreduce_mean_into(grads, out);
     }
@@ -119,7 +168,7 @@ impl DistCompressor for NoCompression {
     /// transport reduce-scatters them directly (same mean, half the
     /// wire of the all-reduce — the rebuild all-gather is the other
     /// half).
-    fn round_sharded(
+    fn round_sharded_into(
         &mut self,
         _layer: usize,
         grads: &[&[f32]],
@@ -127,6 +176,7 @@ impl DistCompressor for NoCompression {
         _level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        _ws: &mut Workspace,
     ) -> bool {
         comm.reduce_scatter_mean_into(grads, out);
         true

@@ -30,6 +30,7 @@
 use super::{matrix_dims, Comm, DistCompressor, Level};
 use crate::tensor::linalg;
 use crate::util::rng::Rng;
+use crate::util::workspace::Workspace;
 use std::collections::HashMap;
 
 pub struct PowerSgd {
@@ -40,11 +41,6 @@ pub struct PowerSgd {
     pub rank_at_high: usize,
     seed: u64,
     state: HashMap<usize, LayerState>,
-    // scratch reused across rounds (no allocation on the hot path)
-    scratch_p: Vec<Vec<f32>>,
-    scratch_q: Vec<Vec<f32>>,
-    scratch_pmean: Vec<f32>,
-    scratch_qmean: Vec<f32>,
 }
 
 struct LayerState {
@@ -57,17 +53,7 @@ struct LayerState {
 
 impl PowerSgd {
     pub fn new(workers: usize, rank_at_low: usize, rank_at_high: usize, seed: u64) -> PowerSgd {
-        PowerSgd {
-            workers,
-            rank_at_low,
-            rank_at_high,
-            seed,
-            state: HashMap::new(),
-            scratch_p: vec![Vec::new(); workers],
-            scratch_q: vec![Vec::new(); workers],
-            scratch_pmean: Vec::new(),
-            scratch_qmean: Vec::new(),
-        }
+        PowerSgd { workers, rank_at_low, rank_at_high, seed, state: HashMap::new() }
     }
 
     fn rank_for(&self, level: Level, n: usize, k: usize) -> usize {
@@ -122,7 +108,7 @@ impl DistCompressor for PowerSgd {
         format!("powersgd(r_low={}, r_high={})", self.rank_at_low, self.rank_at_high)
     }
 
-    fn round(
+    fn round_into(
         &mut self,
         layer: usize,
         grads: &[&[f32]],
@@ -130,6 +116,7 @@ impl DistCompressor for PowerSgd {
         level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        ws: &mut Workspace,
     ) {
         let (n, k) = match matrix_dims(shape) {
             Some(d) => d,
@@ -143,12 +130,15 @@ impl DistCompressor for PowerSgd {
         let workers = grads.len();
         assert_eq!(workers, self.workers);
         let r = self.rank_for(level, n, k);
-        // detach the scratch buffers so `st` (a borrow of self.state) and
-        // the scratch can be used simultaneously
-        let mut sp = std::mem::take(&mut self.scratch_p);
-        let mut sq = std::mem::take(&mut self.scratch_q);
-        let mut pmean = std::mem::take(&mut self.scratch_pmean);
-        let mut qmean = std::mem::take(&mut self.scratch_qmean);
+        // arena layout: workers P factors, workers Q factors, P̄, Q̄ —
+        // disjoint from `st` (self.state), so no scratch-detach dance
+        let slots = ws.f32s.slots(2 * workers + 2);
+        let (sp, rest) = slots.split_at_mut(workers);
+        let (sq, means) = rest.split_at_mut(workers);
+        let (pm, qm) = means.split_at_mut(1);
+        let pmean = &mut pm[0];
+        let qmean = &mut qm[0];
+        let mut views = ws.views.take();
         let st = self.layer_state(layer, numel, k, r);
 
         // M_i = grad_i + e_i  (into the EF buffer, which becomes M_i)
@@ -165,38 +155,34 @@ impl DistCompressor for PowerSgd {
             linalg::gemm_nk_kr(&st.ef[w], &st.q, n, k, r, &mut sp[w]);
         }
         pmean.resize(n * r, 0.0);
-        {
-            let views: Vec<&[f32]> = sp[..workers].iter().map(|v| v.as_slice()).collect();
-            comm.allreduce_mean_into(&views, &mut pmean);
-        }
+        views.clear();
+        views.extend(sp[..workers].iter().map(|v| v.as_slice()));
+        comm.allreduce_mean_into(&views, pmean);
 
         // P̂ = orthonormalize(P̄)
-        linalg::orthonormalize_cols(&mut pmean, n, r, 1e-8);
+        linalg::orthonormalize_cols(pmean, n, r, 1e-8);
 
         // Q_i = M_iᵀ P̂ ; Q̄ = mean
         for w in 0..workers {
             sq[w].resize(k * r, 0.0);
-            linalg::gemm_tn_kr(&st.ef[w], &pmean, n, k, r, &mut sq[w]);
+            linalg::gemm_tn_kr(&st.ef[w], pmean, n, k, r, &mut sq[w]);
         }
         qmean.resize(k * r, 0.0);
-        {
-            let views: Vec<&[f32]> = sq[..workers].iter().map(|v| v.as_slice()).collect();
-            comm.allreduce_mean_into(&views, &mut qmean);
-        }
+        views.clear();
+        views.extend(sq[..workers].iter().map(|v| v.as_slice()));
+        comm.allreduce_mean_into(&views, qmean);
+        views.clear();
+        ws.views.put(views);
 
         // out = P̂ Q̄ᵀ ; e_i = M_i − out ; warm-start Q ← Q̄
-        linalg::gemm_nr_rk(&pmean, &qmean, n, k, r, out);
+        linalg::gemm_nr_rk(pmean, qmean, n, k, r, out);
         for w in 0..workers {
             let ef = &mut st.ef[w];
             for (e, o) in ef.iter_mut().zip(out.iter()) {
                 *e -= o;
             }
         }
-        st.q.copy_from_slice(&qmean);
-        self.scratch_p = sp;
-        self.scratch_q = sq;
-        self.scratch_pmean = pmean;
-        self.scratch_qmean = qmean;
+        st.q.copy_from_slice(qmean);
     }
 
     fn payload_floats(&self, shape: &[usize], level: Level) -> usize {

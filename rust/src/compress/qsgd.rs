@@ -10,6 +10,7 @@
 use super::{Comm, DistCompressor, Level};
 use crate::tensor::linalg;
 use crate::util::rng::Rng;
+use crate::util::workspace::Workspace;
 
 pub struct Qsgd {
     pub workers: usize,
@@ -36,20 +37,30 @@ impl Qsgd {
 
     /// The quantize-and-mean data path shared by both aggregation entry
     /// points (dense all-gather and sharded reduce-scatter): only the
-    /// ledger charge differs between transports.
-    fn aggregate_mean(&mut self, layer: usize, grads: &[&[f32]], bits: u32, out: &mut [f32]) {
+    /// ledger charge differs between transports.  The quantization
+    /// buffer comes from the workspace arena (fully overwritten per
+    /// worker, so a plain resize suffices).
+    fn aggregate_mean(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        bits: u32,
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) {
         self.step += 1;
         out.iter_mut().for_each(|o| *o = 0.0);
         let inv = 1.0 / grads.len() as f32;
-        let mut q = vec![0.0f32; out.len()];
+        let q = ws.f32s.slot(0);
+        q.resize(out.len(), 0.0);
         for (w, g) in grads.iter().enumerate() {
             let mut rng = Rng::new(
                 self.seed
                     ^ self.step.wrapping_mul(0xA24BAED4963EE407)
                     ^ ((layer as u64) << 32 | w as u64),
             );
-            Self::quantize(g, bits, &mut rng, &mut q);
-            linalg::axpy(inv, &q, out);
+            Self::quantize(g, bits, &mut rng, q);
+            linalg::axpy(inv, q, out);
         }
     }
 
@@ -76,7 +87,7 @@ impl DistCompressor for Qsgd {
         format!("qsgd({}b/{}b)", self.bits_at_low, self.bits_at_high)
     }
 
-    fn round(
+    fn round_into(
         &mut self,
         layer: usize,
         grads: &[&[f32]],
@@ -84,9 +95,10 @@ impl DistCompressor for Qsgd {
         level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        ws: &mut Workspace,
     ) {
         let bits = self.bits_for(level);
-        self.aggregate_mean(layer, grads, bits, out);
+        self.aggregate_mean(layer, grads, bits, out, ws);
         comm.charge_allgather(self.payload_floats(shape, level));
     }
 
@@ -94,7 +106,7 @@ impl DistCompressor for Qsgd {
     /// sharded transport reduce-scatters the compressed shards: same
     /// mean, identical quantization streams, the payload charged as one
     /// reduce-scatter instead of the dense all-gather.
-    fn round_sharded(
+    fn round_sharded_into(
         &mut self,
         layer: usize,
         grads: &[&[f32]],
@@ -102,9 +114,10 @@ impl DistCompressor for Qsgd {
         level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        ws: &mut Workspace,
     ) -> bool {
         let bits = self.bits_for(level);
-        self.aggregate_mean(layer, grads, bits, out);
+        self.aggregate_mean(layer, grads, bits, out, ws);
         comm.charge_reduce_scatter(self.payload_floats(shape, level));
         true
     }

@@ -13,6 +13,7 @@
 
 use super::{Comm, DistCompressor, Level};
 use crate::util::rng::Rng;
+use crate::util::workspace::Workspace;
 use std::collections::HashMap;
 
 pub struct RandomK {
@@ -52,7 +53,7 @@ impl DistCompressor for RandomK {
         )
     }
 
-    fn round(
+    fn round_into(
         &mut self,
         layer: usize,
         grads: &[&[f32]],
@@ -60,16 +61,21 @@ impl DistCompressor for RandomK {
         level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        ws: &mut Workspace,
     ) {
         let numel: usize = shape.iter().product();
         let workers = grads.len();
         let k = self.k_for(numel, level);
         self.step += 1;
 
-        // synchronized coordinate choice: partial Fisher-Yates over indices
+        // synchronized coordinate choice: partial Fisher-Yates over
+        // indices (the index buffer comes from the arena: rebuilt every
+        // round, allocated once)
         let mut rng =
             Rng::new(self.seed ^ self.step.wrapping_mul(0x9E3779B97F4A7C15) ^ (layer as u64) << 17);
-        let mut idx: Vec<usize> = (0..numel).collect();
+        let idx = ws.usizes.slot(0);
+        idx.clear();
+        idx.extend(0..numel);
         for i in 0..k {
             let j = i + rng.below(numel - i);
             idx.swap(i, j);

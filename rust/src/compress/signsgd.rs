@@ -10,6 +10,7 @@
 //! the scaled signs; EF keeps the residual.
 
 use super::{Comm, DistCompressor, Level};
+use crate::util::workspace::Workspace;
 use std::collections::HashMap;
 
 pub struct SignSgd {
@@ -55,7 +56,7 @@ impl DistCompressor for SignSgd {
         "signsgd(ef)".into()
     }
 
-    fn round(
+    fn round_into(
         &mut self,
         layer: usize,
         grads: &[&[f32]],
@@ -63,6 +64,7 @@ impl DistCompressor for SignSgd {
         _level: Level, // 1-bit always: no adaptivity knob (see module docs)
         comm: &mut Comm,
         out: &mut [f32],
+        _ws: &mut Workspace, // sign quantization is in-place in EF: no scratch
     ) {
         self.aggregate_mean(layer, grads, out);
         comm.charge_allgather(self.payload_floats(shape, Level::High));
@@ -72,7 +74,7 @@ impl DistCompressor for SignSgd {
     /// the sharded transport reduce-scatters the compressed shards:
     /// same mean and EF update, the payload charged as one
     /// reduce-scatter instead of the dense all-gather.
-    fn round_sharded(
+    fn round_sharded_into(
         &mut self,
         layer: usize,
         grads: &[&[f32]],
@@ -80,6 +82,7 @@ impl DistCompressor for SignSgd {
         _level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        _ws: &mut Workspace,
     ) -> bool {
         self.aggregate_mean(layer, grads, out);
         comm.charge_reduce_scatter(self.payload_floats(shape, Level::High));

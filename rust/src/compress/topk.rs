@@ -15,6 +15,7 @@
 //! cost (see `DistCompressor::round_sharded`).
 
 use super::{Comm, DistCompressor, Level};
+use crate::util::workspace::Workspace;
 use std::collections::HashMap;
 
 pub struct TopK {
@@ -25,20 +26,13 @@ pub struct TopK {
     pub frac_at_high: f32,
     /// per-(layer) per-worker error feedback
     ef: HashMap<usize, Vec<Vec<f32>>>,
-    mags: Vec<f32>,
 }
 
 impl TopK {
     pub fn new(workers: usize, frac_at_low: f32, frac_at_high: f32) -> TopK {
         assert!(frac_at_low > 0.0 && frac_at_low <= 1.0);
         assert!(frac_at_high > 0.0 && frac_at_high <= 1.0);
-        TopK {
-            workers,
-            frac_at_low,
-            frac_at_high,
-            ef: HashMap::new(),
-            mags: Vec::new(),
-        }
+        TopK { workers, frac_at_low, frac_at_high, ef: HashMap::new() }
     }
 
     fn frac_for(&self, level: Level) -> f32 {
@@ -58,11 +52,14 @@ impl TopK {
 
 /// |value| of the k-th largest magnitude (the keep threshold).
 /// `mags` is caller-provided scratch (no allocation on the hot path).
+/// `total_cmp` keeps the selection NaN-safe: a NaN gradient must not
+/// panic mid-round (it sorts as the largest magnitude, because
+/// `|NaN| = NaN` orders above every finite float in the total order).
 fn threshold(mags: &mut Vec<f32>, a: &[f32], k: usize) -> f32 {
     mags.clear();
     mags.extend(a.iter().map(|v| v.abs()));
     let idx = mags.len() - k;
-    let (_, t, _) = mags.select_nth_unstable_by(idx, |x, y| x.partial_cmp(y).unwrap());
+    let (_, t, _) = mags.select_nth_unstable_by(idx, f32::total_cmp);
     *t
 }
 
@@ -75,7 +72,7 @@ impl DistCompressor for TopK {
         )
     }
 
-    fn round(
+    fn round_into(
         &mut self,
         layer: usize,
         grads: &[&[f32]],
@@ -83,13 +80,14 @@ impl DistCompressor for TopK {
         level: Level,
         comm: &mut Comm,
         out: &mut [f32],
+        ws: &mut Workspace,
     ) {
         let numel: usize = shape.iter().product();
         let workers = grads.len();
         assert_eq!(workers, self.workers);
         let k = self.k_for(numel, level);
 
-        let mut mags = std::mem::take(&mut self.mags);
+        let mags = ws.f32s.slot(0);
         let ef = self
             .ef
             .entry(layer)
@@ -104,7 +102,7 @@ impl DistCompressor for TopK {
             for (e, g) in a.iter_mut().zip(grads[w]) {
                 *e += g;
             }
-            let t = threshold(&mut mags, a, k);
+            let t = threshold(mags, a, k);
             // keep top-k (ties: keep until k reached, deterministic order)
             let mut kept = 0usize;
             for (i, v) in a.iter_mut().enumerate() {
@@ -119,7 +117,6 @@ impl DistCompressor for TopK {
             kept_total += kept;
         }
         let _ = kept_total;
-        self.mags = mags;
         // payload: k (value, index) pairs per worker, all-gathered
         comm.charge_allgather(2 * k);
     }
@@ -238,6 +235,24 @@ mod tests {
         assert_eq!(od, os);
         assert_eq!(cd.ledger.floats, cs.ledger.floats);
         assert_eq!(cd.ledger.secs, cs.ledger.secs);
+    }
+
+    #[test]
+    fn nan_gradient_does_not_panic() {
+        // the old comparator (`partial_cmp(..).unwrap()`) panicked on the
+        // first NaN; `total_cmp` orders NaN deterministically above every
+        // finite magnitude, so the round completes and the NaN coordinate
+        // is simply never selected (NaN >= t is false) — it parks in EF
+        // instead of corrupting the aggregated mean
+        let g = vec![vec![0.1f32, f32::NAN, 3.0, 0.01, -0.5, 2.0, -1.0, 0.3]];
+        let mut tk = TopK::new(1, 0.99, 0.375); // k = 3
+        let mut comm = testutil::comm(1);
+        let out = round(&mut tk, &g, 8, Level::High, &mut comm);
+        assert!(out.iter().all(|v| v.is_finite()), "{out:?}");
+        // the two largest finite magnitudes still made it through
+        assert!(out[2] != 0.0 && out[5] != 0.0);
+        // the NaN stays parked in error feedback
+        assert!(tk.ef.get(&0).unwrap()[0][1].is_nan());
     }
 
     #[test]

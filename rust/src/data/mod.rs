@@ -13,7 +13,8 @@ use crate::util::rng::Rng;
 
 /// One classification / LM batch in the AOT calling convention:
 /// `x` is f32 (images, flattened NHWC) or i32 (tokens), `y` is i32.
-#[derive(Clone, Debug)]
+/// `Default` gives an empty reusable batch for the `_into` gather path.
+#[derive(Clone, Debug, Default)]
 pub struct Batch {
     pub xf: Vec<f32>,
     pub xi: Vec<i32>,
@@ -84,36 +85,48 @@ impl Dataset {
 
     /// Gather a train batch for the given example indices.
     pub fn train_batch(&self, idx: &[usize]) -> Batch {
-        self.gather(idx, false)
+        let mut b = Batch::default();
+        self.gather_into(idx, false, &mut b);
+        b
     }
 
     /// Gather a test batch for the given example indices.
     pub fn test_batch(&self, idx: &[usize]) -> Batch {
-        self.gather(idx, true)
+        let mut b = Batch::default();
+        self.gather_into(idx, true, &mut b);
+        b
     }
 
-    fn gather(&self, idx: &[usize], test: bool) -> Batch {
+    /// Gather a train batch into a reusable buffer (the hot-loop path:
+    /// capacities converge after the first step, then gathering is
+    /// allocation-free).
+    pub fn train_batch_into(&self, idx: &[usize], out: &mut Batch) {
+        self.gather_into(idx, false, out);
+    }
+
+    fn gather_into(&self, idx: &[usize], test: bool, out: &mut Batch) {
+        out.xf.clear();
+        out.xi.clear();
+        out.y.clear();
         match &self.kind {
             Kind::Images { x, y, tx, ty, dim } => {
                 let (xs, ys) = if test { (tx, ty) } else { (x, y) };
-                let mut xf = Vec::with_capacity(idx.len() * dim);
-                let mut yy = Vec::with_capacity(idx.len());
+                out.xf.reserve(idx.len() * dim);
+                out.y.reserve(idx.len());
                 for &i in idx {
-                    xf.extend_from_slice(&xs[i * dim..(i + 1) * dim]);
-                    yy.push(ys[i]);
+                    out.xf.extend_from_slice(&xs[i * dim..(i + 1) * dim]);
+                    out.y.push(ys[i]);
                 }
-                Batch { xf, xi: Vec::new(), y: yy }
             }
             Kind::Text { tokens, test_tokens, seq } => {
                 let ts = if test { test_tokens } else { tokens };
-                let mut xi = Vec::with_capacity(idx.len() * seq);
-                let mut yy = Vec::with_capacity(idx.len() * seq);
+                out.xi.reserve(idx.len() * seq);
+                out.y.reserve(idx.len() * seq);
                 for &i in idx {
                     let start = i * (seq + 1);
-                    xi.extend_from_slice(&ts[start..start + seq]);
-                    yy.extend_from_slice(&ts[start + 1..start + seq + 1]);
+                    out.xi.extend_from_slice(&ts[start..start + seq]);
+                    out.y.extend_from_slice(&ts[start + 1..start + seq + 1]);
                 }
-                Batch { xf: Vec::new(), xi, y: yy }
             }
         }
     }
@@ -142,12 +155,25 @@ impl EpochSampler {
         workers: usize,
         batch: usize,
     ) -> Option<Vec<usize>> {
+        self.shard_slice(step, worker, workers, batch).map(|s| s.to_vec())
+    }
+
+    /// Borrowed variant of [`EpochSampler::shard`] for the hot loop: the
+    /// shard is a contiguous run of the shuffled order, so no copy (and
+    /// no allocation) is needed at all.
+    pub fn shard_slice(
+        &self,
+        step: usize,
+        worker: usize,
+        workers: usize,
+        batch: usize,
+    ) -> Option<&[usize]> {
         let global = workers * batch;
         let start = step * global + worker * batch;
         if start + batch > self.order.len() {
             return None;
         }
-        Some(self.order[start..start + batch].to_vec())
+        Some(&self.order[start..start + batch])
     }
 
     pub fn steps(&self, workers: usize, batch: usize) -> usize {
@@ -194,6 +220,27 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn batch_into_reuses_buffers_and_matches_fresh_gather() {
+        let d = Dataset::images("c10", 10, 48, 64, 32, 1.0, 1.0, 7);
+        let fresh = d.train_batch(&[1, 2, 3]);
+        let mut reused = Batch::default();
+        d.train_batch_into(&[1, 2, 3], &mut reused);
+        assert_eq!(fresh.xf, reused.xf);
+        assert_eq!(fresh.y, reused.y);
+        let cap = reused.xf.capacity();
+        d.train_batch_into(&[4, 5, 6], &mut reused);
+        assert_eq!(reused.xf.capacity(), cap, "gather must reuse capacity");
+        assert_eq!(reused.y.len(), 3);
+    }
+
+    #[test]
+    fn shard_slice_matches_owned_shard() {
+        let s = EpochSampler::new(64, 0, 9);
+        assert_eq!(s.shard(1, 2, 4, 4).unwrap(), s.shard_slice(1, 2, 4, 4).unwrap());
+        assert!(s.shard_slice(1000, 0, 4, 4).is_none());
     }
 
     #[test]

@@ -158,11 +158,9 @@ pub fn ablate_overlap(h: &mut Harness) -> Result<()> {
 fn topk_support(x: &[f32], k: usize) -> Vec<u32> {
     let mut idx: Vec<u32> = (0..x.len() as u32).collect();
     let kth = x.len() - k.min(x.len());
+    // total_cmp: NaN-safe (a NaN gradient sorts as largest, no panic)
     idx.select_nth_unstable_by(kth, |&a, &b| {
-        x[a as usize]
-            .abs()
-            .partial_cmp(&x[b as usize].abs())
-            .unwrap()
+        x[a as usize].abs().total_cmp(&x[b as usize].abs())
     });
     let mut top: Vec<u32> = idx[kth..].to_vec();
     top.sort_unstable();

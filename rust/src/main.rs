@@ -20,7 +20,8 @@ accordion — Adaptive Gradient Communication via Critical Learning Regime Ident
 
 USAGE:
   accordion train [--config FILE] [--set key=value ...] [--threads N]
-                  [--transport dense|sharded] [--no-overlap] [--out DIR] [--save PATH]
+                  [--transport dense|sharded] [--bucket-kb N] [--no-overlap]
+                  [--out DIR] [--save PATH]
   accordion eval  --model NAME --ckpt PATH [--set key=value ...]
   accordion repro --exp <id> [--fast] [--set key=value ...] [--out DIR]
   accordion list
@@ -40,6 +41,13 @@ USAGE:
   --no-overlap  charge collectives serially after backprop instead of
                 overlapping layer l's collective with layer l-1's
                 backprop (the simulated-time ablation knob)
+  --bucket-kb N layer-coalesced collectives (TOML `net.bucket_kb`):
+                consecutive same-kind payloads merge into buckets of at
+                most N KiB before the alpha-beta clock prices them — one
+                latency charge per bucket instead of one per layer.
+                0 (default) = off: per-layer charging, bit-identical to
+                the pre-bucketing clock.  Never changes parameters,
+                losses, or the Data-Sent floats column.
 
   The time column is a deterministic simulated clock: a per-model
   compute cost model (--set time.model=flops|measured, --set
@@ -51,7 +59,7 @@ EXPERIMENT IDS:
   table1 table2 table3 table4 table5 table6
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig18
   ablate-eta ablate-interval ablate-selector ablate-network
-  ablate-overlap ablate-transport
+  ablate-overlap ablate-transport ablate-bucket
 
 EXAMPLES:
   accordion repro --exp table1 --fast
@@ -99,6 +107,9 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(tr) = args.opt("transport") {
         cfg.transport = TransportCfg::parse(tr)?;
+    }
+    if let Some(kb) = args.usize_opt("bucket-kb") {
+        cfg.bucket_kb = kb;
     }
     if args.flag("no-overlap") {
         cfg.overlap = false;

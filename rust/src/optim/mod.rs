@@ -35,6 +35,17 @@ impl Sgd {
         self.step_owned(params, grads, lr, &DenseReplicated);
     }
 
+    /// Pre-size the momentum buffers for these parameters so the first
+    /// hot-loop step performs no allocation (the lazy path in
+    /// [`Sgd::step_owned`] still covers direct users).
+    pub fn ensure_state(&mut self, params: &[Tensor]) {
+        if self.velocity.len() != params.len()
+            || self.velocity.iter().zip(params).any(|(v, p)| v.len() != p.numel())
+        {
+            self.velocity = params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        }
+    }
+
     /// One update routed through the transport's ownership contract:
     /// for each of `transport.owners()` shard owners, step exactly the
     /// parameter range that owner holds the aggregated gradient for.
@@ -51,9 +62,7 @@ impl Sgd {
         transport: &dyn Transport,
     ) {
         assert_eq!(params.len(), grads.len());
-        if self.velocity.len() != params.len() {
-            self.velocity = params.iter().map(|p| vec![0.0; p.numel()]).collect();
-        }
+        self.ensure_state(params);
         for (l, (p, g)) in params.iter_mut().zip(grads).enumerate() {
             let v = &mut self.velocity[l];
             for w in 0..transport.owners() {

@@ -26,6 +26,7 @@ pub mod pjrt;
 use crate::data::Batch;
 use crate::models::ModelMeta;
 use crate::tensor::Tensor;
+use crate::util::workspace::Workspace;
 use anyhow::Result;
 
 #[cfg(not(feature = "pjrt"))]
@@ -54,6 +55,30 @@ pub trait Backend: Send + Sync {
         params: &[Tensor],
         batch: &Batch,
     ) -> Result<(f32, Vec<Tensor>)>;
+
+    /// Hot-loop variant of [`Backend::train_step`]: write the gradients
+    /// into pre-shaped `grads` tensors, drawing all forward/backward
+    /// scratch from `ws`, and return the loss.  Backends that implement
+    /// this natively (the sim backend) perform zero steady-state heap
+    /// allocations; the default falls back to [`Backend::train_step`]
+    /// and copies, which is correct for backends whose execution
+    /// allocates anyway (PJRT host buffers).
+    fn train_step_into(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        batch: &Batch,
+        grads: &mut [Tensor],
+        ws: &mut Workspace,
+    ) -> Result<f32> {
+        let _ = ws;
+        let (loss, g) = self.train_step(rt, params, batch)?;
+        assert_eq!(g.len(), grads.len(), "train_step_into: gradient arity mismatch");
+        for (dst, src) in grads.iter_mut().zip(&g) {
+            dst.data.copy_from_slice(&src.data);
+        }
+        Ok(loss)
+    }
 
     /// (mean loss, correct-prediction count).
     fn eval_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, f32)>;
@@ -162,6 +187,19 @@ impl ModelPrograms {
         batch: &Batch,
     ) -> Result<(f32, Vec<Tensor>)> {
         self.backend.train_step(rt, params, batch)
+    }
+
+    /// See [`Backend::train_step_into`] (the trainer's zero-allocation
+    /// hot-loop entry point).
+    pub fn train_step_into(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        batch: &Batch,
+        grads: &mut [Tensor],
+        ws: &mut Workspace,
+    ) -> Result<f32> {
+        self.backend.train_step_into(rt, params, batch, grads, ws)
     }
 
     /// eval_step(params, x, y) -> (mean loss, correct count)

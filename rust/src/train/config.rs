@@ -117,6 +117,13 @@ pub struct TrainConfig {
     /// comm/compute overlap in the simulated clock; `--no-overlap` (or
     /// `net.overlap = false`) reproduces the old serialized charge
     pub overlap: bool,
+    /// layer-coalesced collectives: consecutive same-kind payloads merge
+    /// into buckets of at most this many KiB before the α–β clock prices
+    /// them — one latency charge per bucket (`--bucket-kb`, TOML
+    /// `net.bucket_kb`).  0 (default) disables bucketing entirely and
+    /// keeps the per-layer charge bit-identical to the pre-bucketing
+    /// clock.  Never changes parameters, losses, or the floats ledger.
+    pub bucket_kb: usize,
     // simulated compute clock (cluster::simtime)
     pub time_model: TimeModelCfg,
     /// modeled device throughput for the flops cost model, GFLOP/s
@@ -154,6 +161,7 @@ impl Default for TrainConfig {
             bandwidth_mbps: 100.0,
             latency_us: 50.0,
             overlap: true,
+            bucket_kb: 0,
             time_model: TimeModelCfg::Flops,
             gflops: crate::cluster::simtime::DEFAULT_GFLOPS,
         }
@@ -255,6 +263,7 @@ impl TrainConfig {
             bandwidth_mbps: t.f64_or("net.bandwidth_mbps", d.bandwidth_mbps),
             latency_us: t.f64_or("net.latency_us", d.latency_us),
             overlap: t.bool_or("net.overlap", d.overlap),
+            bucket_kb: t.usize_or("net.bucket_kb", d.bucket_kb),
             time_model: match t.str_or("time.model", "flops").as_str() {
                 "flops" => TimeModelCfg::Flops,
                 "measured" => TimeModelCfg::Measured,
@@ -432,6 +441,15 @@ gflops = 2.5
     }
 
     #[test]
+    fn bucket_kb_parses_with_off_default() {
+        assert_eq!(TrainConfig::default().bucket_kb, 0);
+        let t = Table::parse("net.bucket_kb = 64").unwrap();
+        assert_eq!(TrainConfig::from_table(&t).unwrap().bucket_kb, 64);
+        let t2 = Table::parse("[net]\nbucket_kb = 8").unwrap();
+        assert_eq!(TrainConfig::from_table(&t2).unwrap().bucket_kb, 8);
+    }
+
+    #[test]
     fn transport_key_parses_validates_and_builds() {
         assert_eq!(TrainConfig::default().transport, TransportCfg::Dense);
 
@@ -448,9 +466,11 @@ gflops = 2.5
         let solo = Table::parse("transport = \"sharded\"\nworkers = 1").unwrap();
         let err = TrainConfig::from_table(&solo).unwrap_err();
         assert!(err.to_string().contains("workers > 1"), "{err}");
-        let mut c1 = TrainConfig::default();
-        c1.transport = TransportCfg::Sharded;
-        c1.workers = 1;
+        let mut c1 = TrainConfig {
+            transport: TransportCfg::Sharded,
+            workers: 1,
+            ..TrainConfig::default()
+        };
         assert!(c1.validate().is_err());
         c1.workers = 4;
         assert!(c1.validate().is_ok());
@@ -469,8 +489,10 @@ gflops = 2.5
         let c = TrainConfig::default();
         assert!(c.build_compressor().name().starts_with("powersgd"));
         assert!(c.build_controller(5).name().starts_with("accordion"));
-        let mut c2 = TrainConfig::default();
-        c2.controller = ControllerCfg::Smith { factor: 5, cap: 10 };
+        let c2 = TrainConfig {
+            controller: ControllerCfg::Smith { factor: 5, cap: 10 },
+            ..TrainConfig::default()
+        };
         assert!(c2.build_controller(5).name().starts_with("smith"));
     }
 }

@@ -18,29 +18,41 @@
 //!      (DESIGN.md §3).  Sharded ownership then all-gathers the stepped
 //!      shards (charged after the optimizer in the overlap scheduler).
 //!
-//! `cfg.threads > 1` turns on the parallel execution engine: phase 1
-//! fans the workers' gradient computations out across scoped OS threads,
-//! and phase 2 fans the per-layer compressor rounds out the same way.
-//! Determinism is preserved by construction —
+//! # Zero-allocation steady state
+//!
+//! The loop is structured as a long-lived [`Trainer`]: every buffer the
+//! hot path touches — worker gradients, data batches, compressor
+//! scratch ([`Workspace`] arenas, one per layer and one per worker), sim
+//! backend activations, optimizer state, the parallel fan-out itself —
+//! is allocated at construction or on first touch, after which a global
+//! step performs ZERO heap allocations at any `--threads` count
+//! (`tests/hotpath_alloc.rs` pins this with a counting allocator, for
+//! both transports).  `cfg.threads > 1` runs the two fan-out phases on a
+//! persistent [`WorkerPool`] (no per-step thread spawn); determinism is
+//! preserved by construction —
 //!   * every (worker, micro-step) loss/time lands in a fixed cell and is
 //!     folded on the main thread in the sequential `(a, w)` order;
-//!   * each layer owns its own compressor instance (so per-layer RNG /
-//!     error-feedback streams are identical however layers are scheduled
-//!     across threads) and its own communication ledger shard, folded in
-//!     layer order;
+//!   * each layer owns its own compressor instance, workspace, and
+//!     communication ledger shard, folded in layer order;
 //!   * worker gradient accumulation happens thread-locally in micro-step
 //!     order, identical to the sequential loop;
 //! so an N-thread run is bit-identical to the `threads = 1` sequential
 //! oracle (pinned by `rust/tests/parallel_parity.rs`) — INCLUDING the
 //! time column.  `EpochStats.secs` is charged entirely from the
-//! deterministic simulated clock (`cluster::simtime`): a per-model
-//! compute cost model (flops-derived by default, or calibrated once at
-//! `threads = 1` and cached in the registry) plus the overlap-aware α–β
-//! scheduler that runs layer `l`'s collective concurrently with layer
-//! `l-1`'s backprop.  Host wall time is still measured, but only into
-//! the `wall_secs` debug column; nothing the tables quote depends on
-//! host threading or load.  `--no-overlap` reproduces the old
-//! serialized charge (compute + Σ comm — the ledger view).
+//! deterministic simulated clock (`cluster::simtime`); host wall time
+//! only lands in the `wall_secs` debug column.
+//!
+//! # Bucketed collectives
+//!
+//! With `net.bucket_kb > 0` (`--bucket-kb`), consecutive same-kind
+//! collectives coalesce into ≤ bucket_kb·KiB buckets before the α–β
+//! clock prices them — one latency charge per bucket instead of one per
+//! layer (`cluster::bucket`), with the overlap scheduler issuing each
+//! bucket when its last-emitted member layer is ready
+//! (`simtime::step_times_bucketed`).  Parameters, losses, and the
+//! floats ledger are untouched by construction (bucketing repacks
+//! charges, not data), and `bucket_kb = 0` bypasses the planner so the
+//! legacy clock stays bit-identical.
 //!
 //! Per epoch: a held-out evaluation, the Δ-norm observation for the
 //! controller (Accordion's detector input — accumulated across the
@@ -49,19 +61,23 @@
 pub mod checkpoint;
 pub mod config;
 
+use crate::cluster::bucket::Bucketizer;
 use crate::cluster::network::NetworkModel;
-use crate::cluster::simtime::{self, SimClock};
+use crate::cluster::simtime::{self, CostModel, SimClock};
 use crate::collectives::{Comm, Transport};
 use crate::compress::{DistCompressor, Level};
-use crate::coordinator::{Decision, EpochObs};
+use crate::coordinator::{Controller, Decision, EpochObs};
 use crate::data::{Batch, Dataset, EpochSampler};
 use crate::metrics::{EpochStats, RunLog};
 use crate::models::{ModelMeta, Registry};
 use crate::optim::{LrSchedule, Sgd};
 use crate::runtime::{ModelPrograms, Runtime};
 use crate::tensor::Tensor;
+use crate::util::pool::{SendPtr, WorkerPool};
+use crate::util::workspace::Workspace;
 use anyhow::{bail, Result};
 use config::{MethodCfg, TimeModelCfg, TrainConfig};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Build the dataset a model variant trains on (classes/dims from the
@@ -99,231 +115,520 @@ pub fn run(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<RunLog> {
 /// Like [`run`] but also returns the final parameters (for
 /// checkpointing).
 pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunLog, Vec<Tensor>)> {
-    cfg.validate()?;
-    let meta = reg.model(&cfg.model)?.clone();
-    let progs = ModelPrograms::new(&meta)?;
-    let mut params = reg.load_init(&meta)?;
-    let n_layers = meta.n_layers();
-    let ds = dataset_for(cfg, reg)?;
-    let threads = cfg.threads.max(1);
+    let mut trainer = Trainer::new(cfg, reg, rt)?;
+    for _ in 0..cfg.epochs {
+        trainer.run_epoch()?;
+    }
+    Ok(trainer.finish())
+}
 
-    // One compressor instance per layer: per-layer error-feedback and
-    // RNG streams are then identical whichever thread runs the layer's
-    // round, which is what makes N-thread execution bit-reproducible.
-    let mut compressors: Vec<Box<dyn DistCompressor>> =
-        (0..n_layers).map(|_| cfg.build_compressor()).collect();
-    let mut controller = cfg.build_controller(n_layers);
-    let window = controller.detection_interval().max(1);
-    let mut opt = Sgd::new(cfg.momentum, cfg.nesterov, cfg.weight_decay);
-    let global_batch = cfg.workers * meta.batch;
-    let sched = LrSchedule {
-        base: cfg.base_lr,
-        scale: global_batch as f32 / cfg.batch_ref as f32,
-        warmup_epochs: cfg.warmup_epochs,
-        decay_epochs: cfg.decay_epochs.clone(),
-        decay_factor: cfg.decay_factor,
-    };
-    let net = NetworkModel::new(cfg.workers, cfg.bandwidth_mbps, cfg.latency_us);
-    // the aggregation transport: collective shapes, ledger charges, and
-    // post-aggregation shard ownership (stateless, shared across layers)
-    let transport = cfg.build_transport();
-    // per-layer communication ledger shards, folded in layer order
-    let mut comms: Vec<Comm> = (0..n_layers).map(|_| Comm::new(net.clone())).collect();
-    let mut clock = SimClock::default();
-    // the simulated compute clock: flops-derived (deterministic across
-    // processes) or measured once per model per process at threads=1
-    let cost = match cfg.time_model {
-        TimeModelCfg::Flops => simtime::CostModel::from_meta(&meta, cfg.gflops),
-        TimeModelCfg::Measured => reg.cached_cost(&meta.name, || {
-            let n = meta.batch.min(ds.train_n).max(1);
-            let idx: Vec<usize> = (0..n).collect();
-            let batch = ds.train_batch(&idx);
-            let secs = simtime::measure_step_secs(&progs, rt, &params, &batch)?;
-            // layer_flops counts a FULL meta.batch step; if the train set
-            // is smaller than the batch the probe timed fewer rows, so
-            // scale the measurement up to its full-batch equivalent
-            let secs_full = secs * meta.batch.max(1) as f64 / n as f64;
-            Ok(simtime::CostModel::from_measured(&meta, secs_full))
-        })?,
-    };
+// batch-switch LR ramp span: the paper scales the LR linearly with the
+// batch (Goyal et al.) and warms it up rather than stepping instantly —
+// the multiplier ramps over this many epochs after each increase.
+const RAMP_EPOCHS: usize = 3;
 
-    // scratch (allocated once; the hot loop is allocation-free)
-    let mut worker_grads: Vec<Vec<Tensor>> =
-        vec![params.iter().map(|p| Tensor::zeros(&p.shape)).collect(); cfg.workers];
-    let mut agg: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
-    // Δ accumulators: `edelta` is this epoch's mean-gradient sum (the
-    // per-epoch grad-norm metric); `delta` accumulates `edelta` across
-    // the controller's detection window (the detector's Alg.-1 input)
-    let mut delta: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
-    let mut edelta: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
-    // per-(worker, micro-step) loss/time cells, folded in sequential order
-    let mut cell_loss: Vec<f32> = Vec::new();
-    let mut cell_time: Vec<f64> = Vec::new();
-    // per-layer ledger snapshot + this step's collective charges, the
-    // overlap scheduler's input (per-layer shards make the deltas exact
-    // and thread-count independent); rebuild charges are snapshotted
-    // separately so the scheduler can place them after the optimizer
-    let mut comm_before: Vec<f64> = vec![0.0; n_layers];
-    let mut rebuild_before: Vec<f64> = vec![0.0; n_layers];
-    let mut step_comm: Vec<f64> = vec![0.0; n_layers];
+/// Per-worker gradient-computation scratch: the data batch, one
+/// micro-step's gradients, and the backend's forward/backward arena —
+/// all reused every micro-step.
+struct WorkerScratch {
+    batch: Batch,
+    grads: Vec<Tensor>,
+    ws: Workspace,
+}
 
-    let mut log = RunLog {
-        label: cfg.label.clone(),
-        transport: transport.name().to_string(),
-        ..Default::default()
-    };
+/// The training loop as a long-lived value: construct once, then
+/// `begin_epoch` / `step` / `end_epoch` (or [`Trainer::run_epoch`]).
+/// Exposing the step granularity is what lets the counting-allocator
+/// suite and `benches/hotpath.rs` measure exactly one hot-loop step.
+pub struct Trainer<'a> {
+    cfg: &'a TrainConfig,
+    rt: &'a Runtime,
+    meta: ModelMeta,
+    progs: ModelPrograms,
+    ds: Dataset,
+    params: Vec<Tensor>,
+    n_layers: usize,
+    threads: usize,
+    compressors: Vec<Box<dyn DistCompressor>>,
+    controller: Box<dyn Controller>,
+    window: usize,
+    opt: Sgd,
+    sched: LrSchedule,
+    net: Arc<NetworkModel>,
+    transport: Box<dyn Transport>,
+    comms: Vec<Comm>,
+    clock: SimClock,
+    cost: CostModel,
+    /// Some(_) iff `cfg.bucket_kb > 0`; None keeps the per-layer clock
+    /// charge bit-identical to the pre-bucketing trainer
+    bucketizer: Option<Bucketizer>,
+    pool: WorkerPool,
+    // ---- hot-loop buffers (allocated once) ----
+    worker_grads: Vec<Vec<Tensor>>,
+    wscratch: Vec<WorkerScratch>,
+    layer_ws: Vec<Workspace>,
+    agg: Vec<Tensor>,
+    delta: Vec<Tensor>,
+    edelta: Vec<Tensor>,
+    cell_loss: Vec<f32>,
+    cell_time: Vec<f64>,
+    comm_before: Vec<f64>,
+    rebuild_before: Vec<f64>,
+    step_comm: Vec<f64>,
+    task_errs: Vec<Option<anyhow::Error>>,
+    // ---- run / epoch state ----
+    log: RunLog,
+    epoch: usize,
+    ramp_from: usize,
+    ramp_at: usize,
+    last_mult: usize,
+    sampler: Option<EpochSampler>,
+    decision: Decision,
+    batch_mult: usize,
+    lr_curr: f32,
+    lr_next: f32,
+    lr_eff: f32,
+    global_steps: usize,
+    train_loss_sum: f64,
+    train_loss_n: usize,
+}
 
-    // batch-switch LR ramp state: (previous multiplier, switch epoch).
-    // The paper scales the LR linearly with the batch (Goyal et al.) and
-    // warms it up rather than stepping instantly — we ramp the multiplier
-    // over RAMP_EPOCHS after each increase.
-    const RAMP_EPOCHS: usize = 3;
-    let mut ramp_from = 1usize;
-    let mut ramp_at = 0usize;
-    let mut last_mult = 1usize;
+impl<'a> Trainer<'a> {
+    pub fn new(cfg: &'a TrainConfig, reg: &Registry, rt: &'a Runtime) -> Result<Trainer<'a>> {
+        cfg.validate()?;
+        let meta = reg.model(&cfg.model)?.clone();
+        let progs = ModelPrograms::new(&meta)?;
+        let params = reg.load_init(&meta)?;
+        let n_layers = meta.n_layers();
+        let ds = dataset_for(cfg, reg)?;
+        let threads = cfg.threads.max(1);
 
-    for epoch in 0..cfg.epochs {
-        let lr_curr = sched.lr(epoch);
-        let lr_next = sched.lr(epoch + 1);
-        let decision = controller.begin_epoch(epoch, lr_curr, lr_next);
+        // One compressor instance per layer: per-layer error-feedback and
+        // RNG streams are then identical whichever thread runs the layer's
+        // round, which is what makes N-thread execution bit-reproducible.
+        let compressors: Vec<Box<dyn DistCompressor>> =
+            (0..n_layers).map(|_| cfg.build_compressor()).collect();
+        let controller = cfg.build_controller(n_layers);
+        let window = controller.detection_interval().max(1);
+        let mut opt = Sgd::new(cfg.momentum, cfg.nesterov, cfg.weight_decay);
+        opt.ensure_state(&params);
+        let global_batch = cfg.workers * meta.batch;
+        let sched = LrSchedule {
+            base: cfg.base_lr,
+            scale: global_batch as f32 / cfg.batch_ref as f32,
+            warmup_epochs: cfg.warmup_epochs,
+            decay_epochs: cfg.decay_epochs.clone(),
+            decay_factor: cfg.decay_factor,
+        };
+        // ONE network model shared by every per-layer ledger shard
+        let net = Arc::new(NetworkModel::new(cfg.workers, cfg.bandwidth_mbps, cfg.latency_us));
+        // the aggregation transport: collective shapes, ledger charges, and
+        // post-aggregation shard ownership (stateless, shared across layers)
+        let transport = cfg.build_transport();
+        // per-layer communication ledger shards, folded in layer order
+        let comms: Vec<Comm> = (0..n_layers).map(|_| Comm::shared(net.clone())).collect();
+        // the simulated compute clock: flops-derived (deterministic across
+        // processes) or measured once per model per process at threads=1
+        let cost = match cfg.time_model {
+            TimeModelCfg::Flops => simtime::CostModel::from_meta(&meta, cfg.gflops),
+            TimeModelCfg::Measured => reg.cached_cost(&meta.name, || {
+                let n = meta.batch.min(ds.train_n).max(1);
+                let idx: Vec<usize> = (0..n).collect();
+                let batch = ds.train_batch(&idx);
+                let secs = simtime::measure_step_secs(&progs, rt, &params, &batch)?;
+                // layer_flops counts a FULL meta.batch step; if the train set
+                // is smaller than the batch the probe timed fewer rows, so
+                // scale the measurement up to its full-batch equivalent
+                let secs_full = secs * meta.batch.max(1) as f64 / n as f64;
+                Ok(simtime::CostModel::from_measured(&meta, secs_full))
+            })?,
+        };
+        let bucketizer =
+            if cfg.bucket_kb > 0 { Some(Bucketizer::new(cfg.bucket_kb)) } else { None };
+
+        // scratch (allocated once; the steady-state hot loop is
+        // allocation-free — see the module docs)
+        let worker_grads: Vec<Vec<Tensor>> =
+            vec![params.iter().map(|p| Tensor::zeros(&p.shape)).collect(); cfg.workers];
+        let wscratch: Vec<WorkerScratch> = (0..cfg.workers)
+            .map(|_| WorkerScratch {
+                batch: Batch::default(),
+                grads: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+                ws: Workspace::new(),
+            })
+            .collect();
+        let layer_ws: Vec<Workspace> = (0..n_layers).map(|_| Workspace::new()).collect();
+        let agg: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        // Δ accumulators: `edelta` is this epoch's mean-gradient sum (the
+        // per-epoch grad-norm metric); `delta` accumulates `edelta` across
+        // the controller's detection window (the detector's Alg.-1 input)
+        let delta: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let edelta: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+
+        let log = RunLog {
+            label: cfg.label.clone(),
+            transport: transport.name().to_string(),
+            ..Default::default()
+        };
+        let decision = Decision::uniform(n_layers, Level::High);
+
+        Ok(Trainer {
+            cfg,
+            rt,
+            meta,
+            progs,
+            ds,
+            params,
+            n_layers,
+            threads,
+            compressors,
+            controller,
+            window,
+            opt,
+            sched,
+            net,
+            transport,
+            comms,
+            clock: SimClock::default(),
+            cost,
+            bucketizer,
+            // the persistent fan-out pool: spawned once, two barrier
+            // rendezvous per dispatch, zero allocation per step
+            pool: WorkerPool::new(threads),
+            worker_grads,
+            wscratch,
+            layer_ws,
+            agg,
+            delta,
+            edelta,
+            cell_loss: Vec::new(),
+            cell_time: Vec::new(),
+            comm_before: vec![0.0; n_layers],
+            rebuild_before: vec![0.0; n_layers],
+            step_comm: vec![0.0; n_layers],
+            task_errs: (0..threads).map(|_| None).collect(),
+            log,
+            epoch: 0,
+            ramp_from: 1,
+            ramp_at: 0,
+            last_mult: 1,
+            sampler: None,
+            decision,
+            batch_mult: 1,
+            lr_curr: 0.0,
+            lr_next: 0.0,
+            lr_eff: 0.0,
+            global_steps: 0,
+            train_loss_sum: 0.0,
+            train_loss_n: 0,
+        })
+    }
+
+    /// 0-based index of the epoch the next `begin_epoch` starts.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Start the next epoch (controller decision, LR, sampler); returns
+    /// the number of global steps to run via [`Trainer::step`].
+    pub fn begin_epoch(&mut self) -> Result<usize> {
+        let epoch = self.epoch;
+        let lr_curr = self.sched.lr(epoch);
+        let lr_next = self.sched.lr(epoch + 1);
+        let decision = self.controller.begin_epoch(epoch, lr_curr, lr_next);
         let batch_mult = decision.batch_mult.max(1);
-        if batch_mult > last_mult {
-            ramp_from = last_mult;
-            ramp_at = epoch;
+        if batch_mult > self.last_mult {
+            self.ramp_from = self.last_mult;
+            self.ramp_at = epoch;
         }
-        last_mult = batch_mult;
+        self.last_mult = batch_mult;
         // linear LR scaling on batch switch, warmed up over RAMP_EPOCHS
-        let ramp_t = ((epoch - ramp_at) as f32 + 1.0) / RAMP_EPOCHS as f32;
-        let mult_eff = if batch_mult > ramp_from && ramp_t < 1.0 {
-            ramp_from as f32 + (batch_mult - ramp_from) as f32 * ramp_t
+        let ramp_t = ((epoch - self.ramp_at) as f32 + 1.0) / RAMP_EPOCHS as f32;
+        let mult_eff = if batch_mult > self.ramp_from && ramp_t < 1.0 {
+            self.ramp_from as f32 + (batch_mult - self.ramp_from) as f32 * ramp_t
         } else {
             batch_mult as f32
         };
-        let lr_eff = lr_curr * mult_eff;
+        self.lr_curr = lr_curr;
+        self.lr_next = lr_next;
+        self.lr_eff = lr_curr * mult_eff;
 
-        let sampler = EpochSampler::new(ds.train_n, epoch, cfg.seed);
-        let micro_steps = sampler.steps(cfg.workers, meta.batch);
-        let global_steps = micro_steps / batch_mult;
-
-        let mut train_loss_sum = 0.0f64;
-        let mut train_loss_n = 0usize;
+        let sampler = EpochSampler::new(self.ds.train_n, epoch, self.cfg.seed);
+        let micro_steps = sampler.steps(self.cfg.workers, self.meta.batch);
+        self.global_steps = micro_steps / batch_mult;
+        self.train_loss_sum = 0.0;
+        self.train_loss_n = 0;
         // the per-epoch Δ resets every epoch; the windowed Δ resets at
         // detection-window starts only (Alg. 1 compares whole-window
         // accumulated-gradient norms)
-        edelta.iter_mut().for_each(|d| d.fill(0.0));
-        if epoch % window == 0 {
-            delta.iter_mut().for_each(|d| d.fill(0.0));
+        self.edelta.iter_mut().for_each(|d| d.fill(0.0));
+        if epoch % self.window == 0 {
+            self.delta.iter_mut().for_each(|d| d.fill(0.0));
         }
-        cell_loss.resize(cfg.workers * batch_mult, 0.0);
-        cell_time.resize(cfg.workers * batch_mult, 0.0);
+        self.cell_loss.resize(self.cfg.workers * batch_mult, 0.0);
+        self.cell_time.resize(self.cfg.workers * batch_mult, 0.0);
+        self.sampler = Some(sampler);
+        self.decision = decision;
+        self.batch_mult = batch_mult;
+        Ok(self.global_steps)
+    }
 
-        for s in 0..global_steps {
-            // 1. gradient computation (with accumulation for large
-            //    batch), workers fanned out across threads
-            step_gradients(
-                &progs,
+    /// One global step: gradient fan-out, per-layer aggregation through
+    /// the transport, clock charge, optimizer.  Steady state performs no
+    /// heap allocation (see the module docs).
+    pub fn step(&mut self, s: usize) -> Result<()> {
+        let threads = self.threads;
+        let batch_mult = self.batch_mult;
+        let lr_eff = self.lr_eff;
+        let workers = self.cfg.workers;
+        let batch_size = self.meta.batch;
+        let n_layers = self.n_layers;
+        let overlap = self.cfg.overlap;
+        let Trainer {
+            cfg,
+            rt,
+            meta,
+            progs,
+            ds,
+            params,
+            compressors,
+            opt,
+            net,
+            transport,
+            comms,
+            clock,
+            cost,
+            bucketizer,
+            pool,
+            worker_grads,
+            wscratch,
+            layer_ws,
+            agg,
+            edelta,
+            cell_loss,
+            cell_time,
+            comm_before,
+            rebuild_before,
+            step_comm,
+            task_errs,
+            sampler,
+            decision,
+            train_loss_sum,
+            train_loss_n,
+            ..
+        } = self;
+        let cfg: &TrainConfig = *cfg;
+        let rt: &Runtime = *rt;
+        let meta: &ModelMeta = meta;
+        let progs: &ModelPrograms = progs;
+        let ds: &Dataset = ds;
+        let transport: &dyn Transport = &**transport;
+        let decision: &Decision = decision;
+        let sampler: &EpochSampler = sampler.as_ref().expect("begin_epoch before step");
+
+        // 1. gradient computation (with accumulation for large batch),
+        //    workers fanned out across the persistent pool
+        if threads <= 1 || workers <= 1 {
+            grad_task(
+                progs,
                 rt,
-                &params,
-                &ds,
-                &sampler,
+                params,
+                ds,
+                sampler,
                 s,
                 batch_mult,
-                meta.batch,
-                threads,
-                &mut worker_grads,
-                &mut cell_loss,
-                &mut cell_time,
+                workers,
+                batch_size,
+                0,
+                worker_grads,
+                wscratch,
+                cell_loss,
+                cell_time,
             )?;
-            // fold losses (and the wall-clock debug column) in the
-            // sequential (a, w) order so the f64 sums are bit-identical
-            // at every thread count
-            let mut step_wall = 0.0f64;
-            for a in 0..batch_mult {
-                let mut worker_max = 0.0f64;
-                for w in 0..cfg.workers {
-                    train_loss_sum += cell_loss[w * batch_mult + a] as f64;
-                    train_loss_n += 1;
-                    worker_max = worker_max.max(cell_time[w * batch_mult + a]);
+        } else {
+            let params_ref: &[Tensor] = params;
+            let wg_ptr = SendPtr::new(worker_grads.as_mut_slice());
+            let sc_ptr = SendPtr::new(wscratch.as_mut_slice());
+            let loss_ptr = SendPtr::new(cell_loss.as_mut_slice());
+            let time_ptr = SendPtr::new(cell_time.as_mut_slice());
+            let err_ptr = SendPtr::new(task_errs.as_mut_slice());
+            pool.run_chunked(workers, &|tid, w0, n| {
+                // SAFETY: run_chunked hands out disjoint in-bounds
+                // worker ranges (cells scale by the per-worker stride);
+                // the buffers outlive the dispatch (it joins before
+                // returning).
+                let (wg, sc, losses, times, err) = unsafe {
+                    (
+                        wg_ptr.slice_mut(w0, n),
+                        sc_ptr.slice_mut(w0, n),
+                        loss_ptr.slice_mut(w0 * batch_mult, n * batch_mult),
+                        time_ptr.slice_mut(w0 * batch_mult, n * batch_mult),
+                        err_ptr.slice_mut(tid, 1),
+                    )
+                };
+                if let Err(e) = grad_task(
+                    progs, rt, params_ref, ds, sampler, s, batch_mult, workers, batch_size, w0,
+                    wg, sc, losses, times,
+                ) {
+                    err[0] = Some(e);
                 }
-                step_wall += worker_max;
-            }
-            clock.wall_secs += step_wall;
-            if batch_mult > 1 {
-                let inv = 1.0 / batch_mult as f32;
-                for wg in worker_grads.iter_mut() {
-                    for g in wg.iter_mut() {
-                        g.scale(inv);
-                    }
+            });
+            // drain EVERY slot (not just the first) so a multi-failure
+            // step cannot leave a stale error behind for a later,
+            // successful step to spuriously report
+            let mut first_err: Option<anyhow::Error> = None;
+            for slot in task_errs.iter_mut() {
+                if let Some(e) = slot.take() {
+                    first_err.get_or_insert(e);
                 }
             }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
 
-            // snapshot the per-layer ledgers so this step's collective
-            // charges can be read back for the overlap scheduler
-            for (l, c) in comms.iter().enumerate() {
+        // fold losses (and the wall-clock debug column) in the
+        // sequential (a, w) order so the f64 sums are bit-identical
+        // at every thread count
+        let mut step_wall = 0.0f64;
+        for a in 0..batch_mult {
+            let mut worker_max = 0.0f64;
+            for w in 0..workers {
+                *train_loss_sum += cell_loss[w * batch_mult + a] as f64;
+                *train_loss_n += 1;
+                worker_max = worker_max.max(cell_time[w * batch_mult + a]);
+            }
+            step_wall += worker_max;
+        }
+        clock.wall_secs += step_wall;
+        if batch_mult > 1 {
+            let inv = 1.0 / batch_mult as f32;
+            for wg in worker_grads.iter_mut() {
+                for g in wg.iter_mut() {
+                    g.scale(inv);
+                }
+            }
+        }
+
+        // reset the event streams, and in per-layer mode snapshot the
+        // ledgers so this step's collective charges can be read back as
+        // deltas (bucketed mode reads only the events, so the snapshots
+        // would be dead work there)
+        let bucketed = bucketizer.is_some();
+        for (l, c) in comms.iter_mut().enumerate() {
+            if !bucketed {
                 comm_before[l] = c.ledger.secs;
                 rebuild_before[l] = c.ledger.rebuild_secs;
             }
-
-            // 2. per-layer aggregation (compressor or raw collective,
-            //    through the transport), layers fanned out across threads
-            aggregate_layers(
-                cfg,
-                &meta,
-                &decision,
-                transport.as_ref(),
-                threads,
-                &worker_grads,
-                &mut compressors,
-                &mut comms,
-                &mut agg,
-                &mut edelta,
-            );
-
-            // charge the simulated clock: modeled compute + this step's
-            // α–β collectives through the overlap event scheduler.  The
-            // transport's parameter-rebuild all-gathers are split out:
-            // they run after the optimizer and never overlap backprop.
-            let mut step_rebuild = 0.0f64;
-            for (l, c) in comms.iter().enumerate() {
-                let rebuild = c.ledger.rebuild_secs - rebuild_before[l];
-                step_comm[l] = (c.ledger.secs - comm_before[l]) - rebuild;
-                step_rebuild += rebuild;
-            }
-            let t = simtime::step_times(&cost, batch_mult, &step_comm, step_rebuild);
-            clock.compute_secs += t.compute;
-            clock.comm_secs += t.comm;
-            if cfg.overlap {
-                clock.sim_secs += t.overlapped;
-                clock.saved_secs += t.serialized - t.overlapped;
-            } else {
-                clock.sim_secs += t.serialized;
-                // saved_secs stays literally 0.0: the serialized charge
-                // IS the quoted time, with no derivation residue
-            }
-
-            // 3. optimizer, through the transport's ownership contract
-            //    (full layers under dense replication, per-worker 1/N
-            //    shards under sharded ownership — bit-identical unions)
-            opt.step_owned(&mut params, &agg, lr_eff, transport.as_ref());
+            c.events.clear();
         }
 
+        // 2. per-layer aggregation (compressor or raw collective,
+        //    through the transport), layers fanned out across the pool
+        if threads <= 1 || n_layers <= 1 {
+            layer_task(
+                cfg,
+                meta,
+                decision,
+                transport,
+                worker_grads,
+                0,
+                compressors,
+                comms,
+                agg,
+                edelta,
+                layer_ws,
+            );
+        } else {
+            let wg_ref: &[Vec<Tensor>] = worker_grads;
+            let comp_ptr = SendPtr::new(compressors.as_mut_slice());
+            let comm_ptr = SendPtr::new(comms.as_mut_slice());
+            let agg_ptr = SendPtr::new(agg.as_mut_slice());
+            let del_ptr = SendPtr::new(edelta.as_mut_slice());
+            let ws_ptr = SendPtr::new(layer_ws.as_mut_slice());
+            pool.run_chunked(n_layers, &|_tid, l0, n| {
+                // SAFETY: run_chunked hands out disjoint in-bounds layer
+                // ranges; buffers outlive the dispatch (it joins before
+                // returning).
+                let (cs, ms, ags, dls, wss) = unsafe {
+                    (
+                        comp_ptr.slice_mut(l0, n),
+                        comm_ptr.slice_mut(l0, n),
+                        agg_ptr.slice_mut(l0, n),
+                        del_ptr.slice_mut(l0, n),
+                        ws_ptr.slice_mut(l0, n),
+                    )
+                };
+                layer_task(cfg, meta, decision, transport, wg_ref, l0, cs, ms, ags, dls, wss);
+            });
+        }
+
+        // charge the simulated clock: modeled compute + this step's α–β
+        // collectives through the overlap event scheduler.  The
+        // transport's parameter-rebuild all-gathers are split out: they
+        // run after the optimizer and never overlap backprop.
+        let t = match bucketizer.as_mut() {
+            // bucketed: coalesce this step's event streams and charge at
+            // bucket granularity (one α per bucket)
+            Some(bz) => {
+                let (charges, rebuild) = bz.plan(comms, net.as_ref());
+                simtime::step_times_bucketed(cost, batch_mult, charges, rebuild)
+            }
+            // legacy per-layer charge: bit-identical to the
+            // pre-bucketing trainer (same ledger-delta arithmetic)
+            None => {
+                let mut step_rebuild = 0.0f64;
+                for (l, c) in comms.iter().enumerate() {
+                    let rebuild = c.ledger.rebuild_secs - rebuild_before[l];
+                    step_comm[l] = (c.ledger.secs - comm_before[l]) - rebuild;
+                    step_rebuild += rebuild;
+                }
+                simtime::step_times(cost, batch_mult, step_comm, step_rebuild)
+            }
+        };
+        clock.compute_secs += t.compute;
+        clock.comm_secs += t.comm;
+        if overlap {
+            clock.sim_secs += t.overlapped;
+            clock.saved_secs += t.serialized - t.overlapped;
+        } else {
+            clock.sim_secs += t.serialized;
+            // saved_secs stays literally 0.0: the serialized charge
+            // IS the quoted time, with no derivation residue
+        }
+
+        // 3. optimizer, through the transport's ownership contract
+        //    (full layers under dense replication, per-worker 1/N
+        //    shards under sharded ownership — bit-identical unions)
+        opt.step_owned(params, agg, lr_eff, transport);
+        Ok(())
+    }
+
+    /// Held-out evaluation, detector observation, and the epoch's
+    /// metrics row.  (Per-epoch work may allocate; the zero-allocation
+    /// contract covers [`Trainer::step`].)
+    pub fn end_epoch(&mut self) -> Result<()> {
+        let epoch = self.epoch;
         // evaluation (not charged to the simulated training clock)
-        let (test_loss, test_acc) = evaluate(&progs, rt, &params, &ds, cfg, &meta)?;
+        let (test_loss, test_acc) =
+            evaluate(&self.progs, self.rt, &self.params, &self.ds, self.cfg, &self.meta)?;
 
         // fold this epoch's Δ into the windowed accumulator (one pass per
         // epoch; identical at every thread count)
-        for (d, e) in delta.iter_mut().zip(&edelta) {
+        for (d, e) in self.delta.iter_mut().zip(&self.edelta) {
             d.add_assign(e);
         }
-        let epoch_sqnorm: f32 = edelta.iter().map(|d| d.sqnorm()).sum();
+        let epoch_sqnorm: f32 = self.edelta.iter().map(|d| d.sqnorm()).sum();
 
         // detector observation (whole-window accumulated statistics)
-        let layer_sqnorms: Vec<f32> = delta.iter().map(|d| d.sqnorm()).collect();
-        let layer_abs_means: Vec<f32> = delta
+        let layer_sqnorms: Vec<f32> = self.delta.iter().map(|d| d.sqnorm()).collect();
+        let layer_abs_means: Vec<f32> = self
+            .delta
             .iter()
             .map(|d| d.data.iter().map(|v| v.abs()).sum::<f32>() / d.numel().max(1) as f32)
             .collect();
-        let layer_stds: Vec<f32> = delta
+        let layer_stds: Vec<f32> = self
+            .delta
             .iter()
             .zip(&layer_sqnorms)
             .map(|(d, sq)| {
@@ -339,63 +644,83 @@ pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunL
             layer_abs_means,
             layer_stds,
             model_sqnorm,
-            lr_curr,
-            lr_next,
+            lr_curr: self.lr_curr,
+            lr_next: self.lr_next,
         };
-        controller.observe(&obs);
+        self.controller.observe(&obs);
 
-        let n_comp = meta.params.iter().filter(|p| p.compressible()).count().max(1);
-        let n_low = meta
+        let n_comp = self.meta.params.iter().filter(|p| p.compressible()).count().max(1);
+        let n_low = self
+            .meta
             .params
             .iter()
             .enumerate()
-            .filter(|(l, p)| p.compressible() && decision.levels[*l] == Level::Low)
+            .filter(|(l, p)| p.compressible() && self.decision.levels[*l] == Level::Low)
             .count();
-        log.level_trace.push(
-            meta.params
+        self.log.level_trace.push(
+            self.meta
+                .params
                 .iter()
                 .enumerate()
-                .map(|(l, _)| decision.levels[l] == Level::Low)
+                .map(|(l, _)| self.decision.levels[l] == Level::Low)
                 .collect(),
         );
         // fold per-layer ledger shards in layer order: deterministic and
         // thread-count independent
-        let floats: u64 = comms.iter().map(|c| c.ledger.floats).sum();
-        log.epochs.push(EpochStats {
+        let floats: u64 = self.comms.iter().map(|c| c.ledger.floats).sum();
+        self.log.epochs.push(EpochStats {
             epoch,
-            lr: lr_eff,
-            train_loss: (train_loss_sum / train_loss_n.max(1) as f64) as f32,
+            lr: self.lr_eff,
+            train_loss: (self.train_loss_sum / self.train_loss_n.max(1) as f64) as f32,
             test_loss,
             test_acc,
             floats,
-            secs: clock.sim_secs,
-            overlap_saved_secs: clock.overlap_saved_secs(),
-            wall_secs: clock.wall_secs,
+            secs: self.clock.sim_secs,
+            overlap_saved_secs: self.clock.overlap_saved_secs(),
+            wall_secs: self.clock.wall_secs,
             grad_norm: epoch_sqnorm.sqrt(),
             frac_low: n_low as f32 / n_comp as f32,
-            batch_mult,
+            batch_mult: self.batch_mult,
             window_grad_norm: model_sqnorm.sqrt(),
         });
         log::info!(
             "[{}] epoch {:>3} lr={:.4} loss={:.3} acc={:.3} floats={} t={:.1}s \
              (overlap saved {:.1}s, mult x{})",
-            cfg.label,
+            self.cfg.label,
             epoch,
-            lr_eff,
-            log.epochs.last().unwrap().train_loss,
+            self.lr_eff,
+            self.log.epochs.last().unwrap().train_loss,
             test_acc,
             floats,
-            clock.sim_secs,
-            clock.overlap_saved_secs(),
-            batch_mult
+            self.clock.sim_secs,
+            self.clock.overlap_saved_secs(),
+            self.batch_mult
         );
+        self.epoch += 1;
+        Ok(())
     }
-    Ok((log, params))
+
+    /// One full epoch: `begin_epoch` + every `step` + `end_epoch`.
+    pub fn run_epoch(&mut self) -> Result<()> {
+        let steps = self.begin_epoch()?;
+        for s in 0..steps {
+            self.step(s)?;
+        }
+        self.end_epoch()
+    }
+
+    /// Consume the trainer, returning the run log and final parameters.
+    pub fn finish(self) -> (RunLog, Vec<Tensor>) {
+        (self.log, self.params)
+    }
 }
 
 /// Phase-1 work item: compute and accumulate gradients for the worker
-/// range starting at `w0`.  `grads`/`losses`/`times` are this range's
-/// disjoint output slots (`losses`/`times` laid out `[worker][micro]`).
+/// range starting at `w0`.  `grads`/`scratch`/`losses`/`times` are this
+/// range's disjoint slots (`losses`/`times` laid out `[worker][micro]`).
+/// Data gathering, the backend's forward/backward buffers, and the
+/// micro-step gradients all live in the per-worker scratch — zero
+/// allocation once capacities converge.
 #[allow(clippy::too_many_arguments)]
 fn grad_task(
     progs: &ModelPrograms,
@@ -409,10 +734,11 @@ fn grad_task(
     batch_size: usize,
     w0: usize,
     grads: &mut [Vec<Tensor>],
+    scratch: &mut [WorkerScratch],
     losses: &mut [f32],
     times: &mut [f64],
 ) -> Result<()> {
-    for (wi, wg) in grads.iter_mut().enumerate() {
+    for (wi, (wg, sc)) in grads.iter_mut().zip(scratch.iter_mut()).enumerate() {
         let w = w0 + wi;
         for g in wg.iter_mut() {
             g.fill(0.0);
@@ -420,14 +746,14 @@ fn grad_task(
         for a in 0..batch_mult {
             let micro = step * batch_mult + a;
             let idx = sampler
-                .shard(micro, w, workers, batch_size)
+                .shard_slice(micro, w, workers, batch_size)
                 .expect("sampler bounds");
-            let batch: Batch = ds.train_batch(&idx);
+            ds.train_batch_into(idx, &mut sc.batch);
             let t0 = Instant::now();
-            let (loss, g) = progs.train_step(rt, params, &batch)?;
+            let loss = progs.train_step_into(rt, params, &sc.batch, &mut sc.grads, &mut sc.ws)?;
             times[wi * batch_mult + a] = t0.elapsed().as_secs_f64();
             losses[wi * batch_mult + a] = loss;
-            for (acc, gg) in wg.iter_mut().zip(&g) {
+            for (acc, gg) in wg.iter_mut().zip(&sc.grads) {
                 acc.add_assign(gg);
             }
         }
@@ -435,60 +761,12 @@ fn grad_task(
     Ok(())
 }
 
-/// Phase 1: fan the workers' gradient computations out across `threads`
-/// scoped OS threads (contiguous worker ranges; sequential when
-/// `threads <= 1`).
-#[allow(clippy::too_many_arguments)]
-fn step_gradients(
-    progs: &ModelPrograms,
-    rt: &Runtime,
-    params: &[Tensor],
-    ds: &Dataset,
-    sampler: &EpochSampler,
-    step: usize,
-    batch_mult: usize,
-    batch_size: usize,
-    threads: usize,
-    worker_grads: &mut [Vec<Tensor>],
-    losses: &mut [f32],
-    times: &mut [f64],
-) -> Result<()> {
-    let workers = worker_grads.len();
-    if threads <= 1 || workers <= 1 {
-        return grad_task(
-            progs, rt, params, ds, sampler, step, batch_mult, workers, batch_size, 0, worker_grads,
-            losses, times,
-        );
-    }
-    let wpt = workers.div_ceil(threads.min(workers));
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::new();
-        for (ci, ((gh, lh), th)) in worker_grads
-            .chunks_mut(wpt)
-            .zip(losses.chunks_mut(wpt * batch_mult))
-            .zip(times.chunks_mut(wpt * batch_mult))
-            .enumerate()
-        {
-            let w0 = ci * wpt;
-            handles.push(scope.spawn(move || {
-                grad_task(
-                    progs, rt, params, ds, sampler, step, batch_mult, workers, batch_size, w0, gh,
-                    lh, th,
-                )
-            }));
-        }
-        for h in handles {
-            h.join().expect("gradient worker thread panicked")?;
-        }
-        Ok(())
-    })
-}
-
 /// Phase-2 work item: run the aggregation round for the layer range
 /// starting at `l0`, through the transport (which picks the collective
 /// shapes and charges the ledger — including the parameter rebuild for
 /// sharded ownership).  Each layer uses its own compressor instance,
-/// ledger shard, and output/Δ slots, so ranges are fully independent.
+/// ledger shard, workspace arena, and output/Δ slots, so ranges are
+/// fully independent.
 #[allow(clippy::too_many_arguments)]
 fn layer_task(
     cfg: &TrainConfig,
@@ -501,11 +779,15 @@ fn layer_task(
     comms: &mut [Comm],
     agg: &mut [Tensor],
     edelta: &mut [Tensor],
+    wss: &mut [Workspace],
 ) {
     let workers = worker_grads.len();
     for (i, comp) in compressors.iter_mut().enumerate() {
         let l = l0 + i;
-        let views: Vec<&[f32]> = worker_grads.iter().map(|wg| wg[l].data.as_slice()).collect();
+        let ws = &mut wss[i];
+        // worker-gradient views through the recycler: no per-round alloc
+        let mut views = ws.views.take();
+        views.extend(worker_grads.iter().map(|wg| wg[l].data.as_slice()));
         let compressible = meta.params[l].compressible() && !matches!(cfg.method, MethodCfg::None);
         let comp = if compressible { Some(&mut **comp) } else { None };
         transport.aggregate_layer(
@@ -516,53 +798,16 @@ fn layer_task(
             decision.levels[l],
             &mut comms[i],
             &mut agg[i].data,
+            ws,
         );
+        views.clear();
+        ws.views.put(views);
         // per-epoch Δ accumulator for the detector (raw mean gradient)
         let inv = 1.0 / workers as f32;
         for wg in worker_grads {
             crate::tensor::linalg::axpy(inv, &wg[l].data, &mut edelta[i].data);
         }
     }
-}
-
-/// Phase 2: fan the per-layer compressor rounds out across `threads`
-/// scoped OS threads (contiguous layer ranges; sequential when
-/// `threads <= 1`).
-#[allow(clippy::too_many_arguments)]
-fn aggregate_layers(
-    cfg: &TrainConfig,
-    meta: &ModelMeta,
-    decision: &Decision,
-    transport: &dyn Transport,
-    threads: usize,
-    worker_grads: &[Vec<Tensor>],
-    compressors: &mut [Box<dyn DistCompressor>],
-    comms: &mut [Comm],
-    agg: &mut [Tensor],
-    edelta: &mut [Tensor],
-) {
-    let n_layers = agg.len();
-    if threads <= 1 || n_layers <= 1 {
-        layer_task(
-            cfg, meta, decision, transport, worker_grads, 0, compressors, comms, agg, edelta,
-        );
-        return;
-    }
-    let lpt = n_layers.div_ceil(threads.min(n_layers));
-    std::thread::scope(|scope| {
-        for (ci, (((cs, ms), ags), dls)) in compressors
-            .chunks_mut(lpt)
-            .zip(comms.chunks_mut(lpt))
-            .zip(agg.chunks_mut(lpt))
-            .zip(edelta.chunks_mut(lpt))
-            .enumerate()
-        {
-            let l0 = ci * lpt;
-            scope.spawn(move || {
-                layer_task(cfg, meta, decision, transport, worker_grads, l0, cs, ms, ags, dls)
-            });
-        }
-    });
 }
 
 /// Held-out evaluation.  Full batches at the model's batch size, plus —

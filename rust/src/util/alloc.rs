@@ -1,0 +1,81 @@
+//! Counting global allocator for the zero-allocation hot-loop contract.
+//!
+//! The counters live in the library so library-side code and any binary
+//! can read them, but counting only happens when a binary *installs* the
+//! allocator:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: accordion::util::alloc::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! `tests/hotpath_alloc.rs` installs it to pin steady-state allocations
+//! per training step to ZERO, and `benches/hotpath.rs` installs it to
+//! report allocs/step in `BENCH_hotpath.json`.  The counters are
+//! process-global and monotonically increasing; callers measure by
+//! differencing [`alloc_count`] around the section of interest.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Allocation events since process start (allocs + reallocs, all
+/// threads).  Zero forever unless [`CountingAlloc`] is installed.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Deallocation events since process start.
+pub fn dealloc_count() -> u64 {
+    DEALLOCS.load(Ordering::Relaxed)
+}
+
+/// `System` allocator wrapper that counts every allocation event.
+pub struct CountingAlloc;
+
+// SAFETY (GlobalAlloc contract): every method forwards verbatim to
+// `System`, which upholds the contract; the counters are side effects
+// that never touch the returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a realloc is a fresh reservation from the hot loop's point of
+        // view: growing a supposedly converged buffer must show up
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_read_without_installation() {
+        // the lib test binary does not install CountingAlloc, so the
+        // counters just read as a constant (0) — the accessors must not
+        // panic either way
+        let a = alloc_count();
+        let d = dealloc_count();
+        let v = vec![1u8; 32];
+        drop(v);
+        assert!(alloc_count() >= a);
+        assert!(dealloc_count() >= d);
+    }
+}

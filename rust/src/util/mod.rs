@@ -2,12 +2,15 @@
 //! RNG, JSON, TOML-subset config, CLI parsing, statistics, property
 //! testing, and a stderr logger for the `log` facade.
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod toml;
+pub mod workspace;
 
 use log::{Level, LevelFilter, Metadata, Record};
 

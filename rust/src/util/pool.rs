@@ -1,0 +1,364 @@
+//! Persistent worker-thread pool with allocation-free dispatch.
+//!
+//! The parallel execution engine used to spawn fresh scoped OS threads
+//! for every phase of every global step — correct, but each spawn heap-
+//! allocates (stack, handle, closure box) and pays scheduler latency,
+//! which breaks the zero-allocation steady-state contract and dominates
+//! small-step wall time.  [`WorkerPool`] spawns its threads ONCE per
+//! run; each [`WorkerPool::run`] call after that is two [`Barrier`]
+//! rendezvous and zero heap allocations.
+//!
+//! Dispatch model: `run(&job)` publishes a raw pointer to a caller-stack
+//! closure, releases the workers through the barrier, executes chunk 0
+//! on the calling thread, and joins the second barrier once every
+//! participant's `job(tid)` returned.  The job decides what chunk `tid`
+//! means; [`SendPtr`] is the escape hatch for handing each participant
+//! its DISJOINT `&mut` chunk of shared buffers (the same partition the
+//! old scoped-thread code expressed with `chunks_mut`, so determinism is
+//! untouched — each chunk is still produced by exactly one thread and
+//! folded on the caller in fixed order).
+//!
+//! Safety argument for the pointer dance, in one place:
+//!  * the job pointer is written before the release barrier and read
+//!    after it (barriers synchronize), and the pointee outlives `run`
+//!    because workers finish with it before the join barrier lets `run`
+//!    return;
+//!  * `SendPtr::slice_mut` callers index disjoint `tid`-derived ranges,
+//!    so no two threads alias a `&mut`.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::thread::JoinHandle;
+
+type RawJob = *const (dyn Fn(usize) + Sync);
+
+struct Shared {
+    barrier: Barrier,
+    /// written by the coordinator strictly before the release barrier of
+    /// a generation, read by workers strictly after it
+    job: UnsafeCell<Option<RawJob>>,
+    shutdown: AtomicBool,
+    panicked: AtomicBool,
+}
+
+// SAFETY: the `job` cell is only written while every worker is parked at
+// the release barrier and only read after that barrier (see module
+// docs); `Barrier` provides the happens-before edges.  Send rides along
+// for the same reason (the raw job pointer is never dereferenced outside
+// a release/join window): `Arc<Shared>` must cross into the spawned
+// workers.
+unsafe impl Sync for Shared {}
+unsafe impl Send for Shared {}
+
+/// A pool of `threads - 1` OS threads plus the calling thread (tid 0).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` total participants.  `threads <= 1` spawns
+    /// nothing and `run` degenerates to a plain call.
+    pub fn new(threads: usize) -> WorkerPool {
+        let size = threads.max(1);
+        let shared = Arc::new(Shared {
+            barrier: Barrier::new(size),
+            job: UnsafeCell::new(None),
+            shutdown: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(size.saturating_sub(1));
+        for tid in 1..size {
+            let sh = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || worker_loop(&sh, tid)));
+        }
+        WorkerPool { shared, handles, size }
+    }
+
+    /// Total participants (spawned workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.size
+    }
+
+    /// Run `job(tid)` for every `tid in 0..threads()`, tid 0 on the
+    /// calling thread, and return when all are done.  Allocation-free.
+    ///
+    /// Takes `&mut self` deliberately: the rendezvous protocol assumes
+    /// exactly one coordinator per dispatch, and `WorkerPool` is
+    /// `Sync`, so a `&self` entry point would let safe code race two
+    /// `run` calls on one shared pool (two unsynchronized writes to the
+    /// job cell + interleaved barrier generations).
+    ///
+    /// Panics if a worker's `job` call panicked (mirrors the old scoped
+    /// `join().expect(..)` behavior instead of deadlocking).
+    pub fn run(&mut self, job: &(dyn Fn(usize) + Sync)) {
+        if self.size == 1 {
+            job(0);
+            return;
+        }
+        // SAFETY: all workers are parked at the release barrier, so the
+        // cell is not being read; the transmute only erases the borrow
+        // lifetime (fat-pointer layout is unchanged) and workers finish
+        // using the pointer before the join barrier below.
+        unsafe {
+            *self.shared.job.get() =
+                Some(std::mem::transmute::<&(dyn Fn(usize) + Sync), RawJob>(job));
+        }
+        self.shared.barrier.wait(); // release: workers pick up the job
+        // catch a panic in OUR chunk so the join barrier below always
+        // completes — unwinding past it would leave the workers parked
+        // forever and turn the panic into a Drop-time deadlock
+        let own = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(0)));
+        self.shared.barrier.wait(); // join: every chunk is done
+        if self.shared.panicked.swap(false, Ordering::Relaxed) {
+            panic!("worker pool thread panicked in a parallel region");
+        }
+        if let Err(payload) = own {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// [`WorkerPool::run`] over a contiguous `0..items` partition: each
+    /// participant gets one `ceil(items / min(threads, items))` chunk —
+    /// the same partition the old scoped-thread engine expressed with
+    /// `chunks_mut`, centralized here so every fan-out site shares one
+    /// audited guard (`f` is only called with in-bounds, pairwise
+    /// disjoint `[start, start + len)` ranges; tids beyond the last
+    /// chunk are not called).
+    pub fn run_chunked(&mut self, items: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
+        if items == 0 {
+            return;
+        }
+        let per = items.div_ceil(self.size.min(items));
+        self.run(&|tid| {
+            let start = tid * per;
+            if start >= items {
+                return;
+            }
+            f(tid, start, per.min(items - start));
+        });
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if self.size > 1 {
+            self.shared.shutdown.store(true, Ordering::Release);
+            self.shared.barrier.wait(); // release workers into the check
+            for h in self.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared, tid: usize) {
+    loop {
+        sh.barrier.wait(); // wait for a job (or shutdown)
+        if sh.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // SAFETY: published before the release barrier we just passed;
+        // stays valid until the join barrier below (see module docs).
+        let job: &(dyn Fn(usize) + Sync) =
+            unsafe { &*(*sh.job.get()).expect("job published before release") };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(tid)));
+        if result.is_err() {
+            sh.panicked.store(true, Ordering::Relaxed);
+        }
+        sh.barrier.wait(); // signal done
+    }
+}
+
+/// Shared mutable base pointer for handing pool participants DISJOINT
+/// chunks of one buffer.  Construction is safe; only slicing is unsafe,
+/// and only because disjointness is the caller's promise.
+pub struct SendPtr<T>(*mut T);
+
+// SAFETY: a SendPtr is just an address; the disjointness contract of
+// `slice_mut` (below) is what keeps concurrent use race-free.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(slice: &mut [T]) -> SendPtr<T> {
+        SendPtr(slice.as_mut_ptr())
+    }
+
+    /// The chunk `[start, start + len)` of the underlying buffer.
+    ///
+    /// # Safety
+    ///
+    /// The range must be in bounds of the slice passed to `new`, the
+    /// underlying buffer must outlive the returned borrow, and no two
+    /// live borrows (from any thread) may overlap.
+    // &self -> &mut is the whole point: disjointness is the caller's
+    // contract (documented above), exactly like slice::split_at_mut's
+    // internals
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut<'a>(&self, start: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let mut pool = WorkerPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(&|tid| {
+            assert_eq!(tid, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn all_tids_run_once_per_dispatch() {
+        let mut pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(&|tid| {
+                hits[tid].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 50);
+        }
+    }
+
+    #[test]
+    fn disjoint_chunks_via_sendptr() {
+        let mut pool = WorkerPool::new(3);
+        let mut data = vec![0usize; 10];
+        let n = data.len();
+        let chunk = n.div_ceil(3);
+        {
+            let ptr = SendPtr::new(&mut data);
+            pool.run(&|tid| {
+                let start = tid * chunk;
+                if start >= n {
+                    return;
+                }
+                let len = chunk.min(n - start);
+                // SAFETY: tid-derived ranges are disjoint and in bounds
+                let mine = unsafe { ptr.slice_mut(start, len) };
+                for (i, v) in mine.iter_mut().enumerate() {
+                    *v = tid * 100 + i;
+                }
+            });
+        }
+        for (i, v) in data.iter().enumerate() {
+            let tid = i / chunk;
+            assert_eq!(*v, tid * 100 + (i - tid * chunk), "index {i}");
+        }
+    }
+
+    #[test]
+    fn sequential_results_match_pool_results() {
+        // the partition arithmetic the trainer uses: pool output must be
+        // identical to a sequential fill
+        let n = 37;
+        let mut seq = vec![0.0f32; n];
+        for (i, v) in seq.iter_mut().enumerate() {
+            *v = (i as f32).sin();
+        }
+        for threads in [2usize, 4, 8] {
+            let mut pool = WorkerPool::new(threads);
+            let mut par = vec![0.0f32; n];
+            let chunk = n.div_ceil(threads);
+            let ptr = SendPtr::new(&mut par);
+            pool.run(&|tid| {
+                let start = tid * chunk;
+                if start >= n {
+                    return;
+                }
+                let len = chunk.min(n - start);
+                let mine = unsafe { ptr.slice_mut(start, len) };
+                for (j, v) in mine.iter_mut().enumerate() {
+                    *v = ((start + j) as f32).sin();
+                }
+            });
+            assert_eq!(seq, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_chunked_partitions_exactly_like_chunks_mut() {
+        for (threads, items) in [(1usize, 5usize), (3, 10), (4, 3), (8, 8), (4, 0)] {
+            let mut pool = WorkerPool::new(threads);
+            let mut seen = vec![0u8; items];
+            {
+                let ptr = SendPtr::new(&mut seen);
+                pool.run_chunked(items, &|_tid, start, len| {
+                    // SAFETY: run_chunked hands out disjoint in-bounds ranges
+                    let mine = unsafe { ptr.slice_mut(start, len) };
+                    for v in mine {
+                        *v += 1;
+                    }
+                });
+            }
+            assert!(
+                seen.iter().all(|&v| v == 1),
+                "threads={threads} items={items}: {seen:?}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool thread panicked")]
+    fn worker_panic_propagates_to_the_caller() {
+        let mut pool = WorkerPool::new(2);
+        pool.run(&|tid| {
+            if tid == 1 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn caller_chunk_panic_propagates_without_deadlocking() {
+        // a panic in tid 0 (the calling thread's own chunk) must still
+        // complete the join barrier: the pool stays dispatchable and
+        // Drop joins cleanly instead of hanging
+        let mut pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|tid| {
+                if tid == 0 {
+                    panic!("caller boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn pool_survives_a_worker_panic() {
+        let mut pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|tid| {
+                if tid == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // next dispatch still works
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+}

@@ -1,0 +1,192 @@
+//! Workspace arena: per-layer / per-worker scratch that is allocated
+//! once and reused every round, so the steady-state hot loop performs
+//! zero heap allocations per step (pinned by the counting-allocator
+//! suite in `tests/hotpath_alloc.rs`).
+//!
+//! Three pieces:
+//!  * [`SlotPool<T>`] — indexed reusable `Vec<T>` buffers.  A component
+//!    asks for its first `n` slots (`slots(n)`) or one slot by index
+//!    (`slot(i)`); capacities grow to the high-water mark and then stay,
+//!    so after a warmup step every `resize`/`extend` is allocation-free.
+//!  * [`ViewBuf`] — a recycler for the `Vec<&[f32]>` view lists the
+//!    aggregation paths build per layer (worker-gradient views, PowerSGD
+//!    factor views).  A plain local `Vec<&[f32]>` would be a fresh heap
+//!    allocation every round because its borrow lifetime dies with the
+//!    round; `ViewBuf` keeps the *allocation* alive between rounds while
+//!    the vec it hands out is always empty (so no stale borrows exist).
+//!  * [`Workspace`] — one of each, the bundle threaded through
+//!    [`DistCompressor::round_into`](crate::compress::DistCompressor::round_into),
+//!    the transports, and the sim backend's forward/backward buffers.
+//!
+//! Ownership convention: the trainer keeps one `Workspace` per layer
+//! (compressor rounds are fanned out across threads by layer, so
+//! per-layer workspaces are race-free by construction) and one per
+//! worker (gradient computation scratch).  Slot indices are private to
+//! the single component using that workspace; two components never
+//! share one `Workspace` concurrently.
+
+/// Indexed pool of reusable buffers (see module docs).
+#[derive(Debug, Default)]
+pub struct SlotPool<T> {
+    slots: Vec<Vec<T>>,
+}
+
+impl<T> SlotPool<T> {
+    /// The first `n` slots as one mutable slice (split it for multiple
+    /// live buffers).  Grows the pool on first use only.
+    pub fn slots(&mut self, n: usize) -> &mut [Vec<T>] {
+        if self.slots.len() < n {
+            self.slots.resize_with(n, Vec::new);
+        }
+        &mut self.slots[..n]
+    }
+
+    /// Slot `i` alone.
+    pub fn slot(&mut self, i: usize) -> &mut Vec<T> {
+        if self.slots.len() <= i {
+            self.slots.resize_with(i + 1, Vec::new);
+        }
+        &mut self.slots[i]
+    }
+}
+
+/// Recycler for `Vec<&[f32]>` allocations (see module docs).  The vecs
+/// stored here are always EMPTY — only their capacity survives between
+/// rounds — so no borrow outlives the round that created it.  `take`/
+/// `put` form a stack: nested users (the trainer's worker-grad views
+/// around a compressor's factor views) each get their own recycled
+/// allocation back in LIFO order.
+#[derive(Debug, Default)]
+pub struct ViewBuf {
+    stack: Vec<Vec<&'static [f32]>>,
+}
+
+impl ViewBuf {
+    /// Pop a recycled (empty) view vec, or a fresh empty one.
+    pub fn take<'a>(&mut self) -> Vec<&'a [f32]> {
+        let mut v = self.stack.pop().unwrap_or_default();
+        debug_assert!(v.is_empty());
+        let cap = v.capacity();
+        let ptr = v.as_mut_ptr() as *mut &'a [f32];
+        std::mem::forget(v);
+        // SAFETY: the vec is empty, so only its allocation is reused;
+        // `&'a [f32]` and `&'static [f32]` differ only in lifetime and
+        // have identical size/align, so the allocation is compatible.
+        unsafe { Vec::from_raw_parts(ptr, 0, cap) }
+    }
+
+    /// Return a view vec; its contents are dropped (references are Copy,
+    /// nothing to run) and only the capacity is kept.
+    pub fn put(&mut self, mut v: Vec<&[f32]>) {
+        v.clear();
+        let cap = v.capacity();
+        let ptr = v.as_mut_ptr() as *mut &'static [f32];
+        std::mem::forget(v);
+        // SAFETY: as in `take` — empty vec, identical layout.
+        self.stack.push(unsafe { Vec::from_raw_parts(ptr, 0, cap) });
+    }
+}
+
+/// The scratch bundle threaded through the hot path (see module docs).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// f32 scratch buffers (compressor quantization/factor buffers, sim
+    /// backend activations and deltas)
+    pub f32s: SlotPool<f32>,
+    /// index scratch (RandomK coordinate draws, data-batch indices)
+    pub usizes: SlotPool<usize>,
+    /// recycled `Vec<&[f32]>` view lists
+    pub views: ViewBuf,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_reuse_capacity() {
+        let mut p: SlotPool<f32> = SlotPool::default();
+        {
+            let s = p.slots(3);
+            s[0].resize(64, 0.0);
+            s[2].resize(16, 1.0);
+        }
+        let cap0 = p.slot(0).capacity();
+        assert!(cap0 >= 64);
+        // shrinking reuse keeps the allocation
+        {
+            let s = p.slots(3);
+            s[0].clear();
+            s[0].resize(32, 2.0);
+            assert_eq!(s[0].len(), 32);
+            assert!(s[0].iter().all(|&v| v == 2.0));
+        }
+        assert_eq!(p.slot(0).capacity(), cap0);
+        // slot growth past the current pool length works
+        p.slot(7).push(9.0);
+        assert_eq!(p.slot(7)[0], 9.0);
+    }
+
+    #[test]
+    fn split_slots_give_disjoint_buffers() {
+        let mut p: SlotPool<f32> = SlotPool::default();
+        let s = p.slots(4);
+        let (a, b) = s.split_at_mut(2);
+        a[0].resize(4, 1.0);
+        b[1].resize(4, 2.0);
+        assert_eq!(a[0][0], 1.0);
+        assert_eq!(b[1][3], 2.0);
+    }
+
+    #[test]
+    fn viewbuf_recycles_capacity_in_lifo_order() {
+        let mut vb = ViewBuf::default();
+        let data = vec![1.0f32; 8];
+        let mut outer = vb.take();
+        outer.push(&data[..4]);
+        outer.push(&data[4..]);
+        let outer_cap = outer.capacity();
+        let mut inner = vb.take();
+        inner.push(&data[..]);
+        let inner_cap = inner.capacity();
+        assert_eq!(outer[1][0], 1.0);
+        vb.put(inner);
+        vb.put(outer);
+        // LIFO: the outer (last put) allocation comes back first
+        let again: Vec<&[f32]> = vb.take();
+        assert!(again.is_empty());
+        assert_eq!(again.capacity(), outer_cap);
+        let again2: Vec<&[f32]> = vb.take();
+        assert_eq!(again2.capacity(), inner_cap);
+        vb.put(again2);
+        vb.put(again);
+    }
+
+    #[test]
+    fn viewbuf_take_on_empty_is_fresh() {
+        let mut vb = ViewBuf::default();
+        let v: Vec<&[f32]> = vb.take();
+        assert!(v.is_empty());
+        vb.put(v);
+    }
+
+    #[test]
+    fn workspace_fields_split_borrow() {
+        // the pattern the compressors rely on: f32 slots and the view
+        // recycler borrowed from one &mut Workspace simultaneously
+        let mut ws = Workspace::new();
+        let slots = ws.f32s.slots(2);
+        slots[0].resize(4, 3.0);
+        let mut views = ws.views.take();
+        views.push(slots[0].as_slice());
+        assert_eq!(views[0][0], 3.0);
+        views.clear();
+        ws.views.put(views);
+    }
+}

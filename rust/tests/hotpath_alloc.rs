@@ -1,0 +1,96 @@
+//! The zero-allocation hot-loop contract, pinned with a counting
+//! allocator: after a warmup step (lazy error-feedback buffers, arena
+//! high-water marks, batch-gather capacities), a steady-state training
+//! step performs EXACTLY ZERO heap allocations — across thread counts
+//! (the persistent worker pool dispatches with two barrier rendezvous,
+//! no spawns), both transports, compressed and raw aggregation, and the
+//! bucketed clock path.
+//!
+//! Everything runs inside ONE #[test]: the counter is process-global,
+//! and the libtest harness runs multiple tests concurrently in one
+//! binary — a second test's allocations would pollute the measured
+//! window.
+
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{
+    config::{ControllerCfg, MethodCfg, TrainConfig, TransportCfg},
+    Trainer,
+};
+use accordion::util::alloc::{alloc_count, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn cfg(method: MethodCfg, transport: TransportCfg, threads: usize, bucket_kb: usize) -> TrainConfig {
+    TrainConfig {
+        label: "hotpath-alloc".into(),
+        model: "mlp_c10".into(),
+        workers: 4,
+        threads,
+        epochs: 1,
+        train_size: 256, // 4 global steps at workers=4, batch=16
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: vec![],
+        method,
+        // a fixed level: rank/level switches legitimately reallocate
+        // state (warm-start Q resizing), which is a regime change, not
+        // steady state
+        controller: ControllerCfg::Static(accordion::compress::Level::Low),
+        transport,
+        bucket_kb,
+        ..TrainConfig::default()
+    }
+}
+
+/// Steady-state allocations across two hot-loop steps (after a
+/// two-step warmup inside the same epoch).
+fn steady_state_allocs(c: &TrainConfig) -> u64 {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut t = Trainer::new(c, &reg, &rt).expect("trainer construction");
+    let steps = t.begin_epoch().expect("begin epoch");
+    assert!(steps >= 4, "need >= 4 steps for warmup + measurement, got {steps}");
+    t.step(0).expect("warmup step 0");
+    t.step(1).expect("warmup step 1");
+    let before = alloc_count();
+    t.step(2).expect("measured step 2");
+    t.step(3).expect("measured step 3");
+    alloc_count() - before
+}
+
+#[test]
+fn steady_state_steps_allocate_nothing() {
+    assert!(
+        alloc_count() > 0,
+        "counting allocator must be installed for this suite to mean anything"
+    );
+    let methods: Vec<(&str, MethodCfg)> = vec![
+        ("none", MethodCfg::None),
+        ("powersgd", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+        ("topk", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 }),
+        ("randomk", MethodCfg::RandomK { frac_low: 0.99, frac_high: 0.25 }),
+        ("qsgd", MethodCfg::Qsgd { bits_low: 8, bits_high: 4 }),
+        ("signsgd", MethodCfg::SignSgd),
+    ];
+    for threads in [1usize, 4] {
+        for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+            for (mname, method) in &methods {
+                let c = cfg(method.clone(), transport, threads, 0);
+                let n = steady_state_allocs(&c);
+                assert_eq!(
+                    n, 0,
+                    "steady-state step allocated {n} times \
+                     (method={mname}, transport={transport:?}, threads={threads})"
+                );
+            }
+        }
+    }
+    // the bucketed clock path reuses the planner's buffers too
+    for threads in [1usize, 4] {
+        let c = cfg(MethodCfg::None, TransportCfg::Sharded, threads, 64);
+        let n = steady_state_allocs(&c);
+        assert_eq!(n, 0, "bucketed steady-state step allocated {n} times (threads={threads})");
+    }
+}

@@ -28,10 +28,11 @@ fn experiment_ids_are_documented() {
     // every id the CLI advertises dispatches (unknown ids must error)
     assert!(EXPERIMENTS.contains(&"table1"));
     assert!(EXPERIMENTS.contains(&"fig18"));
-    assert_eq!(EXPERIMENTS.len(), 24);
+    assert_eq!(EXPERIMENTS.len(), 25);
     assert!(EXPERIMENTS.contains(&"ablate-selector"));
     assert!(EXPERIMENTS.contains(&"ablate-overlap"));
     assert!(EXPERIMENTS.contains(&"ablate-transport"));
+    assert!(EXPERIMENTS.contains(&"ablate-bucket"));
 }
 
 #[test]

@@ -29,16 +29,17 @@ fn ready() -> Option<(Registry, Runtime)> {
 }
 
 fn tiny(label: &str) -> TrainConfig {
-    let mut c = TrainConfig::default();
-    c.label = label.into();
-    c.model = "mlp_c10".into();
-    c.epochs = 4;
-    c.train_size = 512;
-    c.test_size = 128;
-    c.data_sep = 0.4;
-    c.warmup_epochs = 1;
-    c.decay_epochs = vec![3];
-    c
+    TrainConfig {
+        label: label.into(),
+        model: "mlp_c10".into(),
+        epochs: 4,
+        train_size: 512,
+        test_size: 128,
+        data_sep: 0.4,
+        warmup_epochs: 1,
+        decay_epochs: vec![3],
+        ..TrainConfig::default()
+    }
 }
 
 #[test]
@@ -150,18 +151,20 @@ fn vector_layers_are_sent_uncompressed() {
 #[test]
 fn lstm_language_model_trains() {
     let Some((reg, mut rt)) = ready() else { return };
-    let mut cfg = TrainConfig::default();
-    cfg.label = "it-lstm".into();
-    cfg.model = "lstm_wt2".into();
-    cfg.epochs = 5;
-    cfg.train_size = 384; // sequences
-    cfg.test_size = 64;
-    cfg.base_lr = 2.0;
-    cfg.weight_decay = 0.0;
-    cfg.warmup_epochs = 0;
-    cfg.decay_epochs = vec![];
-    cfg.method = MethodCfg::TopK { frac_low: 0.99, frac_high: 0.10 };
-    cfg.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
+    let cfg = TrainConfig {
+        label: "it-lstm".into(),
+        model: "lstm_wt2".into(),
+        epochs: 5,
+        train_size: 384, // sequences
+        test_size: 64,
+        base_lr: 2.0,
+        weight_decay: 0.0,
+        warmup_epochs: 0,
+        decay_epochs: vec![],
+        method: MethodCfg::TopK { frac_low: 0.99, frac_high: 0.10 },
+        controller: ControllerCfg::Accordion { eta: 0.5, interval: 1 },
+        ..TrainConfig::default()
+    };
     let log = train::run(&cfg, &reg, &mut rt).unwrap();
     let ppl0 = log.epochs.first().unwrap().test_loss.exp();
     let ppl1 = log.final_ppl();

@@ -19,20 +19,21 @@ use accordion::tensor::Tensor;
 use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
 
 fn tiny(label: &str, method: MethodCfg, controller: ControllerCfg, threads: usize) -> TrainConfig {
-    let mut c = TrainConfig::default();
-    c.label = label.into();
-    c.model = "mlp_deep_c10".into(); // 3 matrix + 3 vector layers
-    c.workers = 4;
-    c.threads = threads;
-    c.epochs = 4;
-    c.train_size = 256;
-    c.test_size = 64;
-    c.data_sep = 0.6;
-    c.warmup_epochs = 1;
-    c.decay_epochs = vec![3];
-    c.method = method;
-    c.controller = controller;
-    c
+    TrainConfig {
+        label: label.into(),
+        model: "mlp_deep_c10".into(), // 3 matrix + 3 vector layers
+        workers: 4,
+        threads,
+        epochs: 4,
+        train_size: 256,
+        test_size: 64,
+        data_sep: 0.6,
+        warmup_epochs: 1,
+        decay_epochs: vec![3],
+        method,
+        controller,
+        ..TrainConfig::default()
+    }
 }
 
 fn assert_close(a: f32, b: f32, what: &str, ctx: &str) {

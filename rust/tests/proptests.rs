@@ -257,9 +257,27 @@ fn prop_sharded_mean_matches_dense_bitwise() {
         let mut sout = vec![0.0f32; numel];
         let mut dc = comm(workers);
         let mut sc = comm(workers);
-        DenseReplicated.aggregate_layer(None, 0, &views, &[numel], Level::High, &mut dc, &mut dout);
-        ShardedOwnership::new(workers)
-            .aggregate_layer(None, 0, &views, &[numel], Level::High, &mut sc, &mut sout);
+        let mut ws = accordion::util::workspace::Workspace::new();
+        DenseReplicated.aggregate_layer(
+            None,
+            0,
+            &views,
+            &[numel],
+            Level::High,
+            &mut dc,
+            &mut dout,
+            &mut ws,
+        );
+        ShardedOwnership::new(workers).aggregate_layer(
+            None,
+            0,
+            &views,
+            &[numel],
+            Level::High,
+            &mut sc,
+            &mut sout,
+            &mut ws,
+        );
         for (x, y) in dout.iter().zip(&sout) {
             assert_eq!(x.to_bits(), y.to_bits());
         }

@@ -9,16 +9,17 @@ use accordion::runtime::Runtime;
 use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
 
 fn tiny(label: &str) -> TrainConfig {
-    let mut c = TrainConfig::default();
-    c.label = label.into();
-    c.model = "mlp_c10".into();
-    c.epochs = 6;
-    c.train_size = 512;
-    c.test_size = 128;
-    c.data_sep = 0.8;
-    c.warmup_epochs = 1;
-    c.decay_epochs = vec![4];
-    c
+    TrainConfig {
+        label: label.into(),
+        model: "mlp_c10".into(),
+        epochs: 6,
+        train_size: 512,
+        test_size: 128,
+        data_sep: 0.8,
+        warmup_epochs: 1,
+        decay_epochs: vec![4],
+        ..TrainConfig::default()
+    }
 }
 
 #[test]

@@ -25,23 +25,25 @@ use accordion::compress::{
 use accordion::models::Registry;
 use accordion::runtime::Runtime;
 use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig, TransportCfg}};
+use accordion::util::workspace::Workspace;
 
 fn tiny(label: &str, method: MethodCfg, transport: TransportCfg, threads: usize) -> TrainConfig {
-    let mut c = TrainConfig::default();
-    c.label = label.into();
-    c.model = "mlp_deep_c10".into(); // 3 matrix + 3 vector layers
-    c.workers = 4;
-    c.threads = threads;
-    c.epochs = 3;
-    c.train_size = 256;
-    c.test_size = 64;
-    c.data_sep = 0.6;
-    c.warmup_epochs = 1;
-    c.decay_epochs = vec![2];
-    c.method = method;
-    c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 1 };
-    c.transport = transport;
-    c
+    TrainConfig {
+        label: label.into(),
+        model: "mlp_deep_c10".into(), // 3 matrix + 3 vector layers
+        workers: 4,
+        threads,
+        epochs: 3,
+        train_size: 256,
+        test_size: 64,
+        data_sep: 0.6,
+        warmup_epochs: 1,
+        decay_epochs: vec![2],
+        method,
+        controller: ControllerCfg::Accordion { eta: 0.5, interval: 1 },
+        transport,
+        ..TrainConfig::default()
+    }
 }
 
 #[test]
@@ -170,6 +172,7 @@ fn sharded_ledger_floats_match_the_data_sent_convention() {
         (Box::new(SignSgd::new(workers)), 3),
     ];
     let transport = ShardedOwnership::new(workers);
+    let mut ws = Workspace::new();
     for (mut comp, agg_payload) in cases {
         let name = comp.name();
         let mut comm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
@@ -182,6 +185,7 @@ fn sharded_ledger_floats_match_the_data_sent_convention() {
             Level::High,
             &mut comm,
             &mut out,
+            &mut ws,
         );
         assert_eq!(
             comm.ledger.floats,
@@ -205,6 +209,7 @@ fn sharded_ledger_floats_match_the_data_sent_convention() {
             Level::High,
             &mut dcomm,
             &mut out,
+            &mut ws,
         );
         assert_eq!(dcomm.ledger.floats, agg_payload, "{name}: dense Data-Sent");
         assert_eq!(dcomm.ledger.rebuild_secs, 0.0);
