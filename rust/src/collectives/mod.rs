@@ -68,6 +68,7 @@
 
 use crate::cluster::network::{CollKind, NetworkModel};
 use crate::compress::{DistCompressor, Level};
+use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
 use crate::util::workspace::Workspace;
 use std::ops::Range;
 use std::sync::Arc;
@@ -132,12 +133,36 @@ impl Comm {
         self.charge_allreduce(out.len());
     }
 
+    /// [`Comm::allreduce_mean_into`] with the element loop on an
+    /// intra-op pool (bitwise identical to the serial mean).
+    pub fn allreduce_mean_into_pooled(
+        &mut self,
+        bufs: &[&[f32]],
+        out: &mut [f32],
+        intra: &mut IntraPool,
+    ) {
+        mean_into_pooled(bufs, out, intra);
+        self.charge_allreduce(out.len());
+    }
+
     /// Reduce-scatter (mean) of one equal-length buffer per worker:
     /// the full mean still lands in `out` (the sim keeps one logical
     /// copy), but the wire is charged as the half-ring reduce-scatter —
     /// each worker only ends up *owning* its 1/N shard of `out`.
     pub fn reduce_scatter_mean_into(&mut self, bufs: &[&[f32]], out: &mut [f32]) {
         mean_into(bufs, out);
+        self.charge_reduce_scatter(out.len());
+    }
+
+    /// [`Comm::reduce_scatter_mean_into`] with the element loop on an
+    /// intra-op pool (bitwise identical to the serial mean).
+    pub fn reduce_scatter_mean_into_pooled(
+        &mut self,
+        bufs: &[&[f32]],
+        out: &mut [f32],
+        intra: &mut IntraPool,
+    ) {
+        mean_into_pooled(bufs, out, intra);
         self.charge_reduce_scatter(out.len());
     }
 
@@ -212,6 +237,41 @@ pub fn mean_into(bufs: &[&[f32]], out: &mut [f32]) {
     }
     let inv = 1.0 / n as f32;
     out.iter_mut().for_each(|o| *o *= inv);
+}
+
+/// [`mean_into`] with the element loop partitioned across an intra-op
+/// pool.  Per element the worker fold order (w ascending, then one
+/// `* 1/n`) is identical whatever the split, so this is bitwise equal
+/// to the serial sweep at any pool width — which is why the small-size
+/// serial gate is safe too.
+pub fn mean_into_pooled(bufs: &[&[f32]], out: &mut [f32], intra: &mut IntraPool) {
+    let n = bufs.len();
+    assert!(n > 0, "mean_into: no worker buffers");
+    for (w, b) in bufs.iter().enumerate() {
+        assert_eq!(
+            b.len(),
+            out.len(),
+            "mean_into: ragged worker buffer (worker {w})"
+        );
+    }
+    if intra.threads() <= 1 || out.len() < INTRA_SERIAL_CUTOFF {
+        return mean_into(bufs, out);
+    }
+    let inv = 1.0 / n as f32;
+    let optr = SendPtr::new(out);
+    intra.parallel_for(bufs[0].len(), &|s, l| {
+        // SAFETY: disjoint in-bounds ranges (parallel_for contract).
+        let o = unsafe { optr.slice_mut(s, l) };
+        o.copy_from_slice(&bufs[0][s..s + l]);
+        for b in &bufs[1..] {
+            for (oo, x) in o.iter_mut().zip(&b[s..s + l]) {
+                *oo += x;
+            }
+        }
+        for oo in o.iter_mut() {
+            *oo *= inv;
+        }
+    });
 }
 
 /// Faithful ring all-reduce (reduce-scatter + all-gather), averaging.
@@ -355,7 +415,7 @@ impl Transport for DenseReplicated {
     ) {
         match comp {
             Some(c) => c.round_into(layer, grads, shape, level, comm, out, ws),
-            None => comm.allreduce_mean_into(grads, out),
+            None => comm.allreduce_mean_into_pooled(grads, out, &mut ws.intra),
         }
     }
 
@@ -424,7 +484,7 @@ impl Transport for ShardedOwnership {
             Some(c) => {
                 c.round_sharded_into(layer, grads, shape, level, comm, out, ws);
             }
-            None => comm.reduce_scatter_mean_into(grads, out),
+            None => comm.reduce_scatter_mean_into_pooled(grads, out, &mut ws.intra),
         }
         // parameter rebuild: every worker contributes the shard it just
         // stepped; charged after the optimizer by the overlap scheduler

@@ -159,9 +159,9 @@ impl DistCompressor for NoCompression {
         _level: Level,
         comm: &mut Comm,
         out: &mut [f32],
-        _ws: &mut Workspace,
+        ws: &mut Workspace,
     ) {
-        comm.allreduce_mean_into(grads, out);
+        comm.allreduce_mean_into_pooled(grads, out, &mut ws.intra);
     }
 
     /// Raw gradients are trivially coordinate-aligned: the sharded
@@ -176,9 +176,9 @@ impl DistCompressor for NoCompression {
         _level: Level,
         comm: &mut Comm,
         out: &mut [f32],
-        _ws: &mut Workspace,
+        ws: &mut Workspace,
     ) -> bool {
-        comm.reduce_scatter_mean_into(grads, out);
+        comm.reduce_scatter_mean_into_pooled(grads, out, &mut ws.intra);
         true
     }
 

@@ -28,7 +28,7 @@
 //! ownership (see `DistCompressor::round_sharded`).
 
 use super::{matrix_dims, Comm, DistCompressor, Level};
-use crate::tensor::linalg;
+use crate::tensor::linalg::{self, Epilogue};
 use crate::util::rng::Rng;
 use crate::util::workspace::Workspace;
 use std::collections::HashMap;
@@ -122,7 +122,7 @@ impl DistCompressor for PowerSgd {
             Some(d) => d,
             None => {
                 // 1-d fallback: raw all-reduce (callers normally pre-filter)
-                comm.allreduce_mean_into(grads, out);
+                comm.allreduce_mean_into_pooled(grads, out, &mut ws.intra);
                 return;
             }
         };
@@ -132,32 +132,32 @@ impl DistCompressor for PowerSgd {
         let r = self.rank_for(level, n, k);
         // arena layout: workers P factors, workers Q factors, P̄, Q̄ —
         // disjoint from `st` (self.state), so no scratch-detach dance
-        let slots = ws.f32s.slots(2 * workers + 2);
+        let Workspace { f32s, views: view_buf, intra, .. } = ws;
+        let slots = f32s.slots(2 * workers + 2);
         let (sp, rest) = slots.split_at_mut(workers);
         let (sq, means) = rest.split_at_mut(workers);
         let (pm, qm) = means.split_at_mut(1);
         let pmean = &mut pm[0];
         let qmean = &mut qm[0];
-        let mut views = ws.views.take();
+        let mut views = view_buf.take();
         let st = self.layer_state(layer, numel, k, r);
 
-        // M_i = grad_i + e_i  (into the EF buffer, which becomes M_i)
+        // M_i = grad_i + e_i  (into the EF buffer, which becomes M_i;
+        // element-partitioned, partition-invariant)
         for w in 0..workers {
-            let ef = &mut st.ef[w];
-            for (e, g) in ef.iter_mut().zip(grads[w]) {
-                *e += g;
-            }
+            linalg::vadd_pooled(grads[w], &mut st.ef[w], intra);
         }
 
-        // P_i = M_i Q ; P̄ = mean
+        // P_i = M_i Q ; P̄ = mean  (row-partitioned const-R GEMM; the
+        // factor buffers are fully overwritten, so no zero fill)
         for w in 0..workers {
             sp[w].resize(n * r, 0.0);
-            linalg::gemm_nk_kr(&st.ef[w], &st.q, n, k, r, &mut sp[w]);
+            linalg::gemm_nk_kr_pooled(&st.ef[w], &st.q, n, k, r, &mut sp[w], intra);
         }
         pmean.resize(n * r, 0.0);
         views.clear();
         views.extend(sp[..workers].iter().map(|v| v.as_slice()));
-        comm.allreduce_mean_into(&views, pmean);
+        comm.allreduce_mean_into_pooled(&views, pmean, intra);
 
         // P̂ = orthonormalize(P̄)
         linalg::orthonormalize_cols(pmean, n, r, 1e-8);
@@ -165,22 +165,19 @@ impl DistCompressor for PowerSgd {
         // Q_i = M_iᵀ P̂ ; Q̄ = mean
         for w in 0..workers {
             sq[w].resize(k * r, 0.0);
-            linalg::gemm_tn_kr(&st.ef[w], pmean, n, k, r, &mut sq[w]);
+            linalg::gemm_tn_kr_pooled(&st.ef[w], pmean, n, k, r, &mut sq[w], intra);
         }
         qmean.resize(k * r, 0.0);
         views.clear();
         views.extend(sq[..workers].iter().map(|v| v.as_slice()));
-        comm.allreduce_mean_into(&views, qmean);
+        comm.allreduce_mean_into_pooled(&views, qmean, intra);
         views.clear();
-        ws.views.put(views);
+        view_buf.put(views);
 
         // out = P̂ Q̄ᵀ ; e_i = M_i − out ; warm-start Q ← Q̄
-        linalg::gemm_nr_rk(pmean, qmean, n, k, r, out);
+        linalg::gemm_nr_rk_fused_pooled(pmean, qmean, n, k, r, Epilogue::None, out, intra);
         for w in 0..workers {
-            let ef = &mut st.ef[w];
-            for (e, o) in ef.iter_mut().zip(out.iter()) {
-                *e -= o;
-            }
+            linalg::vsub_pooled(out, &mut st.ef[w], intra);
         }
         st.q.copy_from_slice(qmean);
     }

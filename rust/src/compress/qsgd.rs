@@ -9,8 +9,16 @@
 
 use super::{Comm, DistCompressor, Level};
 use crate::tensor::linalg;
+use crate::util::pool::{IntraPool, SendPtr};
 use crate::util::rng::Rng;
 use crate::util::workspace::Workspace;
+
+/// Fixed chunk width of the quantization kernel.  Each chunk derives
+/// its own RNG stream from (seed, chunk index), and chunk boundaries
+/// are `c * QUANT_CHUNK` whatever the thread count — so the stochastic
+/// rounding draws (and therefore every quantized float) are bitwise
+/// invariant across `--intra-threads` (DESIGN.md §6).
+const QUANT_CHUNK: usize = 2048;
 
 pub struct Qsgd {
     pub workers: usize,
@@ -51,34 +59,44 @@ impl Qsgd {
         self.step += 1;
         out.iter_mut().for_each(|o| *o = 0.0);
         let inv = 1.0 / grads.len() as f32;
-        let q = ws.f32s.slot(0);
+        let Workspace { f32s, intra, .. } = ws;
+        let q = f32s.slot(0);
         q.resize(out.len(), 0.0);
         for (w, g) in grads.iter().enumerate() {
-            let mut rng = Rng::new(
-                self.seed
-                    ^ self.step.wrapping_mul(0xA24BAED4963EE407)
-                    ^ ((layer as u64) << 32 | w as u64),
-            );
-            Self::quantize(g, bits, &mut rng, q);
-            linalg::axpy(inv, q, out);
+            let seed = self.seed
+                ^ self.step.wrapping_mul(0xA24BAED4963EE407)
+                ^ ((layer as u64) << 32 | w as u64);
+            Self::quantize(g, bits, seed, q, intra);
+            linalg::axpy_pooled(inv, q, out, intra);
         }
     }
 
-    /// Quantize one vector with s = 2^bits - 1 levels.
-    fn quantize(x: &[f32], bits: u32, rng: &mut Rng, out: &mut [f32]) {
-        let norm = linalg::sqnorm(x).sqrt();
+    /// Quantize one vector with s = 2^bits - 1 levels.  The gradient
+    /// norm goes through the fixed-split deterministic reduction and
+    /// the rounding draws come from per-[`QUANT_CHUNK`] RNG streams, so
+    /// the result is bitwise invariant across intra thread counts.
+    fn quantize(x: &[f32], bits: u32, seed: u64, out: &mut [f32], intra: &mut IntraPool) {
+        debug_assert_eq!(x.len(), out.len());
+        let norm = linalg::sqnorm_det(x, intra).sqrt();
         if norm == 0.0 {
             out.iter_mut().for_each(|o| *o = 0.0);
             return;
         }
         let s = ((1u64 << bits.min(16)) - 1) as f32;
-        for (o, &v) in out.iter_mut().zip(x) {
-            let level = v.abs() / norm * s;
-            let floor = level.floor();
-            let p = level - floor;
-            let q = if rng.uniform() < p { floor + 1.0 } else { floor };
-            *o = v.signum() * norm * q / s;
-        }
+        let optr = SendPtr::new(out);
+        intra.parallel_for_fixed(x.len(), QUANT_CHUNK, &|c, start, len| {
+            let mut rng = Rng::new(seed ^ (c as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+            // SAFETY: fixed chunks are disjoint in-bounds ranges, each
+            // visited by exactly one thread.
+            let o = unsafe { optr.slice_mut(start, len) };
+            for (o, &v) in o.iter_mut().zip(&x[start..start + len]) {
+                let level = v.abs() / norm * s;
+                let floor = level.floor();
+                let p = level - floor;
+                let q = if rng.uniform() < p { floor + 1.0 } else { floor };
+                *o = v.signum() * norm * q / s;
+            }
+        });
     }
 }
 
@@ -145,10 +163,10 @@ mod tests {
         let x = vec![0.5f32, -1.0, 0.25, 2.0];
         let mut acc = vec![0.0f64; 4];
         let trials = 4000;
+        let mut pool = IntraPool::new(1);
         for t in 0..trials {
-            let mut rng = Rng::new(t);
             let mut q = vec![0.0f32; 4];
-            Qsgd::quantize(&x, 2, &mut rng, &mut q);
+            Qsgd::quantize(&x, 2, t, &mut q, &mut pool);
             for (a, v) in acc.iter_mut().zip(&q) {
                 *a += *v as f64;
             }
@@ -156,6 +174,25 @@ mod tests {
         for (a, v) in acc.iter().zip(&x) {
             let mean = a / trials as f64;
             assert!((mean - *v as f64).abs() < 0.05, "{mean} vs {v}");
+        }
+    }
+
+    #[test]
+    fn quantize_is_bitwise_invariant_across_intra_widths() {
+        // spans several QUANT_CHUNK chunks so the per-chunk RNG streams
+        // are genuinely exercised in parallel
+        let n = 3 * QUANT_CHUNK + 257;
+        let x: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.013).sin() * 2.0).collect();
+        let mut p1 = IntraPool::new(1);
+        let mut oracle = vec![0.0f32; n];
+        Qsgd::quantize(&x, 4, 99, &mut oracle, &mut p1);
+        for t in [2usize, 4] {
+            let mut pt = IntraPool::new(t);
+            let mut got = vec![f32::NAN; n];
+            Qsgd::quantize(&x, 4, 99, &mut got, &mut pt);
+            for (a, b) in oracle.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={t}");
+            }
         }
     }
 
@@ -207,9 +244,9 @@ mod tests {
 
     #[test]
     fn zero_vector_stays_zero() {
-        let mut rng = Rng::new(0);
+        let mut pool = IntraPool::new(1);
         let mut q = vec![1.0f32; 4];
-        Qsgd::quantize(&[0.0; 4], 4, &mut rng, &mut q);
+        Qsgd::quantize(&[0.0; 4], 4, 0, &mut q, &mut pool);
         assert_eq!(q, vec![0.0; 4]);
     }
 }

@@ -12,6 +12,7 @@
 //! gather-then-shard fallback (see `DistCompressor::round_sharded`).
 
 use super::{Comm, DistCompressor, Level};
+use crate::tensor::linalg;
 use crate::util::rng::Rng;
 use crate::util::workspace::Workspace;
 use std::collections::HashMap;
@@ -70,10 +71,12 @@ impl DistCompressor for RandomK {
 
         // synchronized coordinate choice: partial Fisher-Yates over
         // indices (the index buffer comes from the arena: rebuilt every
-        // round, allocated once)
+        // round, allocated once).  The shuffle's swap chain is a strict
+        // RNG-stream dependency, so it stays serial by design.
         let mut rng =
             Rng::new(self.seed ^ self.step.wrapping_mul(0x9E3779B97F4A7C15) ^ (layer as u64) << 17);
-        let idx = ws.usizes.slot(0);
+        let Workspace { usizes, intra, .. } = ws;
+        let idx = usizes.slot(0);
         idx.clear();
         idx.extend(0..numel);
         for i in 0..k {
@@ -89,9 +92,10 @@ impl DistCompressor for RandomK {
         let inv = 1.0 / workers as f32;
         for w in 0..workers {
             let e = &mut ef[w];
-            for (ei, g) in e.iter_mut().zip(grads[w]) {
-                *ei += g;
-            }
+            linalg::vadd_pooled(grads[w], e, intra);
+            // the kept-coordinate scatter touches random indices: serial
+            // (disjointness across threads would need an index partition
+            // that costs more than the k writes it saves)
             for &i in &idx[..k] {
                 out[i] += e[i] * inv;
                 e[i] = 0.0;

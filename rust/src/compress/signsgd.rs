@@ -10,8 +10,22 @@
 //! the scaled signs; EF keeps the residual.
 
 use super::{Comm, DistCompressor, Level};
+use crate::tensor::linalg;
+use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
 use crate::util::workspace::Workspace;
 use std::collections::HashMap;
+
+/// One contiguous run of the sign sweep: the shared serial kernel of
+/// both the gated fallback and each parallel range (so serial == pooled
+/// bitwise by construction).
+#[inline]
+fn sign_sweep(out: &mut [f32], a: &mut [f32], scale: f32, inv: f32) {
+    for (o, v) in out.iter_mut().zip(a.iter_mut()) {
+        let q = scale * v.signum();
+        *o += q * inv;
+        *v -= q;
+    }
+}
 
 pub struct SignSgd {
     pub workers: usize,
@@ -25,8 +39,17 @@ impl SignSgd {
 
     /// The sign-quantize-and-mean data path (with its EF update) shared
     /// by both aggregation entry points: only the ledger charge differs
-    /// between transports.
-    fn aggregate_mean(&mut self, layer: usize, grads: &[&[f32]], out: &mut [f32]) {
+    /// between transports.  The |a| mean goes through the fixed-split
+    /// deterministic reduction and the sign sweep is element-partitioned
+    /// (partition-invariant), so the round is bitwise invariant across
+    /// intra thread counts.
+    fn aggregate_mean(
+        &mut self,
+        layer: usize,
+        grads: &[&[f32]],
+        out: &mut [f32],
+        intra: &mut IntraPool,
+    ) {
         let numel = out.len();
         let workers = grads.len();
         let ef = self
@@ -37,16 +60,20 @@ impl SignSgd {
         let inv = 1.0 / workers as f32;
         for w in 0..workers {
             let a = &mut ef[w];
-            for (e, g) in a.iter_mut().zip(grads[w]) {
-                *e += g;
-            }
+            linalg::vadd_pooled(grads[w], a, intra);
             // scale = mean |a| makes the 1-bit update unbiased in scale
-            let scale = a.iter().map(|v| v.abs()).sum::<f32>() / numel.max(1) as f32;
-            for (i, v) in a.iter_mut().enumerate() {
-                let q = scale * v.signum();
-                out[i] += q * inv;
-                *v -= q;
+            let scale = linalg::sum_abs_det(a, intra) / numel.max(1) as f32;
+            if intra.threads() <= 1 || numel < INTRA_SERIAL_CUTOFF {
+                sign_sweep(out, a, scale, inv);
+                continue;
             }
+            let optr = SendPtr::new(out);
+            let aptr = SendPtr::new(a.as_mut_slice());
+            intra.parallel_for(numel, &|s, l| {
+                // SAFETY: disjoint in-bounds ranges of both buffers.
+                let (o, av) = unsafe { (optr.slice_mut(s, l), aptr.slice_mut(s, l)) };
+                sign_sweep(o, av, scale, inv);
+            });
         }
     }
 }
@@ -64,9 +91,9 @@ impl DistCompressor for SignSgd {
         _level: Level, // 1-bit always: no adaptivity knob (see module docs)
         comm: &mut Comm,
         out: &mut [f32],
-        _ws: &mut Workspace, // sign quantization is in-place in EF: no scratch
+        ws: &mut Workspace, // sign quantization is in-place in EF: only the intra pool is used
     ) {
-        self.aggregate_mean(layer, grads, out);
+        self.aggregate_mean(layer, grads, out, &mut ws.intra);
         comm.charge_allgather(self.payload_floats(shape, Level::High));
     }
 
@@ -82,9 +109,9 @@ impl DistCompressor for SignSgd {
         _level: Level,
         comm: &mut Comm,
         out: &mut [f32],
-        _ws: &mut Workspace,
+        ws: &mut Workspace,
     ) -> bool {
-        self.aggregate_mean(layer, grads, out);
+        self.aggregate_mean(layer, grads, out, &mut ws.intra);
         comm.charge_reduce_scatter(self.payload_floats(shape, Level::High));
         true
     }

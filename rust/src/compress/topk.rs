@@ -15,6 +15,8 @@
 //! cost (see `DistCompressor::round_sharded`).
 
 use super::{Comm, DistCompressor, Level};
+use crate::tensor::linalg;
+use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
 use crate::util::workspace::Workspace;
 use std::collections::HashMap;
 
@@ -51,13 +53,33 @@ impl TopK {
 }
 
 /// |value| of the k-th largest magnitude (the keep threshold).
-/// `mags` is caller-provided scratch (no allocation on the hot path).
+/// `mags` is caller-provided scratch (no allocation on the hot path);
+/// the magnitude fill is element-partitioned across the intra pool
+/// (positional writes — partition-invariant), and the serial selection
+/// returns the k-th order statistic of the multiset, which no
+/// permutation can change — so the threshold is bitwise invariant
+/// across intra thread counts.
 /// `total_cmp` keeps the selection NaN-safe: a NaN gradient must not
 /// panic mid-round (it sorts as the largest magnitude, because
 /// `|NaN| = NaN` orders above every finite float in the total order).
-fn threshold(mags: &mut Vec<f32>, a: &[f32], k: usize) -> f32 {
-    mags.clear();
-    mags.extend(a.iter().map(|v| v.abs()));
+fn threshold(mags: &mut Vec<f32>, a: &[f32], k: usize, intra: &mut IntraPool) -> f32 {
+    // no clear(): resize is a steady-state no-op and every element is
+    // overwritten below
+    mags.resize(a.len(), 0.0);
+    if intra.threads() <= 1 || a.len() < INTRA_SERIAL_CUTOFF {
+        for (m, &v) in mags.iter_mut().zip(a) {
+            *m = v.abs();
+        }
+    } else {
+        let mptr = SendPtr::new(mags.as_mut_slice());
+        intra.parallel_for(a.len(), &|s, l| {
+            // SAFETY: disjoint in-bounds ranges (parallel_for contract).
+            let mv = unsafe { mptr.slice_mut(s, l) };
+            for (m, &v) in mv.iter_mut().zip(&a[s..s + l]) {
+                *m = v.abs();
+            }
+        });
+    }
     let idx = mags.len() - k;
     let (_, t, _) = mags.select_nth_unstable_by(idx, f32::total_cmp);
     *t
@@ -87,7 +109,8 @@ impl DistCompressor for TopK {
         assert_eq!(workers, self.workers);
         let k = self.k_for(numel, level);
 
-        let mags = ws.f32s.slot(0);
+        let Workspace { f32s, intra, .. } = ws;
+        let mags = f32s.slot(0);
         let ef = self
             .ef
             .entry(layer)
@@ -97,13 +120,15 @@ impl DistCompressor for TopK {
         let inv = 1.0 / workers as f32;
         let mut kept_total = 0usize;
         for w in 0..workers {
-            // a = grad + ef (in place in the EF buffer)
+            // a = grad + ef (in place in the EF buffer; element-
+            // partitioned, partition-invariant)
             let a = &mut ef[w];
-            for (e, g) in a.iter_mut().zip(grads[w]) {
-                *e += g;
-            }
-            let t = threshold(mags, a, k);
-            // keep top-k (ties: keep until k reached, deterministic order)
+            linalg::vadd_pooled(grads[w], a, intra);
+            let t = threshold(mags, a, k, intra);
+            // keep top-k (ties: keep until k reached, deterministic
+            // order).  Serial by design: the kept-counter tie-break is a
+            // sequential scan, and splitting it would change which tied
+            // coordinates survive.
             let mut kept = 0usize;
             for (i, v) in a.iter_mut().enumerate() {
                 // keep while under k; zeros only count when the threshold

@@ -104,6 +104,13 @@ impl Dataset {
         self.gather_into(idx, false, out);
     }
 
+    /// Gather a test batch into a reusable buffer (the arena-backed
+    /// eval path: `evaluate_into` reuses one batch across every eval
+    /// batch of every epoch).
+    pub fn test_batch_into(&self, idx: &[usize], out: &mut Batch) {
+        self.gather_into(idx, true, out);
+    }
+
     fn gather_into(&self, idx: &[usize], test: bool, out: &mut Batch) {
         out.xf.clear();
         out.xi.clear();

@@ -20,8 +20,8 @@ accordion — Adaptive Gradient Communication via Critical Learning Regime Ident
 
 USAGE:
   accordion train [--config FILE] [--set key=value ...] [--threads N]
-                  [--transport dense|sharded] [--bucket-kb N] [--no-overlap]
-                  [--out DIR] [--save PATH]
+                  [--intra-threads N] [--transport dense|sharded]
+                  [--bucket-kb N] [--no-overlap] [--out DIR] [--save PATH]
   accordion eval  --model NAME --ckpt PATH [--set key=value ...]
   accordion repro --exp <id> [--fast] [--set key=value ...] [--out DIR]
   accordion list
@@ -30,6 +30,15 @@ USAGE:
   --threads N   run the parallel execution engine on N host threads
                 (ALL results, including the simulated time column, are
                 bit-identical to the sequential N=1 path)
+  --intra-threads N
+                intra-op kernel threads per task (TOML `intra_threads`):
+                GEMMs, reductions, and element-wise kernels inside ONE
+                worker's step parallelize across N threads.  Bitwise
+                identical at every N: disjoint-range kernels are
+                partition-invariant and every fold uses a fixed-split
+                tree whose chunk boundaries derive from the problem
+                size only.  Composes with --threads (budget: at most
+                threads x intra-threads OS threads busy at once).
   --transport T aggregation transport (TOML key `transport`); see
                 configs/dense.toml and configs/sharded.toml:
                   dense    replicated ring all-reduce: every worker owns
@@ -104,6 +113,9 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::from_table(&table)?;
     if let Some(t) = args.usize_opt("threads") {
         cfg.threads = t.max(1);
+    }
+    if let Some(t) = args.usize_opt("intra-threads") {
+        cfg.intra_threads = t.max(1);
     }
     if let Some(tr) = args.opt("transport") {
         cfg.transport = TransportCfg::parse(tr)?;

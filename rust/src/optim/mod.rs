@@ -15,6 +15,7 @@
 
 use crate::collectives::{DenseReplicated, Transport};
 use crate::tensor::Tensor;
+use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
 
 /// SGD + momentum.  `velocity` is lazily sized on the first step.
 pub struct Sgd {
@@ -63,25 +64,84 @@ impl Sgd {
     ) {
         assert_eq!(params.len(), grads.len());
         self.ensure_state(params);
+        let (mu, nesterov, wd) = (self.momentum, self.nesterov, self.weight_decay);
         for (l, (p, g)) in params.iter_mut().zip(grads).enumerate() {
             let v = &mut self.velocity[l];
             for w in 0..transport.owners() {
-                for i in transport.owned_range(p.numel(), w) {
-                    let mut d = g.data[i] + self.weight_decay * p.data[i];
-                    v[i] = self.momentum * v[i] + d;
-                    if self.nesterov {
-                        d += self.momentum * v[i];
-                    } else {
-                        d = v[i];
-                    }
-                    p.data[i] -= lr * d;
+                let range = transport.owned_range(p.numel(), w);
+                sgd_range(
+                    &mut p.data[range.clone()],
+                    &mut v[range.clone()],
+                    &g.data[range],
+                    lr,
+                    mu,
+                    nesterov,
+                    wd,
+                );
+            }
+        }
+    }
+
+    /// [`Sgd::step_owned`] with the element loop partitioned across an
+    /// intra-op pool.  The update is element-independent (each velocity
+    /// cell pairs with exactly one parameter), so ANY disjoint split is
+    /// bitwise identical to the serial sweep — pooled and serial steps
+    /// interchange freely, at any `--intra-threads`.
+    pub fn step_owned_pooled(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+        transport: &dyn Transport,
+        intra: &mut IntraPool,
+    ) {
+        assert_eq!(params.len(), grads.len());
+        self.ensure_state(params);
+        let (mu, nesterov, wd) = (self.momentum, self.nesterov, self.weight_decay);
+        for (l, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let v = &mut self.velocity[l];
+            for w in 0..transport.owners() {
+                let range = transport.owned_range(p.numel(), w);
+                let pr = &mut p.data[range.clone()];
+                let vr = &mut v[range.clone()];
+                let gr = &g.data[range];
+                if intra.threads() <= 1 || pr.len() < INTRA_SERIAL_CUTOFF {
+                    sgd_range(pr, vr, gr, lr, mu, nesterov, wd);
+                    continue;
                 }
+                let pp = SendPtr::new(pr);
+                let vp = SendPtr::new(vr);
+                intra.parallel_for(gr.len(), &|s, len| {
+                    // SAFETY: disjoint in-bounds ranges of both buffers
+                    // (parallel_for contract), outliving the dispatch.
+                    let (pv, vv) = unsafe { (pp.slice_mut(s, len), vp.slice_mut(s, len)) };
+                    sgd_range(pv, vv, &gr[s..s + len], lr, mu, nesterov, wd);
+                });
             }
         }
     }
 
     pub fn reset(&mut self) {
         self.velocity.clear();
+    }
+}
+
+/// One contiguous run of the SGD+momentum update (torch.optim.SGD
+/// semantics; velocity holds the grad+wd accumulation).  The shared
+/// serial kernel of [`Sgd::step_owned`] and [`Sgd::step_owned_pooled`].
+#[inline]
+fn sgd_range(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32, nesterov: bool, wd: f32) {
+    debug_assert_eq!(p.len(), v.len());
+    debug_assert_eq!(p.len(), g.len());
+    for i in 0..p.len() {
+        let mut d = g[i] + wd * p[i];
+        v[i] = mu * v[i] + d;
+        if nesterov {
+            d += mu * v[i];
+        } else {
+            d = v[i];
+        }
+        p[i] -= lr * d;
     }
 }
 
@@ -185,6 +245,35 @@ mod tests {
         }
         for (a, b) in pd[0].data.iter().zip(&ps[0].data) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn pooled_step_is_bitwise_identical_to_serial() {
+        use crate::collectives::ShardedOwnership;
+        // 9000 elements (past the serial gate) across both transports:
+        // the intra-partitioned step must match the serial sweep exactly,
+        // including momentum state across repeated steps
+        let n = 9000;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).sin()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.07).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| 0.01 * i as f32 - 3.0).collect();
+        for transport in [
+            Box::new(DenseReplicated) as Box<dyn Transport>,
+            Box::new(ShardedOwnership::new(3)),
+        ] {
+            let mut serial = Sgd::new(0.9, true, 5e-4);
+            let mut pooled = Sgd::new(0.9, true, 5e-4);
+            let mut ps = [t(init.clone())];
+            let mut pp = [t(init.clone())];
+            let mut pool = IntraPool::new(4);
+            for g in [&g1, &g2] {
+                serial.step_owned(&mut ps, &[t(g.clone())], 0.1, &*transport);
+                pooled.step_owned_pooled(&mut pp, &[t(g.clone())], 0.1, &*transport, &mut pool);
+            }
+            for (a, b) in ps[0].data.iter().zip(&pp[0].data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 

@@ -83,6 +83,22 @@ pub trait Backend: Send + Sync {
     /// (mean loss, correct-prediction count).
     fn eval_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, f32)>;
 
+    /// Arena-backed variant of [`Backend::eval_step`]: draw all forward
+    /// scratch from `ws` so a steady-state eval batch allocates nothing
+    /// (the sim backend implements this natively; the default falls
+    /// back to [`Backend::eval_step`], correct for backends whose
+    /// execution allocates anyway).
+    fn eval_step_into(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        batch: &Batch,
+        ws: &mut Workspace,
+    ) -> Result<(f32, f32)> {
+        let _ = ws;
+        self.eval_step(rt, params, batch)
+    }
+
     /// Hessian-vector product at `params` in direction `v` (Fig. 3 probe).
     fn hvp_step(
         &self,
@@ -205,6 +221,17 @@ impl ModelPrograms {
     /// eval_step(params, x, y) -> (mean loss, correct count)
     pub fn eval_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, f32)> {
         self.backend.eval_step(rt, params, batch)
+    }
+
+    /// See [`Backend::eval_step_into`] (the arena-backed eval path).
+    pub fn eval_step_into(
+        &self,
+        rt: &Runtime,
+        params: &[Tensor],
+        batch: &Batch,
+        ws: &mut Workspace,
+    ) -> Result<(f32, f32)> {
+        self.backend.eval_step_into(rt, params, batch, ws)
     }
 
     /// hvp_step(params, v, x, y) -> Hv..

@@ -23,9 +23,16 @@
 use super::{Backend, Runtime};
 use crate::data::Batch;
 use crate::models::ModelMeta;
-use crate::tensor::{linalg, Tensor};
+use crate::tensor::linalg::{self, Epilogue};
+use crate::tensor::Tensor;
+use crate::util::pool::{IntraPool, SendPtr};
 use crate::util::workspace::Workspace;
 use anyhow::{bail, Result};
+
+/// Fixed-split row-chunk width of the softmax-xent loss fold: the f64
+/// loss partials are per-chunk, folded in ascending chunk order, so the
+/// loss bits never depend on the intra thread count (DESIGN.md §6).
+const XENT_ROW_CHUNK: usize = 8;
 
 pub struct SimBackend {
     /// Layer widths `[input, hidden.., classes]`.
@@ -100,8 +107,19 @@ impl SimBackend {
 
     /// Forward pass into reusable per-layer activation buffers (hidden
     /// layers are post-ReLU, the last entry holds the logits).  Buffers
-    /// are resized in place, so steady-state forward allocates nothing.
-    fn forward_into(&self, params: &[Tensor], x: &[f32], bsz: usize, acts: &mut [Vec<f32>]) {
+    /// are resized in place — WITHOUT a zero fill: the row-partitioned
+    /// GEMM is write-through and the bias-add + ReLU epilogue is fused
+    /// into its output tile, so every element is stored exactly once.
+    /// Steady-state forward allocates nothing and never touches a byte
+    /// it does not produce.
+    fn forward_into(
+        &self,
+        params: &[Tensor],
+        x: &[f32],
+        bsz: usize,
+        acts: &mut [Vec<f32>],
+        intra: &mut IntraPool,
+    ) {
         let nl = self.dims.len() - 1;
         debug_assert_eq!(acts.len(), nl);
         for i in 0..nl {
@@ -109,75 +127,77 @@ impl SimBackend {
             // split so act i-1 (input) and act i (output) coexist
             let (prev, cur) = acts.split_at_mut(i);
             let out = &mut cur[0];
-            out.clear();
+            // no zero fill (see above): a steady-state resize is a no-op
             out.resize(bsz * dout, 0.0);
             let input: &[f32] = if i == 0 { x } else { &prev[i - 1] };
             let w = &params[2 * i];
             let b = &params[2 * i + 1];
-            linalg::gemm_nk_kr(input, &w.data, bsz, din, dout, out);
-            for row in out.chunks_exact_mut(dout) {
-                for (o, bias) in row.iter_mut().zip(&b.data) {
-                    *o += bias;
-                }
-            }
-            if i < nl - 1 {
-                for v in out.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
+            let epi = if i < nl - 1 {
+                Epilogue::BiasRelu(&b.data)
+            } else {
+                Epilogue::Bias(&b.data)
+            };
+            linalg::gemm_nk_kr_fused_pooled(input, &w.data, bsz, din, dout, epi, out, intra);
         }
-    }
-
-    /// Allocating convenience wrapper over [`SimBackend::forward_into`]
-    /// (eval path; the train hot loop goes through the workspace).
-    fn forward(&self, params: &[Tensor], x: &[f32], bsz: usize) -> Vec<Vec<f32>> {
-        let mut acts = vec![Vec::new(); self.dims.len() - 1];
-        self.forward_into(params, x, bsz, &mut acts);
-        acts
     }
 }
 
 /// Softmax cross-entropy over logits `[bsz, c]`: returns (mean loss,
 /// correct count) and fills `dlogits` with the mean-loss gradient.
+///
+/// Row-parallel over fixed [`XENT_ROW_CHUNK`]-row chunks: each chunk's
+/// gradient rows are disjoint writes and its (loss, correct) partials
+/// fold on the caller in ascending chunk order, so every output is
+/// bitwise invariant across intra thread counts.  `dlogits` is fully
+/// overwritten (no pre-zeroing needed).
 fn softmax_xent(
     logits: &[f32],
     y: &[i32],
     bsz: usize,
     c: usize,
     dlogits: &mut [f32],
+    intra: &mut IntraPool,
 ) -> (f32, f32) {
-    let mut loss = 0.0f64;
-    let mut correct = 0.0f32;
+    debug_assert_eq!(logits.len(), bsz * c);
+    debug_assert_eq!(dlogits.len(), bsz * c);
     let inv_b = 1.0 / bsz as f32;
-    for b in 0..bsz {
-        let row = &logits[b * c..(b + 1) * c];
-        let mut m = f32::NEG_INFINITY;
-        let mut best = 0usize;
-        for (j, &v) in row.iter().enumerate() {
-            if v > m {
-                m = v;
-                best = j;
+    let dptr = SendPtr::new(dlogits);
+    let (loss, correct) = intra.parallel_reduce2(bsz, XENT_ROW_CHUNK, &|b0, rows| {
+        // SAFETY: fixed chunks are disjoint row ranges, each visited by
+        // exactly one thread; the buffer outlives the dispatch.
+        let d = unsafe { dptr.slice_mut(b0 * c, rows * c) };
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        for bi in 0..rows {
+            let b = b0 + bi;
+            let row = &logits[b * c..(b + 1) * c];
+            let mut m = f32::NEG_INFINITY;
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > m {
+                    m = v;
+                    best = j;
+                }
+            }
+            let mut sum = 0.0f32;
+            for &v in row {
+                sum += (v - m).exp();
+            }
+            let lse = m + sum.ln();
+            let t = y[b] as usize;
+            loss += (lse - row[t]) as f64;
+            if best == t {
+                correct += 1.0;
+            }
+            for j in 0..c {
+                let p = (row[j] - lse).exp();
+                let target = if j == t { 1.0 } else { 0.0 };
+                d[bi * c + j] = (p - target) * inv_b;
             }
         }
-        let mut sum = 0.0f32;
-        for &v in row {
-            sum += (v - m).exp();
-        }
-        let lse = m + sum.ln();
-        let t = y[b] as usize;
-        loss += (lse - row[t]) as f64;
-        if best == t {
-            correct += 1.0;
-        }
-        for j in 0..c {
-            let p = (row[j] - lse).exp();
-            let target = if j == t { 1.0 } else { 0.0 };
-            dlogits[b * c + j] = (p - target) * inv_b;
-        }
-    }
-    ((loss / bsz as f64) as f32, correct)
+        (loss, correct)
+    });
+    ((loss / bsz as f64) as f32, correct as f32)
 }
 
 impl Backend for SimBackend {
@@ -213,59 +233,88 @@ impl Backend for SimBackend {
         let c = self.dims[nl];
         debug_assert_eq!(grads.len(), params.len());
 
-        // arena layout: nl activation buffers + 2 delta buffers that the
-        // backward pass ping-pongs between
-        let slots = ws.f32s.slots(nl + 2);
+        // split-borrow the workspace: the f32 arena holds nl activation
+        // buffers + 2 delta buffers the backward pass ping-pongs
+        // between; the intra pool drives every kernel
+        let Workspace { f32s, intra, .. } = ws;
+        let slots = f32s.slots(nl + 2);
         let (acts, deltas) = slots.split_at_mut(nl);
         let (da, db) = deltas.split_at_mut(1);
         let mut d_cur: &mut Vec<f32> = &mut da[0];
         let mut d_nxt: &mut Vec<f32> = &mut db[0];
 
-        self.forward_into(params, &batch.xf, bsz, acts);
+        self.forward_into(params, &batch.xf, bsz, acts, intra);
 
-        d_cur.clear();
+        // fully overwritten by softmax_xent: resize only (steady-state
+        // no-op), no zero fill
         d_cur.resize(bsz * c, 0.0);
-        let (loss, _correct) = softmax_xent(&acts[nl - 1], &batch.y, bsz, c, d_cur);
+        let (loss, _correct) = softmax_xent(&acts[nl - 1], &batch.y, bsz, c, d_cur, intra);
 
         for i in (0..nl).rev() {
             let (din, dout) = (self.dims[i], self.dims[i + 1]);
             {
+                // weight gradient: write-through transpose GEMM,
+                // partitioned over the din rows of the output
                 let input: &[f32] = if i == 0 { &batch.xf } else { &acts[i - 1] };
-                linalg::gemm_tn_kr(input, d_cur, bsz, din, dout, &mut grads[2 * i].data);
+                linalg::gemm_tn_kr_pooled(
+                    input,
+                    d_cur,
+                    bsz,
+                    din,
+                    dout,
+                    &mut grads[2 * i].data,
+                    intra,
+                );
             }
-            {
-                // the bias gradient accumulates over rows: zero it first
-                // (the weight gradient is fully overwritten by the gemm)
-                let gb = &mut grads[2 * i + 1].data;
-                gb.fill(0.0);
-                for row in d_cur.chunks_exact(dout) {
-                    for (g, v) in gb.iter_mut().zip(row) {
-                        *g += v;
-                    }
-                }
-            }
+            // bias gradient: deterministic column sums (write-through)
+            linalg::colsum_pooled(d_cur, bsz, dout, &mut grads[2 * i + 1].data, intra);
             if i > 0 {
-                d_nxt.clear();
+                // dA = dZ Wᵀ with the ReLU-backward mask fused into the
+                // output tile; fully overwritten, so no zero fill
                 d_nxt.resize(bsz * din, 0.0);
-                linalg::gemm_nr_rk(d_cur, &params[2 * i].data, bsz, din, dout, d_nxt);
-                for (dp, &a) in d_nxt.iter_mut().zip(acts[i - 1].iter()) {
-                    if a <= 0.0 {
-                        *dp = 0.0;
-                    }
-                }
+                linalg::gemm_nr_rk_fused_pooled(
+                    d_cur,
+                    &params[2 * i].data,
+                    bsz,
+                    din,
+                    dout,
+                    Epilogue::ReluMask(&acts[i - 1]),
+                    d_nxt,
+                    intra,
+                );
                 std::mem::swap(&mut d_cur, &mut d_nxt);
             }
         }
         Ok(loss)
     }
 
-    fn eval_step(&self, _rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, f32)> {
+    fn eval_step(&self, rt: &Runtime, params: &[Tensor], batch: &Batch) -> Result<(f32, f32)> {
+        // one implementation: the allocating entry point delegates to
+        // the arena path with a throwaway workspace, so the two can
+        // never drift numerically
+        let mut ws = Workspace::new();
+        self.eval_step_into(rt, params, batch, &mut ws)
+    }
+
+    fn eval_step_into(
+        &self,
+        _rt: &Runtime,
+        params: &[Tensor],
+        batch: &Batch,
+        ws: &mut Workspace,
+    ) -> Result<(f32, f32)> {
         let bsz = self.check_batch(params, batch)?;
         let nl = self.dims.len() - 1;
         let c = self.dims[nl];
-        let acts = self.forward(params, &batch.xf, bsz);
-        let mut scratch = vec![0.0f32; bsz * c];
-        let (loss, correct) = softmax_xent(&acts[nl - 1], &batch.y, bsz, c, &mut scratch);
+        let Workspace { f32s, intra, .. } = ws;
+        // arena layout: nl activation buffers + 1 dlogits scratch the
+        // loss gradient lands in (unused by eval, fully overwritten)
+        let slots = f32s.slots(nl + 1);
+        let (acts, rest) = slots.split_at_mut(nl);
+        let scratch = &mut rest[0];
+        self.forward_into(params, &batch.xf, bsz, acts, intra);
+        scratch.resize(bsz * c, 0.0);
+        let (loss, correct) = softmax_xent(&acts[nl - 1], &batch.y, bsz, c, scratch, intra);
         Ok((loss, correct))
     }
 

@@ -1,36 +1,204 @@
-//! blas-lite: the dense kernels on the compression hot path.
+//! blas-lite: the dense kernels on the training + compression hot path.
 //!
-//! Shapes here are PowerSGD-shaped — `m` is `n x k` with small `r`-column
-//! partners — so the kernels are written for the tall-skinny regime:
-//! row-major streaming over `m` with the tiny `r`-wide accumulators kept
-//! in registers.  Correctness is pinned by unit tests against naive
-//! implementations and (via the compressor round) by parity tests against
-//! the L1 Pallas artifacts.
+//! Two kernel families share this file:
+//!
+//!  * the PowerSGD-shaped tall-skinny GEMMs (`m` is `n x k` with tiny
+//!    `r`-column partners) keep the const-R register-accumulator trick —
+//!    the §Perf pass measured the generic path at ~2-3x slower because a
+//!    dynamic-R accumulator cannot live in registers;
+//!  * the sim backend's forward/backward GEMMs (`r` = layer width, far
+//!    past the const-R table) run a cache-blocked kernel: k-panels of
+//!    [`KC`] so the `q` panel stays cache-resident across the row tile,
+//!    4-wide register accumulators per column block, and the bias-add /
+//!    ReLU [`Epilogue`] fused into the output tile of the last panel.
+//!
+//! Every kernel has a `_pooled` entry point that row-partitions the
+//! output across an [`IntraPool`] (`--intra-threads`).  Determinism
+//! contract (DESIGN.md §6): each output row is produced by exactly one
+//! thread running the identical serial kernel, so results are bitwise
+//! invariant from 1 intra thread to N; folds (dot/norm/abs-sum) go
+//! through the fixed-split reduction tree ([`REDUCE_CHUNK`] chunks whose
+//! boundaries derive from the problem size only).
+//!
+//! Correctness is pinned by unit tests against naive implementations,
+//! bitwise serial-vs-pooled parity tests, and (via the compressor round)
+//! by parity tests against the L1 Pallas artifacts.
 
-/// y[n,r] = m[n,k] @ q[k,r]   (PowerSGD projection)
-///
-/// Dispatches to const-R specializations for the ranks PowerSGD actually
-/// uses (1, 2, 4) — the §Perf pass measured the generic path (kept below
-/// as [`gemm_nk_kr_generic`] for the A/B bench) at ~2-3x slower because
-/// the R-wide accumulator cannot live in registers when R is dynamic.
-pub fn gemm_nk_kr(m: &[f32], q: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
-    match r {
-        1 => {
-            debug_assert_eq!(out.len(), n);
-            for i in 0..n {
-                out[i] = dot(&m[i * k..(i + 1) * k], &q[..k]);
+use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
+
+/// k-panel width of the cache-blocked generic GEMM: a `KC x r` panel of
+/// the right-hand operand stays hot while the row tile streams over it.
+/// A compile-time constant, so panel boundaries — and therefore the f32
+/// accumulation order — never depend on the thread count.
+const KC: usize = 128;
+
+/// Below this many multiply-accumulates a kernel stays on the serial
+/// path even on a wide pool: the two barrier rendezvous of a dispatch
+/// cost more than the work.  Safe for partition-invariant kernels only
+/// (per-element results do not depend on the split), which is the only
+/// place it is used.
+const PAR_MIN_MACS: usize = 16 * 1024;
+
+/// Fixed-split chunk width of the deterministic reductions
+/// ([`sqnorm_det`], [`sum_abs_det`]): chunk boundaries are
+/// `c * REDUCE_CHUNK` whatever the thread count (DESIGN.md §6).
+pub const REDUCE_CHUNK: usize = 4096;
+
+/// Epilogue fused into the output tile of the fused GEMM entry points.
+/// The borrowed operands are column-indexed (`Bias`/`BiasRelu`: one
+/// value per output column) or element-aligned with the output
+/// (`ReluMask`: the forward activation whose sign gates the backward
+/// delta).
+#[derive(Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// write the raw GEMM result
+    None,
+    /// `out[i, j] += bias[j]`
+    Bias(&'a [f32]),
+    /// `out[i, j] = max(out[i, j] + bias[j], 0)` — the forward fusion
+    BiasRelu(&'a [f32]),
+    /// `out[i, j] = 0 where mask[i, j] <= 0` — the ReLU-backward fusion
+    ReluMask(&'a [f32]),
+}
+
+impl<'a> Epilogue<'a> {
+    /// The epilogue restricted to output rows `i0 .. i0 + rows` of width
+    /// `width` (row-partitioned dispatch): column-indexed variants are
+    /// row-independent; the element-aligned mask is re-sliced.
+    fn slice_rows(&self, i0: usize, rows: usize, width: usize) -> Epilogue<'a> {
+        match *self {
+            Epilogue::ReluMask(m) => Epilogue::ReluMask(&m[i0 * width..(i0 + rows) * width]),
+            other => other,
+        }
+    }
+
+    /// Apply to local output row `i` (relative to this kernel's slice).
+    #[inline]
+    fn apply_row(&self, i: usize, orow: &mut [f32]) {
+        match *self {
+            Epilogue::None => {}
+            Epilogue::Bias(b) => {
+                for (o, bv) in orow.iter_mut().zip(b) {
+                    *o += bv;
+                }
+            }
+            Epilogue::BiasRelu(b) => {
+                for (o, bv) in orow.iter_mut().zip(b) {
+                    *o += bv;
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+            Epilogue::ReluMask(m) => {
+                let w = orow.len();
+                for (o, &a) in orow.iter_mut().zip(&m[i * w..(i + 1) * w]) {
+                    if a <= 0.0 {
+                        *o = 0.0;
+                    }
+                }
             }
         }
-        2 => gemm_nk_kr_const::<2>(m, q, n, k, out),
-        4 => gemm_nk_kr_const::<4>(m, q, n, k, out),
-        _ => gemm_nk_kr_generic(m, q, n, k, r, out),
     }
 }
 
-fn gemm_nk_kr_const<const R: usize>(m: &[f32], q: &[f32], n: usize, k: usize, out: &mut [f32]) {
+// --------------------------------------------------------------- nk_kr
+
+/// y[n,r] = m[n,k] @ q[k,r]   (PowerSGD projection / sim forward)
+///
+/// Dispatches to const-R specializations for the ranks PowerSGD actually
+/// uses (1, 2, 3, 4) and to the cache-blocked kernel above that.
+pub fn gemm_nk_kr(m: &[f32], q: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
+    gemm_nk_kr_fused(m, q, n, k, r, Epilogue::None, out);
+}
+
+/// [`gemm_nk_kr`] with the epilogue fused into the output tile.  Fully
+/// overwrites `out` (write-through on the first k-panel): callers never
+/// need to zero the buffer.
+pub fn gemm_nk_kr_fused(
+    m: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
     debug_assert_eq!(m.len(), n * k);
+    debug_assert_eq!(q.len(), k * r);
+    debug_assert_eq!(out.len(), n * r);
+    match r {
+        1 => {
+            for i in 0..n {
+                out[i] = dot(&m[i * k..(i + 1) * k], &q[..k]);
+                epi.apply_row(i, &mut out[i..i + 1]);
+            }
+        }
+        2 => nk_kr_const::<2>(m, q, n, k, &epi, out),
+        3 => nk_kr_const::<3>(m, q, n, k, &epi, out),
+        4 => nk_kr_const::<4>(m, q, n, k, &epi, out),
+        _ => nk_kr_tiled(m, q, n, k, r, &epi, out),
+    }
+}
+
+/// Row-partitioned [`gemm_nk_kr_fused`]: each thread produces whole
+/// output rows with the identical serial kernel — bitwise invariant
+/// across pool widths.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nk_kr_fused_pooled(
+    m: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+    pool: &mut IntraPool,
+) {
+    if pool.threads() <= 1 || n <= 1 || n * k * r < PAR_MIN_MACS {
+        return gemm_nk_kr_fused(m, q, n, k, r, epi, out);
+    }
+    debug_assert_eq!(m.len(), n * k);
+    debug_assert_eq!(out.len(), n * r);
+    let optr = SendPtr::new(out);
+    pool.parallel_for(n, &|i0, rows| {
+        // SAFETY: row ranges are disjoint and in bounds (parallel_for
+        // contract); the buffer outlives the dispatch.
+        let o = unsafe { optr.slice_mut(i0 * r, rows * r) };
+        gemm_nk_kr_fused(
+            &m[i0 * k..(i0 + rows) * k],
+            q,
+            rows,
+            k,
+            r,
+            epi.slice_rows(i0, rows, r),
+            o,
+        );
+    });
+}
+
+/// [`gemm_nk_kr`] on a pool (no epilogue).
+pub fn gemm_nk_kr_pooled(
+    m: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    out: &mut [f32],
+    pool: &mut IntraPool,
+) {
+    gemm_nk_kr_fused_pooled(m, q, n, k, r, Epilogue::None, out, pool);
+}
+
+fn nk_kr_const<const R: usize>(
+    m: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    epi: &Epilogue,
+    out: &mut [f32],
+) {
     debug_assert_eq!(q.len(), k * R);
-    debug_assert_eq!(out.len(), n * R);
     for i in 0..n {
         let row = &m[i * k..(i + 1) * k];
         let mut acc = [0.0f32; R];
@@ -40,10 +208,86 @@ fn gemm_nk_kr_const<const R: usize>(m: &[f32], q: &[f32], n: usize, k: usize, ou
             }
         }
         out[i * R..(i + 1) * R].copy_from_slice(&acc);
+        epi.apply_row(i, &mut out[i * R..(i + 1) * R]);
     }
 }
 
-/// Generic-R reference path (pre-optimization baseline; see §Perf).
+/// The cache-blocked generic path: k-panels of [`KC`] outer (so the
+/// `KC x r` slice of `q` stays hot across the row tile), 4-wide register
+/// accumulators per column block, write-through on panel 0, epilogue
+/// fused into the last panel's output tile.  Per output element the k
+/// order is plain ascending (panel partials combine in panel order), so
+/// the split is invisible to determinism.
+fn nk_kr_tiled(
+    m: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    epi: &Epilogue,
+    out: &mut [f32],
+) {
+    let panels = k.div_ceil(KC).max(1);
+    for p in 0..panels {
+        let kp = p * KC;
+        let kw = KC.min(k - kp);
+        let first = p == 0;
+        let last = p + 1 == panels;
+        for i in 0..n {
+            let row = &m[i * k + kp..i * k + kp + kw];
+            let orow = &mut out[i * r..(i + 1) * r];
+            let mut j0 = 0;
+            while j0 + 4 <= r {
+                let acc = nk_block::<4>(row, q, r, kp, j0);
+                if first {
+                    orow[j0..j0 + 4].copy_from_slice(&acc);
+                } else {
+                    for jj in 0..4 {
+                        orow[j0 + jj] += acc[jj];
+                    }
+                }
+                j0 += 4;
+            }
+            while j0 < r {
+                let mut s = 0.0f32;
+                for (off, &a) in row.iter().enumerate() {
+                    s += a * q[(kp + off) * r + j0];
+                }
+                if first {
+                    orow[j0] = s;
+                } else {
+                    orow[j0] += s;
+                }
+                j0 += 1;
+            }
+            if last {
+                epi.apply_row(i, orow);
+            }
+        }
+    }
+}
+
+/// One column block's register accumulator over a k-panel.
+#[inline]
+fn nk_block<const JB: usize>(
+    row_panel: &[f32],
+    q: &[f32],
+    r: usize,
+    kp: usize,
+    j0: usize,
+) -> [f32; JB] {
+    let mut acc = [0.0f32; JB];
+    for (off, &a) in row_panel.iter().enumerate() {
+        let qrow = &q[(kp + off) * r + j0..(kp + off) * r + j0 + JB];
+        for jj in 0..JB {
+            acc[jj] += a * qrow[jj];
+        }
+    }
+    acc
+}
+
+/// Generic-R reference path (pre-optimization baseline; kept for the
+/// A/B bench in `benches/compression.rs` and `benches/kernels.rs`).
 pub fn gemm_nk_kr_generic(m: &[f32], q: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
     debug_assert_eq!(m.len(), n * k);
     debug_assert_eq!(q.len(), k * r);
@@ -60,31 +304,124 @@ pub fn gemm_nk_kr_generic(m: &[f32], q: &[f32], n: usize, k: usize, r: usize, ou
     }
 }
 
-/// y[k,r] = m[n,k]ᵀ @ p[n,r]   (PowerSGD back-projection)
+// --------------------------------------------------------------- tn_kr
+
+/// y[k,r] = m[n,k]ᵀ @ p[n,r]   (PowerSGD back-projection / weight grad)
 ///
-/// Same const-R dispatch as [`gemm_nk_kr`]; the broadcast of the tiny
-/// `p` row into R registers is the win here.
+/// Write-through (row 0 stores, later rows accumulate): callers never
+/// need to zero `out`.  Same const-R dispatch family as
+/// [`gemm_nk_kr`]; the broadcast of the tiny `p` row into R registers is
+/// the win there, a 256-wide axpy per (i, a) pair in the generic case.
 pub fn gemm_tn_kr(m: &[f32], p: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
+    debug_assert_eq!(m.len(), n * k);
+    debug_assert_eq!(p.len(), n * r);
+    debug_assert_eq!(out.len(), k * r);
+    tn_kr_range(m, p, n, k, r, 0, k, out);
+}
+
+/// [`gemm_tn_kr`] partitioned over output rows (the k dimension): each
+/// thread reduces the full batch for its own row range with the
+/// identical per-element order (i ascending) — bitwise invariant across
+/// pool widths.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_kr_pooled(
+    m: &[f32],
+    p: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    out: &mut [f32],
+    pool: &mut IntraPool,
+) {
+    if pool.threads() <= 1 || k <= 1 || n * k * r < PAR_MIN_MACS {
+        return gemm_tn_kr(m, p, n, k, r, out);
+    }
+    debug_assert_eq!(m.len(), n * k);
+    debug_assert_eq!(p.len(), n * r);
+    debug_assert_eq!(out.len(), k * r);
+    let optr = SendPtr::new(out);
+    pool.parallel_for(k, &|a0, aw| {
+        // SAFETY: output-row ranges are disjoint and in bounds.
+        let o = unsafe { optr.slice_mut(a0 * r, aw * r) };
+        tn_kr_range(m, p, n, k, r, a0, aw, o);
+    });
+}
+
+/// Output rows `a0 .. a0 + aw` of the transpose GEMM (`out` is the
+/// `aw * r` sub-slice).  The serial entry point is `(0, k)`.
+#[allow(clippy::too_many_arguments)]
+fn tn_kr_range(
+    m: &[f32],
+    p: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    a0: usize,
+    aw: usize,
+    out: &mut [f32],
+) {
     match r {
-        1 => gemm_tn_kr_const::<1>(m, p, n, k, out),
-        2 => gemm_tn_kr_const::<2>(m, p, n, k, out),
-        4 => gemm_tn_kr_const::<4>(m, p, n, k, out),
-        _ => gemm_tn_kr_generic(m, p, n, k, r, out),
+        1 => tn_kr_range_const::<1>(m, p, n, k, a0, aw, out),
+        2 => tn_kr_range_const::<2>(m, p, n, k, a0, aw, out),
+        3 => tn_kr_range_const::<3>(m, p, n, k, a0, aw, out),
+        4 => tn_kr_range_const::<4>(m, p, n, k, a0, aw, out),
+        _ => {
+            if n == 0 {
+                out.iter_mut().for_each(|v| *v = 0.0);
+                return;
+            }
+            for i in 0..n {
+                let row = &m[i * k + a0..i * k + a0 + aw];
+                let pr = &p[i * r..(i + 1) * r];
+                if i == 0 {
+                    for (a_off, &mv) in row.iter().enumerate() {
+                        let orow = &mut out[a_off * r..(a_off + 1) * r];
+                        for (o, &pv) in orow.iter_mut().zip(pr) {
+                            *o = mv * pv;
+                        }
+                    }
+                } else {
+                    for (a_off, &mv) in row.iter().enumerate() {
+                        let orow = &mut out[a_off * r..(a_off + 1) * r];
+                        for (o, &pv) in orow.iter_mut().zip(pr) {
+                            *o += mv * pv;
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
-fn gemm_tn_kr_const<const R: usize>(m: &[f32], p: &[f32], n: usize, k: usize, out: &mut [f32]) {
-    debug_assert_eq!(m.len(), n * k);
-    debug_assert_eq!(p.len(), n * R);
-    debug_assert_eq!(out.len(), k * R);
-    out.iter_mut().for_each(|v| *v = 0.0);
+fn tn_kr_range_const<const R: usize>(
+    m: &[f32],
+    p: &[f32],
+    n: usize,
+    k: usize,
+    a0: usize,
+    aw: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), aw * R);
+    if n == 0 {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
     for i in 0..n {
-        let row = &m[i * k..(i + 1) * k];
+        let row = &m[i * k + a0..i * k + a0 + aw];
         let mut pr = [0.0f32; R];
         pr.copy_from_slice(&p[i * R..(i + 1) * R]);
-        for (a, orow) in row.iter().zip(out.chunks_exact_mut(R)) {
-            for j in 0..R {
-                orow[j] += a * pr[j];
+        if i == 0 {
+            for (a, orow) in row.iter().zip(out.chunks_exact_mut(R)) {
+                for j in 0..R {
+                    orow[j] = a * pr[j];
+                }
+            }
+        } else {
+            for (a, orow) in row.iter().zip(out.chunks_exact_mut(R)) {
+                for j in 0..R {
+                    orow[j] += a * pr[j];
+                }
             }
         }
     }
@@ -107,20 +444,88 @@ pub fn gemm_tn_kr_generic(m: &[f32], p: &[f32], n: usize, k: usize, r: usize, ou
     }
 }
 
-/// y[n,k] = p[n,r] @ q[k,r]ᵀ   (PowerSGD decompression)
+// --------------------------------------------------------------- nr_rk
+
+/// y[n,k] = p[n,r] @ q[k,r]ᵀ   (PowerSGD decompression / backward dA)
 pub fn gemm_nr_rk(p: &[f32], q: &[f32], n: usize, k: usize, r: usize, out: &mut [f32]) {
+    gemm_nr_rk_fused(p, q, n, k, r, Epilogue::None, out);
+}
+
+/// [`gemm_nr_rk`] with the epilogue fused into the output tile (the
+/// ReLU-backward mask rides here).  Fully overwrites `out`.
+pub fn gemm_nr_rk_fused(
+    p: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(p.len(), n * r);
+    debug_assert_eq!(q.len(), k * r);
+    debug_assert_eq!(out.len(), n * k);
     match r {
-        1 => gemm_nr_rk_const::<1>(p, q, n, k, out),
-        2 => gemm_nr_rk_const::<2>(p, q, n, k, out),
-        4 => gemm_nr_rk_const::<4>(p, q, n, k, out),
-        _ => gemm_nr_rk_generic(p, q, n, k, r, out),
+        1 => nr_rk_const::<1>(p, q, n, k, &epi, out),
+        2 => nr_rk_const::<2>(p, q, n, k, &epi, out),
+        3 => nr_rk_const::<3>(p, q, n, k, &epi, out),
+        4 => nr_rk_const::<4>(p, q, n, k, &epi, out),
+        _ => {
+            for i in 0..n {
+                let pr = &p[i * r..(i + 1) * r];
+                let orow = &mut out[i * k..(i + 1) * k];
+                for (o, qrow) in orow.iter_mut().zip(q.chunks_exact(r)) {
+                    *o = dot(pr, qrow);
+                }
+                epi.apply_row(i, orow);
+            }
+        }
     }
 }
 
-fn gemm_nr_rk_const<const R: usize>(p: &[f32], q: &[f32], n: usize, k: usize, out: &mut [f32]) {
-    debug_assert_eq!(p.len(), n * R);
-    debug_assert_eq!(q.len(), k * R);
+/// Row-partitioned [`gemm_nr_rk_fused`] — bitwise invariant across pool
+/// widths (one thread per output row, identical serial kernel).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nr_rk_fused_pooled(
+    p: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+    pool: &mut IntraPool,
+) {
+    if pool.threads() <= 1 || n <= 1 || n * k * r < PAR_MIN_MACS {
+        return gemm_nr_rk_fused(p, q, n, k, r, epi, out);
+    }
+    debug_assert_eq!(p.len(), n * r);
     debug_assert_eq!(out.len(), n * k);
+    let optr = SendPtr::new(out);
+    pool.parallel_for(n, &|i0, rows| {
+        // SAFETY: row ranges are disjoint and in bounds.
+        let o = unsafe { optr.slice_mut(i0 * k, rows * k) };
+        gemm_nr_rk_fused(
+            &p[i0 * r..(i0 + rows) * r],
+            q,
+            rows,
+            k,
+            r,
+            epi.slice_rows(i0, rows, k),
+            o,
+        );
+    });
+}
+
+fn nr_rk_const<const R: usize>(
+    p: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    epi: &Epilogue,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), k * R);
     for i in 0..n {
         let mut pr = [0.0f32; R];
         pr.copy_from_slice(&p[i * R..(i + 1) * R]);
@@ -132,6 +537,7 @@ fn gemm_nr_rk_const<const R: usize>(p: &[f32], q: &[f32], n: usize, k: usize, ou
             }
             *o = s;
         }
+        epi.apply_row(i, orow);
     }
 }
 
@@ -148,6 +554,8 @@ pub fn gemm_nr_rk_generic(p: &[f32], q: &[f32], n: usize, k: usize, r: usize, ou
         }
     }
 }
+
+// ---------------------------------------------------- reductions & misc
 
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -175,6 +583,27 @@ pub fn sqnorm(a: &[f32]) -> f32 {
     dot(a, a)
 }
 
+/// Deterministic-tree squared norm: serial 4-lane dot partials per
+/// [`REDUCE_CHUNK`] chunk, folded in f64 in ascending chunk order —
+/// bitwise invariant across pool widths (fixed-split contract).
+pub fn sqnorm_det(a: &[f32], pool: &mut IntraPool) -> f32 {
+    pool.parallel_reduce(a.len(), REDUCE_CHUNK, &|s, l| {
+        let c = &a[s..s + l];
+        dot(c, c) as f64
+    }) as f32
+}
+
+/// Deterministic-tree Σ|aᵢ| (see [`sqnorm_det`]).
+pub fn sum_abs_det(a: &[f32], pool: &mut IntraPool) -> f32 {
+    pool.parallel_reduce(a.len(), REDUCE_CHUNK, &|s, l| {
+        let mut acc = 0.0f32;
+        for v in &a[s..s + l] {
+            acc += v.abs();
+        }
+        acc as f64
+    }) as f32
+}
+
 /// y += alpha * x
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
@@ -184,8 +613,68 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Element-partitioned [`axpy`]: per-element results are independent of
+/// the split, so this is bitwise identical to the serial sweep at any
+/// pool width (including the small-size serial gate).
+pub fn axpy_pooled(alpha: f32, x: &[f32], y: &mut [f32], pool: &mut IntraPool) {
+    debug_assert_eq!(x.len(), y.len());
+    if pool.threads() <= 1 || y.len() < INTRA_SERIAL_CUTOFF {
+        return axpy(alpha, x, y);
+    }
+    let yp = SendPtr::new(y);
+    pool.parallel_for(x.len(), &|s, l| {
+        // SAFETY: disjoint in-bounds ranges (parallel_for contract).
+        axpy(alpha, &x[s..s + l], unsafe { yp.slice_mut(s, l) });
+    });
+}
+
+/// y[i] += x[i] — `axpy_pooled` at α = 1 (bitwise identical: IEEE-754
+/// multiplication by 1.0 is exact, so `y + 1.0*x == y + x` to the bit).
+pub fn vadd_pooled(x: &[f32], y: &mut [f32], pool: &mut IntraPool) {
+    axpy_pooled(1.0, x, y, pool);
+}
+
+/// y[i] -= x[i] — `axpy_pooled` at α = −1 (bitwise identical:
+/// `-1.0*x == -x` exactly, and `y + (-x) == y - x` in IEEE-754).
+pub fn vsub_pooled(x: &[f32], y: &mut [f32], pool: &mut IntraPool) {
+    axpy_pooled(-1.0, x, y, pool);
+}
+
+/// out[j] = Σᵢ d[i * cols + j] — column sums (the bias gradient),
+/// write-through, partitioned over columns.  Per column the row order is
+/// ascending whatever the partition, so pooled == serial bitwise.
+pub fn colsum_pooled(d: &[f32], rows: usize, cols: usize, out: &mut [f32], pool: &mut IntraPool) {
+    debug_assert_eq!(d.len(), rows * cols);
+    debug_assert_eq!(out.len(), cols);
+    if pool.threads() <= 1 || rows * cols < INTRA_SERIAL_CUTOFF || cols <= 1 {
+        return colsum_range(d, rows, cols, 0, cols, out);
+    }
+    let optr = SendPtr::new(out);
+    pool.parallel_for(cols, &|j0, jw| {
+        // SAFETY: disjoint in-bounds column ranges.
+        let o = unsafe { optr.slice_mut(j0, jw) };
+        colsum_range(d, rows, cols, j0, jw, o);
+    });
+}
+
+fn colsum_range(d: &[f32], rows: usize, cols: usize, j0: usize, jw: usize, out: &mut [f32]) {
+    if rows == 0 {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    out.copy_from_slice(&d[j0..j0 + jw]);
+    for i in 1..rows {
+        let row = &d[i * cols + j0..i * cols + j0 + jw];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
 /// In-place column-wise modified Gram–Schmidt on p[n,r] (row-major),
-/// matching `ref.orthonormalize` (eps inside the division).
+/// matching `ref.orthonormalize` (eps inside the division).  Serial: the
+/// column sweep is a chain of dependent projections, and r ≤ 4 keeps it
+/// off the profile.
 pub fn orthonormalize_cols(p: &mut [f32], n: usize, r: usize, eps: f32) {
     debug_assert_eq!(p.len(), n * r);
     for j in 0..r {
@@ -270,6 +759,254 @@ mod tests {
             gemm_nr_rk(&p, &q, n, k, r, &mut out3);
             close(&out3, &naive_gemm(&p, &qt, n, r, k), 1e-5);
         });
+    }
+
+    #[test]
+    fn wide_r_tiled_path_matches_naive() {
+        // r past the const table and k past one panel: the cache-blocked
+        // kernel (write-through over stale garbage) against naive
+        prop::check("gemm-tiled", 12, |rng| {
+            let n = prop::dim(rng, 1, 9);
+            let k = prop::dim(rng, 1, 300);
+            let r = 5 + prop::dim(rng, 1, 40);
+            let m = prop::vecf(rng, n * k, 1.0);
+            let q = prop::vecf(rng, k * r, 1.0);
+            let mut out = vec![f32::NAN; n * r]; // must be fully overwritten
+            gemm_nk_kr(&m, &q, n, k, r, &mut out);
+            close(&out, &naive_gemm(&m, &q, n, k, r), 1e-4);
+
+            let p = prop::vecf(rng, n * r, 1.0);
+            let mut mt = vec![0.0; n * k];
+            for i in 0..n {
+                for j in 0..k {
+                    mt[j * n + i] = m[i * k + j];
+                }
+            }
+            let mut out2 = vec![f32::NAN; k * r];
+            gemm_tn_kr(&m, &p, n, k, r, &mut out2);
+            close(&out2, &naive_gemm(&mt, &p, k, n, r), 1e-4);
+
+            let mut qt = vec![0.0; k * r];
+            for i in 0..k {
+                for j in 0..r {
+                    qt[j * k + i] = q[i * r + j];
+                }
+            }
+            let mut out3 = vec![f32::NAN; n * k];
+            gemm_nr_rk(&p, &q, n, k, r, &mut out3);
+            close(&out3, &naive_gemm(&p, &qt, n, r, k), 1e-4);
+        });
+    }
+
+    #[test]
+    fn rank3_hits_the_const_path_and_matches_generic() {
+        // the r=3 specialization (PowerSGD rank-3) against the generic
+        // reference — tolerance, since accumulation shapes differ
+        let mut rng = Rng::new(31);
+        let (n, k, r) = (17, 23, 3);
+        let m = prop::vecf(&mut rng, n * k, 1.0);
+        let q = prop::vecf(&mut rng, k * r, 1.0);
+        let p = prop::vecf(&mut rng, n * r, 1.0);
+        let mut a = vec![0.0; n * r];
+        let mut b = vec![0.0; n * r];
+        gemm_nk_kr(&m, &q, n, k, r, &mut a);
+        gemm_nk_kr_generic(&m, &q, n, k, r, &mut b);
+        close(&a, &b, 1e-5);
+        let mut a2 = vec![0.0; k * r];
+        let mut b2 = vec![0.0; k * r];
+        gemm_tn_kr(&m, &p, n, k, r, &mut a2);
+        gemm_tn_kr_generic(&m, &p, n, k, r, &mut b2);
+        close(&a2, &b2, 1e-4);
+        let mut a3 = vec![0.0; n * k];
+        let mut b3 = vec![0.0; n * k];
+        gemm_nr_rk(&p, &q, n, k, r, &mut a3);
+        gemm_nr_rk_generic(&p, &q, n, k, r, &mut b3);
+        close(&a3, &b3, 1e-5);
+    }
+
+    #[test]
+    fn pooled_gemms_are_bitwise_identical_to_serial() {
+        // the intra-op contract: row/column partitioning is invisible —
+        // exact bit equality at every pool width, const and tiled paths
+        prop::check("gemm-pooled-bitwise", 8, |rng| {
+            let n = prop::dim(rng, 1, 40);
+            let k = prop::dim(rng, 1, 200);
+            for r in [1usize, 2, 3, 4, 7, 33] {
+                let m = prop::vecf(rng, n * k, 1.0);
+                let q = prop::vecf(rng, k * r, 1.0);
+                let p = prop::vecf(rng, n * r, 1.0);
+                let mut s1 = vec![0.0; n * r];
+                gemm_nk_kr(&m, &q, n, k, r, &mut s1);
+                let mut s2 = vec![0.0; k * r];
+                gemm_tn_kr(&m, &p, n, k, r, &mut s2);
+                let mut s3 = vec![0.0; n * k];
+                gemm_nr_rk(&p, &q, n, k, r, &mut s3);
+                for t in [2usize, 4] {
+                    let mut pool = IntraPool::new(t);
+                    let mut o1 = vec![f32::NAN; n * r];
+                    gemm_nk_kr_pooled(&m, &q, n, k, r, &mut o1, &mut pool);
+                    let mut o2 = vec![f32::NAN; k * r];
+                    gemm_tn_kr_pooled(&m, &p, n, k, r, &mut o2, &mut pool);
+                    let mut o3 = vec![f32::NAN; n * k];
+                    gemm_nr_rk_fused_pooled(
+                        &p,
+                        &q,
+                        n,
+                        k,
+                        r,
+                        Epilogue::None,
+                        &mut o3,
+                        &mut pool,
+                    );
+                    for (a, b) in s1.iter().zip(&o1) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "nk t={t} r={r}");
+                    }
+                    for (a, b) in s2.iter().zip(&o2) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "tn t={t} r={r}");
+                    }
+                    for (a, b) in s3.iter().zip(&o3) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "nr t={t} r={r}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fused_epilogues_match_the_unfused_reference() {
+        let mut rng = Rng::new(77);
+        let (n, k, r) = (6, 140, 19);
+        let m = prop::vecf(&mut rng, n * k, 1.0);
+        let q = prop::vecf(&mut rng, k * r, 1.0);
+        let bias = prop::vecf(&mut rng, r, 1.0);
+
+        // reference: raw gemm then bias then relu
+        let mut want = vec![0.0; n * r];
+        gemm_nk_kr(&m, &q, n, k, r, &mut want);
+        for row in want.chunks_exact_mut(r) {
+            for (o, b) in row.iter_mut().zip(&bias) {
+                *o += b;
+            }
+        }
+        let mut want_relu = want.clone();
+        for v in want_relu.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let mut got = vec![f32::NAN; n * r];
+        gemm_nk_kr_fused(&m, &q, n, k, r, Epilogue::Bias(&bias), &mut got);
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        gemm_nk_kr_fused(&m, &q, n, k, r, Epilogue::BiasRelu(&bias), &mut got);
+        for (a, b) in want_relu.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // pooled fused == serial fused, bitwise
+        let mut pool = IntraPool::new(3);
+        let mut gp = vec![f32::NAN; n * r];
+        gemm_nk_kr_fused_pooled(&m, &q, n, k, r, Epilogue::BiasRelu(&bias), &mut gp, &mut pool);
+        for (a, b) in want_relu.iter().zip(&gp) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // ReluMask on the nr kernel: zero where the mask is <= 0
+        let p = prop::vecf(&mut rng, n * r, 1.0);
+        let mask = prop::vecf(&mut rng, n * k, 1.0);
+        let mut raw = vec![0.0; n * k];
+        gemm_nr_rk(&p, &q, n, k, r, &mut raw);
+        let mut want_masked = raw.clone();
+        for (o, &a) in want_masked.iter_mut().zip(&mask) {
+            if a <= 0.0 {
+                *o = 0.0;
+            }
+        }
+        let mut got_masked = vec![f32::NAN; n * k];
+        gemm_nr_rk_fused(&p, &q, n, k, r, Epilogue::ReluMask(&mask), &mut got_masked);
+        for (a, b) in want_masked.iter().zip(&got_masked) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut got_pooled = vec![f32::NAN; n * k];
+        gemm_nr_rk_fused_pooled(
+            &p,
+            &q,
+            n,
+            k,
+            r,
+            Epilogue::ReluMask(&mask),
+            &mut got_pooled,
+            &mut pool,
+        );
+        for (a, b) in want_masked.iter().zip(&got_pooled) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn det_reductions_are_width_invariant() {
+        let mut rng = Rng::new(5);
+        let a = prop::vecf(&mut rng, 3 * REDUCE_CHUNK + 117, 1.0);
+        let mut p1 = IntraPool::new(1);
+        let n1 = sqnorm_det(&a, &mut p1);
+        let s1 = sum_abs_det(&a, &mut p1);
+        for t in [2usize, 4] {
+            let mut pt = IntraPool::new(t);
+            assert_eq!(n1.to_bits(), sqnorm_det(&a, &mut pt).to_bits(), "sqnorm t={t}");
+            assert_eq!(s1.to_bits(), sum_abs_det(&a, &mut pt).to_bits(), "abs t={t}");
+        }
+        // single-chunk inputs take the inline fast path at every width:
+        // still invariant (the branch depends on length only)
+        let small = prop::vecf(&mut rng, 300, 1.0);
+        let ns = sqnorm_det(&small, &mut p1);
+        let mut p4 = IntraPool::new(4);
+        assert_eq!(ns.to_bits(), sqnorm_det(&small, &mut p4).to_bits());
+        // and they agree with the plain serial fold up to tolerance
+        assert!((n1 - sqnorm(&a)).abs() < 1e-2 * (1.0 + sqnorm(&a)));
+    }
+
+    #[test]
+    fn colsum_and_elementwise_pooled_match_serial() {
+        let mut rng = Rng::new(9);
+        let (rows, cols) = (37, 300);
+        let d = prop::vecf(&mut rng, rows * cols, 1.0);
+        let mut p1 = IntraPool::new(1);
+        let mut p4 = IntraPool::new(4);
+        let mut s = vec![f32::NAN; cols];
+        colsum_pooled(&d, rows, cols, &mut s, &mut p1);
+        let mut g = vec![f32::NAN; cols];
+        colsum_pooled(&d, rows, cols, &mut g, &mut p4);
+        for (a, b) in s.iter().zip(&g) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // axpy / vadd / vsub pooled == serial bitwise
+        let x = prop::vecf(&mut rng, 20_000, 1.0);
+        let y0 = prop::vecf(&mut rng, 20_000, 1.0);
+        let mut ys = y0.clone();
+        axpy(0.3, &x, &mut ys);
+        let mut yp = y0.clone();
+        axpy_pooled(0.3, &x, &mut yp, &mut p4);
+        for (a, b) in ys.iter().zip(&yp) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut va = y0.clone();
+        for (v, xi) in va.iter_mut().zip(&x) {
+            *v += xi;
+        }
+        let mut vp = y0.clone();
+        vadd_pooled(&x, &mut vp, &mut p4);
+        for (a, b) in va.iter().zip(&vp) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut sa = y0.clone();
+        for (v, xi) in sa.iter_mut().zip(&x) {
+            *v -= xi;
+        }
+        let mut sp = y0.clone();
+        vsub_pooled(&x, &mut sp, &mut p4);
+        for (a, b) in sa.iter().zip(&sp) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

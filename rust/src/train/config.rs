@@ -90,6 +90,13 @@ pub struct TrainConfig {
     /// host OS threads for the parallel execution engine (1 = the
     /// sequential oracle path; N-thread results are bit-identical to it)
     pub threads: usize,
+    /// intra-op kernel threads per running task (`--intra-threads`):
+    /// each gradient/aggregation task (and the optimizer) runs its
+    /// GEMMs, reductions, and element-wise kernels on a pool of this
+    /// width — bitwise identical at every width by the fixed-split
+    /// reduction contract (DESIGN.md §6).  Budget: at most
+    /// `threads * intra_threads` OS threads are busy at once.
+    pub intra_threads: usize,
     pub epochs: usize,
     pub train_size: usize,
     pub test_size: usize,
@@ -140,6 +147,7 @@ impl Default for TrainConfig {
             model: "mlp_c10".into(),
             workers: 4,
             threads: 1,
+            intra_threads: 1,
             epochs: 30,
             train_size: 2048,
             test_size: 512,
@@ -240,6 +248,7 @@ impl TrainConfig {
             model: t.str_or("model", &d.model),
             workers: t.usize_or("workers", d.workers),
             threads: t.usize_or("threads", d.threads).max(1),
+            intra_threads: t.usize_or("intra_threads", d.intra_threads).max(1),
             epochs: t.usize_or("epochs", d.epochs),
             train_size: t.usize_or("data.train_size", d.train_size),
             test_size: t.usize_or("data.test_size", d.test_size),
@@ -412,6 +421,15 @@ bandwidth_mbps = 250.0
         let t0 = Table::parse("threads = 0").unwrap();
         assert_eq!(TrainConfig::from_table(&t0).unwrap().threads, 1);
         assert_eq!(TrainConfig::default().threads, 1);
+    }
+
+    #[test]
+    fn intra_threads_key_parses_and_clamps() {
+        assert_eq!(TrainConfig::default().intra_threads, 1);
+        let t = Table::parse("intra_threads = 4").unwrap();
+        assert_eq!(TrainConfig::from_table(&t).unwrap().intra_threads, 4);
+        let t0 = Table::parse("intra_threads = 0").unwrap();
+        assert_eq!(TrainConfig::from_table(&t0).unwrap().intra_threads, 1);
     }
 
     #[test]

@@ -42,6 +42,22 @@
 //! deterministic simulated clock (`cluster::simtime`); host wall time
 //! only lands in the `wall_secs` debug column.
 //!
+//! # Intra-op kernel engine
+//!
+//! `--intra-threads N` parallelizes INSIDE a step: every gradient /
+//! aggregation task (and the optimizer) carries an N-wide
+//! [`IntraPool`] in its [`Workspace`], and the sim backend's GEMMs, the
+//! softmax-xent, the elementwise bias/ReLU/SGD loops, and the
+//! compressor kernels all dispatch on it.  Floats never change: the
+//! row/element-partitioned kernels are partition-invariant by
+//! construction, and every fold (dot, norm, loss sum, QSGD's
+//! quantization streams) uses the fixed-split deterministic tree whose
+//! chunk boundaries derive from the problem size only — so metrics,
+//! parameters, and the Data-Sent ledger are byte-identical from
+//! `--intra-threads 1` to N, under both transports
+//! (`tests/intra_parity.rs`; DESIGN.md §6).  The budget policy keeps at
+//! most `threads x intra_threads` OS threads busy at once.
+//!
 //! # Bucketed collectives
 //!
 //! With `net.bucket_kb > 0` (`--bucket-kb`), consecutive same-kind
@@ -73,7 +89,7 @@ use crate::models::{ModelMeta, Registry};
 use crate::optim::{LrSchedule, Sgd};
 use crate::runtime::{ModelPrograms, Runtime};
 use crate::tensor::Tensor;
-use crate::util::pool::{SendPtr, WorkerPool};
+use crate::util::pool::{IntraPool, SendPtr, WorkerPool};
 use crate::util::workspace::Workspace;
 use anyhow::{bail, Result};
 use config::{MethodCfg, TimeModelCfg, TrainConfig};
@@ -129,11 +145,43 @@ const RAMP_EPOCHS: usize = 3;
 
 /// Per-worker gradient-computation scratch: the data batch, one
 /// micro-step's gradients, and the backend's forward/backward arena —
-/// all reused every micro-step.
+/// all reused every micro-step.  The arena carries the worker task's
+/// intra-op kernel pool (`--intra-threads`).
 struct WorkerScratch {
     batch: Batch,
     grads: Vec<Tensor>,
     ws: Workspace,
+}
+
+/// Arena-backed evaluation scratch: the backend's activation slots, the
+/// gathered test batch, and the index list — allocated once and reused
+/// by every eval batch of every epoch, so eval epochs stop churning the
+/// allocator.
+pub struct EvalScratch {
+    ws: Workspace,
+    batch: Batch,
+    idx: Vec<usize>,
+}
+
+impl EvalScratch {
+    pub fn new() -> EvalScratch {
+        EvalScratch::with_intra(1)
+    }
+
+    /// Scratch whose forward kernels run `threads`-wide.
+    pub fn with_intra(threads: usize) -> EvalScratch {
+        EvalScratch {
+            ws: Workspace::with_intra(threads),
+            batch: Batch::default(),
+            idx: Vec::new(),
+        }
+    }
+}
+
+impl Default for EvalScratch {
+    fn default() -> EvalScratch {
+        EvalScratch::new()
+    }
 }
 
 /// The training loop as a long-lived value: construct once, then
@@ -163,6 +211,9 @@ pub struct Trainer<'a> {
     /// charge bit-identical to the pre-bucketing trainer
     bucketizer: Option<Bucketizer>,
     pool: WorkerPool,
+    /// the coordinator's own intra-op pool: drives the optimizer step
+    /// (and any other single-task main-thread kernel)
+    intra: IntraPool,
     // ---- hot-loop buffers (allocated once) ----
     worker_grads: Vec<Vec<Tensor>>,
     wscratch: Vec<WorkerScratch>,
@@ -176,6 +227,7 @@ pub struct Trainer<'a> {
     rebuild_before: Vec<f64>,
     step_comm: Vec<f64>,
     task_errs: Vec<Option<anyhow::Error>>,
+    eval_scratch: EvalScratch,
     // ---- run / epoch state ----
     log: RunLog,
     epoch: usize,
@@ -246,6 +298,24 @@ impl<'a> Trainer<'a> {
         let bucketizer =
             if cfg.bucket_kb > 0 { Some(Bucketizer::new(cfg.bucket_kb)) } else { None };
 
+        // Intra-op thread-budget policy (`--intra-threads`): every
+        // workspace owner — each worker's scratch, each layer's arena,
+        // the coordinator (optimizer), the eval scratch — carries its
+        // own `intra`-wide kernel pool, because pool ownership rides
+        // with workspace ownership (one component, one coordinator).
+        // Only min(threads, workers) / min(threads, n_layers) of them
+        // can be DRIVEN concurrently, so at most threads x intra_threads
+        // OS threads are ever busy; the surplus pools sit parked on a
+        // barrier (cheap: lazily-committed stacks, no spin).  Sharing
+        // pools per dispatch slot instead would halve the parked-thread
+        // count but route pool handles through the fan-out tids rather
+        // than the workspaces — rejected for now to keep the ownership
+        // story flat.  Correctness never depends on this policy: every
+        // intra kernel is either partition-invariant or a fixed-split
+        // reduction, so ANY width is bitwise identical to width 1
+        // (DESIGN.md §6; pinned by tests/intra_parity.rs).
+        let intra = cfg.intra_threads.max(1);
+
         // scratch (allocated once; the steady-state hot loop is
         // allocation-free — see the module docs)
         let worker_grads: Vec<Vec<Tensor>> =
@@ -254,10 +324,11 @@ impl<'a> Trainer<'a> {
             .map(|_| WorkerScratch {
                 batch: Batch::default(),
                 grads: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
-                ws: Workspace::new(),
+                ws: Workspace::with_intra(intra),
             })
             .collect();
-        let layer_ws: Vec<Workspace> = (0..n_layers).map(|_| Workspace::new()).collect();
+        let layer_ws: Vec<Workspace> =
+            (0..n_layers).map(|_| Workspace::with_intra(intra)).collect();
         let agg: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
         // Δ accumulators: `edelta` is this epoch's mean-gradient sum (the
         // per-epoch grad-norm metric); `delta` accumulates `edelta` across
@@ -295,6 +366,7 @@ impl<'a> Trainer<'a> {
             // the persistent fan-out pool: spawned once, two barrier
             // rendezvous per dispatch, zero allocation per step
             pool: WorkerPool::new(threads),
+            intra: IntraPool::new(intra),
             worker_grads,
             wscratch,
             layer_ws,
@@ -307,6 +379,7 @@ impl<'a> Trainer<'a> {
             rebuild_before: vec![0.0; n_layers],
             step_comm: vec![0.0; n_layers],
             task_errs: (0..threads).map(|_| None).collect(),
+            eval_scratch: EvalScratch::with_intra(intra),
             log,
             epoch: 0,
             ramp_from: 1,
@@ -400,6 +473,7 @@ impl<'a> Trainer<'a> {
             cost,
             bucketizer,
             pool,
+            intra,
             worker_grads,
             wscratch,
             layer_ws,
@@ -599,8 +673,10 @@ impl<'a> Trainer<'a> {
 
         // 3. optimizer, through the transport's ownership contract
         //    (full layers under dense replication, per-worker 1/N
-        //    shards under sharded ownership — bit-identical unions)
-        opt.step_owned(params, agg, lr_eff, transport);
+        //    shards under sharded ownership — bit-identical unions);
+        //    the element loop runs on the coordinator's intra pool
+        //    (element-independent, so bitwise identical to serial)
+        opt.step_owned_pooled(params, agg, lr_eff, transport, intra);
         Ok(())
     }
 
@@ -609,19 +685,37 @@ impl<'a> Trainer<'a> {
     /// contract covers [`Trainer::step`].)
     pub fn end_epoch(&mut self) -> Result<()> {
         let epoch = self.epoch;
-        // evaluation (not charged to the simulated training clock)
-        let (test_loss, test_acc) =
-            evaluate(&self.progs, self.rt, &self.params, &self.ds, self.cfg, &self.meta)?;
+        // evaluation (not charged to the simulated training clock);
+        // arena-backed: activation buffers, batch, and index list are
+        // reused across every eval batch of every epoch
+        let (test_loss, test_acc) = evaluate_into(
+            &self.progs,
+            self.rt,
+            &self.params,
+            &self.ds,
+            self.cfg,
+            &self.meta,
+            &mut self.eval_scratch,
+        )?;
 
         // fold this epoch's Δ into the windowed accumulator (one pass per
         // epoch; identical at every thread count)
         for (d, e) in self.delta.iter_mut().zip(&self.edelta) {
             d.add_assign(e);
         }
-        let epoch_sqnorm: f32 = self.edelta.iter().map(|d| d.sqnorm()).sum();
+        // gradient norms through the fixed-split deterministic reduction
+        // on the coordinator's intra pool: parallel on wide pools, and
+        // bitwise invariant across `--intra-threads` by construction
+        let mut epoch_sqnorm = 0.0f32;
+        for e in &self.edelta {
+            epoch_sqnorm += crate::tensor::linalg::sqnorm_det(&e.data, &mut self.intra);
+        }
 
         // detector observation (whole-window accumulated statistics)
-        let layer_sqnorms: Vec<f32> = self.delta.iter().map(|d| d.sqnorm()).collect();
+        let mut layer_sqnorms: Vec<f32> = Vec::with_capacity(self.delta.len());
+        for d in &self.delta {
+            layer_sqnorms.push(crate::tensor::linalg::sqnorm_det(&d.data, &mut self.intra));
+        }
         let layer_abs_means: Vec<f32> = self
             .delta
             .iter()
@@ -815,13 +909,34 @@ fn layer_task(
 /// batch so small test sets are evaluated instead of silently skipped.
 /// Returns (example-weighted mean loss, accuracy); accuracy is
 /// token-level for LM tasks.
+///
+/// Allocating wrapper over [`evaluate_into`] (one throwaway scratch per
+/// call — fine for one-off callers; the trainer's per-epoch eval reuses
+/// a long-lived [`EvalScratch`]).
 pub fn evaluate(
+    progs: &ModelPrograms,
+    rt: &Runtime,
+    params: &[Tensor],
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    meta: &crate::models::ModelMeta,
+) -> Result<(f32, f32)> {
+    evaluate_into(progs, rt, params, ds, cfg, meta, &mut EvalScratch::new())
+}
+
+/// [`evaluate`] with arena-backed buffers: the gathered batch, the
+/// index list, and the backend's forward scratch all come from
+/// `scratch` and are reused across batches (and across epochs when the
+/// caller keeps the scratch), so steady-state evaluation performs no
+/// per-batch heap allocation on the sim backend.
+pub fn evaluate_into(
     progs: &ModelPrograms,
     rt: &Runtime,
     params: &[Tensor],
     ds: &Dataset,
     _cfg: &TrainConfig,
     meta: &crate::models::ModelMeta,
+    scratch: &mut EvalScratch,
 ) -> Result<(f32, f32)> {
     let b = meta.batch;
     if ds.test_n == 0 {
@@ -842,18 +957,20 @@ pub fn evaluate(
     let mut correct = 0.0f64;
     let mut total = 0.0f64;
     for s in 0..full {
-        let idx: Vec<usize> = (s * b..(s + 1) * b).collect();
-        let batch = ds.test_batch(&idx);
-        let (loss, corr) = progs.eval_step(rt, params, &batch)?;
+        scratch.idx.clear();
+        scratch.idx.extend(s * b..(s + 1) * b);
+        ds.test_batch_into(&scratch.idx, &mut scratch.batch);
+        let (loss, corr) = progs.eval_step_into(rt, params, &scratch.batch, &mut scratch.ws)?;
         loss_sum += loss as f64 * b as f64;
         examples += b as f64;
         correct += corr as f64;
         total += if meta.is_lm() { (b * meta.seq_len) as f64 } else { b as f64 };
     }
     if rem > 0 && progs.fixed_batch().is_none() {
-        let idx: Vec<usize> = (full * b..ds.test_n).collect();
-        let batch = ds.test_batch(&idx);
-        let (loss, corr) = progs.eval_step(rt, params, &batch)?;
+        scratch.idx.clear();
+        scratch.idx.extend(full * b..ds.test_n);
+        ds.test_batch_into(&scratch.idx, &mut scratch.batch);
+        let (loss, corr) = progs.eval_step_into(rt, params, &scratch.batch, &mut scratch.ws)?;
         loss_sum += loss as f64 * rem as f64;
         examples += rem as f64;
         correct += corr as f64;

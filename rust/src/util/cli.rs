@@ -19,7 +19,7 @@ const VALUED: &[&str] = &[
     "config", "set", "exp", "model", "epochs", "workers", "seed", "out",
     "controller", "method", "rank-low", "rank-high", "k-low", "k-high",
     "eta", "interval", "artifacts", "preset", "steps", "trials", "filter",
-    "save", "ckpt", "threads", "transport", "bucket-kb",
+    "save", "ckpt", "threads", "intra-threads", "transport", "bucket-kb",
 ];
 
 impl Args {

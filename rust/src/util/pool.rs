@@ -172,6 +172,211 @@ fn worker_loop(sh: &Shared, tid: usize) {
     }
 }
 
+/// Intra-op kernel engine: a [`WorkerPool`] plus the two deterministic
+/// dispatch shapes every tensor kernel is built from.
+///
+/// The contract (DESIGN.md §6) has two halves:
+///
+///  * [`IntraPool::parallel_for`] hands out disjoint contiguous ranges
+///    of `0..items`.  It is only for kernels whose per-element result
+///    does not depend on the partition (row-partitioned GEMMs,
+///    element-wise loops): any split of such a kernel is bitwise
+///    identical to the serial sweep, so the thread-count-derived
+///    chunking of [`WorkerPool::run_chunked`] is safe to reuse.
+///  * [`IntraPool::parallel_reduce`] (and the fixed-split
+///    [`IntraPool::parallel_for_fixed`]) is for kernels that FOLD — dot
+///    products, norms, loss sums — where f32/f64 addition order changes
+///    the bits.  The range is cut into `ceil(items / chunk)` fixed
+///    chunks whose boundaries derive from the problem size and the
+///    call-site chunk constant ONLY — never from the thread count —
+///    each chunk's partial is computed serially, and the partials are
+///    folded on the caller in ascending chunk order.  The fold tree is
+///    therefore a pure function of `(items, chunk)`: bitwise invariant
+///    from 1 thread to N.
+///
+/// A width-1 pool spawns nothing and runs every dispatch inline —
+/// through the SAME chunked arithmetic, which is what makes
+/// `--intra-threads 1` the bitwise oracle for every other width.
+pub struct IntraPool {
+    pool: WorkerPool,
+    /// reduction-tree scratch: one (or two, interleaved) partials per
+    /// chunk.  Grows to the high-water chunk count and stays, so
+    /// steady-state reductions allocate nothing.
+    partials: Vec<f64>,
+}
+
+/// Elementwise sweeps shorter than this stay serial on any pool width:
+/// the two barrier rendezvous of a dispatch cost more than the work.
+/// ONLY for partition-invariant kernels (per-element results do not
+/// depend on the split, so the serial fallback is bitwise identical).
+/// The shared cutoff for the elementwise call sites; the GEMM entry
+/// points gate on their own `linalg::PAR_MIN_MACS` (a work estimate in
+/// multiply-accumulates, not elements), and the fixed-split reductions
+/// need no gate at all — a single-chunk reduction runs inline on the
+/// caller (same fold tree, so same bits).
+pub const INTRA_SERIAL_CUTOFF: usize = 8 * 1024;
+
+impl IntraPool {
+    /// Pool with `threads` total participants (`<= 1` runs inline).
+    pub fn new(threads: usize) -> IntraPool {
+        IntraPool { pool: WorkerPool::new(threads), partials: Vec::new() }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Disjoint-range dispatch: `f(start, len)` over a contiguous
+    /// partition of `0..items`.  ONLY for partition-invariant kernels
+    /// (see the type docs); the ranges come from
+    /// [`WorkerPool::run_chunked`], so they scale with the thread count.
+    pub fn parallel_for(&mut self, items: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        self.pool.run_chunked(items, &|_tid, start, len| f(start, len));
+    }
+
+    /// Fixed-split dispatch: `f(c, start, len)` for every chunk
+    /// `c in 0..ceil(items/chunk)` of width `chunk` (last one ragged).
+    /// Chunk boundaries AND indices depend only on `(items, chunk)`, so
+    /// kernels that seed per-chunk state (QSGD's quantization RNG) are
+    /// bitwise invariant across thread counts.  `chunk` must itself be
+    /// derived from the problem size or a compile-time constant.
+    pub fn parallel_for_fixed(
+        &mut self,
+        items: usize,
+        chunk: usize,
+        f: &(dyn Fn(usize, usize, usize) + Sync),
+    ) {
+        if items == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let chunks = items.div_ceil(chunk);
+        if chunks == 1 {
+            // the whole range is one fixed chunk: running it on the
+            // caller is the same call (chunk index 0, same bounds) minus
+            // the two-barrier rendezvous; the branch depends only on
+            // (items, chunk), so every width takes it identically
+            return f(0, 0, items);
+        }
+        let t = self.pool.threads();
+        self.pool.run(&|tid| {
+            let mut c = tid;
+            while c < chunks {
+                let start = c * chunk;
+                f(c, start, chunk.min(items - start));
+                c += t;
+            }
+        });
+    }
+
+    /// Fixed-split deterministic tree reduction: `f(start, len)` returns
+    /// the serial partial of one fixed chunk; partials fold on the
+    /// caller in ascending chunk order (f64 accumulator).  See the type
+    /// docs for why this is bitwise thread-count invariant.
+    pub fn parallel_reduce(
+        &mut self,
+        items: usize,
+        chunk: usize,
+        f: &(dyn Fn(usize, usize) -> f64 + Sync),
+    ) -> f64 {
+        if items == 0 {
+            return 0.0;
+        }
+        let chunk = chunk.max(1);
+        let chunks = items.div_ceil(chunk);
+        if chunks == 1 {
+            // one-chunk tree: return the single partial directly.  The
+            // branch condition depends only on (items, chunk), so every
+            // pool width takes it identically — width invariance holds
+            // by construction, with no rendezvous for tiny reductions.
+            return f(0, items);
+        }
+        let IntraPool { pool, partials } = self;
+        partials.clear();
+        partials.resize(chunks, 0.0);
+        let t = pool.threads();
+        {
+            let ptr = SendPtr::new(partials.as_mut_slice());
+            pool.run(&|tid| {
+                let mut c = tid;
+                while c < chunks {
+                    let start = c * chunk;
+                    // SAFETY: each chunk index is visited by exactly one
+                    // tid (strided ownership) and is in bounds.
+                    let slot = unsafe { ptr.slice_mut(c, 1) };
+                    slot[0] = f(start, chunk.min(items - start));
+                    c += t;
+                }
+            });
+        }
+        let mut acc = 0.0f64;
+        for p in partials.iter() {
+            acc += *p;
+        }
+        acc
+    }
+
+    /// Two-accumulator variant of [`IntraPool::parallel_reduce`] (one
+    /// pass computing e.g. loss sum + correct count): `f` returns both
+    /// partials for a chunk, folded pairwise in ascending chunk order.
+    pub fn parallel_reduce2(
+        &mut self,
+        items: usize,
+        chunk: usize,
+        f: &(dyn Fn(usize, usize) -> (f64, f64) + Sync),
+    ) -> (f64, f64) {
+        if items == 0 {
+            return (0.0, 0.0);
+        }
+        let chunk = chunk.max(1);
+        let chunks = items.div_ceil(chunk);
+        if chunks == 1 {
+            // one-chunk tree: width-invariant by construction (see
+            // parallel_reduce)
+            return f(0, items);
+        }
+        let IntraPool { pool, partials } = self;
+        partials.clear();
+        partials.resize(2 * chunks, 0.0);
+        let t = pool.threads();
+        {
+            let ptr = SendPtr::new(partials.as_mut_slice());
+            pool.run(&|tid| {
+                let mut c = tid;
+                while c < chunks {
+                    let start = c * chunk;
+                    let (a, b) = f(start, chunk.min(items - start));
+                    // SAFETY: chunk c's pair is written by exactly one
+                    // tid and is in bounds of the 2*chunks buffer.
+                    let slot = unsafe { ptr.slice_mut(2 * c, 2) };
+                    slot[0] = a;
+                    slot[1] = b;
+                    c += t;
+                }
+            });
+        }
+        let (mut a, mut b) = (0.0f64, 0.0f64);
+        for c in 0..chunks {
+            a += partials[2 * c];
+            b += partials[2 * c + 1];
+        }
+        (a, b)
+    }
+}
+
+impl Default for IntraPool {
+    /// Width 1: inline execution, nothing spawned — the serial oracle.
+    fn default() -> IntraPool {
+        IntraPool::new(1)
+    }
+}
+
+impl std::fmt::Debug for IntraPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IntraPool").field("threads", &self.pool.threads()).finish()
+    }
+}
+
 /// Shared mutable base pointer for handing pool participants DISJOINT
 /// chunks of one buffer.  Construction is safe; only slicing is unsafe,
 /// and only because disjointness is the caller's promise.
@@ -341,6 +546,92 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn intra_reduce_is_bitwise_invariant_across_widths() {
+        // the fixed-split contract: same (items, chunk) -> same fold
+        // tree -> same bits, whatever the thread count
+        let n = 10_007;
+        let xs: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.37).sin() * 3.0).collect();
+        let chunk = 64;
+        let sum = |pool: &mut IntraPool| {
+            pool.parallel_reduce(n, chunk, &|s, l| {
+                xs[s..s + l].iter().map(|&v| v as f64).sum::<f64>()
+            })
+        };
+        let mut p1 = IntraPool::new(1);
+        let oracle = sum(&mut p1);
+        for t in [2usize, 3, 4, 8] {
+            let mut pt = IntraPool::new(t);
+            assert_eq!(oracle.to_bits(), sum(&mut pt).to_bits(), "threads={t}");
+            // repeated dispatch on a warm pool stays identical too
+            assert_eq!(oracle.to_bits(), sum(&mut pt).to_bits(), "threads={t} rerun");
+        }
+    }
+
+    #[test]
+    fn intra_reduce2_folds_both_accumulators_in_chunk_order() {
+        let n = 1000;
+        let mut p1 = IntraPool::new(1);
+        let mut p4 = IntraPool::new(4);
+        let f = |s: usize, l: usize| {
+            let mut a = 0.0f64;
+            let mut b = 0.0f64;
+            for i in s..s + l {
+                a += i as f64;
+                b += 1.0;
+            }
+            (a, b)
+        };
+        let (a1, b1) = p1.parallel_reduce2(n, 7, &f);
+        let (a4, b4) = p4.parallel_reduce2(n, 7, &f);
+        assert_eq!(a1.to_bits(), a4.to_bits());
+        assert_eq!(b1.to_bits(), b4.to_bits());
+        assert_eq!(a1, (n * (n - 1) / 2) as f64);
+        assert_eq!(b1, n as f64);
+    }
+
+    #[test]
+    fn intra_for_fixed_visits_every_chunk_exactly_once() {
+        for threads in [1usize, 3, 8] {
+            let mut pool = IntraPool::new(threads);
+            for (items, chunk) in [(100usize, 7usize), (5, 16), (64, 64), (0, 4)] {
+                let chunks = if items == 0 { 0 } else { items.div_ceil(chunk) };
+                let mut seen = vec![0u8; items];
+                let mut chunk_ids = vec![0u8; chunks];
+                {
+                    let sp = SendPtr::new(&mut seen);
+                    let cp = SendPtr::new(&mut chunk_ids);
+                    pool.parallel_for_fixed(items, chunk, &|c, s, l| {
+                        assert_eq!(s, c * chunk);
+                        let sv = unsafe { sp.slice_mut(s, l) };
+                        for v in sv {
+                            *v += 1;
+                        }
+                        unsafe { cp.slice_mut(c, 1) }[0] += 1;
+                    });
+                }
+                assert!(seen.iter().all(|&v| v == 1), "t={threads} items={items}");
+                assert!(chunk_ids.iter().all(|&v| v == 1), "t={threads} items={items}");
+            }
+        }
+    }
+
+    #[test]
+    fn intra_parallel_for_covers_the_range() {
+        let mut pool = IntraPool::new(3);
+        let mut seen = vec![0u8; 23];
+        {
+            let sp = SendPtr::new(&mut seen);
+            pool.parallel_for(23, &|s, l| {
+                let sv = unsafe { sp.slice_mut(s, l) };
+                for v in sv {
+                    *v += 1;
+                }
+            });
+        }
+        assert!(seen.iter().all(|&v| v == 1));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! zero heap allocations per step (pinned by the counting-allocator
 //! suite in `tests/hotpath_alloc.rs`).
 //!
-//! Three pieces:
+//! Four pieces:
 //!  * [`SlotPool<T>`] — indexed reusable `Vec<T>` buffers.  A component
 //!    asks for its first `n` slots (`slots(n)`) or one slot by index
 //!    (`slot(i)`); capacities grow to the high-water mark and then stay,
@@ -14,6 +14,11 @@
 //!    allocation every round because its borrow lifetime dies with the
 //!    round; `ViewBuf` keeps the *allocation* alive between rounds while
 //!    the vec it hands out is always empty (so no stale borrows exist).
+//!  * [`crate::util::pool::IntraPool`] — the owning component's
+//!    intra-op kernel pool (`--intra-threads`): GEMMs, reductions, and
+//!    elementwise sweeps dispatch on it, bitwise identical at any width
+//!    (DESIGN.md §6).  It rides in the workspace because the ownership
+//!    story is the same as the buffers': one component, one coordinator.
 //!  * [`Workspace`] — one of each, the bundle threaded through
 //!    [`DistCompressor::round_into`](crate::compress::DistCompressor::round_into),
 //!    the transports, and the sim backend's forward/backward buffers.
@@ -24,6 +29,8 @@
 //! worker (gradient computation scratch).  Slot indices are private to
 //! the single component using that workspace; two components never
 //! share one `Workspace` concurrently.
+
+use crate::util::pool::IntraPool;
 
 /// Indexed pool of reusable buffers (see module docs).
 #[derive(Debug, Default)]
@@ -97,11 +104,24 @@ pub struct Workspace {
     pub usizes: SlotPool<usize>,
     /// recycled `Vec<&[f32]>` view lists
     pub views: ViewBuf,
+    /// the intra-op kernel pool the component owning this workspace
+    /// runs its tensor kernels on (`--intra-threads`; width 1 by
+    /// default — inline execution, nothing spawned).  Lives here
+    /// because the ownership story is identical to the scratch buffers:
+    /// one component drives one workspace at a time, so its pool has
+    /// exactly one coordinator — see `util::pool::IntraPool`.
+    pub intra: IntraPool,
 }
 
 impl Workspace {
     pub fn new() -> Workspace {
         Workspace::default()
+    }
+
+    /// Workspace whose kernels run `threads`-wide (bitwise identical to
+    /// width 1 by the fixed-split contract, DESIGN.md §6).
+    pub fn with_intra(threads: usize) -> Workspace {
+        Workspace { intra: IntraPool::new(threads), ..Workspace::default() }
     }
 }
 

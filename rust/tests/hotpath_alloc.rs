@@ -23,11 +23,22 @@ use accordion::util::alloc::{alloc_count, CountingAlloc};
 static ALLOC: CountingAlloc = CountingAlloc;
 
 fn cfg(method: MethodCfg, transport: TransportCfg, threads: usize, bucket_kb: usize) -> TrainConfig {
+    cfg_intra(method, transport, threads, bucket_kb, 1)
+}
+
+fn cfg_intra(
+    method: MethodCfg,
+    transport: TransportCfg,
+    threads: usize,
+    bucket_kb: usize,
+    intra_threads: usize,
+) -> TrainConfig {
     TrainConfig {
         label: "hotpath-alloc".into(),
         model: "mlp_c10".into(),
         workers: 4,
         threads,
+        intra_threads,
         epochs: 1,
         train_size: 256, // 4 global steps at workers=4, batch=16
         test_size: 64,
@@ -92,5 +103,25 @@ fn steady_state_steps_allocate_nothing() {
         let c = cfg(MethodCfg::None, TransportCfg::Sharded, threads, 64);
         let n = steady_state_allocs(&c);
         assert_eq!(n, 0, "bucketed steady-state step allocated {n} times (threads={threads})");
+    }
+    // the intra-op kernel engine: pooled GEMMs / fixed-split reductions
+    // draw their partials from pool-owned buffers that converge during
+    // warmup, so a steady-state step stays zero-alloc at every
+    // (threads, intra) combination and every kernel family
+    for threads in [1usize, 4] {
+        for intra in [2usize, 4] {
+            for (mname, method) in &methods {
+                for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+                    let c = cfg_intra(method.clone(), transport, threads, 0, intra);
+                    let n = steady_state_allocs(&c);
+                    assert_eq!(
+                        n, 0,
+                        "intra-op steady-state step allocated {n} times \
+                         (method={mname}, transport={transport:?}, threads={threads}, \
+                          intra={intra})"
+                    );
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,189 @@
+//! Parity suite for the intra-op kernel engine: the same run at
+//! `--intra-threads {1, 2, 4}` must be BYTE-identical — final
+//! parameters, every metrics field, the serialized CSV (minus the
+//! wall-clock debug column), and the Data-Sent floats ledger — under
+//! both transports and composed with the inter-op `--threads` engine.
+//!
+//! This is a stronger contract than the inter-op parity suite's: there
+//! is no tolerance anywhere.  It holds because every intra kernel is
+//! either partition-invariant (row/element-partitioned GEMMs and
+//! elementwise sweeps: one thread produces each output with the
+//! identical serial arithmetic) or a fixed-split reduction whose chunk
+//! boundaries derive from the problem size only (DESIGN.md §6).
+
+use accordion::metrics::RunLog;
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::tensor::Tensor;
+use accordion::train::{
+    self,
+    config::{ControllerCfg, MethodCfg, TrainConfig, TransportCfg},
+};
+
+fn cfg(
+    label: &str,
+    method: MethodCfg,
+    transport: TransportCfg,
+    threads: usize,
+    intra: usize,
+) -> TrainConfig {
+    TrainConfig {
+        label: label.into(),
+        model: "mlp_deep_c10".into(), // 3 matrix + 3 vector layers
+        workers: 4,
+        threads,
+        intra_threads: intra,
+        epochs: 3,
+        train_size: 256,
+        test_size: 64,
+        data_sep: 0.6,
+        warmup_epochs: 1,
+        decay_epochs: vec![2],
+        method,
+        controller: ControllerCfg::Accordion { eta: 0.5, interval: 1 },
+        transport,
+        ..TrainConfig::default()
+    }
+}
+
+/// The CSV minus its trailing wall_secs debug column (the same cut the
+/// CI determinism lane applies).
+fn strip_wall(csv: &str) -> String {
+    csv.lines()
+        .map(|l| l.rsplit_once(',').map(|(head, _)| head).unwrap_or(l))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn assert_bitwise_run_parity(
+    oracle: &(RunLog, Vec<Tensor>),
+    got: &(RunLog, Vec<Tensor>),
+    ctx: &str,
+) {
+    let (olog, oparams) = oracle;
+    let (glog, gparams) = got;
+    assert_eq!(oparams.len(), gparams.len(), "{ctx}: param count");
+    for (l, (a, b)) in oparams.iter().zip(gparams).enumerate() {
+        assert_eq!(a.shape, b.shape, "{ctx}: layer {l} shape");
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: layer {l} param [{i}] diverged: {x} vs {y}"
+            );
+        }
+    }
+    assert_eq!(olog.level_trace, glog.level_trace, "{ctx}: level trace");
+    assert_eq!(olog.epochs.len(), glog.epochs.len(), "{ctx}: epoch count");
+    for (e, (a, b)) in olog.epochs.iter().zip(&glog.epochs).enumerate() {
+        let ectx = format!("{ctx} epoch {e}");
+        assert_eq!(a.floats, b.floats, "{ectx}: Data-Sent floats");
+        assert_eq!(a.batch_mult, b.batch_mult, "{ectx}: batch_mult");
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "{ectx}: lr");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{ectx}: train_loss");
+        assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{ectx}: test_loss");
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "{ectx}: test_acc");
+        assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits(), "{ectx}: grad_norm");
+        assert_eq!(
+            a.window_grad_norm.to_bits(),
+            b.window_grad_norm.to_bits(),
+            "{ectx}: window_grad_norm"
+        );
+        assert_eq!(a.frac_low.to_bits(), b.frac_low.to_bits(), "{ectx}: frac_low");
+        assert_eq!(a.secs.to_bits(), b.secs.to_bits(), "{ectx}: sim secs");
+        assert_eq!(
+            a.overlap_saved_secs.to_bits(),
+            b.overlap_saved_secs.to_bits(),
+            "{ectx}: overlap_saved_secs"
+        );
+    }
+    // the serialized artifact itself: byte-identical minus the wall
+    // column (identical bits format to identical bytes)
+    assert_eq!(
+        strip_wall(&olog.to_csv()),
+        strip_wall(&glog.to_csv()),
+        "{ctx}: metrics CSV bytes diverged"
+    );
+}
+
+#[test]
+fn intra_threads_are_byte_invariant_across_methods_and_transports() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    // one method per kernel family: raw pooled mean, GEMM-heavy
+    // (PowerSGD), fixed-split-norm + chunk-seeded RNG (QSGD), parallel
+    // magnitude fill + serial selection (TopK), det abs-sum (signSGD)
+    let methods: Vec<(&str, MethodCfg)> = vec![
+        ("none", MethodCfg::None),
+        ("powersgd", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+        ("qsgd", MethodCfg::Qsgd { bits_low: 8, bits_high: 4 }),
+        ("topk", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 }),
+        ("signsgd", MethodCfg::SignSgd),
+    ];
+    for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+        for (mname, method) in &methods {
+            let ctx = format!("{mname}/{transport:?}");
+            let oracle = train::run_full(
+                &cfg(&format!("{ctx}/i1"), method.clone(), transport, 1, 1),
+                &reg,
+                &rt,
+            )
+            .unwrap();
+            for intra in [2usize, 4] {
+                let got = train::run_full(
+                    &cfg(&format!("{ctx}/i{intra}"), method.clone(), transport, 1, intra),
+                    &reg,
+                    &rt,
+                )
+                .unwrap();
+                assert_bitwise_run_parity(&oracle, &got, &format!("{ctx} intra x{intra}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn intra_composes_with_the_inter_op_engine() {
+    // threads=4 x intra=2 against the (1, 1) oracle: the two
+    // parallelism layers nest without touching a float
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+        let method = MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 };
+        let oracle = train::run_full(
+            &cfg("compose/i1t1", method.clone(), transport, 1, 1),
+            &reg,
+            &rt,
+        )
+        .unwrap();
+        let got = train::run_full(
+            &cfg("compose/i2t4", method.clone(), transport, 4, 2),
+            &reg,
+            &rt,
+        )
+        .unwrap();
+        assert_bitwise_run_parity(&oracle, &got, &format!("compose {transport:?}"));
+    }
+}
+
+#[test]
+fn rank3_powersgd_runs_the_const_specialization_end_to_end() {
+    // Level::Rank(3) drives the new r=3 const path through a whole run;
+    // intra widths must agree bitwise here too
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mk = |intra: usize| TrainConfig {
+        controller: ControllerCfg::Static(accordion::compress::Level::Rank(3)),
+        ..cfg(
+            &format!("rank3/i{intra}"),
+            MethodCfg::PowerSgd { rank_low: 4, rank_high: 1 },
+            TransportCfg::Dense,
+            1,
+            intra,
+        )
+    };
+    let oracle = train::run_full(&mk(1), &reg, &rt).unwrap();
+    let got = train::run_full(&mk(4), &reg, &rt).unwrap();
+    assert_bitwise_run_parity(&oracle, &got, "rank3");
+    assert!(oracle.0.final_acc() > 0.0);
+}
