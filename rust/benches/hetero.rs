@@ -1,0 +1,164 @@
+//! Heterogeneous-cluster bench: fault intensity x schedule on the
+//! two-node topology, reporting *simulated* end-to-end seconds and the
+//! Data-Sent ledger (fully deterministic — diffs of `BENCH_hetero.json`
+//! across PRs are pure signal).
+//!
+//! Also pins the straggler invariant the clock model promises: a
+//! schedule where every worker straggles at exactly 1.5x every epoch
+//! must be STRICTLY slower in sim-seconds than the identical fault-free
+//! run (compute scales, comm does not — the link speed is the
+//! topology's business).
+//!
+//! Run: `cargo bench --bench hetero [-- --quick-ci]`
+//! (`--quick-ci` shrinks the run; CI uploads the JSON per PR.)
+
+use accordion::cluster::faults::FaultCfg;
+use accordion::compress::Level;
+use accordion::exp::hetero::two_node_topology;
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, TrainConfig}};
+use accordion::util::json;
+
+const WORKERS: usize = 4;
+
+fn cfg(
+    label: &str,
+    controller: ControllerCfg,
+    faults: Option<FaultCfg>,
+    quick: bool,
+) -> TrainConfig {
+    TrainConfig {
+        label: label.to_string(),
+        model: "mlp_deep_c10".into(),
+        workers: WORKERS,
+        epochs: if quick { 3 } else { 6 },
+        train_size: if quick { 512 } else { 2048 },
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: if quick { vec![2] } else { vec![4] },
+        controller,
+        topology: Some(two_node_topology()),
+        faults,
+        ..TrainConfig::default()
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick-ci");
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+
+    let schedules: Vec<(&str, ControllerCfg)> = vec![
+        ("static-low", ControllerCfg::Static(Level::Low)),
+        ("static-high", ControllerCfg::Static(Level::High)),
+        ("accordion", ControllerCfg::Accordion { eta: 0.5, interval: 2 }),
+    ];
+    let intensities: &[f64] = if quick { &[0.0, 0.7] } else { &[0.0, 0.3, 0.7] };
+
+    let mut rows: Vec<json::Json> = Vec::new();
+    println!(
+        "{:<40} {:>9} {:>10} {:>12} {:>9}",
+        "setting", "intensity", "sim_secs", "floats", "acc"
+    );
+    for &intensity in intensities {
+        for (name, ctrl) in &schedules {
+            let faults = if intensity > 0.0 {
+                Some(FaultCfg::from_intensity(intensity, 11))
+            } else {
+                None
+            };
+            let c = cfg(
+                &format!("bench-hetero-i{intensity:.1}-{name}"),
+                ctrl.clone(),
+                faults,
+                quick,
+            );
+            let log = train::run(&c, &reg, &rt).unwrap();
+            println!(
+                "{:<40} {:>9.1} {:>9.3}s {:>12} {:>8.3}",
+                c.label,
+                intensity,
+                log.total_secs(),
+                log.total_floats(),
+                log.final_acc()
+            );
+            rows.push(json::obj(vec![
+                ("schedule", json::s(name)),
+                ("intensity", json::num(intensity)),
+                ("sim_secs", json::num(log.total_secs())),
+                ("floats", json::num(log.total_floats() as f64)),
+                ("final_acc", json::num(log.final_acc() as f64)),
+            ]));
+        }
+    }
+
+    // ---- straggler invariant: guaranteed-slow run is strictly slower --
+    // slow_prob = 1 with a degenerate [1.5, 1.5] magnitude range: every
+    // epoch's compute is scaled by exactly 1.5, no drops — so the sim
+    // clock MUST be strictly above the fault-free twin.
+    let all_slow = FaultCfg {
+        seed: 3,
+        slow_prob: 1.0,
+        slow_min: 1.5,
+        slow_max: 1.5,
+        drop_prob: 0.0,
+        down_epochs: 1,
+    };
+    let base = train::run(
+        &cfg(
+            "bench-hetero-straggler-base",
+            ControllerCfg::Accordion { eta: 0.5, interval: 2 },
+            None,
+            quick,
+        ),
+        &reg,
+        &rt,
+    )
+    .unwrap();
+    let slow = train::run(
+        &cfg(
+            "bench-hetero-straggler-slow",
+            ControllerCfg::Accordion { eta: 0.5, interval: 2 },
+            Some(all_slow),
+            quick,
+        ),
+        &reg,
+        &rt,
+    )
+    .unwrap();
+    println!(
+        "straggler check: fault-free {:.3}s vs all-slow-1.5x {:.3}s",
+        base.total_secs(),
+        slow.total_secs()
+    );
+    assert!(
+        slow.total_secs() > base.total_secs(),
+        "a 1.5x-everywhere straggler schedule must be strictly slower: {} vs {}",
+        slow.total_secs(),
+        base.total_secs()
+    );
+    // pure compute slowdown never moves data
+    assert_eq!(
+        slow.total_floats(),
+        base.total_floats(),
+        "stragglers (no drops) must not change Data Sent"
+    );
+
+    let report = json::obj(vec![
+        ("bench", json::s("hetero-topology-faults")),
+        ("model", json::s("mlp_deep_c10")),
+        ("workers", json::num(WORKERS as f64)),
+        ("quick_ci", json::num(if quick { 1.0 } else { 0.0 })),
+        ("deterministic", json::num(1.0)),
+        ("straggler_base_secs", json::num(base.total_secs())),
+        ("straggler_slow_secs", json::num(slow.total_secs())),
+        (
+            "straggler_slowdown",
+            json::num(slow.total_secs() / base.total_secs().max(1e-12)),
+        ),
+        ("results", json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_hetero.json", report.to_string()).expect("writing BENCH_hetero.json");
+    println!("BENCH_hetero.json written (simulated, deterministic — diffs are signal)");
+}

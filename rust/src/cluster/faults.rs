@@ -1,0 +1,333 @@
+//! Deterministic fault injection: a seeded, epoch-granular schedule of
+//! per-worker slowdowns, transient drops, and rejoins.
+//!
+//! Real clusters straggle and churn (Han et al. 2407.01378); our sim
+//! stays bit-reproducible by making the fault process part of the
+//! experiment seed rather than of the host.  The schedule owns one
+//! [`Rng`] (the crate's xoshiro256++ idiom) consumed **only on the
+//! coordinator, in a fixed order** — `begin_epoch` draws exactly three
+//! variates per worker rank per epoch regardless of what happens with
+//! them, so the stream position is a pure function of `(seed, epoch)`
+//! and every faulty run replays byte-for-byte across `--threads`,
+//! transports, and reruns (pinned by `tests/hetero.rs` and the CI
+//! timing-determinism lane).
+//!
+//! Semantics per epoch, evaluated rank-ascending:
+//!
+//!  * an active worker *drops* with `drop_prob`, going down for
+//!    `down_epochs` whole epochs before rejoining (a rejoin costs a
+//!    charged parameter broadcast — the trainer prices it);
+//!  * a drop that would leave the cluster empty is vetoed (the draw is
+//!    still consumed, keeping the stream aligned);
+//!  * an active worker *straggles* with `slow_prob`, its compute scaled
+//!    by a multiplier uniform in `[slow_min, slow_max]`; under BSP the
+//!    step stalls on the slowest active worker, so the trainer forwards
+//!    `max_active_slowdown` to the clock;
+//!  * down workers neither compute nor communicate: the trainer shrinks
+//!    the collective to the survivors.
+
+use crate::util::rng::Rng;
+
+/// Knobs of the fault process (TOML `[faults]`, `--set faults.*`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultCfg {
+    /// seed of the fault stream (independent of the data/model seed so
+    /// the same training run can be replayed under different weather)
+    pub seed: u64,
+    /// per-worker per-epoch straggler probability
+    pub slow_prob: f64,
+    /// straggler compute multiplier range (>= 1.0)
+    pub slow_min: f64,
+    pub slow_max: f64,
+    /// per-worker per-epoch transient-drop probability
+    pub drop_prob: f64,
+    /// whole epochs a dropped worker stays down before rejoining
+    pub down_epochs: usize,
+}
+
+impl FaultCfg {
+    /// A one-knob sweep axis for the hetero ablation: `intensity` in
+    /// [0, 1] scales both fault rates and the straggler magnitude.
+    /// Intensity 0 is the fault-free schedule (all probabilities zero).
+    pub fn from_intensity(intensity: f64, seed: u64) -> FaultCfg {
+        let i = intensity.clamp(0.0, 1.0);
+        FaultCfg {
+            seed,
+            slow_prob: 0.3 * i,
+            slow_min: 1.5,
+            slow_max: 1.5 + 2.5 * i,
+            drop_prob: 0.1 * i,
+            down_epochs: 1,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.slow_prob) || !(0.0..=1.0).contains(&self.drop_prob) {
+            return Err("faults: probabilities must be in [0, 1]".into());
+        }
+        if self.slow_min < 1.0 || self.slow_max < self.slow_min {
+            return Err("faults: need 1.0 <= slow_min <= slow_max".into());
+        }
+        if self.down_epochs == 0 {
+            return Err("faults: down_epochs must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Workers entering/leaving the cluster at an epoch boundary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MembershipDelta {
+    pub dropped: Vec<usize>,
+    pub rejoined: Vec<usize>,
+}
+
+impl MembershipDelta {
+    pub fn changed(&self) -> bool {
+        !self.dropped.is_empty() || !self.rejoined.is_empty()
+    }
+}
+
+/// The seeded per-epoch fault process (see module docs).
+pub struct FaultSchedule {
+    workers: usize,
+    cfg: FaultCfg,
+    rng: Rng,
+    /// next epoch `begin_epoch` expects (the stream is strictly ordered)
+    next_epoch: usize,
+    /// first epoch at which a worker is active again (0 = never dropped)
+    down_until: Vec<usize>,
+    /// this epoch's compute multiplier per worker (1.0 = nominal)
+    slowdown: Vec<f64>,
+    active: Vec<usize>,
+    mask: Vec<bool>,
+}
+
+impl FaultSchedule {
+    pub fn new(workers: usize, cfg: FaultCfg) -> FaultSchedule {
+        assert!(workers >= 1);
+        FaultSchedule {
+            workers,
+            cfg,
+            rng: Rng::new(cfg.seed),
+            next_epoch: 0,
+            down_until: vec![0; workers],
+            slowdown: vec![1.0; workers],
+            active: (0..workers).collect(),
+            mask: vec![true; workers],
+        }
+    }
+
+    /// Advance the schedule to `epoch` (must be called once per epoch,
+    /// in order) and report the membership change versus the previous
+    /// epoch.  Draws exactly `3 * workers` variates whatever happens.
+    pub fn begin_epoch(&mut self, epoch: usize) -> MembershipDelta {
+        assert_eq!(
+            epoch, self.next_epoch,
+            "fault schedule must advance one epoch at a time"
+        );
+        self.next_epoch = epoch + 1;
+
+        let mut delta = MembershipDelta::default();
+        let mut n_active = (0..self.workers)
+            .filter(|&w| self.down_until[w] <= epoch)
+            .count();
+        for w in 0..self.workers {
+            // fixed three-draw budget per rank: stream position never
+            // depends on outcomes
+            let drop_draw = self.rng.uniform() as f64;
+            let slow_draw = self.rng.uniform() as f64;
+            let mag_draw = self.rng.uniform() as f64;
+
+            let was_active = self.mask[w];
+            let now_up = self.down_until[w] <= epoch;
+            if now_up && !was_active {
+                delta.rejoined.push(w);
+            }
+            let mut up = now_up;
+            if up && drop_draw < self.cfg.drop_prob && n_active > 1 {
+                self.down_until[w] = epoch + self.cfg.down_epochs;
+                n_active -= 1;
+                up = false;
+                // a rejoin-then-redrop in one boundary is just a drop
+                if was_active {
+                    delta.dropped.push(w);
+                } else {
+                    delta.rejoined.pop();
+                }
+            }
+            self.slowdown[w] = if up && slow_draw < self.cfg.slow_prob {
+                self.cfg.slow_min + mag_draw * (self.cfg.slow_max - self.cfg.slow_min)
+            } else {
+                1.0
+            };
+            self.mask[w] = up;
+        }
+        self.active.clear();
+        self.active.extend((0..self.workers).filter(|&w| self.mask[w]));
+        debug_assert!(!self.active.is_empty());
+        delta
+    }
+
+    /// Ranks active this epoch, ascending.
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    /// Per-rank activity mask for this epoch.
+    pub fn mask(&self) -> &[bool] {
+        &self.mask
+    }
+
+    /// Per-rank compute multipliers for this epoch (1.0 when nominal
+    /// or down).
+    pub fn slowdown(&self) -> &[f64] {
+        &self.slowdown
+    }
+
+    /// The BSP stall factor: the slowest active worker's multiplier.
+    pub fn max_active_slowdown(&self) -> f64 {
+        self.active
+            .iter()
+            .map(|&w| self.slowdown[w])
+            .fold(1.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stormy() -> FaultCfg {
+        FaultCfg {
+            seed: 11,
+            slow_prob: 0.5,
+            slow_min: 1.5,
+            slow_max: 4.0,
+            drop_prob: 0.4,
+            down_epochs: 2,
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_identically() {
+        let mut a = FaultSchedule::new(4, stormy());
+        let mut b = FaultSchedule::new(4, stormy());
+        for e in 0..50 {
+            let da = a.begin_epoch(e);
+            let db = b.begin_epoch(e);
+            assert_eq!(da, db);
+            assert_eq!(a.active(), b.active());
+            assert_eq!(
+                a.slowdown()
+                    .iter()
+                    .map(|s| s.to_bits())
+                    .collect::<Vec<_>>(),
+                b.slowdown()
+                    .iter()
+                    .map(|s| s.to_bits())
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = FaultSchedule::new(4, stormy());
+        let mut b = FaultSchedule::new(4, FaultCfg { seed: 12, ..stormy() });
+        let mut same = true;
+        for e in 0..50 {
+            let da = a.begin_epoch(e);
+            let db = b.begin_epoch(e);
+            same &= da == db
+                && a.slowdown() == b.slowdown();
+        }
+        assert!(!same, "independent seeds should produce different weather");
+    }
+
+    #[test]
+    fn at_least_one_worker_always_survives() {
+        let cfg = FaultCfg { drop_prob: 1.0, down_epochs: 3, ..stormy() };
+        let mut f = FaultSchedule::new(3, cfg);
+        for e in 0..30 {
+            f.begin_epoch(e);
+            assert!(!f.active().is_empty(), "epoch {e} emptied the cluster");
+        }
+    }
+
+    #[test]
+    fn drops_last_for_down_epochs_then_rejoin() {
+        // drop_prob 1 with 2 workers: rank 0 drops (rank 1 is protected
+        // as the last survivor), stays down exactly `down_epochs`, then
+        // rejoins — and is immediately eligible to drop again
+        let cfg = FaultCfg { drop_prob: 1.0, slow_prob: 0.0, down_epochs: 2, ..stormy() };
+        let mut f = FaultSchedule::new(2, cfg);
+        let d0 = f.begin_epoch(0);
+        assert_eq!(d0.dropped, vec![0]);
+        assert_eq!(f.active(), &[1]);
+        let d1 = f.begin_epoch(1);
+        assert!(!d1.changed());
+        assert_eq!(f.active(), &[1]);
+        // epoch 2: rank 0 is back up, and with drop_prob 1 it re-drops
+        // at the same boundary — net membership unchanged, no delta
+        let d2 = f.begin_epoch(2);
+        assert!(!d2.changed());
+        assert_eq!(f.active(), &[1]);
+    }
+
+    #[test]
+    fn rejoins_are_reported_once_probabilities_allow() {
+        let cfg = FaultCfg { drop_prob: 1.0, slow_prob: 0.0, down_epochs: 1, ..stormy() };
+        let mut f = FaultSchedule::new(2, cfg);
+        assert_eq!(f.begin_epoch(0).dropped, vec![0]);
+        // epoch 1: rank 0 rejoins then re-drops in the same boundary
+        // (drop_prob 1) — but rank 1 cannot also drop, so membership is
+        // stable at {1} forever and no spurious deltas appear
+        for e in 1..10 {
+            assert!(!f.begin_epoch(e).changed());
+        }
+        // with drop_prob 0 after recovery the rejoin is visible
+        let cfg2 = FaultCfg { drop_prob: 0.0, ..cfg };
+        let mut g = FaultSchedule::new(2, cfg);
+        g.begin_epoch(0);
+        g.cfg = cfg2;
+        let d = g.begin_epoch(1);
+        assert_eq!(d.rejoined, vec![0]);
+        assert_eq!(g.active(), &[0, 1]);
+    }
+
+    #[test]
+    fn slowdowns_bounded_and_bsp_max_is_correct() {
+        let cfg = FaultCfg { drop_prob: 0.0, slow_prob: 1.0, ..stormy() };
+        let mut f = FaultSchedule::new(4, cfg);
+        for e in 0..20 {
+            f.begin_epoch(e);
+            let mut worst = 1.0f64;
+            for &s in f.slowdown() {
+                assert!((cfg.slow_min..=cfg.slow_max).contains(&s));
+                worst = worst.max(s);
+            }
+            assert_eq!(f.max_active_slowdown(), worst);
+        }
+    }
+
+    #[test]
+    fn zero_intensity_is_fault_free() {
+        let mut f = FaultSchedule::new(4, FaultCfg::from_intensity(0.0, 7));
+        for e in 0..20 {
+            assert!(!f.begin_epoch(e).changed());
+            assert_eq!(f.active(), &[0, 1, 2, 3]);
+            assert_eq!(f.max_active_slowdown(), 1.0);
+        }
+        assert!(FaultCfg::from_intensity(1.0, 7).validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(FaultCfg { slow_prob: 1.5, ..stormy() }.validate().is_err());
+        assert!(FaultCfg { slow_min: 0.5, ..stormy() }.validate().is_err());
+        assert!(FaultCfg { slow_max: 1.0, ..stormy() }.validate().is_err());
+        assert!(FaultCfg { down_epochs: 0, ..stormy() }.validate().is_err());
+        assert!(stormy().validate().is_ok());
+    }
+}

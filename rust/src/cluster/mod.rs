@@ -9,21 +9,16 @@
 //! experiment bit-reproducible.  The `simtime` module turns the modeled
 //! per-layer compute costs + α–β communication into the deterministic
 //! simulated wall clock the tables report — overlap-aware, and invariant
-//! to host threading (DESIGN.md §2, §9).
+//! to host threading (DESIGN.md §2, §9).  The `topology` module lifts
+//! the single shared link to a fast-intra / slow-cross link matrix, and
+//! `faults` adds a seeded schedule of stragglers, drops, and rejoins —
+//! both deterministic, both degenerating bit-exactly to the homogeneous
+//! fault-free model when disabled.
 
 pub mod bucket;
+pub mod faults;
 pub mod network;
 pub mod simtime;
+pub mod topology;
 
-/// Static description of the training cluster.
-#[derive(Clone, Debug)]
-pub struct Topology {
-    pub workers: usize,
-}
-
-impl Topology {
-    pub fn new(workers: usize) -> Topology {
-        assert!(workers >= 1);
-        Topology { workers }
-    }
-}
+pub use topology::{LinkSpec, Topology};

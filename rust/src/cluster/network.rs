@@ -33,6 +33,11 @@ pub enum CollKind {
     Allreduce,
     Allgather,
     ReduceScatter,
+    /// Pipelined-ring broadcast — the rejoin path's full-parameter
+    /// resynchronization.  Never emitted into per-layer aggregation
+    /// streams (the bucket planner's fences assume reduce-type kinds),
+    /// only into the trainer's dedicated membership `Comm`.
+    Broadcast,
 }
 
 #[derive(Clone, Debug)]
@@ -99,6 +104,7 @@ impl NetworkModel {
             CollKind::Allreduce => self.allreduce_secs(bytes_per_worker),
             CollKind::Allgather => self.allgather_secs(bytes_per_worker),
             CollKind::ReduceScatter => self.reduce_scatter_secs(bytes_per_worker),
+            CollKind::Broadcast => self.broadcast_secs(bytes_per_worker),
         }
     }
 
@@ -211,6 +217,7 @@ mod tests {
             m.collective_secs(CollKind::ReduceScatter, v),
             m.reduce_scatter_secs(v)
         );
+        assert_eq!(m.collective_secs(CollKind::Broadcast, v), m.broadcast_secs(v));
     }
 
     #[test]

@@ -174,14 +174,37 @@ pub fn step_times(
     comm_secs: &[f64],
     rebuild_secs: f64,
 ) -> StepTimes {
+    step_times_slowed(cost, batch_mult, comm_secs, rebuild_secs, 1.0)
+}
+
+/// [`step_times`] under a BSP straggler: every *compute* term (forward,
+/// per-layer backward, accumulation micro-steps, optimizer) is scaled by
+/// `slow`, the slowest active worker's multiplier for this epoch
+/// (`FaultSchedule::max_active_slowdown`) — lock-step synchronization
+/// means the whole step's compute stream runs at the straggler's pace,
+/// which stretches every gradient ready-time feeding the network
+/// channel.  Communication terms are NOT scaled: link speed is the
+/// topology's business, not the straggler's CPU.
+///
+/// `slow = 1.0` is bit-identical to the unscaled schedule (`x * 1.0` is
+/// exact for finite f64), which is how the fault-free path keeps today's
+/// clock byte-for-byte.
+pub fn step_times_slowed(
+    cost: &CostModel,
+    batch_mult: usize,
+    comm_secs: &[f64],
+    rebuild_secs: f64,
+    slow: f64,
+) -> StepTimes {
     debug_assert_eq!(comm_secs.len(), cost.bwd_secs.len());
+    debug_assert!(slow >= 1.0);
     let mult = batch_mult.max(1) as f64;
-    let base = (mult - 1.0) * cost.micro_secs() + cost.fwd_secs;
+    let base = (mult - 1.0) * (cost.micro_secs() * slow) + cost.fwd_secs * slow;
     let mut ready = base;
     let mut net_free = 0.0f64;
     let mut comm_sum = 0.0f64;
     for l in (0..cost.bwd_secs.len()).rev() {
-        ready += cost.bwd_secs[l];
+        ready += cost.bwd_secs[l] * slow;
         let start = if ready > net_free { ready } else { net_free };
         net_free = start + comm_secs[l];
         comm_sum += comm_secs[l];
@@ -191,11 +214,12 @@ pub fn step_times(
     // operations in the same order)
     let compute_end = ready;
     let drained = if net_free > compute_end { net_free } else { compute_end };
-    let compute = compute_end + cost.opt_secs;
+    let opt = cost.opt_secs * slow;
+    let compute = compute_end + opt;
     StepTimes {
         compute,
         comm: comm_sum + rebuild_secs,
-        overlapped: drained + cost.opt_secs + rebuild_secs,
+        overlapped: drained + opt + rebuild_secs,
         serialized: compute + comm_sum + rebuild_secs,
     }
 }
@@ -224,14 +248,29 @@ pub fn step_times_bucketed(
     charges: &[crate::cluster::bucket::BucketCharge],
     rebuild_secs: f64,
 ) -> StepTimes {
+    step_times_bucketed_slowed(cost, batch_mult, charges, rebuild_secs, 1.0)
+}
+
+/// [`step_times_bucketed`] under a BSP straggler — the same compute-side
+/// scaling as [`step_times_slowed`], bucket issue times stretched with
+/// the ready-times that gate them.  `slow = 1.0` is bit-identical to the
+/// unscaled schedule.
+pub fn step_times_bucketed_slowed(
+    cost: &CostModel,
+    batch_mult: usize,
+    charges: &[crate::cluster::bucket::BucketCharge],
+    rebuild_secs: f64,
+    slow: f64,
+) -> StepTimes {
+    debug_assert!(slow >= 1.0);
     let mult = batch_mult.max(1) as f64;
-    let base = (mult - 1.0) * cost.micro_secs() + cost.fwd_secs;
+    let base = (mult - 1.0) * (cost.micro_secs() * slow) + cost.fwd_secs * slow;
     let mut ready = base;
     let mut net_free = 0.0f64;
     let mut comm_sum = 0.0f64;
     let mut ci = 0usize;
     for l in (0..cost.bwd_secs.len()).rev() {
-        ready += cost.bwd_secs[l];
+        ready += cost.bwd_secs[l] * slow;
         while ci < charges.len() && charges[ci].lo_layer == l {
             let start = if ready > net_free { ready } else { net_free };
             net_free = start + charges[ci].secs;
@@ -249,11 +288,12 @@ pub fn step_times_bucketed(
     );
     let compute_end = ready;
     let drained = if net_free > compute_end { net_free } else { compute_end };
-    let compute = compute_end + cost.opt_secs;
+    let opt = cost.opt_secs * slow;
+    let compute = compute_end + opt;
     StepTimes {
         compute,
         comm: comm_sum + rebuild_secs,
-        overlapped: drained + cost.opt_secs + rebuild_secs,
+        overlapped: drained + opt + rebuild_secs,
         serialized: compute + comm_sum + rebuild_secs,
     }
 }
@@ -390,6 +430,64 @@ mod tests {
         assert!((t.overlapped - (t0.overlapped + 2.0)).abs() < 1e-12);
         assert!((t.serialized - (t0.serialized + 2.0)).abs() < 1e-12);
         assert!((t.comm - (t0.comm + 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unit_slowdown_is_bit_identical() {
+        // the fault-free path must keep today's clock byte-for-byte:
+        // `x * 1.0` is exact, so every field matches to the bit
+        for comm in [[4.0, 1.0], [100.0, 100.0], [0.0, 0.0]] {
+            for mult in [1usize, 2, 8] {
+                let a = step_times(&cost2(), mult, &comm, 2.0);
+                let b = step_times_slowed(&cost2(), mult, &comm, 2.0, 1.0);
+                assert_eq!(a.compute.to_bits(), b.compute.to_bits());
+                assert_eq!(a.comm.to_bits(), b.comm.to_bits());
+                assert_eq!(a.overlapped.to_bits(), b.overlapped.to_bits());
+                assert_eq!(a.serialized.to_bits(), b.serialized.to_bits());
+            }
+        }
+        use crate::cluster::bucket::BucketCharge;
+        let charges = [
+            BucketCharge { lo_layer: 1, secs: 1.0 },
+            BucketCharge { lo_layer: 0, secs: 4.0 },
+        ];
+        let a = step_times_bucketed(&cost2(), 2, &charges, 2.0);
+        let b = step_times_bucketed_slowed(&cost2(), 2, &charges, 2.0, 1.0);
+        assert_eq!(a.overlapped.to_bits(), b.overlapped.to_bits());
+        assert_eq!(a.serialized.to_bits(), b.serialized.to_bits());
+    }
+
+    #[test]
+    fn straggler_scales_compute_not_comm() {
+        // slow=2: compute terms double (fwd 2, bwd 4+6, opt 1), comm
+        // stays 5.  Hand schedule: l1 ready at 2+6=8, comm 1s -> 9;
+        // l0 ready at 12, comm 4s (9 < 12, starts at 12) -> 16;
+        // drained 16 + opt 1 = 17.
+        let t = step_times_slowed(&cost2(), 1, &[4.0, 1.0], 0.0, 2.0);
+        assert!((t.overlapped - 17.0).abs() < 1e-12, "{t:?}");
+        assert!((t.compute - 13.0).abs() < 1e-12, "{t:?}");
+        assert!((t.comm - 5.0).abs() < 1e-12, "{t:?}");
+        assert!((t.serialized - 18.0).abs() < 1e-12, "{t:?}");
+        // monotone: a straggler never speeds the step up
+        let base = step_times(&cost2(), 1, &[4.0, 1.0], 0.0);
+        assert!(t.overlapped > base.overlapped);
+        assert!(t.serialized > base.serialized);
+    }
+
+    #[test]
+    fn bucketed_straggler_matches_singleton_layer_schedule() {
+        use crate::cluster::bucket::BucketCharge;
+        let comm = [4.0, 1.0];
+        let charges = [
+            BucketCharge { lo_layer: 1, secs: comm[1] },
+            BucketCharge { lo_layer: 0, secs: comm[0] },
+        ];
+        for slow in [1.0, 1.5, 3.0] {
+            let a = step_times_slowed(&cost2(), 1, &comm, 0.5, slow);
+            let b = step_times_bucketed_slowed(&cost2(), 1, &charges, 0.5, slow);
+            assert!((a.overlapped - b.overlapped).abs() < 1e-12, "{a:?} vs {b:?}");
+            assert!((a.serialized - b.serialized).abs() < 1e-12);
+        }
     }
 
     #[test]

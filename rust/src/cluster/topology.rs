@@ -1,0 +1,179 @@
+//! Per-link cluster topology: fast intra-node links, slow cross-node
+//! links (the heterogeneous regime of Khirirat et al. 2003.06377 and the
+//! real-network measurements of Han et al. 2407.01378).
+//!
+//! Workers are grouped into nodes of `node_size` consecutive ranks
+//! (ranks `[0, node_size)` are node 0, etc.), mirroring how MPI ranks
+//! land on multi-GPU hosts.  Every pair of workers is connected by one
+//! of two link classes:
+//!
+//!  * **intra** — both endpoints on the same node (NVLink/PCIe class);
+//!  * **cross** — endpoints on different nodes (ethernet class).
+//!
+//! Ring collectives traverse every active worker, so the ring's cost is
+//! governed by the *slowest traversed link* — the α–β stragglers'
+//! bottleneck.  Rather than summing per-hop terms (which would change
+//! the arithmetic even for equal links), [`Topology::network_for`]
+//! selects the bottleneck link class for the active set and builds a
+//! plain [`NetworkModel`] from it with the exact constructor the shared
+//! single-link model uses.  Consequences, both load-bearing:
+//!
+//!  * all-links-equal topologies produce a `NetworkModel` whose
+//!    `alpha`/`beta` are **bit-identical** to today's shared-link model,
+//!    so every charge degenerates bit-exactly (an acceptance criterion
+//!    pinned by `tests/hetero.rs`);
+//!  * once any ring crosses a node boundary the whole ring is priced at
+//!    the cross-node link — stragglers dominate, exactly the α–β
+//!    behavior of a real ring all-reduce pinned by the unit tests here.
+
+use crate::cluster::network::NetworkModel;
+
+/// One link class: the α–β parameters of a point-to-point connection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSpec {
+    pub bandwidth_mbps: f64,
+    pub latency_us: f64,
+}
+
+impl LinkSpec {
+    /// The slower of two link classes under the α–β model: higher
+    /// latency wins the α term, lower bandwidth wins the β term.  The
+    /// bottleneck of a ring mixing both classes pays the worst of each
+    /// (a ring stalls on its slowest hop for every term).
+    pub fn bottleneck(a: LinkSpec, b: LinkSpec) -> LinkSpec {
+        LinkSpec {
+            bandwidth_mbps: a.bandwidth_mbps.min(b.bandwidth_mbps),
+            latency_us: a.latency_us.max(b.latency_us),
+        }
+    }
+}
+
+/// Static description of the training cluster's link matrix (see the
+/// module docs for the two-class model and the bottleneck rule).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub workers: usize,
+    /// consecutive ranks per node; `>= workers` means one node
+    pub node_size: usize,
+    pub intra: LinkSpec,
+    pub cross: LinkSpec,
+}
+
+impl Topology {
+    pub fn new(workers: usize, node_size: usize, intra: LinkSpec, cross: LinkSpec) -> Topology {
+        assert!(workers >= 1);
+        assert!(node_size >= 1, "node_size must be >= 1");
+        Topology { workers, node_size, intra, cross }
+    }
+
+    /// Node index of a worker rank.
+    pub fn node_of(&self, worker: usize) -> usize {
+        worker / self.node_size
+    }
+
+    /// The link class connecting two workers.
+    pub fn link(&self, a: usize, b: usize) -> LinkSpec {
+        if self.node_of(a) == self.node_of(b) {
+            self.intra
+        } else {
+            self.cross
+        }
+    }
+
+    /// Bottleneck link class for a ring over `active` workers: intra if
+    /// the whole active set lives on one node, otherwise the bottleneck
+    /// of both classes (the ring must traverse at least one cross-node
+    /// hop, and with `node_size > 1` at least one intra-node hop too —
+    /// either can be the slower class, so take the worst of each term).
+    pub fn ring_link(&self, active: &[usize]) -> LinkSpec {
+        let one_node = active
+            .windows(2)
+            .all(|w| self.node_of(w[0]) == self.node_of(w[1]));
+        if one_node {
+            self.intra
+        } else {
+            LinkSpec::bottleneck(self.intra, self.cross)
+        }
+    }
+
+    /// α–β model for a ring collective over the given active workers,
+    /// built with the same constructor arithmetic as the shared-link
+    /// model so equal link classes degenerate bit-exactly.
+    pub fn network_for(&self, active: &[usize]) -> NetworkModel {
+        let link = self.ring_link(active);
+        NetworkModel::new(active.len(), link.bandwidth_mbps, link.latency_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> LinkSpec {
+        LinkSpec { bandwidth_mbps: 1000.0, latency_us: 5.0 }
+    }
+    fn slow() -> LinkSpec {
+        LinkSpec { bandwidth_mbps: 100.0, latency_us: 50.0 }
+    }
+
+    #[test]
+    fn equal_links_degenerate_bit_exactly_to_shared_model() {
+        let t = Topology::new(4, 2, slow(), slow());
+        let n = t.network_for(&[0, 1, 2, 3]);
+        let shared = NetworkModel::new(4, 100.0, 50.0);
+        assert_eq!(n.workers, shared.workers);
+        assert_eq!(n.alpha.to_bits(), shared.alpha.to_bits());
+        assert_eq!(n.beta.to_bits(), shared.beta.to_bits());
+        // and therefore every collective charge is bit-identical
+        assert_eq!(
+            n.allreduce_secs(4096).to_bits(),
+            shared.allreduce_secs(4096).to_bits()
+        );
+    }
+
+    #[test]
+    fn single_node_active_set_uses_the_fast_links() {
+        let t = Topology::new(4, 2, fast(), slow());
+        // both rings stay inside one node
+        assert_eq!(t.ring_link(&[0, 1]), fast());
+        assert_eq!(t.ring_link(&[2, 3]), fast());
+        let n = t.network_for(&[0, 1]);
+        let intra_only = NetworkModel::new(2, 1000.0, 5.0);
+        assert_eq!(n.alpha.to_bits(), intra_only.alpha.to_bits());
+        assert_eq!(n.beta.to_bits(), intra_only.beta.to_bits());
+    }
+
+    #[test]
+    fn crossing_a_node_boundary_prices_the_ring_at_the_bottleneck() {
+        let t = Topology::new(4, 2, fast(), slow());
+        assert_eq!(t.ring_link(&[0, 1, 2, 3]), slow());
+        // even a single cross-node pair pays the slow class
+        assert_eq!(t.ring_link(&[1, 2]), slow());
+        // stragglers dominate: the heterogeneous ring is strictly slower
+        // than the same-size intra-node ring for any payload
+        let hetero = t.network_for(&[1, 2]);
+        let homo = Topology::new(4, 4, fast(), slow()).network_for(&[1, 2]);
+        assert!(hetero.allreduce_secs(1 << 20) > homo.allreduce_secs(1 << 20));
+    }
+
+    #[test]
+    fn bottleneck_takes_the_worst_of_each_term() {
+        // pathological classes: one wins latency, the other bandwidth
+        let a = LinkSpec { bandwidth_mbps: 1000.0, latency_us: 80.0 };
+        let b = LinkSpec { bandwidth_mbps: 50.0, latency_us: 5.0 };
+        let w = LinkSpec::bottleneck(a, b);
+        assert_eq!(w.bandwidth_mbps, 50.0);
+        assert_eq!(w.latency_us, 80.0);
+    }
+
+    #[test]
+    fn node_assignment_is_by_consecutive_ranks() {
+        let t = Topology::new(6, 2, fast(), slow());
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(1), 0);
+        assert_eq!(t.node_of(2), 1);
+        assert_eq!(t.node_of(5), 2);
+        assert_eq!(t.link(0, 1), fast());
+        assert_eq!(t.link(1, 2), slow());
+    }
+}

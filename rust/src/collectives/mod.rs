@@ -49,6 +49,16 @@
 //! | sparse/structured (fallback) | as dense           | as dense, + rebuild            |
 //! | parameter rebuild          | —                    | all-gather: `ceil(V/N)`        |
 //! | bucketed (`net.bucket_kb > 0`) | consecutive same-kind payloads coalesce: one α per ≤ bucket_kb·1024-byte bucket, β on ΣV | same, and the per-layer rebuild all-gathers coalesce too |
+//! | worker rejoin (faults)     | broadcast: full model `P` | broadcast: full model `P` |
+//!
+//! The rejoin broadcast (a recovered worker resynchronizing all
+//! parameters, [`Comm::charge_broadcast`]) goes through a dedicated
+//! membership `Comm` owned by the trainer — never a per-layer ledger
+//! shard — so the bucket planner and the per-step overlap scheduler
+//! never see it: it is charged serially at the epoch boundary where the
+//! rejoin happens.  Under a heterogeneous topology every collective is
+//! priced by the bottleneck link of the *active* worker set
+//! (`cluster::topology`), and the α–β formulas themselves are unchanged.
 //!
 //! Bucketing never changes the floats column (the paper's Data Sent is
 //! payload, not launches); it changes only the α-β *seconds* the clock
@@ -207,6 +217,22 @@ impl Comm {
         self.ledger.rebuild_secs += secs;
         self.ledger.collectives += 1;
         self.events.push(CollEvent { kind: CollKind::Allgather, bytes: floats * 4, rebuild: true });
+    }
+
+    /// Charge a pipelined-ring broadcast of `floats` payload — the
+    /// fault path's full-parameter resynchronization when a dropped
+    /// worker rejoins.  Goes through the trainer's dedicated membership
+    /// `Comm` (see the module-docs charging table), so it never enters
+    /// the bucket planner or the per-step overlap scheduler.
+    pub fn charge_broadcast(&mut self, floats: usize) {
+        self.ledger.floats += floats as u64;
+        self.ledger.secs += self.net.broadcast_secs(floats * 4);
+        self.ledger.collectives += 1;
+        self.events.push(CollEvent {
+            kind: CollKind::Broadcast,
+            bytes: floats * 4,
+            rebuild: false,
+        });
     }
 }
 
@@ -380,6 +406,14 @@ pub trait Transport: Send + Sync {
     /// reconstructs one layer at a time before discarding the
     /// unowned part).
     fn resident_floats(&self, layer_numels: &[usize]) -> usize;
+
+    /// Re-partition ownership for a changed active-worker count (fault
+    /// injection drops/rejoins).  Called by the trainer at the epoch
+    /// boundary where membership changes, BEFORE any aggregation of the
+    /// new epoch.  Dense replication is membership-agnostic (default
+    /// no-op); sharded ownership re-chunks so the `n` survivors absorb
+    /// the departed workers' `ceil(V/n)` ring chunks.
+    fn set_active_workers(&mut self, _n: usize) {}
 }
 
 /// Today's transport: every worker owns (and decompresses) every layer,
@@ -497,6 +531,17 @@ impl Transport for ShardedOwnership {
             .map(|&n| self.owned_range(n, 0).len())
             .sum();
         shards + layer_numels.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Membership change: re-chunk every layer over the `n` active
+    /// workers.  All ownership arithmetic (`owners`, `owned_range`,
+    /// `chunk_len`, rebuild charging) derives from `self.workers`, so
+    /// updating it is the whole re-partition — the survivors' disjoint
+    /// ascending ranges cover each layer exactly once again, and the
+    /// optimizer's range-sweep stays bit-exact under any partition.
+    fn set_active_workers(&mut self, n: usize) {
+        assert!(n >= 1, "sharded ownership needs at least one active worker");
+        self.workers = n;
     }
 }
 
@@ -696,6 +741,53 @@ mod tests {
         assert!((priced - comm.ledger.secs).abs() < 1e-12 * comm.ledger.secs.max(1.0));
         comm.events.clear();
         assert_eq!(comm.ledger.collectives, 4); // ledger survives the clear
+    }
+
+    #[test]
+    fn broadcast_charge_prices_the_rejoin_resync() {
+        let mut comm = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        comm.charge_broadcast(1000);
+        assert_eq!(comm.ledger.floats, 1000);
+        assert_eq!(comm.ledger.collectives, 1);
+        assert_eq!(comm.ledger.rebuild_secs, 0.0);
+        let want = comm.net.broadcast_secs(4000);
+        assert_eq!(comm.ledger.secs.to_bits(), want.to_bits());
+        assert_eq!(
+            comm.events,
+            vec![CollEvent { kind: CollKind::Broadcast, bytes: 4000, rebuild: false }]
+        );
+        // event re-pricing agrees (the invariant the planner relies on)
+        let priced = comm.net.collective_secs(CollKind::Broadcast, 4000);
+        assert_eq!(priced.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn sharded_repartition_absorbs_departed_chunks() {
+        let mut t = ShardedOwnership::new(4);
+        assert_eq!(t.owned_range(100, 0), 0..25);
+        // one worker drops: 3 survivors re-chunk at ceil(100/3) = 34
+        t.set_active_workers(3);
+        assert_eq!(t.owners(), 3);
+        assert_eq!(t.owned_range(100, 0), 0..34);
+        assert_eq!(t.owned_range(100, 1), 34..68);
+        assert_eq!(t.owned_range(100, 2), 68..100);
+        // still a partition for awkward sizes
+        for numel in [1usize, 2, 5, 97] {
+            let covered: usize = (0..t.owners()).map(|w| t.owned_range(numel, w).len()).sum();
+            assert_eq!(covered, numel);
+        }
+        // rejoin restores the original chunking
+        t.set_active_workers(4);
+        assert_eq!(t.owned_range(100, 0), 0..25);
+        // rebuild charge follows the new chunk length
+        assert_eq!(t.chunk_len(100), 25);
+        t.set_active_workers(3);
+        assert_eq!(t.chunk_len(100), 34);
+        // dense is membership-agnostic
+        let mut d = DenseReplicated;
+        d.set_active_workers(2);
+        assert_eq!(d.owners(), 1);
+        assert_eq!(d.owned_range(100, 0), 0..100);
     }
 
     #[test]

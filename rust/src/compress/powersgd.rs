@@ -128,7 +128,10 @@ impl DistCompressor for PowerSgd {
         };
         let numel = n * k;
         let workers = grads.len();
-        assert_eq!(workers, self.workers);
+        // fault injection can shrink the active set below the configured
+        // worker count; per-worker state sized at the configured count is
+        // capacity (the trainer resets compressor state on membership change)
+        assert!(workers <= self.workers);
         let r = self.rank_for(level, n, k);
         // arena layout: workers P factors, workers Q factors, P̄, Q̄ —
         // disjoint from `st` (self.state), so no scratch-detach dance

@@ -106,7 +106,10 @@ impl DistCompressor for TopK {
     ) {
         let numel: usize = shape.iter().product();
         let workers = grads.len();
-        assert_eq!(workers, self.workers);
+        // fault injection can shrink the active set below the configured
+        // worker count; per-worker state sized at the configured count is
+        // capacity (the trainer resets compressor state on membership change)
+        assert!(workers <= self.workers);
         let k = self.k_for(numel, level);
 
         let Workspace { f32s, intra, .. } = ws;

@@ -20,7 +20,7 @@
 //!   stability rule) and scales the LR linearly on switch (Goyal et al.),
 //!   which the trainer applies via `Decision::batch_mult`.
 
-use super::{Controller, Decision, EpochObs};
+use super::{Controller, ControllerState, Decision, EpochObs};
 use crate::compress::Level;
 
 pub struct Accordion {
@@ -37,6 +37,10 @@ pub struct Accordion {
     /// per-layer ‖Δ‖ captured at the last detection point
     prev_norms: Vec<Option<f32>>,
     prev_model_norm: Option<f32>,
+    /// epoch of the last window re-base (LR decay): detection windows
+    /// are counted from here so the first post-decay comparison sees a
+    /// clean, same-length window instead of one straddling the decay
+    phase: usize,
     /// trace of decisions for Figs. 18-20
     pub decision_log: Vec<(usize, Vec<Level>)>,
 }
@@ -54,6 +58,7 @@ impl Accordion {
             batch_mult: 1,
             prev_norms: vec![None; n_layers],
             prev_model_norm: None,
+            phase: 0,
             decision_log: Vec::new(),
         }
     }
@@ -69,7 +74,11 @@ impl Accordion {
         self.batch_mult_high > 1
     }
 
-    /// The Algorithm-1 test for one (prev, curr) norm pair.
+    /// The Algorithm-1 test for one (prev, curr) norm pair.  The paper's
+    /// criterion is the SIGNED relative decrease
+    /// `(‖Δ_prev‖ − ‖Δ_curr‖)/‖Δ_prev‖ ≥ η`: only a *falling* norm marks
+    /// a critical regime.  A rising norm (curr > prev) makes the ratio
+    /// negative and never crosses η > 0.
     fn critical(&self, prev: Option<f32>, curr: f32, lr_decays: bool) -> bool {
         if lr_decays {
             return true;
@@ -77,7 +86,7 @@ impl Accordion {
         match prev {
             None => true, // first window: nothing to compare, early phase is critical
             Some(p) if p <= 0.0 => true,
-            Some(p) => ((p - curr).abs() / p) >= self.eta,
+            Some(p) => ((p - curr) / p) >= self.eta,
         }
     }
 }
@@ -94,16 +103,21 @@ impl Controller for Accordion {
         }
     }
 
-    fn begin_epoch(&mut self, _epoch: usize, lr_curr: f32, lr_next: f32) -> Decision {
+    fn begin_epoch(&mut self, epoch: usize, lr_curr: f32, lr_next: f32) -> Decision {
         // LR decay between this epoch and the next re-declares a critical
         // regime immediately (paper §4.2); the norm comparison at the next
         // detection point then decides when it ends.
-        if lr_next < lr_curr {
+        let reset_window = lr_next < lr_curr;
+        if reset_window {
             self.levels.iter_mut().for_each(|l| *l = Level::Low);
             // norm baseline resets: the post-decay regime is compared
             // against post-decay windows only
             self.prev_norms.iter_mut().for_each(|p| *p = None);
             self.prev_model_norm = None;
+            // re-phase the detection window to this epoch so the trainer's
+            // Δ accumulator (which it resets on `reset_window`) and our
+            // detection boundaries stay aligned post-decay
+            self.phase = epoch;
         }
         let batch_mult = if self.is_batch_mode() {
             // critical ⇒ small batch, else large; monotone non-decreasing
@@ -118,18 +132,38 @@ impl Controller for Accordion {
             1
         };
         self.batch_mult = batch_mult;
-        Decision { levels: self.levels.clone(), batch_mult }
+        Decision { levels: self.levels.clone(), batch_mult, reset_window }
     }
 
     fn detection_interval(&self) -> usize {
         self.interval
     }
 
+    fn checkpoint_state(&self) -> Option<ControllerState> {
+        Some(ControllerState {
+            levels: self.levels.clone(),
+            batch_mult: self.batch_mult,
+            prev_norms: self.prev_norms.clone(),
+            prev_model_norm: self.prev_model_norm,
+            batch_floor: self.batch_floor,
+            phase: self.phase,
+        })
+    }
+
+    fn restore_state(&mut self, st: &ControllerState) {
+        self.levels = st.levels.clone();
+        self.batch_mult = st.batch_mult;
+        self.prev_norms = st.prev_norms.clone();
+        self.prev_model_norm = st.prev_model_norm;
+        self.batch_floor = st.batch_floor;
+        self.phase = st.phase;
+    }
+
     fn observe(&mut self, obs: &EpochObs) {
         // detection runs every `interval` epochs, on the window boundary;
-        // the trainer accumulates Δ across the window (detection_interval)
-        // so the norms compared here are whole-window norms
-        if (obs.epoch + 1) % self.interval != 0 {
+        // windows are counted from the last re-base (`phase`, moved by LR
+        // decays) so the trainer's Δ accumulator and this gate agree
+        if (obs.epoch + 1 - self.phase) % self.interval != 0 {
             return;
         }
         let lr_decays = obs.lr_next < obs.lr_curr;
@@ -239,5 +273,53 @@ mod tests {
         assert!(a.decision_log.is_empty());
         a.observe(&obs(1, vec![10.0], 0.4, 0.4)); // boundary
         assert_eq!(a.decision_log.len(), 1);
+    }
+
+    #[test]
+    fn rising_norm_is_not_critical() {
+        // regression: Algorithm 1 tests the SIGNED relative decrease;
+        // the old |prev − curr|/prev criterion declared a norm that
+        // DOUBLED (signed ratio −1.0) critical and kept compression low
+        let mut a = Accordion::new(1, 0.5, 1);
+        a.observe(&obs(0, vec![10.0], 0.4, 0.4)); // first window -> critical
+        a.observe(&obs(1, vec![20.0], 0.4, 0.4)); // rising norm: NOT critical
+        assert_eq!(a.begin_epoch(2, 0.4, 0.4).levels[0], Level::High);
+    }
+
+    #[test]
+    fn decay_signals_window_reset_and_rephases_detection() {
+        let mut a = Accordion::new(1, 0.5, 2);
+        assert!(!a.begin_epoch(0, 0.4, 0.4).reset_window);
+        a.observe(&obs(0, vec![10.0], 0.4, 0.4));
+        a.observe(&obs(1, vec![10.0], 0.4, 0.4)); // boundary
+        assert_eq!(a.decision_log.len(), 1);
+        // decay declared at begin_epoch(3) — an ODD epoch, so the
+        // un-phased (epoch+1) % interval gate would fire at the end of
+        // epoch 3 against a half-length, decay-straddling window
+        let d = a.begin_epoch(3, 0.4, 0.04);
+        assert!(d.reset_window, "LR decay must tell the trainer to restart its Δ window");
+        a.observe(&obs(3, vec![8.0], 0.04, 0.04)); // 1 epoch into the re-based window
+        assert_eq!(a.decision_log.len(), 1, "detection must wait for a full post-decay window");
+        a.observe(&obs(4, vec![8.0], 0.04, 0.04)); // full window since the re-base
+        assert_eq!(a.decision_log.len(), 2);
+    }
+
+    #[test]
+    fn checkpoint_state_roundtrips_through_restore() {
+        let mut a = Accordion::batch_mode(2, 0.5, 1, 8);
+        a.begin_epoch(0, 0.4, 0.4);
+        a.observe(&obs(0, vec![10.0, 10.0], 0.4, 0.4));
+        a.observe(&obs(1, vec![9.9, 9.9], 0.4, 0.4)); // stable -> large batch
+        assert_eq!(a.begin_epoch(2, 0.4, 0.4).batch_mult, 8);
+        let st = a.checkpoint_state().unwrap();
+        // a fresh controller re-enters the first-window critical regime
+        // and forgets the batch floor — the bug resume used to hit
+        let mut fresh = Accordion::batch_mode(2, 0.5, 1, 8);
+        assert_eq!(fresh.begin_epoch(3, 0.4, 0.4).batch_mult, 1);
+        // restoring the snapshot keeps the monotone floor and baselines
+        let mut resumed = Accordion::batch_mode(2, 0.5, 1, 8);
+        resumed.restore_state(&st);
+        assert_eq!(resumed.begin_epoch(3, 0.4, 0.4).batch_mult, 8);
+        assert_eq!(resumed.checkpoint_state().unwrap().prev_model_norm, st.prev_model_norm);
     }
 }

@@ -53,6 +53,7 @@ impl Controller for AdaQs {
         Decision {
             levels: self.ranks.iter().map(|&r| Level::Rank(r)).collect(),
             batch_mult: 1,
+            reset_window: false,
         }
     }
 

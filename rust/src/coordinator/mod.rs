@@ -16,6 +16,7 @@ pub mod schedule;
 pub mod smith;
 
 use crate::compress::Level;
+use crate::util::json::{self, Json};
 
 /// What the controller broadcasts for one epoch.
 #[derive(Clone, Debug)]
@@ -26,11 +27,15 @@ pub struct Decision {
     /// global batch multiplier (1 = B_low; >1 simulated via gradient
     /// accumulation exactly as the paper's App. A does)
     pub batch_mult: usize,
+    /// the controller re-based its norm baseline this epoch (LR decay):
+    /// the trainer must start a fresh Δ-accumulation window so the first
+    /// post-decay detection never compares across the decay boundary
+    pub reset_window: bool,
 }
 
 impl Decision {
     pub fn uniform(n_layers: usize, level: Level) -> Decision {
-        Decision { levels: vec![level; n_layers], batch_mult: 1 }
+        Decision { levels: vec![level; n_layers], batch_mult: 1, reset_window: false }
     }
 }
 
@@ -50,6 +55,86 @@ pub struct EpochObs {
     pub lr_next: f32,
 }
 
+/// Serializable detector state for checkpoint/resume (all the mutable
+/// state a [`Controller`] carries between epochs).  Persisted alongside
+/// params so a resumed run does NOT silently re-enter the first-window
+/// critical regime or forget the monotone-batch floor.  JSON-encoded via
+/// `util::json`; absent norms round-trip as `null`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControllerState {
+    pub levels: Vec<Level>,
+    pub batch_mult: usize,
+    pub prev_norms: Vec<Option<f32>>,
+    pub prev_model_norm: Option<f32>,
+    pub batch_floor: usize,
+    /// detection-window phase offset (epoch of the last window re-base)
+    pub phase: usize,
+}
+
+impl ControllerState {
+    pub fn to_json(&self) -> Json {
+        let lvl = |l: &Level| -> Json {
+            json::s(&match l {
+                Level::Low => "low".to_string(),
+                Level::High => "high".to_string(),
+                Level::Rank(r) => format!("rank{r}"),
+                Level::Frac(f) => format!("frac{f}"),
+            })
+        };
+        let opt = |v: &Option<f32>| match v {
+            Some(x) => json::num(*x as f64),
+            None => Json::Null,
+        };
+        json::obj(vec![
+            ("levels", json::arr(self.levels.iter().map(lvl).collect())),
+            ("batch_mult", json::num(self.batch_mult as f64)),
+            ("prev_norms", json::arr(self.prev_norms.iter().map(opt).collect())),
+            ("prev_model_norm", opt(&self.prev_model_norm)),
+            ("batch_floor", json::num(self.batch_floor as f64)),
+            ("phase", json::num(self.phase as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ControllerState> {
+        let lvl = |s: &str| -> Option<Level> {
+            match s {
+                "low" => Some(Level::Low),
+                "high" => Some(Level::High),
+                _ => {
+                    if let Some(r) = s.strip_prefix("rank") {
+                        return r.parse().ok().map(Level::Rank);
+                    }
+                    if let Some(f) = s.strip_prefix("frac") {
+                        return f.parse().ok().map(Level::Frac);
+                    }
+                    None
+                }
+            }
+        };
+        let opt = |v: &Json| match v {
+            Json::Null => Some(None),
+            Json::Num(n) => Some(Some(*n as f32)),
+            _ => None,
+        };
+        let levels: Option<Vec<Level>> = j
+            .get("levels")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().and_then(lvl))
+            .collect();
+        let prev_norms: Option<Vec<Option<f32>>> =
+            j.get("prev_norms")?.as_arr()?.iter().map(opt).collect();
+        Some(ControllerState {
+            levels: levels?,
+            batch_mult: j.get("batch_mult")?.as_usize()?,
+            prev_norms: prev_norms?,
+            prev_model_norm: opt(j.get("prev_model_norm")?)?,
+            batch_floor: j.get("batch_floor")?.as_usize()?,
+            phase: j.get("phase")?.as_usize()?,
+        })
+    }
+}
+
 pub trait Controller: Send {
     fn name(&self) -> String;
     fn begin_epoch(&mut self, epoch: usize, lr_curr: f32, lr_next: f32) -> Decision;
@@ -62,6 +147,16 @@ pub trait Controller: Send {
     fn detection_interval(&self) -> usize {
         1
     }
+    /// Snapshot the detector's mutable state for checkpointing.  `None`
+    /// means the controller is stateless across epochs given the epoch
+    /// index (static baselines, manual schedules) and needs nothing
+    /// persisted to resume bit-for-bit.
+    fn checkpoint_state(&self) -> Option<ControllerState> {
+        None
+    }
+    /// Restore a state produced by
+    /// [`checkpoint_state`](Controller::checkpoint_state).
+    fn restore_state(&mut self, _st: &ControllerState) {}
 }
 
 /// Fixed level everywhere — the paper's static baselines.
@@ -85,7 +180,11 @@ impl Controller for StaticLevel {
         format!("static({:?}, b{})", self.level, self.batch_mult)
     }
     fn begin_epoch(&mut self, _epoch: usize, _lr_curr: f32, _lr_next: f32) -> Decision {
-        Decision { levels: vec![self.level; self.n_layers], batch_mult: self.batch_mult }
+        Decision {
+            levels: vec![self.level; self.n_layers],
+            batch_mult: self.batch_mult,
+            reset_window: false,
+        }
     }
     fn observe(&mut self, _obs: &EpochObs) {}
 }
@@ -102,5 +201,25 @@ mod tests {
         assert_eq!(d0.levels, vec![Level::High; 3]);
         assert_eq!(d9.levels, d0.levels);
         assert_eq!(d0.batch_mult, 1);
+        assert!(!d0.reset_window);
+        assert!(c.checkpoint_state().is_none());
+    }
+
+    #[test]
+    fn controller_state_json_roundtrip() {
+        let st = ControllerState {
+            levels: vec![Level::Low, Level::High, Level::Rank(3), Level::Frac(0.25)],
+            batch_mult: 4,
+            prev_norms: vec![Some(1.5), None, Some(0.0), Some(2.25)],
+            prev_model_norm: None,
+            batch_floor: 4,
+            phase: 7,
+        };
+        let text = st.to_json().to_string();
+        let back = ControllerState::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, st);
+        // bitwise: norms must survive the f32 -> f64 -> text -> f32 trip
+        assert_eq!(back.prev_norms[0].unwrap().to_bits(), 1.5f32.to_bits());
+        assert_eq!(back.prev_norms[3].unwrap().to_bits(), 2.25f32.to_bits());
     }
 }

@@ -81,6 +81,7 @@ impl Controller for ManualBatch {
         Decision {
             levels: vec![Level::Low; self.n_layers],
             batch_mult: if in_small { 1 } else { self.mult },
+            reset_window: false,
         }
     }
     fn observe(&mut self, _obs: &EpochObs) {}

@@ -47,6 +47,7 @@ impl Controller for SmithSchedule {
         Decision {
             levels: vec![Level::Low; self.n_layers],
             batch_mult: self.mult_at(epoch),
+            reset_window: false,
         }
     }
     fn observe(&mut self, _obs: &EpochObs) {}

@@ -8,6 +8,7 @@ pub mod ablations;
 pub mod bucket;
 pub mod figures;
 pub mod hessian;
+pub mod hetero;
 pub mod overlap;
 pub mod tables;
 pub mod transport;
@@ -24,7 +25,7 @@ pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "fig1", "fig2", "fig3", "fig4",
     "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig18", "ablate-eta",
     "ablate-interval", "ablate-selector", "ablate-network", "ablate-overlap",
-    "ablate-transport", "ablate-bucket",
+    "ablate-transport", "ablate-bucket", "ablate-hetero",
 ];
 
 /// Shared state for one experiment invocation: the artifact registry, a
@@ -149,6 +150,7 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
         "ablate-overlap" => overlap::ablate_overlap(&mut h),
         "ablate-transport" => transport::ablate_transport(&mut h),
         "ablate-bucket" => bucket::ablate_bucket(&mut h),
+        "ablate-hetero" => hetero::ablate_hetero(&mut h),
         _ => bail!("unknown experiment '{id}' (have: {})", EXPERIMENTS.join(" ")),
     }
 }

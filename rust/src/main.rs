@@ -10,7 +10,7 @@
 use accordion::exp;
 use accordion::models::Registry;
 use accordion::runtime::Runtime;
-use accordion::train::{self, config::{TrainConfig, TransportCfg}};
+use accordion::train::{self, config::{TopologyCfg, TrainConfig, TransportCfg}};
 use accordion::util::{cli::Args, init_logging, toml::Table};
 use anyhow::{bail, Result};
 
@@ -21,7 +21,8 @@ accordion — Adaptive Gradient Communication via Critical Learning Regime Ident
 USAGE:
   accordion train [--config FILE] [--set key=value ...] [--threads N]
                   [--intra-threads N] [--transport dense|sharded]
-                  [--bucket-kb N] [--no-overlap] [--out DIR] [--save PATH]
+                  [--bucket-kb N] [--no-overlap] [--topology SPEC]
+                  [--out DIR] [--save PATH] [--resume PATH]
   accordion eval  --model NAME --ckpt PATH [--set key=value ...]
   accordion repro --exp <id> [--fast] [--set key=value ...] [--out DIR]
   accordion list
@@ -57,6 +58,25 @@ USAGE:
                 0 (default) = off: per-layer charging, bit-identical to
                 the pre-bucketing clock.  Never changes parameters,
                 losses, or the Data-Sent floats column.
+  --topology SPEC
+                per-link cluster model (TOML `[net.links]`), spelled
+                node_size:intra_mbps:intra_us:cross_mbps:cross_us —
+                consecutive ranks group into nodes of node_size workers
+                on the fast intra link; rings crossing a node boundary
+                are priced at the bottleneck link.  With intra == cross
+                the clock is bit-identical to the shared model.
+                Example: --topology 2:1000:5:100:50
+  --save PATH   write a v2 full-state checkpoint (params + optimizer
+                momentum + controller/clock/ledger state) after training
+  --resume PATH continue a --save'd run: restores full state, trains the
+                remaining epochs, bit-identical to the uninterrupted run
+
+  Deterministic fault injection (TOML `[faults]`, --set faults.*): a
+  seeded schedule of per-worker straggler slowdowns (faults.slow_prob,
+  faults.slow_min/slow_max), transient drops (faults.drop_prob), and
+  rejoins after faults.down_epochs.  Same seed => byte-identical runs
+  at every --threads count and transport; a rejoin charges a full-model
+  parameter broadcast to the clock and the floats ledger.
 
   The time column is a deterministic simulated clock: a per-model
   compute cost model (--set time.model=flops|measured, --set
@@ -68,7 +88,7 @@ EXPERIMENT IDS:
   table1 table2 table3 table4 table5 table6
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig18
   ablate-eta ablate-interval ablate-selector ablate-network
-  ablate-overlap ablate-transport ablate-bucket
+  ablate-overlap ablate-transport ablate-bucket ablate-hetero
 
 EXAMPLES:
   accordion repro --exp table1 --fast
@@ -123,6 +143,9 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
     if let Some(kb) = args.usize_opt("bucket-kb") {
         cfg.bucket_kb = kb;
     }
+    if let Some(spec) = args.opt("topology") {
+        cfg.topology = Some(TopologyCfg::parse(spec)?);
+    }
     if args.flag("no-overlap") {
         cfg.overlap = false;
     }
@@ -138,12 +161,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let rt = Runtime::cpu()?;
     let reg = Registry::detect_with(rt.has_pjrt())?;
-    let (log, params) = train::run_full(&cfg, &reg, &rt)?;
+    let mut trainer = train::Trainer::new(&cfg, &reg, &rt)?;
+    if let Some(path) = args.opt("resume") {
+        trainer.restore(path)?;
+        println!("resumed from {path}.{{json,bin}} at epoch {}", trainer.epoch());
+    }
+    while trainer.epoch() < cfg.epochs {
+        trainer.run_epoch()?;
+    }
     if let Some(path) = args.opt("save") {
-        let meta = reg.model(&cfg.model)?;
-        train::checkpoint::save(path, meta, cfg.epochs, &params)?;
+        trainer.save(path)?;
         println!("checkpoint saved to {path}.{{json,bin}}");
     }
+    let (log, _params) = trainer.finish();
     let out = args.opt("out").unwrap_or("runs");
     let path = log.save_csv(out)?;
     println!(

@@ -124,6 +124,20 @@ impl Sgd {
     pub fn reset(&mut self) {
         self.velocity.clear();
     }
+
+    /// The momentum buffers, per layer (empty until the first step or
+    /// [`Sgd::ensure_state`]) — what checkpointing persists.
+    pub fn velocity(&self) -> &[Vec<f32>] {
+        &self.velocity
+    }
+
+    /// Install restored momentum buffers (checkpoint resume).  Shapes
+    /// are the caller's contract; [`Sgd::ensure_state`] re-sizes on
+    /// mismatch, which would silently zero a bad restore — so callers
+    /// pass buffers sized exactly like the parameters.
+    pub fn set_velocity(&mut self, velocity: Vec<Vec<f32>>) {
+        self.velocity = velocity;
+    }
 }
 
 /// One contiguous run of the SGD+momentum update (torch.optim.SGD

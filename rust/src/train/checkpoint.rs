@@ -1,16 +1,110 @@
-//! Checkpointing: persist/restore trained parameters.
+//! Checkpointing: persist/restore trained parameters — and, in the v2
+//! full-state format, everything else a bit-for-bit resume needs.
 //!
 //! Format: `<path>.json` header (model, epoch, total params) +
 //! `<path>.bin` raw f32 little-endian in metadata param order — the same
 //! layout as the AOT init snapshots, so a checkpoint can seed any run of
 //! the same model (`accordion train --set ...` after `--save`, or
 //! `accordion eval --ckpt`).
+//!
+//! Version 2 (`save_full` / `--save` on a training run) appends the
+//! optimizer momentum and the detector's windowed Δ accumulator to the
+//! `.bin` (params ‖ velocity ‖ delta — three equal-sized blocks) and a
+//! `state` object to the header: controller state
+//! ([`crate::coordinator::ControllerState`]), the simulated clock, the
+//! per-layer Data-Sent ledgers, and the batch-ramp/window phase.  f64
+//! clock values ride through JSON text exactly (the substrate prints
+//! round-trippable numbers), so `--resume` is bit-identical to the
+//! uninterrupted run (`tests/resume.rs`).  v1 checkpoints still load as
+//! params-only seeds.
 
+use crate::coordinator::ControllerState;
 use crate::models::ModelMeta;
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 use anyhow::{bail, Context, Result};
 use std::io::Write;
+
+/// Everything beyond the tensors that a bit-for-bit resume needs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TrainState {
+    /// completed epochs (the next `begin_epoch` starts here)
+    pub epoch: usize,
+    /// controller state (None for stateless controllers)
+    pub controller: Option<ControllerState>,
+    // simulated clock (cluster::simtime::SimClock fields)
+    pub sim_secs: f64,
+    pub compute_secs: f64,
+    pub comm_secs: f64,
+    pub saved_secs: f64,
+    pub wall_secs: f64,
+    /// cumulative per-layer Data-Sent ledgers (layer order)
+    pub layer_floats: Vec<u64>,
+    /// cumulative membership-ledger floats (rejoin broadcasts)
+    pub member_floats: u64,
+    // batch-ramp phase (trainer fields of the same names)
+    pub ramp_from: usize,
+    pub ramp_at: usize,
+    pub last_mult: usize,
+    /// epoch the current detection window started at
+    pub window_start: usize,
+}
+
+impl TrainState {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            (
+                "controller",
+                self.controller.as_ref().map(|c| c.to_json()).unwrap_or(Json::Null),
+            ),
+            ("sim_secs", json::num(self.sim_secs)),
+            ("compute_secs", json::num(self.compute_secs)),
+            ("comm_secs", json::num(self.comm_secs)),
+            ("saved_secs", json::num(self.saved_secs)),
+            ("wall_secs", json::num(self.wall_secs)),
+            (
+                "layer_floats",
+                Json::Arr(self.layer_floats.iter().map(|&f| json::num(f as f64)).collect()),
+            ),
+            ("member_floats", json::num(self.member_floats as f64)),
+            ("ramp_from", json::num(self.ramp_from as f64)),
+            ("ramp_at", json::num(self.ramp_at as f64)),
+            ("last_mult", json::num(self.last_mult as f64)),
+            ("window_start", json::num(self.window_start as f64)),
+        ])
+    }
+
+    fn from_json(epoch: usize, j: &Json) -> Option<TrainState> {
+        let usize_of = |k: &str| j.get(k).and_then(|v| v.as_f64()).map(|f| f as usize);
+        let f64_of = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        let controller = match j.get("controller") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(ControllerState::from_json(c)?),
+        };
+        let layer_floats = match j.get("layer_floats")? {
+            Json::Arr(items) => items
+                .iter()
+                .map(|v| v.as_f64().map(|f| f as u64))
+                .collect::<Option<Vec<u64>>>()?,
+            _ => return None,
+        };
+        Some(TrainState {
+            epoch,
+            controller,
+            sim_secs: f64_of("sim_secs")?,
+            compute_secs: f64_of("compute_secs")?,
+            comm_secs: f64_of("comm_secs")?,
+            saved_secs: f64_of("saved_secs")?,
+            wall_secs: f64_of("wall_secs")?,
+            layer_floats,
+            member_floats: f64_of("member_floats")? as u64,
+            ramp_from: usize_of("ramp_from")?,
+            ramp_at: usize_of("ramp_at")?,
+            last_mult: usize_of("last_mult")?,
+            window_start: usize_of("window_start")?,
+        })
+    }
+}
 
 pub fn save(path: &str, meta: &ModelMeta, epoch: usize, params: &[Tensor]) -> Result<()> {
     if let Some(dir) = std::path::Path::new(path).parent() {
@@ -48,12 +142,16 @@ pub fn load(path: &str, meta: &ModelMeta) -> Result<Vec<Tensor>> {
     if model != meta.name {
         bail!("checkpoint is for model '{model}', not '{}'", meta.name);
     }
+    // v2 full-state checkpoints append velocity + delta blocks after the
+    // params; a params-only load just reads the leading block
+    let version = header.get("version").and_then(|v| v.as_usize()).unwrap_or(1);
+    let expect = if version >= 2 { meta.total_params * 4 * 3 } else { meta.total_params * 4 };
     let bytes = std::fs::read(format!("{path}.bin"))?;
-    if bytes.len() != meta.total_params * 4 {
+    if bytes.len() != expect {
         bail!(
             "checkpoint holds {} bytes, model needs {}",
             bytes.len(),
-            meta.total_params * 4
+            expect
         );
     }
     let mut out = Vec::with_capacity(meta.params.len());
@@ -69,6 +167,130 @@ pub fn load(path: &str, meta: &ModelMeta) -> Result<Vec<Tensor>> {
         out.push(Tensor::new(data, spec.shape.clone()));
     }
     Ok(out)
+}
+
+/// Write a v2 full-state checkpoint: params ‖ velocity ‖ delta in the
+/// `.bin` (three equal `total_params`-float blocks) plus the header's
+/// `state` object.  Everything a bit-for-bit `--resume` needs.
+pub fn save_full(
+    path: &str,
+    meta: &ModelMeta,
+    state: &TrainState,
+    params: &[Tensor],
+    velocity: &[Vec<f32>],
+    delta: &[Tensor],
+) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let total: usize = params.iter().map(|p| p.numel()).sum();
+    if total != meta.total_params {
+        bail!("checkpoint param count {total} != model {}", meta.total_params);
+    }
+    let vel_total: usize = velocity.iter().map(|v| v.len()).sum();
+    let delta_total: usize = delta.iter().map(|d| d.numel()).sum();
+    if vel_total != total || delta_total != total {
+        bail!(
+            "checkpoint state blocks must match params: velocity {vel_total}, \
+             delta {delta_total}, params {total}"
+        );
+    }
+    let header = json::obj(vec![
+        ("model", json::s(&meta.name)),
+        ("epoch", json::num(state.epoch as f64)),
+        ("total_params", json::num(total as f64)),
+        ("version", json::num(2.0)),
+        ("state", state.to_json()),
+    ]);
+    std::fs::write(format!("{path}.json"), header.to_string())?;
+    let mut f = std::fs::File::create(format!("{path}.bin"))?;
+    for p in params {
+        for v in &p.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    for vl in velocity {
+        for v in vl {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    for d in delta {
+        for v in &d.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a v2 full-state checkpoint; rejects v1 headers (those are
+/// params-only — use [`load`]).
+pub fn load_full(
+    path: &str,
+    meta: &ModelMeta,
+) -> Result<(Vec<Tensor>, Vec<Vec<f32>>, Vec<Tensor>, TrainState)> {
+    let header = Json::parse(
+        &std::fs::read_to_string(format!("{path}.json"))
+            .with_context(|| format!("reading {path}.json"))?,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let model = header.get("model").and_then(|v| v.as_str()).unwrap_or("");
+    if model != meta.name {
+        bail!("checkpoint is for model '{model}', not '{}'", meta.name);
+    }
+    let version = header.get("version").and_then(|v| v.as_usize()).unwrap_or(1);
+    if version < 2 {
+        bail!(
+            "'{path}' is a v{version} params-only checkpoint; --resume needs a v2 full-state one"
+        );
+    }
+    let epoch = header.get("epoch").and_then(|v| v.as_usize()).unwrap_or(0);
+    let state = header
+        .get("state")
+        .and_then(|j| TrainState::from_json(epoch, j))
+        .ok_or_else(|| anyhow::anyhow!("malformed 'state' object in {path}.json"))?;
+    if state.layer_floats.len() != meta.params.len() {
+        bail!(
+            "checkpoint has {} layer ledgers, model has {} layers",
+            state.layer_floats.len(),
+            meta.params.len()
+        );
+    }
+    let bytes = std::fs::read(format!("{path}.bin"))?;
+    if bytes.len() != meta.total_params * 4 * 3 {
+        bail!(
+            "v2 checkpoint holds {} bytes, model needs {} (params+velocity+delta)",
+            bytes.len(),
+            meta.total_params * 4 * 3
+        );
+    }
+    let read_block = |block: usize| -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(meta.params.len());
+        let mut off = block * meta.total_params;
+        for spec in &meta.params {
+            let n = spec.numel();
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(data);
+        }
+        out
+    };
+    let to_tensors = |block: Vec<Vec<f32>>| -> Vec<Tensor> {
+        block
+            .into_iter()
+            .zip(&meta.params)
+            .map(|(data, spec)| Tensor::new(data, spec.shape.clone()))
+            .collect()
+    };
+    let params = to_tensors(read_block(0));
+    let velocity = read_block(1);
+    let delta = to_tensors(read_block(2));
+    Ok((params, velocity, delta, state))
 }
 
 #[cfg(test)]
@@ -124,6 +346,61 @@ mod tests {
         let mut other = meta();
         other.name = "different".into();
         assert!(load(&path, &other).is_err());
+    }
+
+    #[test]
+    fn full_state_roundtrips_bit_for_bit() {
+        use crate::compress::Level;
+        use crate::coordinator::ControllerState;
+        let m = meta();
+        let params = vec![
+            Tensor::new(vec![1.0, 2.5e-8, -3.75, 4.0], vec![2, 2]),
+            Tensor::new(vec![-1.0, 0.5], vec![2]),
+        ];
+        let velocity = vec![vec![0.125, -7.5, 0.0, 1e-30], vec![2.0, -0.25]];
+        let delta = vec![
+            Tensor::new(vec![0.1, 0.2, 0.3, 0.4], vec![2, 2]),
+            Tensor::new(vec![-0.5, 0.0], vec![2]),
+        ];
+        let state = TrainState {
+            epoch: 5,
+            controller: Some(ControllerState {
+                levels: vec![Level::Low, Level::High],
+                batch_mult: 2,
+                prev_norms: vec![Some(1.5), None],
+                prev_model_norm: Some(0.0625),
+                batch_floor: 1,
+                phase: 3,
+            }),
+            sim_secs: 12.3456789012345,
+            compute_secs: 7.000000001,
+            comm_secs: 5.25,
+            saved_secs: 0.1,
+            wall_secs: 99.5,
+            layer_floats: vec![1000, 2000],
+            member_floats: 6,
+            ramp_from: 1,
+            ramp_at: 2,
+            last_mult: 2,
+            window_start: 4,
+        };
+        let dir = std::env::temp_dir().join("accordion-ckpt-v2");
+        let path = dir.join("ck").to_str().unwrap().to_string();
+        save_full(&path, &m, &state, &params, &velocity, &delta).unwrap();
+        let (p2, v2, d2, s2) = load_full(&path, &m).unwrap();
+        assert_eq!(p2, params);
+        assert_eq!(v2, velocity);
+        assert_eq!(d2, delta);
+        assert_eq!(s2, state);
+        // the f64 clock survives the JSON text exactly
+        assert_eq!(s2.sim_secs.to_bits(), state.sim_secs.to_bits());
+        // a v2 checkpoint still loads as a params-only seed
+        let seed = load(&path, &m).unwrap();
+        assert_eq!(seed, params);
+        // but a v1 checkpoint cannot masquerade as full state
+        let path1 = dir.join("ck1").to_str().unwrap().to_string();
+        save(&path1, &m, 5, &params).unwrap();
+        assert!(load_full(&path1, &m).is_err());
     }
 
     #[test]

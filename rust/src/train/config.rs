@@ -1,6 +1,8 @@
 //! Experiment configuration: a typed view over the TOML-subset tables
 //! (`configs/*.toml` + `--set` overrides) with paper-faithful defaults.
 
+use crate::cluster::faults::FaultCfg;
+use crate::cluster::topology::{LinkSpec, Topology};
 use crate::collectives::{DenseReplicated, ShardedOwnership, Transport};
 use crate::compress::{DistCompressor, Level, NoCompression};
 use crate::compress::{
@@ -51,6 +53,69 @@ impl TransportCfg {
             TransportCfg::Dense => "dense",
             TransportCfg::Sharded => "sharded",
         }
+    }
+}
+
+/// Per-link cluster topology (TOML `[net.links]`, CLI `--topology`):
+/// consecutive ranks group into nodes of `node_size` workers joined by
+/// fast intra-node links; everything else crosses the slow inter-node
+/// fabric.  Ring collectives are priced at the bottleneck link the ring
+/// traverses, so when intra == cross this degenerates bit-exactly to
+/// the single shared `NetworkModel`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TopologyCfg {
+    pub node_size: usize,
+    pub intra_mbps: f64,
+    pub intra_us: f64,
+    pub cross_mbps: f64,
+    pub cross_us: f64,
+}
+
+impl TopologyCfg {
+    /// CLI spelling: `node_size:intra_mbps:intra_us:cross_mbps:cross_us`
+    /// (e.g. `--topology 2:1000:5:100:50` — two-worker nodes on a fast
+    /// local link over a 100 Mbps / 50 µs fabric).
+    pub fn parse(s: &str) -> Result<TopologyCfg> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 5 {
+            bail!(
+                "--topology wants node_size:intra_mbps:intra_us:cross_mbps:cross_us, got '{s}'"
+            );
+        }
+        fn field<T: std::str::FromStr>(name: &str, raw: &str) -> Result<T> {
+            raw.parse().map_err(|_| anyhow::anyhow!("bad {name} '{raw}'"))
+        }
+        let cfg = TopologyCfg {
+            node_size: field("node_size", parts[0])?,
+            intra_mbps: field("intra_mbps", parts[1])?,
+            intra_us: field("intra_us", parts[2])?,
+            cross_mbps: field("cross_mbps", parts[3])?,
+            cross_us: field("cross_us", parts[4])?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.node_size == 0 {
+            bail!("net.links.node_size must be >= 1");
+        }
+        if self.intra_mbps <= 0.0 || self.cross_mbps <= 0.0 {
+            bail!("net.links bandwidths must be positive");
+        }
+        if self.intra_us < 0.0 || self.cross_us < 0.0 {
+            bail!("net.links latencies must be non-negative");
+        }
+        Ok(())
+    }
+
+    pub fn build(&self, workers: usize) -> Topology {
+        Topology::new(
+            workers,
+            self.node_size,
+            LinkSpec { bandwidth_mbps: self.intra_mbps, latency_us: self.intra_us },
+            LinkSpec { bandwidth_mbps: self.cross_mbps, latency_us: self.cross_us },
+        )
     }
 }
 
@@ -131,6 +196,12 @@ pub struct TrainConfig {
     /// keeps the per-layer charge bit-identical to the pre-bucketing
     /// clock.  Never changes parameters, losses, or the floats ledger.
     pub bucket_kb: usize,
+    /// per-link cluster model (`[net.links]` / `--topology`); None keeps
+    /// the single shared link, bit-identical to the pre-topology clock
+    pub topology: Option<TopologyCfg>,
+    /// seeded fault schedule (`[faults]`); None is fault-free and
+    /// bit-identical to the pre-faults trainer
+    pub faults: Option<FaultCfg>,
     // simulated compute clock (cluster::simtime)
     pub time_model: TimeModelCfg,
     /// modeled device throughput for the flops cost model, GFLOP/s
@@ -170,6 +241,8 @@ impl Default for TrainConfig {
             latency_us: 50.0,
             overlap: true,
             bucket_kb: 0,
+            topology: None,
+            faults: None,
             time_model: TimeModelCfg::Flops,
             gflops: crate::cluster::simtime::DEFAULT_GFLOPS,
         }
@@ -243,6 +316,33 @@ impl TrainConfig {
             },
             other => bail!("unknown controller '{other}'"),
         };
+        // presence-detected sub-tables: any `net.links.*` / `faults.*`
+        // key switches the feature on, with per-key defaults below
+        let topology = if t.map.keys().any(|k| k.starts_with("net.links.")) {
+            Some(TopologyCfg {
+                node_size: t.usize_or("net.links.node_size", 2),
+                // links default to the shared-model numbers, so setting
+                // only (say) cross_mbps keeps the rest familiar
+                intra_mbps: t.f64_or("net.links.intra_mbps", d.bandwidth_mbps),
+                intra_us: t.f64_or("net.links.intra_us", d.latency_us),
+                cross_mbps: t.f64_or("net.links.cross_mbps", d.bandwidth_mbps),
+                cross_us: t.f64_or("net.links.cross_us", d.latency_us),
+            })
+        } else {
+            None
+        };
+        let faults = if t.map.keys().any(|k| k.starts_with("faults.")) {
+            Some(FaultCfg {
+                seed: t.usize_or("faults.seed", 1) as u64,
+                slow_prob: t.f64_or("faults.slow_prob", 0.0),
+                slow_min: t.f64_or("faults.slow_min", 1.5),
+                slow_max: t.f64_or("faults.slow_max", 3.0),
+                drop_prob: t.f64_or("faults.drop_prob", 0.0),
+                down_epochs: t.usize_or("faults.down_epochs", 1),
+            })
+        } else {
+            None
+        };
         let cfg = TrainConfig {
             label: t.str_or("label", &d.label),
             model: t.str_or("model", &d.model),
@@ -273,6 +373,8 @@ impl TrainConfig {
             latency_us: t.f64_or("net.latency_us", d.latency_us),
             overlap: t.bool_or("net.overlap", d.overlap),
             bucket_kb: t.usize_or("net.bucket_kb", d.bucket_kb),
+            topology,
+            faults,
             time_model: match t.str_or("time.model", "flops").as_str() {
                 "flops" => TimeModelCfg::Flops,
                 "measured" => TimeModelCfg::Measured,
@@ -295,6 +397,12 @@ impl TrainConfig {
                  reduce-scatter ownership shards each layer across workers",
                 self.workers
             );
+        }
+        if let Some(tp) = &self.topology {
+            tp.validate()?;
+        }
+        if let Some(f) = &self.faults {
+            f.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
         }
         Ok(())
     }
@@ -492,6 +600,62 @@ gflops = 2.5
         assert!(c1.validate().is_err());
         c1.workers = 4;
         assert!(c1.validate().is_ok());
+    }
+
+    #[test]
+    fn topology_and_faults_parse_with_off_defaults() {
+        let d = TrainConfig::default();
+        assert!(d.topology.is_none());
+        assert!(d.faults.is_none());
+
+        let t = Table::parse(
+            r#"
+[net.links]
+node_size = 2
+intra_mbps = 1000.0
+intra_us = 5.0
+cross_mbps = 100.0
+[faults]
+seed = 7
+slow_prob = 0.2
+drop_prob = 0.05
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        let tp = c.topology.unwrap();
+        assert_eq!(tp.node_size, 2);
+        assert_eq!(tp.intra_mbps, 1000.0);
+        assert_eq!(tp.intra_us, 5.0);
+        assert_eq!(tp.cross_mbps, 100.0);
+        // unset link keys fall back to the shared-model defaults
+        assert_eq!(tp.cross_us, d.latency_us);
+        let f = c.faults.unwrap();
+        assert_eq!(f.seed, 7);
+        assert_eq!(f.slow_prob, 0.2);
+        assert_eq!(f.drop_prob, 0.05);
+        assert_eq!(f.down_epochs, 1);
+
+        // invalid fault knobs are a config error, not a silent clamp
+        let bad = Table::parse("faults.drop_prob = 1.5").unwrap();
+        assert!(TrainConfig::from_table(&bad).is_err());
+        let bad2 = Table::parse("net.links.node_size = 0").unwrap();
+        assert!(TrainConfig::from_table(&bad2).is_err());
+    }
+
+    #[test]
+    fn topology_cli_spelling_parses() {
+        let tp = TopologyCfg::parse("2:1000:5:100:50").unwrap();
+        assert_eq!(tp.node_size, 2);
+        assert_eq!(tp.intra_mbps, 1000.0);
+        assert_eq!(tp.intra_us, 5.0);
+        assert_eq!(tp.cross_mbps, 100.0);
+        assert_eq!(tp.cross_us, 50.0);
+        let topo = tp.build(4);
+        assert_eq!(topo.node_of(1), 0);
+        assert_eq!(topo.node_of(2), 1);
+        assert!(TopologyCfg::parse("2:1000:5").is_err());
+        assert!(TopologyCfg::parse("0:1000:5:100:50").is_err());
     }
 
     #[test]

@@ -78,8 +78,10 @@ pub mod checkpoint;
 pub mod config;
 
 use crate::cluster::bucket::Bucketizer;
+use crate::cluster::faults::FaultSchedule;
 use crate::cluster::network::NetworkModel;
 use crate::cluster::simtime::{self, CostModel, SimClock};
+use crate::cluster::topology::Topology;
 use crate::collectives::{Comm, Transport};
 use crate::compress::{DistCompressor, Level};
 use crate::coordinator::{Controller, Decision, EpochObs};
@@ -131,8 +133,25 @@ pub fn run(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<RunLog> {
 /// Like [`run`] but also returns the final parameters (for
 /// checkpointing).
 pub fn run_full(cfg: &TrainConfig, reg: &Registry, rt: &Runtime) -> Result<(RunLog, Vec<Tensor>)> {
+    run_resumed(cfg, reg, rt, None)
+}
+
+/// [`run_full`] continuing from a full-state checkpoint
+/// (`--resume PATH`): restores parameters, optimizer momentum,
+/// controller state, and the simulated clock, then trains the remaining
+/// epochs — bit-identical to the uninterrupted run
+/// (`tests/resume.rs`).
+pub fn run_resumed(
+    cfg: &TrainConfig,
+    reg: &Registry,
+    rt: &Runtime,
+    resume: Option<&str>,
+) -> Result<(RunLog, Vec<Tensor>)> {
     let mut trainer = Trainer::new(cfg, reg, rt)?;
-    for _ in 0..cfg.epochs {
+    if let Some(path) = resume {
+        trainer.restore(path)?;
+    }
+    while trainer.epoch() < cfg.epochs {
         trainer.run_epoch()?;
     }
     Ok(trainer.finish())
@@ -203,6 +222,20 @@ pub struct Trainer<'a> {
     opt: Sgd,
     sched: LrSchedule,
     net: Arc<NetworkModel>,
+    /// per-link cluster model (`[net.links]` / `--topology`); None
+    /// keeps `net` fixed at the single shared link
+    topology: Option<Topology>,
+    /// seeded fault schedule; None is the fault-free cluster
+    faults: Option<FaultSchedule>,
+    /// worker ids active this epoch, ascending (== 0..workers whenever
+    /// the cluster is whole — the fan-out then matches the fault-free
+    /// trainer slot for slot, which is what keeps it bit-identical)
+    active: Vec<usize>,
+    /// worst straggler multiplier among active workers this epoch
+    slow_max: f64,
+    /// membership-event ledger (rejoin broadcasts): charged serially at
+    /// epoch boundaries, never enters the bucket planner
+    member_comm: Comm,
     transport: Box<dyn Transport>,
     comms: Vec<Comm>,
     clock: SimClock,
@@ -234,6 +267,10 @@ pub struct Trainer<'a> {
     ramp_from: usize,
     ramp_at: usize,
     last_mult: usize,
+    /// epoch the current detection window started at — advanced by
+    /// `Decision::reset_window` (the LR-decay re-phase) so the windowed
+    /// Δ accumulator stays in step with the controller's detector
+    window_start: usize,
     sampler: Option<EpochSampler>,
     decision: Decision,
     batch_mult: usize,
@@ -272,13 +309,23 @@ impl<'a> Trainer<'a> {
             decay_epochs: cfg.decay_epochs.clone(),
             decay_factor: cfg.decay_factor,
         };
-        // ONE network model shared by every per-layer ledger shard
-        let net = Arc::new(NetworkModel::new(cfg.workers, cfg.bandwidth_mbps, cfg.latency_us));
+        // ONE network model shared by every per-layer ledger shard; with
+        // a topology it prices the ring at the bottleneck link of the
+        // active set (bit-identical to the shared model when the links
+        // are all equal), and is rebuilt on every membership change
+        let topology = cfg.topology.map(|tc| tc.build(cfg.workers));
+        let faults = cfg.faults.map(|fc| FaultSchedule::new(cfg.workers, fc));
+        let active: Vec<usize> = (0..cfg.workers).collect();
+        let net = Arc::new(match &topology {
+            Some(tp) => tp.network_for(&active),
+            None => NetworkModel::new(cfg.workers, cfg.bandwidth_mbps, cfg.latency_us),
+        });
         // the aggregation transport: collective shapes, ledger charges, and
         // post-aggregation shard ownership (stateless, shared across layers)
         let transport = cfg.build_transport();
         // per-layer communication ledger shards, folded in layer order
         let comms: Vec<Comm> = (0..n_layers).map(|_| Comm::shared(net.clone())).collect();
+        let member_comm = Comm::shared(net.clone());
         // the simulated compute clock: flops-derived (deterministic across
         // processes) or measured once per model per process at threads=1
         let cost = match cfg.time_model {
@@ -358,6 +405,11 @@ impl<'a> Trainer<'a> {
             opt,
             sched,
             net,
+            topology,
+            faults,
+            active,
+            slow_max: 1.0,
+            member_comm,
             transport,
             comms,
             clock: SimClock::default(),
@@ -385,6 +437,7 @@ impl<'a> Trainer<'a> {
             ramp_from: 1,
             ramp_at: 0,
             last_mult: 1,
+            window_start: 0,
             sampler: None,
             decision,
             batch_mult: 1,
@@ -406,6 +459,7 @@ impl<'a> Trainer<'a> {
     /// the number of global steps to run via [`Trainer::step`].
     pub fn begin_epoch(&mut self) -> Result<usize> {
         let epoch = self.epoch;
+        self.advance_faults(epoch);
         let lr_curr = self.sched.lr(epoch);
         let lr_next = self.sched.lr(epoch + 1);
         let decision = self.controller.begin_epoch(epoch, lr_curr, lr_next);
@@ -433,17 +487,82 @@ impl<'a> Trainer<'a> {
         self.train_loss_n = 0;
         // the per-epoch Δ resets every epoch; the windowed Δ resets at
         // detection-window starts only (Alg. 1 compares whole-window
-        // accumulated-gradient norms)
+        // accumulated-gradient norms).  An LR decay re-phases the
+        // controller's detection windows (`Decision::reset_window`), and
+        // the accumulator must restart with them — otherwise the first
+        // post-decay comparison mixes pre- and post-decay gradients.
+        if decision.reset_window {
+            self.window_start = epoch;
+        }
         self.edelta.iter_mut().for_each(|d| d.fill(0.0));
-        if epoch % self.window == 0 {
+        if (epoch - self.window_start) % self.window == 0 {
             self.delta.iter_mut().for_each(|d| d.fill(0.0));
         }
-        self.cell_loss.resize(self.cfg.workers * batch_mult, 0.0);
-        self.cell_time.resize(self.cfg.workers * batch_mult, 0.0);
+        self.cell_loss.resize(self.active.len() * batch_mult, 0.0);
+        self.cell_time.resize(self.active.len() * batch_mult, 0.0);
         self.sampler = Some(sampler);
         self.decision = decision;
         self.batch_mult = batch_mult;
         Ok(self.global_steps)
+    }
+
+    /// Advance the fault schedule to `epoch` and apply any membership
+    /// change.  No-op when faults are disabled — the fault-free trainer
+    /// is bit-identical to the pre-faults one.
+    fn advance_faults(&mut self, epoch: usize) {
+        let Some(fs) = self.faults.as_mut() else { return };
+        let delta = fs.begin_epoch(epoch);
+        // BSP: every step of this epoch stalls on the slowest active
+        // worker, so the clock only needs the max multiplier
+        self.slow_max = fs.max_active_slowdown();
+        if !delta.changed() {
+            return;
+        }
+        self.active.clear();
+        self.active.extend_from_slice(fs.active());
+        self.sync_membership(!delta.rejoined.is_empty());
+    }
+
+    /// Rebuild the collective pricing, shard ownership, and compressor
+    /// state for the current `self.active` set; `charge_rejoin` also
+    /// prices the full-parameter broadcast a rejoining worker needs.
+    /// (Epoch-boundary work: allowed to allocate — the zero-allocation
+    /// contract covers [`Trainer::step`] only.)
+    fn sync_membership(&mut self, charge_rejoin: bool) {
+        let n_active = self.active.len();
+        // re-price the collectives for the surviving ring: N shrinks (or
+        // grows back), and under a topology the bottleneck link of the
+        // active set may change too
+        let net = match &self.topology {
+            Some(tp) => tp.network_for(&self.active),
+            None => NetworkModel::new(n_active, self.cfg.bandwidth_mbps, self.cfg.latency_us),
+        };
+        self.net = Arc::new(net);
+        for c in self.comms.iter_mut() {
+            c.net = self.net.clone();
+        }
+        self.member_comm.net = self.net.clone();
+        // survivors absorb the departed ring chunks: all ownership
+        // arithmetic derives from the active count
+        self.transport.set_active_workers(n_active);
+        // membership changes scramble the positional per-worker slots,
+        // so error-feedback state is dropped — as a real elastic run
+        // loses the departed workers' residuals
+        for comp in self.compressors.iter_mut() {
+            comp.reset();
+        }
+        if charge_rejoin {
+            // the rejoining worker pulls current parameters via a
+            // pipelined ring broadcast over the new active set, charged
+            // serially at the epoch boundary (it cannot overlap compute
+            // that has not started)
+            let before = self.member_comm.ledger.secs;
+            let floats: usize = self.params.iter().map(|p| p.numel()).sum();
+            self.member_comm.charge_broadcast(floats);
+            let secs = self.member_comm.ledger.secs - before;
+            self.clock.sim_secs += secs;
+            self.clock.comm_secs += secs;
+        }
     }
 
     /// One global step: gradient fan-out, per-layer aggregation through
@@ -457,6 +576,8 @@ impl<'a> Trainer<'a> {
         let batch_size = self.meta.batch;
         let n_layers = self.n_layers;
         let overlap = self.cfg.overlap;
+        let slow = self.slow_max;
+        let n_active = self.active.len();
         let Trainer {
             cfg,
             rt,
@@ -467,6 +588,7 @@ impl<'a> Trainer<'a> {
             compressors,
             opt,
             net,
+            active,
             transport,
             comms,
             clock,
@@ -498,11 +620,15 @@ impl<'a> Trainer<'a> {
         let ds: &Dataset = ds;
         let transport: &dyn Transport = &**transport;
         let decision: &Decision = decision;
+        let active: &[usize] = active;
         let sampler: &EpochSampler = sampler.as_ref().expect("begin_epoch before step");
 
         // 1. gradient computation (with accumulation for large batch),
-        //    workers fanned out across the persistent pool
-        if threads <= 1 || workers <= 1 {
+        //    ACTIVE workers fanned out across the persistent pool — slot
+        //    i computes worker active[i]'s shard, so with the cluster
+        //    whole the fan-out matches the fault-free trainer exactly.
+        //    Down workers neither compute nor contribute data this epoch.
+        if threads <= 1 || n_active <= 1 {
             grad_task(
                 progs,
                 rt,
@@ -514,19 +640,20 @@ impl<'a> Trainer<'a> {
                 workers,
                 batch_size,
                 0,
-                worker_grads,
-                wscratch,
+                active,
+                &mut worker_grads[..n_active],
+                &mut wscratch[..n_active],
                 cell_loss,
                 cell_time,
             )?;
         } else {
             let params_ref: &[Tensor] = params;
-            let wg_ptr = SendPtr::new(worker_grads.as_mut_slice());
-            let sc_ptr = SendPtr::new(wscratch.as_mut_slice());
+            let wg_ptr = SendPtr::new(&mut worker_grads[..n_active]);
+            let sc_ptr = SendPtr::new(&mut wscratch[..n_active]);
             let loss_ptr = SendPtr::new(cell_loss.as_mut_slice());
             let time_ptr = SendPtr::new(cell_time.as_mut_slice());
             let err_ptr = SendPtr::new(task_errs.as_mut_slice());
-            pool.run_chunked(workers, &|tid, w0, n| {
+            pool.run_chunked(n_active, &|tid, w0, n| {
                 // SAFETY: run_chunked hands out disjoint in-bounds
                 // worker ranges (cells scale by the per-worker stride);
                 // the buffers outlive the dispatch (it joins before
@@ -542,7 +669,7 @@ impl<'a> Trainer<'a> {
                 };
                 if let Err(e) = grad_task(
                     progs, rt, params_ref, ds, sampler, s, batch_mult, workers, batch_size, w0,
-                    wg, sc, losses, times,
+                    active, wg, sc, losses, times,
                 ) {
                     err[0] = Some(e);
                 }
@@ -567,7 +694,7 @@ impl<'a> Trainer<'a> {
         let mut step_wall = 0.0f64;
         for a in 0..batch_mult {
             let mut worker_max = 0.0f64;
-            for w in 0..workers {
+            for w in 0..n_active {
                 *train_loss_sum += cell_loss[w * batch_mult + a] as f64;
                 *train_loss_n += 1;
                 worker_max = worker_max.max(cell_time[w * batch_mult + a]);
@@ -577,7 +704,7 @@ impl<'a> Trainer<'a> {
         clock.wall_secs += step_wall;
         if batch_mult > 1 {
             let inv = 1.0 / batch_mult as f32;
-            for wg in worker_grads.iter_mut() {
+            for wg in worker_grads.iter_mut().take(n_active) {
                 for g in wg.iter_mut() {
                     g.scale(inv);
                 }
@@ -605,7 +732,7 @@ impl<'a> Trainer<'a> {
                 meta,
                 decision,
                 transport,
-                worker_grads,
+                &worker_grads[..n_active],
                 0,
                 compressors,
                 comms,
@@ -614,7 +741,7 @@ impl<'a> Trainer<'a> {
                 layer_ws,
             );
         } else {
-            let wg_ref: &[Vec<Tensor>] = worker_grads;
+            let wg_ref: &[Vec<Tensor>] = &worker_grads[..n_active];
             let comp_ptr = SendPtr::new(compressors.as_mut_slice());
             let comm_ptr = SendPtr::new(comms.as_mut_slice());
             let agg_ptr = SendPtr::new(agg.as_mut_slice());
@@ -646,10 +773,11 @@ impl<'a> Trainer<'a> {
             // bucket granularity (one α per bucket)
             Some(bz) => {
                 let (charges, rebuild) = bz.plan(comms, net.as_ref());
-                simtime::step_times_bucketed(cost, batch_mult, charges, rebuild)
+                simtime::step_times_bucketed_slowed(cost, batch_mult, charges, rebuild, slow)
             }
             // legacy per-layer charge: bit-identical to the
-            // pre-bucketing trainer (same ledger-delta arithmetic)
+            // pre-bucketing trainer (same ledger-delta arithmetic;
+            // slow = 1.0 delegates to the exact old path)
             None => {
                 let mut step_rebuild = 0.0f64;
                 for (l, c) in comms.iter().enumerate() {
@@ -657,7 +785,7 @@ impl<'a> Trainer<'a> {
                     step_comm[l] = (c.ledger.secs - comm_before[l]) - rebuild;
                     step_rebuild += rebuild;
                 }
-                simtime::step_times(cost, batch_mult, step_comm, step_rebuild)
+                simtime::step_times_slowed(cost, batch_mult, step_comm, step_rebuild, slow)
             }
         };
         clock.compute_secs += t.compute;
@@ -759,9 +887,11 @@ impl<'a> Trainer<'a> {
                 .map(|(l, _)| self.decision.levels[l] == Level::Low)
                 .collect(),
         );
-        // fold per-layer ledger shards in layer order: deterministic and
-        // thread-count independent
-        let floats: u64 = self.comms.iter().map(|c| c.ledger.floats).sum();
+        // fold per-layer ledger shards in layer order (deterministic and
+        // thread-count independent), plus the membership ledger's rejoin
+        // broadcasts — resync traffic is Data Sent too
+        let floats: u64 = self.comms.iter().map(|c| c.ledger.floats).sum::<u64>()
+            + self.member_comm.ledger.floats;
         self.log.epochs.push(EpochStats {
             epoch,
             lr: self.lr_eff,
@@ -807,14 +937,87 @@ impl<'a> Trainer<'a> {
     pub fn finish(self) -> (RunLog, Vec<Tensor>) {
         (self.log, self.params)
     }
+
+    /// Write a v2 full-state checkpoint of the current epoch boundary:
+    /// params, optimizer momentum, windowed Δ accumulator, controller
+    /// state, clock, and ledgers (`checkpoint::save_full`).
+    pub fn save(&self, path: &str) -> Result<()> {
+        let state = checkpoint::TrainState {
+            epoch: self.epoch,
+            controller: self.controller.checkpoint_state(),
+            sim_secs: self.clock.sim_secs,
+            compute_secs: self.clock.compute_secs,
+            comm_secs: self.clock.comm_secs,
+            saved_secs: self.clock.saved_secs,
+            wall_secs: self.clock.wall_secs,
+            layer_floats: self.comms.iter().map(|c| c.ledger.floats).collect(),
+            member_floats: self.member_comm.ledger.floats,
+            ramp_from: self.ramp_from,
+            ramp_at: self.ramp_at,
+            last_mult: self.last_mult,
+            window_start: self.window_start,
+        };
+        checkpoint::save_full(
+            path,
+            &self.meta,
+            &state,
+            &self.params,
+            self.opt.velocity(),
+            &self.delta,
+        )
+    }
+
+    /// Restore a v2 full-state checkpoint written by [`Trainer::save`]:
+    /// the next [`Trainer::begin_epoch`] continues exactly where the
+    /// saved run stopped, bit-for-bit (`tests/resume.rs`).  Call before
+    /// the first epoch, on a trainer built from the SAME config.
+    pub fn restore(&mut self, path: &str) -> Result<()> {
+        let (params, velocity, delta, st) = checkpoint::load_full(path, &self.meta)?;
+        self.params = params;
+        self.opt.set_velocity(velocity);
+        self.delta = delta;
+        if let Some(cs) = &st.controller {
+            self.controller.restore_state(cs);
+        }
+        self.clock.sim_secs = st.sim_secs;
+        self.clock.compute_secs = st.compute_secs;
+        self.clock.comm_secs = st.comm_secs;
+        self.clock.saved_secs = st.saved_secs;
+        self.clock.wall_secs = st.wall_secs;
+        for (c, &f) in self.comms.iter_mut().zip(&st.layer_floats) {
+            c.ledger.floats = f;
+        }
+        self.member_comm.ledger.floats = st.member_floats;
+        self.epoch = st.epoch;
+        self.ramp_from = st.ramp_from;
+        self.ramp_at = st.ramp_at;
+        self.last_mult = st.last_mult;
+        self.window_start = st.window_start;
+        // replay the fault schedule up to the resume epoch: the stream
+        // position is a pure function of (seed, epoch), so the schedule
+        // and membership state land exactly where the saved run left
+        // them.  Charges are NOT re-applied — the restored ledgers and
+        // clock already contain them.
+        if self.faults.is_some() {
+            for e in 0..st.epoch {
+                let fs = self.faults.as_mut().expect("checked above");
+                fs.begin_epoch(e);
+            }
+            let fs = self.faults.as_ref().expect("checked above");
+            self.active = fs.active().to_vec();
+            self.sync_membership(false);
+        }
+        Ok(())
+    }
 }
 
-/// Phase-1 work item: compute and accumulate gradients for the worker
-/// range starting at `w0`.  `grads`/`scratch`/`losses`/`times` are this
-/// range's disjoint slots (`losses`/`times` laid out `[worker][micro]`).
-/// Data gathering, the backend's forward/backward buffers, and the
-/// micro-step gradients all live in the per-worker scratch — zero
-/// allocation once capacities converge.
+/// Phase-1 work item: compute and accumulate gradients for the active
+/// slot range starting at `w0` (slot i stands for worker `active[i]` —
+/// the identity map when the cluster is whole).  `grads`/`scratch`/
+/// `losses`/`times` are this range's disjoint slots (`losses`/`times`
+/// laid out `[slot][micro]`).  Data gathering, the backend's
+/// forward/backward buffers, and the micro-step gradients all live in
+/// the per-worker scratch — zero allocation once capacities converge.
 #[allow(clippy::too_many_arguments)]
 fn grad_task(
     progs: &ModelPrograms,
@@ -827,13 +1030,16 @@ fn grad_task(
     workers: usize,
     batch_size: usize,
     w0: usize,
+    active: &[usize],
     grads: &mut [Vec<Tensor>],
     scratch: &mut [WorkerScratch],
     losses: &mut [f32],
     times: &mut [f64],
 ) -> Result<()> {
     for (wi, (wg, sc)) in grads.iter_mut().zip(scratch.iter_mut()).enumerate() {
-        let w = w0 + wi;
+        // the worker id drives the data shard: a down worker's shard is
+        // simply not consumed this epoch (dropped, not redistributed)
+        let w = active[w0 + wi];
         for g in wg.iter_mut() {
             g.fill(0.0);
         }

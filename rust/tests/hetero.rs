@@ -1,0 +1,361 @@
+//! Heterogeneous-cluster suite: the per-link topology model and the
+//! seeded fault schedule threaded through the trainer.
+//!
+//! Pins the four contracts ISSUE'd with the subsystem:
+//!
+//!  * a faulty, topology-priced run is **thread- and transport-
+//!    invariant**: same seed at `--threads` 1 vs 4, dense and sharded,
+//!    replays byte-for-byte (bit-exact sim clock, exact ledger, exact
+//!    level trace);
+//!  * with **all links equal** the topology clock degenerates
+//!    bit-identically to the single shared `[net]` model (same
+//!    constructor arithmetic, not merely close);
+//!  * a **guaranteed straggler** schedule (every worker at exactly 1.5x
+//!    every epoch) is strictly slower in sim-seconds while moving the
+//!    same bytes and producing bit-identical parameters — slowdowns
+//!    stretch compute, never math;
+//!  * every **rejoin** charges one full-model broadcast to the floats
+//!    ledger — cross-checked exactly against a replica of the fault
+//!    schedule (the schedule is a pure function of `(seed, workers)`).
+//!
+//! Sim backend only: no artifacts, no PJRT.
+
+use accordion::cluster::faults::{FaultCfg, FaultSchedule};
+use accordion::compress::Level;
+use accordion::metrics::RunLog;
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::tensor::Tensor;
+use accordion::train::{
+    self,
+    config::{ControllerCfg, MethodCfg, TopologyCfg, TrainConfig, TransportCfg},
+};
+
+/// The 2x2 matrix under test: two 2-worker nodes, fast inside, slow
+/// across — any ring over all 4 ranks is priced at the cross link.
+fn two_node() -> TopologyCfg {
+    TopologyCfg {
+        node_size: 2,
+        intra_mbps: 1000.0,
+        intra_us: 5.0,
+        cross_mbps: 100.0,
+        cross_us: 50.0,
+    }
+}
+
+/// Stormy weather: stragglers and churn both on, so the run exercises
+/// slowdown forwarding, ring shrinking, AND rejoin broadcasts.
+fn stormy() -> FaultCfg {
+    FaultCfg {
+        seed: 11,
+        slow_prob: 0.3,
+        slow_min: 1.5,
+        slow_max: 3.0,
+        drop_prob: 0.3,
+        down_epochs: 1,
+    }
+}
+
+fn tiny(
+    label: &str,
+    method: MethodCfg,
+    transport: TransportCfg,
+    threads: usize,
+    topology: Option<TopologyCfg>,
+    faults: Option<FaultCfg>,
+) -> TrainConfig {
+    TrainConfig {
+        label: label.into(),
+        model: "mlp_deep_c10".into(), // 3 matrix + 3 vector layers
+        workers: 4,
+        threads,
+        epochs: 6,
+        train_size: 256,
+        test_size: 64,
+        data_sep: 0.6,
+        warmup_epochs: 1,
+        decay_epochs: vec![4],
+        method,
+        controller: ControllerCfg::Accordion { eta: 0.5, interval: 2 },
+        transport,
+        topology,
+        faults,
+        ..TrainConfig::default()
+    }
+}
+
+/// Byte-for-byte replay: every deterministic column equal, the clock
+/// and ledger bit-exact.  (Stricter than the parallel-parity suite's
+/// 1e-6 slack: the fault machinery must not perturb reduction order.)
+fn assert_identical(a: &(RunLog, Vec<Tensor>), b: &(RunLog, Vec<Tensor>), ctx: &str) {
+    let (alog, aparams) = a;
+    let (blog, bparams) = b;
+    assert_eq!(aparams.len(), bparams.len(), "{ctx}: param count");
+    for (l, (x, y)) in aparams.iter().zip(bparams).enumerate() {
+        assert_eq!(x.shape, y.shape, "{ctx}: layer {l} shape");
+        assert!(
+            x.data
+                .iter()
+                .zip(&y.data)
+                .all(|(p, q)| p.to_bits() == q.to_bits()),
+            "{ctx}: layer {l} parameters diverged"
+        );
+    }
+    assert_eq!(alog.level_trace, blog.level_trace, "{ctx}: level trace");
+    assert_eq!(alog.epochs.len(), blog.epochs.len(), "{ctx}: epoch count");
+    for (e, (x, y)) in alog.epochs.iter().zip(&blog.epochs).enumerate() {
+        let ectx = format!("{ctx} epoch {e}");
+        assert_eq!(x.floats, y.floats, "{ectx}: floats ledger");
+        assert_eq!(x.batch_mult, y.batch_mult, "{ectx}: batch_mult");
+        assert_eq!(
+            x.secs.to_bits(),
+            y.secs.to_bits(),
+            "{ectx}: sim secs diverged: {} vs {}",
+            x.secs,
+            y.secs
+        );
+        assert_eq!(
+            x.overlap_saved_secs.to_bits(),
+            y.overlap_saved_secs.to_bits(),
+            "{ectx}: overlap_saved_secs diverged"
+        );
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{ectx}: train_loss");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{ectx}: test_loss");
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{ectx}: test_acc");
+        assert_eq!(x.grad_norm.to_bits(), y.grad_norm.to_bits(), "{ectx}: grad_norm");
+    }
+}
+
+#[test]
+fn faulty_hetero_runs_replay_across_threads_and_transports() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let methods: Vec<(&str, MethodCfg)> = vec![
+        ("none", MethodCfg::None),
+        ("powersgd", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+        ("topk", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 }),
+    ];
+    for (mname, method) in &methods {
+        for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+            let ctx = format!("{mname}/{transport:?}");
+            let oracle = train::run_full(
+                &tiny(
+                    &format!("hetero-{ctx}-t1"),
+                    method.clone(),
+                    transport,
+                    1,
+                    Some(two_node()),
+                    Some(stormy()),
+                ),
+                &reg,
+                &rt,
+            )
+            .unwrap();
+            let par = train::run_full(
+                &tiny(
+                    &format!("hetero-{ctx}-t4"),
+                    method.clone(),
+                    transport,
+                    4,
+                    Some(two_node()),
+                    Some(stormy()),
+                ),
+                &reg,
+                &rt,
+            )
+            .unwrap();
+            assert_identical(&oracle, &par, &format!("{ctx} x4"));
+            // rerun the oracle: the fault stream is owned by the
+            // trainer, so back-to-back runs must also be byte-identical
+            let again = train::run_full(
+                &tiny(
+                    &format!("hetero-{ctx}-t1b"),
+                    method.clone(),
+                    transport,
+                    1,
+                    Some(two_node()),
+                    Some(stormy()),
+                ),
+                &reg,
+                &rt,
+            )
+            .unwrap();
+            assert_identical(&oracle, &again, &format!("{ctx} rerun"));
+        }
+    }
+}
+
+#[test]
+fn all_links_equal_topology_is_bit_identical_to_shared_model() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    // every link spelled exactly as the shared-model default (100 Mbps,
+    // 50 us): the bottleneck selection must degenerate to the same
+    // NetworkModel arithmetic, so the clock is bit-identical — faults
+    // on too, to cover the shrunk-ring reconstruction path
+    let equal = TopologyCfg {
+        node_size: 2,
+        intra_mbps: 100.0,
+        intra_us: 50.0,
+        cross_mbps: 100.0,
+        cross_us: 50.0,
+    };
+    for faults in [None, Some(stormy())] {
+        let fctx = if faults.is_some() { "faulty" } else { "clean" };
+        let with = train::run_full(
+            &tiny(
+                &format!("links-eq-{fctx}"),
+                MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+                TransportCfg::Dense,
+                1,
+                Some(equal),
+                faults,
+            ),
+            &reg,
+            &rt,
+        )
+        .unwrap();
+        let without = train::run_full(
+            &tiny(
+                &format!("links-none-{fctx}"),
+                MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 },
+                TransportCfg::Dense,
+                1,
+                None,
+                faults,
+            ),
+            &reg,
+            &rt,
+        )
+        .unwrap();
+        assert_identical(&with, &without, &format!("all-links-equal {fctx}"));
+    }
+}
+
+#[test]
+fn slower_cross_fabric_shows_up_in_the_clock() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    // cross link 10x slower than the shared default: every 4-rank ring
+    // crosses nodes, so the bottleneck rule must make the run strictly
+    // slower than the homogeneous model — with identical math and bytes
+    let slow_cross = TopologyCfg {
+        node_size: 2,
+        intra_mbps: 1000.0,
+        intra_us: 5.0,
+        cross_mbps: 10.0,
+        cross_us: 500.0,
+    };
+    let hetero = train::run_full(
+        &tiny("cross-slow", MethodCfg::None, TransportCfg::Dense, 1, Some(slow_cross), None),
+        &reg,
+        &rt,
+    )
+    .unwrap();
+    let homo = train::run_full(
+        &tiny("cross-base", MethodCfg::None, TransportCfg::Dense, 1, None, None),
+        &reg,
+        &rt,
+    )
+    .unwrap();
+    assert!(
+        hetero.0.total_secs() > homo.0.total_secs(),
+        "a 10x slower cross fabric must price the ring higher: {} vs {}",
+        hetero.0.total_secs(),
+        homo.0.total_secs()
+    );
+    assert_eq!(hetero.0.total_floats(), homo.0.total_floats(), "links never change Data Sent");
+    for (x, y) in hetero.1.iter().zip(&homo.1) {
+        assert!(
+            x.data.iter().zip(&y.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "link speeds must never perturb parameters"
+        );
+    }
+}
+
+#[test]
+fn guaranteed_stragglers_are_strictly_slower_with_identical_math() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    // slow_prob 1 with a degenerate [1.5, 1.5] range and no drops:
+    // every epoch's compute term scales by exactly 1.5x — the one fault
+    // schedule whose effect on the clock is certain, independent of the
+    // seed's draws
+    let all_slow = FaultCfg {
+        seed: 3,
+        slow_prob: 1.0,
+        slow_min: 1.5,
+        slow_max: 1.5,
+        drop_prob: 0.0,
+        down_epochs: 1,
+    };
+    let mk = |label: &str, faults| {
+        tiny(label, MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 },
+             TransportCfg::Dense, 1, Some(two_node()), faults)
+    };
+    let base = train::run_full(&mk("straggle-base", None), &reg, &rt).unwrap();
+    let slow = train::run_full(&mk("straggle-slow", Some(all_slow)), &reg, &rt).unwrap();
+    // math and bytes untouched: stragglers only stretch time
+    assert_eq!(base.0.level_trace, slow.0.level_trace, "level trace");
+    for (x, y) in base.1.iter().zip(&slow.1) {
+        assert!(
+            x.data.iter().zip(&y.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "stragglers must never perturb parameters"
+        );
+    }
+    for (e, (x, y)) in base.0.epochs.iter().zip(&slow.0.epochs).enumerate() {
+        assert_eq!(x.floats, y.floats, "epoch {e}: stragglers must not move data");
+        assert!(
+            y.secs > x.secs,
+            "epoch {e}: a 1.5x-everywhere schedule must be strictly slower: {} vs {}",
+            y.secs,
+            x.secs
+        );
+    }
+}
+
+#[test]
+fn every_rejoin_charges_one_full_model_broadcast() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    // The trainer's schedule is a pure function of (seed, workers, cfg):
+    // replay it here to count boundaries with a visible rejoin, then
+    // pin the ledger delta of the real run against that count exactly.
+    let workers = 4;
+    let epochs = 6;
+    let churny = |seed| FaultCfg {
+        seed,
+        slow_prob: 0.0,
+        slow_min: 1.5,
+        slow_max: 1.5,
+        drop_prob: 0.5,
+        down_epochs: 1,
+    };
+    let rejoin_boundaries = |seed| {
+        let mut fs = FaultSchedule::new(workers, churny(seed));
+        (0..epochs).filter(|&e| !fs.begin_epoch(e).rejoined.is_empty()).count() as u64
+    };
+    // scan for a seed whose schedule rejoins at least twice inside the
+    // run — deterministic (the stream is seeded), just not hand-picked
+    let seed = (1..1000)
+        .find(|&s| rejoin_boundaries(s) >= 2)
+        .expect("no churny seed under 1000 produces two rejoins");
+    let n_rejoins = rejoin_boundaries(seed);
+
+    // static controller + no compression: per-step payloads are a
+    // constant, so the ONLY floats difference a fault schedule can make
+    // is the rejoin broadcast — drops shrink the ring, not the payload
+    let mk = |label: &str, faults| TrainConfig {
+        controller: ControllerCfg::Static(Level::Low),
+        ..tiny(label, MethodCfg::None, TransportCfg::Dense, 1, Some(two_node()), faults)
+    };
+    let clean = train::run_full(&mk("rejoin-clean", None), &reg, &rt).unwrap();
+    let churn = train::run_full(&mk("rejoin-churn", Some(churny(seed))), &reg, &rt).unwrap();
+    let total_params = reg.model("mlp_deep_c10").unwrap().total_params as u64;
+    assert_eq!(
+        churn.0.total_floats(),
+        clean.0.total_floats() + n_rejoins * total_params,
+        "each of the {n_rejoins} rejoin boundaries must add exactly one \
+         full-model broadcast ({total_params} floats) to Data Sent"
+    );
+}

@@ -1,0 +1,181 @@
+//! Checkpoint/resume regression suite: a run interrupted by
+//! `Trainer::save` and continued by `Trainer::restore` in a FRESH
+//! trainer must be bit-for-bit the run that was never interrupted —
+//! parameters, optimizer momentum, controller state, the floats
+//! ledger, and the simulated clock all continue mid-stream.
+//!
+//! This is the regression test for the v2 full-state checkpoint: the
+//! v1 format silently dropped optimizer/controller/clock state, so a
+//! "--resume" there restarted momentum at zero and the controller at
+//! its priors — close in accuracy, observably different in every
+//! deterministic column.  Scope: `method = none` (compressor EF/RNG
+//! state is intentionally not checkpointed; elastic restores reset it).
+//!
+//! Sim backend only: no artifacts, no PJRT.
+
+use accordion::cluster::faults::FaultCfg;
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{
+    self,
+    config::{ControllerCfg, MethodCfg, TopologyCfg, TrainConfig},
+    Trainer,
+};
+
+fn cfg(label: &str) -> TrainConfig {
+    TrainConfig {
+        label: label.into(),
+        model: "mlp_deep_c10".into(),
+        workers: 4,
+        threads: 1,
+        epochs: 6,
+        train_size: 256,
+        test_size: 64,
+        data_sep: 0.6,
+        warmup_epochs: 1,
+        // one decay before the split point, one after: the restored
+        // run must re-derive the post-decay LR and window phase
+        decay_epochs: vec![2, 4],
+        method: MethodCfg::None,
+        controller: ControllerCfg::Accordion { eta: 0.5, interval: 2 },
+        ..TrainConfig::default()
+    }
+}
+
+fn ckpt_path(tag: &str) -> String {
+    let dir = std::env::temp_dir();
+    format!("{}/accordion-resume-{tag}-{}", dir.display(), std::process::id())
+}
+
+/// Run `cfg` to completion, saving at `split` into a fresh trainer.
+fn run_interrupted(
+    cfg: &TrainConfig,
+    reg: &Registry,
+    rt: &Runtime,
+    split: usize,
+    tag: &str,
+) -> (accordion::metrics::RunLog, Vec<accordion::tensor::Tensor>) {
+    let path = ckpt_path(tag);
+    let mut first = Trainer::new(cfg, reg, rt).unwrap();
+    for _ in 0..split {
+        first.run_epoch().unwrap();
+    }
+    first.save(&path).unwrap();
+    drop(first); // the resumed trainer must stand entirely on the checkpoint
+    let mut second = Trainer::new(cfg, reg, rt).unwrap();
+    second.restore(&path).unwrap();
+    assert_eq!(second.epoch(), split, "restore must land at the save epoch");
+    while second.epoch() < cfg.epochs {
+        second.run_epoch().unwrap();
+    }
+    let _ = std::fs::remove_file(format!("{path}.json"));
+    let _ = std::fs::remove_file(format!("{path}.bin"));
+    second.finish()
+}
+
+fn assert_resumed_tail_matches(
+    full: &(accordion::metrics::RunLog, Vec<accordion::tensor::Tensor>),
+    resumed: &(accordion::metrics::RunLog, Vec<accordion::tensor::Tensor>),
+    split: usize,
+    ctx: &str,
+) {
+    let (flog, fparams) = full;
+    let (rlog, rparams) = resumed;
+    // final parameters: bit-for-bit, not merely close
+    assert_eq!(fparams.len(), rparams.len(), "{ctx}: param count");
+    for (l, (a, b)) in fparams.iter().zip(rparams).enumerate() {
+        assert!(
+            a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{ctx}: layer {l} parameters diverged after resume"
+        );
+    }
+    // the resumed log holds exactly the post-split epochs, and every
+    // deterministic column — including the CUMULATIVE floats ledger and
+    // sim clock, which the checkpoint carries across the gap — must
+    // equal the uninterrupted run's tail; wall_secs is debug-only
+    assert_eq!(rlog.epochs.len(), flog.epochs.len() - split, "{ctx}: tail length");
+    assert_eq!(
+        rlog.level_trace,
+        flog.level_trace[split..],
+        "{ctx}: post-resume level trace"
+    );
+    for (a, b) in flog.epochs[split..].iter().zip(&rlog.epochs) {
+        let ectx = format!("{ctx} epoch {}", a.epoch);
+        assert_eq!(a.epoch, b.epoch, "{ectx}: epoch index");
+        assert_eq!(a.floats, b.floats, "{ectx}: cumulative floats ledger");
+        assert_eq!(a.batch_mult, b.batch_mult, "{ectx}: batch_mult");
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "{ectx}: lr");
+        assert_eq!(a.secs.to_bits(), b.secs.to_bits(), "{ectx}: cumulative sim secs");
+        assert_eq!(
+            a.overlap_saved_secs.to_bits(),
+            b.overlap_saved_secs.to_bits(),
+            "{ectx}: overlap_saved_secs"
+        );
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{ectx}: train_loss");
+        assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{ectx}: test_loss");
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "{ectx}: test_acc");
+        assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits(), "{ectx}: grad_norm");
+        assert_eq!(
+            a.window_grad_norm.to_bits(),
+            b.window_grad_norm.to_bits(),
+            "{ectx}: window_grad_norm (controller window phase must survive)"
+        );
+        assert_eq!(a.frac_low.to_bits(), b.frac_low.to_bits(), "{ectx}: frac_low");
+    }
+}
+
+#[test]
+fn resume_is_bit_identical_to_the_uninterrupted_run() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let c = cfg("resume-clean");
+    let full = train::run_full(&c, &reg, &rt).unwrap();
+    // split at 3: past the first decay, mid detection window (interval
+    // 2 with window start 0 — epoch 3 is window-interior, the phase a
+    // naive restart would get wrong)
+    let resumed = run_interrupted(&c, &reg, &rt, 3, "clean");
+    assert_resumed_tail_matches(&full, &resumed, 3, "clean");
+}
+
+#[test]
+fn resume_replays_the_fault_schedule_mid_stream() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    // topology + churny faults: the restore path must fast-forward the
+    // fault stream to the save epoch (same active set, same upcoming
+    // draws) WITHOUT re-charging the rejoin broadcasts the ledger
+    // already contains
+    let mut c = cfg("resume-faulty");
+    c.topology = Some(TopologyCfg {
+        node_size: 2,
+        intra_mbps: 1000.0,
+        intra_us: 5.0,
+        cross_mbps: 100.0,
+        cross_us: 50.0,
+    });
+    c.faults = Some(FaultCfg {
+        seed: 11,
+        slow_prob: 0.3,
+        slow_min: 1.5,
+        slow_max: 3.0,
+        drop_prob: 0.4,
+        down_epochs: 1,
+    });
+    let full = train::run_full(&c, &reg, &rt).unwrap();
+    for split in [2usize, 4] {
+        let resumed = run_interrupted(&c, &reg, &rt, split, &format!("faulty{split}"));
+        assert_resumed_tail_matches(&full, &resumed, split, &format!("faulty split {split}"));
+    }
+}
+
+#[test]
+fn save_then_immediate_restore_roundtrips_at_epoch_zero() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    // degenerate split: save before any training — the resumed run IS
+    // the whole run, so the logs must match head-to-tail
+    let c = cfg("resume-zero");
+    let full = train::run_full(&c, &reg, &rt).unwrap();
+    let resumed = run_interrupted(&c, &reg, &rt, 0, "zero");
+    assert_resumed_tail_matches(&full, &resumed, 0, "zero-split");
+}
