@@ -1,7 +1,10 @@
-//! Compressor hot-path benches: one PowerSGD / TopK / RandomK / QSGD
-//! round per layer shape, at the shapes the model zoo actually has (conv
-//! HWIO flattened) plus a large square layer for headroom.  These are the
-//! kernels the §Perf pass optimizes; EXPERIMENTS.md records before/after.
+//! Compressor hot-path benches: one PowerSGD / TopK / RandomK / QSGD /
+//! AdaComp round per layer shape, at the shapes the model zoo actually
+//! has (conv HWIO flattened) plus a large square layer for headroom.
+//! These are the kernels the §Perf pass optimizes; EXPERIMENTS.md
+//! records before/after.  Rounds go through the single-surface
+//! [`DistCompressor::round`] with a persistent [`Workspace`], exactly as
+//! the transports drive it.
 //!
 //! Run: `cargo bench --bench compression [-- <filter>]`
 
@@ -10,7 +13,8 @@ include!("harness.rs");
 use accordion::cluster::network::NetworkModel;
 use accordion::collectives::Comm;
 use accordion::compress::{
-    powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, topk::TopK, DistCompressor, Level,
+    adacomp::AdaComp, powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, topk::TopK,
+    DistCompressor, Level, RoundCtx, Sharding,
 };
 use accordion::util::rng::Rng;
 use accordion::util::workspace::Workspace;
@@ -75,7 +79,17 @@ fn main() {
                 &format!("powersgd/{ln}/{label}"),
                 (numel * workers) as u64,
                 || {
-                    ps.round_into(0, &views, shape, lvl, &mut comm, &mut out, &mut ws);
+                    ps.round(&mut RoundCtx {
+                        layer: 0,
+                        grads: &views,
+                        shape,
+                        level: lvl,
+                        sharding: Sharding::Dense,
+                        comm: &mut comm,
+                        out: &mut out,
+                        ws: &mut ws,
+                        genuine_shard: false,
+                    });
                     comm.events.clear(); // unbounded outside Trainer::step
                 },
             );
@@ -88,7 +102,17 @@ fn main() {
                 &format!("topk/{ln}/{label}"),
                 (numel * workers) as u64,
                 || {
-                    tk.round_into(0, &views, shape, lvl, &mut comm, &mut out, &mut ws);
+                    tk.round(&mut RoundCtx {
+                        layer: 0,
+                        grads: &views,
+                        shape,
+                        level: lvl,
+                        sharding: Sharding::Dense,
+                        comm: &mut comm,
+                        out: &mut out,
+                        ws: &mut ws,
+                        genuine_shard: false,
+                    });
                     comm.events.clear();
                 },
             );
@@ -100,7 +124,17 @@ fn main() {
             &format!("randomk/k10/{label}"),
             (numel * workers) as u64,
             || {
-                rk.round_into(0, &views, shape, Level::High, &mut comm, &mut out, &mut ws);
+                rk.round(&mut RoundCtx {
+                    layer: 0,
+                    grads: &views,
+                    shape,
+                    level: Level::High,
+                    sharding: Sharding::Dense,
+                    comm: &mut comm,
+                    out: &mut out,
+                    ws: &mut ws,
+                    genuine_shard: false,
+                });
                 comm.events.clear();
             },
         );
@@ -111,7 +145,38 @@ fn main() {
             &format!("qsgd/8b/{label}"),
             (numel * workers) as u64,
             || {
-                qs.round_into(0, &views, shape, Level::Low, &mut comm, &mut out, &mut ws);
+                qs.round(&mut RoundCtx {
+                    layer: 0,
+                    grads: &views,
+                    shape,
+                    level: Level::Low,
+                    sharding: Sharding::Dense,
+                    comm: &mut comm,
+                    out: &mut out,
+                    ws: &mut ws,
+                    genuine_shard: false,
+                });
+                comm.events.clear();
+            },
+        );
+
+        let mut ac = AdaComp::new(workers, 64, 512);
+        let mut comm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
+        ctl.bench(
+            &format!("adacomp/T512/{label}"),
+            (numel * workers) as u64,
+            || {
+                ac.round(&mut RoundCtx {
+                    layer: 0,
+                    grads: &views,
+                    shape,
+                    level: Level::High,
+                    sharding: Sharding::Dense,
+                    comm: &mut comm,
+                    out: &mut out,
+                    ws: &mut ws,
+                    genuine_shard: false,
+                });
                 comm.events.clear();
             },
         );
@@ -137,15 +202,17 @@ fn main() {
                         let views: Vec<&[f32]> =
                             (0..workers).map(|w| grads[w][l].as_slice()).collect();
                         if p.compressible() {
-                            ps.round_into(
-                                l,
-                                &views,
-                                &p.shape,
-                                Level::Low,
-                                &mut comm,
-                                &mut outs[l],
-                                &mut ws,
-                            );
+                            ps.round(&mut RoundCtx {
+                                layer: l,
+                                grads: &views,
+                                shape: &p.shape,
+                                level: Level::Low,
+                                sharding: Sharding::Dense,
+                                comm: &mut comm,
+                                out: &mut outs[l],
+                                ws: &mut ws,
+                                genuine_shard: false,
+                            });
                         } else {
                             comm.allreduce_mean_into(&views, &mut outs[l]);
                         }

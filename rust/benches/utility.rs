@@ -1,0 +1,126 @@
+//! Utility-accounting bench: bandwidth x compressor x {free, charged}
+//! codec, reporting *simulated* end-to-end seconds (fully deterministic
+//! — diffs of `BENCH_utility.json` across PRs are pure signal).
+//!
+//! Pins the tentpole contract end-to-end through the real trainer:
+//! charging encode/decode compute (`time.charge_codec`) can only ever
+//! SLOW a run down, it is bit-exactly free for `none` (zero codec
+//! flops), strictly positive for every real compressor, and it never
+//! moves a byte on the wire (the floats ledger is identical in both
+//! columns).  The emitted break-even curve is the paper-style reading:
+//! how much advertised speedup survives paying for the codec.
+//!
+//! Run: `cargo bench --bench utility [-- --quick-ci]`
+//! (`--quick-ci` shrinks the run; CI uploads the JSON per PR.)
+
+use accordion::compress::Level;
+use accordion::exp::utility::{method_suite, BANDWIDTHS_MBPS};
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig}};
+use accordion::util::json;
+
+const WORKERS: usize = 4;
+
+fn cfg(label: &str, method: MethodCfg, mbps: f64, charged: bool, quick: bool) -> TrainConfig {
+    TrainConfig {
+        label: label.to_string(),
+        model: "mlp_deep_c10".into(),
+        workers: WORKERS,
+        epochs: if quick { 2 } else { 4 },
+        train_size: if quick { 256 } else { 1024 },
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: if quick { vec![1] } else { vec![3] },
+        method,
+        controller: ControllerCfg::Static(Level::High),
+        bandwidth_mbps: mbps,
+        charge_codec: charged,
+        ..TrainConfig::default()
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick-ci");
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+
+    let bandwidths: Vec<f64> = if quick {
+        vec![10.0, 1000.0]
+    } else {
+        BANDWIDTHS_MBPS.to_vec()
+    };
+
+    let mut rows: Vec<json::Json> = Vec::new();
+    println!(
+        "{:<10} {:>9} {:>11} {:>11} {:>9} {:>9} {:>9}",
+        "method", "mbps", "free_s", "charged_s", "codec%", "spd_free", "spd_chg"
+    );
+    for &mbps in &bandwidths {
+        let mut none_secs = [f64::NAN; 2]; // [free, charged]
+        for (name, method) in method_suite() {
+            let mut secs = [0.0f64; 2];
+            let mut floats = [0u64; 2];
+            for (i, charged) in [false, true].into_iter().enumerate() {
+                let tag = if charged { "charged" } else { "free" };
+                let label = format!("bench-utility-{mbps:.0}mbps-{name}-{tag}");
+                let c = cfg(&label, method.clone(), mbps, charged, quick);
+                let log = train::run(&c, &reg, &rt).unwrap();
+                secs[i] = log.total_secs();
+                floats[i] = log.total_floats();
+            }
+            // contract: charging codec compute never speeds a run up...
+            assert!(
+                secs[1] >= secs[0],
+                "{name}@{mbps}: charged {} undercuts free {}",
+                secs[1],
+                secs[0]
+            );
+            // ...is exactly free only for the zero-flop codec...
+            if name == "none" {
+                assert_eq!(
+                    secs[1].to_bits(),
+                    secs[0].to_bits(),
+                    "none must be bit-exactly unaffected by time.charge_codec"
+                );
+                none_secs = secs;
+            } else {
+                assert!(
+                    secs[1] > secs[0],
+                    "{name}@{mbps}: a real codec must cost strictly positive sim-time"
+                );
+            }
+            // ...and never moves a byte on the wire
+            assert_eq!(floats[1], floats[0], "{name}@{mbps}: codec charging moved data");
+
+            let overhead = 100.0 * (secs[1] - secs[0]) / secs[0].max(1e-12);
+            let spd_free = none_secs[0] / secs[0].max(1e-12);
+            let spd_chg = none_secs[1] / secs[1].max(1e-12);
+            println!(
+                "{:<10} {:>9.0} {:>10.3}s {:>10.3}s {:>8.2}% {:>8.2}x {:>8.2}x",
+                name, mbps, secs[0], secs[1], overhead, spd_free, spd_chg
+            );
+            rows.push(json::obj(vec![
+                ("method", json::s(name)),
+                ("bandwidth_mbps", json::num(mbps)),
+                ("free_secs", json::num(secs[0])),
+                ("charged_secs", json::num(secs[1])),
+                ("codec_overhead_pct", json::num(overhead)),
+                ("floats", json::num(floats[0] as f64)),
+                ("speedup_free", json::num(spd_free)),
+                ("speedup_charged", json::num(spd_chg)),
+            ]));
+        }
+    }
+
+    let report = json::obj(vec![
+        ("bench", json::s("utility-accounting")),
+        ("model", json::s("mlp_deep_c10")),
+        ("workers", json::num(WORKERS as f64)),
+        ("quick_ci", json::num(if quick { 1.0 } else { 0.0 })),
+        ("deterministic", json::num(1.0)),
+        ("break_even_curve", json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_utility.json", report.to_string()).expect("writing BENCH_utility.json");
+    println!("BENCH_utility.json written (simulated, deterministic — diffs are signal)");
+}

@@ -63,6 +63,15 @@ pub struct CostModel {
     pub bwd_secs: Vec<f64>,
     /// optimizer update — the BSP serialization point (secs)
     pub opt_secs: f64,
+    /// seconds charged per compressor codec flop
+    /// ([`CodecFlops`](crate::compress::CodecFlops)) when codec charging
+    /// is enabled (`time.charge_codec`).  Derived from the SAME modeled
+    /// throughput as fwd/bwd/opt, so `time.model = "measured"`
+    /// calibration (cached once per process in
+    /// [`Registry::cached_cost`](crate::models::Registry::cached_cost))
+    /// covers the codec rate too.  The trainer only consults this when
+    /// charging is on; the pre-codec clock never reads it.
+    pub codec_secs_per_flop: f64,
 }
 
 impl CostModel {
@@ -78,6 +87,7 @@ impl CostModel {
             fwd_secs: fwd as f64 * rate,
             bwd_secs,
             opt_secs: opt as f64 * rate,
+            codec_secs_per_flop: rate,
         }
     }
 
@@ -147,6 +157,41 @@ pub struct StepTimes {
     pub overlapped: f64,
     /// old-style serialized charge: compute + comm
     pub serialized: f64,
+    /// compressor codec seconds charged this step (encode + decode,
+    /// straggler-scaled) — already included in `compute`, `overlapped`
+    /// and `serialized`; kept separately so the utility experiment can
+    /// report the charge without re-deriving it.  Exactly 0.0 under
+    /// [`CodecCharge::NONE`].
+    pub codec: f64,
+}
+
+/// Compressor codec compute charges for one global step, fed to the
+/// coded schedulers when `time.charge_codec` is on.
+///
+/// `encode_secs[l]` is layer `l`'s encode time (manifest order): encode
+/// runs on the compute stream right after the layer's backward produces
+/// its gradient, so it SERIALIZES before that layer's collective can
+/// issue — an expensive encoder delays the wire, which is the honest
+/// accounting the utility experiment measures.  An empty slice means
+/// free encode (every `get(l)` misses, leaving the f64 op sequence of
+/// the pre-codec schedulers untouched).
+///
+/// `decode_secs` is the step's total decode time: decompression applies
+/// to the *aggregated* payload after the channel drains, so it
+/// serializes between the last collective and the optimizer — one scalar
+/// for the whole step, not per-layer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CodecCharge<'a> {
+    /// per-layer encode seconds, manifest order (empty = free encode)
+    pub encode_secs: &'a [f64],
+    /// whole-step decode seconds, serialized before the optimizer
+    pub decode_secs: f64,
+}
+
+impl CodecCharge<'_> {
+    /// The free-codec charge: schedules bit-identically to the
+    /// pre-codec entry points (which delegate through it).
+    pub const NONE: CodecCharge<'static> = CodecCharge { encode_secs: &[], decode_secs: 0.0 };
 }
 
 /// The overlap event scheduler for one global step.
@@ -196,6 +241,28 @@ pub fn step_times_slowed(
     rebuild_secs: f64,
     slow: f64,
 ) -> StepTimes {
+    step_times_coded_slowed(cost, batch_mult, comm_secs, rebuild_secs, slow, CodecCharge::NONE)
+}
+
+/// [`step_times_slowed`] with compressor codec charges on the compute
+/// stream: each layer's encode seconds are added to its gradient
+/// ready-time (encode serializes before that layer's collective can
+/// issue), and the step's decode seconds are added after the channel
+/// drains, before the optimizer.  Codec terms are *compute*, so they
+/// scale with the straggler multiplier like fwd/bwd/opt do.
+///
+/// With [`CodecCharge::NONE`] the f64 operation sequence is EXACTLY the
+/// pre-codec schedule — every existing pin stays bit-identical — and
+/// charged time is monotone: it never undercuts the free-codec schedule,
+/// with equality only at zero codec flops.
+pub fn step_times_coded_slowed(
+    cost: &CostModel,
+    batch_mult: usize,
+    comm_secs: &[f64],
+    rebuild_secs: f64,
+    slow: f64,
+    codec: CodecCharge<'_>,
+) -> StepTimes {
     debug_assert_eq!(comm_secs.len(), cost.bwd_secs.len());
     debug_assert!(slow >= 1.0);
     let mult = batch_mult.max(1) as f64;
@@ -203,8 +270,14 @@ pub fn step_times_slowed(
     let mut ready = base;
     let mut net_free = 0.0f64;
     let mut comm_sum = 0.0f64;
+    let mut codec_sum = 0.0f64;
     for l in (0..cost.bwd_secs.len()).rev() {
         ready += cost.bwd_secs[l] * slow;
+        if let Some(&enc) = codec.encode_secs.get(l) {
+            let e = enc * slow;
+            ready += e;
+            codec_sum += e;
+        }
         let start = if ready > net_free { ready } else { net_free };
         net_free = start + comm_secs[l];
         comm_sum += comm_secs[l];
@@ -213,14 +286,23 @@ pub fn step_times_slowed(
     // zero-comm case EXACTLY equal to the serialized charge (same f64
     // operations in the same order)
     let compute_end = ready;
-    let drained = if net_free > compute_end { net_free } else { compute_end };
+    let mut drained = if net_free > compute_end { net_free } else { compute_end };
     let opt = cost.opt_secs * slow;
-    let compute = compute_end + opt;
+    let mut compute = compute_end + opt;
+    if codec.decode_secs != 0.0 {
+        // decompression of the aggregate serializes between the drained
+        // channel and the optimizer step
+        let dec = codec.decode_secs * slow;
+        drained += dec;
+        compute += dec;
+        codec_sum += dec;
+    }
     StepTimes {
         compute,
         comm: comm_sum + rebuild_secs,
         overlapped: drained + opt + rebuild_secs,
         serialized: compute + comm_sum + rebuild_secs,
+        codec: codec_sum,
     }
 }
 
@@ -262,15 +344,46 @@ pub fn step_times_bucketed_slowed(
     rebuild_secs: f64,
     slow: f64,
 ) -> StepTimes {
+    step_times_bucketed_coded_slowed(
+        cost,
+        batch_mult,
+        charges,
+        rebuild_secs,
+        slow,
+        CodecCharge::NONE,
+    )
+}
+
+/// [`step_times_bucketed_slowed`] with codec charges — the bucketed
+/// mirror of [`step_times_coded_slowed`].  A layer's encode seconds
+/// stretch its gradient ready-time BEFORE any bucket whose `lo_layer`
+/// is that layer can issue (the bucket waits for its lowest member's
+/// encoded payload); decode serializes before the optimizer exactly as
+/// in the per-layer scheduler.  [`CodecCharge::NONE`] is bit-identical
+/// to the pre-codec bucketed schedule.
+pub fn step_times_bucketed_coded_slowed(
+    cost: &CostModel,
+    batch_mult: usize,
+    charges: &[crate::cluster::bucket::BucketCharge],
+    rebuild_secs: f64,
+    slow: f64,
+    codec: CodecCharge<'_>,
+) -> StepTimes {
     debug_assert!(slow >= 1.0);
     let mult = batch_mult.max(1) as f64;
     let base = (mult - 1.0) * (cost.micro_secs() * slow) + cost.fwd_secs * slow;
     let mut ready = base;
     let mut net_free = 0.0f64;
     let mut comm_sum = 0.0f64;
+    let mut codec_sum = 0.0f64;
     let mut ci = 0usize;
     for l in (0..cost.bwd_secs.len()).rev() {
         ready += cost.bwd_secs[l] * slow;
+        if let Some(&enc) = codec.encode_secs.get(l) {
+            let e = enc * slow;
+            ready += e;
+            codec_sum += e;
+        }
         while ci < charges.len() && charges[ci].lo_layer == l {
             let start = if ready > net_free { ready } else { net_free };
             net_free = start + charges[ci].secs;
@@ -287,14 +400,21 @@ pub fn step_times_bucketed_slowed(
         "step_times_bucketed: charges must reference valid layers in non-increasing issue order"
     );
     let compute_end = ready;
-    let drained = if net_free > compute_end { net_free } else { compute_end };
+    let mut drained = if net_free > compute_end { net_free } else { compute_end };
     let opt = cost.opt_secs * slow;
-    let compute = compute_end + opt;
+    let mut compute = compute_end + opt;
+    if codec.decode_secs != 0.0 {
+        let dec = codec.decode_secs * slow;
+        drained += dec;
+        compute += dec;
+        codec_sum += dec;
+    }
     StepTimes {
         compute,
         comm: comm_sum + rebuild_secs,
         overlapped: drained + opt + rebuild_secs,
         serialized: compute + comm_sum + rebuild_secs,
+        codec: codec_sum,
     }
 }
 
@@ -323,7 +443,12 @@ mod tests {
     use crate::models::Registry;
 
     fn cost2() -> CostModel {
-        CostModel { fwd_secs: 1.0, bwd_secs: vec![2.0, 3.0], opt_secs: 0.5 }
+        CostModel {
+            fwd_secs: 1.0,
+            bwd_secs: vec![2.0, 3.0],
+            opt_secs: 0.5,
+            codec_secs_per_flop: 0.0,
+        }
     }
 
     #[test]
@@ -491,6 +616,114 @@ mod tests {
     }
 
     #[test]
+    fn free_codec_is_bit_identical_and_charges_zero() {
+        // the pre-codec entry points delegate through CodecCharge::NONE:
+        // every field matches an explicit NONE call to the bit, and the
+        // codec column is exactly 0.0
+        for comm in [[4.0, 1.0], [100.0, 100.0], [0.0, 0.0]] {
+            for mult in [1usize, 2] {
+                let a = step_times(&cost2(), mult, &comm, 0.5);
+                let b = step_times_coded_slowed(&cost2(), mult, &comm, 0.5, 1.0, CodecCharge::NONE);
+                assert_eq!(a.compute.to_bits(), b.compute.to_bits());
+                assert_eq!(a.comm.to_bits(), b.comm.to_bits());
+                assert_eq!(a.overlapped.to_bits(), b.overlapped.to_bits());
+                assert_eq!(a.serialized.to_bits(), b.serialized.to_bits());
+                assert_eq!(a.codec.to_bits(), 0.0f64.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn encode_serializes_before_the_collective_issues() {
+        // encode 0.5s per layer delays every ready-time: l1 ready at
+        // 4.5 (comm 1s -> 5.5); l0 ready at 7.0, comm 4s -> 11.0;
+        // optimizer lands at 11.5 (free-codec schedule: 10.5)
+        let codec = CodecCharge { encode_secs: &[0.5, 0.5], decode_secs: 0.0 };
+        let t = step_times_coded_slowed(&cost2(), 1, &[4.0, 1.0], 0.0, 1.0, codec);
+        assert!((t.overlapped - 11.5).abs() < 1e-12, "{t:?}");
+        assert!((t.serialized - 12.5).abs() < 1e-12, "{t:?}");
+        assert!((t.compute - 7.5).abs() < 1e-12, "{t:?}");
+        assert!((t.comm - 5.0).abs() < 1e-12, "{t:?}");
+        assert!((t.codec - 1.0).abs() < 1e-12, "{t:?}");
+        // a huge layer-1 encode un-hides its previously-free collective:
+        // l1 ready 9.0 -> comm to 10.0; l0 ready 11.0 -> comm to 15.0
+        let codec = CodecCharge { encode_secs: &[0.0, 5.0], decode_secs: 0.0 };
+        let t = step_times_coded_slowed(&cost2(), 1, &[4.0, 1.0], 0.0, 1.0, codec);
+        assert!((t.overlapped - 15.5).abs() < 1e-12, "{t:?}");
+    }
+
+    #[test]
+    fn decode_serializes_before_the_optimizer() {
+        // decode cannot overlap anything: it shifts BOTH disciplines by
+        // its full 2s, so the overlap saving is decode-independent
+        let free = step_times(&cost2(), 1, &[4.0, 1.0], 0.0);
+        let codec = CodecCharge { encode_secs: &[], decode_secs: 2.0 };
+        let t = step_times_coded_slowed(&cost2(), 1, &[4.0, 1.0], 0.0, 1.0, codec);
+        assert!((t.overlapped - 12.5).abs() < 1e-12, "{t:?}");
+        assert!((t.serialized - 13.5).abs() < 1e-12, "{t:?}");
+        assert!((t.compute - 8.5).abs() < 1e-12, "{t:?}");
+        assert!((t.codec - 2.0).abs() < 1e-12, "{t:?}");
+        let saved = t.serialized - t.overlapped;
+        let saved0 = free.serialized - free.overlapped;
+        assert!((saved - saved0).abs() < 1e-12, "decode must not change the saving");
+    }
+
+    #[test]
+    fn charged_codec_never_undercuts_free() {
+        // monotonicity pin for tests/utility.rs's contract: charging
+        // codec flops never makes the step faster, and equality holds
+        // only at zero codec seconds
+        let encodes: [&[f64]; 4] = [&[], &[0.0, 0.0], &[0.5, 0.5], &[3.0, 0.0]];
+        for comm in [[4.0, 1.0], [100.0, 100.0], [0.0, 0.0]] {
+            for enc in encodes {
+                for dec in [0.0, 1.5] {
+                    let codec = CodecCharge { encode_secs: enc, decode_secs: dec };
+                    let free = step_times(&cost2(), 1, &comm, 0.25);
+                    let t = step_times_coded_slowed(&cost2(), 1, &comm, 0.25, 1.0, codec);
+                    assert!(t.overlapped >= free.overlapped, "{t:?} vs {free:?}");
+                    assert!(t.serialized >= free.serialized, "{t:?} vs {free:?}");
+                    let zero = enc.iter().all(|&e| e == 0.0) && dec == 0.0;
+                    if zero {
+                        assert_eq!(t.overlapped.to_bits(), free.overlapped.to_bits());
+                        assert_eq!(t.serialized.to_bits(), free.serialized.to_bits());
+                    } else {
+                        assert!(t.serialized > free.serialized, "{t:?} vs {free:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_scales_codec_with_compute() {
+        // slow=2 doubles encode/decode alongside fwd/bwd/opt: l1 ready
+        // 2+6+1=9 (comm -> 10), l0 ready 9+4+1=14 (comm -> 18), decode
+        // 2 -> 20, opt 1 -> 21; codec column = (0.5+0.5+1.0)*2 = 4
+        let codec = CodecCharge { encode_secs: &[0.5, 0.5], decode_secs: 1.0 };
+        let t = step_times_coded_slowed(&cost2(), 1, &[4.0, 1.0], 0.0, 2.0, codec);
+        assert!((t.overlapped - 21.0).abs() < 1e-12, "{t:?}");
+        assert!((t.codec - 4.0).abs() < 1e-12, "{t:?}");
+    }
+
+    #[test]
+    fn bucketed_codec_matches_singleton_layer_schedule() {
+        use crate::cluster::bucket::BucketCharge;
+        let comm = [4.0, 1.0];
+        let charges = [
+            BucketCharge { lo_layer: 1, secs: comm[1] },
+            BucketCharge { lo_layer: 0, secs: comm[0] },
+        ];
+        let codec = CodecCharge { encode_secs: &[0.5, 0.25], decode_secs: 1.5 };
+        for slow in [1.0, 2.0] {
+            let a = step_times_coded_slowed(&cost2(), 1, &comm, 0.5, slow, codec);
+            let b = step_times_bucketed_coded_slowed(&cost2(), 1, &charges, 0.5, slow, codec);
+            assert!((a.overlapped - b.overlapped).abs() < 1e-12, "{a:?} vs {b:?}");
+            assert!((a.serialized - b.serialized).abs() < 1e-12);
+            assert_eq!(a.codec.to_bits(), b.codec.to_bits());
+        }
+    }
+
+    #[test]
     fn flops_model_scales_inversely_with_gflops() {
         let reg = Registry::sim();
         let meta = reg.model("mlp_c10").unwrap();
@@ -498,6 +731,8 @@ mod tests {
         let fast = CostModel::from_meta(meta, 5.0);
         assert_eq!(slow.bwd_secs.len(), meta.n_layers());
         assert!(slow.fwd_secs > 0.0 && slow.opt_secs > 0.0);
+        // codec rate rides the same throughput: 0.5 GFLOP/s -> 2 ns/flop
+        assert!((slow.codec_secs_per_flop - 2e-9).abs() < 1e-18);
         let ratio = slow.micro_secs() / fast.micro_secs();
         assert!((ratio - 10.0).abs() < 1e-9, "{ratio}");
         // bit-identical across constructions (what CI's lane rests on)

@@ -19,8 +19,10 @@
 //!
 //! 1. **Which collective(s) run?**  [`Transport::aggregate_layer`]
 //!    executes one layer's aggregation round (through the compressor's
-//!    shard-aware entry point, or raw when the layer is uncompressed)
-//!    and charges every collective to the ledger.
+//!    single [`RoundCtx`]-based entry point with the transport's
+//!    sharding mode, or the raw collective when the layer is
+//!    uncompressed) and charges every collective to the ledger — plus
+//!    the round's codec flops on the compute channel.
 //! 2. **Who owns what afterwards?**  [`Transport::owned_range`] names
 //!    the contiguous shard of the layer each worker holds the
 //!    aggregated gradient for — and therefore which parameter slice
@@ -46,8 +48,10 @@
 //! |----------------------------|----------------------|--------------------------------|
 //! | uncompressed layer         | all-reduce: `V`      | reduce-scatter: `V`, + rebuild |
 //! | dense-payload compressor   | all-gather: payload  | reduce-scatter: payload, + rebuild |
-//! | sparse/structured (fallback) | as dense           | as dense, + rebuild            |
+//! | sparse/structured (fallback) | as dense           | as dense, + rebuild, + `V` decode flops |
 //! | parameter rebuild          | —                    | all-gather: `ceil(V/N)`        |
+//! | compressor encode          | codec channel: `CodecFlops::encode` · rate | same |
+//! | compressor decode          | codec channel: `CodecFlops::decode` · rate | same (+ `V` for the fallback's shard extraction) |
 //! | bucketed (`net.bucket_kb > 0`) | consecutive same-kind payloads coalesce: one α per ≤ bucket_kb·1024-byte bucket, β on ΣV | same, and the per-layer rebuild all-gathers coalesce too |
 //! | worker rejoin (faults)     | broadcast: full model `P` | broadcast: full model `P` |
 //!
@@ -68,6 +72,28 @@
 //! bit for bit, which is what keeps every pre-bucketing parity suite
 //! byte-identical.
 //!
+//! # The `CollEvent` unification and the codec channel
+//!
+//! Every wire charge goes through one entry point,
+//! [`Comm::charge_event`]: it prices the payload for its `CollKind` via
+//! the [`NetworkModel`] formula backend, updates the ledger, and appends
+//! to the event stream — so unbucketed charging is literally bucket-
+//! size-0 planning over the same stream, and a new event kind is one
+//! `CollKind` arm in the pricing backend, not another `charge_*` method.
+//! The named `charge_allreduce`/`charge_allgather`/… helpers are thin
+//! aliases kept for call-site readability.
+//!
+//! Compressor *compute* (utility accounting's encode/decode charge,
+//! [`Comm::charge_codec_flops`]) is deliberately NOT a `CollEvent`: the
+//! bucket planner coalesces wire launches, and codec time is not wire —
+//! it serializes on the compute stream (encode before the layer's
+//! collective can issue, decode before the optimizer; see
+//! `cluster::simtime`).  It accumulates in the ledger's
+//! `encode_secs`/`decode_secs` channel instead, priced at the `Comm`'s
+//! `codec_rate` (secs/flop; 0 = free, the default — every pre-utility
+//! parity suite is bit-exact because the channel never touches `secs`,
+//! `floats`, or the event stream).
+//!
 //! "Dense-payload" compressors (QSGD, signSGD, none) have wire formats
 //! aligned with parameter coordinates, so their compressed shards can be
 //! reduce-scattered directly.  TopK/RandomK/PowerSGD payloads cannot be
@@ -77,7 +103,7 @@
 //! extra cost of sharded ownership for them.
 
 use crate::cluster::network::{CollKind, NetworkModel};
-use crate::compress::{DistCompressor, Level};
+use crate::compress::{CodecFlops, DistCompressor, Level, RoundCtx, Sharding};
 use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
 use crate::util::workspace::Workspace;
 use std::ops::Range;
@@ -91,12 +117,20 @@ use std::sync::Arc;
 /// `rebuild_secs` is the subset of `secs` spent rebuilding full
 /// parameters after sharded optimizer steps (charged after the
 /// optimizer by the overlap scheduler, zero under dense replication).
+/// `encode_secs`/`decode_secs` are the utility-accounting codec channel
+/// — compressor compute, NOT wire time, so they are disjoint from
+/// `secs` and from the event stream (see the module docs): the overlap
+/// scheduler serializes encode before the layer's collective can issue
+/// and decode before the optimizer.  Both stay zero at the default
+/// `codec_rate` of 0 (free encode).
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
     pub floats: u64,
     pub secs: f64,
     pub rebuild_secs: f64,
     pub collectives: u64,
+    pub encode_secs: f64,
+    pub decode_secs: f64,
 }
 
 /// One collective the ledger charged: what the bucket planner coalesces.
@@ -123,6 +157,12 @@ pub struct Comm {
     /// `Comm`s driven OUTSIDE `Trainer::step` (benches, tests) should
     /// clear this themselves or it grows with every charge.
     pub events: Vec<CollEvent>,
+    /// codec-channel price in seconds per flop for
+    /// [`Comm::charge_codec_flops`].  0 (the default) means encode is
+    /// free — the pre-utility clock, bit for bit.  Set by the trainer
+    /// from `CostModel::codec_secs_per_flop` (or the
+    /// `time.codec_gflops` override) when `time.charge_codec` is on.
+    pub codec_rate: f64,
 }
 
 impl Comm {
@@ -133,7 +173,7 @@ impl Comm {
     /// A ledger shard pricing against a shared network model (the
     /// trainer's per-layer construction).
     pub fn shared(net: Arc<NetworkModel>) -> Comm {
-        Comm { net, ledger: Ledger::default(), events: Vec::new() }
+        Comm { net, ledger: Ledger::default(), events: Vec::new(), codec_rate: 0.0 }
     }
 
     /// All-reduce (mean) of one equal-length buffer per worker.
@@ -176,32 +216,43 @@ impl Comm {
         self.charge_reduce_scatter(out.len());
     }
 
+    /// THE charging entry point (see "The `CollEvent` unification" in
+    /// the module docs): price `floats` per-worker payload for `kind`
+    /// via the [`NetworkModel`] formula backend, update the ledger
+    /// (floats, secs, `rebuild_secs` when `rebuild`, collective count),
+    /// and append the event the bucket planner will re-price.  Returns
+    /// the α–β seconds charged.  Every named `charge_*` helper routes
+    /// here, so unbucketed charging is bucket-size-0 planning over the
+    /// same stream.
+    pub fn charge_event(&mut self, kind: CollKind, floats: usize, rebuild: bool) -> f64 {
+        let bytes = floats * 4;
+        let secs = self.net.collective_secs(kind, bytes);
+        self.ledger.floats += floats as u64;
+        self.ledger.secs += secs;
+        if rebuild {
+            self.ledger.rebuild_secs += secs;
+        }
+        self.ledger.collectives += 1;
+        self.events.push(CollEvent { kind, bytes, rebuild });
+        secs
+    }
+
     /// Charge an all-reduce without moving data (used when the payload is
     /// assembled elsewhere, e.g. the packed small-tensor bucket).
     pub fn charge_allreduce(&mut self, floats: usize) {
-        self.ledger.floats += floats as u64;
-        self.ledger.secs += self.net.allreduce_secs(floats * 4);
-        self.ledger.collectives += 1;
-        self.events.push(CollEvent { kind: CollKind::Allreduce, bytes: floats * 4, rebuild: false });
+        self.charge_event(CollKind::Allreduce, floats, false);
     }
 
     /// Charge an all-gather where each worker contributes `floats`
     /// payload (TopK: values + indices).
     pub fn charge_allgather(&mut self, floats: usize) {
-        self.ledger.floats += floats as u64;
-        self.ledger.secs += self.net.allgather_secs(floats * 4);
-        self.ledger.collectives += 1;
-        self.events.push(CollEvent { kind: CollKind::Allgather, bytes: floats * 4, rebuild: false });
+        self.charge_event(CollKind::Allgather, floats, false);
     }
 
     /// Charge a reduce-scatter where each worker contributes a `floats`
     /// input payload and keeps 1/N of the reduced result.
     pub fn charge_reduce_scatter(&mut self, floats: usize) {
-        self.ledger.floats += floats as u64;
-        self.ledger.secs += self.net.reduce_scatter_secs(floats * 4);
-        self.ledger.collectives += 1;
-        self.events
-            .push(CollEvent { kind: CollKind::ReduceScatter, bytes: floats * 4, rebuild: false });
+        self.charge_event(CollKind::ReduceScatter, floats, false);
     }
 
     /// Charge the sharded transport's parameter-rebuild all-gather
@@ -211,12 +262,7 @@ impl Comm {
     /// the overlap scheduler must charge it serially instead of hiding
     /// it under this step's backprop.
     pub fn charge_rebuild_allgather(&mut self, floats: usize) {
-        let secs = self.net.allgather_secs(floats * 4);
-        self.ledger.floats += floats as u64;
-        self.ledger.secs += secs;
-        self.ledger.rebuild_secs += secs;
-        self.ledger.collectives += 1;
-        self.events.push(CollEvent { kind: CollKind::Allgather, bytes: floats * 4, rebuild: true });
+        self.charge_event(CollKind::Allgather, floats, true);
     }
 
     /// Charge a pipelined-ring broadcast of `floats` payload — the
@@ -225,14 +271,22 @@ impl Comm {
     /// `Comm` (see the module-docs charging table), so it never enters
     /// the bucket planner or the per-step overlap scheduler.
     pub fn charge_broadcast(&mut self, floats: usize) {
-        self.ledger.floats += floats as u64;
-        self.ledger.secs += self.net.broadcast_secs(floats * 4);
-        self.ledger.collectives += 1;
-        self.events.push(CollEvent {
-            kind: CollKind::Broadcast,
-            bytes: floats * 4,
-            rebuild: false,
-        });
+        self.charge_event(CollKind::Broadcast, floats, false);
+    }
+
+    /// Charge one round's compressor compute on the codec channel (see
+    /// the module docs): `encode_secs`/`decode_secs` accumulate
+    /// `flops · codec_rate`.  Never touches `secs`, `floats`, the
+    /// collective count, or the event stream — codec time is compute,
+    /// not wire, and the overlap scheduler charges it on the compute
+    /// stream.  A no-op at the default rate of 0, which is what keeps
+    /// every free-encode code path bit-identical to the pre-utility
+    /// clock.
+    pub fn charge_codec_flops(&mut self, flops: CodecFlops) {
+        if self.codec_rate > 0.0 {
+            self.ledger.encode_secs += flops.encode as f64 * self.codec_rate;
+            self.ledger.decode_secs += flops.decode as f64 * self.codec_rate;
+        }
     }
 }
 
@@ -377,14 +431,16 @@ pub trait Transport: Send + Sync {
     /// `0..numel` exactly once.
     fn owned_range(&self, numel: usize, w: usize) -> Range<usize>;
 
-    /// Run one layer's aggregation round: the compressor's shard-aware
-    /// entry point when `comp` is given, the raw collective otherwise.
-    /// Leaves the full mean gradient in `out` (the sim keeps one
-    /// logical copy; ownership decides who *keeps* which slice), and
-    /// charges every collective this transport runs — including the
-    /// parameter rebuild for sharded ownership.  `ws` is the layer's
-    /// workspace arena: all compressor scratch comes from it, so the
-    /// steady-state round allocates nothing.
+    /// Run one layer's aggregation round: the compressor's single
+    /// `round(&mut RoundCtx)` entry point (with this transport's
+    /// [`Sharding`] mode) when `comp` is given, the raw collective
+    /// otherwise.  Leaves the full mean gradient in `out` (the sim
+    /// keeps one logical copy; ownership decides who *keeps* which
+    /// slice), and charges every collective this transport runs —
+    /// including the parameter rebuild for sharded ownership — plus the
+    /// compressor's [`CodecFlops`] on the codec compute channel.  `ws`
+    /// is the layer's workspace arena: all compressor scratch comes
+    /// from it, so the steady-state round allocates nothing.
     #[allow(clippy::too_many_arguments)]
     fn aggregate_layer(
         &self,
@@ -448,7 +504,22 @@ impl Transport for DenseReplicated {
         ws: &mut Workspace,
     ) {
         match comp {
-            Some(c) => c.round_into(layer, grads, shape, level, comm, out, ws),
+            Some(c) => {
+                let mut ctx = RoundCtx {
+                    layer,
+                    grads,
+                    shape,
+                    level,
+                    sharding: Sharding::Dense,
+                    comm: &mut *comm,
+                    out: &mut *out,
+                    ws: &mut *ws,
+                    genuine_shard: false,
+                };
+                c.round(&mut ctx);
+                let flops = c.codec_flops(shape, level);
+                comm.charge_codec_flops(flops);
+            }
             None => comm.allreduce_mean_into_pooled(grads, out, &mut ws.intra),
         }
     }
@@ -516,7 +587,31 @@ impl Transport for ShardedOwnership {
     ) {
         match comp {
             Some(c) => {
-                c.round_sharded_into(layer, grads, shape, level, comm, out, ws);
+                let mut ctx = RoundCtx {
+                    layer,
+                    grads,
+                    shape,
+                    level,
+                    sharding: Sharding::Sharded,
+                    comm: &mut *comm,
+                    out: &mut *out,
+                    ws: &mut *ws,
+                    genuine_shard: false,
+                };
+                c.round(&mut ctx);
+                let genuine = ctx.genuine_shard;
+                let mut flops = c.codec_flops(shape, level);
+                if !genuine {
+                    // gather-then-shard fallback: reconstructing the full
+                    // layer and extracting the owned chunk is a real
+                    // per-worker pass over all `numel` floats that the
+                    // old clock never charged — fold it into the decode
+                    // channel (a no-op at codec_rate 0, so the free-
+                    // encode clock is unchanged; the regression pin
+                    // lives in tests/transport_parity.rs)
+                    flops.decode += out.len() as u64;
+                }
+                comm.charge_codec_flops(flops);
             }
             None => comm.reduce_scatter_mean_into_pooled(grads, out, &mut ws.intra),
         }
@@ -788,6 +883,92 @@ mod tests {
         d.set_active_workers(2);
         assert_eq!(d.owners(), 1);
         assert_eq!(d.owned_range(100, 0), 0..100);
+    }
+
+    #[test]
+    fn codec_channel_is_free_at_rate_zero_and_disjoint_otherwise() {
+        let mut comm = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        // default rate 0: charging flops is a no-op (the free-encode clock)
+        comm.charge_codec_flops(CodecFlops { encode: 1000, decode: 500 });
+        assert_eq!(comm.ledger.encode_secs, 0.0);
+        assert_eq!(comm.ledger.decode_secs, 0.0);
+        comm.codec_rate = 1e-9;
+        comm.charge_codec_flops(CodecFlops { encode: 1000, decode: 500 });
+        assert_eq!(comm.ledger.encode_secs, 1000.0 * 1e-9);
+        assert_eq!(comm.ledger.decode_secs, 500.0 * 1e-9);
+        // the codec channel never touches the wire ledger or the event
+        // stream (the bucket planner must not see compute)
+        assert_eq!(comm.ledger.floats, 0);
+        assert_eq!(comm.ledger.secs, 0.0);
+        assert_eq!(comm.ledger.collectives, 0);
+        assert!(comm.events.is_empty());
+    }
+
+    #[test]
+    fn charge_event_matches_the_named_helpers() {
+        let mut a = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut b = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        a.charge_allgather(7);
+        let secs = b.charge_event(CollKind::Allgather, 7, false);
+        assert_eq!(a.ledger.secs.to_bits(), b.ledger.secs.to_bits());
+        assert_eq!(secs.to_bits(), b.ledger.secs.to_bits());
+        assert_eq!(a.events, b.events);
+        // and the rebuild flag routes to rebuild_secs exactly once
+        let mut r = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        let rs = r.charge_event(CollKind::Allgather, 7, true);
+        assert_eq!(rs.to_bits(), secs.to_bits());
+        assert_eq!(r.ledger.rebuild_secs.to_bits(), r.ledger.secs.to_bits());
+    }
+
+    #[test]
+    fn fallback_decode_charge_for_gather_then_shard() {
+        // PowerSGD/TopK under sharded ownership take the gather-then-
+        // shard fallback: at a nonzero codec rate the transport must
+        // charge the numel-float shard-extraction pass on the decode
+        // channel (the bugfix); a genuine reduce-scatter must not.
+        use crate::compress::topk::TopK;
+        let a = vec![1.0f32; 32];
+        let grads: Vec<&[f32]> = vec![&a, &a];
+        let sharded = ShardedOwnership::new(2);
+        let mut ws = Workspace::new();
+        let rate = 1e-9;
+
+        let mut tk = TopK::new(2, 0.99, 0.25);
+        let mut comm = Comm::new(NetworkModel::new(2, 100.0, 50.0));
+        comm.codec_rate = rate;
+        let mut out = vec![0.0f32; 32];
+        sharded.aggregate_layer(
+            Some(&mut tk),
+            0,
+            &grads,
+            &[32, 1],
+            Level::High,
+            &mut comm,
+            &mut out,
+            &mut ws,
+        );
+        let flops = tk.codec_flops(&[32, 1], Level::High);
+        let want_dec = (flops.decode + 32) as f64 * rate;
+        assert_eq!(comm.ledger.decode_secs.to_bits(), want_dec.to_bits());
+        assert_eq!(comm.ledger.encode_secs.to_bits(), (flops.encode as f64 * rate).to_bits());
+
+        // genuine reduce-scatter (zero-flop baseline): nothing to extract
+        let mut nc = NoCompression;
+        let mut c2 = Comm::new(NetworkModel::new(2, 100.0, 50.0));
+        c2.codec_rate = rate;
+        let mut out2 = vec![0.0f32; 32];
+        sharded.aggregate_layer(
+            Some(&mut nc),
+            0,
+            &grads,
+            &[32],
+            Level::High,
+            &mut c2,
+            &mut out2,
+            &mut ws,
+        );
+        assert_eq!(c2.ledger.decode_secs, 0.0);
+        assert_eq!(c2.ledger.encode_secs, 0.0);
     }
 
     #[test]

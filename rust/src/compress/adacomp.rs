@@ -1,0 +1,338 @@
+//! AdaComp (Chen et al. 2018, "AdaComp: Adaptive Residual Gradient
+//! Compression for Data-Parallel Distributed Training", arXiv
+//! 1712.02679) — localized-selection residual compression, the sixth
+//! compressor and the scenario-diversity addition from the utility-
+//! accounting issue.
+//!
+//! Per round, per worker, with bin width T:
+//!   G ← G + g                      (residual accumulation in EF memory)
+//!   per bin b: gmax = max_{i∈b} |G_i|
+//!   send G_i (and zero it) iff |G_i + g_i| ≥ gmax
+//! The send test uses H = G + g — the "self-adjusting" boost: a
+//! coordinate whose *latest* gradient is large ships even if its
+//! accumulated residual is not yet the bin maximum.  Selection is local
+//! per bin, so unlike TopK no global sort is needed and the effective
+//! sparsity adapts to the gradient's spatial structure (~1 send per bin
+//! in practice).  Residuals drain exactly once per send: a coordinate's
+//! accumulated value is zeroed the round it ships, so no mass is ever
+//! double-applied (pinned by the proptests here and in
+//! `tests/utility.rs`).
+//!
+//! Level mapping: smaller bins ⇒ more sends ⇒ lower compression, so
+//! `Level::Low` (low compression) selects `bin_at_low` (small) and
+//! `Level::High` selects `bin_at_high` (large); `Rank(t)` is an
+//! explicit bin width and `Frac(f)` approximates a send fraction via
+//! T = ⌈1/f⌉.  This is what lets AdaComp compose with Accordion's
+//! critical-regime switching via `coordinator::adacomp`.
+//!
+//! Wire format: (value, index) pairs, data-dependent count.  The ledger
+//! charges an all-gather of `2 · max-across-workers sent` floats — a
+//! real all-gather pads every rank to the largest buffer, and the count
+//! is deterministic given the deterministic gradients.
+//! `payload_floats` reports the ~1-pair-per-bin planning estimate; the
+//! ledger is authoritative.  Pairs cannot be sliced by parameter index,
+//! so under `Sharding::Sharded` AdaComp runs the gather-then-shard
+//! fallback ([`RoundCtx::genuine_shard`] stays `false`).
+
+use super::{CodecFlops, DistCompressor, Level, RoundCtx};
+use std::collections::HashMap;
+
+pub struct AdaComp {
+    pub workers: usize,
+    /// bin width at Level::Low (small, e.g. 64: more sends, higher fidelity)
+    pub bin_at_low: usize,
+    /// bin width at Level::High (large, e.g. 512: ~1 send per 512 coords)
+    pub bin_at_high: usize,
+    /// per-layer, per-worker accumulated residual G
+    ef: HashMap<usize, Vec<Vec<f32>>>,
+}
+
+impl AdaComp {
+    pub fn new(workers: usize, bin_at_low: usize, bin_at_high: usize) -> AdaComp {
+        assert!(bin_at_low >= 1 && bin_at_high >= 1);
+        AdaComp { workers, bin_at_low, bin_at_high, ef: HashMap::new() }
+    }
+
+    fn bin_for(&self, level: Level, numel: usize) -> usize {
+        let t = match level {
+            Level::Low => self.bin_at_low,
+            Level::High => self.bin_at_high,
+            Level::Rank(t) => t.max(1),
+            Level::Frac(f) => {
+                assert!(f > 0.0, "adacomp send fraction must be positive");
+                (1.0 / f).ceil() as usize
+            }
+        };
+        t.clamp(1, numel.max(1))
+    }
+
+    fn nbins(&self, numel: usize, level: Level) -> usize {
+        numel.div_ceil(self.bin_for(level, numel))
+    }
+}
+
+impl DistCompressor for AdaComp {
+    fn name(&self) -> String {
+        format!("adacomp(T_low={}, T_high={})", self.bin_at_low, self.bin_at_high)
+    }
+
+    /// Fully serial per worker (two passes per bin, no scratch): the
+    /// round is bitwise invariant across intra thread counts by
+    /// construction and allocates nothing after the first touch of a
+    /// layer's EF state.  Sparse pair wire: both sharding modes run the
+    /// same dense all-gather; under `Sharding::Sharded` the flag stays
+    /// `false` so the transport charges the fallback.
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) {
+        let numel: usize = ctx.shape.iter().product();
+        let workers = ctx.grads.len();
+        // fault injection can shrink the active set below the configured
+        // worker count; per-worker state sized at the configured count is
+        // capacity (the trainer resets compressor state on membership change)
+        assert!(workers <= self.workers);
+        let t = self.bin_for(ctx.level, numel);
+        let ef = self
+            .ef
+            .entry(ctx.layer)
+            .or_insert_with(|| vec![vec![0.0; numel]; workers]);
+
+        ctx.out.iter_mut().for_each(|o| *o = 0.0);
+        let inv = 1.0 / workers as f32;
+        let mut sent_max = 0usize;
+        for w in 0..workers {
+            let g = ctx.grads[w];
+            let acc = &mut ef[w];
+            // G ← G + g (residual accumulation; serial: the bin scans
+            // below dominate, and serial keeps the round trivially
+            // partition-invariant)
+            for (a, &x) in acc.iter_mut().zip(g) {
+                *a += x;
+            }
+            let mut sent = 0usize;
+            let mut bin_start = 0;
+            while bin_start < numel {
+                let end = (bin_start + t).min(numel);
+                let mut gmax = 0.0f32;
+                for &a in &acc[bin_start..end] {
+                    gmax = gmax.max(a.abs());
+                }
+                if gmax > 0.0 {
+                    for i in bin_start..end {
+                        // H = G + g: the self-adjusting send test
+                        if (acc[i] + g[i]).abs() >= gmax {
+                            ctx.out[i] += acc[i] * inv;
+                            acc[i] = 0.0; // drains exactly once per send
+                            sent += 1;
+                        }
+                    }
+                }
+                bin_start = end;
+            }
+            sent_max = sent_max.max(sent);
+        }
+        // (value, index) pairs, padded to the largest per-worker buffer
+        ctx.comm.charge_allgather(2 * sent_max);
+    }
+
+    /// Planning estimate: ~1 (value, index) pair per bin.  The actual
+    /// payload is data-dependent; the ledger charge in `round` is
+    /// authoritative (the Data Sent convention the utility experiment
+    /// reports).
+    fn payload_floats(&self, shape: &[usize], level: Level) -> usize {
+        2 * self.nbins(shape.iter().product(), level)
+    }
+
+    /// Encode: residual add (n) + per-bin max scan (n) + the H
+    /// compute/compare sweep (2n).  Decode: scatter-accumulate of the
+    /// ~per-bin pairs.
+    fn codec_flops(&self, shape: &[usize], level: Level) -> CodecFlops {
+        let numel: usize = shape.iter().product();
+        CodecFlops {
+            encode: 4 * numel as u64,
+            decode: 2 * self.nbins(numel, level) as u64,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.ef.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil;
+    use crate::util::prop;
+
+    fn round(
+        ac: &mut AdaComp,
+        g: &[Vec<f32>],
+        numel: usize,
+        level: Level,
+        comm: &mut crate::collectives::Comm,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0; numel];
+        testutil::round(ac, 0, &testutil::views(g), &[numel, 1], level, comm, &mut out);
+        out
+    }
+
+    #[test]
+    fn bin_width_one_is_exact_mean() {
+        // T = 1: every nonzero coordinate is its own bin max and ships
+        // (on a fresh residual H = 2G, and |2G| >= |G| always), so one
+        // round is the exact mean and the telescope closes at zero EF
+        prop::check("adacomp-t1", 10, |rng| {
+            let workers = 2 + rng.below(2);
+            let numel = 4 + rng.below(40);
+            let mut ac = AdaComp::new(workers, 1, 8);
+            let mut comm = testutil::comm(workers);
+            let g = testutil::worker_grads(rng, workers, numel);
+            let out = round(&mut ac, &g, numel, Level::Low, &mut comm);
+            let ef = ac.ef.get(&0).unwrap();
+            let want = testutil::true_mean(&g);
+            for i in 0..numel {
+                let resid: f32 = ef.iter().map(|e| e[i]).sum::<f32>() / workers as f32;
+                assert!((out[i] + resid - want[i]).abs() < 1e-5, "coordinate {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn residual_drains_exactly_once_per_send() {
+        // over T rounds, applied + residual == cumulative true mean:
+        // if a send failed to zero its residual the mass would be
+        // double-counted and the telescope would overshoot
+        prop::check("adacomp-telescope", 10, |rng| {
+            let workers = 2 + rng.below(2);
+            let numel = 16 + rng.below(48);
+            let mut ac = AdaComp::new(workers, 4, 16);
+            let mut comm = testutil::comm(workers);
+            let mut applied = vec![0.0f32; numel];
+            let mut truth = vec![0.0f32; numel];
+            for _ in 0..5 {
+                let g = testutil::worker_grads(rng, workers, numel);
+                for (t, x) in truth.iter_mut().zip(&testutil::true_mean(&g)) {
+                    *t += x;
+                }
+                let out = round(&mut ac, &g, numel, Level::High, &mut comm);
+                for (a, o) in applied.iter_mut().zip(&out) {
+                    *a += o;
+                }
+            }
+            let ef = ac.ef.get(&0).unwrap();
+            for i in 0..numel {
+                let resid: f32 = ef.iter().map(|e| e[i]).sum::<f32>() / workers as f32;
+                assert!(
+                    (applied[i] + resid - truth[i]).abs() < 1e-4 * (1.0 + truth[i].abs()),
+                    "telescope broke at {i}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn sends_the_bin_dominating_coordinates() {
+        // one huge coordinate per bin: exactly those ship, the rest park
+        let g = vec![vec![0.1f32, 9.0, 0.2, 0.1, -7.0, 0.3, 0.2, 0.1]];
+        let mut ac = AdaComp::new(1, 64, 512);
+        let mut comm = testutil::comm(1);
+        let out = round(&mut ac, &g, 8, Level::Rank(4), &mut comm);
+        assert_eq!(out[1], 9.0);
+        assert_eq!(out[4], -7.0);
+        let ef = &ac.ef.get(&0).unwrap()[0];
+        assert_eq!(ef[1], 0.0, "sent residual must drain");
+        assert_eq!(ef[4], 0.0, "sent residual must drain");
+        assert!((ef[0] - 0.1).abs() < 1e-6, "unsent residual must persist");
+    }
+
+    #[test]
+    fn ledger_charges_the_max_worker_payload() {
+        // worker 0 sends more than worker 1: the all-gather pads to the max
+        let g = vec![vec![5.0f32, -4.0, 0.1, 0.1], vec![3.0f32, 0.1, 0.1, 0.1]];
+        let mut ac = AdaComp::new(2, 64, 512);
+        let mut comm = testutil::comm(2);
+        let _ = round(&mut ac, &g, 4, Level::Rank(4), &mut comm);
+        // fresh residual ⇒ H = 2G ⇒ send iff 2|g_i| >= gmax.  worker 0:
+        // gmax 5, sends coords 0 and 1 (10, 8 >= 5); worker 1: gmax 3,
+        // sends coord 0 only.  Charge pads to the max: 2 pairs.
+        assert_eq!(comm.ledger.floats, 2 * 2, "2 floats * max-across-workers sent");
+        assert_eq!(comm.ledger.collectives, 1);
+    }
+
+    #[test]
+    fn smaller_bins_send_more() {
+        // a spike every 64 coords over a flat background: with T=64
+        // every bin's gmax is a spike and only the 4 spikes ship; with
+        // T=4 the spike-free bins select locally and ship their whole
+        // flat background (2·0.1 >= 0.1), so the fine level sends far
+        // more — the localized-selection property the level mapping
+        // relies on
+        let g: Vec<f32> = (0..256).map(|i| if i % 64 == 0 { 10.0 } else { 0.1 }).collect();
+        let g = vec![g];
+        let mut fine = AdaComp::new(1, 4, 64);
+        let mut coarse = AdaComp::new(1, 4, 64);
+        let mut cf = testutil::comm(1);
+        let mut cc = testutil::comm(1);
+        let _ = round(&mut fine, &g, 256, Level::Low, &mut cf);
+        let _ = round(&mut coarse, &g, 256, Level::High, &mut cc);
+        assert_eq!(cc.ledger.floats, 2 * 4, "coarse bins ship the spikes only");
+        assert_eq!(cf.ledger.floats, 2 * (4 + 60 * 4), "fine bins ship their local maxima too");
+        assert_eq!(fine.payload_floats(&[256], Level::Low), 2 * 64);
+        assert_eq!(fine.payload_floats(&[256], Level::High), 2 * 4);
+        assert_eq!(fine.payload_floats(&[256], Level::Frac(0.125)), 2 * 32);
+    }
+
+    #[test]
+    fn reset_clears_residuals() {
+        // the trainer calls reset() on fault membership changes: stale
+        // residuals from the old worker set must not leak
+        let mut rng = crate::util::rng::Rng::new(23);
+        let g = testutil::worker_grads(&mut rng, 2, 32);
+        let mut ac = AdaComp::new(2, 4, 16);
+        let mut comm = testutil::comm(2);
+        let _ = round(&mut ac, &g, 32, Level::High, &mut comm);
+        assert!(!ac.ef.is_empty());
+        ac.reset();
+        assert!(ac.ef.is_empty(), "EF must drop on membership change");
+    }
+
+    #[test]
+    fn sharded_round_is_the_gather_then_shard_fallback() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let g = testutil::worker_grads(&mut rng, 2, 40);
+        let mut dense = AdaComp::new(2, 4, 16);
+        let mut shard = AdaComp::new(2, 4, 16);
+        let mut cd = testutil::comm(2);
+        let mut cs = testutil::comm(2);
+        let mut od = vec![0.0f32; 40];
+        let mut os = vec![0.0f32; 40];
+        testutil::round(&mut dense, 0, &testutil::views(&g), &[40], Level::High, &mut cd, &mut od);
+        let genuine = testutil::round_sharded(
+            &mut shard,
+            0,
+            &testutil::views(&g),
+            &[40],
+            Level::High,
+            &mut cs,
+            &mut os,
+        );
+        assert!(!genuine, "pair payloads must take the fallback");
+        assert_eq!(od, os);
+        assert_eq!(cd.ledger.floats, cs.ledger.floats);
+    }
+
+    #[test]
+    fn deterministic_given_inputs() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        let g = testutil::worker_grads(&mut rng, 3, 96);
+        let mut out1 = vec![0.0; 96];
+        let mut out2 = vec![0.0; 96];
+        for out in [&mut out1, &mut out2] {
+            let mut ac = AdaComp::new(3, 8, 32);
+            let mut comm = testutil::comm(3);
+            testutil::round(&mut ac, 0, &testutil::views(&g), &[96], Level::High, &mut comm, out);
+        }
+        for (a, b) in out1.iter().zip(&out2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

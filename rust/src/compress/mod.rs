@@ -1,7 +1,8 @@
 //! Gradient compressors (the paper's §2 "lossy gradient compression"
-//! substrate): PowerSGD, TopK, RandomK, QSGD, and the uncompressed
-//! baseline — each implementing one *synchronous distributed round* per
-//! layer, including its error-feedback memory and its collective.
+//! substrate): PowerSGD, TopK, RandomK, QSGD, signSGD, AdaComp, and the
+//! uncompressed baseline — each implementing one *synchronous
+//! distributed round* per layer, including its error-feedback memory and
+//! its collective.
 //!
 //! A compressor sees per-worker raw gradients and produces the aggregated
 //! decompressed mean gradient every worker applies (synchronous SGD keeps
@@ -9,18 +10,33 @@
 //! DESIGN.md §3).  All communication goes through [`Comm`], which charges
 //! the paper-convention floats ledger and the α–β clock.
 //!
-//! Every compressor exposes two aggregation entry points, one per
-//! transport (see `collectives::Transport`): [`DistCompressor::round`]
-//! is the dense replicated round, and
-//! [`DistCompressor::round_sharded`] the sharded-ownership round —
-//! dense-payload methods reduce-scatter compressed shards, sparse and
-//! structured methods fall back to gather-then-shard with the fallback
-//! charged honestly.
+//! # The single-surface round API
+//!
+//! Every compressor implements exactly one aggregation entry point,
+//! [`DistCompressor::round`], driven by a [`RoundCtx`] that bundles the
+//! whole per-round call state: layer id, worker-gradient views, shape,
+//! [`Level`], the transport's [`Sharding`] mode, the accounting [`Comm`],
+//! the output buffer, and the [`Workspace`] arena.  The previous surface
+//! (four methods × seven positional arguments each) scaled as
+//! `methods × transports × (allocating, pooled)`; adding a sixth
+//! compressor and the encode/decode charging channel would have meant
+//! ~24 more near-duplicate signatures.  With `RoundCtx`, a new input to
+//! every round is one new field, and a new compressor is one `round`
+//! body.
+//!
+//! Sharding semantics ride in the ctx instead of a second method:
+//! dense-payload methods (QSGD, signSGD, none) reduce-scatter compressed
+//! shards under [`Sharding::Sharded`] and set [`RoundCtx::genuine_shard`];
+//! sparse/structured methods (TopK, RandomK, PowerSGD, AdaComp) run
+//! their dense round either way — the gather-then-shard fallback — and
+//! leave the flag `false` so the transport charges the fallback's
+//! shard-extraction pass honestly (see `collectives::ShardedOwnership`).
 
+pub mod adacomp;
 pub mod powersgd;
 pub mod qsgd;
-pub mod signsgd;
 pub mod randomk;
+pub mod signsgd;
 pub mod topk;
 
 use crate::collectives::Comm;
@@ -41,105 +57,107 @@ pub enum Level {
     Frac(f32),
 }
 
+/// Which transport wire one round runs on (`collectives::Transport`
+/// decides; the compressor only needs to know which collective to
+/// charge and whether its wire format can be reduce-scattered).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sharding {
+    /// Dense replicated ownership: the dense collective every
+    /// compressor always ran.
+    Dense,
+    /// Reduce-scatter ownership: coordinate-aligned payloads
+    /// reduce-scatter their compressed shards (set
+    /// [`RoundCtx::genuine_shard`]); everything else falls back to the
+    /// dense round and the transport charges the fallback honestly.
+    Sharded,
+}
+
+/// Everything one distributed compression round needs, bundled (the
+/// single-surface redesign — see the module docs).  Built by the
+/// transports on the hot path and by [`testutil`]'s allocating wrappers
+/// in tests; compressors receive `&mut RoundCtx` and draw ALL scratch
+/// from `ws` so a steady-state round performs zero heap allocations
+/// (pinned by `tests/hotpath_alloc.rs`).
+pub struct RoundCtx<'a> {
+    /// layer id — error-feedback state and seed derivation key
+    pub layer: usize,
+    /// one raw gradient view per active worker (equal lengths)
+    pub grads: &'a [&'a [f32]],
+    /// the parameter's full shape (`matrix_dims` derives the 2-d view)
+    pub shape: &'a [usize],
+    /// this round's compression level
+    pub level: Level,
+    /// the transport wire the round runs on
+    pub sharding: Sharding,
+    /// accounting handle: every collective (and the codec compute
+    /// channel) is charged here
+    pub comm: &'a mut Comm,
+    /// aggregated decompressed mean gradient, length = numel
+    pub out: &'a mut [f32],
+    /// the layer's scratch arena (slot pools, view recycler, intra pool)
+    pub ws: &'a mut Workspace,
+    /// Set by the compressor when a [`Sharding::Sharded`] round ran a
+    /// genuine reduce-scatter of compressed shards (replaces the old
+    /// `round_sharded_into -> bool` return).  Left `false` by the
+    /// gather-then-shard fallback, which tells the transport it owes
+    /// the shard-extraction compute charge on top of the dense round.
+    pub genuine_shard: bool,
+}
+
+/// Encode/decode flop model for one compressor round at one level — the
+/// input to the utility-accounting codec charge
+/// ([`Comm::charge_codec_flops`]).  Flops are per *worker*: workers
+/// encode concurrently, so one worker's encode cost is what serializes
+/// before the layer's collective can issue, and one worker's decode
+/// cost is what serializes before the optimizer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CodecFlops {
+    /// compress the raw gradient into the wire payload
+    pub encode: u64,
+    /// reconstruct the dense mean gradient from the aggregated payload
+    pub decode: u64,
+}
+
 /// One distributed compression method with its per-(layer, worker) state.
 ///
-/// The required entry points are the `_into` pair: they take a
-/// [`Workspace`] arena and must draw ALL per-round scratch from it (or
-/// from owned state allocated on first touch), so a steady-state round
-/// performs zero heap allocations — the contract
-/// `tests/hotpath_alloc.rs` pins with a counting allocator.  The
-/// workspace-less [`round`]/[`round_sharded`] wrappers allocate a
-/// throwaway arena per call; they exist for tests and one-off callers,
-/// never for the hot loop.
-///
-/// [`round`]: DistCompressor::round
-/// [`round_sharded`]: DistCompressor::round_sharded
+/// The only required aggregation entry point is
+/// [`round`](DistCompressor::round): run one synchronous round for
+/// `ctx.layer` — compress each worker's gradient, aggregate through
+/// `ctx.comm`, decompress into `ctx.out` (mean gradient, length =
+/// numel), and update error-feedback state.  All per-round scratch must
+/// come from `ctx.ws` (or from owned state allocated on first touch),
+/// so a steady-state round performs zero heap allocations — the
+/// contract `tests/hotpath_alloc.rs` pins with a counting allocator.
+/// Workspace-less allocating wrappers live in [`testutil`], never on
+/// this trait: the hot loop cannot call them by construction.
 pub trait DistCompressor: Send {
     fn name(&self) -> String;
 
-    /// Run one synchronous round for `layer`: compress each worker's
-    /// gradient, aggregate through `comm`, decompress into `out`
-    /// (mean gradient, length = numel).  Must update error-feedback
-    /// state.  `shape` is the parameter's full shape; `ws` is the
-    /// layer's scratch arena (see the trait docs).
-    #[allow(clippy::too_many_arguments)]
-    fn round_into(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    );
-
-    /// Shard-aware aggregation entry point for the sharded-ownership
-    /// transport: produce the same mean gradient in `out` as
-    /// [`round_into`] (a contract the transport parity tests pin), but
-    /// charge the collective the transport actually runs.  Dense-payload
-    /// compressors (QSGD, signSGD, none) override this to
-    /// reduce-scatter their compressed shards — the wire format is
-    /// aligned with parameter coordinates, so shard owners can sum
-    /// compressed slices directly.  The default is the gather-then-shard
-    /// fallback used by the sparse/structured families (TopK, RandomK,
-    /// PowerSGD) whose payloads cannot be sliced by parameter index:
-    /// the dense round runs unchanged and is charged exactly as dense,
-    /// and the transport's parameter-rebuild all-gather is the honest
-    /// extra cost of sharded ownership.  Returns `true` when a genuine
-    /// reduce-scatter happened, `false` for the fallback.
-    ///
-    /// [`round_into`]: DistCompressor::round_into
-    #[allow(clippy::too_many_arguments)]
-    fn round_sharded_into(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    ) -> bool {
-        self.round_into(layer, grads, shape, level, comm, out, ws);
-        false
-    }
-
-    /// [`round_into`](DistCompressor::round_into) with a throwaway
-    /// arena (allocates; not for the hot loop).
-    fn round(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-    ) {
-        let mut ws = Workspace::new();
-        self.round_into(layer, grads, shape, level, comm, out, &mut ws);
-    }
-
-    /// [`round_sharded_into`](DistCompressor::round_sharded_into) with a
-    /// throwaway arena (allocates; not for the hot loop).
-    fn round_sharded(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-    ) -> bool {
-        let mut ws = Workspace::new();
-        self.round_sharded_into(layer, grads, shape, level, comm, out, &mut ws)
-    }
+    /// Run one synchronous round (see the trait docs).  Under
+    /// [`Sharding::Sharded`] the compressor must produce the same mean
+    /// gradient as the dense round (a contract the transport parity
+    /// tests pin) while charging the collective the transport actually
+    /// runs, and set [`RoundCtx::genuine_shard`] when its wire format
+    /// genuinely reduce-scatters.
+    fn round(&mut self, ctx: &mut RoundCtx<'_>);
 
     /// Per-worker payload floats one round sends at `level` (planning /
-    /// assertions; the ledger in `Comm` is authoritative).
+    /// assertions; the ledger in `Comm` is authoritative — AdaComp's
+    /// actual payload is data-dependent and this is its guaranteed
+    /// floor).
     fn payload_floats(&self, shape: &[usize], level: Level) -> usize;
 
-    /// Reset error-feedback and warm-start state (new run).
+    /// Per-worker encode/decode flops of one round at `level` — the
+    /// static codec cost model utility accounting charges alongside the
+    /// collective bytes.  Must be zero exactly when the round moves raw
+    /// gradients untouched (the uncompressed baseline, PowerSGD's 1-d
+    /// fallback): `tests/utility.rs` pins that charged-encode and
+    /// free-encode clocks agree only at zero codec flops.
+    fn codec_flops(&self, shape: &[usize], level: Level) -> CodecFlops;
+
+    /// Reset error-feedback and warm-start state (new run, or a fault
+    /// membership change — the trainer resets every compressor so
+    /// residual state never leaks across worker sets).
     fn reset(&mut self);
 }
 
@@ -151,39 +169,30 @@ impl DistCompressor for NoCompression {
         "none".into()
     }
 
-    fn round_into(
-        &mut self,
-        _layer: usize,
-        grads: &[&[f32]],
-        _shape: &[usize],
-        _level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    ) {
-        comm.allreduce_mean_into_pooled(grads, out, &mut ws.intra);
-    }
-
     /// Raw gradients are trivially coordinate-aligned: the sharded
     /// transport reduce-scatters them directly (same mean, half the
     /// wire of the all-reduce — the rebuild all-gather is the other
     /// half).
-    fn round_sharded_into(
-        &mut self,
-        _layer: usize,
-        grads: &[&[f32]],
-        _shape: &[usize],
-        _level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    ) -> bool {
-        comm.reduce_scatter_mean_into_pooled(grads, out, &mut ws.intra);
-        true
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) {
+        match ctx.sharding {
+            Sharding::Dense => {
+                ctx.comm.allreduce_mean_into_pooled(ctx.grads, ctx.out, &mut ctx.ws.intra);
+            }
+            Sharding::Sharded => {
+                ctx.comm.reduce_scatter_mean_into_pooled(ctx.grads, ctx.out, &mut ctx.ws.intra);
+                ctx.genuine_shard = true;
+            }
+        }
     }
 
     fn payload_floats(&self, shape: &[usize], _level: Level) -> usize {
         shape.iter().product()
+    }
+
+    /// No encode, no decode: the zero-flop reference point of the
+    /// utility contract (charged == free for this method only).
+    fn codec_flops(&self, _shape: &[usize], _level: Level) -> CodecFlops {
+        CodecFlops::default()
     }
 
     fn reset(&mut self) {}
@@ -202,8 +211,15 @@ pub(crate) fn matrix_dims(shape: &[usize]) -> Option<(usize, usize)> {
     Some((numel / k, k))
 }
 
-#[cfg(test)]
-pub(crate) mod testutil {
+/// Test-only helpers: fixture builders plus the allocating one-shot
+/// `round`/`round_sharded` wrappers that used to live on the trait.
+/// They build a throwaway [`Workspace`] per call — convenient for
+/// tests/benches, banned from the hot loop (which goes through the
+/// transports with per-layer arenas).  `#[doc(hidden)] pub` rather than
+/// `#[cfg(test)]` so integration suites (`tests/*.rs`) and benches can
+/// reach it; it is not part of the supported API surface.
+#[doc(hidden)]
+pub mod testutil {
     use super::*;
     use crate::cluster::network::NetworkModel;
     use crate::util::prop;
@@ -226,6 +242,58 @@ pub(crate) mod testutil {
         crate::collectives::mean_into(&views(g), &mut out);
         out
     }
+
+    /// One dense round with a throwaway arena (allocates; tests only).
+    pub fn round<C: DistCompressor + ?Sized>(
+        c: &mut C,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) {
+        let mut ws = Workspace::new();
+        let mut ctx = RoundCtx {
+            layer,
+            grads,
+            shape,
+            level,
+            sharding: Sharding::Dense,
+            comm,
+            out,
+            ws: &mut ws,
+            genuine_shard: false,
+        };
+        c.round(&mut ctx);
+    }
+
+    /// One sharded round with a throwaway arena; returns the
+    /// genuine-reduce-scatter flag (tests only).
+    pub fn round_sharded<C: DistCompressor + ?Sized>(
+        c: &mut C,
+        layer: usize,
+        grads: &[&[f32]],
+        shape: &[usize],
+        level: Level,
+        comm: &mut Comm,
+        out: &mut [f32],
+    ) -> bool {
+        let mut ws = Workspace::new();
+        let mut ctx = RoundCtx {
+            layer,
+            grads,
+            shape,
+            level,
+            sharding: Sharding::Sharded,
+            comm,
+            out,
+            ws: &mut ws,
+            genuine_shard: false,
+        };
+        c.round(&mut ctx);
+        ctx.genuine_shard
+    }
 }
 
 #[cfg(test)]
@@ -238,9 +306,10 @@ mod tests {
         let mut comm = testutil::comm(2);
         let g = vec![vec![1.0f32, 3.0], vec![3.0f32, 5.0]];
         let mut out = vec![0.0; 2];
-        c.round(0, &testutil::views(&g), &[2], Level::High, &mut comm, &mut out);
+        testutil::round(&mut c, 0, &testutil::views(&g), &[2], Level::High, &mut comm, &mut out);
         assert_eq!(out, vec![2.0, 4.0]);
         assert_eq!(comm.ledger.floats, 2);
+        assert_eq!(c.codec_flops(&[2], Level::High), CodecFlops::default());
     }
 
     #[test]
@@ -249,12 +318,19 @@ mod tests {
         let mut comm = testutil::comm(2);
         let g = vec![vec![1.0f32, 3.0], vec![3.0f32, 5.0]];
         let mut out = vec![0.0; 2];
-        let genuine =
-            c.round_sharded(0, &testutil::views(&g), &[2], Level::High, &mut comm, &mut out);
+        let genuine = testutil::round_sharded(
+            &mut c,
+            0,
+            &testutil::views(&g),
+            &[2],
+            Level::High,
+            &mut comm,
+            &mut out,
+        );
         assert!(genuine, "raw gradients must take the true reduce-scatter path");
         assert_eq!(out, vec![2.0, 4.0]);
         assert_eq!(comm.ledger.floats, 2);
-        // half the all-reduce wire at zero latency
+        // strictly cheaper than the dense all-reduce on both α and β
         let mut ar = testutil::comm(2);
         ar.charge_allreduce(2);
         assert!(comm.ledger.secs < ar.ledger.secs);

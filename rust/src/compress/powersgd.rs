@@ -22,12 +22,13 @@
 //!
 //! Sharded transport: the rank-r factors P̂/Q̄ are not sliceable by
 //! parameter index (every owner needs both in full to reconstruct its
-//! rows of P̂ Q̄ᵀ), so PowerSGD keeps the default gather-then-shard
-//! fallback — its two all-reduces run unchanged and the transport's
-//! parameter-rebuild all-gather is the honest extra cost of sharded
-//! ownership (see `DistCompressor::round_sharded`).
+//! rows of P̂ Q̄ᵀ), so under `Sharding::Sharded` PowerSGD runs the
+//! gather-then-shard fallback — its two all-reduces run unchanged,
+//! [`RoundCtx::genuine_shard`] stays `false`, and the transport charges
+//! the parameter-rebuild all-gather plus the shard-extraction compute
+//! as the honest extra cost of sharded ownership.
 
-use super::{matrix_dims, Comm, DistCompressor, Level};
+use super::{matrix_dims, CodecFlops, DistCompressor, Level, RoundCtx};
 use crate::tensor::linalg::{self, Epilogue};
 use crate::util::rng::Rng;
 use crate::util::workspace::Workspace;
@@ -108,34 +109,28 @@ impl DistCompressor for PowerSgd {
         format!("powersgd(r_low={}, r_high={})", self.rank_at_low, self.rank_at_high)
     }
 
-    fn round_into(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    ) {
-        let (n, k) = match matrix_dims(shape) {
+    /// Rank-r factor wire: both sharding modes run the same two dense
+    /// all-reduces; under `Sharding::Sharded` the flag stays `false` so
+    /// the transport charges the fallback.
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) {
+        let (n, k) = match matrix_dims(ctx.shape) {
             Some(d) => d,
             None => {
                 // 1-d fallback: raw all-reduce (callers normally pre-filter)
-                comm.allreduce_mean_into_pooled(grads, out, &mut ws.intra);
+                ctx.comm.allreduce_mean_into_pooled(ctx.grads, ctx.out, &mut ctx.ws.intra);
                 return;
             }
         };
         let numel = n * k;
-        let workers = grads.len();
+        let workers = ctx.grads.len();
         // fault injection can shrink the active set below the configured
         // worker count; per-worker state sized at the configured count is
         // capacity (the trainer resets compressor state on membership change)
         assert!(workers <= self.workers);
-        let r = self.rank_for(level, n, k);
+        let r = self.rank_for(ctx.level, n, k);
         // arena layout: workers P factors, workers Q factors, P̄, Q̄ —
         // disjoint from `st` (self.state), so no scratch-detach dance
-        let Workspace { f32s, views: view_buf, intra, .. } = ws;
+        let Workspace { f32s, views: view_buf, intra, .. } = ctx.ws;
         let slots = f32s.slots(2 * workers + 2);
         let (sp, rest) = slots.split_at_mut(workers);
         let (sq, means) = rest.split_at_mut(workers);
@@ -143,12 +138,12 @@ impl DistCompressor for PowerSgd {
         let pmean = &mut pm[0];
         let qmean = &mut qm[0];
         let mut views = view_buf.take();
-        let st = self.layer_state(layer, numel, k, r);
+        let st = self.layer_state(ctx.layer, numel, k, r);
 
         // M_i = grad_i + e_i  (into the EF buffer, which becomes M_i;
         // element-partitioned, partition-invariant)
         for w in 0..workers {
-            linalg::vadd_pooled(grads[w], &mut st.ef[w], intra);
+            linalg::vadd_pooled(ctx.grads[w], &mut st.ef[w], intra);
         }
 
         // P_i = M_i Q ; P̄ = mean  (row-partitioned const-R GEMM; the
@@ -160,7 +155,7 @@ impl DistCompressor for PowerSgd {
         pmean.resize(n * r, 0.0);
         views.clear();
         views.extend(sp[..workers].iter().map(|v| v.as_slice()));
-        comm.allreduce_mean_into_pooled(&views, pmean, intra);
+        ctx.comm.allreduce_mean_into_pooled(&views, pmean, intra);
 
         // P̂ = orthonormalize(P̄)
         linalg::orthonormalize_cols(pmean, n, r, 1e-8);
@@ -173,14 +168,14 @@ impl DistCompressor for PowerSgd {
         qmean.resize(k * r, 0.0);
         views.clear();
         views.extend(sq[..workers].iter().map(|v| v.as_slice()));
-        comm.allreduce_mean_into_pooled(&views, qmean, intra);
+        ctx.comm.allreduce_mean_into_pooled(&views, qmean, intra);
         views.clear();
         view_buf.put(views);
 
         // out = P̂ Q̄ᵀ ; e_i = M_i − out ; warm-start Q ← Q̄
-        linalg::gemm_nr_rk_fused_pooled(pmean, qmean, n, k, r, Epilogue::None, out, intra);
+        linalg::gemm_nr_rk_fused_pooled(pmean, qmean, n, k, r, Epilogue::None, ctx.out, intra);
         for w in 0..workers {
-            linalg::vsub_pooled(out, &mut st.ef[w], intra);
+            linalg::vsub_pooled(ctx.out, &mut st.ef[w], intra);
         }
         st.q.copy_from_slice(qmean);
     }
@@ -195,6 +190,24 @@ impl DistCompressor for PowerSgd {
         }
     }
 
+    /// Encode: the two factor GEMMs (2·n·k·r each = 4·numel·r) plus the
+    /// Gram–Schmidt pass (~2·n·r²).  Decode: the P̂ Q̄ᵀ reconstruction
+    /// GEMM (2·numel·r).  The 1-d fallback moves raw floats — zero
+    /// codec flops, matching the uncompressed baseline.
+    fn codec_flops(&self, shape: &[usize], level: Level) -> CodecFlops {
+        match matrix_dims(shape) {
+            Some((n, k)) => {
+                let r = self.rank_for(level, n, k);
+                let numel = (n * k) as u64;
+                CodecFlops {
+                    encode: 4 * numel * r as u64 + 2 * (n * r * r) as u64,
+                    decode: 2 * numel * r as u64,
+                }
+            }
+            None => CodecFlops::default(),
+        }
+    }
+
     fn reset(&mut self) {
         self.state.clear();
     }
@@ -203,6 +216,7 @@ impl DistCompressor for PowerSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::Comm;
     use crate::compress::testutil;
     use crate::util::prop;
 
@@ -215,7 +229,7 @@ mod tests {
     ) -> Vec<f32> {
         let numel: usize = shape.iter().product();
         let mut out = vec![0.0; numel];
-        ps.round(0, &testutil::views(g), shape, level, comm, &mut out);
+        testutil::round(ps, 0, &testutil::views(g), shape, level, comm, &mut out);
         out
     }
 
@@ -308,9 +322,16 @@ mod tests {
         let mut cs = testutil::comm(workers);
         let mut od = vec![0.0f32; 32];
         let mut os = vec![0.0f32; 32];
-        dense.round(0, &testutil::views(&g), &shape, Level::Low, &mut cd, &mut od);
-        let genuine =
-            shard.round_sharded(0, &testutil::views(&g), &shape, Level::Low, &mut cs, &mut os);
+        testutil::round(&mut dense, 0, &testutil::views(&g), &shape, Level::Low, &mut cd, &mut od);
+        let genuine = testutil::round_sharded(
+            &mut shard,
+            0,
+            &testutil::views(&g),
+            &shape,
+            Level::Low,
+            &mut cs,
+            &mut os,
+        );
         assert!(!genuine, "rank-r factors must take the fallback");
         assert_eq!(od, os);
         assert_eq!(cd.ledger.floats, cs.ledger.floats);
@@ -360,7 +381,7 @@ mod tests {
         for out in [&mut out1, &mut out2] {
             let mut ps = PowerSgd::new(workers, 2, 1, 42);
             let mut comm = testutil::comm(workers);
-            ps.round(0, &testutil::views(&g), &shape, Level::High, &mut comm, out);
+            testutil::round(&mut ps, 0, &testutil::views(&g), &shape, Level::High, &mut comm, out);
         }
         assert_eq!(out1, out2);
     }

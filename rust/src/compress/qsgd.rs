@@ -7,7 +7,7 @@
 //! accounting.  `Level::Rank(b)` selects b bits explicitly (AdaQS adapts
 //! bits multiplicatively).
 
-use super::{Comm, DistCompressor, Level};
+use super::{CodecFlops, DistCompressor, Level, RoundCtx, Sharding};
 use crate::tensor::linalg;
 use crate::util::pool::{IntraPool, SendPtr};
 use crate::util::rng::Rng;
@@ -43,11 +43,11 @@ impl Qsgd {
         }
     }
 
-    /// The quantize-and-mean data path shared by both aggregation entry
-    /// points (dense all-gather and sharded reduce-scatter): only the
-    /// ledger charge differs between transports.  The quantization
-    /// buffer comes from the workspace arena (fully overwritten per
-    /// worker, so a plain resize suffices).
+    /// The quantize-and-mean data path shared by both sharding modes
+    /// (dense all-gather and sharded reduce-scatter): only the ledger
+    /// charge differs between transports.  The quantization buffer
+    /// comes from the workspace arena (fully overwritten per worker, so
+    /// a plain resize suffices).
     fn aggregate_mean(
         &mut self,
         layer: usize,
@@ -105,45 +105,37 @@ impl DistCompressor for Qsgd {
         format!("qsgd({}b/{}b)", self.bits_at_low, self.bits_at_high)
     }
 
-    fn round_into(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    ) {
-        let bits = self.bits_for(level);
-        self.aggregate_mean(layer, grads, bits, out, ws);
-        comm.charge_allgather(self.payload_floats(shape, level));
-    }
-
     /// Quantized vectors are coordinate-aligned across workers, so the
-    /// sharded transport reduce-scatters the compressed shards: same
-    /// mean, identical quantization streams, the payload charged as one
-    /// reduce-scatter instead of the dense all-gather.
-    fn round_sharded_into(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    ) -> bool {
-        let bits = self.bits_for(level);
-        self.aggregate_mean(layer, grads, bits, out, ws);
-        comm.charge_reduce_scatter(self.payload_floats(shape, level));
-        true
+    /// sharded mode reduce-scatters the compressed shards: same mean,
+    /// identical quantization streams, the payload charged as one
+    /// reduce-scatter instead of the dense all-gather
+    /// (`genuine_shard = true`).
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) {
+        let bits = self.bits_for(ctx.level);
+        self.aggregate_mean(ctx.layer, ctx.grads, bits, ctx.out, ctx.ws);
+        let payload = self.payload_floats(ctx.shape, ctx.level);
+        match ctx.sharding {
+            Sharding::Dense => ctx.comm.charge_allgather(payload),
+            Sharding::Sharded => {
+                ctx.comm.charge_reduce_scatter(payload);
+                ctx.genuine_shard = true;
+            }
+        }
     }
 
     fn payload_floats(&self, shape: &[usize], level: Level) -> usize {
         let numel: usize = shape.iter().product();
         let bits = self.bits_for(level) as usize;
         (numel * bits).div_ceil(32) + 1
+    }
+
+    /// Encode: the ℓ₂ norm (2n) plus the per-coordinate stochastic
+    /// rounding kernel (~6n: abs, scale, floor, draw, compare, pack).
+    /// Decode: unscale + mean accumulation (~2n).  Bit width changes
+    /// the wire, not the per-coordinate arithmetic.
+    fn codec_flops(&self, shape: &[usize], _level: Level) -> CodecFlops {
+        let numel: usize = shape.iter().product();
+        CodecFlops { encode: 8 * numel as u64, decode: 2 * numel as u64 }
     }
 
     fn reset(&mut self) {
@@ -204,7 +196,15 @@ mod tests {
             let mut qs = Qsgd::new(2, 16, 2, 1);
             let mut comm = testutil::comm(2);
             let mut out = vec![0.0; numel];
-            qs.round(0, &testutil::views(&g), &[numel], Level::Low, &mut comm, &mut out);
+            testutil::round(
+                &mut qs,
+                0,
+                &testutil::views(&g),
+                &[numel],
+                Level::Low,
+                &mut comm,
+                &mut out,
+            );
             for (o, t) in out.iter().zip(&testutil::true_mean(&g)) {
                 assert!((o - t).abs() < 1e-3 * (1.0 + t.abs()), "{o} vs {t}");
             }
@@ -231,9 +231,16 @@ mod tests {
         let mut cs = testutil::comm(2);
         let mut od = vec![0.0f32; 24];
         let mut os = vec![0.0f32; 24];
-        dense.round(0, &testutil::views(&g), &[24], Level::Low, &mut cd, &mut od);
-        let genuine =
-            shard.round_sharded(0, &testutil::views(&g), &[24], Level::Low, &mut cs, &mut os);
+        testutil::round(&mut dense, 0, &testutil::views(&g), &[24], Level::Low, &mut cd, &mut od);
+        let genuine = testutil::round_sharded(
+            &mut shard,
+            0,
+            &testutil::views(&g),
+            &[24],
+            Level::Low,
+            &mut cs,
+            &mut os,
+        );
         assert!(genuine);
         for (a, b) in od.iter().zip(&os) {
             assert_eq!(a.to_bits(), b.to_bits());

@@ -8,10 +8,11 @@
 //!
 //! Sharded transport: the k kept coordinates are scattered over the
 //! whole layer, so the compressed value list does not align with
-//! contiguous parameter shards — RandomK keeps the default
-//! gather-then-shard fallback (see `DistCompressor::round_sharded`).
+//! contiguous parameter shards — under `Sharding::Sharded` RandomK runs
+//! the gather-then-shard fallback ([`RoundCtx::genuine_shard`] stays
+//! `false`) and the transport charges the fallback honestly.
 
-use super::{Comm, DistCompressor, Level};
+use super::{CodecFlops, DistCompressor, Level, RoundCtx};
 use crate::tensor::linalg;
 use crate::util::rng::Rng;
 use crate::util::workspace::Workspace;
@@ -54,28 +55,23 @@ impl DistCompressor for RandomK {
         )
     }
 
-    fn round_into(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    ) {
-        let numel: usize = shape.iter().product();
-        let workers = grads.len();
-        let k = self.k_for(numel, level);
+    /// Shared-seed sparse wire: both sharding modes run the same dense
+    /// all-reduce of k values; under `Sharding::Sharded` the flag stays
+    /// `false` so the transport charges the fallback.
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) {
+        let numel: usize = ctx.shape.iter().product();
+        let workers = ctx.grads.len();
+        let k = self.k_for(numel, ctx.level);
         self.step += 1;
 
         // synchronized coordinate choice: partial Fisher-Yates over
         // indices (the index buffer comes from the arena: rebuilt every
         // round, allocated once).  The shuffle's swap chain is a strict
         // RNG-stream dependency, so it stays serial by design.
-        let mut rng =
-            Rng::new(self.seed ^ self.step.wrapping_mul(0x9E3779B97F4A7C15) ^ (layer as u64) << 17);
-        let Workspace { usizes, intra, .. } = ws;
+        let mut rng = Rng::new(
+            self.seed ^ self.step.wrapping_mul(0x9E3779B97F4A7C15) ^ (ctx.layer as u64) << 17,
+        );
+        let Workspace { usizes, intra, .. } = ctx.ws;
         let idx = usizes.slot(0);
         idx.clear();
         idx.extend(0..numel);
@@ -86,27 +82,35 @@ impl DistCompressor for RandomK {
 
         let ef = self
             .ef
-            .entry(layer)
+            .entry(ctx.layer)
             .or_insert_with(|| vec![vec![0.0; numel]; workers]);
-        out.iter_mut().for_each(|o| *o = 0.0);
+        ctx.out.iter_mut().for_each(|o| *o = 0.0);
         let inv = 1.0 / workers as f32;
         for w in 0..workers {
             let e = &mut ef[w];
-            linalg::vadd_pooled(grads[w], e, intra);
+            linalg::vadd_pooled(ctx.grads[w], e, intra);
             // the kept-coordinate scatter touches random indices: serial
             // (disjointness across threads would need an index partition
             // that costs more than the k writes it saves)
             for &i in &idx[..k] {
-                out[i] += e[i] * inv;
+                ctx.out[i] += e[i] * inv;
                 e[i] = 0.0;
             }
         }
         // payload: k values (indices derived from shared seed)
-        comm.charge_allreduce(k);
+        ctx.comm.charge_allreduce(k);
     }
 
     fn payload_floats(&self, shape: &[usize], level: Level) -> usize {
         self.k_for(shape.iter().product(), level)
+    }
+
+    /// Encode: EF add (n) plus the shared-seed shuffle and kept-value
+    /// gather (~3k).  Decode: scatter-accumulate of k values.
+    fn codec_flops(&self, shape: &[usize], level: Level) -> CodecFlops {
+        let numel: usize = shape.iter().product();
+        let k = self.k_for(numel, level);
+        CodecFlops { encode: (numel + 3 * k) as u64, decode: k as u64 }
     }
 
     fn reset(&mut self) {
@@ -130,7 +134,15 @@ mod tests {
             let mut rk = RandomK::new(workers, 1.0, 0.1, 3);
             let mut comm = testutil::comm(workers);
             let mut out = vec![0.0; numel];
-            rk.round(0, &testutil::views(&g), &[numel], Level::Low, &mut comm, &mut out);
+            testutil::round(
+                &mut rk,
+                0,
+                &testutil::views(&g),
+                &[numel],
+                Level::Low,
+                &mut comm,
+                &mut out,
+            );
             for (o, t) in out.iter().zip(&testutil::true_mean(&g)) {
                 assert!((o - t).abs() < 1e-5);
             }
@@ -143,7 +155,7 @@ mod tests {
         let g = vec![vec![1.0f32; 16]];
         let mut comm = testutil::comm(1);
         let mut out = vec![0.0; 16];
-        rk.round(0, &testutil::views(&g), &[16], Level::High, &mut comm, &mut out);
+        testutil::round(&mut rk, 0, &testutil::views(&g), &[16], Level::High, &mut comm, &mut out);
         assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 4);
         assert_eq!(comm.ledger.floats, 4);
     }
@@ -158,9 +170,16 @@ mod tests {
         let mut cs = testutil::comm(2);
         let mut od = vec![0.0f32; 16];
         let mut os = vec![0.0f32; 16];
-        dense.round(0, &testutil::views(&g), &[16], Level::High, &mut cd, &mut od);
-        let genuine =
-            shard.round_sharded(0, &testutil::views(&g), &[16], Level::High, &mut cs, &mut os);
+        testutil::round(&mut dense, 0, &testutil::views(&g), &[16], Level::High, &mut cd, &mut od);
+        let genuine = testutil::round_sharded(
+            &mut shard,
+            0,
+            &testutil::views(&g),
+            &[16],
+            Level::High,
+            &mut cs,
+            &mut os,
+        );
         assert!(!genuine, "scattered support must take the fallback");
         assert_eq!(od, os);
         assert_eq!(cd.ledger.floats, cs.ledger.floats);
@@ -180,7 +199,15 @@ mod tests {
                 *t += x;
             }
             let mut out = vec![0.0; 16];
-            rk.round(0, &testutil::views(&g), &[16], Level::High, &mut comm, &mut out);
+            testutil::round(
+                &mut rk,
+                0,
+                &testutil::views(&g),
+                &[16],
+                Level::High,
+                &mut comm,
+                &mut out,
+            );
             for (a, o) in applied.iter_mut().zip(&out) {
                 *a += o;
             }

@@ -9,10 +9,9 @@
 //! (payload counted as numel/32 floats + 1); the aggregate is the mean of
 //! the scaled signs; EF keeps the residual.
 
-use super::{Comm, DistCompressor, Level};
+use super::{CodecFlops, DistCompressor, Level, RoundCtx, Sharding};
 use crate::tensor::linalg;
 use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
-use crate::util::workspace::Workspace;
 use std::collections::HashMap;
 
 /// One contiguous run of the sign sweep: the shared serial kernel of
@@ -83,42 +82,36 @@ impl DistCompressor for SignSgd {
         "signsgd(ef)".into()
     }
 
-    fn round_into(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        _level: Level, // 1-bit always: no adaptivity knob (see module docs)
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace, // sign quantization is in-place in EF: only the intra pool is used
-    ) {
-        self.aggregate_mean(layer, grads, out, &mut ws.intra);
-        comm.charge_allgather(self.payload_floats(shape, Level::High));
-    }
-
     /// Sign vectors are coordinate-aligned (one bit per parameter), so
-    /// the sharded transport reduce-scatters the compressed shards:
-    /// same mean and EF update, the payload charged as one
-    /// reduce-scatter instead of the dense all-gather.
-    fn round_sharded_into(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        _level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    ) -> bool {
-        self.aggregate_mean(layer, grads, out, &mut ws.intra);
-        comm.charge_reduce_scatter(self.payload_floats(shape, Level::High));
-        true
+    /// the sharded mode reduce-scatters the compressed shards: same
+    /// mean and EF update, the payload charged as one reduce-scatter
+    /// instead of the dense all-gather (`genuine_shard = true`).  The
+    /// 1-bit level knob does not exist (see module docs): `ctx.level`
+    /// is ignored.  Sign quantization is in-place in EF: only the
+    /// workspace's intra pool is used.
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) {
+        self.aggregate_mean(ctx.layer, ctx.grads, ctx.out, &mut ctx.ws.intra);
+        let payload = self.payload_floats(ctx.shape, Level::High);
+        match ctx.sharding {
+            Sharding::Dense => ctx.comm.charge_allgather(payload),
+            Sharding::Sharded => {
+                ctx.comm.charge_reduce_scatter(payload);
+                ctx.genuine_shard = true;
+            }
+        }
     }
 
     fn payload_floats(&self, shape: &[usize], _level: Level) -> usize {
         let numel: usize = shape.iter().product();
         numel.div_ceil(32) + 1
+    }
+
+    /// Encode: EF add (n) + |a| mean reduction (n) + the sign sweep
+    /// (~3n: signum, scale, EF residual update).  Decode: unpack +
+    /// mean accumulation (n).
+    fn codec_flops(&self, shape: &[usize], _level: Level) -> CodecFlops {
+        let numel: usize = shape.iter().product();
+        CodecFlops { encode: 5 * numel as u64, decode: numel as u64 }
     }
 
     fn reset(&mut self) {
@@ -147,7 +140,15 @@ mod tests {
                 for (t, x) in truth.iter_mut().zip(&testutil::true_mean(&g)) {
                     *t += x;
                 }
-                s.round(0, &testutil::views(&g), &[numel], Level::High, &mut comm, &mut out);
+                testutil::round(
+                    &mut s,
+                    0,
+                    &testutil::views(&g),
+                    &[numel],
+                    Level::High,
+                    &mut comm,
+                    &mut out,
+                );
                 for (a, o) in applied.iter_mut().zip(&out) {
                     *a += o;
                 }
@@ -177,9 +178,16 @@ mod tests {
         let mut cs = testutil::comm(2);
         let mut od = vec![0.0f32; 20];
         let mut os = vec![0.0f32; 20];
-        dense.round(0, &testutil::views(&g), &[20], Level::High, &mut cd, &mut od);
-        let genuine =
-            shard.round_sharded(0, &testutil::views(&g), &[20], Level::High, &mut cs, &mut os);
+        testutil::round(&mut dense, 0, &testutil::views(&g), &[20], Level::High, &mut cd, &mut od);
+        let genuine = testutil::round_sharded(
+            &mut shard,
+            0,
+            &testutil::views(&g),
+            &[20],
+            Level::High,
+            &mut cs,
+            &mut os,
+        );
         assert!(genuine);
         assert_eq!(od, os);
         assert_eq!(dense.ef.get(&0).unwrap(), shard.ef.get(&0).unwrap());
@@ -193,7 +201,7 @@ mod tests {
         let mut comm = testutil::comm(1);
         let g = vec![vec![3.0f32, -2.0, 0.5, -0.1]];
         let mut out = vec![0.0; 4];
-        s.round(0, &testutil::views(&g), &[4], Level::High, &mut comm, &mut out);
+        testutil::round(&mut s, 0, &testutil::views(&g), &[4], Level::High, &mut comm, &mut out);
         assert!(out[0] > 0.0 && out[1] < 0.0 && out[2] > 0.0 && out[3] < 0.0);
         // all magnitudes equal (1-bit)
         assert!((out[0] - out[2]).abs() < 1e-6);

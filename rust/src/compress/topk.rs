@@ -9,12 +9,13 @@
 //! gradient is the mean of the union of sparse contributions.
 //!
 //! Sharded transport: a (value, index) payload cannot be sliced by
-//! parameter index before the exchange, so TopK keeps the default
-//! gather-then-shard fallback — the dense all-gather runs unchanged and
-//! the transport's parameter-rebuild all-gather is the honest extra
-//! cost (see `DistCompressor::round_sharded`).
+//! parameter index before the exchange, so under `Sharding::Sharded`
+//! TopK runs the gather-then-shard fallback — the dense all-gather runs
+//! unchanged, [`RoundCtx::genuine_shard`] stays `false`, and the
+//! transport charges the parameter-rebuild all-gather plus the
+//! shard-extraction compute as the honest extra cost.
 
-use super::{Comm, DistCompressor, Level};
+use super::{CodecFlops, DistCompressor, Level, RoundCtx};
 use crate::tensor::linalg;
 use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
 use crate::util::workspace::Workspace;
@@ -94,39 +95,33 @@ impl DistCompressor for TopK {
         )
     }
 
-    fn round_into(
-        &mut self,
-        layer: usize,
-        grads: &[&[f32]],
-        shape: &[usize],
-        level: Level,
-        comm: &mut Comm,
-        out: &mut [f32],
-        ws: &mut Workspace,
-    ) {
-        let numel: usize = shape.iter().product();
-        let workers = grads.len();
+    /// Sparse (value, index) wire: both sharding modes run the same
+    /// dense all-gather round; under `Sharding::Sharded` the flag
+    /// stays `false` so the transport charges the fallback.
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) {
+        let numel: usize = ctx.shape.iter().product();
+        let workers = ctx.grads.len();
         // fault injection can shrink the active set below the configured
         // worker count; per-worker state sized at the configured count is
         // capacity (the trainer resets compressor state on membership change)
         assert!(workers <= self.workers);
-        let k = self.k_for(numel, level);
+        let k = self.k_for(numel, ctx.level);
 
-        let Workspace { f32s, intra, .. } = ws;
+        let Workspace { f32s, intra, .. } = ctx.ws;
         let mags = f32s.slot(0);
         let ef = self
             .ef
-            .entry(layer)
+            .entry(ctx.layer)
             .or_insert_with(|| vec![vec![0.0; numel]; workers]);
 
-        out.iter_mut().for_each(|o| *o = 0.0);
+        ctx.out.iter_mut().for_each(|o| *o = 0.0);
         let inv = 1.0 / workers as f32;
         let mut kept_total = 0usize;
         for w in 0..workers {
             // a = grad + ef (in place in the EF buffer; element-
             // partitioned, partition-invariant)
             let a = &mut ef[w];
-            linalg::vadd_pooled(grads[w], a, intra);
+            linalg::vadd_pooled(ctx.grads[w], a, intra);
             let t = threshold(mags, a, k, intra);
             // keep top-k (ties: keep until k reached, deterministic
             // order).  Serial by design: the kept-counter tie-break is a
@@ -137,7 +132,7 @@ impl DistCompressor for TopK {
                 // keep while under k; zeros only count when the threshold
                 // itself is zero (degenerate all-zero tail)
                 if kept < k && v.abs() >= t && (*v != 0.0 || t == 0.0) {
-                    out[i] += *v * inv;
+                    ctx.out[i] += *v * inv;
                     *v = 0.0; // removed from EF
                     kept += 1;
                 }
@@ -146,12 +141,22 @@ impl DistCompressor for TopK {
         }
         let _ = kept_total;
         // payload: k (value, index) pairs per worker, all-gathered
-        comm.charge_allgather(2 * k);
+        ctx.comm.charge_allgather(2 * k);
     }
 
     fn payload_floats(&self, shape: &[usize], level: Level) -> usize {
         let numel: usize = shape.iter().product();
         2 * self.k_for(numel, level)
+    }
+
+    /// Encode: EF add (n) + magnitude fill (n) + selection (~2n
+    /// expected for select-nth) + the kept sweep (n, folded into the
+    /// selection term) + pair packing (2k).  Decode: scatter-accumulate
+    /// of k kept pairs per round.
+    fn codec_flops(&self, shape: &[usize], level: Level) -> CodecFlops {
+        let numel: usize = shape.iter().product();
+        let k = self.k_for(numel, level);
+        CodecFlops { encode: (4 * numel + 2 * k) as u64, decode: k as u64 }
     }
 
     fn reset(&mut self) {
@@ -162,6 +167,7 @@ impl DistCompressor for TopK {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::Comm;
     use crate::compress::testutil;
     use crate::util::prop;
 
@@ -173,7 +179,7 @@ mod tests {
         comm: &mut Comm,
     ) -> Vec<f32> {
         let mut out = vec![0.0; numel];
-        tk.round(0, &testutil::views(g), &[numel, 1], level, comm, &mut out);
+        testutil::round(tk, 0, &testutil::views(g), &[numel, 1], level, comm, &mut out);
         out
     }
 
@@ -256,9 +262,16 @@ mod tests {
         let mut cs = testutil::comm(2);
         let mut od = vec![0.0f32; 40];
         let mut os = vec![0.0f32; 40];
-        dense.round(0, &testutil::views(&g), &[40], Level::High, &mut cd, &mut od);
-        let genuine =
-            shard.round_sharded(0, &testutil::views(&g), &[40], Level::High, &mut cs, &mut os);
+        testutil::round(&mut dense, 0, &testutil::views(&g), &[40], Level::High, &mut cd, &mut od);
+        let genuine = testutil::round_sharded(
+            &mut shard,
+            0,
+            &testutil::views(&g),
+            &[40],
+            Level::High,
+            &mut cs,
+            &mut os,
+        );
         assert!(!genuine, "sparse payloads must take the fallback");
         assert_eq!(od, os);
         assert_eq!(cd.ledger.floats, cs.ledger.floats);

@@ -1,0 +1,133 @@
+//! AdaComp composed with Accordion's critical-regime detector: the
+//! controller entry for the `adacomp` method (Chen et al. 2018,
+//! arXiv:1712.02679).
+//!
+//! AdaComp's own adaptivity is *spatial* — within one round the send set
+//! follows the per-bin gradient activity.  Accordion's adaptivity is
+//! *temporal* — across epochs it detects critical learning regimes from
+//! the accumulated-gradient norm.  The two compose naturally: Accordion
+//! decides WHEN to compress harder, AdaComp decides WHAT to send.  This
+//! schedule maps Accordion's abstract Low/High decisions onto explicit
+//! bin widths (`Level::Rank(T)`), so the compressor runs fine bins
+//! (`bin_low`, more traffic) inside critical regimes and coarse bins
+//! (`bin_high`) outside them.
+//!
+//! All detector state lives in the wrapped [`Accordion`]; decisions are
+//! mapped at `begin_epoch` time, which keeps checkpoints canonical
+//! (Low/High on the wire) and resume bit-exact through the existing
+//! [`ControllerState`] serialization.
+
+use super::{Controller, ControllerState, Decision, EpochObs};
+use crate::compress::Level;
+use crate::coordinator::accordion::Accordion;
+
+pub struct AdaCompSchedule {
+    inner: Accordion,
+    /// bin width inside critical regimes (small = more sends)
+    pub bin_low: usize,
+    /// bin width outside critical regimes
+    pub bin_high: usize,
+}
+
+impl AdaCompSchedule {
+    pub fn new(
+        n_layers: usize,
+        eta: f32,
+        interval: usize,
+        bin_low: usize,
+        bin_high: usize,
+    ) -> AdaCompSchedule {
+        AdaCompSchedule {
+            inner: Accordion::new(n_layers, eta, interval),
+            bin_low: bin_low.max(1),
+            bin_high: bin_high.max(1),
+        }
+    }
+
+    /// Low/High → explicit bin width; explicit levels pass through
+    /// untouched (a manual `rankT` override stays a bin width of T).
+    fn map(&self, l: Level) -> Level {
+        match l {
+            Level::Low => Level::Rank(self.bin_low),
+            Level::High => Level::Rank(self.bin_high),
+            other => other,
+        }
+    }
+}
+
+impl Controller for AdaCompSchedule {
+    fn name(&self) -> String {
+        format!(
+            "adacomp-accordion(eta={}, w={}, T={}/{})",
+            self.inner.eta, self.inner.interval, self.bin_low, self.bin_high
+        )
+    }
+
+    fn begin_epoch(&mut self, epoch: usize, lr_curr: f32, lr_next: f32) -> Decision {
+        let mut d = self.inner.begin_epoch(epoch, lr_curr, lr_next);
+        for l in d.levels.iter_mut() {
+            *l = self.map(*l);
+        }
+        d
+    }
+
+    fn observe(&mut self, obs: &EpochObs) {
+        self.inner.observe(obs);
+    }
+
+    fn detection_interval(&self) -> usize {
+        self.inner.detection_interval()
+    }
+
+    fn checkpoint_state(&self) -> Option<ControllerState> {
+        self.inner.checkpoint_state()
+    }
+
+    fn restore_state(&mut self, st: &ControllerState) {
+        self.inner.restore_state(st);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(epoch: usize, norm: f32, lr: f32, lr_next: f32) -> EpochObs {
+        EpochObs {
+            epoch,
+            layer_sqnorms: vec![norm * norm],
+            layer_abs_means: vec![0.0],
+            layer_stds: vec![1.0],
+            model_sqnorm: norm * norm,
+            lr_curr: lr,
+            lr_next,
+        }
+    }
+
+    #[test]
+    fn critical_regimes_pin_fine_bins() {
+        let mut a = AdaCompSchedule::new(1, 0.5, 1, 4, 64);
+        // first window is critical -> fine bins
+        assert_eq!(a.begin_epoch(0, 0.4, 0.4).levels[0], Level::Rank(4));
+        a.observe(&obs(0, 10.0, 0.4, 0.4));
+        a.observe(&obs(1, 9.9, 0.4, 0.4)); // stable -> coarse bins
+        assert_eq!(a.begin_epoch(2, 0.4, 0.4).levels[0], Level::Rank(64));
+        // LR decay re-declares critical -> fine bins again
+        assert_eq!(a.begin_epoch(3, 0.4, 0.04).levels[0], Level::Rank(4));
+    }
+
+    #[test]
+    fn detection_interval_and_state_delegate_to_accordion() {
+        let mut a = AdaCompSchedule::new(1, 0.5, 3, 4, 64);
+        assert_eq!(a.detection_interval(), 3);
+        a.begin_epoch(0, 0.4, 0.4);
+        a.observe(&obs(0, 10.0, 0.4, 0.4));
+        let st = a.checkpoint_state().unwrap();
+        // state stays canonical Low/High: restoring into a schedule with
+        // DIFFERENT bins re-maps, instead of resurrecting stale widths
+        let mut b = AdaCompSchedule::new(1, 0.5, 3, 8, 128);
+        b.restore_state(&st);
+        let lvl = b.begin_epoch(1, 0.4, 0.4).levels[0];
+        assert!(lvl == Level::Rank(8) || lvl == Level::Rank(128), "{lvl:?}");
+    }
+}

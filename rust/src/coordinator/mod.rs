@@ -11,6 +11,7 @@
 //! decision object is that broadcast.
 
 pub mod accordion;
+pub mod adacomp;
 pub mod adaqs;
 pub mod schedule;
 pub mod smith;

@@ -12,6 +12,7 @@ pub mod hetero;
 pub mod overlap;
 pub mod tables;
 pub mod transport;
+pub mod utility;
 
 use crate::models::Registry;
 use crate::metrics::RunLog;
@@ -25,7 +26,7 @@ pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "fig1", "fig2", "fig3", "fig4",
     "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig18", "ablate-eta",
     "ablate-interval", "ablate-selector", "ablate-network", "ablate-overlap",
-    "ablate-transport", "ablate-bucket", "ablate-hetero",
+    "ablate-transport", "ablate-bucket", "ablate-hetero", "utility",
 ];
 
 /// Shared state for one experiment invocation: the artifact registry, a
@@ -151,6 +152,7 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
         "ablate-transport" => transport::ablate_transport(&mut h),
         "ablate-bucket" => bucket::ablate_bucket(&mut h),
         "ablate-hetero" => hetero::ablate_hetero(&mut h),
+        "utility" => utility::utility(&mut h),
         _ => bail!("unknown experiment '{id}' (have: {})", EXPERIMENTS.join(" ")),
     }
 }

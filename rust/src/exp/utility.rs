@@ -1,0 +1,91 @@
+//! `utility`: honest end-to-end utility accounting — does compression
+//! still pay once its OWN compute is on the clock?
+//!
+//! Classic gradient-compression evaluations charge the wire and pretend
+//! encode/decode are free, which flatters every method at exactly the
+//! operating points where compression matters least (fast networks).
+//! This sweep runs bandwidth {10, 100, 1000} Mbps x compressor x
+//! {free, charged} codec (`time.charge_codec`), so each cell answers:
+//! how much of the advertised speedup survives paying for the
+//! compressor's flops at the modeled device rate?
+//!
+//! Reading: break-even is where a method's charged-codec sim-time
+//! crosses the uncompressed baseline's (`vs none` column hits 1.0x).
+//! On slow links the wire dominates and charging the codec barely moves
+//! the ratio; at 1000 Mbps the collective is already cheap and an
+//! expensive encoder (PowerSGD's Gram matrices, TopK's selection scan)
+//! can burn its whole win — the utility of compression is a property of
+//! the NETWORK, not of the method.  Every cell is deterministic
+//! sim-time, so diffs across PRs are pure signal.
+
+use super::Harness;
+use crate::compress::Level;
+use crate::train::config::{ControllerCfg, MethodCfg};
+use anyhow::Result;
+
+/// The compressor suite this sweep and `benches/utility.rs` share:
+/// `none` is the break-even baseline, then the five classic codecs plus
+/// AdaComp (Chen et al. 2018) as the sixth compressed method.
+pub fn method_suite() -> Vec<(&'static str, MethodCfg)> {
+    vec![
+        ("none", MethodCfg::None),
+        ("powersgd", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+        ("topk", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.10 }),
+        ("randomk", MethodCfg::RandomK { frac_low: 0.99, frac_high: 0.10 }),
+        ("qsgd", MethodCfg::Qsgd { bits_low: 8, bits_high: 2 }),
+        ("signsgd", MethodCfg::SignSgd),
+        ("adacomp", MethodCfg::AdaComp { bin_low: 64, bin_high: 512 }),
+    ]
+}
+
+/// The bandwidth axis of the break-even curve.
+pub const BANDWIDTHS_MBPS: &[f64] = &[10.0, 100.0, 1000.0];
+
+pub fn utility(h: &mut Harness) -> Result<()> {
+    println!("\n=== Utility: encode/decode on the clock, break-even curve (mlp_deep_c10) ===");
+    println!(
+        "| {:>9} | {:<9} | {:>10} | {:>10} | {:>8} | {:>13} |",
+        "bandwidth", "method", "free s", "charged s", "codec %", "vs none (chg)"
+    );
+    for &mbps in BANDWIDTHS_MBPS {
+        let mut none_charged = f64::NAN;
+        for (name, method) in method_suite() {
+            let mut secs = [0.0f64; 2]; // [free, charged]
+            for (i, charged) in [false, true].into_iter().enumerate() {
+                let tag = if charged { "charged" } else { "free" };
+                let label = format!("utility-{mbps:.0}mbps-{name}-{tag}");
+                let cfg = h.cfg(&label, |c| {
+                    c.model = "mlp_deep_c10".into();
+                    c.method = method.clone();
+                    c.controller = ControllerCfg::Static(Level::High);
+                    c.bandwidth_mbps = mbps;
+                    c.charge_codec = charged;
+                    c.epochs = 3;
+                    c.warmup_epochs = 0;
+                    c.decay_epochs = vec![2];
+                    c.test_size = 64;
+                })?;
+                let log = h.run(&cfg)?;
+                secs[i] = log.total_secs();
+            }
+            // the tentpole contract, checked live on every sweep cell
+            assert!(secs[1] >= secs[0], "charged codec undercut free: {secs:?}");
+            if name == "none" {
+                none_charged = secs[1];
+            }
+            let overhead = 100.0 * (secs[1] - secs[0]) / secs[0].max(1e-12);
+            let ratio = none_charged / secs[1].max(1e-12);
+            println!(
+                "| {:>7.0}Mb | {:<9} | {:>9.3}s | {:>9.3}s | {:>7.2}% | {:>12.2}x |",
+                mbps, name, secs[0], secs[1], overhead, ratio
+            );
+        }
+    }
+    println!(
+        "reading: `codec %` is the sim-time the method's own flops add once encode serializes \
+         before the collective and decode before the optimizer; `vs none` is the speedup that \
+         SURVIVES that charge.  Methods whose ratio falls below 1.0x at a bandwidth have \
+         crossed break-even there: cheaper to send raw gradients than to compress them."
+    );
+    Ok(())
+}

@@ -6,11 +6,12 @@ use crate::cluster::topology::{LinkSpec, Topology};
 use crate::collectives::{DenseReplicated, ShardedOwnership, Transport};
 use crate::compress::{DistCompressor, Level, NoCompression};
 use crate::compress::{
-    powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd, topk::TopK,
+    adacomp::AdaComp, powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd,
+    topk::TopK,
 };
 use crate::coordinator::{
-    accordion::Accordion, adaqs::AdaQs, schedule::ManualSchedule, schedule::Rule,
-    smith::SmithSchedule, Controller, StaticLevel,
+    accordion::Accordion, adacomp::AdaCompSchedule, adaqs::AdaQs, schedule::ManualSchedule,
+    schedule::Rule, smith::SmithSchedule, Controller, StaticLevel,
 };
 use crate::util::toml::Table;
 use anyhow::{bail, Result};
@@ -24,6 +25,9 @@ pub enum MethodCfg {
     Qsgd { bits_low: u32, bits_high: u32 },
     /// 1-bit sign compression (no level knob; ablation baseline)
     SignSgd,
+    /// AdaComp residual-accumulation sparsification (Chen et al. 2018):
+    /// the bin width T is the compression knob (smaller bins send more)
+    AdaComp { bin_low: usize, bin_high: usize },
 }
 
 /// Which aggregation transport the trainer runs (`collectives::Transport`).
@@ -145,6 +149,10 @@ pub enum ControllerCfg {
     ManualBatch { small: Vec<(usize, usize)>, mult: usize },
     AdaQs { rank_start: usize, rank_max: usize, drop: f32, interval: usize },
     Smith { factor: usize, cap: usize },
+    /// Accordion's regime detector driving AdaComp's bin width: critical
+    /// regimes pin `Rank(bin_low)` (fine bins, more traffic), the rest
+    /// run `Rank(bin_high)` (coarse bins)
+    AdaCompSchedule { eta: f32, interval: usize, bin_low: usize, bin_high: usize },
 }
 
 #[derive(Clone, Debug)]
@@ -206,6 +214,16 @@ pub struct TrainConfig {
     pub time_model: TimeModelCfg,
     /// modeled device throughput for the flops cost model, GFLOP/s
     pub gflops: f64,
+    /// charge compressor encode/decode compute on the simulated clock
+    /// (`time.charge_codec`): encode serializes before each layer's
+    /// collective issues, decode before the optimizer.  Off (default)
+    /// keeps the clock bit-identical to the wire-only charge.
+    pub charge_codec: bool,
+    /// codec throughput override, GFLOP/s (`time.codec_gflops`): 0.0
+    /// (default) inherits the compute model's rate
+    /// ([`CostModel::codec_secs_per_flop`](crate::cluster::simtime::CostModel)),
+    /// so measured-mode calibration covers the codec too
+    pub codec_gflops: f64,
 }
 
 impl Default for TrainConfig {
@@ -245,6 +263,8 @@ impl Default for TrainConfig {
             faults: None,
             time_model: TimeModelCfg::Flops,
             gflops: crate::cluster::simtime::DEFAULT_GFLOPS,
+            charge_codec: false,
+            codec_gflops: 0.0,
         }
     }
 }
@@ -282,6 +302,10 @@ impl TrainConfig {
                 bits_high: t.usize_or("method.bits_high", 2) as u32,
             },
             "signsgd" => MethodCfg::SignSgd,
+            "adacomp" => MethodCfg::AdaComp {
+                bin_low: t.usize_or("method.bin_low", 64),
+                bin_high: t.usize_or("method.bin_high", 512),
+            },
             other => bail!("unknown method '{other}'"),
         };
         let controller = match t.str_or("controller.kind", "accordion").as_str() {
@@ -313,6 +337,12 @@ impl TrainConfig {
             "smith" => ControllerCfg::Smith {
                 factor: t.usize_or("controller.factor", 5),
                 cap: t.usize_or("controller.cap", 32),
+            },
+            "adacomp" => ControllerCfg::AdaCompSchedule {
+                eta: t.f64_or("controller.eta", 0.5) as f32,
+                interval: t.usize_or("controller.interval", 2),
+                bin_low: t.usize_or("controller.bin_low", 64),
+                bin_high: t.usize_or("controller.bin_high", 512),
             },
             other => bail!("unknown controller '{other}'"),
         };
@@ -381,6 +411,8 @@ impl TrainConfig {
                 other => bail!("unknown time.model '{other}' (flops|measured)"),
             },
             gflops: t.f64_or("time.gflops", d.gflops),
+            charge_codec: t.bool_or("time.charge_codec", d.charge_codec),
+            codec_gflops: t.f64_or("time.codec_gflops", d.codec_gflops),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -438,6 +470,9 @@ impl TrainConfig {
                 Box::new(Qsgd::new(self.workers, bits_low, bits_high, self.seed))
             }
             MethodCfg::SignSgd => Box::new(SignSgd::new(self.workers)),
+            MethodCfg::AdaComp { bin_low, bin_high } => {
+                Box::new(AdaComp::new(self.workers, bin_low, bin_high))
+            }
         }
     }
 
@@ -485,6 +520,9 @@ impl TrainConfig {
                 factor,
                 cap,
             )),
+            ControllerCfg::AdaCompSchedule { eta, interval, bin_low, bin_high } => {
+                Box::new(AdaCompSchedule::new(n_layers, eta, interval, bin_low, bin_high))
+            }
         }
     }
 }
@@ -656,6 +694,45 @@ drop_prob = 0.05
         assert_eq!(topo.node_of(2), 1);
         assert!(TopologyCfg::parse("2:1000:5").is_err());
         assert!(TopologyCfg::parse("0:1000:5:100:50").is_err());
+    }
+
+    #[test]
+    fn codec_charging_keys_parse_with_off_defaults() {
+        let d = TrainConfig::default();
+        assert!(!d.charge_codec);
+        assert_eq!(d.codec_gflops, 0.0);
+        let t = Table::parse("[time]\ncharge_codec = true\ncodec_gflops = 1.5").unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert!(c.charge_codec);
+        assert_eq!(c.codec_gflops, 1.5);
+        // the CLI spelling CI's determinism lane uses
+        let t2 = Table::parse("time.charge_codec = true").unwrap();
+        assert!(TrainConfig::from_table(&t2).unwrap().charge_codec);
+    }
+
+    #[test]
+    fn adacomp_method_and_controller_parse_and_build() {
+        let t = Table::parse(
+            r#"
+[method]
+kind = "adacomp"
+bin_low = 32
+bin_high = 256
+[controller]
+kind = "adacomp"
+bin_low = 32
+bin_high = 256
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert!(matches!(c.method, MethodCfg::AdaComp { bin_low: 32, bin_high: 256 }));
+        assert!(c.build_compressor().name().starts_with("adacomp"));
+        assert!(c.build_controller(3).name().starts_with("adacomp"));
+        // defaults
+        let t2 = Table::parse("method.kind = \"adacomp\"").unwrap();
+        let c2 = TrainConfig::from_table(&t2).unwrap();
+        assert!(matches!(c2.method, MethodCfg::AdaComp { bin_low: 64, bin_high: 512 }));
     }
 
     #[test]

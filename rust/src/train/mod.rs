@@ -259,6 +259,13 @@ pub struct Trainer<'a> {
     comm_before: Vec<f64>,
     rebuild_before: Vec<f64>,
     step_comm: Vec<f64>,
+    /// codec-channel ledger snapshots and this step's per-layer encode
+    /// seconds — only read when `time.charge_codec` is on, but
+    /// preallocated unconditionally (the zero-allocation contract holds
+    /// in both modes)
+    enc_before: Vec<f64>,
+    dec_before: Vec<f64>,
+    step_enc: Vec<f64>,
     task_errs: Vec<Option<anyhow::Error>>,
     eval_scratch: EvalScratch,
     // ---- run / epoch state ----
@@ -324,7 +331,7 @@ impl<'a> Trainer<'a> {
         // post-aggregation shard ownership (stateless, shared across layers)
         let transport = cfg.build_transport();
         // per-layer communication ledger shards, folded in layer order
-        let comms: Vec<Comm> = (0..n_layers).map(|_| Comm::shared(net.clone())).collect();
+        let mut comms: Vec<Comm> = (0..n_layers).map(|_| Comm::shared(net.clone())).collect();
         let member_comm = Comm::shared(net.clone());
         // the simulated compute clock: flops-derived (deterministic across
         // processes) or measured once per model per process at threads=1
@@ -342,6 +349,21 @@ impl<'a> Trainer<'a> {
                 Ok(simtime::CostModel::from_measured(&meta, secs_full))
             })?,
         };
+        // install the codec-channel rate on the per-layer ledgers: the
+        // explicit override (`time.codec_gflops`) or the compute model's
+        // own calibrated rate.  Left at 0.0 when charging is off, so
+        // every `charge_codec_flops` stays a no-op and the clock is
+        // bit-identical to the wire-only charge.
+        if cfg.charge_codec {
+            let rate = if cfg.codec_gflops > 0.0 {
+                1.0 / (cfg.codec_gflops * 1e9)
+            } else {
+                cost.codec_secs_per_flop
+            };
+            for c in comms.iter_mut() {
+                c.codec_rate = rate;
+            }
+        }
         let bucketizer =
             if cfg.bucket_kb > 0 { Some(Bucketizer::new(cfg.bucket_kb)) } else { None };
 
@@ -430,6 +452,9 @@ impl<'a> Trainer<'a> {
             comm_before: vec![0.0; n_layers],
             rebuild_before: vec![0.0; n_layers],
             step_comm: vec![0.0; n_layers],
+            enc_before: vec![0.0; n_layers],
+            dec_before: vec![0.0; n_layers],
+            step_enc: vec![0.0; n_layers],
             task_errs: (0..threads).map(|_| None).collect(),
             eval_scratch: EvalScratch::with_intra(intra),
             log,
@@ -576,6 +601,7 @@ impl<'a> Trainer<'a> {
         let batch_size = self.meta.batch;
         let n_layers = self.n_layers;
         let overlap = self.cfg.overlap;
+        let charge_codec = self.cfg.charge_codec;
         let slow = self.slow_max;
         let n_active = self.active.len();
         let Trainer {
@@ -606,6 +632,9 @@ impl<'a> Trainer<'a> {
             comm_before,
             rebuild_before,
             step_comm,
+            enc_before,
+            dec_before,
+            step_enc,
             task_errs,
             sampler,
             decision,
@@ -721,6 +750,12 @@ impl<'a> Trainer<'a> {
                 comm_before[l] = c.ledger.secs;
                 rebuild_before[l] = c.ledger.rebuild_secs;
             }
+            // codec charges never enter the event stream, so their
+            // snapshots are needed in BOTH bucketed and per-layer modes
+            if charge_codec {
+                enc_before[l] = c.ledger.encode_secs;
+                dec_before[l] = c.ledger.decode_secs;
+            }
             c.events.clear();
         }
 
@@ -768,16 +803,32 @@ impl<'a> Trainer<'a> {
         // collectives through the overlap event scheduler.  The
         // transport's parameter-rebuild all-gathers are split out: they
         // run after the optimizer and never overlap backprop.
+        // codec-channel deltas: per-layer encode (serializes before the
+        // layer's collective) and the step's total decode (serializes
+        // before the optimizer).  CodecCharge::NONE when charging is off
+        // keeps the schedulers' f64 op sequence exactly the legacy one.
+        let codec = if charge_codec {
+            let mut dec_total = 0.0f64;
+            for (l, c) in comms.iter().enumerate() {
+                step_enc[l] = c.ledger.encode_secs - enc_before[l];
+                dec_total += c.ledger.decode_secs - dec_before[l];
+            }
+            simtime::CodecCharge { encode_secs: &step_enc[..], decode_secs: dec_total }
+        } else {
+            simtime::CodecCharge::NONE
+        };
         let t = match bucketizer.as_mut() {
             // bucketed: coalesce this step's event streams and charge at
             // bucket granularity (one α per bucket)
             Some(bz) => {
                 let (charges, rebuild) = bz.plan(comms, net.as_ref());
-                simtime::step_times_bucketed_slowed(cost, batch_mult, charges, rebuild, slow)
+                simtime::step_times_bucketed_coded_slowed(
+                    cost, batch_mult, charges, rebuild, slow, codec,
+                )
             }
             // legacy per-layer charge: bit-identical to the
             // pre-bucketing trainer (same ledger-delta arithmetic;
-            // slow = 1.0 delegates to the exact old path)
+            // slow = 1.0 / NONE delegates to the exact old path)
             None => {
                 let mut step_rebuild = 0.0f64;
                 for (l, c) in comms.iter().enumerate() {
@@ -785,7 +836,9 @@ impl<'a> Trainer<'a> {
                     step_comm[l] = (c.ledger.secs - comm_before[l]) - rebuild;
                     step_rebuild += rebuild;
                 }
-                simtime::step_times_slowed(cost, batch_mult, step_comm, step_rebuild, slow)
+                simtime::step_times_coded_slowed(
+                    cost, batch_mult, step_comm, step_rebuild, slow, codec,
+                )
             }
         };
         clock.compute_secs += t.compute;

@@ -19,9 +19,10 @@
 //!    elementwise sweeps dispatch on it, bitwise identical at any width
 //!    (DESIGN.md §6).  It rides in the workspace because the ownership
 //!    story is the same as the buffers': one component, one coordinator.
-//!  * [`Workspace`] — one of each, the bundle threaded through
-//!    [`DistCompressor::round_into`](crate::compress::DistCompressor::round_into),
-//!    the transports, and the sim backend's forward/backward buffers.
+//!  * [`Workspace`] — one of each, the bundle the transports hand to
+//!    [`DistCompressor::round`](crate::compress::DistCompressor::round)
+//!    inside the [`RoundCtx`](crate::compress::RoundCtx), and the sim
+//!    backend's forward/backward buffers.
 //!
 //! Ownership convention: the trainer keeps one `Workspace` per layer
 //! (compressor rounds are fanned out across threads by layer, so

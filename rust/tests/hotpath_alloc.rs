@@ -84,6 +84,8 @@ fn steady_state_steps_allocate_nothing() {
         ("randomk", MethodCfg::RandomK { frac_low: 0.99, frac_high: 0.25 }),
         ("qsgd", MethodCfg::Qsgd { bits_low: 8, bits_high: 4 }),
         ("signsgd", MethodCfg::SignSgd),
+        // EF residual state is first-touch; the bin scans are in-place
+        ("adacomp", MethodCfg::AdaComp { bin_low: 8, bin_high: 32 }),
     ];
     for threads in [1usize, 4] {
         for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
@@ -103,6 +105,25 @@ fn steady_state_steps_allocate_nothing() {
         let c = cfg(MethodCfg::None, TransportCfg::Sharded, threads, 64);
         let n = steady_state_allocs(&c);
         assert_eq!(n, 0, "bucketed steady-state step allocated {n} times (threads={threads})");
+    }
+    // charging the codec (utility accounting) runs the coded schedulers
+    // against preallocated snapshot buffers — still zero-alloc
+    for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+        for bucket_kb in [0usize, 64] {
+            let mut c = cfg(
+                MethodCfg::AdaComp { bin_low: 8, bin_high: 32 },
+                transport,
+                4,
+                bucket_kb,
+            );
+            c.charge_codec = true;
+            let n = steady_state_allocs(&c);
+            assert_eq!(
+                n, 0,
+                "charged-codec steady-state step allocated {n} times \
+                 (transport={transport:?}, bucket_kb={bucket_kb})"
+            );
+        }
     }
     // the intra-op kernel engine: pooled GEMMs / fixed-split reductions
     // draw their partials from pool-owned buffers that converge during

@@ -4,11 +4,11 @@
 //! tests.
 
 use accordion::cluster::network::NetworkModel;
-use accordion::cluster::simtime::{step_times, CostModel};
+use accordion::cluster::simtime::{step_times, step_times_coded_slowed, CodecCharge, CostModel};
 use accordion::collectives::{mean_into, ring_allreduce_mean, Comm};
 use accordion::compress::{
-    powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd, topk::TopK,
-    DistCompressor, Level, NoCompression,
+    adacomp::AdaComp, powersgd::PowerSgd, qsgd::Qsgd, randomk::RandomK, signsgd::SignSgd,
+    testutil, topk::TopK, DistCompressor, Level, NoCompression,
 };
 use accordion::coordinator::{accordion::Accordion, Controller, EpochObs};
 use accordion::util::{prop, rng::Rng};
@@ -32,6 +32,7 @@ fn prop_compressed_sgd_converges_on_quadratic() {
             Box::new(PowerSgd::new(workers, 2, 1, 7)),
             Box::new(TopK::new(workers, 0.5, 0.25)),
             Box::new(RandomK::new(workers, 0.5, 0.25, 9)),
+            Box::new(AdaComp::new(workers, 4, 16)),
         ];
         for mut m in methods {
             let mut w = vec![0.0f32; n * k];
@@ -49,7 +50,7 @@ fn prop_compressed_sgd_converges_on_quadratic() {
                     .collect();
                 let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
                 let level = if step % 2 == 0 { Level::Low } else { Level::High };
-                m.round(0, &views, &[n, k], level, &mut c, &mut out);
+                testutil::round(&mut *m, 0, &views, &[n, k], level, &mut c, &mut out);
                 for (wi, g) in w.iter_mut().zip(&out) {
                     *wi -= 0.2 * g;
                 }
@@ -77,18 +78,20 @@ fn prop_round_is_deterministic_across_fresh_instances() {
         let (n, k) = (4 + rng.below(8), 2 + rng.below(6));
         let grads: Vec<Vec<f32>> = (0..workers).map(|_| prop::vecf(rng, n * k, 1.0)).collect();
         let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        for mk in 0..3usize {
+        for mk in 0..4usize {
             let mut make = || -> Box<dyn DistCompressor> {
                 match mk {
                     0 => Box::new(PowerSgd::new(workers, 2, 1, 5)),
                     1 => Box::new(TopK::new(workers, 0.9, 0.3)),
-                    _ => Box::new(RandomK::new(workers, 0.9, 0.3, 5)),
+                    2 => Box::new(RandomK::new(workers, 0.9, 0.3, 5)),
+                    _ => Box::new(AdaComp::new(workers, 2, 8)),
                 }
             };
             let mut out1 = vec![0.0f32; n * k];
             let mut out2 = vec![0.0f32; n * k];
-            make().round(0, &views, &[n, k], Level::Low, &mut comm(workers), &mut out1);
-            make().round(0, &views, &[n, k], Level::Low, &mut comm(workers), &mut out2);
+            let (mut c1, mut c2) = (comm(workers), comm(workers));
+            testutil::round(&mut *make(), 0, &views, &[n, k], Level::Low, &mut c1, &mut out1);
+            testutil::round(&mut *make(), 0, &views, &[n, k], Level::Low, &mut c2, &mut out2);
             assert_eq!(out1, out2, "method {mk} non-deterministic");
         }
     });
@@ -178,6 +181,7 @@ fn prop_overlap_never_slower_than_serialized() {
             fwd_secs: rng.uniform() as f64 * 1e-3,
             bwd_secs: (0..layers).map(|_| rng.uniform() as f64 * 1e-3).collect(),
             opt_secs: rng.uniform() as f64 * 1e-4,
+            codec_secs_per_flop: 0.0,
         };
         let mult = 1 + rng.below(4);
         let workers = 2 + rng.below(6);
@@ -298,7 +302,7 @@ fn prop_qsgd_round_unbiased() {
         let mut qs = Qsgd::new(1, 2, 2, 1000 + t);
         let mut c = comm(1);
         let mut out = vec![0.0f32; x.len()];
-        qs.round(0, &[x.as_slice()], &[x.len()], Level::Low, &mut c, &mut out);
+        testutil::round(&mut qs, 0, &[x.as_slice()], &[x.len()], Level::Low, &mut c, &mut out);
         for (a, v) in acc.iter_mut().zip(&out) {
             *a += *v as f64;
         }
@@ -312,8 +316,49 @@ fn prop_qsgd_round_unbiased() {
     }
 }
 
+/// For ANY cost/comm vectors and any per-layer encode + decode charge,
+/// the coded schedule never undercuts the free-codec schedule, and the
+/// two are bit-identical exactly when every codec term is zero — the
+/// monotonicity `tests/utility.rs` and the break-even curve rest on.
+#[test]
+fn prop_charged_codec_never_undercuts_free() {
+    prop::check("codec-monotone", 40, |rng| {
+        let layers = 1 + rng.below(9);
+        let cost = CostModel {
+            fwd_secs: rng.uniform() as f64 * 1e-3,
+            bwd_secs: (0..layers).map(|_| rng.uniform() as f64 * 1e-3).collect(),
+            opt_secs: rng.uniform() as f64 * 1e-4,
+            codec_secs_per_flop: 0.0,
+        };
+        let comm: Vec<f64> = (0..layers).map(|_| rng.uniform() as f64 * 1e-2).collect();
+        let zero_codec = rng.below(4) == 0;
+        let enc: Vec<f64> = (0..layers)
+            .map(|_| if zero_codec { 0.0 } else { rng.uniform() as f64 * 1e-3 })
+            .collect();
+        let dec = if zero_codec { 0.0 } else { rng.uniform() as f64 * 1e-3 };
+        let mult = 1 + rng.below(3);
+        let codec = CodecCharge { encode_secs: &enc, decode_secs: dec };
+        let free = step_times(&cost, mult, &comm, 0.0);
+        let t = step_times_coded_slowed(&cost, mult, &comm, 0.0, 1.0, codec);
+        assert!(t.overlapped >= free.overlapped, "{t:?} vs {free:?}");
+        assert!(t.serialized >= free.serialized, "{t:?} vs {free:?}");
+        assert!(t.overlapped <= t.serialized * (1.0 + 1e-12), "{t:?}");
+        if zero_codec {
+            assert_eq!(t.overlapped.to_bits(), free.overlapped.to_bits());
+            assert_eq!(t.serialized.to_bits(), free.serialized.to_bits());
+            assert_eq!(t.codec.to_bits(), 0.0f64.to_bits());
+        } else {
+            assert!(t.serialized > free.serialized, "{t:?} vs {free:?}");
+            assert!(t.codec > 0.0);
+        }
+    });
+}
+
 /// `payload_floats` is the planning contract: for one round of every
 /// compressor it must equal the floats the ledger actually charged.
+/// AdaComp is deliberately absent: its wire volume is data-dependent
+/// (`payload_floats` is the worst-case planning estimate; the ledger is
+/// authoritative), pinned by its own unit tests instead.
 #[test]
 fn prop_payload_floats_matches_ledger_charge() {
     let workers = 3;
@@ -335,7 +380,7 @@ fn prop_payload_floats_matches_ledger_charge() {
             let mut c = comm(workers);
             let mut out = vec![0.0f32; numel];
             let before = c.ledger.floats;
-            m.round(0, &views, &shape, level, &mut c, &mut out);
+            testutil::round(&mut *m, 0, &views, &shape, level, &mut c, &mut out);
             let charged = c.ledger.floats - before;
             assert_eq!(
                 charged as usize,
@@ -415,7 +460,7 @@ fn prop_ef_relative_error_shrinks() {
             for (a, b) in truth.iter_mut().zip(&t) {
                 *a += b;
             }
-            tk.round(0, &views, &[n, k], Level::High, &mut c, &mut out);
+            testutil::round(&mut tk, 0, &views, &[n, k], Level::High, &mut c, &mut out);
             for (a, b) in applied.iter_mut().zip(&out) {
                 *a += b;
             }

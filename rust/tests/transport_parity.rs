@@ -105,6 +105,7 @@ fn sharded_runs_are_thread_invariant_across_methods() {
         ("topk", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 }),
         ("randomk", MethodCfg::RandomK { frac_low: 0.99, frac_high: 0.25 }),
         ("qsgd", MethodCfg::Qsgd { bits_low: 8, bits_high: 4 }),
+        ("adacomp", MethodCfg::AdaComp { bin_low: 16, bin_high: 64 }),
     ];
     for (mname, method) in methods {
         let (slog, sparams) = train::run_full(
@@ -214,6 +215,61 @@ fn sharded_ledger_floats_match_the_data_sent_convention() {
         assert_eq!(dcomm.ledger.floats, agg_payload, "{name}: dense Data-Sent");
         assert_eq!(dcomm.ledger.rebuild_secs, 0.0);
     }
+}
+
+/// Regression pin for the gather-then-shard fallback's shard-extraction
+/// charge — the pass the old clock never billed.  On the codec channel
+/// at `codec_rate = 1` (one second per flop, so the pins are integers):
+/// a fallback round (TopK) pays its decode flops PLUS one pass over all
+/// `numel` floats; a genuine reduce-scatter round (QSGD) pays exactly
+/// its decode flops; the zero-flop baseline stays exactly free.  And at
+/// the default rate 0 the whole channel vanishes — the wire ledger and
+/// clock of a charged run are bit-identical to the free run's.
+#[test]
+fn fallback_shard_extraction_is_charged_on_the_codec_channel() {
+    let workers = 4;
+    let shape = [6usize, 8];
+    let numel = 48usize;
+    let mut rng = accordion::util::rng::Rng::new(0xFA11);
+    let grads: Vec<Vec<f32>> = (0..workers)
+        .map(|_| (0..numel).map(|_| rng.normal()).collect())
+        .collect();
+    let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let transport = ShardedOwnership::new(workers);
+    let mut ws = Workspace::new();
+    let mut out = vec![0.0f32; numel];
+
+    let run = |comp: &mut dyn DistCompressor, rate: f64, out: &mut [f32], ws: &mut Workspace| {
+        let mut comm = Comm::new(NetworkModel::new(workers, 100.0, 50.0));
+        comm.codec_rate = rate;
+        transport.aggregate_layer(Some(comp), 0, &views, &shape, Level::High, &mut comm, out, ws);
+        comm
+    };
+
+    // TopK 25% (k = 12): fallback — encode 4n + 2k = 216, decode
+    // k + numel = 12 + 48 = 60 with the extraction pass folded in
+    let charged = run(&mut TopK::new(workers, 0.99, 0.25), 1.0, &mut out, &mut ws);
+    assert_eq!(charged.ledger.encode_secs, 216.0);
+    assert_eq!(charged.ledger.decode_secs, 60.0, "fallback must bill the shard extraction");
+
+    // QSGD 4-bit: genuine reduce-scatter — encode 8n = 384, decode
+    // 2n = 96, and NO extraction surcharge
+    let q = run(&mut Qsgd::new(workers, 8, 4, 11), 1.0, &mut out, &mut ws);
+    assert_eq!(q.ledger.encode_secs, 384.0);
+    assert_eq!(q.ledger.decode_secs, 96.0, "genuine shards owe no extraction pass");
+
+    // the zero-flop baseline is free even at a nonzero rate
+    let nc = run(&mut NoCompression, 1.0, &mut out, &mut ws);
+    assert_eq!(nc.ledger.encode_secs, 0.0);
+    assert_eq!(nc.ledger.decode_secs, 0.0);
+
+    // rate 0 (the default): the codec channel is silent and the wire
+    // side is bit-identical to the charged run's
+    let free = run(&mut TopK::new(workers, 0.99, 0.25), 0.0, &mut out, &mut ws);
+    assert_eq!(free.ledger.encode_secs, 0.0);
+    assert_eq!(free.ledger.decode_secs, 0.0);
+    assert_eq!(free.ledger.floats, charged.ledger.floats);
+    assert_eq!(free.ledger.secs.to_bits(), charged.ledger.secs.to_bits());
 }
 
 /// Rebuild a fresh compressor matching `name` (the ledger test needs an

@@ -1,0 +1,152 @@
+//! Utility-accounting contract suite (the tentpole's end-to-end pins):
+//!
+//!  * **dominance**: with `time.charge_codec` on, every epoch's sim
+//!    seconds are ≥ the free-encode twin's, with bitwise EQUALITY
+//!    exactly when the compressor's codec flops are zero (the `none`
+//!    baseline) and STRICT inequality for every real codec — on both
+//!    transports (the sharded fallback adds its shard-extraction pass);
+//!  * the codec channel never touches the trajectory or the wire: loss,
+//!    accuracy, and the floats ledger are identical in both columns;
+//!  * **determinism**: the charged-codec clock is byte-identical across
+//!    `--threads` and `--intra-threads` (the CSV minus the wall-clock
+//!    column), and must DIFFER from the free-encode CSV — what CI's
+//!    timing-determinism lane diffs;
+//!  * charged codec + per-link topology + seeded faults replay
+//!    bit-for-bit, and AdaComp's error-feedback state survives fault
+//!    drops (the trainer resets it on membership changes).
+//!
+//! Sim backend only: no artifacts, no PJRT.
+
+use accordion::cluster::faults::FaultCfg;
+use accordion::compress::Level;
+use accordion::exp::hetero::two_node_topology;
+use accordion::exp::utility::method_suite;
+use accordion::metrics::RunLog;
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, MethodCfg, TrainConfig, TransportCfg}};
+
+fn tiny(label: &str, method: MethodCfg, transport: TransportCfg, charged: bool) -> TrainConfig {
+    TrainConfig {
+        label: label.into(),
+        model: "mlp_deep_c10".into(),
+        workers: 4,
+        epochs: 2,
+        train_size: 256,
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: vec![1],
+        method,
+        controller: ControllerCfg::Static(Level::High),
+        transport,
+        charge_codec: charged,
+        ..TrainConfig::default()
+    }
+}
+
+/// The CSV minus its wall-clock column (the only nondeterministic
+/// field) — exactly what CI's determinism lane compares with `cut`.
+fn det_csv(log: &RunLog) -> String {
+    log.to_csv()
+        .lines()
+        .map(|l| l.rsplit_once(',').map(|(a, _)| a).unwrap_or(l))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn charged_codec_dominates_free_and_is_exact_only_at_zero_flops() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+        for (name, method) in method_suite() {
+            let f_cfg = tiny(&format!("ut/{name}/free"), method.clone(), transport, false);
+            let c_cfg = tiny(&format!("ut/{name}/chg"), method.clone(), transport, true);
+            let free = train::run(&f_cfg, &reg, &rt).unwrap();
+            let charged = train::run(&c_cfg, &reg, &rt).unwrap();
+            assert_eq!(free.epochs.len(), charged.epochs.len());
+            for (ea, eb) in free.epochs.iter().zip(&charged.epochs) {
+                // the codec channel never touches training or the wire
+                assert_eq!(ea.train_loss, eb.train_loss, "{name}/{transport:?}");
+                assert_eq!(ea.test_acc, eb.test_acc, "{name}/{transport:?}");
+                assert_eq!(ea.grad_norm, eb.grad_norm, "{name}/{transport:?}");
+                assert_eq!(ea.floats, eb.floats, "{name}/{transport:?}: codec moved data");
+                if name == "none" {
+                    // zero codec flops: the clocks agree bit for bit
+                    // (sharded `none` reduce-scatters genuinely, so no
+                    // extraction surcharge either)
+                    assert_eq!(
+                        ea.secs.to_bits(),
+                        eb.secs.to_bits(),
+                        "{transport:?}: zero-flop codec must be exactly free"
+                    );
+                } else {
+                    assert!(
+                        eb.secs > ea.secs,
+                        "{name}/{transport:?}: a real codec must cost sim-time \
+                         ({} vs {})",
+                        eb.secs,
+                        ea.secs
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn charged_codec_csv_is_byte_identical_across_threads_and_intra() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let method = MethodCfg::AdaComp { bin_low: 16, bin_high: 64 };
+    let base = tiny("ut/threads", method, TransportCfg::Dense, true);
+    let mut t4 = base.clone();
+    t4.threads = 4;
+    let mut i2 = base.clone();
+    i2.intra_threads = 2;
+    let a = det_csv(&train::run(&base, &reg, &rt).unwrap());
+    let b = det_csv(&train::run(&t4, &reg, &rt).unwrap());
+    let c = det_csv(&train::run(&i2, &reg, &rt).unwrap());
+    assert_eq!(a, b, "charged-codec CSV diverged across --threads");
+    assert_eq!(a, c, "charged-codec CSV diverged across --intra-threads");
+    // ...and the charge is visible: the free-encode CSV must differ
+    let mut free = base.clone();
+    free.charge_codec = false;
+    let f = det_csv(&train::run(&free, &reg, &rt).unwrap());
+    assert_ne!(a, f, "charging the codec must move the sim_secs column");
+}
+
+#[test]
+fn charged_codec_replays_through_topology_and_faults() {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mk = |label: &str, charged: bool| {
+        let method = MethodCfg::AdaComp { bin_low: 16, bin_high: 64 };
+        let mut c = tiny(label, method, TransportCfg::Dense, charged);
+        c.epochs = 4;
+        c.decay_epochs = vec![3];
+        c.topology = Some(two_node_topology());
+        // drops force membership changes: the trainer must reset
+        // AdaComp's error-feedback so stale residuals never leak
+        // across worker sets, and the run must stay replayable
+        c.faults = Some(FaultCfg {
+            seed: 5,
+            slow_prob: 0.3,
+            slow_min: 1.5,
+            slow_max: 2.0,
+            drop_prob: 0.4,
+            down_epochs: 1,
+        });
+        c
+    };
+    let a = train::run(&mk("ut/fault/a", true), &reg, &rt).unwrap();
+    let b = train::run(&mk("ut/fault/b", true), &reg, &rt).unwrap();
+    assert_eq!(det_csv(&a), det_csv(&b), "charged faulty run must replay bit-for-bit");
+    let free = train::run(&mk("ut/fault/free", false), &reg, &rt).unwrap();
+    for (ea, eb) in free.epochs.iter().zip(&a.epochs) {
+        assert_eq!(ea.train_loss, eb.train_loss, "codec charge bent the trajectory");
+        assert_eq!(ea.floats, eb.floats, "codec charge moved data");
+        assert!(eb.secs >= ea.secs, "charged epoch undercut free under faults");
+    }
+    assert!(a.total_secs() > free.total_secs(), "the codec charge must be visible");
+}
