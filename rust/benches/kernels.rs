@@ -1,8 +1,15 @@
-//! Intra-op kernel bench: serial vs tiled vs tiled+parallel GEMMs, and
-//! the end-to-end single-worker step at `--intra-threads 1` vs `4`,
-//! written to `BENCH_kernels.json` per PR.
+//! Intra-op kernel bench: serial vs tiled vs tiled+parallel GEMMs,
+//! scalar-vs-SIMD A/B rows for every vectorized kernel family, and the
+//! end-to-end single-worker step at `--intra-threads 1` vs `4`, written
+//! to `BENCH_kernels.json` per PR.
 //!
-//! Three measurements:
+//! The scalar-vs-SIMD rows time each kernel under `set_force_scalar`
+//! and under auto dispatch, ASSERT the outputs are bitwise identical
+//! (the §6.1 lane contract — the load-bearing, non-flaky check), and
+//! record the speedup plus which backend auto dispatch picked (on a
+//! non-AVX2 host both rows run scalar and the speedup is ~1).
+//!
+//! Three further measurements:
 //!  * **GEMM microbench** on the heavy sim model's forward/backward
 //!    shapes (`mlp_bench`: 32 x 512 x 256): the pre-optimization
 //!    generic kernel, the cache-blocked (k-panel) serial kernel, and
@@ -21,9 +28,15 @@
 //!
 //! Run: `cargo bench --bench kernels [-- --quick-ci]`
 
+use accordion::cluster::network::NetworkModel;
+use accordion::collectives::Comm;
+use accordion::compress::{
+    randomk::RandomK, signsgd::SignSgd, topk::TopK, DistCompressor, Level, RoundCtx, Sharding,
+};
 use accordion::models::Registry;
 use accordion::runtime::Runtime;
-use accordion::tensor::linalg;
+use accordion::tensor::linalg::{self, Epilogue};
+use accordion::tensor::simd;
 use accordion::train::{
     config::{ControllerCfg, MethodCfg, TrainConfig},
     Trainer,
@@ -31,6 +44,7 @@ use accordion::train::{
 use accordion::util::json;
 use accordion::util::pool::IntraPool;
 use accordion::util::rng::Rng;
+use accordion::util::workspace::Workspace;
 use std::time::Instant;
 
 fn time_median<F: FnMut()>(iters: usize, mut f: F) -> f64 {
@@ -109,6 +123,180 @@ fn gemm_rows(n: usize, k: usize, r: usize, iters: usize) -> json::Json {
     ])
 }
 
+/// One scalar-vs-auto A/B row for a kernel that writes a single output
+/// buffer: time under forced scalar, then under auto dispatch, assert
+/// the outputs are bitwise identical, record the speedup.
+fn ab_row(
+    label: &str,
+    iters: usize,
+    out_len: usize,
+    run: &mut dyn FnMut(&mut [f32]),
+) -> json::Json {
+    let mut o_scalar = vec![0.0f32; out_len];
+    let mut o_auto = vec![0.0f32; out_len];
+    simd::set_force_scalar(true);
+    let t_scalar = time_median(iters, || {
+        run(&mut o_scalar);
+        std::hint::black_box(o_scalar[0]);
+    });
+    simd::set_force_scalar(false);
+    let t_auto = time_median(iters, || {
+        run(&mut o_auto);
+        std::hint::black_box(o_auto[0]);
+    });
+    let backend = simd::active().name();
+    for (x, y) in o_scalar.iter().zip(&o_auto) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: {backend} diverged from scalar");
+    }
+    let speedup = t_scalar / t_auto.max(1e-12);
+    println!(
+        "{label}: scalar {:.3}ms, {backend} {:.3}ms -> {speedup:.2}x (bitwise equal)",
+        t_scalar * 1e3,
+        t_auto * 1e3
+    );
+    json::obj(vec![
+        ("kernel", json::s(label)),
+        ("scalar_secs", json::num(t_scalar)),
+        ("auto_secs", json::num(t_auto)),
+        ("auto_backend", json::s(backend)),
+        ("speedup", json::num(speedup)),
+        ("bitwise_equal", json::num(1.0)),
+    ])
+}
+
+/// Scalar-vs-auto row for the fused SGD update (two mutable buffers, so
+/// it does not fit [`ab_row`]'s single-output shape).
+fn sgd_ab_row(iters: usize) -> json::Json {
+    let n = 512 * 256;
+    let mut rng = Rng::new(31);
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let mut results: Vec<Vec<f32>> = Vec::new();
+    let mut secs = [0.0f64; 2];
+    for (i, scalar) in [true, false].into_iter().enumerate() {
+        simd::set_force_scalar(scalar);
+        let mut p = p0.clone();
+        let mut v = vec![0.0f32; n];
+        secs[i] = time_median(iters, || {
+            simd::sgd_range(&mut p, &mut v, &g, 0.1, 0.9, true, 5e-4);
+            std::hint::black_box(p[0]);
+        });
+        results.push(p);
+    }
+    let backend = simd::active().name();
+    for (x, y) in results[0].iter().zip(&results[1]) {
+        assert_eq!(x.to_bits(), y.to_bits(), "sgd update diverged across backends");
+    }
+    let speedup = secs[0] / secs[1].max(1e-12);
+    println!(
+        "sgd_update: scalar {:.3}ms, {backend} {:.3}ms -> {speedup:.2}x (bitwise equal)",
+        secs[0] * 1e3,
+        secs[1] * 1e3
+    );
+    json::obj(vec![
+        ("kernel", json::s("sgd_update")),
+        ("scalar_secs", json::num(secs[0])),
+        ("auto_secs", json::num(secs[1])),
+        ("auto_backend", json::s(backend)),
+        ("speedup", json::num(speedup)),
+        ("bitwise_equal", json::num(1.0)),
+    ])
+}
+
+/// Scalar-vs-auto row for one compressor's full round (the
+/// bandwidth-bound codec kernels: sign sweep, |.| fill + threshold
+/// scan, EF sweeps).  Each backend gets a fresh compressor and runs the
+/// same number of rounds, so the EF state evolves identically and the
+/// final aggregates must agree bitwise.
+fn codec_ab_row(
+    label: &str,
+    iters: usize,
+    make: &dyn Fn() -> Box<dyn DistCompressor>,
+) -> json::Json {
+    let shape = [512usize, 256];
+    let numel: usize = shape.iter().product();
+    let mut rng = Rng::new(29);
+    let grads: Vec<Vec<f32>> =
+        (0..4).map(|_| (0..numel).map(|_| rng.normal()).collect()).collect();
+    let views: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    let mut secs = [0.0f64; 2];
+    for (i, scalar) in [true, false].into_iter().enumerate() {
+        simd::set_force_scalar(scalar);
+        let mut comp = make();
+        let mut comm = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut out = vec![0.0f32; numel];
+        let mut ws = Workspace::new();
+        secs[i] = time_median(iters, || {
+            let mut ctx = RoundCtx {
+                layer: 0,
+                grads: &views,
+                shape: &shape,
+                level: Level::High,
+                sharding: Sharding::Dense,
+                comm: &mut comm,
+                out: &mut out,
+                ws: &mut ws,
+                genuine_shard: false,
+            };
+            comp.round(&mut ctx);
+        });
+        outs.push(out);
+    }
+    let backend = simd::active().name();
+    for (x, y) in outs[0].iter().zip(&outs[1]) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label} round diverged across backends");
+    }
+    let speedup = secs[0] / secs[1].max(1e-12);
+    println!(
+        "codec {label}: scalar {:.3}ms, {backend} {:.3}ms -> {speedup:.2}x (bitwise equal)",
+        secs[0] * 1e3,
+        secs[1] * 1e3
+    );
+    json::obj(vec![
+        ("kernel", json::s(label)),
+        ("scalar_secs", json::num(secs[0])),
+        ("auto_secs", json::num(secs[1])),
+        ("auto_backend", json::s(backend)),
+        ("speedup", json::num(speedup)),
+        ("bitwise_equal", json::num(1.0)),
+    ])
+}
+
+/// All scalar-vs-SIMD A/B rows: the three GEMM families on the bench
+/// shapes, the elementwise sweeps, and the compressor kernels.
+fn simd_ab_rows(iters: usize) -> Vec<json::Json> {
+    let (n, k, r) = (32usize, 512, 256);
+    let mut rng = Rng::new(23);
+    let a: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..k * r).map(|_| rng.normal()).collect();
+    let d: Vec<f32> = (0..n * r).map(|_| rng.normal()).collect();
+    let bias: Vec<f32> = (0..r).map(|_| rng.normal()).collect();
+    let acts: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+    let x: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+    let mut pool = IntraPool::new(1);
+    let mut rows = Vec::new();
+    rows.push(ab_row(&format!("gemm_nk_kr({n}x{k}x{r})+bias_relu"), iters, n * r, &mut |o| {
+        linalg::gemm_nk_kr_fused_pooled(&a, &w, n, k, r, Epilogue::BiasRelu(&bias), o, &mut pool)
+    }));
+    rows.push(ab_row(&format!("gemm_tn_kr({n}x{k}x{r})"), iters, k * r, &mut |o| {
+        linalg::gemm_tn_kr_pooled(&a, &d, n, k, r, o, &mut pool)
+    }));
+    rows.push(ab_row(&format!("gemm_nr_rk({n}x{k}x{r})+relu_mask"), iters, n * k, &mut |o| {
+        linalg::gemm_nr_rk_fused_pooled(&d, &w, n, k, r, Epilogue::ReluMask(&acts), o, &mut pool)
+    }));
+    rows.push(ab_row("axpy(128k)", iters, n * k, &mut |o| linalg::axpy(0.37, &x, o)));
+    rows.push(ab_row("colsum(32x8192)", iters, n * k / 32, &mut |o| {
+        linalg::colsum_pooled(&x, 32, n * k / 32, o, &mut pool)
+    }));
+    rows.push(sgd_ab_row(iters));
+    rows.push(codec_ab_row("signsgd", iters, &|| Box::new(SignSgd::new(4))));
+    rows.push(codec_ab_row("topk", iters, &|| Box::new(TopK::new(4, 0.99, 0.10))));
+    rows.push(codec_ab_row("randomk", iters, &|| Box::new(RandomK::new(4, 0.99, 0.10, 7))));
+    simd::set_force_scalar(false);
+    rows
+}
+
 /// Median steady-state step seconds (and the first measured step's
 /// loss bits) of a single-worker trainer on the largest sim model.
 fn e2e_step(intra: usize, quick: bool) -> (f64, u32) {
@@ -173,6 +361,9 @@ fn main() {
     let g1 = gemm_rows(32, 512, 256, iters);
     let g2 = gemm_rows(64, 256, 128, iters);
 
+    // ---- scalar vs SIMD A/B: GEMM families, sweeps, codecs ------------
+    let ab = simd_ab_rows(iters);
+
     // ---- end-to-end single-worker step: intra 1 vs 4 ------------------
     let (s1, fp1) = e2e_step(1, quick);
     let (s4, fp4) = e2e_step(4, quick);
@@ -192,7 +383,9 @@ fn main() {
         ("bench", json::s("kernels-intra-op-engine")),
         ("quick_ci", json::num(if quick { 1.0 } else { 0.0 })),
         ("host_cores", json::num(cores as f64)),
+        ("simd_backend", json::s(simd::active().name())),
         ("gemm", json::arr(vec![g1, g2])),
+        ("scalar_vs_simd", json::arr(ab)),
         ("e2e_step_secs_intra1", json::num(s1)),
         ("e2e_step_secs_intra4", json::num(s4)),
         ("e2e_step_speedup_intra4", json::num(speedup)),

@@ -10,20 +10,18 @@
 //! the scaled signs; EF keeps the residual.
 
 use super::{CodecFlops, DistCompressor, Level, RoundCtx, Sharding};
-use crate::tensor::linalg;
-use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
+use crate::tensor::{linalg, simd, tune};
+use crate::util::pool::{IntraPool, SendPtr};
 use std::collections::HashMap;
 
-/// One contiguous run of the sign sweep: the shared serial kernel of
-/// both the gated fallback and each parallel range (so serial == pooled
-/// bitwise by construction).
+/// One contiguous run of the sign sweep: the shared kernel of both the
+/// gated fallback and each parallel range (so serial == pooled bitwise
+/// by construction).  Delegates to the lane-parallel [`simd::sign_sweep`]
+/// (element-independent; the signum semantics — ±0, canonical NaN — are
+/// pinned there).
 #[inline]
 fn sign_sweep(out: &mut [f32], a: &mut [f32], scale: f32, inv: f32) {
-    for (o, v) in out.iter_mut().zip(a.iter_mut()) {
-        let q = scale * v.signum();
-        *o += q * inv;
-        *v -= q;
-    }
+    simd::sign_sweep(out, a, scale, inv);
 }
 
 pub struct SignSgd {
@@ -62,7 +60,7 @@ impl SignSgd {
             linalg::vadd_pooled(grads[w], a, intra);
             // scale = mean |a| makes the 1-bit update unbiased in scale
             let scale = linalg::sum_abs_det(a, intra) / numel.max(1) as f32;
-            if intra.threads() <= 1 || numel < INTRA_SERIAL_CUTOFF {
+            if intra.threads() <= 1 || numel < tune::elem_cutoff() {
                 sign_sweep(out, a, scale, inv);
                 continue;
             }

@@ -16,8 +16,8 @@
 //! shard-extraction compute as the honest extra cost.
 
 use super::{CodecFlops, DistCompressor, Level, RoundCtx};
-use crate::tensor::linalg;
-use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
+use crate::tensor::{linalg, simd, tune};
+use crate::util::pool::{IntraPool, SendPtr};
 use crate::util::workspace::Workspace;
 use std::collections::HashMap;
 
@@ -67,18 +67,14 @@ fn threshold(mags: &mut Vec<f32>, a: &[f32], k: usize, intra: &mut IntraPool) ->
     // no clear(): resize is a steady-state no-op and every element is
     // overwritten below
     mags.resize(a.len(), 0.0);
-    if intra.threads() <= 1 || a.len() < INTRA_SERIAL_CUTOFF {
-        for (m, &v) in mags.iter_mut().zip(a) {
-            *m = v.abs();
-        }
+    if intra.threads() <= 1 || a.len() < tune::elem_cutoff() {
+        simd::abs_fill(a, mags);
     } else {
         let mptr = SendPtr::new(mags.as_mut_slice());
         intra.parallel_for(a.len(), &|s, l| {
             // SAFETY: disjoint in-bounds ranges (parallel_for contract).
             let mv = unsafe { mptr.slice_mut(s, l) };
-            for (m, &v) in mv.iter_mut().zip(&a[s..s + l]) {
-                *m = v.abs();
-            }
+            simd::abs_fill(&a[s..s + l], mv);
         });
     }
     let idx = mags.len() - k;

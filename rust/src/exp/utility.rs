@@ -20,7 +20,7 @@
 
 use super::Harness;
 use crate::compress::Level;
-use crate::train::config::{ControllerCfg, MethodCfg};
+use crate::train::config::{ControllerCfg, MethodCfg, TimeModelCfg};
 use anyhow::Result;
 
 /// The compressor suite this sweep and `benches/utility.rs` share:
@@ -44,15 +44,26 @@ pub const BANDWIDTHS_MBPS: &[f64] = &[10.0, 100.0, 1000.0];
 pub fn utility(h: &mut Harness) -> Result<()> {
     println!("\n=== Utility: encode/decode on the clock, break-even curve (mlp_deep_c10) ===");
     println!(
-        "| {:>9} | {:<9} | {:>10} | {:>10} | {:>8} | {:>13} |",
-        "bandwidth", "method", "free s", "charged s", "codec %", "vs none (chg)"
+        "| {:>9} | {:<9} | {:>10} | {:>10} | {:>8} | {:>13} | {:>10} |",
+        "bandwidth", "method", "free s", "charged s", "codec %", "vs none (chg)", "measured s"
     );
     for &mbps in BANDWIDTHS_MBPS {
         let mut none_charged = f64::NAN;
         for (name, method) in method_suite() {
-            let mut secs = [0.0f64; 2]; // [free, charged]
-            for (i, charged) in [false, true].into_iter().enumerate() {
-                let tag = if charged { "charged" } else { "free" };
+            // [flops/free, flops/charged, measured/charged]: the third
+            // cell swaps the modeled device rate for this host's
+            // measured calibration — compute AND codec (the per-(method,
+            // shape) wall-clock probes the registry caches) — so the
+            // column shows how far the flop model's codec charge sits
+            // from a real measurement.  Host-dependent by design: it is
+            // a diagnostic column, never diffed.
+            let runs = [
+                (false, TimeModelCfg::Flops, "free"),
+                (true, TimeModelCfg::Flops, "charged"),
+                (true, TimeModelCfg::Measured, "measured"),
+            ];
+            let mut secs = [0.0f64; 3];
+            for (i, (charged, model, tag)) in runs.into_iter().enumerate() {
                 let label = format!("utility-{mbps:.0}mbps-{name}-{tag}");
                 let cfg = h.cfg(&label, |c| {
                     c.model = "mlp_deep_c10".into();
@@ -60,6 +71,7 @@ pub fn utility(h: &mut Harness) -> Result<()> {
                     c.controller = ControllerCfg::Static(Level::High);
                     c.bandwidth_mbps = mbps;
                     c.charge_codec = charged;
+                    c.time_model = model;
                     c.epochs = 3;
                     c.warmup_epochs = 0;
                     c.decay_epochs = vec![2];
@@ -76,8 +88,8 @@ pub fn utility(h: &mut Harness) -> Result<()> {
             let overhead = 100.0 * (secs[1] - secs[0]) / secs[0].max(1e-12);
             let ratio = none_charged / secs[1].max(1e-12);
             println!(
-                "| {:>7.0}Mb | {:<9} | {:>9.3}s | {:>9.3}s | {:>7.2}% | {:>12.2}x |",
-                mbps, name, secs[0], secs[1], overhead, ratio
+                "| {:>7.0}Mb | {:<9} | {:>9.3}s | {:>9.3}s | {:>7.2}% | {:>12.2}x | {:>9.3}s |",
+                mbps, name, secs[0], secs[1], overhead, ratio, secs[2]
             );
         }
     }
@@ -85,7 +97,10 @@ pub fn utility(h: &mut Harness) -> Result<()> {
         "reading: `codec %` is the sim-time the method's own flops add once encode serializes \
          before the collective and decode before the optimizer; `vs none` is the speedup that \
          SURVIVES that charge.  Methods whose ratio falls below 1.0x at a bandwidth have \
-         crossed break-even there: cheaper to send raw gradients than to compress them."
+         crossed break-even there: cheaper to send raw gradients than to compress them.  \
+         `measured s` replays the charged cell with this host's measured calibration \
+         (compute and codec probes) instead of the flop model — a host-dependent diagnostic \
+         of how honest the modeled rates are."
     );
     Ok(())
 }

@@ -64,6 +64,16 @@ pub struct RunLog {
     /// per-epoch per-layer chosen levels (true = low compression);
     /// Figs. 18-20 print these.
     pub level_trace: Vec<Vec<bool>>,
+    /// selected kernel backend ("avx2" | "scalar") — recorded as a `#`
+    /// comment line atop the CSV, never a data column: backends are
+    /// bitwise identical (DESIGN.md §6.1), so the data rows must not
+    /// depend on which one ran.  Empty (legacy constructors) emits no
+    /// comment.
+    pub backend: String,
+    /// one-line kernel tuner profile (`tensor::tune::describe()`);
+    /// joins the `#` comment line.  Tuner numbers are host-dependent —
+    /// exactly why they live in a comment the determinism diffs strip.
+    pub tuner: String,
 }
 
 impl RunLog {
@@ -108,9 +118,17 @@ impl RunLog {
     /// CSV with `wall_secs` as the LAST column: everything before it —
     /// including the run-constant `transport` dimension — is
     /// deterministic (bit-identical values format to identical bytes),
-    /// so the CI determinism lane diffs `cut -d, -f1-13` output.
+    /// so the CI determinism lane diffs `cut -d, -f1-13` output.  When
+    /// the run recorded a kernel backend/tuner profile, one `#`-prefixed
+    /// comment line precedes the header; every determinism consumer
+    /// strips `#` lines first (the comment carries host-dependent tuner
+    /// measurements by design).
     pub fn to_csv(&self) -> String {
-        let mut out = String::from(
+        let mut out = String::new();
+        if !self.backend.is_empty() || !self.tuner.is_empty() {
+            let _ = writeln!(out, "# kernel_backend={} tuner={}", self.backend, self.tuner);
+        }
+        out.push_str(
             "epoch,lr,train_loss,test_loss,test_acc,floats,sim_secs,grad_norm,frac_low,\
              batch_mult,window_grad_norm,overlap_saved_secs,transport,wall_secs\n",
         );
@@ -218,6 +236,36 @@ mod tests {
         sharded.transport = "sharded".into();
         assert_eq!(sharded.transport_label(), "sharded");
         assert!(sharded.to_csv().lines().nth(1).unwrap().contains(",sharded,"));
+    }
+
+    #[test]
+    fn backend_comment_precedes_header_and_strips_clean() {
+        let mut log = RunLog { label: "t".into(), ..Default::default() };
+        log.epochs.push(row(0, 0.5, 100));
+        // legacy logs (no backend recorded) emit no comment at all
+        assert!(!log.to_csv().contains('#'));
+        log.backend = "avx2".into();
+        log.tuner = "measured nk=2048/4096 elem=8192 disp_ns=900".into();
+        let csv = log.to_csv();
+        let mut lines = csv.lines();
+        let comment = lines.next().unwrap();
+        assert!(comment.starts_with("# kernel_backend=avx2 tuner="));
+        // comma-free by contract: a stray comma would survive `cut -d,`
+        assert!(!comment.contains(','), "{comment}");
+        assert!(lines.next().unwrap().starts_with("epoch,"));
+        // stripping `#` lines recovers the exact legacy byte stream
+        let stripped: String = csv.lines().filter(|l| !l.starts_with('#')).fold(
+            String::new(),
+            |mut s, l| {
+                s.push_str(l);
+                s.push('\n');
+                s
+            },
+        );
+        let mut plain = log.clone();
+        plain.backend.clear();
+        plain.tuner.clear();
+        assert_eq!(stripped, plain.to_csv());
     }
 
     #[test]

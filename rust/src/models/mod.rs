@@ -117,13 +117,22 @@ pub struct Registry {
     /// that is what keeps the measured clock thread-invariant too.
     /// Flops-mode runs never touch it.
     cost_cache: Mutex<BTreeMap<String, CostModel>>,
+    /// Measured codec calibration cache (`time.model = "measured"`):
+    /// per-(method, shape) `(encode, decode)` seconds, probed once per
+    /// process exactly like the layer cost models above.  Flops-mode
+    /// runs never touch it.
+    codec_cache: Mutex<BTreeMap<String, (f64, f64)>>,
 }
 
 /// The built-in sim model zoo: `(name, layer widths, batch)`.  Widths
 /// chain `input -> hidden.. -> classes`; every model is a ReLU MLP (one
 /// pair = softmax regression) the pure-Rust backend executes directly.
 /// `mlp_bench` is deliberately heavy — the thread-scaling bench needs
-/// per-step compute that dwarfs thread-spawn overhead.
+/// per-step compute that dwarfs thread-spawn overhead.  Two more zoo
+/// members are built outside this table: `conv_c10` (a rank-4 HWIO
+/// first layer, so PowerSGD's matrix view finally sees a >2-d tensor)
+/// and `lm_small` (a next-token sim LM matching the paper's TopK/LSTM
+/// tables' task shape).
 const SIM_MODELS: &[(&str, &[usize], usize)] = &[
     ("softmax_c10", &[32, 10], 16),
     ("mlp_c10", &[48, 32, 10], 16),
@@ -131,6 +140,67 @@ const SIM_MODELS: &[(&str, &[usize], usize)] = &[
     ("mlp_deep_c10", &[48, 32, 24, 10], 16),
     ("mlp_bench", &[512, 256, 10], 32),
 ];
+
+/// `conv_c10`: a 4×4×12 input volume whose first layer is a rank-4 HWIO
+/// kernel `[4, 4, 12, 16]` — row-major it flattens to the `(192, 16)`
+/// matrix the backend GEMMs see (exactly the `Tensor::matrix_dims`
+/// PowerSGD view), so the sim executes it as a dense
+/// layer while every consumer (compressors, manifest, L2 export) sees a
+/// genuine >2-d parameter.
+fn sim_conv_meta() -> ModelMeta {
+    let params = vec![
+        ParamSpec { name: "w0".into(), shape: vec![4, 4, 12, 16], kind: "matrix".into() },
+        ParamSpec { name: "b0".into(), shape: vec![16], kind: "vector".into() },
+        ParamSpec { name: "w1".into(), shape: vec![16, 10], kind: "matrix".into() },
+        ParamSpec { name: "b1".into(), shape: vec![10], kind: "vector".into() },
+    ];
+    let total_params = params.iter().map(|p| p.numel()).sum();
+    ModelMeta {
+        name: "conv_c10".into(),
+        task: "classify".into(),
+        input_shape: vec![4, 4, 12],
+        input_dtype: "f32".into(),
+        num_classes: 10,
+        batch: 16,
+        seq_len: 0,
+        total_params,
+        params,
+        train_artifact: PathBuf::new(),
+        eval_artifact: PathBuf::new(),
+        hvp_artifact: None,
+        init_file: PathBuf::new(),
+    }
+}
+
+/// `lm_small`: a next-token sim LM — vocab 32, seq 8, one-hot input into
+/// a `32 -> 48 -> 32` ReLU stack with softmax cross-entropy per token.
+/// The first weight's leading dim is the vocabulary (an embedding the
+/// backend drives with an explicit one-hot GEMM), and `num_classes` is
+/// the vocabulary too (tied next-token output).
+fn sim_lm_meta() -> ModelMeta {
+    let params = vec![
+        ParamSpec { name: "w0".into(), shape: vec![32, 48], kind: "matrix".into() },
+        ParamSpec { name: "b0".into(), shape: vec![48], kind: "vector".into() },
+        ParamSpec { name: "w1".into(), shape: vec![48, 32], kind: "matrix".into() },
+        ParamSpec { name: "b1".into(), shape: vec![32], kind: "vector".into() },
+    ];
+    let total_params = params.iter().map(|p| p.numel()).sum();
+    ModelMeta {
+        name: "lm_small".into(),
+        task: "lm".into(),
+        input_shape: vec![8],
+        input_dtype: "i32".into(),
+        num_classes: 32,
+        batch: 8,
+        seq_len: 8,
+        total_params,
+        params,
+        train_artifact: PathBuf::new(),
+        eval_artifact: PathBuf::new(),
+        hvp_artifact: None,
+        init_file: PathBuf::new(),
+    }
+}
 
 fn sim_meta(name: &str, dims: &[usize], batch: usize) -> ModelMeta {
     let mut params = Vec::new();
@@ -183,11 +253,15 @@ impl Registry {
         for &(name, dims, batch) in SIM_MODELS {
             models.insert(name.to_string(), sim_meta(name, dims, batch));
         }
+        for meta in [sim_conv_meta(), sim_lm_meta()] {
+            models.insert(meta.name.clone(), meta);
+        }
         Registry {
             dir: PathBuf::new(),
             models,
             kernels: BTreeMap::new(),
             cost_cache: Mutex::new(BTreeMap::new()),
+            codec_cache: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -204,6 +278,30 @@ impl Registry {
         let c = build()?;
         cache.insert(name.to_string(), c.clone());
         Ok(c)
+    }
+
+    /// Fetch the cached measured `(encode, decode)` seconds for a codec
+    /// key (`"{method}|{shape:?}"` by convention), building (and
+    /// caching) with `probe` on first use — the codec twin of
+    /// [`Registry::cached_cost`].
+    pub fn cached_codec<F>(&self, key: &str, probe: F) -> Result<(f64, f64)>
+    where
+        F: FnOnce() -> Result<(f64, f64)>,
+    {
+        let mut cache = self.codec_cache.lock().expect("codec cache poisoned");
+        if let Some(&c) = cache.get(key) {
+            return Ok(c);
+        }
+        let c = probe()?;
+        cache.insert(key.to_string(), c);
+        Ok(c)
+    }
+
+    /// The process-wide bit-free kernel tuning profile (measured once;
+    /// see `tensor::tune`) — surfaced on the registry so run setup logs
+    /// it right next to the cached cost models it lives alongside.
+    pub fn kernel_tuning(&self) -> &'static crate::tensor::tune::TuneProfile {
+        crate::tensor::tune::profile()
     }
 
     /// The artifacts registry when `pjrt_executable` says this process
@@ -327,7 +425,13 @@ impl Registry {
             }
         }
 
-        Ok(Registry { dir, models, kernels, cost_cache: Mutex::new(BTreeMap::new()) })
+        Ok(Registry {
+            dir,
+            models,
+            kernels,
+            cost_cache: Mutex::new(BTreeMap::new()),
+            codec_cache: Mutex::new(BTreeMap::new()),
+        })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {
@@ -349,7 +453,12 @@ impl Registry {
             let mut out = Vec::with_capacity(meta.params.len());
             for (i, spec) in meta.params.iter().enumerate() {
                 let t = if spec.compressible() {
-                    let fan_in = spec.shape[0].max(1) as f32;
+                    // fan-in = product of leading dims: shape[0] for a
+                    // dense [in, out], kh*kw*cin for a rank-4 HWIO kernel
+                    // (identical for rank-2, so existing inits replay
+                    // bit-for-bit)
+                    let lead: usize = spec.shape[..spec.shape.len() - 1].iter().product();
+                    let fan_in = lead.max(1) as f32;
                     // 0.5/fan_in keeps fresh-logit variance well under 1
                     // for every zoo model, so the initial loss sits close
                     // to ln(classes) (pinned by the sim backend tests)
@@ -439,22 +548,33 @@ mod tests {
     #[test]
     fn sim_registry_is_self_contained() {
         let reg = Registry::sim();
-        assert!(reg.models.len() >= 4);
+        assert!(reg.models.len() >= 6);
+        // product of leading dims: shape[0] for [in, out], kh*kw*cin for HWIO
+        let lead = |s: &[usize]| -> usize { s[..s.len() - 1].iter().product() };
         for (name, m) in &reg.models {
             assert!(m.is_sim(), "{name} should be a sim model");
             assert_eq!(m.params.len() % 2, 0);
-            // param widths chain input -> .. -> classes
-            let mut width = m.input_numel();
+            // param widths chain input -> .. -> classes; the LM chain
+            // starts at the embedding width (vocab), not input_numel
+            let mut width = if m.is_lm() { lead(&m.params[0].shape) } else { m.input_numel() };
             for pair in m.params.chunks(2) {
-                assert_eq!(pair[0].shape[0], width, "{name}: weight does not chain");
-                assert_eq!(pair[0].shape[1], pair[1].shape[0], "{name}: bias width");
+                assert_eq!(lead(&pair[0].shape), width, "{name}: weight does not chain");
+                let out = *pair[0].shape.last().unwrap();
+                assert_eq!(out, pair[1].shape[0], "{name}: bias width");
                 assert!(pair[0].compressible() && !pair[1].compressible());
-                width = pair[0].shape[1];
+                width = out;
             }
             assert_eq!(width, m.num_classes, "{name}: output width");
             let total: usize = m.params.iter().map(|p| p.numel()).sum();
             assert_eq!(total, m.total_params, "{name}: total_params");
         }
+        // the two table-external zoo members exercise the new shapes
+        let conv = reg.model("conv_c10").unwrap();
+        assert_eq!(conv.params[0].shape.len(), 4, "conv_c10 leads with a rank-4 HWIO kernel");
+        let lm = reg.model("lm_small").unwrap();
+        assert!(lm.is_lm());
+        assert_eq!(lm.seq_len, 8);
+        assert_eq!(lm.num_classes, 32);
     }
 
     #[test]
@@ -516,6 +636,26 @@ mod tests {
             assert!(c.micro_secs() > 0.0);
         }
         assert_eq!(builds, 1, "calibration must run once per process");
+    }
+
+    #[test]
+    fn codec_cache_builds_once_and_replays() {
+        let reg = Registry::sim();
+        let mut builds = 0usize;
+        for _ in 0..3 {
+            let (e, d) = reg
+                .cached_codec("topk(ef)|[48, 32]", || {
+                    builds += 1;
+                    Ok((1e-5, 2e-6))
+                })
+                .unwrap();
+            assert_eq!((e, d), (1e-5, 2e-6));
+        }
+        assert_eq!(builds, 1, "codec calibration must run once per process");
+        // the kernel tuning surface is process-wide and cached too
+        let a = reg.kernel_tuning();
+        let b = reg.kernel_tuning();
+        assert!(std::ptr::eq(a, b));
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -14,8 +14,8 @@
 //! transports.
 
 use crate::collectives::{DenseReplicated, Transport};
-use crate::tensor::Tensor;
-use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
+use crate::tensor::{simd, tune, Tensor};
+use crate::util::pool::{IntraPool, SendPtr};
 
 /// SGD + momentum.  `velocity` is lazily sized on the first step.
 pub struct Sgd {
@@ -105,7 +105,7 @@ impl Sgd {
                 let pr = &mut p.data[range.clone()];
                 let vr = &mut v[range.clone()];
                 let gr = &g.data[range];
-                if intra.threads() <= 1 || pr.len() < INTRA_SERIAL_CUTOFF {
+                if intra.threads() <= 1 || pr.len() < tune::elem_cutoff() {
                     sgd_range(pr, vr, gr, lr, mu, nesterov, wd);
                     continue;
                 }
@@ -142,21 +142,14 @@ impl Sgd {
 
 /// One contiguous run of the SGD+momentum update (torch.optim.SGD
 /// semantics; velocity holds the grad+wd accumulation).  The shared
-/// serial kernel of [`Sgd::step_owned`] and [`Sgd::step_owned_pooled`].
+/// serial kernel of [`Sgd::step_owned`] and [`Sgd::step_owned_pooled`],
+/// now the lane-parallel [`simd::sgd_range`] sweep (element-independent,
+/// so the backend choice never changes a bit).
 #[inline]
 fn sgd_range(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32, nesterov: bool, wd: f32) {
     debug_assert_eq!(p.len(), v.len());
     debug_assert_eq!(p.len(), g.len());
-    for i in 0..p.len() {
-        let mut d = g[i] + wd * p[i];
-        v[i] = mu * v[i] + d;
-        if nesterov {
-            d += mu * v[i];
-        } else {
-            d = v[i];
-        }
-        p[i] -= lr * d;
-    }
+    simd::sgd_range(p, v, g, lr, mu, nesterov, wd);
 }
 
 /// Piecewise LR schedule: warmup then step decays.

@@ -24,7 +24,8 @@
 //! bitwise serial-vs-pooled parity tests, and (via the compressor round)
 //! by parity tests against the L1 Pallas artifacts.
 
-use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
+use super::{simd, tune};
+use crate::util::pool::{IntraPool, SendPtr};
 
 /// k-panel width of the cache-blocked generic GEMM: a `KC x r` panel of
 /// the right-hand operand stays hot while the row tile streams over it.
@@ -36,8 +37,11 @@ const KC: usize = 128;
 /// path even on a wide pool: the two barrier rendezvous of a dispatch
 /// cost more than the work.  Safe for partition-invariant kernels only
 /// (per-element results do not depend on the split), which is the only
-/// place it is used.
-const PAR_MIN_MACS: usize = 16 * 1024;
+/// place it is used.  This is the *static* default; the `_pooled` entry
+/// points consult [`tune`] for the per-(family, shape-class) measured
+/// gate, and [`tune::TuneProfile::default_profile`] falls back to this
+/// constant.  Either gate picks between bit-identical plans.
+pub(crate) const PAR_MIN_MACS: usize = 16 * 1024;
 
 /// Fixed-split chunk width of the deterministic reductions
 /// ([`sqnorm_det`], [`sum_abs_det`]): chunk boundaries are
@@ -73,30 +77,18 @@ impl<'a> Epilogue<'a> {
     }
 
     /// Apply to local output row `i` (relative to this kernel's slice).
+    /// Delegates to the [`simd`] row kernels (lanes across independent
+    /// output columns; the branch semantics — `-0.0`, NaN — are pinned
+    /// there).
     #[inline]
     fn apply_row(&self, i: usize, orow: &mut [f32]) {
         match *self {
             Epilogue::None => {}
-            Epilogue::Bias(b) => {
-                for (o, bv) in orow.iter_mut().zip(b) {
-                    *o += bv;
-                }
-            }
-            Epilogue::BiasRelu(b) => {
-                for (o, bv) in orow.iter_mut().zip(b) {
-                    *o += bv;
-                    if *o < 0.0 {
-                        *o = 0.0;
-                    }
-                }
-            }
+            Epilogue::Bias(b) => simd::bias_row(orow, b),
+            Epilogue::BiasRelu(b) => simd::bias_relu_row(orow, b),
             Epilogue::ReluMask(m) => {
                 let w = orow.len();
-                for (o, &a) in orow.iter_mut().zip(&m[i * w..(i + 1) * w]) {
-                    if a <= 0.0 {
-                        *o = 0.0;
-                    }
-                }
+                simd::relu_mask_row(orow, &m[i * w..(i + 1) * w]);
             }
         }
     }
@@ -143,7 +135,8 @@ pub fn gemm_nk_kr_fused(
 
 /// Row-partitioned [`gemm_nk_kr_fused`]: each thread produces whole
 /// output rows with the identical serial kernel — bitwise invariant
-/// across pool widths.
+/// across pool widths.  The serial-vs-pooled gate comes from the
+/// process autotuner; both sides of the gate are byte-identical plans.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_nk_kr_fused_pooled(
     m: &[f32],
@@ -155,7 +148,25 @@ pub fn gemm_nk_kr_fused_pooled(
     out: &mut [f32],
     pool: &mut IntraPool,
 ) {
-    if pool.threads() <= 1 || n <= 1 || n * k * r < PAR_MIN_MACS {
+    let gate = tune::gemm_min_macs(tune::Family::NkKr, r);
+    gemm_nk_kr_fused_gated(m, q, n, k, r, epi, out, pool, gate);
+}
+
+/// [`gemm_nk_kr_fused_pooled`] with an explicit dispatch gate — the
+/// tuned-vs-untuned byte-equality tests drive this directly.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_nk_kr_fused_gated(
+    m: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+    pool: &mut IntraPool,
+    min_macs: usize,
+) {
+    if pool.threads() <= 1 || n <= 1 || n * k * r < min_macs {
         return gemm_nk_kr_fused(m, q, n, k, r, epi, out);
     }
     debug_assert_eq!(m.len(), n * k);
@@ -236,7 +247,34 @@ fn nk_kr_tiled(
         for i in 0..n {
             let row = &m[i * k + kp..i * k + kp + kw];
             let orow = &mut out[i * r..(i + 1) * r];
+            // Column blocks widest-first (16 → 8 → 4 → scalar).  The
+            // block width only groups independent output columns; each
+            // column's k order is identical in every block, so the
+            // grouping (and the SIMD-vs-scalar choice inside each block)
+            // is invisible to the bits.
             let mut j0 = 0;
+            while j0 + 16 <= r {
+                let acc = simd::nk_block16(row, q, r, kp, j0);
+                if first {
+                    orow[j0..j0 + 16].copy_from_slice(&acc);
+                } else {
+                    for (o, a) in orow[j0..j0 + 16].iter_mut().zip(&acc) {
+                        *o += a;
+                    }
+                }
+                j0 += 16;
+            }
+            while j0 + 8 <= r {
+                let acc = simd::nk_block8(row, q, r, kp, j0);
+                if first {
+                    orow[j0..j0 + 8].copy_from_slice(&acc);
+                } else {
+                    for (o, a) in orow[j0..j0 + 8].iter_mut().zip(&acc) {
+                        *o += a;
+                    }
+                }
+                j0 += 8;
+            }
             while j0 + 4 <= r {
                 let acc = nk_block::<4>(row, q, r, kp, j0);
                 if first {
@@ -333,7 +371,23 @@ pub fn gemm_tn_kr_pooled(
     out: &mut [f32],
     pool: &mut IntraPool,
 ) {
-    if pool.threads() <= 1 || k <= 1 || n * k * r < PAR_MIN_MACS {
+    let gate = tune::gemm_min_macs(tune::Family::TnKr, r);
+    gemm_tn_kr_gated(m, p, n, k, r, out, pool, gate);
+}
+
+/// [`gemm_tn_kr_pooled`] with an explicit dispatch gate (tests).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_tn_kr_gated(
+    m: &[f32],
+    p: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    out: &mut [f32],
+    pool: &mut IntraPool,
+    min_macs: usize,
+) {
+    if pool.threads() <= 1 || k <= 1 || n * k * r < min_macs {
         return gemm_tn_kr(m, p, n, k, r, out);
     }
     debug_assert_eq!(m.len(), n * k);
@@ -370,22 +424,19 @@ fn tn_kr_range(
                 out.iter_mut().for_each(|v| *v = 0.0);
                 return;
             }
+            // r-wide broadcast rows: write-through on batch row 0, axpy
+            // after — both are lane-parallel over independent output
+            // columns, so the SIMD sweeps keep the bits.
             for i in 0..n {
                 let row = &m[i * k + a0..i * k + a0 + aw];
                 let pr = &p[i * r..(i + 1) * r];
                 if i == 0 {
                     for (a_off, &mv) in row.iter().enumerate() {
-                        let orow = &mut out[a_off * r..(a_off + 1) * r];
-                        for (o, &pv) in orow.iter_mut().zip(pr) {
-                            *o = mv * pv;
-                        }
+                        simd::scale_store(mv, pr, &mut out[a_off * r..(a_off + 1) * r]);
                     }
                 } else {
                     for (a_off, &mv) in row.iter().enumerate() {
-                        let orow = &mut out[a_off * r..(a_off + 1) * r];
-                        for (o, &pv) in orow.iter_mut().zip(pr) {
-                            *o += mv * pv;
-                        }
+                        simd::axpy(mv, pr, &mut out[a_off * r..(a_off + 1) * r]);
                     }
                 }
             }
@@ -496,7 +547,24 @@ pub fn gemm_nr_rk_fused_pooled(
     out: &mut [f32],
     pool: &mut IntraPool,
 ) {
-    if pool.threads() <= 1 || n <= 1 || n * k * r < PAR_MIN_MACS {
+    let gate = tune::gemm_min_macs(tune::Family::NrRk, r);
+    gemm_nr_rk_fused_gated(p, q, n, k, r, epi, out, pool, gate);
+}
+
+/// [`gemm_nr_rk_fused_pooled`] with an explicit dispatch gate (tests).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_nr_rk_fused_gated(
+    p: &[f32],
+    q: &[f32],
+    n: usize,
+    k: usize,
+    r: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+    pool: &mut IntraPool,
+    min_macs: usize,
+) {
+    if pool.threads() <= 1 || n <= 1 || n * k * r < min_macs {
         return gemm_nr_rk_fused(p, q, n, k, r, epi, out);
     }
     debug_assert_eq!(p.len(), n * r);
@@ -557,25 +625,13 @@ pub fn gemm_nr_rk_generic(p: &[f32], q: &[f32], n: usize, k: usize, r: usize, ou
 
 // ---------------------------------------------------- reductions & misc
 
+/// Serial dot with the canonical 4-lane accumulator shape (the lane
+/// count is part of the numeric definition — see [`simd::dot`], which
+/// this delegates to for the explicit SSE body / scalar twin pair).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-lane unrolled accumulation: lets LLVM vectorize without fast-math
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let ai = &a[i * 4..i * 4 + 4];
-        let bi = &b[i * 4..i * 4 + 4];
-        acc[0] += ai[0] * bi[0];
-        acc[1] += ai[1] * bi[1];
-        acc[2] += ai[2] * bi[2];
-        acc[3] += ai[3] * bi[3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    simd::dot(a, b)
 }
 
 #[inline]
@@ -604,21 +660,31 @@ pub fn sum_abs_det(a: &[f32], pool: &mut IntraPool) -> f32 {
     }) as f32
 }
 
-/// y += alpha * x
+/// y += alpha * x (lane-parallel over independent elements).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    simd::axpy(alpha, x, y);
 }
 
 /// Element-partitioned [`axpy`]: per-element results are independent of
 /// the split, so this is bitwise identical to the serial sweep at any
-/// pool width (including the small-size serial gate).
+/// pool width (including the small-size serial gate, which comes from
+/// the autotuner).
 pub fn axpy_pooled(alpha: f32, x: &[f32], y: &mut [f32], pool: &mut IntraPool) {
+    axpy_gated(alpha, x, y, pool, tune::elem_cutoff());
+}
+
+/// [`axpy_pooled`] with an explicit serial cutoff (tests).
+pub(crate) fn axpy_gated(
+    alpha: f32,
+    x: &[f32],
+    y: &mut [f32],
+    pool: &mut IntraPool,
+    cutoff: usize,
+) {
     debug_assert_eq!(x.len(), y.len());
-    if pool.threads() <= 1 || y.len() < INTRA_SERIAL_CUTOFF {
+    if pool.threads() <= 1 || y.len() < cutoff {
         return axpy(alpha, x, y);
     }
     let yp = SendPtr::new(y);
@@ -644,9 +710,21 @@ pub fn vsub_pooled(x: &[f32], y: &mut [f32], pool: &mut IntraPool) {
 /// write-through, partitioned over columns.  Per column the row order is
 /// ascending whatever the partition, so pooled == serial bitwise.
 pub fn colsum_pooled(d: &[f32], rows: usize, cols: usize, out: &mut [f32], pool: &mut IntraPool) {
+    colsum_gated(d, rows, cols, out, pool, tune::elem_cutoff());
+}
+
+/// [`colsum_pooled`] with an explicit serial cutoff (tests).
+pub(crate) fn colsum_gated(
+    d: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+    pool: &mut IntraPool,
+    cutoff: usize,
+) {
     debug_assert_eq!(d.len(), rows * cols);
     debug_assert_eq!(out.len(), cols);
-    if pool.threads() <= 1 || rows * cols < INTRA_SERIAL_CUTOFF || cols <= 1 {
+    if pool.threads() <= 1 || rows * cols < cutoff || cols <= 1 {
         return colsum_range(d, rows, cols, 0, cols, out);
     }
     let optr = SendPtr::new(out);
@@ -664,10 +742,8 @@ fn colsum_range(d: &[f32], rows: usize, cols: usize, j0: usize, jw: usize, out: 
     }
     out.copy_from_slice(&d[j0..j0 + jw]);
     for i in 1..rows {
-        let row = &d[i * cols + j0..i * cols + j0 + jw];
-        for (o, &v) in out.iter_mut().zip(row) {
-            *o += v;
-        }
+        // pure-add row accumulation over independent columns
+        simd::vacc(&d[i * cols + j0..i * cols + j0 + jw], out);
     }
 }
 
@@ -831,7 +907,9 @@ mod tests {
         prop::check("gemm-pooled-bitwise", 8, |rng| {
             let n = prop::dim(rng, 1, 40);
             let k = prop::dim(rng, 1, 200);
-            for r in [1usize, 2, 3, 4, 7, 33] {
+            // r values straddle the const table (≤4) and every SIMD
+            // block-width remainder class (16 | 8 | 4 | scalar tail)
+            for r in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 17, 33] {
                 let m = prop::vecf(rng, n * k, 1.0);
                 let q = prop::vecf(rng, k * r, 1.0);
                 let p = prop::vecf(rng, n * r, 1.0);
@@ -1005,6 +1083,98 @@ mod tests {
         let mut sp = y0.clone();
         vsub_pooled(&x, &mut sp, &mut p4);
         for (a, b) in sa.iter().zip(&sp) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn simd_and_forced_scalar_backends_are_bitwise_identical() {
+        // the §6.1 lane contract end-to-end through the GEMM entry
+        // points: flipping the backend never changes a bit, on any
+        // family, width class, or epilogue
+        let _guard = crate::tensor::simd::test_lock();
+        let run = |n: usize, k: usize, r: usize, rng: &mut Rng| {
+            let m = prop::vecf(rng, n * k, 1.0);
+            let q = prop::vecf(rng, k * r, 1.0);
+            let p = prop::vecf(rng, n * r, 1.0);
+            let bias = prop::vecf(rng, r, 1.0);
+            let mask = prop::vecf(rng, n * k, 1.0);
+            let mut o1 = vec![f32::NAN; n * r];
+            gemm_nk_kr_fused(&m, &q, n, k, r, Epilogue::BiasRelu(&bias), &mut o1);
+            let mut o2 = vec![f32::NAN; k * r];
+            gemm_tn_kr(&m, &p, n, k, r, &mut o2);
+            let mut o3 = vec![f32::NAN; n * k];
+            gemm_nr_rk_fused(&p, &q, n, k, r, Epilogue::ReluMask(&mask), &mut o3);
+            let mut cs = vec![f32::NAN; k];
+            let mut p1 = IntraPool::new(1);
+            colsum_pooled(&o3, n, k, &mut cs, &mut p1);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            (bits(&o1), bits(&o2), bits(&o3), bits(&cs))
+        };
+        for (n, k, r) in [(9, 130, 3), (7, 150, 19), (5, 260, 48)] {
+            crate::tensor::simd::set_force_scalar(false);
+            let mut rng = Rng::new(41 + r as u64);
+            let auto = run(n, k, r, &mut rng);
+            crate::tensor::simd::set_force_scalar(true);
+            let mut rng = Rng::new(41 + r as u64);
+            let scalar = run(n, k, r, &mut rng);
+            crate::tensor::simd::set_force_scalar(false);
+            assert_eq!(auto, scalar, "n={n} k={k} r={r}");
+        }
+    }
+
+    #[test]
+    fn tuned_and_untuned_gates_are_bitwise_identical() {
+        // the autotuner only moves the serial-vs-pooled dispatch point;
+        // force both extremes through the gated entry points and demand
+        // exact bit equality (this is what makes the tuning "bit-free")
+        fn assert_bits_eq(a: &[f32], b: &[f32], tag: &str) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag}");
+            }
+        }
+        let mut rng = Rng::new(63);
+        let (n, k) = (24, 160);
+        let mut pool = IntraPool::new(4);
+        let epi = Epilogue::None;
+        for r in [3usize, 20] {
+            let m = prop::vecf(&mut rng, n * k, 1.0);
+            let q = prop::vecf(&mut rng, k * r, 1.0);
+            let p = prop::vecf(&mut rng, n * r, 1.0);
+            let (lo, hi) = (0usize, usize::MAX);
+            let mut a1 = vec![f32::NAN; n * r];
+            let mut b1 = vec![f32::NAN; n * r];
+            gemm_nk_kr_fused_gated(&m, &q, n, k, r, epi, &mut a1, &mut pool, lo);
+            gemm_nk_kr_fused_gated(&m, &q, n, k, r, epi, &mut b1, &mut pool, hi);
+            assert_bits_eq(&a1, &b1, "nk");
+            let mut a2 = vec![f32::NAN; k * r];
+            let mut b2 = vec![f32::NAN; k * r];
+            gemm_tn_kr_gated(&m, &p, n, k, r, &mut a2, &mut pool, lo);
+            gemm_tn_kr_gated(&m, &p, n, k, r, &mut b2, &mut pool, hi);
+            assert_bits_eq(&a2, &b2, "tn");
+            let mut a3 = vec![f32::NAN; n * k];
+            let mut b3 = vec![f32::NAN; n * k];
+            gemm_nr_rk_fused_gated(&p, &q, n, k, r, epi, &mut a3, &mut pool, lo);
+            gemm_nr_rk_fused_gated(&p, &q, n, k, r, epi, &mut b3, &mut pool, hi);
+            assert_bits_eq(&a3, &b3, "nr");
+        }
+        // elementwise gates
+        let x = prop::vecf(&mut rng, 30_000, 1.0);
+        let y0 = prop::vecf(&mut rng, 30_000, 1.0);
+        let mut ya = y0.clone();
+        let mut yb = y0.clone();
+        axpy_gated(0.7, &x, &mut ya, &mut pool, 0);
+        axpy_gated(0.7, &x, &mut yb, &mut pool, usize::MAX);
+        for (a, b) in ya.iter().zip(&yb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let (rows, cols) = (60, 500);
+        let d = prop::vecf(&mut rng, rows * cols, 1.0);
+        let mut ca = vec![f32::NAN; cols];
+        let mut cb = vec![f32::NAN; cols];
+        colsum_gated(&d, rows, cols, &mut ca, &mut pool, 0);
+        colsum_gated(&d, rows, cols, &mut cb, &mut pool, usize::MAX);
+        for (a, b) in ca.iter().zip(&cb) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }

@@ -7,6 +7,8 @@
 //! L2 parameter layout exported in metadata.json.
 
 pub mod linalg;
+pub mod simd;
+pub mod tune;
 
 /// A dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,905 @@
+//! Runtime-dispatched SIMD inner kernels (DESIGN.md §6.1).
+//!
+//! Every public function here is one complete, safe operation with two
+//! implementations: an AVX2 body (`std::arch::x86_64`, selected at
+//! runtime via `is_x86_feature_detected!`) and a scalar body that is
+//! both the universal fallback (non-x86, old CPUs, forced-scalar runs)
+//! and the bit-parity oracle.  The contract extends DESIGN.md §6 one
+//! level down, from threads to lanes:
+//!
+//!  * vectorize only ACROSS independent output elements (register
+//!    column blocks, row partitions, elementwise sweeps) — never inside
+//!    one element's serial accumulation chain;
+//!  * combine with separate multiply + add intrinsics, NEVER an FMA: a
+//!    fused multiply-add skips the intermediate rounding and changes
+//!    the bits relative to the scalar `a * b + c`;
+//!  * comparisons/selects must reproduce the scalar branch semantics
+//!    exactly, including `-0.0` and NaN (e.g. ReLU's `if x < 0.0` keeps
+//!    `-0.0` and NaN, so `max(x, 0)` — which returns `+0.0` for `-0.0`
+//!    — is forbidden; we use an ordered-compare mask + andnot).
+//!
+//! Under those rules each AVX2 lane executes the identical IEEE-754 op
+//! sequence as the scalar loop for its element, so the two paths are
+//! byte-equal and the backend is free to vary per machine, per run, or
+//! even per call without touching a single bit — `tests/intra_parity.rs`
+//! and the CI forced-scalar lane diff the end-to-end CSVs to pin it.
+//!
+//! Backend selection layers three switches, strongest first: the
+//! `RUST_PALLAS_FORCE_SCALAR` environment variable (read once), the
+//! per-run `kernel.force_scalar` config (an atomic the trainer sets —
+//! safe to flip mid-process exactly because both backends are
+//! bit-identical; only the *label* a racing reader records could ever
+//! differ), and runtime CPU detection.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which implementation the next kernel call dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Avx2,
+    Scalar,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Avx2 => "avx2",
+            Backend::Scalar => "scalar",
+        }
+    }
+}
+
+/// Per-run config override (`kernel.force_scalar`).  An atomic rather
+/// than a `OnceLock` because one process runs many configs (tests, the
+/// experiment harness); see the module docs for why flipping it is safe.
+static FORCE_SCALAR_CFG: AtomicU8 = AtomicU8::new(0);
+
+/// Set (or clear) the config-level scalar override for subsequent runs.
+pub fn set_force_scalar(force: bool) {
+    FORCE_SCALAR_CFG.store(force as u8, Ordering::Relaxed);
+}
+
+/// `RUST_PALLAS_FORCE_SCALAR` (nonempty, not `"0"`) pins the scalar
+/// path for the whole process — the CI A/B switch.
+fn env_force_scalar() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("RUST_PALLAS_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_detected() -> bool {
+    static DET: OnceLock<bool> = OnceLock::new();
+    *DET.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_detected() -> bool {
+    false
+}
+
+/// The backend the next kernel call will use.
+pub fn active() -> Backend {
+    if env_force_scalar() || FORCE_SCALAR_CFG.load(Ordering::Relaxed) != 0 || !avx2_detected() {
+        Backend::Scalar
+    } else {
+        Backend::Avx2
+    }
+}
+
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+#[inline]
+fn use_avx2() -> bool {
+    active() == Backend::Avx2
+}
+
+// ---------------------------------------------------------------------
+// Elementwise sweeps
+// ---------------------------------------------------------------------
+
+/// `y[i] += alpha * x[i]` — the shared inner sweep behind
+/// `axpy`/`vadd`/`vsub`, the compressor EF merges, and the GEMM
+/// accumulate rows.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: `use_avx2()` is true only when AVX2 was detected at
+        // runtime on this CPU.
+        unsafe { x86::axpy(alpha, x, y) };
+        return;
+    }
+    axpy_scalar(alpha, x, y);
+}
+
+#[inline]
+fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y[i] += x[i]` — colsum's row accumulation.  A dedicated pure-add
+/// kernel (not `axpy(1.0, ..)`) so the op sequence stays exactly the
+/// scalar `*o += v` with no multiply in the chain.
+#[inline]
+pub fn vacc(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime.
+        unsafe { x86::vacc(x, y) };
+        return;
+    }
+    vacc_scalar(x, y);
+}
+
+#[inline]
+fn vacc_scalar(x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += xi;
+    }
+}
+
+/// `o[i] = a * x[i]` — the store row of the k-major (`tn_kr`) GEMM's
+/// generic arm (first k iteration writes through, later ones `axpy`).
+#[inline]
+pub fn scale_store(a: f32, x: &[f32], o: &mut [f32]) {
+    debug_assert_eq!(x.len(), o.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime.
+        unsafe { x86::scale_store(a, x, o) };
+        return;
+    }
+    scale_store_scalar(a, x, o);
+}
+
+#[inline]
+fn scale_store_scalar(a: f32, x: &[f32], o: &mut [f32]) {
+    for (oi, &xi) in o.iter_mut().zip(x) {
+        *oi = a * xi;
+    }
+}
+
+/// `dst[i] = |src[i]|` — TopK's magnitude fill.  Bitwise `abs` (clear
+/// the sign bit), exactly `f32::abs`.
+#[inline]
+pub fn abs_fill(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime.
+        unsafe { x86::abs_fill(src, dst) };
+        return;
+    }
+    abs_fill_scalar(src, dst);
+}
+
+#[inline]
+fn abs_fill_scalar(src: &[f32], dst: &mut [f32]) {
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = v.abs();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused epilogue rows (Bias / BiasRelu / ReluMask)
+// ---------------------------------------------------------------------
+
+/// `o[j] += b[j]`.
+#[inline]
+pub fn bias_row(o: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(o.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime.
+        unsafe { x86::bias_row(o, b) };
+        return;
+    }
+    bias_row_scalar(o, b);
+}
+
+#[inline]
+fn bias_row_scalar(o: &mut [f32], b: &[f32]) {
+    for (oi, &bv) in o.iter_mut().zip(b) {
+        *oi += bv;
+    }
+}
+
+/// `o[j] += b[j]; if o[j] < 0.0 { o[j] = 0.0 }` — the fused forward
+/// bias+ReLU.  The vector body reproduces the `< 0.0` branch exactly
+/// (ordered compare + andnot): `-0.0` and NaN pass through untouched.
+#[inline]
+pub fn bias_relu_row(o: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(o.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime.
+        unsafe { x86::bias_relu_row(o, b) };
+        return;
+    }
+    bias_relu_row_scalar(o, b);
+}
+
+#[inline]
+fn bias_relu_row_scalar(o: &mut [f32], b: &[f32]) {
+    for (oi, &bv) in o.iter_mut().zip(b) {
+        *oi += bv;
+        if *oi < 0.0 {
+            *oi = 0.0;
+        }
+    }
+}
+
+/// `if m[j] <= 0.0 { o[j] = 0.0 }` — the backward ReLU mask.  Same
+/// branch-semantics note as [`bias_relu_row`]: a NaN activation keeps
+/// the output (ordered `<=` is false for NaN), `-0.0` zeroes it.
+#[inline]
+pub fn relu_mask_row(o: &mut [f32], m: &[f32]) {
+    debug_assert_eq!(o.len(), m.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime.
+        unsafe { x86::relu_mask_row(o, m) };
+        return;
+    }
+    relu_mask_row_scalar(o, m);
+}
+
+#[inline]
+fn relu_mask_row_scalar(o: &mut [f32], m: &[f32]) {
+    for (oi, &a) in o.iter_mut().zip(m) {
+        if a <= 0.0 {
+            *oi = 0.0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dot product (fixed 4-lane accumulator shape)
+// ---------------------------------------------------------------------
+
+/// Serial dot product with the engine's canonical 4-lane accumulator
+/// shape: lane `j` accumulates elements `j, j+4, j+8, …` in order, the
+/// four lane sums fold left-associatively, and the tail is scalar.
+/// The SSE body is that exact computation (one 128-bit accumulator =
+/// the four scalar accumulators), so both paths are byte-equal.  The
+/// lane count is part of the *numeric definition* (changing it changes
+/// the fold tree), which is why this stays 4-wide rather than AVX2
+/// 8-wide — the win is doing 4 lanes in one instruction, not width.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime (SSE is x86_64 baseline; the
+        // avx2 gate keeps one switch for the whole engine).
+        return unsafe { x86::dot(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let ai = &a[i * 4..i * 4 + 4];
+        let bi = &b[i * 4..i * 4 + 4];
+        acc[0] += ai[0] * bi[0];
+        acc[1] += ai[1] * bi[1];
+        acc[2] += ai[2] * bi[2];
+        acc[3] += ai[3] * bi[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Row-major (nk·kr) register column blocks
+// ---------------------------------------------------------------------
+
+/// One `JB`-wide register column block of the tiled row-major GEMM:
+/// `acc[jj] = Σ_off row_panel[off] * q[(kp+off)*r + j0+jj]`, k-serial
+/// per column.  Caller guarantees `j0 + JB <= r` and that `q` covers
+/// rows `kp..kp+row_panel.len()`.
+#[inline]
+pub fn nk_block_scalar<const JB: usize>(
+    row_panel: &[f32],
+    q: &[f32],
+    r: usize,
+    kp: usize,
+    j0: usize,
+) -> [f32; JB] {
+    let mut acc = [0.0f32; JB];
+    for (off, &a) in row_panel.iter().enumerate() {
+        let qrow = &q[(kp + off) * r + j0..(kp + off) * r + j0 + JB];
+        for jj in 0..JB {
+            acc[jj] += a * qrow[jj];
+        }
+    }
+    acc
+}
+
+/// 8-wide column block: one AVX2 register, or the scalar twin.
+#[inline]
+pub fn nk_block8(row_panel: &[f32], q: &[f32], r: usize, kp: usize, j0: usize) -> [f32; 8] {
+    debug_assert!(j0 + 8 <= r);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime; the bounds contract is the
+        // same as the scalar twin's (debug-asserted above).
+        return unsafe { x86::nk_block8(row_panel, q, r, kp, j0) };
+    }
+    nk_block_scalar::<8>(row_panel, q, r, kp, j0)
+}
+
+/// 16-wide column block: two AVX2 registers ping-ponged per k step (the
+/// lanes stay independent, so the bits match the scalar twin exactly).
+#[inline]
+pub fn nk_block16(row_panel: &[f32], q: &[f32], r: usize, kp: usize, j0: usize) -> [f32; 16] {
+    debug_assert!(j0 + 16 <= r);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime; bounds as scalar twin.
+        return unsafe { x86::nk_block16(row_panel, q, r, kp, j0) };
+    }
+    nk_block_scalar::<16>(row_panel, q, r, kp, j0)
+}
+
+// ---------------------------------------------------------------------
+// Optimizer + compressor sweeps
+// ---------------------------------------------------------------------
+
+/// One contiguous run of the SGD+momentum update (torch.optim.SGD
+/// semantics): `d = g + wd·p; v = mu·v + d; p -= lr·(nesterov ? d + mu·v
+/// : v)`.  Element-independent, so lanes are free; every combine is a
+/// separate mul+add/sub matching the scalar chain.
+#[inline]
+pub fn sgd_range(
+    p: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    mu: f32,
+    nesterov: bool,
+    wd: f32,
+) {
+    debug_assert_eq!(p.len(), v.len());
+    debug_assert_eq!(p.len(), g.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime.
+        unsafe { x86::sgd_range(p, v, g, lr, mu, nesterov, wd) };
+        return;
+    }
+    sgd_range_scalar(p, v, g, lr, mu, nesterov, wd);
+}
+
+#[inline]
+fn sgd_range_scalar(
+    p: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    mu: f32,
+    nesterov: bool,
+    wd: f32,
+) {
+    for i in 0..p.len() {
+        let mut d = g[i] + wd * p[i];
+        v[i] = mu * v[i] + d;
+        if nesterov {
+            d += mu * v[i];
+        } else {
+            d = v[i];
+        }
+        p[i] -= lr * d;
+    }
+}
+
+/// signSGD's fused sign/apply/EF sweep: `q = scale * a.signum();
+/// out += q * inv; a -= q`.  The vector signum reproduces
+/// `f32::signum` exactly: `±1` with the operand's sign (so `±0 → ±1`),
+/// and the *canonical* NaN for NaN inputs (what std returns — not the
+/// input payload), blended in under an unordered-compare mask.
+#[inline]
+pub fn sign_sweep(out: &mut [f32], a: &mut [f32], scale: f32, inv: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 detected at runtime.
+        unsafe { x86::sign_sweep(out, a, scale, inv) };
+        return;
+    }
+    sign_sweep_scalar(out, a, scale, inv);
+}
+
+#[inline]
+fn sign_sweep_scalar(out: &mut [f32], a: &mut [f32], scale: f32, inv: f32) {
+    for (o, v) in out.iter_mut().zip(a.iter_mut()) {
+        let q = scale * v.signum();
+        *o += q * inv;
+        *v -= q;
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 bodies
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The AVX2 bodies.  Each function's bit contract is "identical
+    //! per-element op sequence to its scalar twin in the parent module":
+    //! separate vmulps/vaddps (the intrinsics used can never contract
+    //! into FMA — contraction is an instruction-selection choice these
+    //! explicit intrinsics pin), compare+mask+andnot for branches.
+    //! Bodies run under `#[target_feature(enable = "avx2")]`; the
+    //! `unsafe fn` obligation (callers verified AVX2) is documented per
+    //! function, and every pointer access carries its bounds argument.
+
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// CPU must support AVX2 (callers check `use_avx2()`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n = y.len() = x.len().
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(va, xv)));
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn vacc(x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n = y.len() = x.len().
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, xv));
+            i += 8;
+        }
+        while i < n {
+            y[i] += x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_store(a: f32, x: &[f32], o: &mut [f32]) {
+        let n = x.len().min(o.len());
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n = o.len() = x.len().
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(o.as_mut_ptr().add(i), _mm256_mul_ps(va, xv));
+            i += 8;
+        }
+        while i < n {
+            o[i] = a * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn abs_fill(src: &[f32], dst: &mut [f32]) {
+        let n = src.len().min(dst.len());
+        let sign = _mm256_set1_ps(-0.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n = dst.len() = src.len().
+            let v = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_andnot_ps(sign, v));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = src[i].abs();
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bias_row(o: &mut [f32], b: &[f32]) {
+        let n = o.len().min(b.len());
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n = o.len() = b.len().
+            let ov = _mm256_loadu_ps(o.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            _mm256_storeu_ps(o.as_mut_ptr().add(i), _mm256_add_ps(ov, bv));
+            i += 8;
+        }
+        while i < n {
+            o[i] += b[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bias_relu_row(o: &mut [f32], b: &[f32]) {
+        let n = o.len().min(b.len());
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n = o.len() = b.len().
+            let ov = _mm256_loadu_ps(o.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            let sum = _mm256_add_ps(ov, bv);
+            // mask lanes where sum < 0.0 (ordered: NaN stays), zero them;
+            // -0.0 < 0.0 is false, so -0.0 survives — same as the scalar
+            // branch, unlike max(sum, 0)
+            let neg = _mm256_cmp_ps::<_CMP_LT_OQ>(sum, zero);
+            _mm256_storeu_ps(o.as_mut_ptr().add(i), _mm256_andnot_ps(neg, sum));
+            i += 8;
+        }
+        while i < n {
+            o[i] += b[i];
+            if o[i] < 0.0 {
+                o[i] = 0.0;
+            }
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn relu_mask_row(o: &mut [f32], m: &[f32]) {
+        let n = o.len().min(m.len());
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n = o.len() = m.len().
+            let ov = _mm256_loadu_ps(o.as_ptr().add(i));
+            let mv = _mm256_loadu_ps(m.as_ptr().add(i));
+            // zero output lanes where the activation was <= 0.0
+            // (ordered: a NaN activation keeps its output lane)
+            let dead = _mm256_cmp_ps::<_CMP_LE_OQ>(mv, zero);
+            _mm256_storeu_ps(o.as_mut_ptr().add(i), _mm256_andnot_ps(dead, ov));
+            i += 8;
+        }
+        while i < n {
+            if m[i] <= 0.0 {
+                o[i] = 0.0;
+            }
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let chunks = a.len() / 4;
+        let mut acc = _mm_setzero_ps();
+        for i in 0..chunks {
+            // SAFETY: (i + 1) * 4 <= a.len() = b.len().
+            let av = _mm_loadu_ps(a.as_ptr().add(i * 4));
+            let bv = _mm_loadu_ps(b.as_ptr().add(i * 4));
+            acc = _mm_add_ps(acc, _mm_mul_ps(av, bv));
+        }
+        let mut lanes = [0.0f32; 4];
+        // SAFETY: `lanes` is 4 floats, exactly one __m128.
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        // fold the lane sums left-associatively, matching the scalar
+        // `acc[0] + acc[1] + acc[2] + acc[3]` (hadd would re-associate)
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        for i in chunks * 4..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// CPU must support AVX2, `j0 + 8 <= r`, and `q` must cover rows
+    /// `kp .. kp + row_panel.len()` of an `r`-column row-major matrix.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nk_block8(
+        row_panel: &[f32],
+        q: &[f32],
+        r: usize,
+        kp: usize,
+        j0: usize,
+    ) -> [f32; 8] {
+        let mut acc = _mm256_setzero_ps();
+        let qp = q.as_ptr();
+        for (off, &a) in row_panel.iter().enumerate() {
+            let av = _mm256_set1_ps(a);
+            // SAFETY: caller contract — j0 + 8 <= r and row kp + off of q
+            // exists, so the 8 floats at (kp+off)*r + j0 are in bounds.
+            let qv = _mm256_loadu_ps(qp.add((kp + off) * r + j0));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, qv));
+        }
+        let mut out = [0.0f32; 8];
+        // SAFETY: `out` is 8 floats, exactly one __m256.
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+        out
+    }
+
+    /// # Safety
+    /// CPU must support AVX2, `j0 + 16 <= r`, and `q` must cover rows
+    /// `kp .. kp + row_panel.len()` of an `r`-column row-major matrix.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nk_block16(
+        row_panel: &[f32],
+        q: &[f32],
+        r: usize,
+        kp: usize,
+        j0: usize,
+    ) -> [f32; 16] {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let qp = q.as_ptr();
+        for (off, &a) in row_panel.iter().enumerate() {
+            let av = _mm256_set1_ps(a);
+            // SAFETY: caller contract — j0 + 16 <= r and row kp + off of
+            // q exists, so 16 floats at (kp+off)*r + j0 are in bounds.
+            let q0 = _mm256_loadu_ps(qp.add((kp + off) * r + j0));
+            let q1 = _mm256_loadu_ps(qp.add((kp + off) * r + j0 + 8));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(av, q0));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(av, q1));
+        }
+        let mut out = [0.0f32; 16];
+        // SAFETY: `out` is 16 floats, exactly two __m256.
+        _mm256_storeu_ps(out.as_mut_ptr(), acc0);
+        _mm256_storeu_ps(out.as_mut_ptr().add(8), acc1);
+        out
+    }
+
+    /// # Safety
+    /// CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn sgd_range(
+        p: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        mu: f32,
+        nesterov: bool,
+        wd: f32,
+    ) {
+        let n = p.len().min(v.len()).min(g.len());
+        let vlr = _mm256_set1_ps(lr);
+        let vmu = _mm256_set1_ps(mu);
+        let vwd = _mm256_set1_ps(wd);
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n = p.len() = v.len() = g.len().
+            let pv = _mm256_loadu_ps(p.as_ptr().add(i));
+            let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+            let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+            let d = _mm256_add_ps(gv, _mm256_mul_ps(vwd, pv));
+            let vnew = _mm256_add_ps(_mm256_mul_ps(vmu, vv), d);
+            let step = if nesterov { _mm256_add_ps(d, _mm256_mul_ps(vmu, vnew)) } else { vnew };
+            _mm256_storeu_ps(v.as_mut_ptr().add(i), vnew);
+            _mm256_storeu_ps(p.as_mut_ptr().add(i), _mm256_sub_ps(pv, _mm256_mul_ps(vlr, step)));
+            i += 8;
+        }
+        while i < n {
+            let mut d = g[i] + wd * p[i];
+            v[i] = mu * v[i] + d;
+            if nesterov {
+                d += mu * v[i];
+            } else {
+                d = v[i];
+            }
+            p[i] -= lr * d;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sign_sweep(out: &mut [f32], a: &mut [f32], scale: f32, inv: f32) {
+        let n = out.len().min(a.len());
+        let vscale = _mm256_set1_ps(scale);
+        let vinv = _mm256_set1_ps(inv);
+        let sign = _mm256_set1_ps(-0.0);
+        let one = _mm256_set1_ps(1.0);
+        let nan = _mm256_set1_ps(f32::NAN);
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n = out.len() = a.len().
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+            // f32::signum: copysign(1.0, v), except the CANONICAL NaN
+            // (not the input payload) for NaN lanes — blend it in under
+            // an unordered self-compare mask
+            let sgn = _mm256_or_ps(_mm256_and_ps(av, sign), one);
+            let isnan = _mm256_cmp_ps::<_CMP_UNORD_Q>(av, av);
+            let sgn = _mm256_blendv_ps(sgn, nan, isnan);
+            let q = _mm256_mul_ps(vscale, sgn);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(ov, _mm256_mul_ps(q, vinv)));
+            _mm256_storeu_ps(a.as_mut_ptr().add(i), _mm256_sub_ps(av, q));
+            i += 8;
+        }
+        while i < n {
+            let q = scale * a[i].signum();
+            out[i] += q * inv;
+            a[i] -= q;
+            i += 1;
+        }
+    }
+}
+
+/// Serializes tests that flip the process-global force-scalar override
+/// (cargo runs tests on parallel threads; a concurrent flip can't change
+/// any *bits* — that's the whole contract — but it could let an A/B test
+/// accidentally run the same backend twice).  Crate-internal so linalg's
+/// cross-backend tests share the same lock.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// Run `f` twice — once per backend — and hand both results to the
+    /// caller for bitwise comparison.  Restores the config override.
+    fn with_both_backends<T>(f: impl Fn() -> T) -> (T, T) {
+        set_force_scalar(false);
+        let auto = f();
+        set_force_scalar(true);
+        let scalar = f();
+        set_force_scalar(false);
+        (auto, scalar)
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn backend_selection_respects_the_config_override() {
+        let _guard = test_lock();
+        set_force_scalar(true);
+        assert_eq!(active(), Backend::Scalar);
+        set_force_scalar(false);
+        // auto mode is whatever the CPU supports — both names are valid
+        assert!(matches!(active().name(), "avx2" | "scalar"));
+    }
+
+    #[test]
+    fn elementwise_sweeps_are_bitwise_equal_across_backends() {
+        let _guard = test_lock();
+        // lengths straddle the 8-lane width to exercise the remainders
+        prop::check("simd-elementwise", 12, |rng| {
+            let n = 1 + rng.below(67);
+            let x = prop::vecf(rng, n, 2.0);
+            let y0 = prop::vecf(rng, n, 2.0);
+            let alpha = prop::vecf(rng, 1, 3.0)[0];
+            let (a, b) = with_both_backends(|| {
+                let mut y = y0.clone();
+                axpy(alpha, &x, &mut y);
+                let mut acc = y.clone();
+                vacc(&x, &mut acc);
+                let mut st = vec![0.0f32; n];
+                scale_store(alpha, &x, &mut st);
+                let mut ab = vec![0.0f32; n];
+                abs_fill(&y, &mut ab);
+                (bits(&y), bits(&acc), bits(&st), bits(&ab))
+            });
+            assert_eq!(a, b, "n={n}");
+        });
+    }
+
+    #[test]
+    fn epilogue_rows_match_including_negzero_and_nan() {
+        let _guard = test_lock();
+        let mut base = vec![1.5f32, -2.0, 0.0, -0.0, f32::NAN, 3.0, -4.5, 0.25, -1.0, 7.0];
+        base.extend((0..13).map(|i| (i as f32 - 6.0) * 0.3));
+        let b: Vec<f32> = (0..base.len()).map(|i| (i as f32 - 11.0) * 0.1).collect();
+        // activations straddle 0 and include -0.0 / NaN to pin the
+        // compare semantics
+        let mut m = base.clone();
+        m[2] = -0.0;
+        let (x, y) = with_both_backends(|| {
+            let mut o1 = base.clone();
+            bias_row(&mut o1, &b);
+            let mut o2 = base.clone();
+            bias_relu_row(&mut o2, &b);
+            let mut o3 = base.clone();
+            relu_mask_row(&mut o3, &m);
+            (bits(&o1), bits(&o2), bits(&o3))
+        });
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn dot_and_blocks_match_bitwise() {
+        let _guard = test_lock();
+        prop::check("simd-dot-blocks", 12, |rng| {
+            let k = 1 + rng.below(70);
+            let a = prop::vecf(rng, k, 1.5);
+            let bvec = prop::vecf(rng, k, 1.5);
+            let (da, db) = with_both_backends(|| dot(&a, &bvec).to_bits());
+            assert_eq!(da, db, "k={k}");
+
+            let r = 16 + rng.below(8);
+            let q = prop::vecf(rng, k * r, 1.0);
+            let (ba, bb) = with_both_backends(|| {
+                let b8 = nk_block8(&a, &q, r, 0, 3.min(r - 8));
+                let b16 = nk_block16(&a, &q, r, 0, 0);
+                (bits(&b8), bits(&b16))
+            });
+            assert_eq!(ba, bb, "k={k} r={r}");
+            // and the scalar twin is the same function
+            set_force_scalar(false);
+            assert_eq!(
+                bits(&nk_block8(&a, &q, r, 0, 0)),
+                bits(&nk_block_scalar::<8>(&a, &q, r, 0, 0))
+            );
+        });
+    }
+
+    #[test]
+    fn sgd_and_sign_sweeps_match_bitwise() {
+        let _guard = test_lock();
+        prop::check("simd-sgd-sign", 10, |rng| {
+            let n = 3 + rng.below(60);
+            let p0 = prop::vecf(rng, n, 1.0);
+            let v0 = prop::vecf(rng, n, 0.5);
+            let g = prop::vecf(rng, n, 1.0);
+            for nesterov in [false, true] {
+                let (a, b) = with_both_backends(|| {
+                    let mut p = p0.clone();
+                    let mut v = v0.clone();
+                    sgd_range(&mut p, &mut v, &g, 0.1, 0.9, nesterov, 5e-4);
+                    (bits(&p), bits(&v))
+                });
+                assert_eq!(a, b, "n={n} nesterov={nesterov}");
+            }
+            let mut a0 = p0.clone();
+            a0[0] = -0.0;
+            if n > 8 {
+                a0[8] = f32::NAN; // NaN lane: canonical-NaN blend path
+            }
+            let (sa, sb) = with_both_backends(|| {
+                let mut out = v0.clone();
+                let mut acc = a0.clone();
+                sign_sweep(&mut out, &mut acc, 0.37, 0.5);
+                (bits(&out), bits(&acc))
+            });
+            assert_eq!(sa, sb, "n={n}");
+        });
+    }
+}

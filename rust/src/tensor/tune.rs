@@ -1,0 +1,260 @@
+//! One-shot, bit-free kernel autotuner (DESIGN.md §6.1).
+//!
+//! Everything tuned here chooses BETWEEN bit-identical execution plans,
+//! never between numerics: the minimum multiply-accumulate count before
+//! a GEMM family hands its row partition to the `IntraPool`, and the
+//! element count below which the elementwise sweeps stay serial.  Both
+//! gates pick "serial kernel" vs "the same kernel row-partitioned", and
+//! DESIGN.md §6's partition-invariance is exactly the statement that the
+//! two produce the same bytes — so a threshold measured on THIS machine
+//! can differ from one measured on another without any run diverging.
+//! (That is also why the thresholds may come from wall-clock timing in a
+//! simulator that otherwise forbids it: time here steers scheduling,
+//! not results.)
+//!
+//! The measurement is one-shot per process, per (GEMM family × shape
+//! class): time the serial kernel on a probe shape (warmup + min-of-3,
+//! the same idiom as `cluster::simtime::measure_step_secs`), time the
+//! pool's two-barrier dispatch rendezvous on a throwaway 2-wide pool,
+//! and set the gate at ~2× the break-even work.  Results live in a
+//! process-global `OnceLock` — the same caching discipline as the
+//! measured layer-cost models, and the model `Registry` surfaces this
+//! profile right next to those (`Registry::kernel_tuning`).
+//!
+//! `RUST_PALLAS_NO_TUNE` (nonempty, not `"0"`) skips the measurement and
+//! pins the static defaults — useful when probing noise is unwanted
+//! (the bits cannot differ either way; only dispatch choices do).
+
+use crate::util::pool::{IntraPool, INTRA_SERIAL_CUTOFF};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The three GEMM data layouts of `tensor::linalg`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// y[n,r] = m[n,k] @ q[k,r] (forward / PowerSGD projection)
+    NkKr,
+    /// y[k,r] = m[n,k]ᵀ @ p[n,r] (weight grad / back-projection)
+    TnKr,
+    /// y[n,k] = p[n,r] @ q[k,r]ᵀ (backward dA / decompression)
+    NrRk,
+}
+
+/// Shape classes per family: `r <= 4` runs the const-R register paths,
+/// wider `r` the tiled/vector paths — different enough per-MAC costs
+/// that they get separate break-even gates.
+const NARROW: usize = 0;
+const WIDE: usize = 1;
+
+/// The bit-free dispatch parameters (see module docs).  All values gate
+/// choices between byte-identical plans.
+#[derive(Clone, Debug)]
+pub struct TuneProfile {
+    /// false = static defaults (no-tune env, or measurement declined)
+    pub measured: bool,
+    /// min MACs before pooled dispatch, per family × {narrow, wide}
+    pub gemm_min_macs: [[usize; 2]; 3],
+    /// elementwise sweeps shorter than this stay serial
+    pub elem_cutoff: usize,
+    /// measured two-barrier pool dispatch overhead (0 when static)
+    pub dispatch_ns: f64,
+}
+
+impl TuneProfile {
+    /// The static fallback: PR 5's hand-picked constants.
+    fn default_profile() -> TuneProfile {
+        TuneProfile {
+            measured: false,
+            gemm_min_macs: [[super::linalg::PAR_MIN_MACS; 2]; 3],
+            elem_cutoff: INTRA_SERIAL_CUTOFF,
+            dispatch_ns: 0.0,
+        }
+    }
+
+    /// One-line, comma-free description for the `RunLog` and the CSV
+    /// header comment (comma-free so `cut -d,`-based CSV tooling passes
+    /// the comment line through untouched).
+    pub fn describe(&self) -> String {
+        let m = &self.gemm_min_macs;
+        format!(
+            "{} nk={}/{} tn={}/{} nr={}/{} elem={} disp_ns={:.0}",
+            if self.measured { "measured" } else { "static" },
+            m[0][NARROW],
+            m[0][WIDE],
+            m[1][NARROW],
+            m[1][WIDE],
+            m[2][NARROW],
+            m[2][WIDE],
+            self.elem_cutoff,
+            self.dispatch_ns,
+        )
+    }
+}
+
+fn family_index(f: Family) -> usize {
+    match f {
+        Family::NkKr => 0,
+        Family::TnKr => 1,
+        Family::NrRk => 2,
+    }
+}
+
+/// The process-wide tuned profile (measured on first use).
+pub fn profile() -> &'static TuneProfile {
+    static PROFILE: OnceLock<TuneProfile> = OnceLock::new();
+    PROFILE.get_or_init(|| {
+        let no_tune = std::env::var("RUST_PALLAS_NO_TUNE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if no_tune {
+            TuneProfile::default_profile()
+        } else {
+            measure()
+        }
+    })
+}
+
+/// Pooled-dispatch gate for one GEMM call: MACs below this stay serial.
+#[inline]
+pub fn gemm_min_macs(f: Family, r: usize) -> usize {
+    let class = if r <= 4 { NARROW } else { WIDE };
+    profile().gemm_min_macs[family_index(f)][class]
+}
+
+/// Serial cutoff (in elements) for the elementwise sweeps.
+#[inline]
+pub fn elem_cutoff() -> usize {
+    profile().elem_cutoff
+}
+
+/// Warmup once, then min-of-3 timings of `reps` calls — the
+/// `measure_step_secs` idiom.  Returns ns per call.
+fn time_ns(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() * 1e9 / reps as f64);
+    }
+    best
+}
+
+/// Deterministic probe operand (no RNG dependency; values only need to
+/// be varied and finite — timing, not numerics, is consumed).
+fn probe_vec(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 23) as f32 - 11.0) * 0.043).collect()
+}
+
+/// Break-even gate: the dispatch rendezvous pays for itself once the
+/// serial kernel costs ~2× the rendezvous; clamp keeps a noisy probe
+/// from producing a degenerate gate in either direction.
+fn gate(dispatch_ns: f64, ns_per_unit: f64, lo: usize, hi: usize) -> usize {
+    if ns_per_unit.is_nan() || ns_per_unit <= 0.0 {
+        return hi;
+    }
+    ((2.0 * dispatch_ns / ns_per_unit) as usize).clamp(lo, hi)
+}
+
+fn measure() -> TuneProfile {
+    use super::linalg;
+    use std::hint::black_box;
+
+    // two-barrier rendezvous cost on a throwaway 2-wide pool (dropped —
+    // and its one OS thread joined — before the first training step)
+    let mut pool = IntraPool::new(2);
+    let dispatch_ns = time_ns(64, || {
+        pool.parallel_for(64, &|s, l| {
+            black_box((s, l));
+        });
+    });
+    drop(pool);
+
+    // serial ns/MAC per (family, shape class).  Probe shapes sit near
+    // the expected break-even region, one per const-R vs tiled class.
+    let (n, k) = (64usize, 64usize);
+    let mut gemm_min_macs = [[0usize; 2]; 3];
+    for (class, r) in [(NARROW, 4usize), (WIDE, 32usize)] {
+        let macs = (n * k * r) as f64;
+        let m = probe_vec(n * k);
+        let q = probe_vec(k * r);
+        let p = probe_vec(n * r);
+        let mut out_nk = vec![0.0f32; n * r];
+        let mut out_tn = vec![0.0f32; k * r];
+        let mut out_nr = vec![0.0f32; n * k];
+        let reps = 16;
+        let nk_ns = time_ns(reps, || {
+            linalg::gemm_nk_kr(&m, &q, n, k, r, &mut out_nk);
+            black_box(&out_nk);
+        });
+        let tn_ns = time_ns(reps, || {
+            linalg::gemm_tn_kr(&m, &p, n, k, r, &mut out_tn);
+            black_box(&out_tn);
+        });
+        let nr_ns = time_ns(reps, || {
+            linalg::gemm_nr_rk(&p, &q, n, k, r, &mut out_nr);
+            black_box(&out_nr);
+        });
+        for (fi, ns) in [nk_ns, tn_ns, nr_ns].into_iter().enumerate() {
+            gemm_min_macs[fi][class] = gate(dispatch_ns, ns / macs, 1024, 1 << 20);
+        }
+    }
+
+    // elementwise: ns/element of the axpy sweep
+    let en = 4096usize;
+    let x = probe_vec(en);
+    let mut y = probe_vec(en);
+    let axpy_ns = time_ns(32, || {
+        linalg::axpy(0.37, &x, &mut y);
+        black_box(&y);
+    });
+    let elem_cutoff = gate(dispatch_ns, axpy_ns / en as f64, 1024, 1 << 17);
+
+    TuneProfile { measured: true, gemm_min_macs, elem_cutoff, dispatch_ns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_is_cached_and_sane() {
+        let p1 = profile();
+        let p2 = profile();
+        // one-shot: same allocation, measured once per process
+        assert!(std::ptr::eq(p1, p2));
+        for fam in [Family::NkKr, Family::TnKr, Family::NrRk] {
+            for r in [1usize, 4, 5, 64] {
+                let g = gemm_min_macs(fam, r);
+                assert!((1024..=1 << 20).contains(&g), "{fam:?} r={r} gate={g}");
+            }
+        }
+        assert!((1024..=1 << 17).contains(&elem_cutoff()));
+    }
+
+    #[test]
+    fn describe_is_one_comma_free_line() {
+        let d = profile().describe();
+        assert!(!d.contains(',') && !d.contains('\n'), "{d}");
+        assert!(d.contains("nk=") && d.contains("elem="), "{d}");
+    }
+
+    #[test]
+    fn narrow_and_wide_classes_gate_independently() {
+        // r = 4 reads the narrow class, r = 5 the wide class — both from
+        // the same cached profile
+        let p = profile();
+        assert_eq!(gemm_min_macs(Family::NkKr, 4), p.gemm_min_macs[0][NARROW]);
+        assert_eq!(gemm_min_macs(Family::NkKr, 5), p.gemm_min_macs[0][WIDE]);
+    }
+
+    #[test]
+    fn gate_clamps_degenerate_probes() {
+        assert_eq!(gate(1e9, 1e-6, 1024, 1 << 20), 1 << 20);
+        assert_eq!(gate(0.0, 1.0, 1024, 1 << 20), 1024);
+        assert_eq!(gate(100.0, 0.0, 1024, 1 << 20), 1 << 20);
+        assert_eq!(gate(100.0, f64::NAN, 1024, 1 << 20), 1 << 20);
+    }
+}

@@ -224,6 +224,13 @@ pub struct TrainConfig {
     /// ([`CostModel::codec_secs_per_flop`](crate::cluster::simtime::CostModel)),
     /// so measured-mode calibration covers the codec too
     pub codec_gflops: f64,
+    /// force the scalar kernel backend even where AVX2 is available
+    /// (`kernel.force_scalar`, or the `RUST_PALLAS_FORCE_SCALAR` env
+    /// var): the A/B switch CI's determinism lane byte-diffs against
+    /// the auto-dispatched run.  Never changes results — the backends
+    /// are bitwise identical by the lane contract (DESIGN.md §6.1) —
+    /// only throughput.
+    pub force_scalar: bool,
 }
 
 impl Default for TrainConfig {
@@ -265,6 +272,7 @@ impl Default for TrainConfig {
             gflops: crate::cluster::simtime::DEFAULT_GFLOPS,
             charge_codec: false,
             codec_gflops: 0.0,
+            force_scalar: false,
         }
     }
 }
@@ -413,6 +421,7 @@ impl TrainConfig {
             gflops: t.f64_or("time.gflops", d.gflops),
             charge_codec: t.bool_or("time.charge_codec", d.charge_codec),
             codec_gflops: t.f64_or("time.codec_gflops", d.codec_gflops),
+            force_scalar: t.bool_or("kernel.force_scalar", d.force_scalar),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -708,6 +717,16 @@ drop_prob = 0.05
         // the CLI spelling CI's determinism lane uses
         let t2 = Table::parse("time.charge_codec = true").unwrap();
         assert!(TrainConfig::from_table(&t2).unwrap().charge_codec);
+    }
+
+    #[test]
+    fn force_scalar_key_parses_with_off_default() {
+        assert!(!TrainConfig::default().force_scalar);
+        let t = Table::parse("[kernel]\nforce_scalar = true").unwrap();
+        assert!(TrainConfig::from_table(&t).unwrap().force_scalar);
+        // the CLI spelling (`--set kernel.force_scalar=true`)
+        let t2 = Table::parse("kernel.force_scalar = true").unwrap();
+        assert!(TrainConfig::from_table(&t2).unwrap().force_scalar);
     }
 
     #[test]

@@ -83,14 +83,14 @@ use crate::cluster::network::NetworkModel;
 use crate::cluster::simtime::{self, CostModel, SimClock};
 use crate::cluster::topology::Topology;
 use crate::collectives::{Comm, Transport};
-use crate::compress::{DistCompressor, Level};
+use crate::compress::{DistCompressor, Level, RoundCtx, Sharding};
 use crate::coordinator::{Controller, Decision, EpochObs};
 use crate::data::{Batch, Dataset, EpochSampler};
 use crate::metrics::{EpochStats, RunLog};
 use crate::models::{ModelMeta, Registry};
 use crate::optim::{LrSchedule, Sgd};
 use crate::runtime::{ModelPrograms, Runtime};
-use crate::tensor::Tensor;
+use crate::tensor::{simd, tune, Tensor};
 use crate::util::pool::{IntraPool, SendPtr, WorkerPool};
 use crate::util::workspace::Workspace;
 use anyhow::{bail, Result};
@@ -123,6 +123,50 @@ pub fn dataset_for(cfg: &TrainConfig, reg: &Registry) -> Result<Dataset> {
             cfg.seed,
         )
     })
+}
+
+/// Wall-clock probe behind the measured codec calibration: time a few
+/// dense rounds of this config's compressor on a synthetic gradient of
+/// `shape`, and split the per-round seconds into `(encode, decode)` by
+/// the flop model's encode/decode ratio.  Cached per (method, shape) by
+/// [`Registry::cached_codec`], so it runs once per process — host-
+/// dependent by nature (like the measured layer cost models), which is
+/// why flops mode never calls it.
+fn measure_codec_secs(cfg: &TrainConfig, shape: &[usize]) -> (f64, f64) {
+    let numel: usize = shape.iter().product();
+    let mut comp = cfg.build_compressor();
+    let mut rng = crate::util::rng::Rng::new(cfg.seed | 1);
+    let grads: Vec<Vec<f32>> = (0..cfg.workers.max(1)).map(|_| rng.normals(numel)).collect();
+    let views: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+    let mut comm = Comm::new(NetworkModel::new(cfg.workers, cfg.bandwidth_mbps, cfg.latency_us));
+    let mut out = vec![0.0f32; numel];
+    let mut ws = Workspace::new();
+    let mut round = |comp: &mut Box<dyn DistCompressor>, comm: &mut Comm| {
+        let mut ctx = RoundCtx {
+            layer: 0,
+            grads: &views,
+            shape,
+            level: Level::High,
+            sharding: Sharding::Dense,
+            comm,
+            out: &mut out,
+            ws: &mut ws,
+            genuine_shard: false,
+        };
+        comp.round(&mut ctx);
+    };
+    // warm-up: first-touch allocations and EF state must not bill
+    round(&mut comp, &mut comm);
+    const REPS: u32 = 3;
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        round(&mut comp, &mut comm);
+    }
+    let per_round = t0.elapsed().as_secs_f64() / REPS as f64;
+    let f = comp.codec_flops(shape, Level::High);
+    let (ef, df) = (f.encode as f64, f.decode as f64);
+    let denom = (ef + df).max(1.0);
+    (per_round * ef / denom, per_round * df / denom)
 }
 
 /// Run one full training job; returns the per-epoch log.
@@ -292,6 +336,15 @@ pub struct Trainer<'a> {
 impl<'a> Trainer<'a> {
     pub fn new(cfg: &'a TrainConfig, reg: &Registry, rt: &'a Runtime) -> Result<Trainer<'a>> {
         cfg.validate()?;
+        // install the kernel backend choice FIRST (before any kernel —
+        // calibration probes included — runs or the backend is logged),
+        // then force the one-shot bit-free autotuner to measure now so
+        // its probes never land inside a counted step.  Neither choice
+        // can change results: backends and tuned dispatch gates are
+        // bitwise identical by the lane contract (DESIGN.md §6/§6.1).
+        simd::set_force_scalar(cfg.force_scalar);
+        let backend = simd::active().name();
+        let tuner_line = tune::describe();
         let meta = reg.model(&cfg.model)?.clone();
         let progs = ModelPrograms::new(&meta)?;
         let params = reg.load_init(&meta)?;
@@ -363,6 +416,28 @@ impl<'a> Trainer<'a> {
             for c in comms.iter_mut() {
                 c.codec_rate = rate;
             }
+            // measured codec calibration: under `time.model = "measured"`
+            // (and no explicit gflops override) each compressible layer's
+            // codec rate comes from one wall-clock probe of its own
+            // compressor on its own shape — measured once per (method,
+            // shape) per process and cached in the registry exactly like
+            // the layer cost models.  Flops mode keeps the modeled rate
+            // and stays bit-identical across hosts.
+            if cfg.time_model == TimeModelCfg::Measured && cfg.codec_gflops <= 0.0 {
+                for (l, spec) in meta.params.iter().enumerate() {
+                    if !spec.compressible() {
+                        continue;
+                    }
+                    let key = format!("{}|{:?}", compressors[l].name(), spec.shape);
+                    let (enc, dec) =
+                        reg.cached_codec(&key, || Ok(measure_codec_secs(cfg, &spec.shape)))?;
+                    let f = compressors[l].codec_flops(&spec.shape, Level::High);
+                    let flops = (f.encode + f.decode) as f64;
+                    if flops > 0.0 && enc + dec > 0.0 {
+                        comms[l].codec_rate = (enc + dec) / flops;
+                    }
+                }
+            }
         }
         let bucketizer =
             if cfg.bucket_kb > 0 { Some(Bucketizer::new(cfg.bucket_kb)) } else { None };
@@ -408,6 +483,8 @@ impl<'a> Trainer<'a> {
         let log = RunLog {
             label: cfg.label.clone(),
             transport: transport.name().to_string(),
+            backend: backend.to_string(),
+            tuner: tuner_line,
             ..Default::default()
         };
         let decision = Decision::uniform(n_layers, Level::High);

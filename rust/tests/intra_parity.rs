@@ -46,10 +46,12 @@ fn cfg(
     }
 }
 
-/// The CSV minus its trailing wall_secs debug column (the same cut the
-/// CI determinism lane applies).
+/// The CSV minus `#` comment lines (host-dependent kernel backend +
+/// tuner metadata) and the trailing wall_secs debug column — the same
+/// `grep -v '^#' | cut -d, -f1-13` the CI determinism lane applies.
 fn strip_wall(csv: &str) -> String {
     csv.lines()
+        .filter(|l| !l.starts_with('#'))
         .map(|l| l.rsplit_once(',').map(|(head, _)| head).unwrap_or(l))
         .collect::<Vec<_>>()
         .join("\n")
@@ -163,6 +165,83 @@ fn intra_composes_with_the_inter_op_engine() {
         )
         .unwrap();
         assert_bitwise_run_parity(&oracle, &got, &format!("compose {transport:?}"));
+    }
+}
+
+#[test]
+fn forced_scalar_lane_matches_auto_dispatch_byte_for_byte() {
+    // DESIGN.md §6.1: the AVX2 and scalar kernel backends run the SAME
+    // serial arithmetic per output element, so `kernel.force_scalar`
+    // must not move a bit anywhere — composed with intra widths and
+    // both transports.  PowerSGD leans on the GEMM block kernels, TopK
+    // on the magnitude-fill and EF sweeps.
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let methods: Vec<(&str, MethodCfg)> = vec![
+        ("powersgd", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+        ("topk", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 }),
+    ];
+    for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+        for (mname, method) in &methods {
+            let ctx = format!("scalar-ab/{mname}/{transport:?}");
+            let oracle = train::run_full(
+                &cfg(&format!("{ctx}/auto-i1"), method.clone(), transport, 1, 1),
+                &reg,
+                &rt,
+            )
+            .unwrap();
+            for (forced, intra) in [(false, 4usize), (true, 1), (true, 4)] {
+                let lane = if forced { "scalar" } else { "auto" };
+                let mut c = cfg(
+                    &format!("{ctx}/{lane}-i{intra}"),
+                    method.clone(),
+                    transport,
+                    1,
+                    intra,
+                );
+                c.force_scalar = forced;
+                let got = train::run_full(&c, &reg, &rt).unwrap();
+                if forced {
+                    assert_eq!(got.0.backend, "scalar", "{ctx}: forced run must record scalar");
+                }
+                assert_bitwise_run_parity(&oracle, &got, &format!("{ctx} {lane} intra x{intra}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn conv_and_lm_shapes_hold_intra_parity_on_both_transports() {
+    // The two new model shapes end-to-end: conv_c10's rank-4 HWIO
+    // kernel exercises the flattened (72+)x-co matrix view PowerSGD
+    // compresses, and lm_small drives the one-hot token workspace with
+    // TopK — the paper's LM pairing.  Same zero-tolerance contract.
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let cases: Vec<(&str, MethodCfg)> = vec![
+        ("conv_c10", MethodCfg::PowerSgd { rank_low: 2, rank_high: 1 }),
+        ("lm_small", MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 }),
+    ];
+    for transport in [TransportCfg::Dense, TransportCfg::Sharded] {
+        for (model, method) in &cases {
+            let mk = |intra: usize| TrainConfig {
+                model: (*model).into(),
+                ..cfg(
+                    &format!("shape/{model}/{transport:?}/i{intra}"),
+                    method.clone(),
+                    transport,
+                    1,
+                    intra,
+                )
+            };
+            let oracle = train::run_full(&mk(1), &reg, &rt).unwrap();
+            let got = train::run_full(&mk(4), &reg, &rt).unwrap();
+            assert_bitwise_run_parity(&oracle, &got, &format!("{model}/{transport:?}"));
+            assert!(
+                oracle.0.epochs.iter().all(|e| e.train_loss.is_finite()),
+                "{model}: loss diverged"
+            );
+        }
     }
 }
 
