@@ -104,6 +104,7 @@ fn main() {
         slow_max: 1.5,
         drop_prob: 0.0,
         down_epochs: 1,
+        crash_prob: 0.0,
     };
     let base = train::run(
         &cfg(

@@ -43,6 +43,13 @@ pub struct FaultCfg {
     pub drop_prob: f64,
     /// whole epochs a dropped worker stays down before rejoining
     pub down_epochs: usize,
+    /// per-step probability of an unrecoverable whole-run crash —
+    /// consumed by the self-healing supervisor (`train::Trainer`)
+    /// through `cluster::unreliable::crash_at`, a salted stream
+    /// independent of this schedule's three-draw-per-rank stream, so
+    /// existing seeds replay their epoch weather unchanged.  Takes
+    /// effect only when auto-checkpointing is on (`ckpt.auto_every`).
+    pub crash_prob: f64,
 }
 
 impl FaultCfg {
@@ -58,11 +65,15 @@ impl FaultCfg {
             slow_max: 1.5 + 2.5 * i,
             drop_prob: 0.1 * i,
             down_epochs: 1,
+            crash_prob: 0.0,
         }
     }
 
     pub fn validate(&self) -> Result<(), String> {
-        if !(0.0..=1.0).contains(&self.slow_prob) || !(0.0..=1.0).contains(&self.drop_prob) {
+        if !(0.0..=1.0).contains(&self.slow_prob)
+            || !(0.0..=1.0).contains(&self.drop_prob)
+            || !(0.0..=1.0).contains(&self.crash_prob)
+        {
             return Err("faults: probabilities must be in [0, 1]".into());
         }
         if self.slow_min < 1.0 || self.slow_max < self.slow_min {
@@ -206,6 +217,7 @@ mod tests {
             slow_max: 4.0,
             drop_prob: 0.4,
             down_epochs: 2,
+            crash_prob: 0.0,
         }
     }
 
@@ -328,6 +340,8 @@ mod tests {
         assert!(FaultCfg { slow_min: 0.5, ..stormy() }.validate().is_err());
         assert!(FaultCfg { slow_max: 1.0, ..stormy() }.validate().is_err());
         assert!(FaultCfg { down_epochs: 0, ..stormy() }.validate().is_err());
+        assert!(FaultCfg { crash_prob: 1.5, ..stormy() }.validate().is_err());
+        assert!(FaultCfg { crash_prob: 0.1, ..stormy() }.validate().is_ok());
         assert!(stormy().validate().is_ok());
     }
 }

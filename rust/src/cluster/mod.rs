@@ -13,12 +13,16 @@
 //! the single shared link to a fast-intra / slow-cross link matrix, and
 //! `faults` adds a seeded schedule of stragglers, drops, and rejoins —
 //! both deterministic, both degenerating bit-exactly to the homogeneous
-//! fault-free model when disabled.
+//! fault-free model when disabled.  `unreliable` drops below the worker
+//! granularity to individual messages: a seeded per-collective loss
+//! process with retry/backoff pricing and quorum degradation, plus the
+//! step-granular crash stream the self-healing supervisor consumes.
 
 pub mod bucket;
 pub mod faults;
 pub mod network;
 pub mod simtime;
 pub mod topology;
+pub mod unreliable;
 
 pub use topology::{LinkSpec, Topology};

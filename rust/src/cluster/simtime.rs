@@ -146,7 +146,7 @@ impl SimClock {
 }
 
 /// Scheduled times for one global step.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct StepTimes {
     /// modeled compute incl. the optimizer serialization point
     pub compute: f64,
@@ -155,7 +155,7 @@ pub struct StepTimes {
     pub comm: f64,
     /// overlap-aware end-to-end step time
     pub overlapped: f64,
-    /// old-style serialized charge: compute + comm
+    /// old-style serialized charge: compute + comm (+ retry)
     pub serialized: f64,
     /// compressor codec seconds charged this step (encode + decode,
     /// straggler-scaled) — already included in `compute`, `overlapped`
@@ -163,6 +163,18 @@ pub struct StepTimes {
     /// report the charge without re-deriving it.  Exactly 0.0 under
     /// [`CodecCharge::NONE`].
     pub codec: f64,
+    /// Σ per-layer collective seconds alone (`comm` without the
+    /// rebuild term) — the wire channel of the per-step decomposition
+    /// `serialized = compute + wire + rebuild + retry`, each term
+    /// bitwise reproducible from the ledger snapshots
+    pub wire: f64,
+    /// post-optimizer parameter-rebuild seconds (the `rebuild_secs`
+    /// argument, echoed back for the decomposition)
+    pub rebuild: f64,
+    /// message-loss retry/backoff seconds charged this step
+    /// (`Ledger::retry_secs` delta) — included in `overlapped` and
+    /// `serialized`; exactly 0.0 on a reliable network
+    pub retry: f64,
 }
 
 /// Compressor codec compute charges for one global step, fed to the
@@ -263,6 +275,31 @@ pub fn step_times_coded_slowed(
     slow: f64,
     codec: CodecCharge<'_>,
 ) -> StepTimes {
+    step_times_full(cost, batch_mult, comm_secs, rebuild_secs, slow, codec, 0.0)
+}
+
+/// The deepest tier of the per-layer scheduler: [`step_times_coded_slowed`]
+/// plus the message-loss retry channel.  `retry_secs` is this step's
+/// `Ledger::retry_secs` delta — backoff'd detection timeouts plus full
+/// α–β re-charges of lost collectives (`cluster::unreliable`).
+///
+/// Placement: retransmissions straggle in AFTER the main stream, so the
+/// retry seconds extend the drained channel before decode (the
+/// aggregate is incomplete until the retried payloads land, and decode
+/// then the optimizer wait for all of it).  Both disciplines pay the
+/// full charge, so the overlap saving is retry-independent.  Retry
+/// terms are NOT scaled by `slow` — timeouts and wire re-charges are
+/// network terms, not straggler compute.  `retry_secs = 0.0` (guarded,
+/// not added) is bit-identical to the pre-retry schedule.
+pub fn step_times_full(
+    cost: &CostModel,
+    batch_mult: usize,
+    comm_secs: &[f64],
+    rebuild_secs: f64,
+    slow: f64,
+    codec: CodecCharge<'_>,
+    retry_secs: f64,
+) -> StepTimes {
     debug_assert_eq!(comm_secs.len(), cost.bwd_secs.len());
     debug_assert!(slow >= 1.0);
     let mult = batch_mult.max(1) as f64;
@@ -287,6 +324,9 @@ pub fn step_times_coded_slowed(
     // operations in the same order)
     let compute_end = ready;
     let mut drained = if net_free > compute_end { net_free } else { compute_end };
+    if retry_secs != 0.0 {
+        drained += retry_secs;
+    }
     let opt = cost.opt_secs * slow;
     let mut compute = compute_end + opt;
     if codec.decode_secs != 0.0 {
@@ -297,12 +337,19 @@ pub fn step_times_coded_slowed(
         compute += dec;
         codec_sum += dec;
     }
+    let mut serialized = compute + comm_sum + rebuild_secs;
+    if retry_secs != 0.0 {
+        serialized += retry_secs;
+    }
     StepTimes {
         compute,
         comm: comm_sum + rebuild_secs,
         overlapped: drained + opt + rebuild_secs,
-        serialized: compute + comm_sum + rebuild_secs,
+        serialized,
         codec: codec_sum,
+        wire: comm_sum,
+        rebuild: rebuild_secs,
+        retry: retry_secs,
     }
 }
 
@@ -369,6 +416,27 @@ pub fn step_times_bucketed_coded_slowed(
     slow: f64,
     codec: CodecCharge<'_>,
 ) -> StepTimes {
+    step_times_bucketed_full(cost, batch_mult, charges, rebuild_secs, slow, codec, 0.0)
+}
+
+/// The deepest tier of the bucketed scheduler: the retry channel
+/// threaded into [`step_times_bucketed_coded_slowed`], with exactly the
+/// placement and scaling rules of [`step_times_full`].  The bucket
+/// planner itself never sees retries — a retransmission resends the
+/// original collective's payload, and a straggling re-launch cannot
+/// coalesce with buckets that already flushed — so the retry charge
+/// enters here as the same post-drain scalar as in the per-layer
+/// schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn step_times_bucketed_full(
+    cost: &CostModel,
+    batch_mult: usize,
+    charges: &[crate::cluster::bucket::BucketCharge],
+    rebuild_secs: f64,
+    slow: f64,
+    codec: CodecCharge<'_>,
+    retry_secs: f64,
+) -> StepTimes {
     debug_assert!(slow >= 1.0);
     let mult = batch_mult.max(1) as f64;
     let base = (mult - 1.0) * (cost.micro_secs() * slow) + cost.fwd_secs * slow;
@@ -401,6 +469,9 @@ pub fn step_times_bucketed_coded_slowed(
     );
     let compute_end = ready;
     let mut drained = if net_free > compute_end { net_free } else { compute_end };
+    if retry_secs != 0.0 {
+        drained += retry_secs;
+    }
     let opt = cost.opt_secs * slow;
     let mut compute = compute_end + opt;
     if codec.decode_secs != 0.0 {
@@ -409,12 +480,19 @@ pub fn step_times_bucketed_coded_slowed(
         compute += dec;
         codec_sum += dec;
     }
+    let mut serialized = compute + comm_sum + rebuild_secs;
+    if retry_secs != 0.0 {
+        serialized += retry_secs;
+    }
     StepTimes {
         compute,
         comm: comm_sum + rebuild_secs,
         overlapped: drained + opt + rebuild_secs,
-        serialized: compute + comm_sum + rebuild_secs,
+        serialized,
         codec: codec_sum,
+        wire: comm_sum,
+        rebuild: rebuild_secs,
+        retry: retry_secs,
     }
 }
 
@@ -720,6 +798,101 @@ mod tests {
             assert!((a.overlapped - b.overlapped).abs() < 1e-12, "{a:?} vs {b:?}");
             assert!((a.serialized - b.serialized).abs() < 1e-12);
             assert_eq!(a.codec.to_bits(), b.codec.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_retry_is_bit_identical() {
+        // the reliable path delegates with retry 0.0: every field of the
+        // pre-retry schedule must match to the bit, per-layer and
+        // bucketed alike, and the channel fields decompose serialized
+        use crate::cluster::bucket::BucketCharge;
+        let codec = CodecCharge { encode_secs: &[0.5, 0.25], decode_secs: 1.5 };
+        for comm in [[4.0, 1.0], [100.0, 100.0], [0.0, 0.0]] {
+            let a = step_times_coded_slowed(&cost2(), 2, &comm, 0.5, 1.5, codec);
+            let b = step_times_full(&cost2(), 2, &comm, 0.5, 1.5, codec, 0.0);
+            assert_eq!(a.compute.to_bits(), b.compute.to_bits());
+            assert_eq!(a.comm.to_bits(), b.comm.to_bits());
+            assert_eq!(a.overlapped.to_bits(), b.overlapped.to_bits());
+            assert_eq!(a.serialized.to_bits(), b.serialized.to_bits());
+            assert_eq!(b.retry.to_bits(), 0.0f64.to_bits());
+            assert_eq!(b.wire.to_bits(), (comm[0] + comm[1]).to_bits());
+            assert_eq!(b.rebuild.to_bits(), 0.5f64.to_bits());
+            // the per-channel decomposition is exact even at retry 0
+            assert_eq!(
+                b.serialized.to_bits(),
+                (((b.compute + b.wire) + b.rebuild) + b.retry).to_bits()
+            );
+        }
+        let charges = [
+            BucketCharge { lo_layer: 1, secs: 1.0 },
+            BucketCharge { lo_layer: 0, secs: 4.0 },
+        ];
+        let a = step_times_bucketed_coded_slowed(&cost2(), 2, &charges, 0.5, 1.5, codec);
+        let b = step_times_bucketed_full(&cost2(), 2, &charges, 0.5, 1.5, codec, 0.0);
+        assert_eq!(a.overlapped.to_bits(), b.overlapped.to_bits());
+        assert_eq!(a.serialized.to_bits(), b.serialized.to_bits());
+        assert_eq!(b.retry, 0.0);
+    }
+
+    #[test]
+    fn retry_extends_the_drain_and_both_disciplines() {
+        // hand schedule on cost2 + comm [4, 1]: channel drains at 10,
+        // retries straggle 2s more -> 12, optimizer -> 12.5.  serialized
+        // 11.5 + 2 = 13.5, so the overlap saving is retry-independent.
+        let t = step_times_full(&cost2(), 1, &[4.0, 1.0], 0.0, 1.0, CodecCharge::NONE, 2.0);
+        assert!((t.overlapped - 12.5).abs() < 1e-12, "{t:?}");
+        assert!((t.serialized - 13.5).abs() < 1e-12, "{t:?}");
+        assert_eq!(t.retry.to_bits(), 2.0f64.to_bits());
+        let free = step_times(&cost2(), 1, &[4.0, 1.0], 0.0);
+        let saved = t.serialized - t.overlapped;
+        let saved0 = free.serialized - free.overlapped;
+        assert!((saved - saved0).abs() < 1e-12, "retry must not change the saving");
+        // decode waits for the retried payloads: drained 12 + dec 2 ->
+        // 14, opt -> 14.5; serialized (6.5+2) + 5 + 0 + 2 = 15.5
+        let codec = CodecCharge { encode_secs: &[], decode_secs: 2.0 };
+        let td = step_times_full(&cost2(), 1, &[4.0, 1.0], 0.0, 1.0, codec, 2.0);
+        assert!((td.overlapped - 14.5).abs() < 1e-12, "{td:?}");
+        assert!((td.serialized - 15.5).abs() < 1e-12, "{td:?}");
+        // retry is NOT scaled by the straggler multiplier: slow=2 doubles
+        // compute (overlap 17) but the retry tail stays 2s -> 19
+        let ts = step_times_full(&cost2(), 1, &[4.0, 1.0], 0.0, 2.0, CodecCharge::NONE, 2.0);
+        assert!((ts.overlapped - 19.0).abs() < 1e-12, "{ts:?}");
+        assert_eq!(ts.retry.to_bits(), 2.0f64.to_bits());
+        // the decomposition identity, in the scheduler's own association
+        for x in [t, td, ts] {
+            assert_eq!(
+                x.serialized.to_bits(),
+                (((x.compute + x.wire) + x.rebuild) + x.retry).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn bucketed_retry_matches_singleton_layer_schedule() {
+        use crate::cluster::bucket::BucketCharge;
+        let comm = [4.0, 1.0];
+        let charges = [
+            BucketCharge { lo_layer: 1, secs: comm[1] },
+            BucketCharge { lo_layer: 0, secs: comm[0] },
+        ];
+        for retry in [0.0, 2.0, 0.125] {
+            for slow in [1.0, 2.0] {
+                let a =
+                    step_times_full(&cost2(), 1, &comm, 0.5, slow, CodecCharge::NONE, retry);
+                let b = step_times_bucketed_full(
+                    &cost2(),
+                    1,
+                    &charges,
+                    0.5,
+                    slow,
+                    CodecCharge::NONE,
+                    retry,
+                );
+                assert!((a.overlapped - b.overlapped).abs() < 1e-12, "{a:?} vs {b:?}");
+                assert!((a.serialized - b.serialized).abs() < 1e-12);
+                assert_eq!(a.retry.to_bits(), b.retry.to_bits());
+            }
         }
     }
 

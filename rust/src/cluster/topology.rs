@@ -28,22 +28,36 @@
 
 use crate::cluster::network::NetworkModel;
 
-/// One link class: the α–β parameters of a point-to-point connection.
+/// One link class: the α–β parameters of a point-to-point connection,
+/// plus its per-attempt message-loss probability (0 = reliable — the
+/// default every pre-loss construction site keeps).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LinkSpec {
     pub bandwidth_mbps: f64,
     pub latency_us: f64,
+    /// probability that one collective attempt over this link is lost
+    /// (`cluster::unreliable` draws the fates; 0 disables the process)
+    pub loss_prob: f64,
 }
 
 impl LinkSpec {
+    /// A reliable link (`loss_prob = 0`): the spelling every pre-loss
+    /// call site and test fixture uses.
+    pub fn reliable(bandwidth_mbps: f64, latency_us: f64) -> LinkSpec {
+        LinkSpec { bandwidth_mbps, latency_us, loss_prob: 0.0 }
+    }
+
     /// The slower of two link classes under the α–β model: higher
-    /// latency wins the α term, lower bandwidth wins the β term.  The
-    /// bottleneck of a ring mixing both classes pays the worst of each
-    /// (a ring stalls on its slowest hop for every term).
+    /// latency wins the α term, lower bandwidth wins the β term — and
+    /// the lossier link wins the loss term (a ring is as unreliable as
+    /// its worst hop).  The bottleneck of a ring mixing both classes
+    /// pays the worst of each (a ring stalls on its slowest hop for
+    /// every term).
     pub fn bottleneck(a: LinkSpec, b: LinkSpec) -> LinkSpec {
         LinkSpec {
             bandwidth_mbps: a.bandwidth_mbps.min(b.bandwidth_mbps),
             latency_us: a.latency_us.max(b.latency_us),
+            loss_prob: a.loss_prob.max(b.loss_prob),
         }
     }
 }
@@ -103,6 +117,13 @@ impl Topology {
         let link = self.ring_link(active);
         NetworkModel::new(active.len(), link.bandwidth_mbps, link.latency_us)
     }
+
+    /// Per-attempt loss probability of a ring over `active`: the
+    /// bottleneck link's `loss_prob` (the ring is as unreliable as its
+    /// worst traversed hop — same rule as the α–β terms).
+    pub fn ring_loss(&self, active: &[usize]) -> f64 {
+        self.ring_link(active).loss_prob
+    }
 }
 
 #[cfg(test)]
@@ -110,10 +131,10 @@ mod tests {
     use super::*;
 
     fn fast() -> LinkSpec {
-        LinkSpec { bandwidth_mbps: 1000.0, latency_us: 5.0 }
+        LinkSpec::reliable(1000.0, 5.0)
     }
     fn slow() -> LinkSpec {
-        LinkSpec { bandwidth_mbps: 100.0, latency_us: 50.0 }
+        LinkSpec::reliable(100.0, 50.0)
     }
 
     #[test]
@@ -158,12 +179,28 @@ mod tests {
 
     #[test]
     fn bottleneck_takes_the_worst_of_each_term() {
-        // pathological classes: one wins latency, the other bandwidth
-        let a = LinkSpec { bandwidth_mbps: 1000.0, latency_us: 80.0 };
-        let b = LinkSpec { bandwidth_mbps: 50.0, latency_us: 5.0 };
+        // pathological classes: one wins latency, the other bandwidth,
+        // and loss follows the same worst-of rule
+        let a = LinkSpec { bandwidth_mbps: 1000.0, latency_us: 80.0, loss_prob: 0.02 };
+        let b = LinkSpec { bandwidth_mbps: 50.0, latency_us: 5.0, loss_prob: 0.3 };
         let w = LinkSpec::bottleneck(a, b);
         assert_eq!(w.bandwidth_mbps, 50.0);
         assert_eq!(w.latency_us, 80.0);
+        assert_eq!(w.loss_prob, 0.3);
+    }
+
+    #[test]
+    fn ring_loss_follows_the_bottleneck_link() {
+        // lossy cross fabric, clean intra links: a single-node ring is
+        // reliable, any node-crossing ring pays the cross loss
+        let lossy_cross = LinkSpec { loss_prob: 0.25, ..slow() };
+        let t = Topology::new(4, 2, fast(), lossy_cross);
+        assert_eq!(t.ring_loss(&[0, 1]), 0.0);
+        assert_eq!(t.ring_loss(&[0, 1, 2, 3]), 0.25);
+        // and a lossier intra link wins even on a crossing ring
+        let lossy_intra = LinkSpec { loss_prob: 0.5, ..fast() };
+        let t2 = Topology::new(4, 2, lossy_intra, lossy_cross);
+        assert_eq!(t2.ring_loss(&[0, 1, 2, 3]), 0.5);
     }
 
     #[test]

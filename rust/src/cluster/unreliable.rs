@@ -1,0 +1,303 @@
+//! Message-level unreliable network: a seeded per-collective fault
+//! process deciding loss, retry, and quorum degradation.
+//!
+//! PR 6's fault model is epoch-granular — whole workers drop and rejoin
+//! at epoch boundaries.  Real clusters also lose *individual messages*
+//! mid-step (Han et al. 2407.01378 judges compression schemes under
+//! exactly that weather), so this module extends the deterministic sim
+//! from "workers fail" to "collectives fail".
+//!
+//! Determinism contract, mirroring `FaultSchedule`'s three-draw rule:
+//! every collective event draws a **fixed budget** of variates from a
+//! stream whose position is a pure function of `(seed, step, event)` —
+//! `max_retries + 1` attempt draws plus one victim draw, consumed
+//! whatever the outcomes.  Each event forks its own generator from the
+//! key pair, so concurrent layer tasks can evaluate their events in any
+//! host order and still replay byte-for-byte across `--threads`,
+//! `--intra-threads`, transports, and reruns.
+//!
+//! Semantics per event (one collective on the active ring):
+//!
+//!  * each attempt is lost with the bottleneck link's `loss_prob`
+//!    ([`crate::cluster::topology::LinkSpec::loss_prob`], or the shared
+//!    `net.loss_prob`);
+//!  * a lost attempt costs one timeout (exponential backoff: `timeout *
+//!    backoff^k` for the k-th detection) plus a full re-charge of the
+//!    collective's α–β cost, accumulated into `Ledger.retry_secs` —
+//!    never into the primary wire channel, so the repricing invariant
+//!    of the event stream is untouched;
+//!  * when all `max_retries + 1` attempts are lost the event is
+//!    **degraded**: the step proceeds on a quorum that excludes one
+//!    victim contributor (the slot the ring stalled on — drawn from the
+//!    same stream), the mean is rescaled by the responders, and the
+//!    victim's error-feedback is reset (`collectives::Comm` and the
+//!    trainer implement those consequences).
+//!
+//! The module also hosts the step-granular unrecoverable-crash stream
+//! ([`crash_at`]) the self-healing supervisor consumes: an independent
+//! forked stream, so enabling crashes never moves the loss draws (and
+//! vice versa), and existing `FaultSchedule` seeds replay unchanged.
+
+use crate::util::rng::Rng;
+
+/// Domain-separation salts: loss and crash streams never collide with
+/// each other or with the run/data seeds they are derived from.
+const LOSS_STREAM: u64 = 0x4C4F_5353; // "LOSS"
+const CRASH_STREAM: u64 = 0x4352_5348; // "CRSH"
+
+/// Knobs of the message-loss process (TOML `[net]`, `--set net.*`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LossCfg {
+    /// seed of the loss stream (the run seed; salted internally)
+    pub seed: u64,
+    /// per-attempt loss probability of the bottleneck link
+    pub loss_prob: f64,
+    /// retransmissions before an event degrades to a quorum
+    pub max_retries: usize,
+    /// base loss-detection timeout, seconds (TOML spells µs)
+    pub timeout_secs: f64,
+    /// timeout multiplier per successive retry (>= 1)
+    pub backoff: f64,
+}
+
+impl LossCfg {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.loss_prob) {
+            return Err("net.loss_prob must be in [0, 1]".into());
+        }
+        if self.timeout_secs < 0.0 {
+            return Err("net.timeout_us must be non-negative".into());
+        }
+        if self.backoff < 1.0 {
+            return Err("net.backoff must be >= 1.0".into());
+        }
+        Ok(())
+    }
+}
+
+/// The drawn fate of one collective event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EventFate {
+    /// retransmissions spent (attempts lost before the first success,
+    /// capped at `max_retries`)
+    pub retries: usize,
+    /// all attempts lost: the step proceeds on a quorum
+    pub degraded: bool,
+    /// raw victim variate (always drawn, used only when degraded);
+    /// map to a worker slot with [`victim_slot`]
+    pub victim_draw: u64,
+}
+
+impl EventFate {
+    /// The fate of a perfectly reliable event (what `loss_prob = 0`
+    /// always draws).
+    pub fn clean(&self) -> bool {
+        self.retries == 0 && !self.degraded
+    }
+}
+
+/// Stream key of one optimizer step: epochs and steps both fit u32 at
+/// any realistic scale, so the pair packs into one fork id.
+#[inline]
+pub fn step_key(epoch: usize, step: usize) -> u64 {
+    ((epoch as u64) << 32) | step as u64
+}
+
+/// Stream key of one collective event within a step: the issuing
+/// layer's id qualifies a per-layer sequence number, so parallel layer
+/// tasks draw from disjoint streams in any host order.
+#[inline]
+pub fn event_key(layer: usize, seq: u64) -> u64 {
+    ((layer as u64) << 32) | seq
+}
+
+/// Draw the fate of one collective event.  Pure function of
+/// `(cfg.seed, step, event)`: the per-event generator is forked from
+/// the key pair and consumes exactly `max_retries + 2` variates —
+/// `max_retries + 1` attempt draws plus the victim draw — regardless
+/// of outcomes, so changing `loss_prob` never moves the victim stream.
+pub fn event_fate(cfg: &LossCfg, step: u64, event: u64) -> EventFate {
+    let mut rng = Rng::new(cfg.seed ^ LOSS_STREAM).fork(step).fork(event);
+    let mut retries = 0usize;
+    let mut delivered = false;
+    for _ in 0..=cfg.max_retries {
+        // fixed budget: every attempt draw is consumed even after the
+        // event has already been delivered
+        let lost = (rng.uniform() as f64) < cfg.loss_prob;
+        if !delivered {
+            if lost {
+                if retries < cfg.max_retries {
+                    retries += 1;
+                }
+            } else {
+                delivered = true;
+            }
+        }
+    }
+    let victim_draw = rng.next_u64();
+    EventFate { retries, degraded: !delivered, victim_draw }
+}
+
+/// Map a raw victim draw onto one of `n` worker slots — the single
+/// piece of arithmetic shared by everyone who carries the draw around
+/// (the `Comm` stores draws, not slots, because the active worker count
+/// at aggregation time decides the modulus).
+#[inline]
+pub fn slot_of(draw: u64, n: usize) -> usize {
+    (draw % n.max(1) as u64) as usize
+}
+
+/// Map a degraded event's victim draw onto one of `n` worker slots.
+#[inline]
+pub fn victim_slot(fate: &EventFate, n: usize) -> usize {
+    slot_of(fate.victim_draw, n)
+}
+
+/// Seconds a fated event adds to the retry channel on top of its
+/// primary α–β charge: each retransmission pays the backoff'd
+/// detection timeout plus a full re-charge of the collective's cost,
+/// and a degraded event pays one final timeout to conclude nobody is
+/// coming before it falls back to the quorum.
+pub fn retry_secs(cfg: &LossCfg, base_secs: f64, fate: &EventFate) -> f64 {
+    if fate.clean() {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut delay = cfg.timeout_secs;
+    for _ in 0..fate.retries {
+        total += delay + base_secs;
+        delay *= cfg.backoff;
+    }
+    if fate.degraded {
+        total += delay;
+    }
+    total
+}
+
+/// Step-granular unrecoverable-crash stream for the self-healing
+/// supervisor: pure function of `(seed, step)`, on a salted stream
+/// independent of every other draw in the system (extending the fault
+/// schedule without moving its three-draw-per-rank positions).
+pub fn crash_at(seed: u64, crash_prob: f64, step: u64) -> bool {
+    if crash_prob <= 0.0 {
+        return false;
+    }
+    let mut rng = Rng::new(seed ^ CRASH_STREAM).fork(step);
+    (rng.uniform() as f64) < crash_prob
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(loss_prob: f64) -> LossCfg {
+        LossCfg {
+            seed: 42,
+            loss_prob,
+            max_retries: 3,
+            timeout_secs: 2.0,
+            backoff: 3.0,
+        }
+    }
+
+    #[test]
+    fn fates_replay_and_streams_are_keyed() {
+        let c = cfg(0.4);
+        for step in 0..20u64 {
+            for ev in 0..20u64 {
+                assert_eq!(event_fate(&c, step, ev), event_fate(&c, step, ev));
+            }
+        }
+        // distinct steps / events / seeds draw distinct streams: over a
+        // grid this size at loss 0.4 the fates cannot all coincide
+        let base: Vec<EventFate> = (0..64).map(|e| event_fate(&c, 0, e)).collect();
+        let other_step: Vec<EventFate> = (0..64).map(|e| event_fate(&c, 1, e)).collect();
+        let other_seed: Vec<EventFate> =
+            (0..64).map(|e| event_fate(&LossCfg { seed: 43, ..c }, 0, e)).collect();
+        assert_ne!(base, other_step, "step key must move the stream");
+        assert_ne!(base, other_seed, "seed must move the stream");
+    }
+
+    #[test]
+    fn zero_loss_is_always_clean() {
+        let c = cfg(0.0);
+        for step in 0..50u64 {
+            for ev in 0..10u64 {
+                let f = event_fate(&c, step, ev);
+                assert!(f.clean(), "loss_prob 0 fated a retry at ({step},{ev}): {f:?}");
+                assert_eq!(retry_secs(&c, 1.0, &f), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn certain_loss_always_degrades_after_max_retries() {
+        let c = cfg(1.0);
+        for ev in 0..50u64 {
+            let f = event_fate(&c, 7, ev);
+            assert!(f.degraded);
+            assert_eq!(f.retries, c.max_retries);
+        }
+    }
+
+    #[test]
+    fn victim_draw_position_is_independent_of_outcomes() {
+        // the fixed draw budget: loss_prob only changes attempt
+        // outcomes, never the stream position of the victim variate
+        let never = cfg(0.0);
+        let always = cfg(1.0);
+        for ev in 0..50u64 {
+            assert_eq!(
+                event_fate(&never, 3, ev).victim_draw,
+                event_fate(&always, 3, ev).victim_draw
+            );
+        }
+        let f = event_fate(&always, 3, 0);
+        assert!(victim_slot(&f, 4) < 4);
+        assert_eq!(victim_slot(&f, 1), 0);
+    }
+
+    #[test]
+    fn retry_secs_hand_computed() {
+        let c = cfg(0.0); // knobs only; fate supplied by hand
+        // two retries, then delivered: (t + base) + (t*b + base)
+        let f2 = EventFate { retries: 2, degraded: false, victim_draw: 0 };
+        let expect2 = (2.0 + 5.0) + (6.0 + 5.0);
+        assert_eq!(retry_secs(&c, 5.0, &f2).to_bits(), expect2.to_bits());
+        // degraded at max_retries = 3: three full retransmissions plus
+        // the final give-up timeout at the next backoff step
+        let fd = EventFate { retries: 3, degraded: true, victim_draw: 0 };
+        let expectd = (2.0 + 5.0) + (6.0 + 5.0) + (18.0 + 5.0) + 54.0;
+        assert_eq!(retry_secs(&c, 5.0, &fd).to_bits(), expectd.to_bits());
+        // clean events are exactly free
+        let f0 = EventFate { retries: 0, degraded: false, victim_draw: 9 };
+        assert_eq!(retry_secs(&c, 5.0, &f0), 0.0);
+    }
+
+    #[test]
+    fn crash_stream_is_seeded_and_independent() {
+        assert!(!crash_at(11, 0.0, 5));
+        assert!(crash_at(11, 1.0, 5));
+        for step in 0..100u64 {
+            assert_eq!(crash_at(11, 0.3, step), crash_at(11, 0.3, step));
+        }
+        // some step must crash and some must not at p = 0.3
+        let fired: Vec<bool> = (0..100u64).map(|s| crash_at(11, 0.3, s)).collect();
+        assert!(fired.iter().any(|&b| b) && fired.iter().any(|&b| !b));
+        // the crash stream is salted away from the loss stream: the
+        // same (seed, step) does not reuse loss draws
+        let c = LossCfg { seed: 11, ..cfg(0.3) };
+        let crash_bits: Vec<bool> = (0..200u64).map(|s| crash_at(11, 0.3, s)).collect();
+        let loss_bits: Vec<bool> = (0..200u64).map(|s| !event_fate(&c, s, 0).clean()).collect();
+        assert_ne!(crash_bits, loss_bits);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(cfg(0.5).validate().is_ok());
+        assert!(cfg(1.5).validate().is_err());
+        assert!(cfg(-0.1).validate().is_err());
+        assert!(LossCfg { timeout_secs: -1.0, ..cfg(0.1) }.validate().is_err());
+        assert!(LossCfg { backoff: 0.5, ..cfg(0.1) }.validate().is_err());
+    }
+}

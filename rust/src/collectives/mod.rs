@@ -103,6 +103,7 @@
 //! extra cost of sharded ownership for them.
 
 use crate::cluster::network::{CollKind, NetworkModel};
+use crate::cluster::unreliable::{event_fate, event_key, retry_secs, slot_of, LossCfg};
 use crate::compress::{CodecFlops, DistCompressor, Level, RoundCtx, Sharding};
 use crate::util::pool::{IntraPool, SendPtr, INTRA_SERIAL_CUTOFF};
 use crate::util::workspace::Workspace;
@@ -123,6 +124,13 @@ use std::sync::Arc;
 /// scheduler serializes encode before the layer's collective can issue
 /// and decode before the optimizer.  Both stay zero at the default
 /// `codec_rate` of 0 (free encode).
+/// `retry_secs` is the message-loss channel: backoff'd detection
+/// timeouts plus full α–β re-charges of lost collectives
+/// (`cluster::unreliable`).  Kept disjoint from `secs` on purpose — the
+/// bucket planner re-prices the event stream against `secs`, and a
+/// retransmission is the *same* event charged again, not a new one.
+/// Zero whenever no loss model is attached (the default), which keeps
+/// the reliable clock bit-identical.
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
     pub floats: u64,
@@ -131,6 +139,7 @@ pub struct Ledger {
     pub collectives: u64,
     pub encode_secs: f64,
     pub decode_secs: f64,
+    pub retry_secs: f64,
 }
 
 /// One collective the ledger charged: what the bucket planner coalesces.
@@ -149,6 +158,23 @@ pub struct CollEvent {
 /// The network model is behind an `Arc`: the trainer keeps one ledger
 /// shard per layer for thread determinism, and all of them price
 /// against literally the same model instead of N clones.
+/// The per-`Comm` view of the message-loss process: the knobs plus the
+/// stream position of the next collective this `Comm` charges.  The
+/// trainer re-keys `step` and resets `seq` at every optimizer step
+/// ([`Comm::begin_lossy_step`]); `layer` is fixed at construction so
+/// parallel layer tasks draw from disjoint fate streams in any host
+/// order (`cluster::unreliable::event_key`).
+#[derive(Clone, Copy, Debug)]
+pub struct LossModel {
+    pub cfg: LossCfg,
+    /// layer id qualifying this `Comm`'s event keys
+    pub layer: usize,
+    /// current step key (`cluster::unreliable::step_key`)
+    pub step: u64,
+    /// per-step sequence number of the next charge
+    pub seq: u64,
+}
+
 pub struct Comm {
     pub net: Arc<NetworkModel>,
     pub ledger: Ledger,
@@ -163,6 +189,17 @@ pub struct Comm {
     /// from `CostModel::codec_secs_per_flop` (or the
     /// `time.codec_gflops` override) when `time.charge_codec` is on.
     pub codec_rate: f64,
+    /// message-loss process; `None` (the default) is the reliable
+    /// network, bit-identical in floats and clock to the pre-loss tree
+    pub loss: Option<LossModel>,
+    /// victim draw of the most recent charge IF it degraded, `None`
+    /// otherwise — overwritten by EVERY charge, so right after a charge
+    /// it refers to exactly that collective.  The paired mean helpers
+    /// consume it ([`Comm::take_degraded`]) to aggregate on a quorum.
+    last_degraded: Option<u64>,
+    /// victim draws of every degraded charge since the trainer last
+    /// drained them: the per-step error-feedback-reset worklist
+    pub degraded_victims: Vec<u64>,
 }
 
 impl Comm {
@@ -173,14 +210,50 @@ impl Comm {
     /// A ledger shard pricing against a shared network model (the
     /// trainer's per-layer construction).
     pub fn shared(net: Arc<NetworkModel>) -> Comm {
-        Comm { net, ledger: Ledger::default(), events: Vec::new(), codec_rate: 0.0 }
+        Comm {
+            net,
+            ledger: Ledger::default(),
+            events: Vec::new(),
+            codec_rate: 0.0,
+            loss: None,
+            last_degraded: None,
+            degraded_victims: Vec::new(),
+        }
+    }
+
+    /// Attach the message-loss process (trainer construction): fates
+    /// for this `Comm`'s charges are drawn on `layer`'s stream.
+    pub fn set_loss_model(&mut self, cfg: LossCfg, layer: usize) {
+        self.loss = Some(LossModel { cfg, layer, step: 0, seq: 0 });
+    }
+
+    /// Re-key the loss stream for a new optimizer step (no-op without a
+    /// loss model).  `step` is `cluster::unreliable::step_key(epoch, s)`.
+    pub fn begin_lossy_step(&mut self, step: u64) {
+        if let Some(lm) = self.loss.as_mut() {
+            lm.step = step;
+            lm.seq = 0;
+        }
+    }
+
+    /// Consume the most recent charge's degraded fate:
+    /// `Some(victim_draw)` iff the immediately preceding charge
+    /// exhausted its retries (the flag is overwritten by every charge).
+    pub fn take_degraded(&mut self) -> Option<u64> {
+        self.last_degraded.take()
     }
 
     /// All-reduce (mean) of one equal-length buffer per worker.
-    /// Charges one ring all-reduce of the payload and returns the mean.
+    /// Charges one ring all-reduce of the payload and returns the mean
+    /// — charging first, so a degraded fate can route THIS aggregation
+    /// to the quorum mean (charging never touches the data, so the
+    /// flip is numerics-free on the reliable path).
     pub fn allreduce_mean_into(&mut self, bufs: &[&[f32]], out: &mut [f32]) {
-        mean_into(bufs, out);
         self.charge_allreduce(out.len());
+        match self.take_degraded() {
+            Some(v) if bufs.len() > 1 => quorum_mean_into(bufs, slot_of(v, bufs.len()), out),
+            _ => mean_into(bufs, out),
+        }
     }
 
     /// [`Comm::allreduce_mean_into`] with the element loop on an
@@ -191,17 +264,27 @@ impl Comm {
         out: &mut [f32],
         intra: &mut IntraPool,
     ) {
-        mean_into_pooled(bufs, out, intra);
         self.charge_allreduce(out.len());
+        match self.take_degraded() {
+            Some(v) if bufs.len() > 1 => {
+                quorum_mean_into_pooled(bufs, slot_of(v, bufs.len()), out, intra)
+            }
+            _ => mean_into_pooled(bufs, out, intra),
+        }
     }
 
     /// Reduce-scatter (mean) of one equal-length buffer per worker:
     /// the full mean still lands in `out` (the sim keeps one logical
     /// copy), but the wire is charged as the half-ring reduce-scatter —
     /// each worker only ends up *owning* its 1/N shard of `out`.
+    /// Charge-first like the all-reduce helper, for the same quorum
+    /// routing.
     pub fn reduce_scatter_mean_into(&mut self, bufs: &[&[f32]], out: &mut [f32]) {
-        mean_into(bufs, out);
         self.charge_reduce_scatter(out.len());
+        match self.take_degraded() {
+            Some(v) if bufs.len() > 1 => quorum_mean_into(bufs, slot_of(v, bufs.len()), out),
+            _ => mean_into(bufs, out),
+        }
     }
 
     /// [`Comm::reduce_scatter_mean_into`] with the element loop on an
@@ -212,8 +295,13 @@ impl Comm {
         out: &mut [f32],
         intra: &mut IntraPool,
     ) {
-        mean_into_pooled(bufs, out, intra);
         self.charge_reduce_scatter(out.len());
+        match self.take_degraded() {
+            Some(v) if bufs.len() > 1 => {
+                quorum_mean_into_pooled(bufs, slot_of(v, bufs.len()), out, intra)
+            }
+            _ => mean_into_pooled(bufs, out, intra),
+        }
     }
 
     /// THE charging entry point (see "The `CollEvent` unification" in
@@ -234,6 +322,25 @@ impl Comm {
         }
         self.ledger.collectives += 1;
         self.events.push(CollEvent { kind, bytes, rebuild });
+        // message-loss process: draw this event's fate on its own keyed
+        // stream and charge retries into the dedicated channel.  `secs`
+        // and the event stream stay exactly what the reliable network
+        // charged — a retransmission is the same event priced again in
+        // `retry_secs`, so the planner's re-pricing invariant holds.
+        if let Some(lm) = self.loss.as_mut() {
+            let fate = event_fate(&lm.cfg, lm.step, event_key(lm.layer, lm.seq));
+            lm.seq += 1;
+            let extra = retry_secs(&lm.cfg, secs, &fate);
+            if extra != 0.0 {
+                self.ledger.retry_secs += extra;
+            }
+            if fate.degraded {
+                self.last_degraded = Some(fate.victim_draw);
+                self.degraded_victims.push(fate.victim_draw);
+            } else {
+                self.last_degraded = None;
+            }
+        }
         secs
     }
 
@@ -346,6 +453,86 @@ pub fn mean_into_pooled(bufs: &[&[f32]], out: &mut [f32], intra: &mut IntraPool)
         for b in &bufs[1..] {
             for (oo, x) in o.iter_mut().zip(&b[s..s + l]) {
                 *oo += x;
+            }
+        }
+        for oo in o.iter_mut() {
+            *oo *= inv;
+        }
+    });
+}
+
+/// Quorum mean: [`mean_into`] over every worker EXCEPT `skip`, rescaled
+/// by the responder count `n - 1` — graceful degradation when a
+/// collective exhausted its retries and one contribution never arrived.
+/// Same ascending-worker fold order as `mean_into`, so the only
+/// arithmetic difference from the full mean is the missing term and the
+/// `1/(n-1)` scale.
+pub fn quorum_mean_into(bufs: &[&[f32]], skip: usize, out: &mut [f32]) {
+    let n = bufs.len();
+    assert!(n > 1, "quorum_mean_into: need at least two contributors");
+    assert!(skip < n, "quorum_mean_into: victim {skip} out of range (n={n})");
+    let mut started = false;
+    for (w, b) in bufs.iter().enumerate() {
+        assert_eq!(
+            b.len(),
+            out.len(),
+            "quorum_mean_into: ragged worker buffer (worker {w})"
+        );
+        if w == skip {
+            continue;
+        }
+        if !started {
+            out.copy_from_slice(b);
+            started = true;
+        } else {
+            for (o, x) in out.iter_mut().zip(*b) {
+                *o += x;
+            }
+        }
+    }
+    let inv = 1.0 / (n - 1) as f32;
+    out.iter_mut().for_each(|o| *o *= inv);
+}
+
+/// [`quorum_mean_into`] with the element loop on an intra-op pool —
+/// bitwise identical to the serial sweep at any width, by the same
+/// fixed-fold-order argument as [`mean_into_pooled`].
+pub fn quorum_mean_into_pooled(
+    bufs: &[&[f32]],
+    skip: usize,
+    out: &mut [f32],
+    intra: &mut IntraPool,
+) {
+    let n = bufs.len();
+    assert!(n > 1, "quorum_mean_into: need at least two contributors");
+    assert!(skip < n, "quorum_mean_into: victim {skip} out of range (n={n})");
+    for (w, b) in bufs.iter().enumerate() {
+        assert_eq!(
+            b.len(),
+            out.len(),
+            "quorum_mean_into: ragged worker buffer (worker {w})"
+        );
+    }
+    if intra.threads() <= 1 || out.len() < INTRA_SERIAL_CUTOFF {
+        return quorum_mean_into(bufs, skip, out);
+    }
+    let inv = 1.0 / (n - 1) as f32;
+    let optr = SendPtr::new(out);
+    intra.parallel_for(bufs[0].len(), &|s, l| {
+        // SAFETY: disjoint in-bounds ranges (parallel_for contract).
+        let o = unsafe { optr.slice_mut(s, l) };
+        let mut started = false;
+        for (w, b) in bufs.iter().enumerate() {
+            if w == skip {
+                continue;
+            }
+            if !started {
+                o.copy_from_slice(&b[s..s + l]);
+                started = true;
+            } else {
+                for (oo, x) in o.iter_mut().zip(&b[s..s + l]) {
+                    *oo += x;
+                }
             }
         }
         for oo in o.iter_mut() {
@@ -969,6 +1156,134 @@ mod tests {
         );
         assert_eq!(c2.ledger.decode_secs, 0.0);
         assert_eq!(c2.ledger.encode_secs, 0.0);
+    }
+
+    #[test]
+    fn quorum_mean_hand_pinned() {
+        // n = 4 constant buffers [1, 2, 3, 4], victim slot 1: the quorum
+        // mean is ((1 + 3) + 4) / 3 = 8/3 in exactly that fold order
+        let bufs: Vec<Vec<f32>> = (1..=4).map(|v| vec![v as f32; 6]).collect();
+        let views: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut out = vec![0.0f32; 6];
+        quorum_mean_into(&views, 1, &mut out);
+        let want = ((1.0f32 + 3.0) + 4.0) * (1.0 / 3.0);
+        for o in &out {
+            assert_eq!(o.to_bits(), want.to_bits(), "{o} vs {want}");
+        }
+        // skipping the last worker instead
+        quorum_mean_into(&views, 3, &mut out);
+        let want3 = ((1.0f32 + 2.0) + 3.0) * (1.0 / 3.0);
+        assert_eq!(out[0].to_bits(), want3.to_bits());
+        // pooled sweep is bitwise identical at any width (serial-gate
+        // sizes and above)
+        let big: Vec<Vec<f32>> = (1..=4).map(|v| vec![v as f32; 50_000]).collect();
+        let bviews: Vec<&[f32]> = big.iter().map(|b| b.as_slice()).collect();
+        let mut serial = vec![0.0f32; 50_000];
+        let mut pooled = vec![0.0f32; 50_000];
+        quorum_mean_into(&bviews, 2, &mut serial);
+        let mut intra = IntraPool::new(4);
+        quorum_mean_into_pooled(&bviews, 2, &mut pooled, &mut intra);
+        for (a, b) in serial.iter().zip(&pooled) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    fn lossy_cfg(loss_prob: f64) -> LossCfg {
+        LossCfg {
+            seed: 7,
+            loss_prob,
+            max_retries: 2,
+            timeout_secs: 1e-3,
+            backoff: 2.0,
+        }
+    }
+
+    #[test]
+    fn lossy_charges_fill_the_retry_channel_and_leave_secs_alone() {
+        let mut clean = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut lossy = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        lossy.set_loss_model(lossy_cfg(1.0), 3);
+        lossy.begin_lossy_step(17);
+        for c in [&mut clean, &mut lossy] {
+            c.charge_allreduce(100);
+            c.charge_allgather(40);
+            c.charge_rebuild_allgather(25);
+        }
+        // the primary channels and the event stream are untouched by
+        // certain loss: retries live in their own channel
+        assert_eq!(clean.ledger.secs.to_bits(), lossy.ledger.secs.to_bits());
+        assert_eq!(clean.ledger.floats, lossy.ledger.floats);
+        assert_eq!(clean.ledger.rebuild_secs.to_bits(), lossy.ledger.rebuild_secs.to_bits());
+        assert_eq!(clean.events, lossy.events);
+        assert_eq!(clean.ledger.retry_secs, 0.0);
+        assert!(lossy.ledger.retry_secs > 0.0);
+        // certain loss degrades every charge: three victims queued
+        assert_eq!(lossy.degraded_victims.len(), 3);
+        // hand-check the charge arithmetic of the first event: 2 full
+        // re-charges + timeouts 1t, 2t, plus the 4t give-up timeout
+        let base = clean.net.collective_secs(CollKind::Allreduce, 400);
+        let c = lossy_cfg(1.0);
+        let fate = event_fate(&c, 17, event_key(3, 0));
+        assert!(fate.degraded);
+        let want0 = retry_secs(&c, base, &fate);
+        let t = c.timeout_secs;
+        assert_eq!(
+            want0.to_bits(),
+            (((t + base) + (2.0 * t + base)) + 4.0 * t).to_bits()
+        );
+    }
+
+    #[test]
+    fn attached_zero_loss_model_is_bit_identical() {
+        let mut plain = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        let mut armed = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        armed.set_loss_model(lossy_cfg(0.0), 0);
+        armed.begin_lossy_step(5);
+        let a = vec![1.0f32; 64];
+        let b = vec![5.0f32; 64];
+        let mut mo = vec![0.0f32; 64];
+        let mut ao = vec![0.0f32; 64];
+        plain.allreduce_mean_into(&[&a, &b], &mut mo);
+        armed.allreduce_mean_into(&[&a, &b], &mut ao);
+        for (x, y) in mo.iter().zip(&ao) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(plain.ledger.secs.to_bits(), armed.ledger.secs.to_bits());
+        assert_eq!(armed.ledger.retry_secs, 0.0);
+        assert!(armed.degraded_victims.is_empty());
+        assert!(armed.take_degraded().is_none());
+    }
+
+    #[test]
+    fn degraded_helper_aggregates_on_the_quorum() {
+        let mut comm = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        comm.set_loss_model(lossy_cfg(1.0), 2);
+        comm.begin_lossy_step(9);
+        let bufs: Vec<Vec<f32>> = (1..=4).map(|v| vec![v as f32; 8]).collect();
+        let views: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut out = vec![0.0f32; 8];
+        comm.allreduce_mean_into(&views, &mut out);
+        // the victim is fully determined by the seeded stream
+        let fate = event_fate(&lossy_cfg(1.0), 9, event_key(2, 0));
+        let victim = slot_of(fate.victim_draw, 4);
+        let mut want = vec![0.0f32; 8];
+        quorum_mean_into(&views, victim, &mut want);
+        for (x, y) in out.iter().zip(&want) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // the degraded flag was consumed by the helper
+        assert!(comm.take_degraded().is_none());
+        assert_eq!(comm.degraded_victims, vec![fate.victim_draw]);
+        // stream advances: a second aggregation uses seq 1
+        let mut out2 = vec![0.0f32; 8];
+        comm.reduce_scatter_mean_into(&views, &mut out2);
+        assert_eq!(comm.degraded_victims.len(), 2);
+        // a single-contributor aggregation can't exclude anyone: the
+        // quorum guard falls back to the full (identity) mean
+        let solo = vec![2.5f32; 8];
+        let mut sout = vec![0.0f32; 8];
+        comm.allreduce_mean_into(&[&solo[..]], &mut sout);
+        assert_eq!(sout, solo);
     }
 
     #[test]

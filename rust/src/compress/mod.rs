@@ -159,6 +159,19 @@ pub trait DistCompressor: Send {
     /// membership change — the trainer resets every compressor so
     /// residual state never leaks across worker sets).
     fn reset(&mut self);
+
+    /// Drop ONE worker slot's error-feedback after a quorum-degraded
+    /// aggregation excluded its contribution (its residual died with
+    /// the lost message).  Provided default: a full [`reset`] — per-slot
+    /// surgical resets are an optimization a compressor may implement
+    /// when its residuals are positionally separable, never a
+    /// correctness requirement (any deterministic reset keeps replays
+    /// bit-identical, which is the contract the recovery tests pin).
+    ///
+    /// [`reset`]: DistCompressor::reset
+    fn reset_worker(&mut self, _worker: usize) {
+        self.reset();
+    }
 }
 
 /// The uncompressed baseline: plain all-reduce of the raw gradient.

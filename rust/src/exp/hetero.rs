@@ -33,6 +33,8 @@ pub fn two_node_topology() -> TopologyCfg {
         intra_us: 5.0,
         cross_mbps: 100.0,
         cross_us: 50.0,
+        intra_loss: 0.0,
+        cross_loss: 0.0,
     }
 }
 

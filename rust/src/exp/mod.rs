@@ -6,6 +6,7 @@
 
 pub mod ablations;
 pub mod bucket;
+pub mod faulttol;
 pub mod figures;
 pub mod hessian;
 pub mod hetero;
@@ -26,7 +27,7 @@ pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "fig1", "fig2", "fig3", "fig4",
     "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig18", "ablate-eta",
     "ablate-interval", "ablate-selector", "ablate-network", "ablate-overlap",
-    "ablate-transport", "ablate-bucket", "ablate-hetero", "utility",
+    "ablate-transport", "ablate-bucket", "ablate-hetero", "ablate-faulttol", "utility",
 ];
 
 /// Shared state for one experiment invocation: the artifact registry, a
@@ -152,6 +153,7 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
         "ablate-transport" => transport::ablate_transport(&mut h),
         "ablate-bucket" => bucket::ablate_bucket(&mut h),
         "ablate-hetero" => hetero::ablate_hetero(&mut h),
+        "ablate-faulttol" => faulttol::ablate_faulttol(&mut h),
         "utility" => utility::utility(&mut h),
         _ => bail!("unknown experiment '{id}' (have: {})", EXPERIMENTS.join(" ")),
     }

@@ -78,6 +78,20 @@ USAGE:
   at every --threads count and transport; a rejoin charges a full-model
   parameter broadcast to the clock and the floats ledger.
 
+  Message-level fault tolerance (all knobs default off = bit-identical
+  to the reliable run): --set net.loss_prob=P draws a seeded loss fate
+  per collective — lost messages retry with exponential backoff
+  (--set net.max_retries=K, net.timeout_us=T, net.backoff=B; the
+  re-charges land in the retry channel and serialize into the step),
+  and retry exhaustion degrades that aggregation to a quorum mean over
+  the surviving workers (the CSV's `degraded` column).  Per-link loss
+  via [net.links] intra_loss/cross_loss (the ring is as lossy as its
+  bottleneck link).  --set faults.crash_prob=C arms the self-healing
+  supervisor: it needs --set ckpt.auto_every=N (periodic auto full-
+  state checkpoint, ckpt.auto_path to relocate), and a crashed step
+  restores the latest auto-checkpoint and replays bit-for-bit — only
+  the clock pays (wasted work + restore I/O, the recovery channel).
+
   The time column is a deterministic simulated clock: a per-model
   compute cost model (--set time.model=flops|measured, --set
   time.gflops=F) plus the overlap-aware alpha-beta network scheduler
@@ -89,6 +103,7 @@ EXPERIMENT IDS:
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig18
   ablate-eta ablate-interval ablate-selector ablate-network
   ablate-overlap ablate-transport ablate-bucket ablate-hetero
+  ablate-faulttol
 
 EXAMPLES:
   accordion repro --exp table1 --fast
@@ -144,7 +159,13 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
         cfg.bucket_kb = kb;
     }
     if let Some(spec) = args.opt("topology") {
-        cfg.topology = Some(TopologyCfg::parse(spec)?);
+        let mut tp = TopologyCfg::parse(spec)?;
+        // the CLI spelling carries no loss fields: both link classes
+        // inherit the shared `net.loss_prob`, exactly as a `[net.links]`
+        // table without intra_loss/cross_loss does
+        tp.intra_loss = cfg.loss_prob;
+        tp.cross_loss = cfg.loss_prob;
+        cfg.topology = Some(tp);
     }
     if args.flag("no-overlap") {
         cfg.overlap = false;

@@ -35,6 +35,11 @@ pub struct EpochStats {
     /// cumulative seconds the overlap scheduler saved vs charging
     /// compute + communication serially (0 under `--no-overlap`)
     pub overlap_saved_secs: f64,
+    /// cumulative quorum-degraded aggregations: collectives that
+    /// exhausted their retries and fell back to the surviving workers'
+    /// mean (0 on a reliable network) — deterministic, the seeded fate
+    /// streams are host-independent
+    pub degraded: u64,
     /// cumulative measured host wall seconds — debug only: host-load
     /// dependent, NOT deterministic, kept as the CSV's last column so
     /// determinism checks can strip it
@@ -116,9 +121,10 @@ impl RunLog {
     }
 
     /// CSV with `wall_secs` as the LAST column: everything before it —
-    /// including the run-constant `transport` dimension — is
+    /// including the run-constant `transport` dimension and the seeded
+    /// `degraded` fault counter — is
     /// deterministic (bit-identical values format to identical bytes),
-    /// so the CI determinism lane diffs `cut -d, -f1-13` output.  When
+    /// so the CI determinism lane diffs `cut -d, -f1-14` output.  When
     /// the run recorded a kernel backend/tuner profile, one `#`-prefixed
     /// comment line precedes the header; every determinism consumer
     /// strips `#` lines first (the comment carries host-dependent tuner
@@ -130,12 +136,12 @@ impl RunLog {
         }
         out.push_str(
             "epoch,lr,train_loss,test_loss,test_acc,floats,sim_secs,grad_norm,frac_low,\
-             batch_mult,window_grad_norm,overlap_saved_secs,transport,wall_secs\n",
+             batch_mult,window_grad_norm,overlap_saved_secs,degraded,transport,wall_secs\n",
         );
         for e in &self.epochs {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{:.6},{},{},{},{},{:.6},{},{:.3}",
+                "{},{},{},{},{},{},{:.6},{},{},{},{},{:.6},{},{},{:.3}",
                 e.epoch,
                 e.lr,
                 e.train_loss,
@@ -148,6 +154,7 @@ impl RunLog {
                 e.batch_mult,
                 e.window_grad_norm,
                 e.overlap_saved_secs,
+                e.degraded,
                 self.transport_label(),
                 e.wall_secs
             );
@@ -196,6 +203,7 @@ mod tests {
             floats,
             secs: epoch as f64,
             overlap_saved_secs: 0.25 * epoch as f64,
+            degraded: 2 * epoch as u64,
             wall_secs: 0.1,
             grad_norm: 1.0,
             frac_low: 0.5,
@@ -217,17 +225,19 @@ mod tests {
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.lines().nth(2).unwrap().starts_with("1,"));
-        // column contract the CI determinism lane depends on: 14 columns,
-        // sim_secs in slot 7, the run-constant transport dimension second
-        // to last, wall_secs (the only nondeterministic one) LAST
+        // column contract the CI determinism lane depends on: 15 columns,
+        // sim_secs in slot 7, the seeded degraded counter then the
+        // run-constant transport dimension before the end, wall_secs
+        // (the only nondeterministic one) LAST
         let header: Vec<&str> = csv.lines().next().unwrap().split(',').collect();
-        assert_eq!(header.len(), 14);
+        assert_eq!(header.len(), 15);
         assert_eq!(header[6], "sim_secs");
         assert_eq!(header[11], "overlap_saved_secs");
-        assert_eq!(header[12], "transport");
-        assert_eq!(header[13], "wall_secs");
+        assert_eq!(header[12], "degraded");
+        assert_eq!(header[13], "transport");
+        assert_eq!(header[14], "wall_secs");
         for line in csv.lines().skip(1) {
-            assert_eq!(line.split(',').count(), 14, "{line}");
+            assert_eq!(line.split(',').count(), 15, "{line}");
         }
         // legacy (empty) transport reads as the dense default
         assert_eq!(log.transport_label(), "dense");

@@ -48,6 +48,10 @@ pub struct TrainState {
     pub last_mult: usize,
     /// epoch the current detection window started at
     pub window_start: usize,
+    /// cumulative quorum-degraded aggregations (the CSV's `degraded`
+    /// column) — optional in the header with default 0, so pre-fault
+    /// v2 checkpoints keep loading
+    pub degraded: u64,
 }
 
 impl TrainState {
@@ -71,6 +75,7 @@ impl TrainState {
             ("ramp_at", json::num(self.ramp_at as f64)),
             ("last_mult", json::num(self.last_mult as f64)),
             ("window_start", json::num(self.window_start as f64)),
+            ("degraded", json::num(self.degraded as f64)),
         ])
     }
 
@@ -102,6 +107,9 @@ impl TrainState {
             ramp_at: usize_of("ramp_at")?,
             last_mult: usize_of("last_mult")?,
             window_start: usize_of("window_start")?,
+            // optional with default: headers written before the fault-
+            // tolerance channels simply have no degraded count yet
+            degraded: f64_of("degraded").unwrap_or(0.0) as u64,
         })
     }
 }
@@ -383,6 +391,7 @@ mod tests {
             ramp_at: 2,
             last_mult: 2,
             window_start: 4,
+            degraded: 9,
         };
         let dir = std::env::temp_dir().join("accordion-ckpt-v2");
         let path = dir.join("ck").to_str().unwrap().to_string();
@@ -401,6 +410,22 @@ mod tests {
         let path1 = dir.join("ck1").to_str().unwrap().to_string();
         save(&path1, &m, 5, &params).unwrap();
         assert!(load_full(&path1, &m).is_err());
+    }
+
+    #[test]
+    fn header_without_degraded_reads_as_zero() {
+        // pre-fault-tolerance v2 checkpoints carry no `degraded` key;
+        // they must keep loading, with the counter at its identity
+        let st = TrainState { epoch: 3, degraded: 7, ..Default::default() };
+        let mut j = st.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("degraded");
+        }
+        let back = TrainState::from_json(3, &j).expect("legacy header loads");
+        assert_eq!(back.degraded, 0);
+        // and a round-trip with the key present keeps the count
+        let full = TrainState::from_json(3, &st.to_json()).unwrap();
+        assert_eq!(full.degraded, 7);
     }
 
     #[test]

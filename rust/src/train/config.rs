@@ -3,6 +3,7 @@
 
 use crate::cluster::faults::FaultCfg;
 use crate::cluster::topology::{LinkSpec, Topology};
+use crate::cluster::unreliable::LossCfg;
 use crate::collectives::{DenseReplicated, ShardedOwnership, Transport};
 use crate::compress::{DistCompressor, Level, NoCompression};
 use crate::compress::{
@@ -73,6 +74,12 @@ pub struct TopologyCfg {
     pub intra_us: f64,
     pub cross_mbps: f64,
     pub cross_us: f64,
+    /// per-attempt message-loss probability of each link class
+    /// (`net.links.intra_loss` / `net.links.cross_loss`; both default
+    /// to the shared `net.loss_prob`, so a flat lossy run and an
+    /// equal-links lossy topology draw identical fates)
+    pub intra_loss: f64,
+    pub cross_loss: f64,
 }
 
 impl TopologyCfg {
@@ -95,6 +102,10 @@ impl TopologyCfg {
             intra_us: field("intra_us", parts[2])?,
             cross_mbps: field("cross_mbps", parts[3])?,
             cross_us: field("cross_us", parts[4])?,
+            // the CLI spelling carries no loss fields; `load_config`
+            // backfills both from the shared `net.loss_prob`
+            intra_loss: 0.0,
+            cross_loss: 0.0,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -110,6 +121,9 @@ impl TopologyCfg {
         if self.intra_us < 0.0 || self.cross_us < 0.0 {
             bail!("net.links latencies must be non-negative");
         }
+        if !(0.0..=1.0).contains(&self.intra_loss) || !(0.0..=1.0).contains(&self.cross_loss) {
+            bail!("net.links loss probabilities must be in [0, 1]");
+        }
         Ok(())
     }
 
@@ -117,8 +131,16 @@ impl TopologyCfg {
         Topology::new(
             workers,
             self.node_size,
-            LinkSpec { bandwidth_mbps: self.intra_mbps, latency_us: self.intra_us },
-            LinkSpec { bandwidth_mbps: self.cross_mbps, latency_us: self.cross_us },
+            LinkSpec {
+                bandwidth_mbps: self.intra_mbps,
+                latency_us: self.intra_us,
+                loss_prob: self.intra_loss,
+            },
+            LinkSpec {
+                bandwidth_mbps: self.cross_mbps,
+                latency_us: self.cross_us,
+                loss_prob: self.cross_loss,
+            },
         )
     }
 }
@@ -194,6 +216,19 @@ pub struct TrainConfig {
     // network model
     pub bandwidth_mbps: f64,
     pub latency_us: f64,
+    /// per-attempt message-loss probability of the shared link
+    /// (`net.loss_prob`); 0 (default) disables the whole unreliable-
+    /// network layer and keeps floats AND clock bit-identical to the
+    /// reliable tree.  With `[net.links]` the per-link `*_loss` keys
+    /// take over (they default to this value).
+    pub loss_prob: f64,
+    /// retransmissions before a lost collective degrades to a quorum
+    /// (`net.max_retries`)
+    pub max_retries: usize,
+    /// base loss-detection timeout, microseconds (`net.timeout_us`)
+    pub timeout_us: f64,
+    /// timeout multiplier per successive retry (`net.backoff`, >= 1)
+    pub backoff: f64,
     /// comm/compute overlap in the simulated clock; `--no-overlap` (or
     /// `net.overlap = false`) reproduces the old serialized charge
     pub overlap: bool,
@@ -210,6 +245,15 @@ pub struct TrainConfig {
     /// seeded fault schedule (`[faults]`); None is fault-free and
     /// bit-identical to the pre-faults trainer
     pub faults: Option<FaultCfg>,
+    /// auto-checkpoint period in epochs for the self-healing supervisor
+    /// (`ckpt.auto_every`): every k-th epoch boundary saves full v2
+    /// state so a seeded crash (`faults.crash_prob`) restores and
+    /// replays instead of killing the run.  0 (default) disables both
+    /// the checkpoints and the crash stream.
+    pub ckpt_auto_every: usize,
+    /// auto-checkpoint file (`ckpt.auto_path`); empty (default) derives
+    /// `runs/auto/<label>.ckpt`
+    pub ckpt_auto_path: String,
     // simulated compute clock (cluster::simtime)
     pub time_model: TimeModelCfg,
     /// modeled device throughput for the flops cost model, GFLOP/s
@@ -264,10 +308,16 @@ impl Default for TrainConfig {
             transport: TransportCfg::Dense,
             bandwidth_mbps: 100.0,
             latency_us: 50.0,
+            loss_prob: 0.0,
+            max_retries: 3,
+            timeout_us: 1000.0,
+            backoff: 2.0,
             overlap: true,
             bucket_kb: 0,
             topology: None,
             faults: None,
+            ckpt_auto_every: 0,
+            ckpt_auto_path: String::new(),
             time_model: TimeModelCfg::Flops,
             gflops: crate::cluster::simtime::DEFAULT_GFLOPS,
             charge_codec: false,
@@ -275,6 +325,133 @@ impl Default for TrainConfig {
             force_scalar: false,
         }
     }
+}
+
+/// Every config key the parser reads, in dotted spelling.  `from_table`
+/// rejects any key outside this list — a typo'd knob (TOML or `--set`)
+/// silently falling back to its default is the worst failure mode a
+/// determinism-pinned experiment config can have.
+const KNOWN_KEYS: &[&str] = &[
+    // top level
+    "label",
+    "model",
+    "workers",
+    "threads",
+    "intra_threads",
+    "epochs",
+    "seed",
+    "transport",
+    // [data]
+    "data.train_size",
+    "data.test_size",
+    "data.sep",
+    "data.noise",
+    // [train]
+    "train.base_lr",
+    "train.batch_ref",
+    "train.momentum",
+    "train.nesterov",
+    "train.weight_decay",
+    "train.warmup_epochs",
+    "train.decay_epochs",
+    "train.decay_factor",
+    // [method]
+    "method.kind",
+    "method.rank_low",
+    "method.rank_high",
+    "method.k_low",
+    "method.k_high",
+    "method.bits_low",
+    "method.bits_high",
+    "method.bin_low",
+    "method.bin_high",
+    // [controller]
+    "controller.kind",
+    "controller.level",
+    "controller.mult",
+    "controller.eta",
+    "controller.interval",
+    "controller.head",
+    "controller.tail",
+    "controller.level_in",
+    "controller.level_out",
+    "controller.rank_start",
+    "controller.rank_max",
+    "controller.drop",
+    "controller.factor",
+    "controller.cap",
+    "controller.bin_low",
+    "controller.bin_high",
+    // [net]
+    "net.bandwidth_mbps",
+    "net.latency_us",
+    "net.overlap",
+    "net.bucket_kb",
+    "net.loss_prob",
+    "net.max_retries",
+    "net.timeout_us",
+    "net.backoff",
+    // [net.links]
+    "net.links.node_size",
+    "net.links.intra_mbps",
+    "net.links.intra_us",
+    "net.links.cross_mbps",
+    "net.links.cross_us",
+    "net.links.intra_loss",
+    "net.links.cross_loss",
+    // [faults]
+    "faults.seed",
+    "faults.slow_prob",
+    "faults.slow_min",
+    "faults.slow_max",
+    "faults.drop_prob",
+    "faults.down_epochs",
+    "faults.crash_prob",
+    // [time]
+    "time.model",
+    "time.gflops",
+    "time.charge_codec",
+    "time.codec_gflops",
+    // [kernel]
+    "kernel.force_scalar",
+    // [ckpt]
+    "ckpt.auto_every",
+    "ckpt.auto_path",
+];
+
+/// Plain Levenshtein edit distance — small strings, small list, no need
+/// for anything cleverer than the two-row DP.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Reject unknown config keys, suggesting the nearest valid one.
+/// Called first in [`TrainConfig::from_table`], so it covers both TOML
+/// files and `--set` overrides (they merge into the same table).
+pub fn validate_keys(t: &Table) -> Result<()> {
+    for key in t.map.keys() {
+        if KNOWN_KEYS.contains(&key.as_str()) {
+            continue;
+        }
+        let nearest = KNOWN_KEYS
+            .iter()
+            .min_by_key(|k| edit_distance(key, k))
+            .expect("KNOWN_KEYS is non-empty");
+        bail!("unknown config key '{key}' (did you mean '{nearest}'?)");
+    }
+    Ok(())
 }
 
 fn parse_level(s: &str) -> Result<Level> {
@@ -288,8 +465,10 @@ fn parse_level(s: &str) -> Result<Level> {
 }
 
 impl TrainConfig {
-    /// Build from a parsed TOML table (all keys optional).
+    /// Build from a parsed TOML table (all keys optional — but every
+    /// *present* key must be known; see [`validate_keys`]).
     pub fn from_table(t: &Table) -> Result<TrainConfig> {
+        validate_keys(t)?;
         let d = TrainConfig::default();
         let method = match t.str_or("method.kind", "powersgd").as_str() {
             "none" => MethodCfg::None,
@@ -356,6 +535,7 @@ impl TrainConfig {
         };
         // presence-detected sub-tables: any `net.links.*` / `faults.*`
         // key switches the feature on, with per-key defaults below
+        let shared_loss = t.f64_or("net.loss_prob", d.loss_prob);
         let topology = if t.map.keys().any(|k| k.starts_with("net.links.")) {
             Some(TopologyCfg {
                 node_size: t.usize_or("net.links.node_size", 2),
@@ -365,6 +545,11 @@ impl TrainConfig {
                 intra_us: t.f64_or("net.links.intra_us", d.latency_us),
                 cross_mbps: t.f64_or("net.links.cross_mbps", d.bandwidth_mbps),
                 cross_us: t.f64_or("net.links.cross_us", d.latency_us),
+                // the per-link loss knobs inherit the shared one, so a
+                // flat lossy run and an equal-links lossy topology draw
+                // identical fates
+                intra_loss: t.f64_or("net.links.intra_loss", shared_loss),
+                cross_loss: t.f64_or("net.links.cross_loss", shared_loss),
             })
         } else {
             None
@@ -377,6 +562,7 @@ impl TrainConfig {
                 slow_max: t.f64_or("faults.slow_max", 3.0),
                 drop_prob: t.f64_or("faults.drop_prob", 0.0),
                 down_epochs: t.usize_or("faults.down_epochs", 1),
+                crash_prob: t.f64_or("faults.crash_prob", 0.0),
             })
         } else {
             None
@@ -409,10 +595,16 @@ impl TrainConfig {
             transport: TransportCfg::parse(&t.str_or("transport", d.transport.name()))?,
             bandwidth_mbps: t.f64_or("net.bandwidth_mbps", d.bandwidth_mbps),
             latency_us: t.f64_or("net.latency_us", d.latency_us),
+            loss_prob: shared_loss,
+            max_retries: t.usize_or("net.max_retries", d.max_retries),
+            timeout_us: t.f64_or("net.timeout_us", d.timeout_us),
+            backoff: t.f64_or("net.backoff", d.backoff),
             overlap: t.bool_or("net.overlap", d.overlap),
             bucket_kb: t.usize_or("net.bucket_kb", d.bucket_kb),
             topology,
             faults,
+            ckpt_auto_every: t.usize_or("ckpt.auto_every", d.ckpt_auto_every),
+            ckpt_auto_path: t.str_or("ckpt.auto_path", &d.ckpt_auto_path),
             time_model: match t.str_or("time.model", "flops").as_str() {
                 "flops" => TimeModelCfg::Flops,
                 "measured" => TimeModelCfg::Measured,
@@ -444,8 +636,43 @@ impl TrainConfig {
         }
         if let Some(f) = &self.faults {
             f.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+            if f.crash_prob > 0.0 && self.ckpt_auto_every == 0 {
+                bail!(
+                    "faults.crash_prob > 0 requires ckpt.auto_every > 0: \
+                     the self-healing supervisor needs an auto-checkpoint \
+                     to restore from"
+                );
+            }
         }
+        self.loss_cfg().validate().map_err(|e| anyhow::anyhow!("{e}"))?;
         Ok(())
+    }
+
+    /// Knobs of the message-loss process ([`crate::cluster::unreliable`]).
+    /// With a `[net.links]` topology the per-ring probability is taken
+    /// from the bottleneck link at each membership change; this carries
+    /// the shared `net.loss_prob` plus the retry/backoff knobs.
+    pub fn loss_cfg(&self) -> LossCfg {
+        LossCfg {
+            seed: self.seed,
+            loss_prob: self.loss_prob,
+            max_retries: self.max_retries,
+            timeout_secs: self.timeout_us * 1e-6,
+            backoff: self.backoff,
+        }
+    }
+
+    /// Whether any link in this run can lose messages — the trainer's
+    /// gate for arming the per-collective fate streams.  False keeps the
+    /// run bit-identical (floats and clock) to the reliable tree.
+    pub fn lossy(&self) -> bool {
+        if self.loss_prob > 0.0 {
+            return true;
+        }
+        match &self.topology {
+            Some(tp) => tp.intra_loss > 0.0 || tp.cross_loss > 0.0,
+            None => false,
+        }
     }
 
     /// Shrink for smoke tests / `--fast` runs.
@@ -752,6 +979,167 @@ bin_high = 256
         let t2 = Table::parse("method.kind = \"adacomp\"").unwrap();
         let c2 = TrainConfig::from_table(&t2).unwrap();
         assert!(matches!(c2.method, MethodCfg::AdaComp { bin_low: 64, bin_high: 512 }));
+    }
+
+    #[test]
+    fn loss_knobs_parse_with_off_defaults() {
+        let d = TrainConfig::default();
+        assert_eq!(d.loss_prob, 0.0);
+        assert_eq!(d.max_retries, 3);
+        assert_eq!(d.timeout_us, 1000.0);
+        assert_eq!(d.backoff, 2.0);
+        assert!(!d.lossy());
+
+        let t = Table::parse(
+            r#"
+[net]
+loss_prob = 0.3
+max_retries = 5
+timeout_us = 500.0
+backoff = 1.5
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.loss_prob, 0.3);
+        assert_eq!(c.max_retries, 5);
+        assert_eq!(c.timeout_us, 500.0);
+        assert_eq!(c.backoff, 1.5);
+        assert!(c.lossy());
+        let lc = c.loss_cfg();
+        assert_eq!(lc.seed, c.seed);
+        assert_eq!(lc.loss_prob, 0.3);
+        assert_eq!(lc.timeout_secs, 500.0 * 1e-6);
+
+        // invalid knobs are config errors, not silent clamps
+        assert!(TrainConfig::from_table(&Table::parse("net.loss_prob = 1.5").unwrap()).is_err());
+        assert!(TrainConfig::from_table(&Table::parse("net.backoff = 0.5").unwrap()).is_err());
+        assert!(TrainConfig::from_table(&Table::parse("net.timeout_us = -1.0").unwrap()).is_err());
+    }
+
+    #[test]
+    fn link_loss_inherits_the_shared_knob() {
+        // a topology declared without loss keys inherits net.loss_prob,
+        // so a flat lossy run and an equal-links lossy topology draw
+        // identical fates
+        let t = Table::parse(
+            r#"
+[net]
+loss_prob = 0.2
+[net.links]
+node_size = 2
+cross_mbps = 100.0
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        let tp = c.topology.unwrap();
+        assert_eq!(tp.intra_loss, 0.2);
+        assert_eq!(tp.cross_loss, 0.2);
+        assert!(c.lossy());
+
+        // explicit per-link keys win over the shared knob
+        let t2 = Table::parse(
+            r#"
+[net.links]
+node_size = 2
+intra_loss = 0.0
+cross_loss = 0.4
+"#,
+        )
+        .unwrap();
+        let c2 = TrainConfig::from_table(&t2).unwrap();
+        let tp2 = c2.topology.unwrap();
+        assert_eq!(tp2.intra_loss, 0.0);
+        assert_eq!(tp2.cross_loss, 0.4);
+        assert!(c2.lossy(), "per-link loss alone must arm the fate streams");
+        assert!(
+            TrainConfig::from_table(&Table::parse("net.links.cross_loss = 2.0").unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn ckpt_knobs_parse_and_crash_requires_supervisor() {
+        let d = TrainConfig::default();
+        assert_eq!(d.ckpt_auto_every, 0);
+        assert_eq!(d.ckpt_auto_path, "");
+
+        let t = Table::parse(
+            r#"
+[ckpt]
+auto_every = 2
+auto_path = "runs/auto/test.ckpt"
+[faults]
+crash_prob = 0.1
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.ckpt_auto_every, 2);
+        assert_eq!(c.ckpt_auto_path, "runs/auto/test.ckpt");
+        assert_eq!(c.faults.unwrap().crash_prob, 0.1);
+
+        // a crash stream without an auto-checkpoint to restore from is
+        // a configuration error, not a guaranteed-fatal run
+        let bad = Table::parse("faults.crash_prob = 0.1").unwrap();
+        let err = TrainConfig::from_table(&bad).unwrap_err();
+        assert!(err.to_string().contains("ckpt.auto_every"), "{err}");
+        assert!(
+            TrainConfig::from_table(&Table::parse("faults.crash_prob = 1.5").unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn unknown_net_key_is_rejected_with_suggestion() {
+        let err = TrainConfig::from_table(&Table::parse("net.loss_porb = 0.1").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown config key 'net.loss_porb'"), "{err}");
+        assert!(err.contains("did you mean 'net.loss_prob'?"), "{err}");
+        // section spelling too
+        let err2 = TrainConfig::from_table(&Table::parse("[net]\nbandwith_mbps = 10.0").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err2.contains("'net.bandwidth_mbps'"), "{err2}");
+    }
+
+    #[test]
+    fn unknown_faults_key_is_rejected_with_suggestion() {
+        let err = TrainConfig::from_table(&Table::parse("faults.drop_porb = 0.1").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown config key 'faults.drop_porb'"), "{err}");
+        assert!(err.contains("did you mean 'faults.drop_prob'?"), "{err}");
+    }
+
+    #[test]
+    fn unknown_ckpt_key_is_rejected_with_suggestion() {
+        let err = TrainConfig::from_table(&Table::parse("[ckpt]\nauto_evry = 2").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown config key 'ckpt.auto_evry'"), "{err}");
+        assert!(err.contains("did you mean 'ckpt.auto_every'?"), "{err}");
+        // a clean table with every known section still parses
+        assert!(validate_keys(&Table::parse("ckpt.auto_every = 2").unwrap()).is_ok());
+    }
+
+    #[test]
+    fn every_shipped_config_passes_strict_keys() {
+        // the whitelist must cover the checked-in presets verbatim
+        for name in ["dense", "sharded", "bucketed", "hetero"] {
+            let path = format!("configs/{name}.toml");
+            let Ok(text) = std::fs::read_to_string(&path) else {
+                // test binaries run from the crate root in CI; skip if the
+                // working directory is elsewhere
+                continue;
+            };
+            let t = Table::parse(&text).unwrap();
+            assert!(
+                validate_keys(&t).is_ok(),
+                "{path} tripped strict key validation: {:?}",
+                validate_keys(&t)
+            );
+        }
     }
 
     #[test]

@@ -70,6 +70,23 @@
 //! charges, not data), and `bucket_kb = 0` bypasses the planner so the
 //! legacy clock stays bit-identical.
 //!
+//! # Message-level fault tolerance
+//!
+//! With `net.loss_prob > 0` (or lossy `[net.links]`) every collective
+//! draws a seeded fate (`cluster::unreliable`): a lost message retries
+//! with exponential backoff — the re-charges and timeouts land in the
+//! ledger's retry channel and the schedulers serialize them into the
+//! step — and a charge that exhausts its retries degrades THAT
+//! aggregation to a quorum mean over the surviving contributors (the
+//! victim's error-feedback slot is reset; the CSV's `degraded` column
+//! counts the fallbacks).  `faults.crash_prob > 0` arms the
+//! self-healing supervisor: each step consults a seeded crash fate, and
+//! a crash restores the latest periodic auto-checkpoint
+//! (`ckpt.auto_every`) and replays — bit-for-bit in the floats, with
+//! the wasted work and restore I/O charged to the recovery channel so
+//! only the clock records the detour.  All knobs default off, leaving
+//! the f64 op sequence of the reliable trainer untouched.
+//!
 //! Per epoch: a held-out evaluation, the Δ-norm observation for the
 //! controller (Accordion's detector input — accumulated across the
 //! controller's detection window, not a single epoch), and a metrics row.
@@ -82,6 +99,7 @@ use crate::cluster::faults::FaultSchedule;
 use crate::cluster::network::NetworkModel;
 use crate::cluster::simtime::{self, CostModel, SimClock};
 use crate::cluster::topology::Topology;
+use crate::cluster::unreliable::{self, slot_of, step_key};
 use crate::collectives::{Comm, Transport};
 use crate::compress::{DistCompressor, Level, RoundCtx, Sharding};
 use crate::coordinator::{Controller, Decision, EpochObs};
@@ -206,6 +224,11 @@ pub fn run_resumed(
 // the multiplier ramps over this many epochs after each increase.
 const RAMP_EPOCHS: usize = 3;
 
+// recovery restore-I/O model: the v2 checkpoint's three f32 blocks
+// (params ‖ velocity ‖ delta) stream back from local disk at this rate
+// before the re-sync broadcast is priced on the network model
+const RESTORE_BYTES_PER_SEC: f64 = 500e6;
+
 /// Per-worker gradient-computation scratch: the data batch, one
 /// micro-step's gradients, and the backend's forward/backward arena —
 /// all reused every micro-step.  The arena carries the worker task's
@@ -277,6 +300,11 @@ pub struct Trainer<'a> {
     active: Vec<usize>,
     /// worst straggler multiplier among active workers this epoch
     slow_max: f64,
+    /// message-loss process armed (`cfg.lossy()`): the per-layer comms
+    /// carry seeded fate streams and the step loop drains degraded
+    /// victims into error-feedback resets.  False keeps the hot path
+    /// literally free of fate draws — bit-identical floats AND clock.
+    lossy: bool,
     /// membership-event ledger (rejoin broadcasts): charged serially at
     /// epoch boundaries, never enters the bucket planner
     member_comm: Comm,
@@ -302,6 +330,9 @@ pub struct Trainer<'a> {
     cell_time: Vec<f64>,
     comm_before: Vec<f64>,
     rebuild_before: Vec<f64>,
+    /// retry-channel ledger snapshots (only read when `lossy`, but
+    /// preallocated unconditionally like the codec snapshots)
+    retry_before: Vec<f64>,
     step_comm: Vec<f64>,
     /// codec-channel ledger snapshots and this step's per-layer encode
     /// seconds — only read when `time.charge_codec` is on, but
@@ -331,6 +362,22 @@ pub struct Trainer<'a> {
     global_steps: usize,
     train_loss_sum: f64,
     train_loss_n: usize,
+    /// cumulative quorum-degraded aggregations — the CSV's `degraded`
+    /// column; checkpointed so a resumed run's rows keep counting
+    degraded: u64,
+    /// cumulative seconds charged for crash recovery (rolled-back work
+    /// replayed + restore I/O); diagnostics only, never checkpointed
+    recovery_total: f64,
+    /// crash recoveries performed by this process
+    recovery_count: u64,
+    /// step key of the last crash already recovered from: replayed
+    /// steps at or before it must not re-crash (NOT checkpointed — a
+    /// fresh process replays its crash once and moves past it, exactly
+    /// like a restarted real job)
+    last_crash_key: Option<u64>,
+    /// the most recent step's scheduler channel decomposition
+    /// ([`Trainer::last_step_times`] — the disjointness tests' probe)
+    last_step: simtime::StepTimes,
 }
 
 impl<'a> Trainer<'a> {
@@ -386,6 +433,22 @@ impl<'a> Trainer<'a> {
         // per-layer communication ledger shards, folded in layer order
         let mut comms: Vec<Comm> = (0..n_layers).map(|_| Comm::shared(net.clone())).collect();
         let member_comm = Comm::shared(net.clone());
+        // arm the message-loss process: each layer's ledger shard draws
+        // fates from its own (seed, step, layer, seq) stream, so the
+        // parallel layer fan-out is order-independent by construction.
+        // Under a topology the ring is as lossy as its bottleneck link.
+        // The membership comm stays reliable: rejoin broadcasts model
+        // out-of-band control traffic, not the per-step data plane.
+        let lossy = cfg.lossy();
+        if lossy {
+            let mut lc = cfg.loss_cfg();
+            if let Some(tp) = &topology {
+                lc.loss_prob = tp.ring_loss(&active);
+            }
+            for (l, c) in comms.iter_mut().enumerate() {
+                c.set_loss_model(lc, l);
+            }
+        }
         // the simulated compute clock: flops-derived (deterministic across
         // processes) or measured once per model per process at threads=1
         let cost = match cfg.time_model {
@@ -508,6 +571,7 @@ impl<'a> Trainer<'a> {
             faults,
             active,
             slow_max: 1.0,
+            lossy,
             member_comm,
             transport,
             comms,
@@ -528,6 +592,7 @@ impl<'a> Trainer<'a> {
             cell_time: Vec::new(),
             comm_before: vec![0.0; n_layers],
             rebuild_before: vec![0.0; n_layers],
+            retry_before: vec![0.0; n_layers],
             step_comm: vec![0.0; n_layers],
             enc_before: vec![0.0; n_layers],
             dec_before: vec![0.0; n_layers],
@@ -549,6 +614,11 @@ impl<'a> Trainer<'a> {
             global_steps: 0,
             train_loss_sum: 0.0,
             train_loss_n: 0,
+            degraded: 0,
+            recovery_total: 0.0,
+            recovery_count: 0,
+            last_crash_key: None,
+            last_step: simtime::StepTimes::default(),
         })
     }
 
@@ -644,6 +714,21 @@ impl<'a> Trainer<'a> {
             c.net = self.net.clone();
         }
         self.member_comm.net = self.net.clone();
+        // the fate streams follow the ring's bottleneck link: a
+        // membership change can route traffic over a lossier (or
+        // cleaner) link, and the per-collective loss probability moves
+        // with it (the shared `net.loss_prob` without a topology)
+        if self.lossy {
+            let p = match &self.topology {
+                Some(tp) => tp.ring_loss(&self.active),
+                None => self.cfg.loss_prob,
+            };
+            for c in self.comms.iter_mut() {
+                if let Some(lm) = c.loss.as_mut() {
+                    lm.cfg.loss_prob = p;
+                }
+            }
+        }
         // survivors absorb the departed ring chunks: all ownership
         // arithmetic derives from the active count
         self.transport.set_active_workers(n_active);
@@ -673,6 +758,8 @@ impl<'a> Trainer<'a> {
     pub fn step(&mut self, s: usize) -> Result<()> {
         let threads = self.threads;
         let batch_mult = self.batch_mult;
+        let lossy = self.lossy;
+        let epoch = self.epoch;
         let lr_eff = self.lr_eff;
         let workers = self.cfg.workers;
         let batch_size = self.meta.batch;
@@ -708,6 +795,7 @@ impl<'a> Trainer<'a> {
             cell_time,
             comm_before,
             rebuild_before,
+            retry_before,
             step_comm,
             enc_before,
             dec_before,
@@ -717,6 +805,8 @@ impl<'a> Trainer<'a> {
             decision,
             train_loss_sum,
             train_loss_n,
+            degraded,
+            last_step,
             ..
         } = self;
         let cfg: &TrainConfig = *cfg;
@@ -833,6 +923,13 @@ impl<'a> Trainer<'a> {
                 enc_before[l] = c.ledger.encode_secs;
                 dec_before[l] = c.ledger.decode_secs;
             }
+            // re-key the fate streams: every collective this step draws
+            // from the (epoch, s)-keyed position, so fates replay
+            // exactly under resume, recovery, and any thread count
+            if lossy {
+                retry_before[l] = c.ledger.retry_secs;
+                c.begin_lossy_step(step_key(epoch, s));
+            }
             c.events.clear();
         }
 
@@ -876,6 +973,27 @@ impl<'a> Trainer<'a> {
             });
         }
 
+        // drain this step's degraded fates: a victim's positional
+        // error-feedback slot is reset (its residual died with the lost
+        // message — quorum_mean already excluded its contribution), and
+        // the retry channel's ledger delta rides into the scheduler
+        // below.  The clean run never enters the branch, leaving the
+        // f64 op sequence untouched.
+        let mut step_retry = 0.0f64;
+        if lossy {
+            for (l, c) in comms.iter_mut().enumerate() {
+                step_retry += c.ledger.retry_secs - retry_before[l];
+                if c.degraded_victims.is_empty() {
+                    continue;
+                }
+                for &v in c.degraded_victims.iter() {
+                    compressors[l].reset_worker(slot_of(v, n_active));
+                }
+                *degraded += c.degraded_victims.len() as u64;
+                c.degraded_victims.clear();
+            }
+        }
+
         // charge the simulated clock: modeled compute + this step's α–β
         // collectives through the overlap event scheduler.  The
         // transport's parameter-rebuild all-gathers are split out: they
@@ -899,8 +1017,8 @@ impl<'a> Trainer<'a> {
             // bucket granularity (one α per bucket)
             Some(bz) => {
                 let (charges, rebuild) = bz.plan(comms, net.as_ref());
-                simtime::step_times_bucketed_coded_slowed(
-                    cost, batch_mult, charges, rebuild, slow, codec,
+                simtime::step_times_bucketed_full(
+                    cost, batch_mult, charges, rebuild, slow, codec, step_retry,
                 )
             }
             // legacy per-layer charge: bit-identical to the
@@ -913,11 +1031,12 @@ impl<'a> Trainer<'a> {
                     step_comm[l] = (c.ledger.secs - comm_before[l]) - rebuild;
                     step_rebuild += rebuild;
                 }
-                simtime::step_times_coded_slowed(
-                    cost, batch_mult, step_comm, step_rebuild, slow, codec,
+                simtime::step_times_full(
+                    cost, batch_mult, step_comm, step_rebuild, slow, codec, step_retry,
                 )
             }
         };
+        *last_step = t;
         clock.compute_secs += t.compute;
         clock.comm_secs += t.comm;
         if overlap {
@@ -1031,6 +1150,7 @@ impl<'a> Trainer<'a> {
             floats,
             secs: self.clock.sim_secs,
             overlap_saved_secs: self.clock.overlap_saved_secs(),
+            degraded: self.degraded,
             wall_secs: self.clock.wall_secs,
             grad_norm: epoch_sqnorm.sqrt(),
             frac_low: n_low as f32 / n_comp as f32,
@@ -1054,13 +1174,127 @@ impl<'a> Trainer<'a> {
         Ok(())
     }
 
-    /// One full epoch: `begin_epoch` + every `step` + `end_epoch`.
+    /// One full epoch: `begin_epoch` + every `step` + `end_epoch` —
+    /// under the self-healing supervisor when `ckpt.auto_every > 0`:
+    /// epochs on the auto cadence snapshot full state first (uncharged —
+    /// the write is modeled as an asynchronous background drain), each
+    /// step consults its seeded crash fate, and a crash restores the
+    /// latest auto-checkpoint and re-enters the epoch loop, replaying
+    /// to the crash point bit-for-bit while the clock pays for the
+    /// detour ([`Trainer::recover`]).
     pub fn run_epoch(&mut self) -> Result<()> {
-        let steps = self.begin_epoch()?;
-        for s in 0..steps {
-            self.step(s)?;
+        'epoch: loop {
+            let auto = self.cfg.ckpt_auto_every;
+            if auto > 0 && self.epoch % auto == 0 {
+                let path = self.auto_ckpt_path();
+                self.save(&path)?;
+            }
+            let steps = self.begin_epoch()?;
+            for s in 0..steps {
+                if self.crash_and_recover(s)? {
+                    continue 'epoch;
+                }
+                self.step(s)?;
+            }
+            return self.end_epoch();
         }
-        self.end_epoch()
+    }
+
+    /// Auto-checkpoint location: the explicit `ckpt.auto_path`, or a
+    /// label-derived default under `runs/auto/`.
+    fn auto_ckpt_path(&self) -> String {
+        if self.cfg.ckpt_auto_path.is_empty() {
+            format!("runs/auto/{}.ckpt", self.cfg.label)
+        } else {
+            self.cfg.ckpt_auto_path.clone()
+        }
+    }
+
+    /// Step `s`'s crash fate: `Ok(true)` iff the supervisor crashed and
+    /// recovered here (the caller re-enters the epoch loop).  The fate
+    /// is a pure function of (fault seed, epoch, step), so every rerun
+    /// sees the same weather; a key at or before the last recovered
+    /// crash is skipped — a restarted process does not re-die at the
+    /// failure it just recovered from, and the replay window is exactly
+    /// the already-survived steps.
+    fn crash_and_recover(&mut self, s: usize) -> Result<bool> {
+        let Some(fc) = self.cfg.faults else { return Ok(false) };
+        if fc.crash_prob <= 0.0 || self.cfg.ckpt_auto_every == 0 {
+            return Ok(false);
+        }
+        let key = step_key(self.epoch, s);
+        if self.last_crash_key.is_some_and(|k| key <= k) {
+            return Ok(false);
+        }
+        if !unreliable::crash_at(fc.seed, fc.crash_prob, key) {
+            return Ok(false);
+        }
+        self.last_crash_key = Some(key);
+        self.recover()?;
+        Ok(true)
+    }
+
+    /// Restore the latest auto-checkpoint and charge the detour.  The
+    /// simulated work between the checkpoint and the crash is paid
+    /// AGAIN by the replay, so the rolled-back seconds plus the restore
+    /// I/O (three checkpoint blocks off disk at
+    /// [`RESTORE_BYTES_PER_SEC`], then one parameter broadcast
+    /// re-syncing the ring) land on the clock and the recovery channel.
+    /// Floats are untouched: the replay is bit-for-bit, and recovery
+    /// traffic is charged in seconds only — the Data-Sent ledger stays
+    /// exactly the uninterrupted run's.
+    fn recover(&mut self) -> Result<()> {
+        let path = self.auto_ckpt_path();
+        let pre_sim = self.clock.sim_secs;
+        self.restore(&path)?;
+        // a real restart loses the in-memory error-feedback residuals;
+        // drop them deterministically here (NOT in `restore` — cold
+        // `--resume` keeps its established semantics)
+        for comp in self.compressors.iter_mut() {
+            comp.reset();
+        }
+        let wasted = pre_sim - self.clock.sim_secs;
+        let bytes = (3 * self.meta.total_params * 4) as f64;
+        let io = bytes / RESTORE_BYTES_PER_SEC
+            + self.net.broadcast_secs(self.meta.total_params * 4);
+        let detour = wasted + io;
+        self.clock.sim_secs += detour;
+        self.recovery_total += detour;
+        self.recovery_count += 1;
+        Ok(())
+    }
+
+    /// Cumulative simulated seconds (the CSV's `sim_secs` column) — the
+    /// fault-tolerance suite resyncs against it at epoch boundaries and
+    /// asserts each step's channel decomposition lands on it exactly.
+    pub fn sim_secs(&self) -> f64 {
+        self.clock.sim_secs
+    }
+
+    /// Cumulative retry-channel seconds across the per-layer ledgers.
+    pub fn retry_secs_total(&self) -> f64 {
+        self.comms.iter().map(|c| c.ledger.retry_secs).sum()
+    }
+
+    /// Cumulative seconds the supervisor charged for crash recovery.
+    pub fn recovery_secs_total(&self) -> f64 {
+        self.recovery_total
+    }
+
+    /// Crash recoveries performed by this process.
+    pub fn recoveries(&self) -> u64 {
+        self.recovery_count
+    }
+
+    /// Cumulative quorum-degraded aggregations (the CSV's `degraded`
+    /// column).
+    pub fn degraded_total(&self) -> u64 {
+        self.degraded
+    }
+
+    /// The most recent step's scheduler channel decomposition.
+    pub fn last_step_times(&self) -> simtime::StepTimes {
+        self.last_step
     }
 
     /// Consume the trainer, returning the run log and final parameters.
@@ -1086,6 +1320,7 @@ impl<'a> Trainer<'a> {
             ramp_at: self.ramp_at,
             last_mult: self.last_mult,
             window_start: self.window_start,
+            degraded: self.degraded,
         };
         checkpoint::save_full(
             path,
@@ -1123,18 +1358,27 @@ impl<'a> Trainer<'a> {
         self.ramp_at = st.ramp_at;
         self.last_mult = st.last_mult;
         self.window_start = st.window_start;
-        // replay the fault schedule up to the resume epoch: the stream
-        // position is a pure function of (seed, epoch), so the schedule
-        // and membership state land exactly where the saved run left
-        // them.  Charges are NOT re-applied — the restored ledgers and
-        // clock already contain them.
+        self.degraded = st.degraded;
+        // a mid-run recovery restores into a trainer that already logged
+        // epochs past the checkpoint: drop those rows — the replay
+        // re-pushes them identically (shifted only by the recovery
+        // charge in the clock columns).  No-op for a cold `--resume`.
+        self.log.epochs.truncate(st.epoch);
+        self.log.level_trace.truncate(st.epoch);
+        // replay the fault schedule up to the resume epoch on a FRESH
+        // schedule: the stream position is a pure function of
+        // (seed, epoch) but `begin_epoch` is strictly sequential, and a
+        // mid-run recovery's live schedule is already past the
+        // checkpoint.  Charges are NOT re-applied — the restored
+        // ledgers and clock already contain them.
         if self.faults.is_some() {
+            let fc = self.cfg.faults.expect("faults imply cfg.faults");
+            let mut fs = FaultSchedule::new(self.cfg.workers, fc);
             for e in 0..st.epoch {
-                let fs = self.faults.as_mut().expect("checked above");
                 fs.begin_epoch(e);
             }
-            let fs = self.faults.as_ref().expect("checked above");
             self.active = fs.active().to_vec();
+            self.faults = Some(fs);
             self.sync_membership(false);
         }
         Ok(())

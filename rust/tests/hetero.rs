@@ -40,6 +40,8 @@ fn two_node() -> TopologyCfg {
         intra_us: 5.0,
         cross_mbps: 100.0,
         cross_us: 50.0,
+        intra_loss: 0.0,
+        cross_loss: 0.0,
     }
 }
 
@@ -53,6 +55,7 @@ fn stormy() -> FaultCfg {
         slow_max: 3.0,
         drop_prob: 0.3,
         down_epochs: 1,
+        crash_prob: 0.0,
     }
 }
 
@@ -199,6 +202,8 @@ fn all_links_equal_topology_is_bit_identical_to_shared_model() {
         intra_us: 50.0,
         cross_mbps: 100.0,
         cross_us: 50.0,
+        intra_loss: 0.0,
+        cross_loss: 0.0,
     };
     for faults in [None, Some(stormy())] {
         let fctx = if faults.is_some() { "faulty" } else { "clean" };
@@ -245,6 +250,8 @@ fn slower_cross_fabric_shows_up_in_the_clock() {
         intra_us: 5.0,
         cross_mbps: 10.0,
         cross_us: 500.0,
+        intra_loss: 0.0,
+        cross_loss: 0.0,
     };
     let hetero = train::run_full(
         &tiny("cross-slow", MethodCfg::None, TransportCfg::Dense, 1, Some(slow_cross), None),
@@ -288,6 +295,7 @@ fn guaranteed_stragglers_are_strictly_slower_with_identical_math() {
         slow_max: 1.5,
         drop_prob: 0.0,
         down_epochs: 1,
+        crash_prob: 0.0,
     };
     let mk = |label: &str, faults| {
         tiny(label, MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 },
@@ -330,6 +338,7 @@ fn every_rejoin_charges_one_full_model_broadcast() {
         slow_max: 1.5,
         drop_prob: 0.5,
         down_epochs: 1,
+        crash_prob: 0.0,
     };
     let rejoin_boundaries = |seed| {
         let mut fs = FaultSchedule::new(workers, churny(seed));

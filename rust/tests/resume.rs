@@ -14,11 +14,12 @@
 //! Sim backend only: no artifacts, no PJRT.
 
 use accordion::cluster::faults::FaultCfg;
+use accordion::metrics::RunLog;
 use accordion::models::Registry;
 use accordion::runtime::Runtime;
 use accordion::train::{
     self,
-    config::{ControllerCfg, MethodCfg, TopologyCfg, TrainConfig},
+    config::{ControllerCfg, MethodCfg, TopologyCfg, TrainConfig, TransportCfg},
     Trainer,
 };
 
@@ -121,6 +122,7 @@ fn assert_resumed_tail_matches(
             "{ectx}: window_grad_norm (controller window phase must survive)"
         );
         assert_eq!(a.frac_low.to_bits(), b.frac_low.to_bits(), "{ectx}: frac_low");
+        assert_eq!(a.degraded, b.degraded, "{ectx}: cumulative degraded counter");
     }
 }
 
@@ -152,6 +154,8 @@ fn resume_replays_the_fault_schedule_mid_stream() {
         intra_us: 5.0,
         cross_mbps: 100.0,
         cross_us: 50.0,
+        intra_loss: 0.0,
+        cross_loss: 0.0,
     });
     c.faults = Some(FaultCfg {
         seed: 11,
@@ -160,11 +164,147 @@ fn resume_replays_the_fault_schedule_mid_stream() {
         slow_max: 3.0,
         drop_prob: 0.4,
         down_epochs: 1,
+        crash_prob: 0.0,
     });
     let full = train::run_full(&c, &reg, &rt).unwrap();
     for split in [2usize, 4] {
         let resumed = run_interrupted(&c, &reg, &rt, split, &format!("faulty{split}"));
         assert_resumed_tail_matches(&full, &resumed, split, &format!("faulty split {split}"));
+    }
+}
+
+/// The deterministic CSV view: `#` comment lines stripped (they carry
+/// host-dependent tuner numbers by design) and the trailing `wall_secs`
+/// debug column cut from every row.
+fn det_csv(log: &RunLog) -> String {
+    log.to_csv()
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .map(|l| l.rsplit_once(',').map(|(head, _)| head).unwrap_or(l).to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Crash-weather config for the self-healing suite: lossy collectives
+/// (so a crash lands mid-fault-stream), an Accordion controller with
+/// interval 2 (so crashes land mid-detection-window too), and a crash
+/// probability aggressive enough that the seeded stream fires many
+/// times across the run — recovery is exercised, not sampled.
+fn crash_cfg(label: &str, threads: usize, intra: usize, tr: TransportCfg) -> TrainConfig {
+    let mut c = cfg(label);
+    c.threads = threads;
+    c.intra_threads = intra;
+    c.transport = tr;
+    c.loss_prob = 0.3;
+    c.max_retries = 1;
+    let mut fc = FaultCfg::from_intensity(0.0, 7);
+    fc.crash_prob = 0.5;
+    c.faults = Some(fc);
+    c.ckpt_auto_every = 2;
+    c.ckpt_auto_path = ckpt_path(&format!("auto-{label}"));
+    c
+}
+
+fn run_supervised(c: &TrainConfig) -> (RunLog, Vec<accordion::tensor::Tensor>, f64, u64) {
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut tr = Trainer::new(c, &reg, &rt).unwrap();
+    while tr.epoch() < c.epochs {
+        tr.run_epoch().unwrap();
+    }
+    let recovery = tr.recovery_secs_total();
+    let recoveries = tr.recoveries();
+    let _ = std::fs::remove_file(format!("{}.json", c.ckpt_auto_path));
+    let _ = std::fs::remove_file(format!("{}.bin", c.ckpt_auto_path));
+    let (log, params) = tr.finish();
+    (log, params, recovery, recoveries)
+}
+
+#[test]
+fn self_healing_recovery_replays_byte_for_byte_across_engines() {
+    // ISSUE acceptance: a seeded lossy run with degraded steps and
+    // auto-recoveries must produce byte-identical deterministic CSV
+    // columns across --threads {1, 4} (x intra-threads) under BOTH
+    // transports.  The label is shared within each transport so the
+    // CSVs are comparable byte-for-byte.
+    for (tname, transport) in [("dense", TransportCfg::Dense), ("sharded", TransportCfg::Sharded)]
+    {
+        let base = run_supervised(&crash_cfg(&format!("recover-det-{tname}"), 1, 1, transport));
+        assert!(base.3 >= 1, "{tname}: the seeded crash stream must fire at least once");
+        assert!(
+            base.0.epochs.last().unwrap().degraded > 0,
+            "{tname}: the lossy run must degrade at least one aggregation"
+        );
+        for (threads, intra) in [(4usize, 1usize), (1, 2), (4, 2)] {
+            let other = run_supervised(&crash_cfg(
+                &format!("recover-det-{tname}"),
+                threads,
+                intra,
+                transport,
+            ));
+            assert_eq!(
+                det_csv(&base.0),
+                det_csv(&other.0),
+                "{tname}: recovered run must replay byte-for-byte at \
+                 threads={threads} intra={intra}"
+            );
+            assert_eq!(base.3, other.3, "{tname}: recovery count");
+        }
+    }
+}
+
+#[test]
+fn recovery_charges_only_the_clock() {
+    // the same weather with and without the crash stream: floats (both
+    // the parameters and the Data-Sent ledger), the degraded counter,
+    // and every numeric column must match bit-for-bit — the detour is
+    // paid in seconds only, and it equals the recovery channel (up to
+    // f64 re-association across the replayed prefix).
+    let crashed = run_supervised(&crash_cfg("recover-clock", 1, 1, TransportCfg::Dense));
+    let mut calm_cfg = crash_cfg("recover-clock", 1, 1, TransportCfg::Dense);
+    calm_cfg.faults.as_mut().unwrap().crash_prob = 0.0;
+    calm_cfg.ckpt_auto_path = ckpt_path("auto-recover-clock-calm");
+    let calm = run_supervised(&calm_cfg);
+    assert!(crashed.3 >= 1 && calm.3 == 0);
+    assert_eq!(crashed.1.len(), calm.1.len());
+    for (a, b) in crashed.1.iter().zip(&calm.1) {
+        assert!(
+            a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "recovery must not move the parameters"
+        );
+    }
+    let (ce, qe) = (crashed.0.epochs.last().unwrap(), calm.0.epochs.last().unwrap());
+    assert_eq!(ce.floats, qe.floats, "recovery traffic must not bill the floats ledger");
+    assert_eq!(ce.degraded, qe.degraded, "the fate streams must replay unchanged");
+    assert!(ce.secs > qe.secs, "the detour must cost simulated time");
+    let detour = ce.secs - qe.secs;
+    assert!(
+        (detour - crashed.2).abs() <= 1e-9 * crashed.2.max(1.0),
+        "clock detour {detour} must equal the recovery channel {}",
+        crashed.2
+    );
+}
+
+#[test]
+fn lossy_resume_replays_the_fate_streams_mid_stream() {
+    // --save / --resume across a lossy run: the (epoch, step)-keyed
+    // fate streams must land the restored trainer exactly where the
+    // uninterrupted run was — retries, degraded quorums, and the
+    // degraded counter all replay, including a split mid detection
+    // window (epoch 3, interval 2).
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let mut c = cfg("resume-lossy");
+    c.loss_prob = 0.3;
+    c.max_retries = 1;
+    let full = train::run_full(&c, &reg, &rt).unwrap();
+    assert!(
+        full.0.epochs.last().unwrap().degraded > 0,
+        "the seeded lossy run must degrade at least one aggregation"
+    );
+    for split in [3usize, 4] {
+        let resumed = run_interrupted(&c, &reg, &rt, split, &format!("lossy{split}"));
+        assert_resumed_tail_matches(&full, &resumed, split, &format!("lossy split {split}"));
     }
 }
 

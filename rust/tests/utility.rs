@@ -136,6 +136,7 @@ fn charged_codec_replays_through_topology_and_faults() {
             slow_max: 2.0,
             drop_prob: 0.4,
             down_epochs: 1,
+            crash_prob: 0.0,
         });
         c
     };
