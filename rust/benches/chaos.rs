@@ -1,0 +1,188 @@
+//! Chaos bench: elastic membership under composed adverse weather —
+//! heavy-tailed stragglers (every `faults.straggler` kind), seeded
+//! churn through the control plane, a scripted drain/join trace, and
+//! the fully composed scenario (trace + message loss + crash
+//! supervisor).  Reports *simulated* seconds, the Data-Sent ledger, and
+//! the cluster-size trough (fully deterministic — diffs of
+//! `BENCH_chaos.json` across PRs are pure signal).
+//!
+//! Pins the membership contracts on every row:
+//!  * every scenario replays bit-identically (clock AND floats);
+//!  * stragglers of any kind move ONLY the clock — floats byte-equal
+//!    to the clean twin;
+//!  * the scripted drain dips `active_workers` to 3 and the join
+//!    restores 4, with the handoff + rejoin traffic visible in floats.
+//!
+//! Run: `cargo bench --bench chaos [-- --quick-ci]`
+//! (`--quick-ci` shrinks the run; CI uploads the JSON per PR.)
+
+use accordion::cluster::faults::{FaultCfg, StragglerCfg};
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{self, config::{ControllerCfg, TrainConfig}};
+use accordion::util::json;
+
+const WORKERS: usize = 4;
+
+const TRACE: &str = "workers = 4\n\
+events = [\n\
+    \"1:slow:1:2.5\",\n\
+    \"2:drain:3\",\n\
+    \"4:join:3\",\n\
+]\n";
+
+fn cfg(label: &str, quick: bool) -> TrainConfig {
+    TrainConfig {
+        label: label.to_string(),
+        model: "mlp_deep_c10".into(),
+        workers: WORKERS,
+        epochs: 6,
+        train_size: if quick { 512 } else { 2048 },
+        test_size: 64,
+        warmup_epochs: 0,
+        decay_epochs: vec![4],
+        controller: ControllerCfg::Accordion { eta: 0.5, interval: 2 },
+        ..TrainConfig::default()
+    }
+}
+
+fn tmp(tag: &str) -> String {
+    let dir = std::env::temp_dir();
+    format!("{}/accordion-bench-chaos-{tag}-{}", dir.display(), std::process::id())
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick-ci");
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+
+    let trace_path = format!("{}.toml", tmp("trace"));
+    std::fs::write(&trace_path, TRACE).expect("writing trace file");
+
+    let straggler_kinds: Vec<(&str, StragglerCfg)> = vec![
+        ("lognormal", StragglerCfg::Lognormal { mu: 0.5, sigma: 0.8, cap: 12.0 }),
+        ("pareto", StragglerCfg::Pareto { alpha: 1.5, xm: 1.0, cap: 12.0 }),
+        ("const", StragglerCfg::Const { factor: 3.0 }),
+    ];
+
+    let scenarios: Vec<(&str, Box<dyn Fn(&mut TrainConfig)>)> = {
+        let mut v: Vec<(&str, Box<dyn Fn(&mut TrainConfig)>)> =
+            vec![("clean", Box::new(|_c: &mut TrainConfig| {}))];
+        for (name, sk) in straggler_kinds {
+            v.push((
+                name,
+                Box::new(move |c: &mut TrainConfig| {
+                    let mut fc = FaultCfg::from_intensity(0.0, 17);
+                    fc.slow_prob = 1.0;
+                    fc.straggler = sk;
+                    c.faults = Some(fc);
+                }),
+            ));
+        }
+        v.push((
+            "churn",
+            Box::new(|c: &mut TrainConfig| {
+                c.faults = Some(FaultCfg::from_intensity(0.6, 17));
+            }),
+        ));
+        let tp = trace_path.clone();
+        v.push((
+            "drain-trace",
+            Box::new(move |c: &mut TrainConfig| {
+                c.ctrl_trace = tp.clone();
+            }),
+        ));
+        let tp = trace_path.clone();
+        let auto = tmp("composed");
+        v.push((
+            "composed",
+            Box::new(move |c: &mut TrainConfig| {
+                c.ctrl_trace = tp.clone();
+                c.loss_prob = 0.2;
+                let mut fc = FaultCfg::from_intensity(0.0, 17);
+                fc.crash_prob = 0.02;
+                c.faults = Some(fc);
+                c.ckpt_auto_every = 2;
+                c.ckpt_auto_path = auto.clone();
+            }),
+        ));
+        v
+    };
+
+    let mut rows: Vec<json::Json> = Vec::new();
+    let mut clean: Option<(f64, u64)> = None;
+    println!(
+        "{:<24} {:>10} {:>12} {:>9} {:>11} {:>8}",
+        "scenario", "sim_secs", "floats", "degraded", "min_active", "acc"
+    );
+    for (name, customize) in &scenarios {
+        let mut c = cfg(&format!("bench-chaos-{name}"), quick);
+        customize(&mut c);
+        let log = train::run(&c, &reg, &rt).unwrap();
+        // every scenario — churn, drains, crashes, loss — must replay
+        // bit-for-bit: the whole point of the seeded control plane
+        let again = train::run(&c, &reg, &rt).unwrap();
+        assert_eq!(
+            log.total_secs().to_bits(),
+            again.total_secs().to_bits(),
+            "{name}: the simulated clock must be deterministic"
+        );
+        assert_eq!(log.total_floats(), again.total_floats(), "{name}: floats must replay");
+        let min_active =
+            log.epochs.iter().map(|e| e.active_workers).min().unwrap_or(WORKERS);
+        let degraded = log.epochs.last().map(|e| e.degraded).unwrap_or(0);
+        match (*name, clean) {
+            ("clean", _) => clean = Some((log.total_secs(), log.total_floats())),
+            ("lognormal" | "pareto" | "const", Some((cs, cf))) => {
+                // stragglers stall the BSP step; they never send bytes
+                assert_eq!(log.total_floats(), cf, "{name}: stragglers moved the floats ledger");
+                assert!(log.total_secs() >= cs, "{name}: stragglers cannot speed the run up");
+                assert_eq!(min_active, WORKERS, "{name}: stragglers must not change membership");
+            }
+            ("drain-trace", Some((_, cf))) => {
+                assert_eq!(min_active, 3, "the drain must dip the cluster to 3");
+                assert_eq!(
+                    log.epochs.last().map(|e| e.active_workers),
+                    Some(WORKERS),
+                    "the join must restore the cluster"
+                );
+                assert!(
+                    log.total_floats() > cf,
+                    "the drain handoff + rejoin broadcast must land in Data Sent"
+                );
+            }
+            _ => {}
+        }
+        println!(
+            "{:<24} {:>9.3}s {:>12} {:>9} {:>11} {:>7.3}",
+            name,
+            log.total_secs(),
+            log.total_floats(),
+            degraded,
+            min_active,
+            log.final_acc()
+        );
+        rows.push(json::obj(vec![
+            ("scenario", json::s(name)),
+            ("sim_secs", json::num(log.total_secs())),
+            ("floats", json::num(log.total_floats() as f64)),
+            ("degraded", json::num(degraded as f64)),
+            ("min_active", json::num(min_active as f64)),
+            ("final_acc", json::num(log.final_acc() as f64)),
+        ]));
+    }
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(format!("{}.json", tmp("composed")));
+    let _ = std::fs::remove_file(format!("{}.bin", tmp("composed")));
+
+    let report = json::obj(vec![
+        ("bench", json::s("chaos-elastic-membership")),
+        ("model", json::s("mlp_deep_c10")),
+        ("workers", json::num(WORKERS as f64)),
+        ("quick_ci", json::num(if quick { 1.0 } else { 0.0 })),
+        ("deterministic", json::num(1.0)),
+        ("results", json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_chaos.json", report.to_string()).expect("writing BENCH_chaos.json");
+    println!("BENCH_chaos.json written (simulated, deterministic — diffs are signal)");
+}

@@ -12,7 +12,7 @@
 //! Run: `cargo bench --bench hetero [-- --quick-ci]`
 //! (`--quick-ci` shrinks the run; CI uploads the JSON per PR.)
 
-use accordion::cluster::faults::FaultCfg;
+use accordion::cluster::faults::{FaultCfg, StragglerCfg};
 use accordion::compress::Level;
 use accordion::exp::hetero::two_node_topology;
 use accordion::models::Registry;
@@ -105,6 +105,7 @@ fn main() {
         drop_prob: 0.0,
         down_epochs: 1,
         crash_prob: 0.0,
+        straggler: StragglerCfg::Uniform,
     };
     let base = train::run(
         &cfg(

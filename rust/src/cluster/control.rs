@@ -1,0 +1,559 @@
+//! Elastic membership control plane: cluster churn as an explicit,
+//! replayable command stream (ISSUE 10).
+//!
+//! PR 6 hard-coded the seeded fate process into the trainer: the
+//! [`FaultSchedule`](crate::cluster::faults::FaultSchedule) decided who
+//! drops, straggles, and rejoins, and the trainer read its state
+//! directly.  This module inverts that: membership is driven by
+//! [`MembershipEvent`]s consumed at epoch boundaries, and *where the
+//! events come from* is a [`MembershipSource`] —
+//!
+//!  * [`SeededSource`] adapts the existing fault schedule behind the
+//!    trait.  It emits exactly the events the schedule's delta implies,
+//!    so a seeded run through the control plane is **byte-identical**
+//!    to the pre-control-plane trainer (pinned by
+//!    `seeded_source_degenerates_byte_identically` below);
+//!  * [`TraceSource`] replays a scripted trace file
+//!    (`--membership-trace trace.toml`): any join/drain/crash scenario
+//!    becomes a checked-in artifact, replayable bit-for-bit across
+//!    `--threads`, `--intra-threads`, transports, and `--resume`.
+//!
+//! The [`ControlPlane`] owns the authoritative mask / slowdown / active
+//! set, validates every event at apply time (a trace that drains an
+//! inactive rank or empties the cluster is a hard error, not a silent
+//! no-op), and exposes a monotone `cursor` of consumed events that the
+//! checkpoint header records so a resume can verify it replayed the
+//! same stream.
+//!
+//! Lifecycle semantics the trainer implements on top of the
+//! [`Boundary`] report:
+//!
+//!  * **join** — admission via the existing rejoin broadcast: the
+//!    newcomer receives the full model (`P` floats) on the membership
+//!    channel;
+//!  * **leave (hard)** — PR 6's drop: no charge at departure, state on
+//!    the departing rank is lost;
+//!  * **drain (graceful leave)** — the departing rank finishes its
+//!    epoch, then hands its `ShardedOwnership` shard (`ceil(P/n)`
+//!    floats) to a successor over a charged point-to-point transfer
+//!    (`Comm::charge_drain` — strictly cheaper than a rejoin broadcast
+//!    for any `n >= 2`), and its error-feedback residual folds into the
+//!    successor slot (`DistCompressor::drain_worker`) instead of being
+//!    discarded;
+//!  * **slowdown** — per-rank compute multipliers; the seeded source
+//!    feeds them from the straggler distribution, a trace sets them
+//!    explicitly (sticky until overridden).
+
+use crate::cluster::faults::{FaultCfg, FaultSchedule};
+use crate::util::toml::Table;
+use anyhow::{bail, Result};
+
+/// One membership command, applied at an epoch boundary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MembershipEvent {
+    /// rank enters the cluster (rejoin-broadcast admission)
+    Join { rank: usize },
+    /// rank leaves; `graceful` departures are normalized to [`MembershipEvent::Drain`]
+    Leave { rank: usize, graceful: bool },
+    /// graceful leave: finish the step, hand shards off point-to-point
+    Drain { rank: usize },
+    /// set rank's compute multiplier (>= 1.0; 1.0 = nominal)
+    SetSlowdown { rank: usize, factor: f64 },
+}
+
+/// Membership changes one `ControlPlane::begin_epoch` produced, split
+/// by how the trainer must charge them.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Boundary {
+    /// ranks admitted this boundary (charged: one rejoin broadcast if any)
+    pub joins: Vec<usize>,
+    /// hard drops (uncharged; state lost)
+    pub leaves: Vec<usize>,
+    /// graceful departures (charged: one p2p shard handoff each)
+    pub drains: Vec<usize>,
+}
+
+impl Boundary {
+    pub fn changed(&self) -> bool {
+        !self.joins.is_empty() || !self.leaves.is_empty() || !self.drains.is_empty()
+    }
+}
+
+/// Where membership events come from.  `begin_epoch` must be called
+/// once per epoch, in order, and appends this boundary's events to
+/// `out` in application order.
+pub trait MembershipSource {
+    fn name(&self) -> &'static str;
+    fn begin_epoch(&mut self, epoch: usize, out: &mut Vec<MembershipEvent>);
+}
+
+/// The seeded fault process adapted behind the trait.  Emits the
+/// schedule's delta as events plus one `SetSlowdown` per rank per
+/// epoch, so the control plane's mask/slowdown state reproduces the
+/// raw schedule's **bitwise** — all-events-equal degenerates to
+/// today's CSVs byte-identically.
+pub struct SeededSource {
+    fs: FaultSchedule,
+}
+
+impl SeededSource {
+    pub fn new(workers: usize, cfg: FaultCfg) -> SeededSource {
+        SeededSource { fs: FaultSchedule::new(workers, cfg) }
+    }
+}
+
+impl MembershipSource for SeededSource {
+    fn name(&self) -> &'static str {
+        "seeded"
+    }
+
+    fn begin_epoch(&mut self, epoch: usize, out: &mut Vec<MembershipEvent>) {
+        let delta = self.fs.begin_epoch(epoch);
+        // joins before leaves: the schedule already guarantees the two
+        // sets are disjoint, and this order keeps the "cluster would
+        // empty" guard trivially satisfied for seeded streams
+        for &rank in &delta.rejoined {
+            out.push(MembershipEvent::Join { rank });
+        }
+        for &rank in &delta.dropped {
+            out.push(MembershipEvent::Leave { rank, graceful: false });
+        }
+        for (rank, &factor) in self.fs.slowdown().iter().enumerate() {
+            out.push(MembershipEvent::SetSlowdown { rank, factor });
+        }
+    }
+}
+
+/// A scripted membership trace (`--membership-trace trace.toml`).
+///
+/// The repo's TOML-subset parser has no array-of-tables, so the trace
+/// is a flat string array — one `"epoch:kind:rank[:factor]"` entry per
+/// event, applied in file order within an epoch:
+///
+/// ```toml
+/// # optional: assert the trace was written for this cluster size
+/// workers = 4
+/// events = [
+///     "1:slow:2:2.5",   # epoch 1: rank 2 computes at 2.5x
+///     "2:drain:3",      # epoch 2: rank 3 drains (charged p2p handoff)
+///     "4:join:3",       # epoch 4: rank 3 readmitted (rejoin broadcast)
+///     "5:leave:0",      # epoch 5: rank 0 hard-drops (uncharged)
+/// ]
+/// ```
+pub struct TraceSource {
+    /// (epoch, event), sorted by epoch with file order preserved
+    events: Vec<(usize, MembershipEvent)>,
+    /// index of the first event not yet emitted
+    next: usize,
+    next_epoch: usize,
+}
+
+impl TraceSource {
+    pub fn parse(workers: usize, text: &str) -> Result<TraceSource> {
+        let t = Table::parse(text).map_err(|e| anyhow::anyhow!("membership trace: {e}"))?;
+        for key in t.map.keys() {
+            if key != "workers" && key != "events" {
+                bail!("membership trace: unknown key '{key}' (workers|events)");
+            }
+        }
+        if let Some(w) = t.get("workers").and_then(|s| s.as_i64()) {
+            if w as usize != workers {
+                bail!(
+                    "membership trace was written for workers = {w}, run has {workers}"
+                );
+            }
+        }
+        let Some(crate::util::toml::Scalar::Arr(items)) = t.get("events") else {
+            bail!("membership trace: need an 'events' string array");
+        };
+        let mut events = Vec::with_capacity(items.len());
+        for item in items {
+            let Some(spec) = item.as_str() else {
+                bail!("membership trace: events must be strings, got {item:?}");
+            };
+            events.push(Self::parse_event(spec)?);
+        }
+        // stable by epoch: same-epoch events keep file order
+        events.sort_by_key(|&(epoch, _)| epoch);
+        Ok(TraceSource { events, next: 0, next_epoch: 0 })
+    }
+
+    /// One `"epoch:kind:rank[:factor]"` entry.
+    fn parse_event(spec: &str) -> Result<(usize, MembershipEvent)> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let usage = "want 'epoch:join|leave|drain:rank' or 'epoch:slow:rank:factor'";
+        if parts.len() < 3 {
+            bail!("membership trace event '{spec}': {usage}");
+        }
+        let epoch: usize = parts[0]
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("membership trace event '{spec}': bad epoch"))?;
+        let rank: usize = parts[2]
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("membership trace event '{spec}': bad rank"))?;
+        let ev = match (parts[1].trim(), parts.len()) {
+            ("join", 3) => MembershipEvent::Join { rank },
+            ("leave", 3) => MembershipEvent::Leave { rank, graceful: false },
+            ("drain", 3) => MembershipEvent::Drain { rank },
+            ("slow", 4) => {
+                let factor: f64 = parts[3].trim().parse().map_err(|_| {
+                    anyhow::anyhow!("membership trace event '{spec}': bad factor")
+                })?;
+                if factor < 1.0 {
+                    bail!("membership trace event '{spec}': factor must be >= 1.0");
+                }
+                MembershipEvent::SetSlowdown { rank, factor }
+            }
+            _ => bail!("membership trace event '{spec}': {usage}"),
+        };
+        Ok((epoch, ev))
+    }
+
+    /// Events in the trace (for reporting; the cursor counts these).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl MembershipSource for TraceSource {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn begin_epoch(&mut self, epoch: usize, out: &mut Vec<MembershipEvent>) {
+        assert_eq!(
+            epoch, self.next_epoch,
+            "membership trace must advance one epoch at a time"
+        );
+        self.next_epoch = epoch + 1;
+        while self.next < self.events.len() && self.events[self.next].0 == epoch {
+            out.push(self.events[self.next].1);
+            self.next += 1;
+        }
+    }
+}
+
+/// The authoritative membership state machine the trainer consults.
+pub struct ControlPlane {
+    workers: usize,
+    source: Box<dyn MembershipSource>,
+    mask: Vec<bool>,
+    /// per-rank compute multiplier (1.0 nominal; trace slowdowns are
+    /// sticky, the seeded source rewrites every rank every epoch)
+    slowdown: Vec<f64>,
+    active: Vec<usize>,
+    /// total events consumed since construction — monotone, recorded in
+    /// the checkpoint header so `--resume` can verify its replay
+    cursor: u64,
+    buf: Vec<MembershipEvent>,
+}
+
+impl ControlPlane {
+    pub fn new(workers: usize, source: Box<dyn MembershipSource>) -> ControlPlane {
+        assert!(workers >= 1);
+        ControlPlane {
+            workers,
+            source,
+            mask: vec![true; workers],
+            slowdown: vec![1.0; workers],
+            active: (0..workers).collect(),
+            cursor: 0,
+            buf: Vec::new(),
+        }
+    }
+
+    /// Seeded fate process behind the trait (the PR 6/PR 9 behavior).
+    pub fn seeded(workers: usize, cfg: FaultCfg) -> ControlPlane {
+        ControlPlane::new(workers, Box::new(SeededSource::new(workers, cfg)))
+    }
+
+    /// Scripted trace (`--membership-trace`).
+    pub fn from_trace(workers: usize, text: &str) -> Result<ControlPlane> {
+        Ok(ControlPlane::new(workers, Box::new(TraceSource::parse(workers, text)?)))
+    }
+
+    /// Pull and apply this epoch's events.  Must be called once per
+    /// epoch, in order.  Invalid events (join of an active rank, drain
+    /// of an inactive one, emptying the cluster) are hard errors — a
+    /// scripted scenario that doesn't mean what it says must not
+    /// silently train anyway.
+    pub fn begin_epoch(&mut self, epoch: usize) -> Result<Boundary> {
+        self.buf.clear();
+        self.source.begin_epoch(epoch, &mut self.buf);
+        let mut boundary = Boundary::default();
+        for i in 0..self.buf.len() {
+            let ev = self.buf[i];
+            self.apply(epoch, ev, &mut boundary)?;
+        }
+        self.cursor += self.buf.len() as u64;
+        self.active.clear();
+        self.active.extend((0..self.workers).filter(|&w| self.mask[w]));
+        debug_assert!(!self.active.is_empty());
+        Ok(boundary)
+    }
+
+    fn apply(&mut self, epoch: usize, ev: MembershipEvent, b: &mut Boundary) -> Result<()> {
+        let check_rank = |rank: usize| -> Result<()> {
+            if rank >= self.workers {
+                bail!(
+                    "membership event at epoch {epoch}: rank {rank} out of range \
+                     (workers = {})",
+                    self.workers
+                );
+            }
+            Ok(())
+        };
+        match ev {
+            MembershipEvent::Join { rank } => {
+                check_rank(rank)?;
+                if self.mask[rank] {
+                    bail!("membership event at epoch {epoch}: join of already-active rank {rank}");
+                }
+                self.mask[rank] = true;
+                b.joins.push(rank);
+            }
+            MembershipEvent::Leave { rank, graceful } => {
+                if graceful {
+                    return self.apply(epoch, MembershipEvent::Drain { rank }, b);
+                }
+                self.depart(epoch, rank, "leave")?;
+                b.leaves.push(rank);
+            }
+            MembershipEvent::Drain { rank } => {
+                self.depart(epoch, rank, "drain")?;
+                b.drains.push(rank);
+            }
+            MembershipEvent::SetSlowdown { rank, factor } => {
+                check_rank(rank)?;
+                if factor < 1.0 {
+                    bail!(
+                        "membership event at epoch {epoch}: slowdown factor {factor} < 1 \
+                         for rank {rank}"
+                    );
+                }
+                self.slowdown[rank] = factor;
+            }
+        }
+        Ok(())
+    }
+
+    fn depart(&mut self, epoch: usize, rank: usize, kind: &str) -> Result<()> {
+        if rank >= self.workers {
+            bail!(
+                "membership event at epoch {epoch}: rank {rank} out of range (workers = {})",
+                self.workers
+            );
+        }
+        if !self.mask[rank] {
+            bail!("membership event at epoch {epoch}: {kind} of inactive rank {rank}");
+        }
+        if self.mask.iter().filter(|&&m| m).count() <= 1 {
+            bail!("membership event at epoch {epoch}: {kind} of rank {rank} would empty the cluster");
+        }
+        self.mask[rank] = false;
+        // a departed rank computes nothing: nominal multiplier so a
+        // stale trace slowdown never outlives the member it described
+        self.slowdown[rank] = 1.0;
+        Ok(())
+    }
+
+    /// Ranks active this epoch, ascending.
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    /// Per-rank activity mask.
+    pub fn mask(&self) -> &[bool] {
+        &self.mask
+    }
+
+    /// Per-rank compute multipliers (1.0 when nominal or down).
+    pub fn slowdown(&self) -> &[f64] {
+        &self.slowdown
+    }
+
+    /// The BSP stall factor: the slowest active worker's multiplier.
+    /// Same fold as `FaultSchedule::max_active_slowdown` — bitwise.
+    pub fn max_active_slowdown(&self) -> f64 {
+        self.active.iter().map(|&w| self.slowdown[w]).fold(1.0, f64::max)
+    }
+
+    /// Total events consumed (monotone; checkpointed as `ctrl_cursor`).
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// The source's name ("seeded" | "trace"), for logs and errors.
+    pub fn source_name(&self) -> &'static str {
+        self.source.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::faults::StragglerCfg;
+
+    fn stormy() -> FaultCfg {
+        FaultCfg {
+            seed: 11,
+            slow_prob: 0.5,
+            slow_min: 1.5,
+            slow_max: 4.0,
+            drop_prob: 0.4,
+            down_epochs: 2,
+            crash_prob: 0.0,
+            straggler: StragglerCfg::Uniform,
+        }
+    }
+
+    #[test]
+    fn seeded_source_degenerates_byte_identically() {
+        // the PR 6 contract behind the trait: mask, active set, and
+        // slowdowns (bitwise) must match the raw schedule every epoch,
+        // and the boundary must partition exactly into the delta
+        for straggler in [
+            StragglerCfg::Uniform,
+            StragglerCfg::Lognormal { mu: 0.4, sigma: 0.8, cap: 12.0 },
+        ] {
+            let cfg = FaultCfg { straggler, ..stormy() };
+            let mut raw = FaultSchedule::new(4, cfg);
+            let mut cp = ControlPlane::seeded(4, cfg);
+            for e in 0..60 {
+                let delta = raw.begin_epoch(e);
+                let b = cp.begin_epoch(e).unwrap();
+                assert_eq!(b.joins, delta.rejoined, "epoch {e}");
+                assert_eq!(b.leaves, delta.dropped, "epoch {e}");
+                assert!(b.drains.is_empty(), "seeded streams never drain");
+                assert_eq!(cp.active(), raw.active(), "epoch {e}");
+                assert_eq!(cp.mask(), raw.mask(), "epoch {e}");
+                let bits = |s: &[f64]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(cp.slowdown()), bits(raw.slowdown()), "epoch {e}");
+                assert_eq!(
+                    cp.max_active_slowdown().to_bits(),
+                    raw.max_active_slowdown().to_bits(),
+                    "epoch {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trace_parses_sorts_and_replays() {
+        let text = r#"
+workers = 4
+events = [
+    "2:drain:3",
+    "1:slow:2:2.5",
+    "4:join:3",
+    "5:leave:0",
+]
+"#;
+        let mut cp = ControlPlane::from_trace(4, text).unwrap();
+        assert_eq!(cp.source_name(), "trace");
+        assert!(!cp.begin_epoch(0).unwrap().changed());
+        assert_eq!(cp.cursor(), 0);
+
+        let b1 = cp.begin_epoch(1).unwrap();
+        assert!(!b1.changed(), "a slowdown is not a membership change");
+        assert_eq!(cp.slowdown()[2], 2.5);
+        assert_eq!(cp.max_active_slowdown(), 2.5);
+        assert_eq!(cp.cursor(), 1);
+
+        let b2 = cp.begin_epoch(2).unwrap();
+        assert_eq!(b2.drains, vec![3]);
+        assert!(b2.joins.is_empty() && b2.leaves.is_empty());
+        assert_eq!(cp.active(), &[0, 1, 2]);
+
+        assert!(!cp.begin_epoch(3).unwrap().changed());
+        let b4 = cp.begin_epoch(4).unwrap();
+        assert_eq!(b4.joins, vec![3]);
+        assert_eq!(cp.active(), &[0, 1, 2, 3]);
+        // the trace slowdown is sticky until overridden
+        assert_eq!(cp.slowdown()[2], 2.5);
+
+        let b5 = cp.begin_epoch(5).unwrap();
+        assert_eq!(b5.leaves, vec![0]);
+        assert_eq!(cp.active(), &[1, 2, 3]);
+        assert_eq!(cp.cursor(), 4);
+    }
+
+    #[test]
+    fn trace_rejects_malformed_events() {
+        let bad = |text: &str| ControlPlane::from_trace(4, text).unwrap_err().to_string();
+        assert!(bad("events = [\"nope\"]").contains("want 'epoch:"));
+        assert!(bad("events = [\"x:join:1\"]").contains("bad epoch"));
+        assert!(bad("events = [\"1:join:x\"]").contains("bad rank"));
+        assert!(bad("events = [\"1:teleport:2\"]").contains("want 'epoch:"));
+        assert!(bad("events = [\"1:slow:2\"]").contains("want 'epoch:"));
+        assert!(bad("events = [\"1:slow:2:0.5\"]").contains(">= 1.0"));
+        assert!(bad("events = [1]").contains("must be strings"));
+        assert!(bad("workers = 8\nevents = []").contains("workers = 8"));
+        assert!(bad("bogus = 1\nevents = []").contains("unknown key"));
+        assert!(bad("workers = 4").contains("'events' string array"));
+    }
+
+    #[test]
+    fn invalid_events_are_hard_errors_at_apply_time() {
+        // join of an active rank
+        let mut cp = ControlPlane::from_trace(2, "events = [\"0:join:1\"]").unwrap();
+        assert!(cp.begin_epoch(0).unwrap_err().to_string().contains("already-active"));
+        // drain of an inactive rank
+        let mut cp =
+            ControlPlane::from_trace(3, "events = [\"0:leave:1\", \"1:drain:1\"]").unwrap();
+        cp.begin_epoch(0).unwrap();
+        assert!(cp.begin_epoch(1).unwrap_err().to_string().contains("inactive rank"));
+        // emptying the cluster
+        let mut cp =
+            ControlPlane::from_trace(2, "events = [\"0:leave:0\", \"0:drain:1\"]").unwrap();
+        assert!(cp.begin_epoch(0).unwrap_err().to_string().contains("empty the cluster"));
+        // out-of-range rank
+        let mut cp = ControlPlane::from_trace(2, "events = [\"0:slow:5:2.0\"]").unwrap();
+        assert!(cp.begin_epoch(0).unwrap_err().to_string().contains("out of range"));
+    }
+
+    #[test]
+    fn graceful_leave_normalizes_to_drain() {
+        let mut cp = ControlPlane::new(3, Box::new(EventsAt(vec![(
+            0,
+            MembershipEvent::Leave { rank: 2, graceful: true },
+        )])));
+        let b = cp.begin_epoch(0).unwrap();
+        assert_eq!(b.drains, vec![2]);
+        assert!(b.leaves.is_empty());
+        assert_eq!(cp.active(), &[0, 1]);
+    }
+
+    #[test]
+    fn trace_replays_identically() {
+        let text = "events = [\"1:drain:2\", \"3:join:2\", \"2:slow:0:3.0\"]";
+        let run = || {
+            let mut cp = ControlPlane::from_trace(4, text).unwrap();
+            let mut history = Vec::new();
+            for e in 0..6 {
+                let b = cp.begin_epoch(e).unwrap();
+                history.push((b, cp.active().to_vec(), cp.max_active_slowdown().to_bits()));
+            }
+            (history, cp.cursor())
+        };
+        assert_eq!(run(), run());
+    }
+
+    /// Test helper: a source emitting a fixed (epoch, event) list.
+    struct EventsAt(Vec<(usize, MembershipEvent)>);
+
+    impl MembershipSource for EventsAt {
+        fn name(&self) -> &'static str {
+            "test"
+        }
+        fn begin_epoch(&mut self, epoch: usize, out: &mut Vec<MembershipEvent>) {
+            out.extend(self.0.iter().filter(|(e, _)| *e == epoch).map(|&(_, ev)| ev));
+        }
+    }
+}

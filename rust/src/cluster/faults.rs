@@ -28,6 +28,126 @@
 
 use crate::util::rng::Rng;
 
+/// How a straggler's compute multiplier is drawn from its (single)
+/// per-rank uniform variate (TOML `[faults.straggler]`).
+///
+/// Every kind is a **pure function of `mag_draw`** — the third draw of
+/// the fixed three-draw-per-rank budget — so swapping distributions
+/// never moves the stream position and the replay contract from
+/// `cluster/unreliable.rs` carries over unchanged.  `Uniform` (the
+/// default) reproduces the legacy `[slow_min, slow_max]` multiplier
+/// bit-for-bit; the heavy-tailed kinds map the same draw through an
+/// inverse CDF and clamp into `[1, cap]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StragglerCfg {
+    /// legacy uniform multiplier in `[slow_min, slow_max]` — the
+    /// default, byte-identical to the pre-distribution schedule
+    Uniform,
+    /// `exp(mu + sigma * z)` with `z = Phi^-1(u)` (Acklam's rational
+    /// approximation): the classic heavy-tailed slowdown of shared
+    /// clusters, clamped into `[1, cap]`
+    Lognormal { mu: f64, sigma: f64, cap: f64 },
+    /// `xm / (1 - u)^(1/alpha)`: power-law tail (small `alpha` = very
+    /// heavy), clamped into `[1, cap]`
+    Pareto { alpha: f64, xm: f64, cap: f64 },
+    /// fixed multiplier — the scripted-scenario building block
+    Const { factor: f64 },
+}
+
+impl StragglerCfg {
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            StragglerCfg::Uniform => Ok(()),
+            StragglerCfg::Lognormal { sigma, cap, .. } => {
+                if sigma <= 0.0 {
+                    return Err("faults.straggler: lognormal sigma must be > 0".into());
+                }
+                if cap < 1.0 {
+                    return Err("faults.straggler: cap must be >= 1".into());
+                }
+                Ok(())
+            }
+            StragglerCfg::Pareto { alpha, xm, cap } => {
+                if alpha <= 0.0 || xm <= 0.0 {
+                    return Err("faults.straggler: pareto needs alpha > 0 and xm > 0".into());
+                }
+                if cap < 1.0 {
+                    return Err("faults.straggler: cap must be >= 1".into());
+                }
+                Ok(())
+            }
+            StragglerCfg::Const { factor } => {
+                if factor < 1.0 {
+                    return Err("faults.straggler: const factor must be >= 1".into());
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The TOML spelling (`faults.straggler.kind`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StragglerCfg::Uniform => "uniform",
+            StragglerCfg::Lognormal { .. } => "lognormal",
+            StragglerCfg::Pareto { .. } => "pareto",
+            StragglerCfg::Const { .. } => "const",
+        }
+    }
+}
+
+/// Acklam's rational approximation of the standard-normal inverse CDF
+/// (|relative error| < 1.15e-9) — a pure function, so lognormal
+/// straggler draws inherit the seeded stream's replay contract without
+/// consuming extra variates.
+fn inv_normal_cdf(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let p = p.clamp(1e-12, 1.0 - 1e-12);
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
 /// Knobs of the fault process (TOML `[faults]`, `--set faults.*`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FaultCfg {
@@ -50,12 +170,19 @@ pub struct FaultCfg {
     /// existing seeds replay their epoch weather unchanged.  Takes
     /// effect only when auto-checkpointing is on (`ckpt.auto_every`).
     pub crash_prob: f64,
+    /// how a straggler's magnitude is drawn from its `mag_draw` variate
+    /// (`[faults.straggler]`); `Uniform` is the legacy byte-identical
+    /// default
+    pub straggler: StragglerCfg,
 }
 
 impl FaultCfg {
     /// A one-knob sweep axis for the hetero ablation: `intensity` in
     /// [0, 1] scales both fault rates and the straggler magnitude.
-    /// Intensity 0 is the fault-free schedule (all probabilities zero).
+    /// Intensity 0 is the fault-free schedule (all probabilities zero);
+    /// any positive intensity arms a heavy-tailed lognormal straggler
+    /// kind scaled with it, so `ablate-hetero` / `ablate-faulttol`
+    /// sweeps exercise the distributions without new flags.
     pub fn from_intensity(intensity: f64, seed: u64) -> FaultCfg {
         let i = intensity.clamp(0.0, 1.0);
         FaultCfg {
@@ -66,6 +193,15 @@ impl FaultCfg {
             drop_prob: 0.1 * i,
             down_epochs: 1,
             crash_prob: 0.0,
+            straggler: if i > 0.0 {
+                StragglerCfg::Lognormal {
+                    mu: 0.3 * i,
+                    sigma: 0.3 + 0.5 * i,
+                    cap: 1.0 + 14.0 * i,
+                }
+            } else {
+                StragglerCfg::Uniform
+            },
         }
     }
 
@@ -82,7 +218,25 @@ impl FaultCfg {
         if self.down_epochs == 0 {
             return Err("faults: down_epochs must be >= 1".into());
         }
-        Ok(())
+        self.straggler.validate()
+    }
+
+    /// A straggler's compute multiplier from its `mag_draw` variate —
+    /// a pure function, always >= 1 (the clamp is part of the model:
+    /// a "straggler" that would run faster than nominal is nominal).
+    pub fn straggler_magnitude(&self, mag_draw: f64) -> f64 {
+        match self.straggler {
+            StragglerCfg::Uniform => {
+                self.slow_min + mag_draw * (self.slow_max - self.slow_min)
+            }
+            StragglerCfg::Lognormal { mu, sigma, cap } => {
+                (mu + sigma * inv_normal_cdf(mag_draw)).exp().clamp(1.0, cap)
+            }
+            StragglerCfg::Pareto { alpha, xm, cap } => {
+                (xm / (1.0 - mag_draw.min(1.0 - 1e-12)).powf(1.0 / alpha)).clamp(1.0, cap)
+            }
+            StragglerCfg::Const { factor } => factor,
+        }
     }
 }
 
@@ -168,7 +322,7 @@ impl FaultSchedule {
                 }
             }
             self.slowdown[w] = if up && slow_draw < self.cfg.slow_prob {
-                self.cfg.slow_min + mag_draw * (self.cfg.slow_max - self.cfg.slow_min)
+                self.cfg.straggler_magnitude(mag_draw)
             } else {
                 1.0
             };
@@ -218,6 +372,7 @@ mod tests {
             drop_prob: 0.4,
             down_epochs: 2,
             crash_prob: 0.0,
+            straggler: StragglerCfg::Uniform,
         }
     }
 
@@ -343,5 +498,107 @@ mod tests {
         assert!(FaultCfg { crash_prob: 1.5, ..stormy() }.validate().is_err());
         assert!(FaultCfg { crash_prob: 0.1, ..stormy() }.validate().is_ok());
         assert!(stormy().validate().is_ok());
+    }
+
+    #[test]
+    fn straggler_validate_rejects_bad_params() {
+        let with = |s| FaultCfg { straggler: s, ..stormy() };
+        assert!(with(StragglerCfg::Lognormal { mu: 0.3, sigma: 0.0, cap: 8.0 })
+            .validate()
+            .is_err());
+        assert!(with(StragglerCfg::Lognormal { mu: 0.3, sigma: 0.5, cap: 0.5 })
+            .validate()
+            .is_err());
+        assert!(with(StragglerCfg::Pareto { alpha: 0.0, xm: 1.0, cap: 8.0 })
+            .validate()
+            .is_err());
+        assert!(with(StragglerCfg::Pareto { alpha: 1.5, xm: -1.0, cap: 8.0 })
+            .validate()
+            .is_err());
+        assert!(with(StragglerCfg::Const { factor: 0.9 }).validate().is_err());
+        assert!(with(StragglerCfg::Lognormal { mu: 0.3, sigma: 0.5, cap: 8.0 })
+            .validate()
+            .is_ok());
+        assert!(with(StragglerCfg::Pareto { alpha: 1.5, xm: 1.0, cap: 8.0 })
+            .validate()
+            .is_ok());
+        assert!(with(StragglerCfg::Const { factor: 2.0 }).validate().is_ok());
+    }
+
+    #[test]
+    fn heavy_tailed_draws_replay_and_stay_bounded() {
+        // distributions only remap the third variate: the schedules
+        // replay bitwise and every multiplier lands in [1, cap]
+        for straggler in [
+            StragglerCfg::Lognormal { mu: 0.4, sigma: 0.8, cap: 12.0 },
+            StragglerCfg::Pareto { alpha: 1.2, xm: 1.0, cap: 12.0 },
+            StragglerCfg::Const { factor: 2.5 },
+        ] {
+            let cfg = FaultCfg { slow_prob: 1.0, drop_prob: 0.0, straggler, ..stormy() };
+            let mut a = FaultSchedule::new(4, cfg);
+            let mut b = FaultSchedule::new(4, cfg);
+            for e in 0..40 {
+                a.begin_epoch(e);
+                b.begin_epoch(e);
+                for (&x, &y) in a.slowdown().iter().zip(b.slowdown()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{straggler:?} must replay bitwise");
+                    assert!((1.0..=12.0).contains(&x), "{straggler:?} drew {x}");
+                }
+            }
+            if let StragglerCfg::Const { factor } = straggler {
+                assert!(a.slowdown().iter().all(|&s| s == factor));
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_kind_changes_magnitudes_but_not_membership() {
+        // the magnitude remap must not move the drop process: same seed,
+        // different straggler kinds, identical membership history
+        let uni = stormy();
+        let log = FaultCfg {
+            straggler: StragglerCfg::Lognormal { mu: 0.4, sigma: 0.8, cap: 12.0 },
+            ..stormy()
+        };
+        let mut a = FaultSchedule::new(4, uni);
+        let mut b = FaultSchedule::new(4, log);
+        let mut magnitudes_differ = false;
+        for e in 0..40 {
+            let da = a.begin_epoch(e);
+            let db = b.begin_epoch(e);
+            assert_eq!(da, db, "membership deltas must be straggler-kind-invariant");
+            assert_eq!(a.active(), b.active());
+            magnitudes_differ |= a
+                .slowdown()
+                .iter()
+                .zip(b.slowdown())
+                .any(|(x, y)| x.to_bits() != y.to_bits());
+        }
+        assert!(magnitudes_differ, "lognormal must actually reshape the multipliers");
+    }
+
+    #[test]
+    fn inv_normal_cdf_is_sane() {
+        // symmetric, monotone, and right at the quartiles
+        assert_eq!(inv_normal_cdf(0.5), 0.0);
+        assert!((inv_normal_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inv_normal_cdf(0.025) + 1.959964).abs() < 1e-4);
+        let mut last = f64::NEG_INFINITY;
+        for i in 1..100 {
+            let z = inv_normal_cdf(i as f64 / 100.0);
+            assert!(z > last, "Phi^-1 must be strictly increasing");
+            last = z;
+        }
+        // extreme draws stay finite (the clamp guards the log)
+        assert!(inv_normal_cdf(0.0).is_finite());
+        assert!(inv_normal_cdf(1.0).is_finite());
+    }
+
+    #[test]
+    fn from_intensity_arms_heavy_tails_only_when_nonzero() {
+        assert_eq!(FaultCfg::from_intensity(0.0, 7).straggler, StragglerCfg::Uniform);
+        let armed = FaultCfg::from_intensity(0.7, 7);
+        assert_eq!(armed.straggler.name(), "lognormal");
+        assert!(armed.validate().is_ok());
     }
 }

@@ -17,8 +17,12 @@
 //! granularity to individual messages: a seeded per-collective loss
 //! process with retry/backoff pricing and quorum degradation, plus the
 //! step-granular crash stream the self-healing supervisor consumes.
+//! `control` lifts membership out of the trainer into an explicit
+//! command stream: the seeded schedule and scripted trace files are
+//! interchangeable `MembershipSource`s behind one `ControlPlane`.
 
 pub mod bucket;
+pub mod control;
 pub mod faults;
 pub mod network;
 pub mod simtime;

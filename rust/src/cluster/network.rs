@@ -118,6 +118,17 @@ impl NetworkModel {
         // large-message asymptote, like the two formulas above)
         (n - 1.0) * self.alpha + bytes as f64 * self.beta
     }
+
+    /// One point-to-point message: a single hop's latency plus the byte
+    /// term — the graceful-drain shard handoff (`Comm::charge_drain`).
+    /// One α (not `N-1`) is what makes a drain strictly cheaper than
+    /// the rejoin broadcast for any payload at any `N >= 2`.
+    pub fn p2p_secs(&self, bytes: usize) -> f64 {
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        self.alpha + bytes as f64 * self.beta
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +175,11 @@ mod tests {
         assert!((m.reduce_scatter_secs(1000) - 0.00675).abs() < 1e-12);
         // broadcast (pipelined ring): 3·2ms + 1000·1µs = 6ms + 1ms
         assert!((m.broadcast_secs(1000) - 0.007).abs() < 1e-12);
+        // p2p (drain handoff): 1·2ms + 1000·1µs = 2ms + 1ms — one hop,
+        // strictly under the broadcast for the same payload
+        assert!((m.p2p_secs(1000) - 0.003).abs() < 1e-12);
+        assert!(m.p2p_secs(1000) < m.broadcast_secs(1000));
+        assert_eq!(NetworkModel::new(1, 100.0, 50.0).p2p_secs(1000), 0.0);
     }
 
     #[test]

@@ -54,13 +54,19 @@
 //! | compressor decode          | codec channel: `CodecFlops::decode` · rate | same (+ `V` for the fallback's shard extraction) |
 //! | bucketed (`net.bucket_kb > 0`) | consecutive same-kind payloads coalesce: one α per ≤ bucket_kb·1024-byte bucket, β on ΣV | same, and the per-layer rebuild all-gathers coalesce too |
 //! | worker rejoin (faults)     | broadcast: full model `P` | broadcast: full model `P` |
+//! | graceful drain (control plane) | p2p handoff: `ceil(P/n)` | p2p handoff: `ceil(P/n)` |
 //!
 //! The rejoin broadcast (a recovered worker resynchronizing all
 //! parameters, [`Comm::charge_broadcast`]) goes through a dedicated
 //! membership `Comm` owned by the trainer — never a per-layer ledger
 //! shard — so the bucket planner and the per-step overlap scheduler
 //! never see it: it is charged serially at the epoch boundary where the
-//! rejoin happens.  Under a heterogeneous topology every collective is
+//! rejoin happens.  The drain handoff ([`Comm::charge_drain`]) rides
+//! the same membership `Comm`: one α hop plus `ceil(P/n)·4β`, priced
+//! into `secs` and the dedicated `drain_secs` channel — strictly
+//! cheaper than the `(n-1)·α + P·4β` broadcast a hard drop's eventual
+//! rejoin pays, which is the graceful-departure incentive the
+//! control-plane tests pin by hand.  Under a heterogeneous topology every collective is
 //! priced by the bottleneck link of the *active* worker set
 //! (`cluster::topology`), and the α–β formulas themselves are unchanged.
 //!
@@ -131,6 +137,13 @@ use std::sync::Arc;
 /// retransmission is the *same* event charged again, not a new one.
 /// Zero whenever no loss model is attached (the default), which keeps
 /// the reliable clock bit-identical.
+/// `drain_secs` is the graceful-membership channel: the point-to-point
+/// shard handoff a draining worker pays on its way out
+/// ([`Comm::charge_drain`]).  A subset of `secs` (like `rebuild_secs`),
+/// charged serially at the epoch boundary on the membership `Comm` —
+/// never through the bucket planner or the loss fate streams — and zero
+/// whenever no drain happens, which keeps every seeded-schedule run
+/// bit-identical to the pre-control-plane ledger.
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
     pub floats: u64,
@@ -140,6 +153,7 @@ pub struct Ledger {
     pub encode_secs: f64,
     pub decode_secs: f64,
     pub retry_secs: f64,
+    pub drain_secs: f64,
 }
 
 /// One collective the ledger charged: what the bucket planner coalesces.
@@ -379,6 +393,26 @@ impl Comm {
     /// the bucket planner or the per-step overlap scheduler.
     pub fn charge_broadcast(&mut self, floats: usize) {
         self.charge_event(CollKind::Broadcast, floats, false);
+    }
+
+    /// Charge a graceful drain's point-to-point shard handoff: the
+    /// departing worker sends its `floats`-sized owned shard to one
+    /// successor (`NetworkModel::p2p_secs` — one α hop, so strictly
+    /// cheaper than the rejoin broadcast for any `N >= 2`).  Charged on
+    /// the membership `Comm` at the epoch boundary, like the rejoin
+    /// broadcast; deliberately NOT a `CollEvent` and NOT subject to the
+    /// loss fate streams — the handoff is a reliable unicast outside
+    /// the bucket planner and the per-step weather, so arming a drain
+    /// never shifts another channel's draws.  Ledgered in `floats`
+    /// (Data Sent is payload), `secs`, and the dedicated `drain_secs`
+    /// channel.  Returns the seconds charged.
+    pub fn charge_drain(&mut self, floats: usize) -> f64 {
+        let secs = self.net.p2p_secs(floats * 4);
+        self.ledger.floats += floats as u64;
+        self.ledger.secs += secs;
+        self.ledger.drain_secs += secs;
+        self.ledger.collectives += 1;
+        secs
     }
 
     /// Charge one round's compressor compute on the codec channel (see
@@ -1041,6 +1075,30 @@ mod tests {
         // event re-pricing agrees (the invariant the planner relies on)
         let priced = comm.net.collective_secs(CollKind::Broadcast, 4000);
         assert_eq!(priced.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn drain_charge_is_a_single_hop_off_the_event_stream() {
+        // hand-computed α–β pin: N=4 on the default 100 Mbps / 50 µs
+        // link, a 1000-float shard handoff costs exactly
+        // α + 4000·β = 50e-6 + 4000·8/(100e6)
+        let mut comm = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        let secs = comm.charge_drain(1000);
+        let want = 50e-6 + 4000.0 * 8.0 / 100e6;
+        assert!((secs - want).abs() < 1e-15, "{secs} vs {want}");
+        assert_eq!(comm.ledger.floats, 1000);
+        assert_eq!(comm.ledger.collectives, 1);
+        assert_eq!(comm.ledger.secs.to_bits(), secs.to_bits());
+        assert_eq!(comm.ledger.drain_secs.to_bits(), secs.to_bits());
+        // a reliable unicast outside the planner: no event recorded
+        assert!(comm.events.is_empty());
+        // strictly cheaper than the rejoin broadcast of the FULL model
+        // for the same membership delta — here even per-byte: one α hop
+        // vs (N-1), and a 1/N-sized payload vs P
+        let mut rejoin = Comm::new(NetworkModel::new(4, 100.0, 50.0));
+        rejoin.charge_broadcast(4000);
+        assert!(comm.ledger.secs < rejoin.ledger.secs);
+        assert!(comm.ledger.floats < rejoin.ledger.floats);
     }
 
     #[test]

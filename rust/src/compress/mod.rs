@@ -172,6 +172,23 @@ pub trait DistCompressor: Send {
     fn reset_worker(&mut self, _worker: usize) {
         self.reset();
     }
+
+    /// A worker slot departs **gracefully** (control-plane drain): its
+    /// state is handed off, not lost, so a compressor with positionally
+    /// separable residuals folds the departing slot's error-feedback
+    /// into its successor and re-indexes the survivors — residual mass
+    /// is conserved across the membership change instead of being
+    /// thrown away.  Provided default: a full [`reset`] (always
+    /// correct; what hard drops do).  `slot` is the departing worker's
+    /// index in the OLD active set.  Implementations must stay
+    /// deterministic — any slot surgery is pure data movement, so
+    /// drained runs replay bit-for-bit like every other membership
+    /// path.
+    ///
+    /// [`reset`]: DistCompressor::reset
+    fn drain_worker(&mut self, _slot: usize) {
+        self.reset();
+    }
 }
 
 /// The uncompressed baseline: plain all-reduce of the raw gradient.

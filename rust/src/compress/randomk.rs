@@ -117,6 +117,23 @@ impl DistCompressor for RandomK {
         self.ef.clear();
         self.step = 0;
     }
+
+    /// Graceful drain: positionally separable per-slot residuals, so
+    /// the departing slot's error-feedback folds into its ring
+    /// successor and the survivor vector re-indexes — residual mass is
+    /// conserved across the handoff (see the trait docs).
+    fn drain_worker(&mut self, slot: usize) {
+        for per_worker in self.ef.values_mut() {
+            if slot >= per_worker.len() || per_worker.len() <= 1 {
+                continue;
+            }
+            let departing = per_worker.remove(slot);
+            let succ = slot % per_worker.len();
+            for (d, s) in per_worker[succ].iter_mut().zip(&departing) {
+                *d += s;
+            }
+        }
+    }
 }
 
 #[cfg(test)]

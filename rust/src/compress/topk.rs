@@ -158,6 +158,23 @@ impl DistCompressor for TopK {
     fn reset(&mut self) {
         self.ef.clear();
     }
+
+    /// Graceful drain: positionally separable per-slot residuals, so
+    /// the departing slot's error-feedback folds into its ring
+    /// successor and the survivor vector re-indexes — residual mass is
+    /// conserved across the handoff (see the trait docs).
+    fn drain_worker(&mut self, slot: usize) {
+        for per_worker in self.ef.values_mut() {
+            if slot >= per_worker.len() || per_worker.len() <= 1 {
+                continue;
+            }
+            let departing = per_worker.remove(slot);
+            let succ = slot % per_worker.len();
+            for (d, s) in per_worker[succ].iter_mut().zip(&departing) {
+                *d += s;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -177,6 +194,45 @@ mod tests {
         let mut out = vec![0.0; numel];
         testutil::round(tk, 0, &testutil::views(g), &[numel, 1], level, comm, &mut out);
         out
+    }
+
+    #[test]
+    fn drain_folds_residual_into_successor_and_reindexes() {
+        // seed per-slot residuals with a lossy round, then drain slot 1
+        // of 3: the survivor vectors shrink to 2 and per-coordinate
+        // residual mass is conserved exactly (pure f32 adds)
+        let workers = 3;
+        let numel = 24;
+        let mut rng = crate::util::rng::Rng::new(17);
+        let g = testutil::worker_grads(&mut rng, workers, numel);
+        let mut tk = TopK::new(workers, 0.99, 0.25);
+        let mut comm = testutil::comm(workers);
+        let _ = round(&mut tk, &g, numel, Level::High, &mut comm);
+        let before = tk.ef.get(&0).unwrap().clone();
+        assert_eq!(before.len(), workers);
+        let mass: Vec<f32> = (0..numel).map(|i| before.iter().map(|e| e[i]).sum()).collect();
+
+        tk.drain_worker(1);
+        let after = tk.ef.get(&0).unwrap();
+        assert_eq!(after.len(), workers - 1, "the drained slot must re-index away");
+        // successor of old slot 1 is old slot 2, now at index 1
+        for i in 0..numel {
+            assert_eq!(
+                after[1][i].to_bits(),
+                (before[2][i] + before[1][i]).to_bits(),
+                "successor slot must absorb the drained residual"
+            );
+            assert_eq!(after[0][i].to_bits(), before[0][i].to_bits());
+            let total: f32 = after.iter().map(|e| e[i]).sum();
+            assert!((total - mass[i]).abs() < 1e-5, "residual mass must be conserved");
+        }
+        // draining the last remaining slot degenerates to a no-op fold
+        // guard (never reachable through the control plane's empty-
+        // cluster check, but must not panic)
+        let mut solo = TopK::new(1, 0.99, 0.25);
+        solo.ef.insert(0, vec![vec![1.0; 4]]);
+        solo.drain_worker(0);
+        assert_eq!(solo.ef.get(&0).unwrap().len(), 1);
     }
 
     #[test]

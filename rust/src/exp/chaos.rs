@@ -1,0 +1,171 @@
+//! `chaos`: the elastic-membership chaos harness — compose message
+//! loss, crashes, scripted drains/joins, and heavy-tailed stragglers
+//! into one scenario table, and ASSERT the cross-scenario invariants
+//! instead of just printing them.
+//!
+//! Scenarios (same model, controller, and seed throughout):
+//!
+//!  * `clean`       — the reliable fixed-membership baseline;
+//!  * `heavy-tail`  — lognormal straggler weather (`faults.straggler`):
+//!                    must move ONLY the clock — floats byte-equal to
+//!                    clean, degraded stays 0;
+//!  * `lossy`       — `net.loss_prob = 0.2`: retries/degradation are
+//!                    charged in seconds, floats byte-equal to clean;
+//!  * `churn`       — seeded drop/rejoin process through the control
+//!                    plane (the PR 6 behavior behind the new trait);
+//!  * `drain-trace` — a scripted drain + readmission
+//!                    (`--membership-trace`): the `active_workers`
+//!                    column must dip to 3 and recover to 4, the drain
+//!                    handoff + rejoin broadcast must make floats
+//!                    strictly exceed clean, and a rerun must replay
+//!                    byte-for-byte;
+//!  * `composed`    — the trace UNDER lossy weather with the crash
+//!                    supervisor armed: everything at once, still
+//!                    byte-replayable.
+//!
+//! Any violated invariant is a hard error — the harness is a runnable
+//! spec of the robustness contracts, not a demo.
+
+use super::{print_group, print_header, Harness, Row};
+use crate::cluster::faults::{FaultCfg, StragglerCfg};
+use crate::metrics::RunLog;
+use crate::train::config::{ControllerCfg, TrainConfig};
+use anyhow::{ensure, Result};
+
+/// The scripted scenario every trace-driven row replays: rank 1 slows,
+/// rank 3 drains at epoch 2 and is readmitted at epoch 4.
+const TRACE: &str = "workers = 4\n\
+events = [\n\
+    \"1:slow:1:2.5\",\n\
+    \"2:drain:3\",\n\
+    \"4:join:3\",\n\
+]\n";
+
+const EPOCHS: usize = 6;
+
+/// CSV minus each row's trailing `wall_secs` — the byte-replay probe
+/// (same cut as the CI determinism lane).
+fn det_csv(log: &RunLog) -> String {
+    log.to_csv()
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .map(|l| l.rsplit_once(',').map(|(d, _)| d).unwrap_or(l))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn base(c: &mut TrainConfig) {
+    c.model = "mlp_deep_c10".into();
+    c.workers = 4;
+    c.controller = ControllerCfg::Accordion { eta: 0.5, interval: 2 };
+    c.epochs = EPOCHS;
+    c.decay_epochs = vec![4];
+}
+
+pub fn chaos(h: &mut Harness) -> Result<()> {
+    print_header("Chaos harness: loss + crash + drain + stragglers (mlp_deep_c10, workers=4)");
+    let trace_path = std::env::temp_dir().join("accordion-chaos-trace.toml");
+    std::fs::write(&trace_path, TRACE)?;
+    let trace = trace_path.to_str().expect("utf-8 temp path").to_string();
+
+    let cfg = h.cfg("chaos-clean", base)?;
+    let clean = h.run(&cfg)?;
+
+    let cfg = h.cfg("chaos-heavy-tail", |c| {
+        base(c);
+        let mut fc = FaultCfg::from_intensity(0.0, 17);
+        fc.slow_prob = 1.0;
+        fc.straggler = StragglerCfg::Lognormal { mu: 0.5, sigma: 0.8, cap: 12.0 };
+        c.faults = Some(fc);
+    })?;
+    let straggler = h.run(&cfg)?;
+    // stragglers stall the BSP step but send nothing extra: the floats
+    // ledger and the degraded counter must not move
+    ensure!(
+        straggler.total_floats() == clean.total_floats(),
+        "heavy-tail stragglers changed Data Sent: {} != {}",
+        straggler.total_floats(),
+        clean.total_floats()
+    );
+    ensure!(straggler.total_secs() >= clean.total_secs(), "stragglers cannot speed the run up");
+    ensure!(
+        straggler.epochs.last().map(|e| e.degraded).unwrap_or(1) == 0,
+        "stragglers must not degrade aggregations"
+    );
+
+    let cfg = h.cfg("chaos-lossy", |c| {
+        base(c);
+        c.loss_prob = 0.2;
+    })?;
+    let lossy = h.run(&cfg)?;
+    // loss is charged in seconds (retries) and the degraded counter —
+    // never in the payload ledger
+    ensure!(
+        lossy.total_floats() == clean.total_floats(),
+        "message loss changed Data Sent: {} != {}",
+        lossy.total_floats(),
+        clean.total_floats()
+    );
+    ensure!(lossy.total_secs() >= clean.total_secs(), "retries cannot speed the run up");
+
+    let cfg = h.cfg("chaos-churn", |c| {
+        base(c);
+        c.faults = Some(FaultCfg::from_intensity(0.6, 17));
+    })?;
+    let churn = h.run(&cfg)?;
+
+    let drain_cfg = |c: &mut TrainConfig, trace: &str| {
+        base(c);
+        c.ctrl_trace = trace.to_string();
+    };
+    let cfg = h.cfg("chaos-drain-trace", |c| drain_cfg(c, &trace))?;
+    let drain = h.run(&cfg)?;
+    let workers_by_epoch: Vec<usize> = drain.epochs.iter().map(|e| e.active_workers).collect();
+    ensure!(
+        workers_by_epoch.iter().min() == Some(&3) && workers_by_epoch.last() == Some(&4),
+        "drain trace must dip the cluster to 3 and readmit to 4, got {workers_by_epoch:?}"
+    );
+    ensure!(
+        drain.total_floats() > clean.total_floats(),
+        "the drain handoff + rejoin broadcast must show up in Data Sent"
+    );
+    let cfg = h.cfg("chaos-drain-trace", |c| drain_cfg(c, &trace))?;
+    let drain2 = h.run(&cfg)?;
+    ensure!(det_csv(&drain) == det_csv(&drain2), "drain trace did not replay byte-for-byte");
+
+    let composed_cfg = |c: &mut TrainConfig, trace: &str| {
+        base(c);
+        c.ctrl_trace = trace.to_string();
+        c.loss_prob = 0.2;
+        let mut fc = FaultCfg::from_intensity(0.0, 17);
+        fc.crash_prob = 0.02;
+        c.faults = Some(fc);
+        c.ckpt_auto_every = 2;
+        c.ckpt_auto_path = "runs/auto/chaos-composed".into();
+    };
+    let cfg = h.cfg("chaos-composed", |c| composed_cfg(c, &trace))?;
+    let composed = h.run(&cfg)?;
+    let cfg = h.cfg("chaos-composed", |c| composed_cfg(c, &trace))?;
+    let composed2 = h.run(&cfg)?;
+    ensure!(
+        det_csv(&composed) == det_csv(&composed2),
+        "composed chaos did not replay byte-for-byte"
+    );
+
+    let rows = vec![
+        Row::from_log("clean", &clean),
+        Row::from_log("heavy-tail straggler", &straggler),
+        Row::from_log("lossy 0.2", &lossy),
+        Row::from_log("seeded churn", &churn),
+        Row::from_log("drain trace", &drain),
+        Row::from_log("composed", &composed),
+    ];
+    print_group("chaos", &rows);
+    println!(
+        "invariants asserted: stragglers and loss move only the clock (floats byte-equal to \
+         clean); the scripted drain dips active_workers 4->3->4 and its handoff + rejoin \
+         traffic lands in Data Sent; the drain trace and the fully composed scenario (trace + \
+         loss + crashes) replay byte-for-byte."
+    );
+    Ok(())
+}

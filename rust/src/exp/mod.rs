@@ -6,6 +6,7 @@
 
 pub mod ablations;
 pub mod bucket;
+pub mod chaos;
 pub mod faulttol;
 pub mod figures;
 pub mod hessian;
@@ -28,6 +29,7 @@ pub const EXPERIMENTS: &[&str] = &[
     "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig18", "ablate-eta",
     "ablate-interval", "ablate-selector", "ablate-network", "ablate-overlap",
     "ablate-transport", "ablate-bucket", "ablate-hetero", "ablate-faulttol", "utility",
+    "chaos",
 ];
 
 /// Shared state for one experiment invocation: the artifact registry, a
@@ -155,6 +157,7 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
         "ablate-hetero" => hetero::ablate_hetero(&mut h),
         "ablate-faulttol" => faulttol::ablate_faulttol(&mut h),
         "utility" => utility::utility(&mut h),
+        "chaos" => chaos::chaos(&mut h),
         _ => bail!("unknown experiment '{id}' (have: {})", EXPERIMENTS.join(" ")),
     }
 }

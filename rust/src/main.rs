@@ -22,7 +22,8 @@ USAGE:
   accordion train [--config FILE] [--set key=value ...] [--threads N]
                   [--intra-threads N] [--transport dense|sharded]
                   [--bucket-kb N] [--no-overlap] [--topology SPEC]
-                  [--out DIR] [--save PATH] [--resume PATH]
+                  [--membership-trace FILE] [--out DIR] [--save PATH]
+                  [--resume PATH]
   accordion eval  --model NAME --ckpt PATH [--set key=value ...]
   accordion repro --exp <id> [--fast] [--set key=value ...] [--out DIR]
   accordion list
@@ -66,6 +67,19 @@ USAGE:
                 are priced at the bottleneck link.  With intra == cross
                 the clock is bit-identical to the shared model.
                 Example: --topology 2:1000:5:100:50
+  --membership-trace FILE
+                elastic membership from a scripted trace (TOML key
+                `ctrl.trace`) instead of the seeded churn process: a
+                flat string array of \"epoch:join|leave|drain:rank\" /
+                \"epoch:slow:rank:factor\" events applied at epoch
+                boundaries.  A drain (graceful leave) hands the
+                departing rank's shard to a successor over one charged
+                p2p hop and folds its error-feedback residual into the
+                successor slot; a join readmits via the rejoin
+                broadcast; a leave is PR 6's uncharged hard drop.
+                Replays bit-for-bit across --threads, transports, and
+                --resume.  Mutually exclusive with faults.drop_prob /
+                faults.slow_prob (crash_prob may coexist).
   --save PATH   write a v2 full-state checkpoint (params + optimizer
                 momentum + controller/clock/ledger state) after training
   --resume PATH continue a --save'd run: restores full state, trains the
@@ -76,7 +90,12 @@ USAGE:
   faults.slow_min/slow_max), transient drops (faults.drop_prob), and
   rejoins after faults.down_epochs.  Same seed => byte-identical runs
   at every --threads count and transport; a rejoin charges a full-model
-  parameter broadcast to the clock and the floats ledger.
+  parameter broadcast to the clock and the floats ledger.  Straggler
+  magnitudes can draw from heavy-tailed distributions instead of the
+  uniform default: --set faults.straggler.kind=lognormal (faults.
+  straggler.mu/sigma/cap), =pareto (alpha/xm/cap), or =const (factor) —
+  same seeded draw budget, so membership and every other stream are
+  unchanged.  The CSV's active_workers column tracks cluster size.
 
   Message-level fault tolerance (all knobs default off = bit-identical
   to the reliable run): --set net.loss_prob=P draws a seeded loss fate
@@ -103,7 +122,7 @@ EXPERIMENT IDS:
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig18
   ablate-eta ablate-interval ablate-selector ablate-network
   ablate-overlap ablate-transport ablate-bucket ablate-hetero
-  ablate-faulttol
+  ablate-faulttol chaos
 
 EXAMPLES:
   accordion repro --exp table1 --fast
@@ -166,6 +185,9 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
         tp.intra_loss = cfg.loss_prob;
         tp.cross_loss = cfg.loss_prob;
         cfg.topology = Some(tp);
+    }
+    if let Some(path) = args.opt("membership-trace") {
+        cfg.ctrl_trace = path.to_string();
     }
     if args.flag("no-overlap") {
         cfg.overlap = false;

@@ -40,6 +40,11 @@ pub struct EpochStats {
     /// mean (0 on a reliable network) — deterministic, the seeded fate
     /// streams are host-independent
     pub degraded: u64,
+    /// workers active during this epoch (after the boundary's membership
+    /// events applied) — deterministic: both the seeded fate process and
+    /// scripted traces are host-independent; equals the configured
+    /// cluster size on a stable cluster
+    pub active_workers: usize,
     /// cumulative measured host wall seconds — debug only: host-load
     /// dependent, NOT deterministic, kept as the CSV's last column so
     /// determinism checks can strip it
@@ -124,7 +129,7 @@ impl RunLog {
     /// including the run-constant `transport` dimension and the seeded
     /// `degraded` fault counter — is
     /// deterministic (bit-identical values format to identical bytes),
-    /// so the CI determinism lane diffs `cut -d, -f1-14` output.  When
+    /// so the CI determinism lane diffs `cut -d, -f1-15` output.  When
     /// the run recorded a kernel backend/tuner profile, one `#`-prefixed
     /// comment line precedes the header; every determinism consumer
     /// strips `#` lines first (the comment carries host-dependent tuner
@@ -136,12 +141,13 @@ impl RunLog {
         }
         out.push_str(
             "epoch,lr,train_loss,test_loss,test_acc,floats,sim_secs,grad_norm,frac_low,\
-             batch_mult,window_grad_norm,overlap_saved_secs,degraded,transport,wall_secs\n",
+             batch_mult,window_grad_norm,overlap_saved_secs,degraded,active_workers,\
+             transport,wall_secs\n",
         );
         for e in &self.epochs {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{:.6},{},{},{},{},{:.6},{},{},{:.3}",
+                "{},{},{},{},{},{},{:.6},{},{},{},{},{:.6},{},{},{},{:.3}",
                 e.epoch,
                 e.lr,
                 e.train_loss,
@@ -155,6 +161,7 @@ impl RunLog {
                 e.window_grad_norm,
                 e.overlap_saved_secs,
                 e.degraded,
+                e.active_workers,
                 self.transport_label(),
                 e.wall_secs
             );
@@ -204,6 +211,7 @@ mod tests {
             secs: epoch as f64,
             overlap_saved_secs: 0.25 * epoch as f64,
             degraded: 2 * epoch as u64,
+            active_workers: 4,
             wall_secs: 0.1,
             grad_norm: 1.0,
             frac_low: 0.5,
@@ -225,20 +233,23 @@ mod tests {
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.lines().nth(2).unwrap().starts_with("1,"));
-        // column contract the CI determinism lane depends on: 15 columns,
-        // sim_secs in slot 7, the seeded degraded counter then the
-        // run-constant transport dimension before the end, wall_secs
-        // (the only nondeterministic one) LAST
+        // column contract the CI determinism lane depends on: 16 columns,
+        // sim_secs in slot 7, the seeded degraded counter and the
+        // membership active_workers gauge then the run-constant transport
+        // dimension before the end, wall_secs (the only nondeterministic
+        // one) LAST
         let header: Vec<&str> = csv.lines().next().unwrap().split(',').collect();
-        assert_eq!(header.len(), 15);
+        assert_eq!(header.len(), 16);
         assert_eq!(header[6], "sim_secs");
         assert_eq!(header[11], "overlap_saved_secs");
         assert_eq!(header[12], "degraded");
-        assert_eq!(header[13], "transport");
-        assert_eq!(header[14], "wall_secs");
+        assert_eq!(header[13], "active_workers");
+        assert_eq!(header[14], "transport");
+        assert_eq!(header[15], "wall_secs");
         for line in csv.lines().skip(1) {
-            assert_eq!(line.split(',').count(), 15, "{line}");
+            assert_eq!(line.split(',').count(), 16, "{line}");
         }
+        assert!(csv.lines().nth(1).unwrap().contains(",4,dense,"));
         // legacy (empty) transport reads as the dense default
         assert_eq!(log.transport_label(), "dense");
         assert!(csv.lines().nth(1).unwrap().contains(",dense,"));

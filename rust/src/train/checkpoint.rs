@@ -52,6 +52,10 @@ pub struct TrainState {
     /// column) — optional in the header with default 0, so pre-fault
     /// v2 checkpoints keep loading
     pub degraded: u64,
+    /// membership-event cursor of the control plane (events consumed so
+    /// far) — optional in the header with default 0; restore replays the
+    /// event source and cross-checks this count when it is nonzero
+    pub ctrl_cursor: u64,
 }
 
 impl TrainState {
@@ -76,6 +80,7 @@ impl TrainState {
             ("last_mult", json::num(self.last_mult as f64)),
             ("window_start", json::num(self.window_start as f64)),
             ("degraded", json::num(self.degraded as f64)),
+            ("ctrl_cursor", json::num(self.ctrl_cursor as f64)),
         ])
     }
 
@@ -110,6 +115,9 @@ impl TrainState {
             // optional with default: headers written before the fault-
             // tolerance channels simply have no degraded count yet
             degraded: f64_of("degraded").unwrap_or(0.0) as u64,
+            // same optional-with-default story for the membership cursor:
+            // checkpoints written before the control plane carry none
+            ctrl_cursor: f64_of("ctrl_cursor").unwrap_or(0.0) as u64,
         })
     }
 }
@@ -392,6 +400,7 @@ mod tests {
             last_mult: 2,
             window_start: 4,
             degraded: 9,
+            ctrl_cursor: 42,
         };
         let dir = std::env::temp_dir().join("accordion-ckpt-v2");
         let path = dir.join("ck").to_str().unwrap().to_string();
@@ -426,6 +435,21 @@ mod tests {
         // and a round-trip with the key present keeps the count
         let full = TrainState::from_json(3, &st.to_json()).unwrap();
         assert_eq!(full.degraded, 7);
+    }
+
+    #[test]
+    fn header_without_ctrl_cursor_reads_as_zero() {
+        // checkpoints written before the membership control plane carry
+        // no event cursor; they must keep loading with the cursor at 0
+        let st = TrainState { epoch: 3, ctrl_cursor: 11, ..Default::default() };
+        let mut j = st.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("ctrl_cursor");
+        }
+        let back = TrainState::from_json(3, &j).expect("legacy header loads");
+        assert_eq!(back.ctrl_cursor, 0);
+        let full = TrainState::from_json(3, &st.to_json()).unwrap();
+        assert_eq!(full.ctrl_cursor, 11);
     }
 
     #[test]

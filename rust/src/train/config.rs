@@ -1,7 +1,7 @@
 //! Experiment configuration: a typed view over the TOML-subset tables
 //! (`configs/*.toml` + `--set` overrides) with paper-faithful defaults.
 
-use crate::cluster::faults::FaultCfg;
+use crate::cluster::faults::{FaultCfg, StragglerCfg};
 use crate::cluster::topology::{LinkSpec, Topology};
 use crate::cluster::unreliable::LossCfg;
 use crate::collectives::{DenseReplicated, ShardedOwnership, Transport};
@@ -245,6 +245,15 @@ pub struct TrainConfig {
     /// seeded fault schedule (`[faults]`); None is fault-free and
     /// bit-identical to the pre-faults trainer
     pub faults: Option<FaultCfg>,
+    /// scripted membership trace file (`ctrl.trace`, CLI
+    /// `--membership-trace`): drives the elastic control plane from an
+    /// explicit join/leave/drain/slow command stream instead of the
+    /// seeded schedule.  Empty (default) keeps membership seeded (or
+    /// static when `[faults]` is off too).  Mutually exclusive with a
+    /// seeded schedule that can itself move membership or slowdowns
+    /// (`drop_prob`/`slow_prob` > 0) — two sources of churn would race;
+    /// the crash stream may coexist (it is a separate salted stream).
+    pub ctrl_trace: String,
     /// auto-checkpoint period in epochs for the self-healing supervisor
     /// (`ckpt.auto_every`): every k-th epoch boundary saves full v2
     /// state so a seeded crash (`faults.crash_prob`) restores and
@@ -316,6 +325,7 @@ impl Default for TrainConfig {
             bucket_kb: 0,
             topology: None,
             faults: None,
+            ctrl_trace: String::new(),
             ckpt_auto_every: 0,
             ckpt_auto_path: String::new(),
             time_model: TimeModelCfg::Flops,
@@ -407,6 +417,16 @@ const KNOWN_KEYS: &[&str] = &[
     "faults.drop_prob",
     "faults.down_epochs",
     "faults.crash_prob",
+    // [faults.straggler]
+    "faults.straggler.kind",
+    "faults.straggler.mu",
+    "faults.straggler.sigma",
+    "faults.straggler.alpha",
+    "faults.straggler.xm",
+    "faults.straggler.factor",
+    "faults.straggler.cap",
+    // [ctrl]
+    "ctrl.trace",
     // [time]
     "time.model",
     "time.gflops",
@@ -555,6 +575,26 @@ impl TrainConfig {
             None
         };
         let faults = if t.map.keys().any(|k| k.starts_with("faults.")) {
+            let straggler = match t.str_or("faults.straggler.kind", "uniform").as_str() {
+                "uniform" => StragglerCfg::Uniform,
+                "lognormal" => StragglerCfg::Lognormal {
+                    mu: t.f64_or("faults.straggler.mu", 0.3),
+                    sigma: t.f64_or("faults.straggler.sigma", 0.6),
+                    cap: t.f64_or("faults.straggler.cap", 10.0),
+                },
+                "pareto" => StragglerCfg::Pareto {
+                    alpha: t.f64_or("faults.straggler.alpha", 1.5),
+                    xm: t.f64_or("faults.straggler.xm", 1.0),
+                    cap: t.f64_or("faults.straggler.cap", 10.0),
+                },
+                "const" => StragglerCfg::Const {
+                    factor: t.f64_or("faults.straggler.factor", 2.0),
+                },
+                other => bail!(
+                    "unknown faults.straggler.kind '{other}' \
+                     (uniform|lognormal|pareto|const)"
+                ),
+            };
             Some(FaultCfg {
                 seed: t.usize_or("faults.seed", 1) as u64,
                 slow_prob: t.f64_or("faults.slow_prob", 0.0),
@@ -563,6 +603,7 @@ impl TrainConfig {
                 drop_prob: t.f64_or("faults.drop_prob", 0.0),
                 down_epochs: t.usize_or("faults.down_epochs", 1),
                 crash_prob: t.f64_or("faults.crash_prob", 0.0),
+                straggler,
             })
         } else {
             None
@@ -603,6 +644,7 @@ impl TrainConfig {
             bucket_kb: t.usize_or("net.bucket_kb", d.bucket_kb),
             topology,
             faults,
+            ctrl_trace: t.str_or("ctrl.trace", &d.ctrl_trace),
             ckpt_auto_every: t.usize_or("ckpt.auto_every", d.ckpt_auto_every),
             ckpt_auto_path: t.str_or("ckpt.auto_path", &d.ckpt_auto_path),
             time_model: match t.str_or("time.model", "flops").as_str() {
@@ -641,6 +683,14 @@ impl TrainConfig {
                     "faults.crash_prob > 0 requires ckpt.auto_every > 0: \
                      the self-healing supervisor needs an auto-checkpoint \
                      to restore from"
+                );
+            }
+            if !self.ctrl_trace.is_empty() && (f.drop_prob > 0.0 || f.slow_prob > 0.0) {
+                bail!(
+                    "ctrl.trace and a seeded churn schedule are mutually exclusive: \
+                     a scripted membership trace replaces faults.drop_prob/slow_prob \
+                     (set both to 0; faults.crash_prob may stay armed — the crash \
+                     stream is independent)"
                 );
             }
         }
@@ -1087,6 +1137,82 @@ crash_prob = 0.1
         assert!(
             TrainConfig::from_table(&Table::parse("faults.crash_prob = 1.5").unwrap()).is_err()
         );
+    }
+
+    #[test]
+    fn straggler_knobs_parse_with_uniform_default() {
+        // any faults.* key arms the schedule; straggler defaults Uniform
+        let t = Table::parse("faults.slow_prob = 0.3").unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.faults.unwrap().straggler, StragglerCfg::Uniform);
+
+        let t = Table::parse(
+            r#"
+[faults]
+slow_prob = 0.5
+[faults.straggler]
+kind = "lognormal"
+mu = 0.4
+sigma = 0.8
+cap = 12.0
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(
+            c.faults.unwrap().straggler,
+            StragglerCfg::Lognormal { mu: 0.4, sigma: 0.8, cap: 12.0 }
+        );
+
+        let t = Table::parse("faults.straggler.kind = \"pareto\"").unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(
+            c.faults.unwrap().straggler,
+            StragglerCfg::Pareto { alpha: 1.5, xm: 1.0, cap: 10.0 }
+        );
+
+        let t = Table::parse("[faults.straggler]\nkind = \"const\"\nfactor = 3.0").unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.faults.unwrap().straggler, StragglerCfg::Const { factor: 3.0 });
+
+        // bad kind and bad params are config errors, not silent clamps
+        let bad = Table::parse("faults.straggler.kind = \"gaussian\"").unwrap();
+        assert!(TrainConfig::from_table(&bad).is_err());
+        let bad2 = Table::parse("[faults.straggler]\nkind = \"const\"\nfactor = 0.5").unwrap();
+        assert!(TrainConfig::from_table(&bad2).is_err());
+        let bad3 =
+            Table::parse("[faults.straggler]\nkind = \"lognormal\"\nsigma = -1.0").unwrap();
+        assert!(TrainConfig::from_table(&bad3).is_err());
+    }
+
+    #[test]
+    fn membership_trace_key_parses_and_excludes_seeded_churn() {
+        assert_eq!(TrainConfig::default().ctrl_trace, "");
+        let t = Table::parse("ctrl.trace = \"traces/drain.toml\"").unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.ctrl_trace, "traces/drain.toml");
+
+        // trace + seeded churn is a config error...
+        let bad = Table::parse(
+            "ctrl.trace = \"traces/drain.toml\"\nfaults.drop_prob = 0.3",
+        )
+        .unwrap();
+        let err = TrainConfig::from_table(&bad).unwrap_err().to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        let bad2 =
+            Table::parse("ctrl.trace = \"t.toml\"\nfaults.slow_prob = 0.3").unwrap();
+        assert!(TrainConfig::from_table(&bad2).is_err());
+
+        // ...but the crash stream may coexist (independent salted stream)
+        let ok = Table::parse(
+            "ctrl.trace = \"t.toml\"\nfaults.crash_prob = 0.1\nckpt.auto_every = 2",
+        )
+        .unwrap();
+        assert!(TrainConfig::from_table(&ok).is_ok());
+        // typo'd spelling still gets the strict-keys treatment
+        let typo = Table::parse("ctrl.tarce = \"t.toml\"").unwrap();
+        let err = TrainConfig::from_table(&typo).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'ctrl.trace'?"), "{err}");
     }
 
     #[test]

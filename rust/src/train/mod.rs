@@ -95,7 +95,7 @@ pub mod checkpoint;
 pub mod config;
 
 use crate::cluster::bucket::Bucketizer;
-use crate::cluster::faults::FaultSchedule;
+use crate::cluster::control::ControlPlane;
 use crate::cluster::network::NetworkModel;
 use crate::cluster::simtime::{self, CostModel, SimClock};
 use crate::cluster::topology::Topology;
@@ -111,7 +111,7 @@ use crate::runtime::{ModelPrograms, Runtime};
 use crate::tensor::{simd, tune, Tensor};
 use crate::util::pool::{IntraPool, SendPtr, WorkerPool};
 use crate::util::workspace::Workspace;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use config::{MethodCfg, TimeModelCfg, TrainConfig};
 use std::sync::Arc;
 use std::time::Instant;
@@ -141,6 +141,21 @@ pub fn dataset_for(cfg: &TrainConfig, reg: &Registry) -> Result<Dataset> {
             cfg.seed,
         )
     })
+}
+
+/// Build the membership control plane this config asks for: a scripted
+/// trace (`--membership-trace` / `ctrl.trace`, read from disk here) or
+/// the seeded fate process when `[faults]` is armed; None keeps the
+/// fixed-membership trainer literally free of membership bookkeeping.
+/// `restore` rebuilds through the same path so a resume replays the
+/// identical event stream from epoch 0.
+fn build_control(cfg: &TrainConfig) -> Result<Option<ControlPlane>> {
+    if !cfg.ctrl_trace.is_empty() {
+        let text = std::fs::read_to_string(&cfg.ctrl_trace)
+            .with_context(|| format!("reading membership trace '{}'", cfg.ctrl_trace))?;
+        return Ok(Some(ControlPlane::from_trace(cfg.workers, &text)?));
+    }
+    Ok(cfg.faults.map(|fc| ControlPlane::seeded(cfg.workers, fc)))
 }
 
 /// Wall-clock probe behind the measured codec calibration: time a few
@@ -292,8 +307,10 @@ pub struct Trainer<'a> {
     /// per-link cluster model (`[net.links]` / `--topology`); None
     /// keeps `net` fixed at the single shared link
     topology: Option<Topology>,
-    /// seeded fault schedule; None is the fault-free cluster
-    faults: Option<FaultSchedule>,
+    /// membership control plane (`cluster::control`): the seeded fate
+    /// process or a scripted trace behind one event stream; None is the
+    /// fault-free, fixed-membership cluster
+    control: Option<ControlPlane>,
     /// worker ids active this epoch, ascending (== 0..workers whenever
     /// the cluster is whole — the fan-out then matches the fault-free
     /// trainer slot for slot, which is what keeps it bit-identical)
@@ -421,7 +438,7 @@ impl<'a> Trainer<'a> {
         // active set (bit-identical to the shared model when the links
         // are all equal), and is rebuilt on every membership change
         let topology = cfg.topology.map(|tc| tc.build(cfg.workers));
-        let faults = cfg.faults.map(|fc| FaultSchedule::new(cfg.workers, fc));
+        let control = build_control(cfg)?;
         let active: Vec<usize> = (0..cfg.workers).collect();
         let net = Arc::new(match &topology {
             Some(tp) => tp.network_for(&active),
@@ -568,7 +585,7 @@ impl<'a> Trainer<'a> {
             sched,
             net,
             topology,
-            faults,
+            control,
             active,
             slow_max: 1.0,
             lossy,
@@ -631,7 +648,7 @@ impl<'a> Trainer<'a> {
     /// the number of global steps to run via [`Trainer::step`].
     pub fn begin_epoch(&mut self) -> Result<usize> {
         let epoch = self.epoch;
-        self.advance_faults(epoch);
+        self.advance_control(epoch)?;
         let lr_curr = self.sched.lr(epoch);
         let lr_next = self.sched.lr(epoch + 1);
         let decision = self.controller.begin_epoch(epoch, lr_curr, lr_next);
@@ -678,29 +695,74 @@ impl<'a> Trainer<'a> {
         Ok(self.global_steps)
     }
 
-    /// Advance the fault schedule to `epoch` and apply any membership
-    /// change.  No-op when faults are disabled — the fault-free trainer
-    /// is bit-identical to the pre-faults one.
-    fn advance_faults(&mut self, epoch: usize) {
-        let Some(fs) = self.faults.as_mut() else { return };
-        let delta = fs.begin_epoch(epoch);
-        // BSP: every step of this epoch stalls on the slowest active
-        // worker, so the clock only needs the max multiplier
-        self.slow_max = fs.max_active_slowdown();
-        if !delta.changed() {
-            return;
+    /// Advance the membership control plane to `epoch` and apply any
+    /// boundary it reports.  No-op when the control plane is disabled —
+    /// the fixed-membership trainer is bit-identical to the pre-faults
+    /// one.  Errors are scripted-trace events that do not mean what
+    /// they say (drain of an inactive rank, emptying the cluster):
+    /// hard stops, never silent no-ops.
+    fn advance_control(&mut self, epoch: usize) -> Result<()> {
+        let boundary = {
+            let Some(cp) = self.control.as_mut() else { return Ok(()) };
+            let b = cp.begin_epoch(epoch)?;
+            // BSP: every step of this epoch stalls on the slowest active
+            // worker, so the clock only needs the max multiplier
+            self.slow_max = cp.max_active_slowdown();
+            b
+        };
+        if !boundary.changed() {
+            return Ok(());
         }
-        self.active.clear();
-        self.active.extend_from_slice(fs.active());
-        self.sync_membership(!delta.rejoined.is_empty());
+        // graceful drains hand state off BEFORE the old membership is
+        // torn down: slot arithmetic and link pricing below use the
+        // pre-departure active set.  A boundary that ALSO joins or
+        // hard-drops scrambles the slots anyway, so the handoff only
+        // preserves error-feedback on drain-only boundaries — which is
+        // also what keeps the seeded path (never drains) byte-identical
+        // to the pre-control-plane trainer's full reset.
+        let n_prev = self.active.len();
+        let drain_only = boundary.joins.is_empty() && boundary.leaves.is_empty();
+        if drain_only {
+            let mut remaining = self.active.clone();
+            for &rank in &boundary.drains {
+                if let Some(slot) = remaining.iter().position(|&r| r == rank) {
+                    for comp in self.compressors.iter_mut() {
+                        comp.drain_worker(slot);
+                    }
+                    remaining.remove(slot);
+                }
+            }
+        }
+        if !boundary.drains.is_empty() {
+            // each departing rank ships its owned shard — ceil(P/n)
+            // floats at the pre-departure count — to a successor over
+            // one charged p2p hop, serial at the boundary exactly like
+            // the rejoin broadcast (and strictly cheaper than one)
+            let total: usize = self.params.iter().map(|p| p.numel()).sum();
+            let shard = (total + n_prev - 1) / n_prev.max(1);
+            let before = self.member_comm.ledger.secs;
+            for _ in &boundary.drains {
+                self.member_comm.charge_drain(shard);
+            }
+            let secs = self.member_comm.ledger.secs - before;
+            self.clock.sim_secs += secs;
+            self.clock.comm_secs += secs;
+        }
+        self.active = self.control.as_ref().expect("armed above").active().to_vec();
+        self.sync_membership(!boundary.joins.is_empty(), !drain_only);
+        Ok(())
     }
 
     /// Rebuild the collective pricing, shard ownership, and compressor
     /// state for the current `self.active` set; `charge_rejoin` also
     /// prices the full-parameter broadcast a rejoining worker needs.
-    /// (Epoch-boundary work: allowed to allocate — the zero-allocation
-    /// contract covers [`Trainer::step`] only.)
-    fn sync_membership(&mut self, charge_rejoin: bool) {
+    /// `reset_compressors` drops all error-feedback state (hard churn —
+    /// the departed workers' residuals are simply lost); a drain-only
+    /// boundary passes false because `advance_control` already folded
+    /// the departing slots into their successors.  (Epoch-boundary
+    /// work: allowed to allocate — the zero-allocation contract covers
+    /// [`Trainer::step`] only.)
+    fn sync_membership(&mut self, charge_rejoin: bool, reset_compressors: bool) {
         let n_active = self.active.len();
         // re-price the collectives for the surviving ring: N shrinks (or
         // grows back), and under a topology the bottleneck link of the
@@ -732,11 +794,15 @@ impl<'a> Trainer<'a> {
         // survivors absorb the departed ring chunks: all ownership
         // arithmetic derives from the active count
         self.transport.set_active_workers(n_active);
-        // membership changes scramble the positional per-worker slots,
-        // so error-feedback state is dropped — as a real elastic run
-        // loses the departed workers' residuals
-        for comp in self.compressors.iter_mut() {
-            comp.reset();
+        // hard membership changes scramble the positional per-worker
+        // slots, so error-feedback state is dropped — as a real elastic
+        // run loses the departed workers' residuals.  (Graceful drains
+        // skip this: their residuals were folded into the successor
+        // slots before the teardown.)
+        if reset_compressors {
+            for comp in self.compressors.iter_mut() {
+                comp.reset();
+            }
         }
         if charge_rejoin {
             // the rejoining worker pulls current parameters via a
@@ -1151,6 +1217,7 @@ impl<'a> Trainer<'a> {
             secs: self.clock.sim_secs,
             overlap_saved_secs: self.clock.overlap_saved_secs(),
             degraded: self.degraded,
+            active_workers: self.active.len(),
             wall_secs: self.clock.wall_secs,
             grad_norm: epoch_sqnorm.sqrt(),
             frac_low: n_low as f32 / n_comp as f32,
@@ -1321,6 +1388,7 @@ impl<'a> Trainer<'a> {
             last_mult: self.last_mult,
             window_start: self.window_start,
             degraded: self.degraded,
+            ctrl_cursor: self.control.as_ref().map(|cp| cp.cursor()).unwrap_or(0),
         };
         checkpoint::save_full(
             path,
@@ -1365,21 +1433,32 @@ impl<'a> Trainer<'a> {
         // charge in the clock columns).  No-op for a cold `--resume`.
         self.log.epochs.truncate(st.epoch);
         self.log.level_trace.truncate(st.epoch);
-        // replay the fault schedule up to the resume epoch on a FRESH
-        // schedule: the stream position is a pure function of
-        // (seed, epoch) but `begin_epoch` is strictly sequential, and a
-        // mid-run recovery's live schedule is already past the
-        // checkpoint.  Charges are NOT re-applied — the restored
-        // ledgers and clock already contain them.
-        if self.faults.is_some() {
-            let fc = self.cfg.faults.expect("faults imply cfg.faults");
-            let mut fs = FaultSchedule::new(self.cfg.workers, fc);
+        // replay the membership event stream up to the resume epoch on
+        // a FRESH control plane: the seeded stream position is a pure
+        // function of (seed, epoch) and a trace is a fixed file, but
+        // `begin_epoch` is strictly sequential, and a mid-run recovery's
+        // live plane is already past the checkpoint.  Charges are NOT
+        // re-applied — the restored ledgers and clock already contain
+        // them.  The checkpointed cursor cross-checks the replay: a
+        // trace file edited between save and resume is a hard error,
+        // not a silently different cluster.
+        if self.control.is_some() {
+            let mut cp = build_control(self.cfg)?.expect("control implies cfg arms it");
             for e in 0..st.epoch {
-                fs.begin_epoch(e);
+                cp.begin_epoch(e)?;
             }
-            self.active = fs.active().to_vec();
-            self.faults = Some(fs);
-            self.sync_membership(false);
+            if st.ctrl_cursor != 0 && cp.cursor() != st.ctrl_cursor {
+                bail!(
+                    "membership replay consumed {} events up to epoch {}, checkpoint \
+                     recorded {} — did the trace file change since the save?",
+                    cp.cursor(),
+                    st.epoch,
+                    st.ctrl_cursor
+                );
+            }
+            self.active = cp.active().to_vec();
+            self.control = Some(cp);
+            self.sync_membership(false, true);
         }
         Ok(())
     }

@@ -20,7 +20,7 @@ const VALUED: &[&str] = &[
     "controller", "method", "rank-low", "rank-high", "k-low", "k-high",
     "eta", "interval", "artifacts", "preset", "steps", "trials", "filter",
     "save", "ckpt", "threads", "intra-threads", "transport", "bucket-kb",
-    "topology", "resume",
+    "topology", "resume", "membership-trace",
 ];
 
 impl Args {

@@ -2,7 +2,8 @@
 //!
 //! Supports exactly what `configs/*.toml` uses: `[section]` /
 //! `[section.sub]` headers, `key = value` with string / integer / float /
-//! bool / homogeneous scalar arrays, `#` comments, and blank lines.
+//! bool / homogeneous scalar arrays (single- or multi-line, trailing
+//! comma allowed), `#` comments, and blank lines.
 //! Values land in a flat `"section.key" -> Scalar` map, which is also the
 //! representation `--set section.key=value` CLI overrides patch.
 
@@ -74,7 +75,8 @@ impl Table {
     pub fn parse(text: &str) -> Result<Table, TomlError> {
         let mut map = BTreeMap::new();
         let mut section = String::new();
-        for (ln, raw) in text.lines().enumerate() {
+        let mut lines = text.lines().enumerate();
+        while let Some((ln, raw)) = lines.next() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
@@ -97,7 +99,24 @@ impl Table {
             if key.is_empty() {
                 return Err(err(ln, "empty key"));
             }
-            let val = parse_value(line[eq + 1..].trim(), ln)?;
+            let mut vtext = line[eq + 1..].trim().to_string();
+            // a `key = [` array may span lines until the closing `]`
+            // (brackets inside quoted strings don't count); comments and
+            // blank lines inside the array are fine
+            if vtext.starts_with('[') && !array_closed(&vtext) {
+                for (_, raw2) in lines.by_ref() {
+                    let cont = strip_comment(raw2).trim();
+                    if cont.is_empty() {
+                        continue;
+                    }
+                    vtext.push(' ');
+                    vtext.push_str(cont);
+                    if array_closed(&vtext) {
+                        break;
+                    }
+                }
+            }
+            let val = parse_value(vtext.trim(), ln)?;
             let full = if section.is_empty() {
                 key.to_string()
             } else {
@@ -146,6 +165,21 @@ fn err(line: usize, msg: &str) -> TomlError {
     TomlError { line: line + 1, msg: msg.to_string() }
 }
 
+/// True when `s` contains a `]` outside a quoted string — the probe
+/// `Table::parse` uses to find the end of a multi-line array (nested
+/// arrays are unsupported, so the first top-level `]` closes it).
+fn array_closed(s: &str) -> bool {
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            ']' if !in_str => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
 /// Strip a `#` comment, respecting quoted strings.
 fn strip_comment(line: &str) -> &str {
     let mut in_str = false;
@@ -180,6 +214,8 @@ fn parse_value(s: &str, ln: usize) -> Result<Scalar, TomlError> {
             .strip_suffix(']')
             .ok_or_else(|| err(ln, "unterminated array"))?
             .trim();
+        // TOML allows a trailing comma (the idiomatic multi-line style)
+        let inner = inner.strip_suffix(',').unwrap_or(inner).trim_end();
         if inner.is_empty() {
             return Ok(Scalar::Arr(vec![]));
         }
@@ -269,5 +305,43 @@ name = "a#b"
         assert!(Table::parse("[unclosed").is_err());
         assert!(Table::parse("novalue =").is_err());
         assert!(Table::parse("bad").is_err());
+    }
+
+    #[test]
+    fn parses_multiline_arrays() {
+        // the membership-trace idiom: one quoted event per line, with
+        // comments, blank lines, and a trailing comma
+        let t = Table::parse(
+            "workers = 4\n\
+             events = [\n\
+                 \"1:slow:1:2.5\",   # rank 1 straggles\n\
+             \n\
+                 \"2:drain:3\",\n\
+             ]\n\
+             after = 1\n",
+        )
+        .unwrap();
+        let Some(Scalar::Arr(items)) = t.get("events") else {
+            panic!("events should parse as an array");
+        };
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].as_str(), Some("1:slow:1:2.5"));
+        assert_eq!(items[1].as_str(), Some("2:drain:3"));
+        assert_eq!(t.usize_or("workers", 0), 4);
+        assert_eq!(t.usize_or("after", 0), 1, "parsing continues after the array");
+    }
+
+    #[test]
+    fn multiline_array_edge_cases() {
+        // a quoted ']' must not close the array
+        let t = Table::parse("xs = [\n  \"a]b\",\n  \"c\"\n]").unwrap();
+        let Some(Scalar::Arr(items)) = t.get("xs") else { panic!() };
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].as_str(), Some("a]b"));
+        // single-line trailing comma is fine too
+        let t = Table::parse("xs = [1, 2,]").unwrap();
+        assert_eq!(t.get("xs").unwrap().as_usize_arr().unwrap(), vec![1, 2]);
+        // an array that never closes is an error, not a hang
+        assert!(Table::parse("xs = [\n  \"a\",").is_err());
     }
 }

@@ -1,0 +1,315 @@
+//! Elastic-membership control-plane integration suite (ISSUE 10):
+//!
+//!  * the seeded fate process behind the [`ControlPlane`] trait drives
+//!    the trainer exactly as the raw `FaultSchedule` did — the CSV's
+//!    `active_workers` column tracks the schedule's replay epoch by
+//!    epoch (byte-identity of the seeded default);
+//!  * drain-vs-drop accounting, pinned by hand: a graceful drain bills
+//!    exactly `ceil(P/n)` extra floats and one p2p hop
+//!    (`alpha + bytes*beta`) over the hard-leave twin — strictly
+//!    cheaper than the full-model rejoin broadcast a hard drop's
+//!    restoration pays;
+//!  * a scripted trace replays byte-for-byte across `--threads` x
+//!    `--intra-threads` x both transports, with error-feedback methods
+//!    included (the drain handoff is deterministic data movement);
+//!  * `--save`/`--resume` splits mid-trace: the restored trainer
+//!    replays the event stream to the split and continues bit-for-bit.
+//!
+//! Sim backend only: no artifacts, no PJRT.
+
+use accordion::cluster::faults::{FaultCfg, FaultSchedule, StragglerCfg};
+use accordion::cluster::network::NetworkModel;
+use accordion::metrics::RunLog;
+use accordion::models::Registry;
+use accordion::runtime::Runtime;
+use accordion::train::{
+    self,
+    config::{ControllerCfg, MethodCfg, TrainConfig, TransportCfg},
+    Trainer,
+};
+
+const WORKERS: usize = 4;
+
+fn cfg(label: &str) -> TrainConfig {
+    TrainConfig {
+        label: label.into(),
+        model: "mlp_deep_c10".into(),
+        workers: WORKERS,
+        threads: 1,
+        epochs: 6,
+        train_size: 256,
+        test_size: 64,
+        data_sep: 0.6,
+        warmup_epochs: 1,
+        decay_epochs: vec![2, 4],
+        method: MethodCfg::None,
+        controller: ControllerCfg::Accordion { eta: 0.5, interval: 2 },
+        ..TrainConfig::default()
+    }
+}
+
+fn tmp(tag: &str) -> String {
+    let dir = std::env::temp_dir();
+    format!("{}/accordion-control-{tag}-{}", dir.display(), std::process::id())
+}
+
+/// Write a trace file and return its path (one per tag per process).
+fn trace_file(tag: &str, text: &str) -> String {
+    let path = format!("{}.toml", tmp(tag));
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+/// `#` comments stripped, trailing `wall_secs` cut — the CI determinism
+/// view of a run CSV.
+fn det_csv(log: &RunLog) -> String {
+    log.to_csv()
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .map(|l| l.rsplit_once(',').map(|(head, _)| head).unwrap_or(l).to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn seeded_control_plane_tracks_the_raw_schedule() {
+    // the degeneration contract at the trainer level: with `[faults]`
+    // armed and no trace, the control plane must walk the exact same
+    // membership the raw seeded schedule walks — the active_workers
+    // column IS the schedule's active().len() series
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let fc = FaultCfg {
+        seed: 11,
+        slow_prob: 0.3,
+        slow_min: 1.5,
+        slow_max: 3.0,
+        drop_prob: 0.4,
+        down_epochs: 1,
+        crash_prob: 0.0,
+        straggler: StragglerCfg::Uniform,
+    };
+    let mut c = cfg("control-seeded");
+    c.faults = Some(fc);
+    let (log, _) = train::run_full(&c, &reg, &rt).unwrap();
+    let mut fs = FaultSchedule::new(WORKERS, fc);
+    let mut churned = false;
+    for (e, row) in log.epochs.iter().enumerate() {
+        fs.begin_epoch(e);
+        assert_eq!(
+            row.active_workers,
+            fs.active().len(),
+            "epoch {e}: the control plane must replay the seeded schedule"
+        );
+        churned |= row.active_workers < WORKERS;
+    }
+    assert!(churned, "seed 11 must actually shrink the cluster at least once");
+}
+
+#[test]
+fn drain_accounting_is_pinned_by_hand_and_cheaper_than_rejoin() {
+    // twin scenarios differing ONLY in how rank 3 departs at epoch 2
+    // (both readmit it at epoch 4): graceful drain vs hard leave.
+    // Method None keeps the data plane byte-identical between the twins
+    // (no error-feedback state), so the deltas isolate the drain charge.
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let drain_tr = trace_file("drain", "events = [\"2:drain:3\", \"4:join:3\"]");
+    let leave_tr = trace_file("leave", "events = [\"2:leave:3\", \"4:join:3\"]");
+    let run = |label: &str, tr: &str| {
+        let mut c = cfg(label);
+        c.ctrl_trace = tr.to_string();
+        train::run_full(&c, &reg, &rt).unwrap().0
+    };
+    let drained = run("control-drain", &drain_tr);
+    let left = run("control-leave", &leave_tr);
+
+    let total_params = reg.model("mlp_deep_c10").unwrap().total_params;
+    let shard = (total_params + WORKERS - 1) / WORKERS;
+    // hand-pinned floats: the graceful departure bills exactly the
+    // ceil(P/n) handoff on top of the hard-leave twin (whose departure
+    // is free), epoch by epoch from the drain boundary on
+    for (a, b) in drained.epochs.iter().zip(&left.epochs) {
+        let expect = if a.epoch >= 2 { shard as u64 } else { 0 };
+        assert_eq!(
+            a.floats - b.floats,
+            expect,
+            "epoch {}: drain must bill ceil(P/n) floats over the hard leave",
+            a.epoch
+        );
+        assert_eq!(a.active_workers, b.active_workers, "twin scenarios, same membership");
+    }
+    // hand-pinned seconds: the delta is one p2p hop on the
+    // pre-departure 4-worker link — alpha + bytes*beta, nothing else
+    let c = cfg("pin");
+    let net = NetworkModel::new(WORKERS, c.bandwidth_mbps, c.latency_us);
+    let hop = net.p2p_secs(shard * 4);
+    assert!(hop > 0.0);
+    let delta = drained.total_secs() - left.total_secs();
+    assert!(
+        (delta - hop).abs() <= 1e-9 * hop.max(1.0),
+        "drain clock delta {delta} must equal the single p2p hop {hop}"
+    );
+    // strictly cheaper than restoring a hard drop: the rejoin broadcast
+    // both twins pay at epoch 4 moves the full model
+    assert!((shard as u64) < total_params as u64, "handoff floats < broadcast floats");
+    assert!(
+        hop < net.broadcast_secs(total_params * 4),
+        "handoff seconds < rejoin broadcast seconds"
+    );
+    // the drain epoch itself must dip the cluster
+    assert_eq!(drained.epochs[2].active_workers, WORKERS - 1);
+    assert_eq!(drained.epochs[5].active_workers, WORKERS);
+}
+
+#[test]
+fn trace_replays_byte_for_byte_across_engines_and_transports() {
+    // the full scenario — slowdown, drain, readmission — with an
+    // error-feedback method (TopK): the drain handoff folds residuals
+    // deterministically, so every engine shape must produce the same
+    // deterministic CSV bytes.  The label is shared within a transport
+    // so the CSVs are comparable byte-for-byte.
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let tr = trace_file(
+        "matrix",
+        "workers = 4\nevents = [\"1:slow:1:2.5\", \"2:drain:3\", \"4:join:3\"]",
+    );
+    for (tname, transport) in [("dense", TransportCfg::Dense), ("sharded", TransportCfg::Sharded)]
+    {
+        let build = |threads: usize, intra: usize| {
+            let mut c = cfg(&format!("control-matrix-{tname}"));
+            c.ctrl_trace = tr.clone();
+            c.method = MethodCfg::TopK { frac_low: 0.99, frac_high: 0.10 };
+            c.threads = threads;
+            c.intra_threads = intra;
+            c.transport = transport;
+            c
+        };
+        let base = train::run_full(&build(1, 1), &reg, &rt).unwrap().0;
+        let dips: Vec<usize> = base.epochs.iter().map(|e| e.active_workers).collect();
+        assert_eq!(dips, vec![4, 4, 3, 3, 4, 4], "{tname}: scripted membership trajectory");
+        for (threads, intra) in [(4usize, 1usize), (1, 2), (4, 2)] {
+            let other = train::run_full(&build(threads, intra), &reg, &rt).unwrap().0;
+            assert_eq!(
+                det_csv(&base),
+                det_csv(&other),
+                "{tname}: trace run must replay byte-for-byte at \
+                 threads={threads} intra={intra}"
+            );
+        }
+    }
+}
+
+#[test]
+fn resume_splits_mid_trace_and_continues_bit_for_bit() {
+    // --save at epoch 3 (after the drain, before the readmission): the
+    // restored trainer must replay the event stream to the split —
+    // cross-checked against the checkpointed ctrl_cursor — and continue
+    // exactly the uninterrupted run.  Method None: compressor state is
+    // intentionally not checkpointed (same scope as tests/resume.rs).
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let tr = trace_file(
+        "resume",
+        "workers = 4\nevents = [\"1:slow:1:2.5\", \"2:drain:3\", \"4:join:3\"]",
+    );
+    let mut c = cfg("control-resume");
+    c.ctrl_trace = tr;
+    let (full_log, full_params) = train::run_full(&c, &reg, &rt).unwrap();
+    for split in [3usize, 5] {
+        let path = tmp(&format!("ckpt{split}"));
+        let mut first = Trainer::new(&c, &reg, &rt).unwrap();
+        for _ in 0..split {
+            first.run_epoch().unwrap();
+        }
+        first.save(&path).unwrap();
+        drop(first);
+        let mut second = Trainer::new(&c, &reg, &rt).unwrap();
+        second.restore(&path).unwrap();
+        assert_eq!(second.epoch(), split);
+        while second.epoch() < c.epochs {
+            second.run_epoch().unwrap();
+        }
+        let _ = std::fs::remove_file(format!("{path}.json"));
+        let _ = std::fs::remove_file(format!("{path}.bin"));
+        let (rlog, rparams) = second.finish();
+        for (l, (a, b)) in full_params.iter().zip(&rparams).enumerate() {
+            assert!(
+                a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "split {split}: layer {l} parameters diverged after mid-trace resume"
+            );
+        }
+        for (a, b) in full_log.epochs[split..].iter().zip(&rlog.epochs) {
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(a.floats, b.floats, "epoch {}: floats ledger", a.epoch);
+            assert_eq!(a.secs.to_bits(), b.secs.to_bits(), "epoch {}: sim clock", a.epoch);
+            assert_eq!(
+                a.active_workers, b.active_workers,
+                "epoch {}: membership replay",
+                a.epoch
+            );
+            assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "epoch {}", a.epoch);
+        }
+    }
+}
+
+#[test]
+fn a_doctored_trace_fails_the_resume_cursor_check() {
+    // restore() cross-checks the checkpointed event cursor against its
+    // replay: editing the trace file between save and resume must be a
+    // hard error, not a silently different cluster
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let tr = trace_file("doctored", "events = [\"1:drain:3\", \"2:join:3\"]");
+    let mut c = cfg("control-doctored");
+    c.ctrl_trace = tr.clone();
+    let path = tmp("doctored-ckpt");
+    let mut first = Trainer::new(&c, &reg, &rt).unwrap();
+    for _ in 0..3 {
+        first.run_epoch().unwrap();
+    }
+    first.save(&path).unwrap();
+    drop(first);
+    // rewrite the trace so the replayed prefix holds fewer events
+    std::fs::write(&tr, "events = [\"4:drain:3\"]").unwrap();
+    let mut second = Trainer::new(&c, &reg, &rt).unwrap();
+    let err = second.restore(&path).unwrap_err().to_string();
+    assert!(err.contains("membership replay"), "unexpected error: {err}");
+    let _ = std::fs::remove_file(format!("{path}.json"));
+    let _ = std::fs::remove_file(format!("{path}.bin"));
+}
+
+#[test]
+fn straggler_weather_moves_only_the_clock() {
+    // heavy-tailed straggler magnitudes (satellite 6): same membership,
+    // same floats, slower clock — for every distribution kind
+    let reg = Registry::sim();
+    let rt = Runtime::sim();
+    let clean = train::run_full(&cfg("control-calm"), &reg, &rt).unwrap().0;
+    for (name, straggler) in [
+        ("lognormal", StragglerCfg::Lognormal { mu: 0.5, sigma: 0.8, cap: 12.0 }),
+        ("pareto", StragglerCfg::Pareto { alpha: 1.5, xm: 1.2, cap: 12.0 }),
+        ("const", StragglerCfg::Const { factor: 3.0 }),
+    ] {
+        let mut c = cfg(&format!("control-straggle-{name}"));
+        let mut fc = FaultCfg::from_intensity(0.0, 17);
+        fc.slow_prob = 1.0;
+        fc.straggler = straggler;
+        c.faults = Some(fc);
+        let log = train::run_full(&c, &reg, &rt).unwrap().0;
+        assert_eq!(
+            log.total_floats(),
+            clean.total_floats(),
+            "{name}: stragglers must not move the floats ledger"
+        );
+        assert!(
+            log.total_secs() > clean.total_secs(),
+            "{name}: certain slowdown every epoch must cost simulated time"
+        );
+        assert!(
+            log.epochs.iter().all(|e| e.active_workers == WORKERS),
+            "{name}: stragglers must not change membership"
+        );
+    }
+}

@@ -20,7 +20,7 @@
 //!
 //! Sim backend only: no artifacts, no PJRT.
 
-use accordion::cluster::faults::{FaultCfg, FaultSchedule};
+use accordion::cluster::faults::{FaultCfg, FaultSchedule, StragglerCfg};
 use accordion::compress::Level;
 use accordion::metrics::RunLog;
 use accordion::models::Registry;
@@ -56,6 +56,7 @@ fn stormy() -> FaultCfg {
         drop_prob: 0.3,
         down_epochs: 1,
         crash_prob: 0.0,
+        straggler: StragglerCfg::Uniform,
     }
 }
 
@@ -296,6 +297,7 @@ fn guaranteed_stragglers_are_strictly_slower_with_identical_math() {
         drop_prob: 0.0,
         down_epochs: 1,
         crash_prob: 0.0,
+        straggler: StragglerCfg::Uniform,
     };
     let mk = |label: &str, faults| {
         tiny(label, MethodCfg::TopK { frac_low: 0.99, frac_high: 0.25 },
@@ -339,6 +341,7 @@ fn every_rejoin_charges_one_full_model_broadcast() {
         drop_prob: 0.5,
         down_epochs: 1,
         crash_prob: 0.0,
+        straggler: StragglerCfg::Uniform,
     };
     let rejoin_boundaries = |seed| {
         let mut fs = FaultSchedule::new(workers, churny(seed));

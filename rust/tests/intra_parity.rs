@@ -48,7 +48,7 @@ fn cfg(
 
 /// The CSV minus `#` comment lines (host-dependent kernel backend +
 /// tuner metadata) and the trailing wall_secs debug column — the same
-/// `grep -v '^#' | cut -d, -f1-14` the CI determinism lane applies.
+/// `grep -v '^#' | cut -d, -f1-15` the CI determinism lane applies.
 fn strip_wall(csv: &str) -> String {
     csv.lines()
         .filter(|l| !l.starts_with('#'))

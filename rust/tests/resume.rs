@@ -13,7 +13,7 @@
 //!
 //! Sim backend only: no artifacts, no PJRT.
 
-use accordion::cluster::faults::FaultCfg;
+use accordion::cluster::faults::{FaultCfg, StragglerCfg};
 use accordion::metrics::RunLog;
 use accordion::models::Registry;
 use accordion::runtime::Runtime;
@@ -123,6 +123,10 @@ fn assert_resumed_tail_matches(
         );
         assert_eq!(a.frac_low.to_bits(), b.frac_low.to_bits(), "{ectx}: frac_low");
         assert_eq!(a.degraded, b.degraded, "{ectx}: cumulative degraded counter");
+        assert_eq!(
+            a.active_workers, b.active_workers,
+            "{ectx}: active_workers (the membership replay must land on the same cluster)"
+        );
     }
 }
 
@@ -165,6 +169,7 @@ fn resume_replays_the_fault_schedule_mid_stream() {
         drop_prob: 0.4,
         down_epochs: 1,
         crash_prob: 0.0,
+        straggler: StragglerCfg::Uniform,
     });
     let full = train::run_full(&c, &reg, &rt).unwrap();
     for split in [2usize, 4] {

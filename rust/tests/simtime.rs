@@ -40,7 +40,7 @@ fn tiny(label: &str) -> TrainConfig {
 }
 
 /// The CSV minus the trailing `wall_secs` debug column — exactly what
-/// the CI lane's `cut -d, -f1-14` compares.
+/// the CI lane's `cut -d, -f1-15` compares.
 fn deterministic_csv(csv: &str) -> String {
     csv.lines()
         .map(|line| {

@@ -17,7 +17,7 @@
 //!
 //! Sim backend only: no artifacts, no PJRT.
 
-use accordion::cluster::faults::FaultCfg;
+use accordion::cluster::faults::{FaultCfg, StragglerCfg};
 use accordion::compress::Level;
 use accordion::exp::hetero::two_node_topology;
 use accordion::exp::utility::method_suite;
@@ -137,6 +137,7 @@ fn charged_codec_replays_through_topology_and_faults() {
             drop_prob: 0.4,
             down_epochs: 1,
             crash_prob: 0.0,
+            straggler: StragglerCfg::Uniform,
         });
         c
     };
